@@ -1,0 +1,14 @@
+//! Ad-hoc XLA-compile-time probe: `compile_probe <hlo-file>...` times the
+//! PJRT compile of each given HLO-text artifact (used for the §Perf
+//! compile-latency investigation in EXPERIMENTS.md).
+use quantum_peft::runtime::Runtime;
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    for path in std::env::args().skip(1) {
+        let t0 = std::time::Instant::now();
+        rt.load(std::path::Path::new(&path))?;
+        println!("{path}: {:.1}s ({} KB)", t0.elapsed().as_secs_f64(),
+                 std::fs::metadata(&path)?.len() / 1024);
+    }
+    Ok(())
+}

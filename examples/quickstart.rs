@@ -1,0 +1,47 @@
+//! Quickstart: load an AOT artifact, fine-tune Quantum-PEFT (Pauli) on a
+//! synthetic task for a handful of steps, and inspect the result.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::collections::BTreeMap;
+
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::trainer::{run_glue, GlueRunSpec, TrainConfig};
+use quantum_peft::data::glue::Task;
+use quantum_peft::runtime::{Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+
+    // The paper's method at its most extreme: Q_P adapters with
+    // (2L+1)log2(d) - 2L angles per side — 140 adapter params total on
+    // this encoder, vs 2048 for LoRA(K=4).
+    let entry = manifest.get("enc_qpeft_pauli")?;
+    println!("artifact {}: {} adapter params, {} trainable (incl. head)",
+             entry.tag, entry.adapter_param_count, entry.trainable_param_count);
+
+    let spec = GlueRunSpec {
+        tag: "enc_qpeft_pauli",
+        task: Task::Sst2,
+        cfg: TrainConfig {
+            steps: 40,
+            lr: 0.02,
+            train_examples: 256,
+            test_examples: 128,
+            eval_every: 20,
+            ..TrainConfig::default()
+        },
+        backbone: None, // quickstart trains from scratch; see glue_sweep
+        extras_override: BTreeMap::new(),
+    };
+    let r = run_glue(&rt, &manifest, &spec, &EventLog::null())?;
+    println!("loss: {:.4} -> {:.4}", r.losses.first().unwrap(),
+             r.losses.last().unwrap());
+    println!("sst2 accuracy: {:.2}% with {} adapter parameters",
+             100.0 * r.best_metric, r.adapter_params);
+    println!("step time: {:.1} ms/batch (XLA compile {:.1}s, once per artifact)",
+             r.step_ms, rt.total_compile_seconds());
+    Ok(())
+}

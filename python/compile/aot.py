@@ -1,0 +1,401 @@
+"""AOT lowering: every (model, method) config -> HLO-text artifacts + manifest.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` 0.1.6 crate binds) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Per config tag three computations are lowered:
+
+  {tag}.init.hlo.txt    (seed:i32) -> (frozen..., train...)
+  {tag}.train.hlo.txt   (frozen..., train..., m..., v..., step, lr, wd,
+                         extras..., batch...) -> (loss, train', m', v')
+  {tag}.eval.hlo.txt    (frozen..., train..., extras..., batch_x)
+                         -> (logits,)
+
+plus `artifacts/manifest.json` describing every tensor (name/shape/dtype)
+so the Rust runtime (rust/src/runtime/manifest.rs) is fully self-
+sufficient. Python never runs again after this step.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--filter enc_]
+        python -m compile.aot --list
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import train as T
+from .models import decoder as dec
+from .models import transformer as enc
+from .models import vit as vit_mod
+from .peft import make_method
+from .peft.base import PeftMethod
+
+
+# --------------------------------------------------------------------------
+# config registry
+# --------------------------------------------------------------------------
+
+ENC_CFG = enc.EncoderConfig(vocab=256, d=64, n_heads=4, n_layers=2, ff=128,
+                            seq_len=24, n_out=2)
+DEC_CFG = dec.DecoderConfig(vocab=256, d=64, n_heads=4, n_layers=2, ff=128,
+                            seq_len=48)
+VIT_CFG = vit_mod.ViTConfig(image=16, patch=4, d=64, n_heads=4, n_layers=2,
+                            ff=128, n_out=10)
+VIT_PRE_CFG = vit_mod.ViTConfig(image=16, patch=4, d=64, n_heads=4,
+                                n_layers=2, ff=128, n_out=20)
+
+ENC_BATCH = 16
+DEC_BATCH = 16
+VIT_BATCH = 16
+
+
+def _cfgdict(c):
+    import dataclasses
+
+    return dataclasses.asdict(c)
+
+
+def configs():
+    """(tag -> spec) for every artifact family. spec keys: model, cfg,
+    method (registry name), method_kw, task ('cls'|'dae'|'lm'|'img'),
+    extras (model-level runtime scalars)."""
+    out = {}
+
+    def add(tag, **spec):
+        assert tag not in out
+        out[tag] = spec
+
+    # ---- encoder: synthetic-GLUE family (Tables 2 & 5) ----
+    add("enc_pretrain", model="encoder", cfg=ENC_CFG, method="ft",
+        method_kw={}, task="dae", extras=())
+    enc_methods = [
+        ("ft", {}),
+        ("lora", dict(k=4)),
+        ("adalora", dict(k=4)),
+        ("loha", dict(k=4)),
+        ("lokr", dict(k=4, f=8)),
+        ("bitfit", {}),
+        ("hadapter", dict(bottleneck=8)),
+        ("padapter", dict(bottleneck=8)),
+        ("mora", dict(k=4)),
+        ("quanta", {}),
+        ("qpeft_pauli", dict(k=3, n_layers=1)),
+        ("qpeft_taylor", dict(k=4, order=8)),
+    ]
+    for name, kw in enc_methods:
+        add(f"enc_{name}", model="encoder", cfg=ENC_CFG, method=name,
+            method_kw=kw, task="cls", extras=("task_kind",))
+
+    # wide encoder = the Mistral-7B stand-in for Table 5 (2x width)
+    wide = enc.EncoderConfig(vocab=256, d=128, n_heads=4, n_layers=2, ff=256,
+                             seq_len=24, n_out=2)
+    add("encw_pretrain", model="encoder", cfg=wide, method="ft",
+        method_kw={}, task="dae", extras=())
+    for name, kw in [("lora", dict(k=4)), ("adalora", dict(k=4)),
+                     ("qpeft_taylor", dict(k=4, order=8))]:
+        add(f"encw_{name}", model="encoder", cfg=wide, method=name,
+            method_kw=kw, task="cls", extras=("task_kind",))
+
+    # ---- decoder: E2E-NLG family (Tables 3 & 4) ----
+    add("dec_pretrain", model="decoder", cfg=DEC_CFG, method="ft",
+        method_kw={}, task="lm", extras=())
+    for name, kw in [
+        ("ft", {}),
+        ("lora", dict(k=4)),
+        ("adalora", dict(k=4)),
+        ("loha", dict(k=4)),
+        ("lokr", dict(k=4, f=8)),
+        ("qpeft_taylor", dict(k=2, order=3)),   # paper: Q_T, P=3, K=2 (K'=1)
+    ]:
+        add(f"dec_{name}", model="decoder", cfg=DEC_CFG, method=name,
+            method_kw=kw, task="lm", extras=())
+
+    # ---- ViT: CIFAR transfer family (Tables 6-10) ----
+    add("vit_pretrain", model="vit", cfg=VIT_PRE_CFG, method="ft",
+        method_kw={}, task="img", extras=())
+    vit_methods = [
+        ("ft", {}, "ft"),
+        ("lora", dict(k=1), "lora_k1"),
+        ("lora", dict(k=2), "lora_k2"),
+        ("lora", dict(k=4), "lora_k4"),
+        ("qpeft_pauli", dict(k=1, n_layers=1), "qpt_pauli"),
+        ("qpeft_pauli", dict(k=1, n_layers=2), "qpt_pauli_l2"),   # Table 9
+        ("qpeft_pauli", dict(k=1, n_layers=3), "qpt_pauli_l3"),
+        ("qpeft_pauli", dict(k=1, n_layers=4), "qpt_pauli_l4"),
+        # one artifact serves Tables 7 + 8: K' and quantization are runtime
+        ("qpeft_taylor", dict(k=8, order=8, group=32), "qpt_taylor"),
+        ("qpeft_tn", dict(network="cp", k=4), "tn_cp"),           # Table 10
+        ("qpeft_tn", dict(network="td", k=4), "tn_td"),
+        ("qpeft_tn", dict(network="ttd", k=4), "tn_ttd"),
+        ("qpeft_tn", dict(network="trd", k=4), "tn_trd"),
+        ("qpeft_tn", dict(network="htd", k=4), "tn_htd"),
+    ]
+    for name, kw, tag in vit_methods:
+        add(f"vit_{tag}", model="vit", cfg=VIT_CFG, method=name,
+            method_kw=kw, task="img", extras=())
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-config assembly
+# --------------------------------------------------------------------------
+
+def build_tree(spec, key, method: PeftMethod):
+    model, cfg, task = spec["model"], spec["cfg"], spec["task"]
+    kb, ka, kh = jax.random.split(key, 3)
+    if model == "encoder":
+        base = enc.init_base(kb, cfg)
+        heads = enc.init_heads(kh, cfg)
+        head = heads["dae"] if task == "dae" else heads["cls"]
+        adapters = enc.init_adapters(ka, cfg, method)
+    elif model == "decoder":
+        base = dec.init_base(kb, cfg)
+        head = dec.init_heads(kh, cfg)["lm"]
+        adapters = dec.init_adapters(ka, cfg, method)
+    else:
+        base = vit_mod.init_base(kb, cfg)
+        head = vit_mod.init_heads(kh, cfg)["cls"]
+        adapters = vit_mod.init_adapters(ka, cfg, method)
+    tree = {"base": base, "head": head}
+    if adapters:
+        tree["adapters"] = adapters
+    return tree
+
+
+def batch_spec(spec):
+    cfg = spec["cfg"]
+    if spec["model"] == "encoder":
+        if spec["task"] == "dae":
+            return [("corrupted", (ENC_BATCH, cfg.seq_len), jnp.int32),
+                    ("clean", (ENC_BATCH, cfg.seq_len), jnp.int32)]
+        return [("tokens", (ENC_BATCH, cfg.seq_len), jnp.int32),
+                ("labels", (ENC_BATCH,), jnp.float32)]
+    if spec["model"] == "decoder":
+        return [("tokens", (DEC_BATCH, cfg.seq_len), jnp.int32),
+                ("loss_mask", (DEC_BATCH, cfg.seq_len), jnp.float32)]
+    return [("images", (VIT_BATCH, cfg.image, cfg.image, cfg.channels),
+             jnp.float32),
+            ("labels", (VIT_BATCH,), jnp.int32)]
+
+
+def make_loss_and_logits(spec, method: PeftMethod):
+    cfg, task = spec["cfg"], spec["task"]
+    n_model_extras = len(spec["extras"])
+    method_extras = tuple(method.extra_inputs)
+
+    def set_method_extras(extras):
+        me = extras[n_model_extras:]
+        if method_extras:
+            method.set_extras(**dict(zip(method_extras, me)))
+
+    if spec["model"] == "encoder":
+        if task == "dae":
+            def loss_fn(tree, extras, corrupted, clean):
+                set_method_extras(extras)
+                return enc.dae_loss(tree["base"], tree.get("adapters", {}),
+                                    {"dae": tree["head"]}, corrupted, clean,
+                                    cfg, method)
+
+            def logits_fn(tree, extras, corrupted):
+                set_method_extras(extras)
+                return enc.dae_logits(tree["base"], tree.get("adapters", {}),
+                                      {"dae": tree["head"]}, corrupted, cfg,
+                                      method)
+            return loss_fn, logits_fn
+
+        def loss_fn(tree, extras, tokens, labels):
+            set_method_extras(extras)
+            base_loss = enc.cls_loss(tree["base"], tree.get("adapters", {}),
+                                     {"cls": tree["head"]}, tokens, labels,
+                                     extras[0], cfg, method)
+            return base_loss + method.extra_loss(tree.get("adapters", {}))
+
+        def logits_fn(tree, extras, tokens):
+            set_method_extras(extras)
+            return enc.cls_logits(tree["base"], tree.get("adapters", {}),
+                                  {"cls": tree["head"]}, tokens, cfg, method)
+        return loss_fn, logits_fn
+
+    if spec["model"] == "decoder":
+        def loss_fn(tree, extras, tokens, loss_mask):
+            set_method_extras(extras)
+            base_loss = dec.lm_loss(tree["base"], tree.get("adapters", {}),
+                                    {"lm": tree["head"]}, tokens, loss_mask,
+                                    cfg, method)
+            return base_loss + method.extra_loss(tree.get("adapters", {}))
+
+        def logits_fn(tree, extras, tokens):
+            set_method_extras(extras)
+            return dec.lm_logits(tree["base"], tree.get("adapters", {}),
+                                 {"lm": tree["head"]}, tokens, cfg, method)
+        return loss_fn, logits_fn
+
+    def loss_fn(tree, extras, images, labels):
+        set_method_extras(extras)
+        base_loss = vit_mod.cls_loss(tree["base"], tree.get("adapters", {}),
+                                     {"cls": tree["head"]}, images, labels,
+                                     cfg, method)
+        return base_loss + method.extra_loss(tree.get("adapters", {}))
+
+    def logits_fn(tree, extras, images):
+        set_method_extras(extras)
+        return vit_mod.logits(tree["base"], tree.get("adapters", {}),
+                              {"cls": tree["head"]}, images, cfg, method)
+    return loss_fn, logits_fn
+
+
+def adapter_param_count(tree, part: T.Partition) -> int:
+    """Trainable params excluding the task head (the paper's '# trainable
+    parameters' column counts adapters; the manifest reports both)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for name, leaf, trainable in zip(part.names, leaves, part.mask):
+        if trainable and not name.startswith("head"):
+            total += leaf.size
+    return total
+
+
+# --------------------------------------------------------------------------
+# lowering
+# --------------------------------------------------------------------------
+
+def to_hlo_text(fn, example_args) -> str:
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tensor_meta(names, leaves):
+    return [{"name": n, "shape": list(l.shape), "dtype": str(l.dtype)}
+            for n, l in zip(names, leaves)]
+
+
+def lower_config(tag: str, spec, out_dir: str) -> dict:
+    t0 = time.time()
+    method = make_method(spec["method"], **spec["method_kw"])
+    tree = build_tree(spec, jax.random.PRNGKey(0), method)
+    part = T.make_partition(tree, method)
+    frozen, trainable = part.split(tree)
+    extras = tuple(spec["extras"]) + tuple(method.extra_inputs)
+    bspec = batch_spec(spec)
+
+    loss_fn, logits_fn = make_loss_and_logits(spec, method)
+    step_fn = T.make_train_step(loss_fn, part, len(extras))
+    eval_fn = T.make_eval_step(logits_fn, part, len(extras))
+
+    # ---- init ----
+    def init_fn(seed):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        t = build_tree(spec, key, method)
+        fz, tr = part.split(t)
+        return tuple(fz) + tuple(tr)
+
+    files = {}
+    init_txt = to_hlo_text(init_fn, [_sds((), jnp.int32)])
+    files["init"] = f"{tag}.init.hlo.txt"
+    with open(os.path.join(out_dir, files["init"]), "w") as f:
+        f.write(init_txt)
+
+    # ---- train ----
+    p_args = [_sds(l.shape, l.dtype) for l in frozen]
+    t_args = [_sds(l.shape, l.dtype) for l in trainable]
+    scalars = [_sds((), jnp.float32)] * 3
+    extra_args = [_sds((), jnp.float32)] * len(extras)
+    batch_args = [_sds(s, d) for _, s, d in bspec]
+    train_txt = to_hlo_text(
+        step_fn, p_args + t_args + t_args + t_args + scalars + extra_args
+        + batch_args)
+    files["train"] = f"{tag}.train.hlo.txt"
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(train_txt)
+
+    # ---- eval ----
+    eval_txt = to_hlo_text(eval_fn, p_args + t_args + extra_args
+                           + batch_args[:1])
+    files["eval"] = f"{tag}.eval.hlo.txt"
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(eval_txt)
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    froz_meta = [m for m, t in zip(_tensor_meta(part.names, leaves), part.mask)
+                 if not t]
+    train_meta = [m for m, t in zip(_tensor_meta(part.names, leaves), part.mask)
+                  if t]
+    entry = {
+        "tag": tag,
+        "model": spec["model"],
+        "method": spec["method"],
+        "method_kw": dict(spec["method_kw"]),
+        "task": spec["task"],
+        "cfg": _cfgdict(spec["cfg"]),
+        "files": files,
+        "frozen": froz_meta,
+        "trainable": train_meta,
+        "extras": list(extras),
+        "batch": [{"name": n, "shape": list(s), "dtype": str(jnp.dtype(d))}
+                  for n, s, d in bspec],
+        "trainable_param_count": int(sum(l.size for l, t in
+                                         zip(leaves, part.mask) if t)),
+        "adapter_param_count": int(adapter_param_count(tree, part)),
+        "total_param_count": int(sum(l.size for l in leaves)),
+    }
+    print(f"[aot] {tag}: {time.time() - t0:.1f}s "
+          f"(adapter={entry['adapter_param_count']}, "
+          f"trainable={entry['trainable_param_count']})", flush=True)
+    return entry
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--filter", default="",
+                    help="only lower tags containing this substring")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfgs = configs()
+    if args.list:
+        for tag in cfgs:
+            print(tag)
+        return 0
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"artifacts": {}, "version": 1}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    selected = {t: s for t, s in cfgs.items() if args.filter in t}
+    t0 = time.time()
+    for tag, spec in selected.items():
+        entry = lower_config(tag, spec, out_dir)
+        manifest["artifacts"][tag] = entry
+        # write incrementally so an interrupted run keeps its progress
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"[aot] lowered {len(selected)} configs in {time.time() - t0:.0f}s "
+          f"-> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True on this image) + pure-jnp oracles.
+
+  pauli_kernel    fused Pauli-circuit apply  y = x @ Q_P      (eq. 2)
+  taylor_kernel   Horner Taylor orthogonal apply y = x @ Q_T  (§4.1)
+  adapter_kernel  fused xW + alpha ((xU) lam) V^T             (hot path)
+  ref             the oracles every kernel is tested against
+"""
+from . import adapter_kernel, pauli_kernel, ref, taylor_kernel  # noqa: F401

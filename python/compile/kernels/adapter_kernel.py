@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused frozen-weight + SVD-form adapter matmul.
+
+    y = x @ W + scale * ((x @ U) * lam) @ V^T
+
+One kernel invocation covers the whole PEFT family's hot path: LoRA
+(lam = 1), AdaLoRA / Quantum-PEFT (U, V Stiefel frames, lam the diagonal
+node). Fusing the adapter branch into the base matmul means the [B_t, N]
+activation tile is read from HBM once and both products accumulate in
+VMEM — on TPU this is a single MXU pipeline with the K-skinny adapter
+matmuls hidden under the W matmul's latency.
+
+interpret=True on this image (see pauli_kernel.py header).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK_B = 128
+
+
+def _kernel(x_ref, w_ref, u_ref, lam_ref, v_ref, scale_ref, o_ref):
+    x = x_ref[...]
+    base = x @ w_ref[...]
+    z = (x @ u_ref[...]) * lam_ref[...]
+    o_ref[...] = base + scale_ref[0] * (z @ v_ref[...].T)
+
+
+def _adapter_apply_pallas(x, w, u, lam, v, scale, block_b: int = _BLOCK_B):
+    b, din = x.shape
+    dout = w.shape[1]
+    k = u.shape[1]
+    bb = min(block_b, max(b, 1))
+    pad = (-b) % bb
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    scale_arr = jnp.reshape(scale, (1,)).astype(x.dtype)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(xp.shape[0] // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((din, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((dout, k), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], dout), x.dtype),
+        interpret=True,
+    )(xp, w, u, lam, v, scale_arr)
+    return out[:b] if pad else out
+
+
+def make_adapter_apply(use_pallas: bool = True):
+    """Returns f(x, w, u, lam, v, scale) with kernel fwd + ref bwd."""
+
+    @jax.custom_vjp
+    def f(x, w, u, lam, v, scale):
+        if use_pallas:
+            return _adapter_apply_pallas(x, w, u, lam, v, scale)
+        return ref.adapter_apply(x, w, u, lam, v, scale)
+
+    def f_fwd(x, w, u, lam, v, scale):
+        return f(x, w, u, lam, v, scale), (x, w, u, lam, v, scale)
+
+    def f_bwd(resid, g):
+        _, vjp = jax.vjp(ref.adapter_apply, *resid)
+        return vjp(g)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f

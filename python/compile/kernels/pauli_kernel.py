@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: fused Pauli-circuit apply  y = x @ Q_P  (eq. 2).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch tile [B_t, N]
+stays resident in VMEM while *all* L·q rotation sweeps and CZ sign layers
+run over it — one HBM round-trip per circuit instead of one per layer.
+Rotations are VPU work (strided pairwise rotate); CZ layers are a
+broadcast multiply with a precomputed {+-1}^N sign vector baked in as a
+kernel constant table.
+
+interpret=True is mandatory on this image (CPU PJRT cannot execute Mosaic
+custom-calls); the kernel still exercises the exact BlockSpec/VMEM
+structure a real TPU build would use. Numerics: f32 throughout (real-TPU
+target: bf16 tile with f32 rotation accumulation).
+
+The public entry `pauli_apply` carries a custom_vjp whose backward runs
+through the jnp reference (kernels/ref.py), keeping every AOT graph plain
+HLO and exactly consistent with the tested forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantum import pauli as pauli_mod
+from . import ref
+
+# Default batch tile: 128 rows x N f32. For N = 4096 that is a 2 MiB tile,
+# comfortably inside a 16 MiB VMEM budget with double buffering.
+_BLOCK_B = 128
+
+
+def _build_sign_table(circuit: pauli_mod.PauliCircuit) -> np.ndarray:
+    """[n_layers, N] table of CZ sign vectors (+1 rows for sign-free layers)."""
+    n = circuit.dim
+    rows = []
+    for layer in circuit.layers:
+        rows.append(layer.sign if layer.sign is not None else np.ones(n, np.float32))
+    return np.stack(rows).astype(np.float32)
+
+
+def _kernel(theta_ref, sign_ref, x_ref, o_ref, *, circuit: pauli_mod.PauliCircuit):
+    """One batch tile through the whole circuit, VMEM-resident."""
+    x = x_ref[...]
+    n = circuit.dim
+    for li, layer in enumerate(circuit.layers):
+        th = theta_ref[layer.theta_ofs: layer.theta_ofs + len(layer.qubits)]
+        cos_t = jnp.cos(th / 2.0)
+        sin_t = jnp.sin(th / 2.0)
+        for i, k in enumerate(layer.qubits):
+            stride = 1 << k
+            xr = x.reshape(x.shape[0], n // (2 * stride), 2, stride)
+            x0, x1 = xr[:, :, 0, :], xr[:, :, 1, :]
+            y0 = cos_t[i] * x0 - sin_t[i] * x1
+            y1 = sin_t[i] * x0 + cos_t[i] * x1
+            x = jnp.stack([y0, y1], axis=2).reshape(x.shape[0], n)
+        if layer.sign is not None:
+            x = x * sign_ref[li, :]
+    o_ref[...] = x
+
+
+def _pauli_apply_pallas(x, thetas, circuit: pauli_mod.PauliCircuit,
+                        block_b: int = _BLOCK_B):
+    """Tile the batch dimension and run the fused kernel."""
+    b, n = x.shape
+    assert n == circuit.dim
+    bb = min(block_b, max(b, 1))
+    pad = (-b) % bb
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    signs = jnp.asarray(_build_sign_table(circuit))
+    out = pl.pallas_call(
+        functools.partial(_kernel, circuit=circuit),
+        grid=(xp.shape[0] // bb,),
+        in_specs=[
+            pl.BlockSpec((circuit.num_params,), lambda i: (0,)),
+            pl.BlockSpec(signs.shape, lambda i: (0, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], n), x.dtype),
+        interpret=True,
+    )(thetas, signs, xp)
+    return out[:b] if pad else out
+
+
+def make_pauli_apply(circuit: pauli_mod.PauliCircuit, use_pallas: bool = True):
+    """Returns f(x, thetas) = x @ Q_P with kernel forward + ref backward."""
+
+    @jax.custom_vjp
+    def f(x, thetas):
+        if use_pallas:
+            return _pauli_apply_pallas(x, thetas, circuit)
+        return ref.pauli_apply(x, thetas, circuit)
+
+    def f_fwd(x, thetas):
+        return f(x, thetas), (x, thetas)
+
+    def f_bwd(resid, g):
+        x, thetas = resid
+        _, vjp = jax.vjp(lambda xx, tt: ref.pauli_apply(xx, tt, circuit), x, thetas)
+        return vjp(g)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f

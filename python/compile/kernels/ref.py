@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematically-transparent implementation the
+kernels are tested against (python/tests/test_kernels.py, hypothesis
+sweeps) and the backward-pass implementation used by the kernels'
+custom_vjp rules — so kernel forward == ref forward guarantees gradient
+correctness of the AOT training graphs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantum import pauli as pauli_mod
+
+
+def pauli_apply(x, thetas, circuit: pauli_mod.PauliCircuit):
+    """x @ Q_P — direct layer-by-layer jnp apply (gates.apply_kron_ry)."""
+    return circuit.apply(x, thetas)
+
+
+def taylor_apply(x, bk, order: int):
+    """x @ Q_T with Q_T = sum_{p<=P} A^p / p!, A = L - L^T,
+    L = tril(B_K, -1) zero-padded to N x N. Dense materialization —
+    O(N^2) but unambiguous."""
+    n = x.shape[-1]
+    k = bk.shape[1]
+    lmat = jnp.zeros((n, n), dtype=x.dtype).at[:, :k].set(jnp.tril(bk, k=-1))
+    a = lmat - lmat.T
+    acc = x
+    for p in range(order, 0, -1):
+        acc = x + (acc @ a) / p
+    return acc
+
+
+def adapter_apply(x, w, u, lam, v, scale):
+    """Fused frozen-weight + SVD-form adapter forward:
+        y = x @ W + scale * ((x @ U) * lam) @ V^T
+    covering LoRA (lam = 1, U = B, V^T = A) and Quantum-PEFT/AdaLoRA
+    (U, V Stiefel frames, lam the diagonal node)."""
+    return x @ w + scale * (((x @ u) * lam) @ v.T)

@@ -1,0 +1,4 @@
+"""Model zoo: encoder (GLUE substitute), decoder LM (E2E substitute),
+ViT (CIFAR-10 transfer substitute). All pure functions over dict pytrees;
+PEFT adapters thread through models.layers."""
+from . import decoder, layers, transformer, vit  # noqa: F401

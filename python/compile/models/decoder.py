@@ -1,0 +1,80 @@
+"""Decoder LM for the E2E-NLG substitute (Table 3/4).
+
+Causal transformer over [MR ; SEP ; text] sequences: the Rust data layer
+renders slot/value meaning representations and reference texts into one
+token stream; the LM trains with next-token CE where loss is only charged
+on the text segment (loss_mask input). Generation is greedy: the Rust
+coordinator calls the eval artifact repeatedly, appending the argmax of
+the last valid position.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..peft.base import PeftMethod
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderConfig:
+    vocab: int = 256
+    d: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    ff: int = 128
+    seq_len: int = 48
+
+
+def init_base(key, cfg: DecoderConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    return {
+        "tok": jax.random.normal(ks[0], (cfg.vocab, cfg.d), dtype=jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.seq_len, cfg.d), dtype=jnp.float32) * 0.02,
+        "blocks": [layers.init_block(ks[2 + i], cfg.d, cfg.ff)
+                   for i in range(cfg.n_layers)],
+        "ln_f": layers.init_layer_norm(cfg.d),
+    }
+
+
+def init_heads(key, cfg: DecoderConfig) -> dict:
+    return {"lm": layers.init_dense(key, cfg.d, cfg.vocab)}
+
+
+def init_adapters(key, cfg: DecoderConfig, method: PeftMethod) -> dict:
+    ks = jax.random.split(key, cfg.n_layers)
+    blocks = [layers.init_block_adapters(ks[i], method, cfg.d)
+              for i in range(cfg.n_layers)]
+    if all(not b for b in blocks):
+        return {}
+    return {"blocks": blocks}
+
+
+def lm_logits(base, adapters, heads, tokens, cfg: DecoderConfig,
+              method: PeftMethod):
+    """tokens [B, T] -> next-token logits [B, T, vocab] (causal)."""
+    b, t = tokens.shape
+    pad_bias, _ = layers.padding_mask(tokens)
+    mask = layers.causal_mask(t) + pad_bias
+    x = base["tok"][tokens] + base["pos"][:t]
+    ablocks = adapters.get("blocks", [None] * cfg.n_layers) if adapters else \
+        [None] * cfg.n_layers
+    for p, a in zip(base["blocks"], ablocks):
+        x = layers.block(p, a, x, mask, cfg.n_heads, method)
+    return layers.dense(heads["lm"], layers.layer_norm(base["ln_f"], x))
+
+
+def lm_loss(base, adapters, heads, tokens, loss_mask, cfg, method,
+            label_smooth: float = 0.1):
+    """Next-token CE with label smoothing 0.1 (paper Table 14) charged only
+    where loss_mask[b, t+1] == 1 (the text segment, not the MR prompt)."""
+    logits = lm_logits(base, adapters, heads, tokens, cfg, method)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    smooth = -jnp.mean(lp, axis=-1)
+    per_tok = (1.0 - label_smooth) * nll + label_smooth * smooth
+    m = loss_mask[:, 1:].astype(jnp.float32)
+    return jnp.sum(per_tok * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,148 @@
+"""Shared transformer building blocks with PEFT-wrapped projections.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (lists for block stacks);
+  * every dense weight is [d_in, d_out], bias [d_out];
+  * PEFT adapters attach to the attention q and v projections (the
+    paper's default sites, §5.1/§5.4); bottleneck adapters (Houlsby /
+    Pfeiffer) attach at the sublayer outputs;
+  * dtype f32 end-to-end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..peft.base import PeftMethod
+
+
+def init_dense(key, n: int, m: int) -> dict:
+    return {
+        "w": jax.random.normal(key, (n, m), dtype=jnp.float32) / jnp.sqrt(n),
+        "b": jnp.zeros((m,), dtype=jnp.float32),
+    }
+
+
+def dense(p: dict, x):
+    return x @ p["w"] + p["b"]
+
+
+def dense_peft(p: dict, adapter: dict | None, x, method: PeftMethod):
+    """PEFT-adapted dense: W frozen, Delta-W from the method's adapter."""
+    if adapter is None or not adapter:
+        return x @ p["w"] + p["b"]
+    lead = x.shape[:-1]
+    y = method.apply(adapter, x.reshape(-1, x.shape[-1]), p["w"])
+    return y.reshape(lead + (p["w"].shape[1],)) + p["b"]
+
+
+def init_layer_norm(d: int) -> dict:
+    return {"g": jnp.ones((d,), dtype=jnp.float32),
+            "b": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def layer_norm(p: dict, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def init_attention(key, d: int) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, d),
+        "wk": init_dense(ks[1], d, d),
+        "wv": init_dense(ks[2], d, d),
+        "wo": init_dense(ks[3], d, d),
+    }
+
+
+def attention(p: dict, adapters: dict | None, x, mask, n_heads: int,
+              method: PeftMethod):
+    """Multi-head attention; PEFT on q and v projections.
+
+    mask: [B, T] validity (1 = real token) or [T, T] causal, or both
+    combined upstream into an additive [B, 1, T, T] bias.
+    """
+    b, t, d = x.shape
+    dh = d // n_heads
+    a = adapters or {}
+    q = dense_peft(p["wq"], a.get("q"), x, method)
+    k = dense(p["wk"], x)
+    v = dense_peft(p["wv"], a.get("v"), x, method)
+
+    def heads(z):
+        return z.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    logits = qh @ kh.transpose(0, 1, 3, 2) / jnp.sqrt(jnp.float32(dh))
+    logits = logits + mask
+    att = jax.nn.softmax(logits, axis=-1)
+    out = (att @ vh).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return dense(p["wo"], out)
+
+
+def init_mlp(key, d: int, ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w1": init_dense(k1, d, ff), "w2": init_dense(k2, ff, d)}
+
+
+def mlp(p: dict, x):
+    return dense(p["w2"], jax.nn.gelu(dense(p["w1"], x)))
+
+
+def init_block(key, d: int, ff: int) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": init_layer_norm(d),
+        "attn": init_attention(ka, d),
+        "ln2": init_layer_norm(d),
+        "mlp": init_mlp(km, d, ff),
+    }
+
+
+def block(p: dict, adapters: dict | None, x, mask, n_heads: int,
+          method: PeftMethod):
+    """Pre-LN transformer block with optional bottleneck adapters."""
+    a = adapters or {}
+    h = attention(p["attn"], a, layer_norm(p["ln1"], x), mask, n_heads, method)
+    if "bn_attn" in a:
+        h = method.bottleneck_apply(a["bn_attn"], h)
+    x = x + h
+    h = mlp(p["mlp"], layer_norm(p["ln2"], x))
+    if "bn_mlp" in a:
+        h = method.bottleneck_apply(a["bn_mlp"], h)
+    return x + h
+
+
+def init_block_adapters(key, method: PeftMethod, d: int) -> dict:
+    """Adapter params for one block, per the method's attachment sites."""
+    out = {}
+    style = getattr(method, "block_adapter", None)
+    ks = jax.random.split(key, 4)
+    if style == "houlsby":
+        out["bn_attn"] = method.init_bottleneck(ks[0], d)
+        out["bn_mlp"] = method.init_bottleneck(ks[1], d)
+        return out
+    if style == "pfeiffer":
+        out["bn_attn"] = method.init_bottleneck(ks[0], d)
+        return out
+    q = method.init(ks[2], d, d)
+    v = method.init(ks[3], d, d)
+    if q:
+        out["q"] = q
+    if v:
+        out["v"] = v
+    return out
+
+
+def padding_mask(tokens, pad_id: int = 0):
+    """[B, T] int tokens -> additive [B, 1, 1, T] attention bias."""
+    valid = (tokens != pad_id).astype(jnp.float32)
+    return (valid[:, None, None, :] - 1.0) * 1e9, valid
+
+
+def causal_mask(t: int):
+    """Additive [1, 1, T, T] causal bias."""
+    m = jnp.tril(jnp.ones((t, t), dtype=jnp.float32))
+    return (m[None, None, :, :] - 1.0) * 1e9

@@ -1,0 +1,105 @@
+"""Encoder transformer: synthetic-GLUE classifier/regressor + DAE pretrain.
+
+The GLUE substitute (DESIGN.md §2): the Rust coordinator first pretrains
+this encoder with a denoising objective on a synthetic corpus (`dae_loss`,
+full fine-tuning artifact), then freezes the backbone and fine-tunes PEFT
+adapters + head per task (`cls_loss`, task_kind scalar selects CE vs MSE
+so one artifact family serves SST-2/CoLA/RTE/MRPC *and* STS-B shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..peft.base import PeftMethod
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab: int = 256
+    d: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    ff: int = 128
+    seq_len: int = 32
+    n_out: int = 2          # classifier logits (regression uses logit 0)
+
+
+def init_base(key, cfg: EncoderConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    return {
+        "tok": jax.random.normal(ks[0], (cfg.vocab, cfg.d), dtype=jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.seq_len, cfg.d), dtype=jnp.float32) * 0.02,
+        "blocks": [layers.init_block(ks[2 + i], cfg.d, cfg.ff)
+                   for i in range(cfg.n_layers)],
+        "ln_f": layers.init_layer_norm(cfg.d),
+    }
+
+
+def init_heads(key, cfg: EncoderConfig) -> dict:
+    kc, kd = jax.random.split(key)
+    return {
+        "cls": layers.init_dense(kc, cfg.d, cfg.n_out),
+        "dae": layers.init_dense(kd, cfg.d, cfg.vocab),
+    }
+
+
+def init_adapters(key, cfg: EncoderConfig, method: PeftMethod) -> dict:
+    ks = jax.random.split(key, cfg.n_layers)
+    blocks = [layers.init_block_adapters(ks[i], method, cfg.d)
+              for i in range(cfg.n_layers)]
+    if all(not b for b in blocks):
+        return {}
+    return {"blocks": blocks}
+
+
+def encode(base: dict, adapters: dict, tokens, cfg: EncoderConfig,
+           method: PeftMethod):
+    """tokens [B, T] -> hidden [B, T, d], valid [B, T]."""
+    b, t = tokens.shape
+    mask, valid = layers.padding_mask(tokens)
+    x = base["tok"][tokens] + base["pos"][:t]
+    ablocks = adapters.get("blocks", [None] * cfg.n_layers) if adapters else \
+        [None] * cfg.n_layers
+    for p, a in zip(base["blocks"], ablocks):
+        x = layers.block(p, a, x, mask, cfg.n_heads, method)
+    return layers.layer_norm(base["ln_f"], x), valid
+
+
+def cls_logits(base, adapters, heads, tokens, cfg, method):
+    """Mean-pooled classification/regression head output [B, n_out]."""
+    h, valid = encode(base, adapters, tokens, cfg, method)
+    denom = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(h * valid[:, :, None], axis=1) / denom
+    return layers.dense(heads["cls"], pooled)
+
+
+def cls_loss(base, adapters, heads, tokens, labels, task_kind, cfg, method):
+    """task_kind = 0: softmax CE on integer labels; 1: MSE of logit 0 on
+    float labels (STS-B-style regression)."""
+    logits = cls_logits(base, adapters, heads, tokens, cfg, method)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(
+        logp, jnp.clip(labels.astype(jnp.int32), 0, cfg.n_out - 1)[:, None],
+        axis=1))
+    mse = jnp.mean((logits[:, 0] - labels.astype(jnp.float32)) ** 2)
+    return (1.0 - task_kind) * ce + task_kind * mse
+
+
+def dae_logits(base, adapters, heads, tokens, cfg, method):
+    """Per-position vocabulary logits for denoising pretraining."""
+    h, _ = encode(base, adapters, tokens, cfg, method)
+    return layers.dense(heads["dae"], h)
+
+
+def dae_loss(base, adapters, heads, corrupted, clean, cfg, method):
+    """Reconstruct clean tokens from corrupted input (pad positions skipped)."""
+    logits = dae_logits(base, adapters, heads, corrupted, cfg, method)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, clean[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    valid = (clean != 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

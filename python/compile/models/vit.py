@@ -1,0 +1,91 @@
+"""Small ViT for the CIFAR-10 transfer substitute (Tables 6-10).
+
+16x16x3 synthetic shape/texture images, patch size 4 -> 16 patch tokens
+plus a learned CLS token. The Rust coordinator pretrains on a 20-class
+synthetic pretask, quantizes the frozen backbone to n bits host-side
+(Table 6's 3-bit base), then fine-tunes adapters + a fresh 10-class head.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..peft.base import PeftMethod
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image: int = 16
+    patch: int = 4
+    channels: int = 3
+    d: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    ff: int = 128
+    n_out: int = 10
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+
+def init_base(key, cfg: ViTConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    return {
+        "embed": layers.init_dense(ks[0], cfg.patch_dim, cfg.d),
+        "cls": jax.random.normal(ks[1], (1, 1, cfg.d), dtype=jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[2], (cfg.n_patches + 1, cfg.d),
+                                 dtype=jnp.float32) * 0.02,
+        "blocks": [layers.init_block(ks[3 + i], cfg.d, cfg.ff)
+                   for i in range(cfg.n_layers)],
+        "ln_f": layers.init_layer_norm(cfg.d),
+    }
+
+
+def init_heads(key, cfg: ViTConfig) -> dict:
+    return {"cls": layers.init_dense(key, cfg.d, cfg.n_out)}
+
+
+def init_adapters(key, cfg: ViTConfig, method: PeftMethod) -> dict:
+    ks = jax.random.split(key, cfg.n_layers)
+    blocks = [layers.init_block_adapters(ks[i], method, cfg.d)
+              for i in range(cfg.n_layers)]
+    if all(not b for b in blocks):
+        return {}
+    return {"blocks": blocks}
+
+
+def patchify(images, cfg: ViTConfig):
+    """[B, H, W, C] -> [B, n_patches, patch_dim]."""
+    b = images.shape[0]
+    p, g = cfg.patch, cfg.image // cfg.patch
+    x = images.reshape(b, g, p, g, p, cfg.channels)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, g * g, cfg.patch_dim)
+
+
+def logits(base, adapters, heads, images, cfg: ViTConfig, method: PeftMethod):
+    b = images.shape[0]
+    x = layers.dense(base["embed"], patchify(images, cfg))
+    cls = jnp.broadcast_to(base["cls"], (b, 1, cfg.d))
+    x = jnp.concatenate([cls, x], axis=1) + base["pos"]
+    mask = jnp.zeros((1, 1, 1, cfg.n_patches + 1), dtype=jnp.float32)
+    ablocks = adapters.get("blocks", [None] * cfg.n_layers) if adapters else \
+        [None] * cfg.n_layers
+    for p, a in zip(base["blocks"], ablocks):
+        x = layers.block(p, a, x, mask, cfg.n_heads, method)
+    h = layers.layer_norm(base["ln_f"], x)[:, 0]
+    return layers.dense(heads["cls"], h)
+
+
+def cls_loss(base, adapters, heads, images, labels, cfg, method):
+    lg = logits(base, adapters, heads, images, cfg, method)
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(
+        lp, labels.astype(jnp.int32)[:, None], axis=1))

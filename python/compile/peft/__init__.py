@@ -1,0 +1,39 @@
+"""PEFT method registry: the paper's Quantum-PEFT + every baseline it
+compares against (Tables 2, 3, 5, 6, 10)."""
+from __future__ import annotations
+
+from .base import BottleneckAdapter, FullFT, PeftMethod  # noqa: F401
+from .lora_family import AdaLoRA, BitFit, LoHa, LoKr, LoRA  # noqa: F401
+from .highrank import MoRA, QuanTA  # noqa: F401
+from .quantum_peft import (  # noqa: F401
+    QuantumPeftPauli,
+    QuantumPeftTaylor,
+    QuantumPeftTensorNetwork,
+)
+
+
+def make_method(name: str, **kw) -> PeftMethod:
+    """Factory used by aot.py config tags; kw override per-method defaults."""
+    table = {
+        "ft": FullFT,
+        "lora": LoRA,
+        "adalora": AdaLoRA,
+        "loha": LoHa,
+        "lokr": LoKr,
+        "bitfit": BitFit,
+        "hadapter": lambda **k: BottleneckAdapter(style="houlsby", **k),
+        "padapter": lambda **k: BottleneckAdapter(style="pfeiffer", **k),
+        "mora": MoRA,
+        "quanta": QuanTA,
+        "qpeft_pauli": QuantumPeftPauli,
+        "qpeft_taylor": QuantumPeftTaylor,
+        "qpeft_tn": QuantumPeftTensorNetwork,
+    }
+    if name not in table:
+        raise KeyError(f"unknown PEFT method {name!r}; have {sorted(table)}")
+    return table[name](**kw)
+
+
+ALL_METHODS = ("ft", "lora", "adalora", "loha", "lokr", "bitfit", "hadapter",
+               "padapter", "mora", "quanta", "qpeft_pauli", "qpeft_taylor",
+               "qpeft_tn")

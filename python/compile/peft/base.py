@@ -1,0 +1,110 @@
+"""PEFT method interface.
+
+A method adapts a single frozen weight W in R^{n x m}; the model layer
+calls `apply(adapter_params, x, w)` on its hot path. Methods are
+stateless config objects — all trainable state lives in the params
+pytree, all structure is baked at AOT-lowering time.
+
+`extras` threading: some methods consume *runtime* scalars (intrinsic
+rank K', quantization levels) so one AOT artifact serves a whole paper
+sweep; these arrive via `set_extras` before tracing and are traced
+scalars inside the lowered graph.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+class PeftMethod:
+    """Base class: identity adaptation (used by full fine-tuning)."""
+
+    name = "ft"
+    #: names of runtime scalar inputs this method consumes (AOT inputs)
+    extra_inputs: tuple = ()
+
+    def __init__(self):
+        self._extras: Dict[str, jnp.ndarray] = {}
+
+    # -- structure ---------------------------------------------------------
+    def init(self, key, n: int, m: int) -> dict:
+        """Adapter parameter pytree for one n x m weight ({} = none)."""
+        return {}
+
+    def num_params(self, n: int, m: int) -> int:
+        return 0
+
+    # -- runtime scalars ----------------------------------------------------
+    def set_extras(self, **kw):
+        self._extras = dict(kw)
+
+    def extra(self, name: str, default=None):
+        if name in self._extras:
+            return self._extras[name]
+        if default is None:
+            raise KeyError(f"{self.name}: missing runtime extra {name!r}")
+        return default
+
+    # -- forward ------------------------------------------------------------
+    def apply(self, params: dict, x, w):
+        """y = x @ (W + Delta-W); base class: no delta."""
+        return x @ w
+
+    def delta_w(self, params: dict, n: int, m: int):
+        """Materialized Delta-W (tests, analysis); not on the hot path."""
+        return jnp.zeros((n, m), dtype=jnp.float32)
+
+    def extra_loss(self, all_adapter_params) -> jnp.ndarray:
+        """Method-level regularizer added to the task loss (AdaLoRA)."""
+        return jnp.float32(0.0)
+
+    # -- trainability -------------------------------------------------------
+    #: whether the *base* weights train ("ft") / biases train ("bitfit")
+    base_trainable = False
+    bias_trainable = False
+
+
+class FullFT(PeftMethod):
+    """Full fine-tuning: no adapters, the whole base model trains."""
+
+    name = "ft"
+    base_trainable = True
+    bias_trainable = True
+
+
+class BottleneckAdapter(PeftMethod):
+    """Houlsby / Pfeiffer serial adapters (Table 2 baselines).
+
+    Not a per-weight delta: a bottleneck MLP  h + W_up gelu(W_down h)
+    inserted after the attention sublayer (Pfeiffer) or after both the
+    attention and FFN sublayers (Houlsby). The model (models/layers.py)
+    checks `block_adapter` and routes through `bottleneck()`.
+    """
+
+    name = "hadapter"
+    block_adapter = "houlsby"
+
+    def __init__(self, bottleneck: int = 8, style: str = "houlsby"):
+        super().__init__()
+        self.bottleneck = bottleneck
+        self.block_adapter = style
+        self.name = "hadapter" if style == "houlsby" else "padapter"
+
+    def init_bottleneck(self, key, d: int) -> dict:
+        import jax
+
+        kd, _ = jax.random.split(key)
+        return {
+            "down": jax.random.normal(kd, (d, self.bottleneck),
+                                      dtype=jnp.float32) / jnp.sqrt(d),
+            "up": jnp.zeros((self.bottleneck, d), dtype=jnp.float32),
+        }
+
+    def bottleneck_apply(self, params, h):
+        import jax
+
+        return h + jax.nn.gelu(h @ params["down"]) @ params["up"]
+
+    def bottleneck_params(self, d: int) -> int:
+        return 2 * d * self.bottleneck

@@ -1,0 +1,104 @@
+"""High-rank / tensor-folding baselines of Table 2: MoRA and QuanTA.
+
+MoRA (Jiang et al., 2024b): one square trainable matrix M in
+R^{Khat x Khat}, Khat = floor(sqrt((n+m)K)), with *non-trainable*
+compress/decompress maps so dims match — high-rank but unable to scale
+below LoRA (paper A.6).
+
+QuanTA (Chen et al., 2024b): tensor folding — the update factorizes over
+folded axes; we implement the 2-axis folding Delta-W = A1 (x) A2 with
+dense square factors per folded dimension pair, matching QuanTA's
+parameter scaling (sum of squared fold dims) without its unitary-free
+redundancy; the paper contrasts exactly this redundancy (A.6).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .base import PeftMethod
+
+
+def _fold(d: int):
+    """Near-square factorization d = d1 * d2, d1 <= d2."""
+    f, best = 1, (1, d)
+    while f * f <= d:
+        if d % f == 0:
+            best = (f, d // f)
+        f += 1
+    return best
+
+
+class MoRA(PeftMethod):
+    name = "mora"
+
+    def __init__(self, k: int = 4, alpha: float = 1.0):
+        super().__init__()
+        self.k, self.alpha = k, alpha
+
+    def khat(self, n: int, m: int) -> int:
+        return max(1, int(math.isqrt((n + m) * self.k)))
+
+    def init(self, key, n: int, m: int) -> dict:
+        kh = self.khat(n, m)
+        return {"m": jnp.zeros((kh, kh), dtype=jnp.float32)}
+
+    def num_params(self, n: int, m: int) -> int:
+        kh = self.khat(n, m)
+        return kh * kh
+
+    def _maps(self, n: int, m: int, kh: int):
+        """Fixed grouped-average compress [n, kh] / repeat decompress [kh, m]."""
+        gi = (jnp.arange(n) * kh) // n
+        p_in = jax.nn.one_hot(gi, kh, dtype=jnp.float32)
+        p_in = p_in / jnp.maximum(jnp.sum(p_in, axis=0, keepdims=True), 1.0)
+        go = (jnp.arange(m) * kh) // m
+        p_out = jax.nn.one_hot(go, kh, dtype=jnp.float32).T
+        return p_in, p_out
+
+    def delta_w(self, params, n, m):
+        kh = params["m"].shape[0]
+        p_in, p_out = self._maps(n, m, kh)
+        return self.alpha * p_in @ params["m"] @ p_out
+
+    def apply(self, params, x, w):
+        kh = params["m"].shape[0]
+        n, m = w.shape
+        p_in, p_out = self._maps(n, m, kh)
+        return x @ w + self.alpha * (((x @ p_in) @ params["m"]) @ p_out)
+
+
+class QuanTA(PeftMethod):
+    name = "quanta"
+
+    def __init__(self, alpha: float = 1.0):
+        super().__init__()
+        self.alpha = alpha
+
+    def init(self, key, n: int, m: int) -> dict:
+        n1, n2 = _fold(n)
+        m1, m2 = _fold(m)
+        k1, _ = jax.random.split(key)
+        return {
+            # zero-init second factor => Delta-W = 0 at start
+            "a1": jax.random.normal(k1, (n1, m1), dtype=jnp.float32) / jnp.sqrt(n1),
+            "a2": jnp.zeros((n2, m2), dtype=jnp.float32),
+        }
+
+    def num_params(self, n: int, m: int) -> int:
+        n1, n2 = _fold(n)
+        m1, m2 = _fold(m)
+        return n1 * m1 + n2 * m2
+
+    def delta_w(self, params, n, m):
+        a1, a2 = params["a1"], params["a2"]
+        n1, m1 = a1.shape
+        n2, m2 = a2.shape
+        # (x)_fold: W[(i1 i2), (j1 j2)] = A1[i1, j1] A2[i2, j2]
+        return self.alpha * jnp.einsum("ac,bd->abcd", a1, a2).reshape(n, m)
+
+    def apply(self, params, x, w):
+        n, m = w.shape
+        return x @ (w + self.delta_w(params, n, m))

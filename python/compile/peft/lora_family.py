@@ -1,0 +1,181 @@
+"""LoRA-family baselines from Tables 2/3/5/6: LoRA, AdaLoRA, LoHa, LoKr.
+
+All use the fused adapter kernel (kernels/adapter_kernel.py) where the
+update is expressible as U diag(lam) V^T; LoHa/LoKr materialize Delta-W
+(their Hadamard/Kronecker structure does not factor through the fused
+form) — at fine-tuning dimensions this is how the reference
+implementations (peft / LyCORIS) behave too.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.adapter_kernel import make_adapter_apply
+from .base import PeftMethod
+
+_adapter_apply = make_adapter_apply(use_pallas=True)
+
+
+class LoRA(PeftMethod):
+    """Hu et al. 2021: Delta-W = (alpha/K) B A, B zero-init, A gaussian."""
+
+    name = "lora"
+
+    def __init__(self, k: int = 4, alpha: float = 32.0, use_pallas: bool = True):
+        super().__init__()
+        self.k, self.alpha = k, alpha
+        self._apply = make_adapter_apply(use_pallas)
+
+    def init(self, key, n: int, m: int) -> dict:
+        ka, _ = jax.random.split(key)
+        return {
+            "a": jax.random.normal(ka, (m, self.k), dtype=jnp.float32) / jnp.sqrt(m),
+            "b": jnp.zeros((n, self.k), dtype=jnp.float32),
+        }
+
+    def num_params(self, n: int, m: int) -> int:
+        return (n + m) * self.k
+
+    def apply(self, params, x, w):
+        ones = jnp.ones((self.k,), dtype=x.dtype)
+        return self._apply(x, w, params["b"], ones, params["a"],
+                           jnp.float32(self.alpha / self.k))
+
+    def delta_w(self, params, n, m):
+        return (self.alpha / self.k) * params["b"] @ params["a"].T
+
+
+class AdaLoRA(PeftMethod):
+    """Zhang et al. 2023: SVD-form U Lambda V^T with an *inexact*
+    orthogonality regularizer ||U^T U - I||^2 + ||V^T V - I||^2 — the
+    paper's Figure 1 contrast case (Quantum-PEFT gets orthogonality by
+    construction, AdaLoRA pays K(K+1) redundant params + a regularizer)."""
+
+    name = "adalora"
+    reg_weight = 0.1
+
+    def __init__(self, k: int = 4, alpha: float = 32.0, use_pallas: bool = True):
+        super().__init__()
+        self.k, self.alpha = k, alpha
+        self._apply = make_adapter_apply(use_pallas)
+
+    def init(self, key, n: int, m: int) -> dict:
+        ku, kv = jax.random.split(key)
+        return {
+            "u": jax.random.normal(ku, (n, self.k), dtype=jnp.float32) / jnp.sqrt(n),
+            "v": jax.random.normal(kv, (m, self.k), dtype=jnp.float32) / jnp.sqrt(m),
+            "lam": jnp.zeros((self.k,), dtype=jnp.float32),
+        }
+
+    def num_params(self, n: int, m: int) -> int:
+        return (n + m) * self.k + self.k
+
+    def apply(self, params, x, w):
+        return self._apply(x, w, params["u"], params["lam"], params["v"],
+                           jnp.float32(self.alpha / self.k))
+
+    def delta_w(self, params, n, m):
+        return (self.alpha / self.k) * (params["u"] * params["lam"]) @ params["v"].T
+
+    def extra_loss(self, all_adapter_params):
+        """Sum of orthogonality penalties over every adapter site."""
+        def site_loss(p):
+            u, v = p["u"], p["v"]
+            iu = jnp.eye(u.shape[1], dtype=u.dtype)
+            return (jnp.sum((u.T @ u - iu) ** 2) + jnp.sum((v.T @ v - iu) ** 2))
+
+        leaves = [site_loss(p) for p in _iter_sites(all_adapter_params)]
+        return self.reg_weight * sum(leaves, jnp.float32(0.0))
+
+
+class LoHa(PeftMethod):
+    """Hyeon-Woo et al. 2022 (FedPara/LoHa): Delta-W = (B1 A1) .* (B2 A2)."""
+
+    name = "loha"
+
+    def __init__(self, k: int = 4, alpha: float = 32.0):
+        super().__init__()
+        self.k, self.alpha = k, alpha
+
+    def init(self, key, n: int, m: int) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "a1": jax.random.normal(k1, (m, self.k), dtype=jnp.float32) / jnp.sqrt(m),
+            "b1": jnp.zeros((n, self.k), dtype=jnp.float32),
+            "a2": jax.random.normal(k2, (m, self.k), dtype=jnp.float32) / jnp.sqrt(m),
+            "b2": jax.random.normal(k3, (n, self.k), dtype=jnp.float32) / jnp.sqrt(n),
+        }
+
+    def num_params(self, n: int, m: int) -> int:
+        return 2 * (n + m) * self.k
+
+    def delta_w(self, params, n, m):
+        return ((self.alpha / self.k)
+                * (params["b1"] @ params["a1"].T)
+                * (params["b2"] @ params["a2"].T))
+
+    def apply(self, params, x, w):
+        n, m = w.shape
+        return x @ (w + self.delta_w(params, n, m))
+
+
+class LoKr(PeftMethod):
+    """Yeh et al. 2024 (LyCORIS LoKr): Delta-W = C (x) (B A) with a small
+    dense Kronecker factor C in R^{f x f} and a low-rank pair on the
+    (n/f) x (m/f) block."""
+
+    name = "lokr"
+
+    def __init__(self, k: int = 4, f: int = 8, alpha: float = 32.0):
+        super().__init__()
+        self.k, self.f, self.alpha = k, f, alpha
+
+    def _block_dims(self, n: int, m: int):
+        f = self.f
+        while n % f or m % f:
+            f //= 2
+        return f, n // f, m // f
+
+    def init(self, key, n: int, m: int) -> dict:
+        f, nb, mb = self._block_dims(n, m)
+        kc, ka = jax.random.split(key)
+        return {
+            "c": jax.random.normal(kc, (f, f), dtype=jnp.float32) / f,
+            "a": jax.random.normal(ka, (mb, self.k), dtype=jnp.float32) / jnp.sqrt(mb),
+            "b": jnp.zeros((nb, self.k), dtype=jnp.float32),
+        }
+
+    def num_params(self, n: int, m: int) -> int:
+        f, nb, mb = self._block_dims(n, m)
+        return f * f + (nb + mb) * self.k
+
+    def delta_w(self, params, n, m):
+        block = params["b"] @ params["a"].T            # [n/f, m/f]
+        return (self.alpha / self.k) * jnp.kron(params["c"], block)
+
+    def apply(self, params, x, w):
+        n, m = w.shape
+        return x @ (w + self.delta_w(params, n, m))
+
+
+class BitFit(PeftMethod):
+    """Zaken et al. 2022: train only bias vectors (handled by the model's
+    trainability mask; no per-weight adapter params)."""
+
+    name = "bitfit"
+    bias_trainable = True
+
+
+def _iter_sites(tree):
+    """Yield every adapter-site dict (a dict of arrays) in a nested tree."""
+    if isinstance(tree, dict):
+        if tree and all(not isinstance(v, (dict, list, tuple))
+                        for v in tree.values()):
+            yield tree
+        else:
+            for v in tree.values():
+                yield from _iter_sites(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _iter_sites(v)

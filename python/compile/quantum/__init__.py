@@ -1,0 +1,22 @@
+"""Quantum-inspired building blocks of Quantum-PEFT (paper §4).
+
+Submodules:
+  gates            RY / CZ primitives and Kronecker-structured applies
+  pauli            eq. (2) Pauli parameterization Q_P (log-params circuits)
+  mappings         Lie-algebra -> orthogonal mappings (Q_E/C/T/N/H/G)
+  qsd              quantum Shannon decomposition for arbitrary dims (eq. 4)
+  diagonal         generalized CZ / diagonal nodes (real, Rademacher-ReinMax)
+  quantize         groupwise Lie-parameter quantization + QAT (+A.5)
+  tensor_networks  CP/TD/TTD/TRD/HTD adapter constructions (Table 10)
+  accounting       closed-form parameter/byte counts (Table 1)
+"""
+from . import (  # noqa: F401
+    accounting,
+    diagonal,
+    gates,
+    mappings,
+    pauli,
+    qsd,
+    quantize,
+    tensor_networks,
+)

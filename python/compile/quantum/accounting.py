@@ -1,0 +1,127 @@
+"""Closed-form trainable-parameter and storage accounting (Table 1, §4.2).
+
+Counts are *analytic* — they depend only on layer dimensions, rank and
+circuit depth, never on data — so Table 1 is reproduced exactly (same
+model dimensions as the paper).  The Rust mirror (rust/src/peft/
+accounting.rs) must agree; python/tests/test_accounting.py cross-checks
+these formulas against actual pytree leaf counts of the PEFT methods.
+
+Conventions (paper §4.2):
+  LoRA        2 N K          per adapted N x M weight (K-rank pair, N==M there)
+  AdaLoRA     (N + M) K + K  (SVD form, CP-redundant)
+  Quantum-PEFT (Pauli)  2 ((2L+1) log2(N) - 2L) + K   per weight
+  Quantum-PEFT (Taylor) 2 N K - K^2                    at N'=N, K'=K
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from . import pauli, qsd
+
+
+def lora_params(n: int, m: int, k: int) -> int:
+    return (n + m) * k
+
+
+def adalora_params(n: int, m: int, k: int) -> int:
+    return (n + m) * k + k
+
+
+def loha_params(n: int, m: int, k: int) -> int:
+    return 2 * (n + m) * k
+
+
+def lokr_params(n: int, m: int, k: int, f: int = 8) -> int:
+    """Kronecker C (x) (B A): C is [f, f], low-rank pair on [n/f, m/f]."""
+    return f * f + (n // f + m // f) * k
+
+
+def mora_params(n: int, m: int, k: int) -> int:
+    khat = int(math.isqrt((n + m) * k))
+    return khat * khat
+
+
+def quanta_params(n: int, m: int, k: int) -> int:
+    """Tensor-folding with two-axis folding per side (simplified QuanTA)."""
+    def fold(d: int) -> Tuple[int, int]:
+        f = 1
+        best = (1, d)
+        while f * f <= d:
+            if d % f == 0:
+                best = (f, d // f)
+            f += 1
+        return best
+
+    n1, n2 = fold(n)
+    m1, m2 = fold(m)
+    return n1 * n1 + n2 * n2 + m1 * m1 + m2 * m2
+
+
+def qpeft_pauli_params(n: int, m: int, k: int, l: int = 1) -> int:
+    """Pauli Q_P on both sides + diagonal: 2((2L+1)log2(N)-2L) + K.
+    Non-power-of-two dims go through QSD (qsd.num_params)."""
+    def side(d: int) -> int:
+        if d >= 2 and (d & (d - 1)) == 0:
+            return pauli.num_params(d, l)
+        return qsd.num_params(d, l)
+
+    return side(n) + side(m) + k
+
+
+def qpeft_taylor_params(n: int, m: int, k: int, k_prime: int = None) -> int:
+    """Taylor mapping on both sides + diagonal; with full K' = K this is
+    the paper's 2NK - K^2 (the strictly-lower-triangular count)."""
+    kp = k if k_prime is None else k_prime
+    from . import mappings
+
+    return (mappings.lower_params_count(n, kp)
+            + mappings.lower_params_count(m, kp) + k)
+
+
+METHOD_COUNTS = {
+    "lora": lora_params,
+    "adalora": adalora_params,
+    "loha": loha_params,
+    "lokr": lokr_params,
+    "mora": mora_params,
+    "quanta": quanta_params,
+    "qpeft_pauli": qpeft_pauli_params,
+    "qpeft_taylor": qpeft_taylor_params,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Adapted-weight inventory of a model: list of (N, M, count)."""
+
+    name: str
+    weights: Tuple[Tuple[int, int, int], ...]   # (n, m, multiplicity)
+
+
+# Table 1 model geometries: PEFT on query/value projections.
+DEBERTA_V3_BASE = ModelSpec("deberta-v3-base", ((768, 768, 24),))       # 12 layers x {q, v}
+LLAMA31_405B = ModelSpec("llama-3.1-405b", ((16384, 16384, 252),))     # 126 layers x {q, v}
+GPT4_1T = ModelSpec("gpt-4", ((24576, 24576, 240),))                   # 120 layers x {q, v}
+
+
+def table1_row(spec: ModelSpec, k: int, l: int = 1) -> dict:
+    lora = sum(mult * lora_params(n, m, k) for n, m, mult in spec.weights)
+    qp = sum(mult * qpeft_pauli_params(n, m, k, l) for n, m, mult in spec.weights)
+    return {
+        "model": spec.name,
+        "rank": k,
+        "lora_params": lora,
+        "lora_bytes": lora * 4,
+        "qpeft_params": qp,
+        "qpeft_bytes": qp * 4,
+    }
+
+
+def table1(ks=(1, 16, 256)) -> List[dict]:
+    rows = []
+    for spec in (DEBERTA_V3_BASE, LLAMA31_405B, GPT4_1T):
+        for k in ks:
+            rows.append(table1_row(spec, k))
+    return rows

@@ -1,0 +1,65 @@
+"""Diagonal nodes — generalized CZ modules (paper §4.1, Figure 3b).
+
+Three flavours:
+  * real:        Lambda in R^K (acts as trainable singular values; the
+                 SVD-form Delta-W = U Lambda V^T uses this, zero-init so
+                 Delta-W = 0 at the start of fine-tuning, like LoRA's B=0);
+  * rademacher:  Lambda in {+-1}^K via the ReinMax straight-through trick
+                 (Liu et al., 2024) — a perfect reflection-group O(1)^K
+                 element;
+  * gumbel:      Gumbel-softmax relaxation of the same binary choice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def real_diag(lam):
+    """Identity map: Lambda used directly as singular values."""
+    return lam
+
+
+def _straight_through(hard, soft):
+    """Forward `hard`, backprop through `soft`."""
+    return hard + soft - jax.lax.stop_gradient(soft)
+
+
+def rademacher_reinmax(lam, tau: float = 1.0):
+    """ReinMax-estimated sign vector: forward sign(lam) in {+-1}^K,
+    backward through the second-order-accurate ReinMax surrogate
+    2*pi1 - 0.5*p with pi1 = (D + p)/2 (Liu et al., 2024, eq. 12).
+
+    Two-class specialization: classes (+1, -1) with logits (lam, -lam)/tau.
+    """
+    logits = jnp.stack([lam, -lam], axis=-1) / tau
+    p = jax.nn.softmax(logits, axis=-1)
+    hard = jnp.where(lam >= 0, 1.0, -1.0)
+    d = jnp.stack([(hard + 1) / 2, (1 - hard) / 2], axis=-1)  # one-hot
+    pi1 = 0.5 * (d + p)
+    surrogate = 2.0 * pi1 - 0.5 * p
+    # expectation of the sign under the surrogate distribution
+    soft_sign = surrogate[..., 0] - surrogate[..., 1]
+    return _straight_through(hard, soft_sign)
+
+
+def rademacher_gumbel(lam, key, tau: float = 1.0):
+    """Gumbel-softmax sampled sign with straight-through forward."""
+    logits = jnp.stack([lam, -lam], axis=-1) / tau
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-10) + 1e-10)
+    p = jax.nn.softmax((logits + g) / tau, axis=-1)
+    hard_idx = jnp.argmax(p, axis=-1)
+    hard = jnp.where(hard_idx == 0, 1.0, -1.0)
+    soft_sign = p[..., 0] - p[..., 1]
+    return _straight_through(hard, soft_sign)
+
+
+def diag_node(lam, kind: str = "real", tau: float = 1.0, key=None):
+    if kind == "real":
+        return real_diag(lam)
+    if kind == "rademacher":
+        return rademacher_reinmax(lam, tau)
+    if kind == "gumbel":
+        assert key is not None, "gumbel diagonal needs a PRNG key"
+        return rademacher_gumbel(lam, key, tau)
+    raise ValueError(f"unknown diagonal node kind {kind!r}")

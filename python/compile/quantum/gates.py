@@ -1,0 +1,85 @@
+"""Quantum gate primitives used by the Pauli parameterization (paper §3).
+
+Everything here is *classical* linear algebra: an RY gate is the 2x2
+rotation of eq. (1); a CZ gate is the diagonal reflection diag(1,1,1,-1).
+A "circuit" is a product of Kronecker-structured layers of these gates.
+
+These helpers are shared by the pure-jnp reference path (kernels/ref.py),
+the Pallas kernel (kernels/pauli_kernel.py) and the AOT model graphs; the
+Rust mirror lives in rust/src/quantum/gates.rs and must match bit-for-bit
+conventions (qubit 0 = fastest-varying axis; layers applied right-to-left
+as written in eq. (2)).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def ry_matrix(theta):
+    """RY(theta) of eq. (1): the SO(2) rotation by theta/2."""
+    c = jnp.cos(theta / 2.0)
+    s = jnp.sin(theta / 2.0)
+    return jnp.stack(
+        [jnp.stack([c, -s], axis=-1), jnp.stack([s, c], axis=-1)], axis=-2
+    )
+
+
+def cz_sign_vector(q: int, pairs) -> np.ndarray:
+    """Sign vector in {+-1}^(2^q) of applying CZ on each (a, b) qubit pair.
+
+    CZ = diag(1, 1, 1, -1) flips the sign of basis states where both
+    qubits are |1>. Composing CZs on disjoint pairs is an elementwise
+    product of sign vectors, so a whole CZ layer is one multiply.
+
+    Qubit convention: qubit k corresponds to bit k of the basis-state
+    index (little-endian), i.e. axis k of x.reshape([2]*q) with axis 0
+    fastest-varying.
+    """
+    n = 1 << q
+    idx = np.arange(n)
+    sign = np.ones(n, dtype=np.float32)
+    for a, b in pairs:
+        both = ((idx >> a) & 1) & ((idx >> b) & 1)
+        sign = sign * np.where(both == 1, -1.0, 1.0).astype(np.float32)
+    return sign
+
+
+def adjacent_pairs(qubits) -> list:
+    """Pair up adjacent qubits of a list: [q0,q1,q2,q3,q4] -> [(q0,q1),(q2,q3)].
+
+    The leftover qubit (odd count) is untouched — this generalizes the
+    paper's CZ^{(q-1)/2} (eq. 2, stated for odd q) to any qubit count.
+    """
+    return [(qubits[i], qubits[i + 1]) for i in range(0, len(qubits) - 1, 2)]
+
+
+def apply_ry_axis(x, cos_t, sin_t, k: int, q: int):
+    """Apply RY(theta) on qubit k of batched states x of shape [..., 2^q].
+
+    Equivalent to (I_{2^{q-k-1}} (x) RY (x) I_{2^k}) acting on the last
+    axis; implemented as a strided pairwise rotation, O(N) work.
+    """
+    n = 1 << q
+    lead = x.shape[:-1]
+    stride = 1 << k
+    xr = x.reshape(lead + (n // (2 * stride), 2, stride))
+    x0 = xr[..., 0, :]
+    x1 = xr[..., 1, :]
+    y0 = cos_t * x0 - sin_t * x1
+    y1 = sin_t * x0 + cos_t * x1
+    return jnp.stack([y0, y1], axis=-2).reshape(lead + (n,))
+
+
+def apply_kron_ry(x, thetas, qubits, q: int):
+    """Apply (x)_{k in qubits} RY(theta_k) to x in [..., 2^q].
+
+    `thetas` is a 1-D array aligned with `qubits`. Sequential per-qubit
+    rotations: q axis sweeps of O(N) each — the "Kronecker shuffle"
+    (Plateau 1985) giving the O(N log N) circuit apply of §4.2.
+    """
+    cos_t = jnp.cos(thetas / 2.0)
+    sin_t = jnp.sin(thetas / 2.0)
+    for i, k in enumerate(qubits):
+        x = apply_ry_axis(x, cos_t[i], sin_t[i], k, q)
+    return x

@@ -1,0 +1,165 @@
+"""Lie-algebra -> orthogonal-matrix mappings (paper §4.1 and Appendix A.1).
+
+Given a strictly-lower-triangular parameter matrix B (only its first K'
+columns trainable — the paper's *intrinsic rank* masking), the
+skew-symmetric A = B - B^T generates an orthogonal matrix via one of:
+
+  Q_E  exponential map            expm(A)                          (exact)
+  Q_C  Cayley transform           (I+A)(I-A)^{-1}                  (exact)
+  Q_T  Taylor series              sum_{p<=P} A^p / p!              (approx of Q_E)
+  Q_N  Neumann series             (I+A) sum_{p<=P} A^p             (approx of Q_C)
+  Q_H  Householder reflections    prod_k (I - 2 n_k n_k^T)         (exact)
+  Q_G  Givens rotations           prod G_{n-k}(B_{n,k})            (exact)
+
+Truncating columns of the resulting square orthogonal matrix yields a
+Stiefel V_K(N') frame (Figure 3a). The paper selects Q_T as the best
+accuracy/speed/parameter trade-off and Q_P (pauli.py) for the extreme
+parameter regime; Figure 6 benchmarks all of them (mirrored in
+rust/src/quantum/mappings.rs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MAPPINGS = ("exp", "cayley", "taylor", "neumann", "householder", "givens")
+
+
+def lower_params_count(n: int, k: int) -> int:
+    """Number of strictly-lower-triangular entries in the first k columns
+    of an n x n matrix: sum_{j<k} (n-1-j) = nk - k(k+1)/2 ... clipped."""
+    k = min(k, n - 1) if n > 1 else 0
+    return sum(n - 1 - j for j in range(k))
+
+
+def params_to_lower(theta, n: int, k: int):
+    """Scatter a flat parameter vector into the strictly-lower N' x K'
+    factor B_K (Figure 3a). Column-major fill; frozen/absent entries are 0."""
+    bk = jnp.zeros((n, k), dtype=theta.dtype)
+    ofs = 0
+    for j in range(min(k, n - 1)):
+        m = n - 1 - j
+        bk = bk.at[j + 1:, j].set(theta[ofs: ofs + m])
+        ofs += m
+    return bk
+
+
+def intrinsic_mask(n: int, k: int, k_prime) -> jnp.ndarray:
+    """[n, k] mask keeping only the top-K' columns trainable (paper §4.1,
+    Table 8). `k_prime` may be a traced scalar so one AOT artifact serves
+    the whole K' sweep."""
+    col = jnp.arange(k)[None, :]
+    return (col < k_prime).astype(jnp.float32) * jnp.ones((n, 1), dtype=jnp.float32)
+
+
+def skew_from_factor(bk, n: int):
+    """A = B - B^T from the N' x K' strictly-lower factor (zero-padded)."""
+    k = bk.shape[1]
+    b = jnp.zeros((n, n), dtype=bk.dtype).at[:, :k].set(jnp.tril(bk, k=-1))
+    return b - b.T
+
+
+def q_exp(a):
+    """Q_E = expm(A): exact orthogonal map (uses Pade under the hood)."""
+    return jax.scipy.linalg.expm(a)
+
+
+def q_cayley(a):
+    """Q_C = (I + A)(I - A)^{-1}: exact for any skew-symmetric A."""
+    n = a.shape[-1]
+    eye = jnp.eye(n, dtype=a.dtype)
+    return jnp.linalg.solve((eye - a).T, (eye + a).T).T
+
+
+def q_taylor(a, order: int = 8):
+    """Q_T = sum_{p=0}^P A^p / p! via Horner: never forms A^p explicitly."""
+    n = a.shape[-1]
+    acc = jnp.eye(n, dtype=a.dtype)
+    for p in range(order, 0, -1):
+        acc = jnp.eye(n, dtype=a.dtype) + (a @ acc) / p
+    return acc
+
+
+def q_taylor_apply(a, x, order: int = 8):
+    """x @ Q_T^T == Q_T x for column semantics; here: apply Q_T to rows of
+    x from the right via the same Horner recursion on row-vectors,
+    avoiding materializing Q_T (the tensor-contraction-ordering trick of
+    §4.1).  x: [..., N], returns x @ Q_T."""
+    # x @ Q_T = x @ sum A^p/p! ; Horner on the right: acc = x + (acc @ A)/p
+    acc = x
+    for p in range(order, 0, -1):
+        acc = x + (acc @ a) / p
+    return acc
+
+
+def q_neumann(a, order: int = 8):
+    """Q_N = (I + A) sum_{p=0}^P A^p — Neumann-series approx of Cayley."""
+    n = a.shape[-1]
+    acc = jnp.eye(n, dtype=a.dtype)
+    for _ in range(order):
+        acc = jnp.eye(n, dtype=a.dtype) + a @ acc
+    return (jnp.eye(n, dtype=a.dtype) + a) @ acc
+
+
+def q_householder(bk, n: int):
+    """Q_H = prod_k (I - 2 n_k n_k^T), n_k = normalized k-th column of B
+    (canonical coset decomposition, Cabrera et al. 2010)."""
+    k = bk.shape[1]
+    q = jnp.eye(n, dtype=bk.dtype)
+    for j in range(k):
+        v = bk[:, j]
+        nrm2 = jnp.maximum(v @ v, 1e-12)
+        h = jnp.eye(n, dtype=bk.dtype) - 2.0 * jnp.outer(v, v) / nrm2
+        q = q @ h
+    return q
+
+
+def q_givens(bk, n: int):
+    """Q_G = prod_{k} prod_{m>k} G_{m-1}(B_{m,k}): a ladder of adjacent-plane
+    rotations per column. Sequential by nature (Figure 6's slow tail)."""
+    k = bk.shape[1]
+    q = jnp.eye(n, dtype=bk.dtype)
+    for j in range(min(k, n - 1)):
+        for m in range(j + 1, n):
+            th = bk[m, j]
+            c, s = jnp.cos(th), jnp.sin(th)
+            # rotate rows m-1, m of the accumulator
+            r0 = q[m - 1], q[m]
+            q = q.at[m - 1].set(c * r0[0] - s * r0[1])
+            q = q.at[m].set(s * r0[0] + c * r0[1])
+    return q
+
+
+def orthogonal(theta, n: int, k: int, method: str = "taylor", order: int = 8,
+               k_prime=None):
+    """Full pipeline of Figure 3(a): flat Lie params -> B_K (masked to the
+    intrinsic rank K' if given) -> skew A -> orthogonal Q -> Stiefel
+    truncation Q[:, :k].
+
+    Returns the N x K frame (left-orthogonal for the exact mappings,
+    near-orthogonal for the series approximations)."""
+    bk = params_to_lower(theta, n, k)
+    if k_prime is not None:
+        bk = bk * intrinsic_mask(n, k, k_prime)
+    if method == "householder":
+        return q_householder(bk, n)[:, :k]
+    if method == "givens":
+        return q_givens(bk, n)[:, :k]
+    a = skew_from_factor(bk, n)
+    if method == "exp":
+        q = q_exp(a)
+    elif method == "cayley":
+        q = q_cayley(a)
+    elif method == "taylor":
+        q = q_taylor(a, order)
+    elif method == "neumann":
+        q = q_neumann(a, order)
+    else:
+        raise ValueError(f"unknown mapping {method!r}")
+    return q[:, :k]
+
+
+def unitarity_error(q) -> jnp.ndarray:
+    """||Q Q^T - I||_inf — Figure 6's error metric."""
+    n = q.shape[0]
+    return jnp.max(jnp.abs(q @ q.T - jnp.eye(n, dtype=q.dtype)))

@@ -1,0 +1,188 @@
+"""Pauli parameterization Q_P of eq. (2) — the paper's core contribution.
+
+A unitary on SO(2^q) built from the simplified two-design ansatz
+(Cerezo et al., 2021): an initial full Kronecker layer of RY rotations,
+followed by L alternating "entanglement blocks". Each block has
+
+  sub-layer A:  (CZ-pairs o  (x)_{k=1..q-1} RY(theta))  (x)  I   — qubits 0..q-2
+  sub-layer B:   I  (x)  (CZ-pairs o  (x)_{k=2..q} RY(theta))    — qubits 1..q-1
+
+Trainable parameter count:  q + 2 L (q-1)  ==  (2L+1) log2(N) - 2L,
+i.e. *logarithmic* in the ambient dimension N — the headline scaling of
+the paper (vs 2NK for LoRA).
+
+The circuit is exposed in two forms:
+  * `apply`        — x @ Q_P for batched row-vectors (O(N log N · L));
+  * `materialize`  — the dense N x N orthogonal matrix (tests / small N).
+
+`PauliCircuit` is a static *structure* object (shapes, qubit lists, sign
+vectors are all Python/NumPy constants baked into the lowered HLO); the
+trainable angles are a flat jnp array so they can live in a params pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import gates
+
+
+@dataclasses.dataclass(frozen=True)
+class _Layer:
+    """One RY-Kronecker sweep (+ optional CZ sign layer) of the circuit."""
+
+    qubits: Tuple[int, ...]     # qubits rotated by this layer
+    theta_ofs: int              # offset of this layer's angles in the flat vector
+    sign: np.ndarray | None     # CZ sign vector applied after the rotations
+
+
+@dataclasses.dataclass(frozen=True)
+class PauliCircuit:
+    """Static structure of Q_P for N = 2^q with L entanglement blocks."""
+
+    q: int
+    n_layers: int               # L in the paper
+    layers: Tuple[_Layer, ...]
+    num_params: int
+
+    @property
+    def dim(self) -> int:
+        return 1 << self.q
+
+    def apply(self, x, thetas):
+        """Compute x @ Q_P, x of shape [..., 2^q], thetas flat [num_params].
+
+        Note: with our convention each layer acts on row-vectors from the
+        right, so layers are applied in construction order.
+        """
+        assert thetas.shape[-1] == self.num_params, (
+            f"expected {self.num_params} angles, got {thetas.shape}"
+        )
+        for layer in self.layers:
+            th = jnp.asarray(thetas)[layer.theta_ofs: layer.theta_ofs + len(layer.qubits)]
+            x = gates.apply_kron_ry(x, th, list(layer.qubits), self.q)
+            if layer.sign is not None:
+                x = x * jnp.asarray(layer.sign)
+        return x
+
+    def apply_t(self, x, thetas):
+        """Compute x @ Q_P^T (transpose circuit: reversed layers, -theta).
+
+        Used to apply V^T when V = Q_P[:, :K]: pad the K-vector with zeros
+        and run the transposed circuit.
+        """
+        for layer in reversed(self.layers):
+            if layer.sign is not None:
+                x = x * jnp.asarray(layer.sign)
+            th = jnp.asarray(thetas)[layer.theta_ofs: layer.theta_ofs + len(layer.qubits)]
+            x = gates.apply_kron_ry(x, -th[::-1], list(layer.qubits)[::-1], self.q)
+        return x
+
+    def materialize(self, thetas):
+        """Dense Q_P in R^{N x N}; row i = e_i @ Q_P (so x @ Q_P = x @ mat)."""
+        eye = jnp.eye(self.dim, dtype=jnp.float32)
+        return self.apply(eye, thetas)
+
+    def materialize_kron(self, thetas):
+        """Dense Q_P built as a product of Kronecker-chain layer matrices.
+
+        Mathematically identical to `materialize` (pinned by tests) but
+        lowers to ~25 small ops per circuit instead of ~N_rot·7 strided
+        reshape/stack chains — the §Perf L2 fix: xla_extension 0.5.1's
+        CPU pipeline compiles the op-chain form catastrophically slowly
+        (209s -> ~2s for the d=64 encoder train step), so the AOT model
+        graphs use this form while the Pallas kernel keeps the O(N log N)
+        apply path for the large-N regime.
+
+        Convention: qubit k = bit k of the basis index (fastest axis 0),
+        so the per-qubit factor sits *innermost-last* in the kron chain,
+        and the row-vector action x @ Q uses the transposed rotation
+        R^T = [[c, s], [-s, c]].
+        """
+        n = self.dim
+        q_total = None
+        for layer in self.layers:
+            th = jnp.asarray(thetas)[layer.theta_ofs:
+                                     layer.theta_ofs + len(layer.qubits)]
+            c = jnp.cos(th / 2.0)
+            s = jnp.sin(th / 2.0)
+            active = dict(zip(layer.qubits, range(len(layer.qubits))))
+            # build kron chain from the highest qubit down so qubit 0 is
+            # the innermost (fastest-varying) factor
+            mat = jnp.ones((1, 1), dtype=jnp.float32)
+            for k in range(self.q - 1, -1, -1):
+                if k in active:
+                    i = active[k]
+                    rt = jnp.stack([
+                        jnp.stack([c[i], s[i]]),
+                        jnp.stack([-s[i], c[i]]),
+                    ])  # R^T for row-vector action
+                else:
+                    rt = jnp.eye(2, dtype=jnp.float32)
+                mat = jnp.kron(mat, rt)
+            if layer.sign is not None:
+                mat = mat * jnp.asarray(layer.sign)[None, :]
+            q_total = mat if q_total is None else q_total @ mat
+        if q_total is None:
+            q_total = jnp.eye(n, dtype=jnp.float32)
+        return q_total
+
+    def columns(self, thetas, k: int):
+        """First k columns of Q_P — a Stiefel V_k(N) frame by construction."""
+        return self.materialize(thetas)[:, :k]
+
+
+def build(q: int, n_layers: int) -> PauliCircuit:
+    """Build the eq. (2) circuit structure for q qubits, L = n_layers."""
+    assert q >= 1
+    layers: List[_Layer] = []
+    ofs = 0
+
+    # initial full Kronecker RY layer: q angles, no entanglement
+    layers.append(_Layer(qubits=tuple(range(q)), theta_ofs=ofs, sign=None))
+    ofs += q
+
+    for _ in range(n_layers):
+        if q >= 2:
+            # sub-layer A on qubits 0..q-2 (".. (x) I" in eq. 2)
+            qa = list(range(0, q - 1))
+            layers.append(
+                _Layer(
+                    qubits=tuple(qa),
+                    theta_ofs=ofs,
+                    sign=gates.cz_sign_vector(q, gates.adjacent_pairs(qa)),
+                )
+            )
+            ofs += len(qa)
+            # sub-layer B on qubits 1..q-1 ("I (x) .." in eq. 2)
+            qb = list(range(1, q))
+            layers.append(
+                _Layer(
+                    qubits=tuple(qb),
+                    theta_ofs=ofs,
+                    sign=gates.cz_sign_vector(q, gates.adjacent_pairs(qb)),
+                )
+            )
+            ofs += len(qb)
+    return PauliCircuit(q=q, n_layers=n_layers, layers=tuple(layers), num_params=ofs)
+
+
+def num_params(n: int, n_layers: int) -> int:
+    """(2L+1) log2(N) - 2L for power-of-two N (paper §4.1)."""
+    q = int(np.log2(n))
+    assert (1 << q) == n, "num_params: N must be a power of two"
+    if q == 1:
+        return 1
+    return q + 2 * n_layers * (q - 1)
+
+
+def init_angles(key, circuit: PauliCircuit, scale: float = 0.2):
+    """Small random angles — near-identity init keeps Delta-W ~ 0 at start
+    only when combined with a zero-initialized diagonal node (as in LoRA's
+    zero-init of B)."""
+    import jax
+
+    return scale * jax.random.normal(key, (circuit.num_params,), dtype=jnp.float32)

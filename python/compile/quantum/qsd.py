@@ -1,0 +1,124 @@
+"""Quantum Shannon decomposition (QSD) — eq. (4) and Example 4.1.
+
+Solves the power-of-two limitation of the Pauli parameterization: any
+orthogonal matrix on SO(N), N = N1 + N2 (N1 = largest power of two <= N,
+N1 >= N2 >= 1), is built as
+
+    Q = blkdiag(U1, U2) . G(phi) . blkdiag(V1, V2)
+
+with U1, V1 on SO(N1), U2, V2 on SO(N2), and G(phi) the cosine-sine
+orthogonal coupling acting on the last N2 coordinates of the first block
+and the N2 coordinates of the second block:
+
+    [ya]   [ cos(phi)  -sin(phi)] [xa]      xa = x[N1-N2 : N1]
+    [yb] = [ sin(phi)   cos(phi)] [xb],     xb = x[N1 : N],   phi in R^{N2}.
+
+(A row/column permutation of the paper's eq. (4) block layout — the same
+group element with friendlier indexing.)  Power-of-two blocks are Pauli
+circuits (pauli.py); non-power-of-two sub-blocks recurse, reproducing
+Example 4.1 (N=28 -> 16 + (8 + 4), two CS couplings, three Pauli blocks
+per side).
+
+Parameter layout (flat, in order): [U1 | U2 | phi | V1 | V2], recursing
+inside U2/V2 as needed. Dim-1 blocks are parameterless identities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import pauli
+
+
+@dataclasses.dataclass(frozen=True)
+class QsdNode:
+    """Recursive QSD structure over dimension n (any n >= 1)."""
+
+    n: int
+    num_params: int
+    # leaf: a Pauli circuit (power-of-two n) or identity (n == 1)
+    leaf: Optional[pauli.PauliCircuit]
+    # internal: split n = n1 + n2 with four children + n2 CS angles
+    n1: int = 0
+    n2: int = 0
+    u1: Optional["QsdNode"] = None
+    u2: Optional["QsdNode"] = None
+    v1: Optional["QsdNode"] = None
+    v2: Optional["QsdNode"] = None
+
+    def apply(self, x, thetas):
+        """x @ Q for x of shape [..., n]; thetas flat [num_params]."""
+        if self.n == 1:
+            return x
+        if self.leaf is not None:
+            return self.leaf.apply(x, thetas)
+        o = 0
+        th_u1 = thetas[o: o + self.u1.num_params]; o += self.u1.num_params
+        th_u2 = thetas[o: o + self.u2.num_params]; o += self.u2.num_params
+        phi = thetas[o: o + self.n2]; o += self.n2
+        th_v1 = thetas[o: o + self.v1.num_params]; o += self.v1.num_params
+        th_v2 = thetas[o: o + self.v2.num_params]; o += self.v2.num_params
+
+        xa = self.u1.apply(x[..., : self.n1], th_u1)
+        xb = self.u2.apply(x[..., self.n1:], th_u2)
+        # CS coupling on the trailing n2 of the first block vs second block
+        c, s = jnp.cos(phi), jnp.sin(phi)
+        ha, ta = xa[..., : self.n1 - self.n2], xa[..., self.n1 - self.n2:]
+        ya = c * ta - s * xb
+        yb = s * ta + c * xb
+        za = jnp.concatenate([ha, ya], axis=-1)
+        return jnp.concatenate(
+            [self.v1.apply(za, th_v1), self.v2.apply(yb, th_v2)], axis=-1
+        )
+
+    def materialize(self, thetas):
+        return self.apply(jnp.eye(self.n, dtype=jnp.float32), thetas)
+
+    def columns(self, thetas, k: int):
+        """First k columns — a Stiefel frame (exact orthogonality)."""
+        return self.materialize(thetas)[:, :k]
+
+
+def split(n: int) -> Tuple[int, int]:
+    """(N1, N2): N1 = largest power of two strictly below n (for
+    non-power-of-two n, the largest power of two <= n)."""
+    assert n >= 2
+    n1 = 1 << (n.bit_length() - 1)
+    if n1 == n:
+        n1 = n >> 1
+    return n1, n - n1
+
+
+def build(n: int, n_layers: int) -> QsdNode:
+    """QSD circuit for arbitrary n >= 1, Pauli blocks of depth L."""
+    assert n >= 1
+    if n == 1:
+        return QsdNode(n=1, num_params=0, leaf=None)
+    if (n & (n - 1)) == 0:  # power of two -> plain Pauli leaf
+        circ = pauli.build(n.bit_length() - 1, n_layers)
+        return QsdNode(n=n, num_params=circ.num_params, leaf=circ)
+    n1, n2 = split(n)
+    u1 = build(n1, n_layers)
+    u2 = build(n2, n_layers)
+    v1 = build(n1, n_layers)
+    v2 = build(n2, n_layers)
+    num = u1.num_params + u2.num_params + n2 + v1.num_params + v2.num_params
+    return QsdNode(n=n, num_params=num, leaf=None, n1=n1, n2=n2,
+                   u1=u1, u2=u2, v1=v1, v2=v2)
+
+
+def num_params(n: int, n_layers: int) -> int:
+    return build(n, n_layers).num_params
+
+
+def power_of_two_blocks(n: int) -> list:
+    """Greedy binary partition of N, e.g. 28 -> [16, 8, 4]; 257 -> [256, 1].
+    (Used by the Rust accounting mirror and Example 4.1 tests.)"""
+    blocks = []
+    while n > 0:
+        b = 1 << (n.bit_length() - 1)
+        blocks.append(b)
+        n -= b
+    return blocks

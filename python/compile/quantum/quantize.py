@@ -1,0 +1,85 @@
+"""Groupwise integer quantization of Lie parameters (paper §4.2 "Quantization",
+Tables 7 and experiments §5.4) + adaptive bit loading (Appendix A.5).
+
+    theta_q = round((theta - mu) / beta) * beta + mu
+    beta    = (max - min) / (2^n - 1),   mu = min      (per group of g)
+
+QAT uses the straight-through trick: theta := theta_q + theta - sg(theta),
+i.e. forward quantized, identity backward.  The bit-width `n` enters only
+through `levels = 2^n - 1`, so a *traced scalar* number of levels lets a
+single AOT artifact serve the whole Table-7 bit sweep at run time.
+
+Storage cost per parameter (paper): n + 32/g bits (fp16 beta and mu per
+group) — mirrored in rust/src/peft/accounting.rs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _group_reshape(theta, g: int):
+    """Pad flat theta to a multiple of g and reshape to [n_groups, g]."""
+    n = theta.shape[0]
+    n_groups = -(-n // g)
+    pad = n_groups * g - n
+    padded = jnp.pad(theta, (0, pad))
+    return padded.reshape(n_groups, g), n
+
+
+def quantize_groups(theta, levels, g: int = 128):
+    """Quantize flat theta with `levels` = 2^n - 1 quantization steps per
+    group of g. `levels` may be a traced scalar (float)."""
+    grp, n = _group_reshape(theta, g)
+    lo = jnp.min(grp, axis=1, keepdims=True)
+    hi = jnp.max(grp, axis=1, keepdims=True)
+    beta = (hi - lo) / jnp.maximum(levels, 1.0)
+    beta = jnp.where(beta <= 0, 1.0, beta)  # constant group -> passthrough
+    q = jnp.round((grp - lo) / beta) * beta + lo
+    return q.reshape(-1)[:n]
+
+
+def fake_quant_st(theta, levels, g: int = 128):
+    """QAT straight-through fake-quant: forward quantized, gradient = 1."""
+    q = quantize_groups(theta, levels, g)
+    return theta + jax.lax.stop_gradient(q - theta)
+
+
+def adaptive_bit_loading(theta, base_bits: float, g: int = 128,
+                         kappa: float = 1.0):
+    """Appendix A.5 adaptive (mixed-precision) bit loading.
+
+    Per-group bits  q_i = round(base + log2(Delta_i^kappa / mean Delta)),
+    Delta_i = max_i - min_i (group dynamic range). Groups with q_i <= 0 are
+    structurally pruned to their zero point (mu). Returns the fake-quant
+    (straight-through) tensor — a traced `base_bits` serves the Table-7
+    adaptive rows with one artifact."""
+    grp, n = _group_reshape(theta, g)
+    lo = jnp.min(grp, axis=1, keepdims=True)
+    hi = jnp.max(grp, axis=1, keepdims=True)
+    delta = (hi - lo)[:, 0]
+    mean_delta = jnp.maximum(jnp.mean(delta ** kappa), 1e-12)
+    bits = jnp.round(base_bits + jnp.log2(jnp.maximum(delta ** kappa, 1e-12)
+                                          / mean_delta))
+    bits = jnp.clip(bits, 0.0, 16.0)[:, None]
+    levels = jnp.maximum(2.0 ** bits - 1.0, 1.0)
+    beta = (hi - lo) / levels
+    beta = jnp.where(beta <= 0, 1.0, beta)
+    q = jnp.round((grp - lo) / beta) * beta + lo
+    q = jnp.where(bits <= 0.0, lo, q)  # 0-bit group -> structural prune
+    flat = q.reshape(-1)[:n]
+    return theta + jax.lax.stop_gradient(flat - theta)
+
+
+def storage_bits_per_param(n_bits: float, g: int = 128) -> float:
+    """n + 32/g bits per Lie parameter (fp16 beta + fp16 mu per group)."""
+    return n_bits + 32.0 / g
+
+
+def quantize_base_weights(w, n_bits: int, g: int = 128):
+    """Post-training quantization of a *frozen* base weight tensor (used
+    for the 3-bit ViT backbone of Table 6; the Rust coordinator applies
+    the identical transform host-side before feeding frozen params)."""
+    flat = w.reshape(-1)
+    q = quantize_groups(flat, float(2 ** n_bits - 1), g)
+    return q.reshape(w.shape)

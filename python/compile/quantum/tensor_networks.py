@@ -1,0 +1,154 @@
+"""Tensor-network adapter constructions (Appendix A.3, Table 10, Fig. 5/7).
+
+Delta-W for W in R^{n x m} built from small *orthogonal* nodes (Taylor
+mapping, mappings.py) plus one diagonal node — the canonical-form insight
+of the paper: any TTD/TD network can be renormalized so all nodes but one
+diagonal are unitary, removing LoRA-style parameter redundancy.
+
+Networks (matching Table 10's columns):
+  CP         sum_r  lam_r  u_r (x) v_r            (K orthogonal frames + diag)
+  TD         U G V^T  (Tucker-2, dense K x K core)
+  TTD (MPS)  reshape to (n1, n2) x (m1, m2), 4-core tensor train
+  TRD        3-node ring with one diagonal node
+  HTD (TTN)  binary tree: two leaf frames + root coupling
+
+Every node's orthogonal factor comes from `mappings.orthogonal` so the
+trainable parameters live in Lie algebras; parameter counts are exposed
+for the accounting module and verified against actual pytree sizes in
+python/tests/test_tensor_networks.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mappings
+
+NETWORKS = ("cp", "td", "ttd", "trd", "htd")
+
+
+def _factor2(d: int) -> Tuple[int, int]:
+    """Near-square factorization d = d1 * d2 (d1 <= d2)."""
+    best = (1, d)
+    f = 1
+    while f * f <= d:
+        if d % f == 0:
+            best = (f, d // f)
+        f += 1
+    return best
+
+
+def param_shapes(net: str, n: int, m: int, k: int, order: int = 8) -> Dict[str, tuple]:
+    """Shapes of the trainable Lie/diag parameters for each network."""
+    if net == "cp":
+        return {
+            "lie_u": (mappings.lower_params_count(n, k),),
+            "lie_v": (mappings.lower_params_count(m, k),),
+            "diag": (k,),
+        }
+    if net == "td":
+        return {
+            "lie_u": (mappings.lower_params_count(n, k),),
+            "lie_v": (mappings.lower_params_count(m, k),),
+            "core": (k, k),
+        }
+    if net == "ttd":
+        n1, n2 = _factor2(n)
+        m1, m2 = _factor2(m)
+        return {
+            "lie_g1": (mappings.lower_params_count(n1, min(k, n1)),),
+            "core2": (min(k, n1), n2, k),
+            "core3": (k, m1, min(k, m2)),
+            "lie_g4": (mappings.lower_params_count(m2, min(k, m2)),),
+            "diag": (k,),
+        }
+    if net == "trd":
+        n1, n2 = _factor2(n)
+        return {
+            "lie_a": (mappings.lower_params_count(n1, min(k, n1)),),
+            "lie_b": (mappings.lower_params_count(n2, min(k, n2)),),
+            "lie_c": (mappings.lower_params_count(m, k),),
+            "core": (min(k, n1), min(k, n2), k),
+            "diag": (k,),
+        }
+    if net == "htd":
+        n1, n2 = _factor2(n)
+        m1, m2 = _factor2(m)
+        return {
+            "lie_n1": (mappings.lower_params_count(n1, min(k, n1)),),
+            "lie_n2": (mappings.lower_params_count(n2, min(k, n2)),),
+            "lie_m1": (mappings.lower_params_count(m1, min(k, m1)),),
+            "lie_m2": (mappings.lower_params_count(m2, min(k, m2)),),
+            "root": (min(k, n1) * min(k, n2), min(k, m1) * min(k, m2)),
+        }
+    raise ValueError(f"unknown tensor network {net!r}")
+
+
+def num_params(net: str, n: int, m: int, k: int) -> int:
+    import numpy as np
+
+    return int(sum(np.prod(s) for s in param_shapes(net, n, m, k).values()))
+
+
+def init_params(key, net: str, n: int, m: int, k: int, scale: float = 0.2):
+    shapes = param_shapes(net, n, m, k)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for kk, (name, shp) in zip(keys, sorted(shapes.items())):
+        if name in ("diag",):
+            out[name] = jnp.zeros(shp, dtype=jnp.float32)  # Delta-W = 0 at init
+        elif name in ("core", "core2", "core3", "root"):
+            out[name] = jnp.zeros(shp, dtype=jnp.float32)
+        else:
+            out[name] = scale * jax.random.normal(kk, shp, dtype=jnp.float32)
+    return out
+
+
+def delta_w(net: str, params, n: int, m: int, k: int, order: int = 8):
+    """Materialize Delta-W in R^{n x m} from the network parameters."""
+    orth = lambda th, d, kk: mappings.orthogonal(th, d, kk, "taylor", order)
+    if net == "cp":
+        u = orth(params["lie_u"], n, k)          # [n, k]
+        v = orth(params["lie_v"], m, k)          # [m, k]
+        return (u * params["diag"][None, :]) @ v.T
+    if net == "td":
+        u = orth(params["lie_u"], n, k)
+        v = orth(params["lie_v"], m, k)
+        return u @ params["core"] @ v.T
+    if net == "ttd":
+        n1, n2 = _factor2(n)
+        m1, m2 = _factor2(m)
+        k1, k4 = min(k, n1), min(k, m2)
+        g1 = orth(params["lie_g1"], n1, k1)      # [n1, k1]
+        g4 = orth(params["lie_g4"], m2, k4)      # [m2, k4]
+        g2 = params["core2"]                     # [k1, n2, k]
+        g3 = params["core3"] * params["diag"][:, None, None]  # [k, m1, k4]
+        # contract: W[n1 n2, m1 m2] = g1 g2 g3 g4
+        t = jnp.einsum("ab,bcd->acd", g1, g2)        # [n1, n2, k]
+        t = jnp.einsum("acd,def->acef", t, g3)       # [n1, n2, m1, k4]
+        t = jnp.einsum("acef,gf->aceg", t, g4)       # [n1, n2, m1, m2]
+        return t.reshape(n, m)
+    if net == "trd":
+        n1, n2 = _factor2(n)
+        ka, kb = min(k, n1), min(k, n2)
+        a = orth(params["lie_a"], n1, ka)
+        b = orth(params["lie_b"], n2, kb)
+        c = orth(params["lie_c"], m, k)
+        core = params["core"] * params["diag"][None, None, :]  # [ka, kb, k]
+        t = jnp.einsum("ia,jb,abk->ijk", a, b, core)  # [n1, n2, k]
+        return t.reshape(n, k) @ c.T
+    if net == "htd":
+        n1, n2 = _factor2(n)
+        m1, m2 = _factor2(m)
+        k1, k2 = min(k, n1), min(k, n2)
+        k3, k4 = min(k, m1), min(k, m2)
+        a = orth(params["lie_n1"], n1, k1)
+        b = orth(params["lie_n2"], n2, k2)
+        c = orth(params["lie_m1"], m1, k3)
+        d = orth(params["lie_m2"], m2, k4)
+        left = jnp.einsum("ia,jb->ijab", a, b).reshape(n, k1 * k2)
+        right = jnp.einsum("ic,jd->ijcd", c, d).reshape(m, k3 * k4)
+        return left @ params["root"] @ right.T
+    raise ValueError(f"unknown tensor network {net!r}")

@@ -1,0 +1,171 @@
+"""Fused training step construction + trainable-leaf partitioning.
+
+A train-step artifact is one XLA computation:
+
+  (frozen..., train..., m..., v..., step, lr, wd, extras..., batch...)
+      -> (loss, new_train..., new_m..., new_v...)
+
+Frozen leaves are inputs only (the Rust coordinator re-feeds them every
+step — on CPU PJRT this is a host memcpy); optimizer state (AdamW m/v)
+exists *only* for trainable leaves, which is most of the PEFT memory
+story (Table 4's memory ratios fall out of exactly this split).
+
+Learning rate, weight decay and step index are runtime scalars: the Rust
+coordinator owns the schedule (linear warmup+decay etc.) and the graph
+stays schedule-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def path_str(path) -> str:
+    """KeyPath -> 'base.blocks[0].attn.wq.w' style name."""
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out[-1] = out[-1] + f"[{p.idx}]" if out else f"[{p.idx}]"
+        else:
+            out.append(str(p))
+    return ".".join(out)
+
+
+def flatten_with_names(tree) -> Tuple[List[str], List[jnp.ndarray], object]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [path_str(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return names, leaves, treedef
+
+
+def trainable_predicate(method) -> Callable[[str], bool]:
+    """Which leaves train, per method (DESIGN.md §3):
+    adapters + task head always; base weights iff `base_trainable`;
+    base biases additionally iff `bias_trainable` (BitFit)."""
+
+    def pred(name: str) -> bool:
+        root = name.split(".", 1)[0]
+        if root in ("adapters", "head"):
+            return True
+        if method.base_trainable:
+            return True
+        if method.bias_trainable and name.rsplit(".", 1)[-1] == "b":
+            return True
+        return False
+
+    return pred
+
+
+@dataclasses.dataclass
+class Partition:
+    """Stable split of a params pytree into frozen and trainable leaves."""
+
+    treedef: object
+    names: List[str]
+    mask: List[bool]                 # True = trainable, aligned with names
+
+    @property
+    def frozen_names(self) -> List[str]:
+        return [n for n, t in zip(self.names, self.mask) if not t]
+
+    @property
+    def trainable_names(self) -> List[str]:
+        return [n for n, t in zip(self.names, self.mask) if t]
+
+    def split(self, tree) -> Tuple[List, List]:
+        leaves = self.treedef.flatten_up_to(tree)
+        leaves = jax.tree_util.tree_leaves(tree)
+        frozen = [l for l, t in zip(leaves, self.mask) if not t]
+        train = [l for l, t in zip(leaves, self.mask) if t]
+        return frozen, train
+
+    def merge(self, frozen: Sequence, train: Sequence):
+        fi = iter(frozen)
+        ti = iter(train)
+        leaves = [next(ti) if t else next(fi) for t in self.mask]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def make_partition(example_tree, method) -> Partition:
+    names, _, treedef = flatten_with_names(example_tree)
+    pred = trainable_predicate(method)
+    return Partition(treedef=treedef, names=names,
+                     mask=[pred(n) for n in names])
+
+
+def adamw_update(p, g, m, v, step, lr, wd):
+    """Decoupled AdamW on one leaf; step is the 1-based update index."""
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m2 / (1.0 - ADAM_B1 ** step)
+    vhat = v2 / (1.0 - ADAM_B2 ** step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+    return p2, m2, v2
+
+
+def make_train_step(loss_fn, part: Partition, n_extras: int):
+    """loss_fn(params_tree, extras_tuple, *batch) -> scalar.
+
+    Returns step(frozen..., train..., m..., v..., step, lr, wd,
+                 extras..., batch...) as a flat-arguments function ready
+    for jax.jit().lower() — see aot.py for the argument layout contract
+    shared with rust/src/runtime/session.rs."""
+    n_froz = len(part.frozen_names)
+    n_train = len(part.trainable_names)
+
+    def step_fn(*args):
+        i = 0
+        frozen = list(args[i: i + n_froz]); i += n_froz
+        train = list(args[i: i + n_train]); i += n_train
+        m = list(args[i: i + n_train]); i += n_train
+        v = list(args[i: i + n_train]); i += n_train
+        step, lr, wd = args[i], args[i + 1], args[i + 2]; i += 3
+        extras = tuple(args[i: i + n_extras]); i += n_extras
+        batch = args[i:]
+
+        def loss_of(train_leaves):
+            tree = part.merge(frozen, train_leaves)
+            return loss_fn(tree, extras, *batch)
+
+        loss, grads = jax.value_and_grad(loss_of)(train)
+        new_t, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(train, grads, m, v):
+            p2, m2, v2 = adamw_update(p, g, mi, vi, step, lr, wd)
+            new_t.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple([loss] + new_t + new_m + new_v)
+
+    return step_fn
+
+
+def make_eval_step(logits_fn, part: Partition, n_extras: int):
+    """(frozen..., train..., extras..., batch...) -> (logits,)."""
+    n_froz = len(part.frozen_names)
+    n_train = len(part.trainable_names)
+
+    def eval_fn(*args):
+        i = 0
+        frozen = list(args[i: i + n_froz]); i += n_froz
+        train = list(args[i: i + n_train]); i += n_train
+        extras = tuple(args[i: i + n_extras]); i += n_extras
+        batch = args[i:]
+        tree = part.merge(frozen, train)
+        logits = logits_fn(tree, extras, *batch)
+        # keep every extra alive in the lowered signature even when the
+        # logits path ignores it (e.g. task_kind only affects the loss):
+        # jax prunes unused arguments at lowering, which would break the
+        # fixed argument-count contract with rust/src/runtime/session.rs.
+        if extras:
+            keep = sum(jnp.asarray(e, jnp.float32) * 0.0 for e in extras)
+            logits = logits + keep
+        return (logits,)
+
+    return eval_fn

@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes and seeds; every kernel must match ref.py to
+f32 tolerance and its custom_vjp gradients must match autodiff through
+the reference.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantum import pauli
+from compile.kernels import ref
+from compile.kernels.pauli_kernel import make_pauli_apply
+from compile.kernels.taylor_kernel import make_taylor_apply
+from compile.kernels.adapter_kernel import make_adapter_apply
+
+RNG = np.random.default_rng(7)
+
+
+def _f32(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- pauli ---
+
+@pytest.mark.parametrize("q,l,b", [(2, 1, 4), (3, 1, 17), (4, 2, 128),
+                                   (5, 1, 130), (6, 1, 3)])
+def test_pauli_kernel_matches_ref(q, l, b):
+    circ = pauli.build(q, l)
+    f = make_pauli_apply(circ)
+    x = _f32(b, circ.dim)
+    th = 0.5 * _f32(circ.num_params)
+    np.testing.assert_allclose(np.asarray(f(x, th)),
+                               np.asarray(ref.pauli_apply(x, th, circ)),
+                               atol=1e-5)
+
+
+def test_pauli_kernel_grads_match_ref():
+    circ = pauli.build(4, 2)
+    f = make_pauli_apply(circ)
+    x = _f32(10, 16)
+    th = 0.5 * _f32(circ.num_params)
+
+    def loss_k(t, xx):
+        return jnp.sum(f(xx, t) ** 3)
+
+    def loss_r(t, xx):
+        return jnp.sum(ref.pauli_apply(xx, t, circ) ** 3)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(th, x)
+    gr = jax.grad(loss_r, argnums=(0, 1))(th, x)
+    np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gr[1]), atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(q=st.integers(2, 5), l=st.integers(1, 2), b=st.integers(1, 40),
+       seed=st.integers(0, 99))
+def test_pauli_kernel_property(q, l, b, seed):
+    circ = pauli.build(q, l)
+    f = make_pauli_apply(circ)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, circ.dim)).astype(np.float32))
+    th = jnp.asarray(rng.normal(0, 0.6, circ.num_params).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(f(x, th)),
+                               np.asarray(ref.pauli_apply(x, th, circ)),
+                               atol=1e-4)
+
+
+def test_pauli_kernel_preserves_norm():
+    """Orthogonal apply preserves row norms — structural invariant."""
+    circ = pauli.build(5, 1)
+    f = make_pauli_apply(circ)
+    x = _f32(8, 32)
+    y = f(x, 0.5 * _f32(circ.num_params))
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=1),
+                               np.linalg.norm(np.asarray(x), axis=1),
+                               rtol=1e-4)
+
+
+# --------------------------------------------------------------- taylor ---
+
+@pytest.mark.parametrize("n,k,order,b", [(8, 2, 4, 5), (32, 4, 8, 64),
+                                         (64, 8, 8, 129), (16, 16, 3, 2)])
+def test_taylor_kernel_matches_ref(n, k, order, b):
+    f = make_taylor_apply(order)
+    x = _f32(b, n)
+    bk = 0.2 * _f32(n, k)
+    np.testing.assert_allclose(np.asarray(f(x, bk)),
+                               np.asarray(ref.taylor_apply(x, bk, order)),
+                               atol=1e-5)
+
+
+def test_taylor_kernel_grads_match_ref():
+    f = make_taylor_apply(6)
+    x = _f32(7, 16)
+    bk = 0.2 * _f32(16, 4)
+    gk = jax.grad(lambda b: jnp.sum(jnp.tanh(f(x, b))))(bk)
+    gr = jax.grad(lambda b: jnp.sum(jnp.tanh(ref.taylor_apply(x, b, 6))))(bk)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-4)
+
+
+def test_taylor_transpose_identity():
+    """f(x, -B) == x @ Q_T^T: the exact-transpose trick the adapter's
+    V^T-side apply relies on (quantum_peft.py)."""
+    n, k, order = 16, 4, 10
+    f = make_taylor_apply(order)
+    x = _f32(5, n)
+    bk = 0.15 * _f32(n, k)
+    q = np.asarray(ref.taylor_apply(jnp.eye(n), bk, order))
+    np.testing.assert_allclose(np.asarray(f(x, -bk)),
+                               np.asarray(x) @ q.T, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), k=st.integers(1, 6),
+       order=st.integers(1, 10), b=st.integers(1, 30), seed=st.integers(0, 99))
+def test_taylor_kernel_property(n, k, order, b, seed):
+    f = make_taylor_apply(order)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    bk = jnp.asarray(0.2 * rng.normal(size=(n, k)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(f(x, bk)),
+                               np.asarray(ref.taylor_apply(x, bk, order)),
+                               atol=1e-4)
+
+
+# -------------------------------------------------------------- adapter ---
+
+@pytest.mark.parametrize("b,n,m,k", [(4, 8, 8, 2), (33, 64, 32, 4),
+                                     (128, 16, 48, 1)])
+def test_adapter_kernel_matches_ref(b, n, m, k):
+    f = make_adapter_apply()
+    x, w, u, v = _f32(b, n), _f32(n, m), _f32(n, k), _f32(m, k)
+    lam = _f32(k)
+    np.testing.assert_allclose(
+        np.asarray(f(x, w, u, lam, v, jnp.float32(1.7))),
+        np.asarray(ref.adapter_apply(x, w, u, lam, v, 1.7)), atol=1e-4)
+
+
+def test_adapter_kernel_zero_lam_is_base_matmul():
+    """lam = 0 => adapter contributes nothing (the Delta-W = 0 init)."""
+    f = make_adapter_apply()
+    x, w, u, v = _f32(6, 16), _f32(16, 16), _f32(16, 3), _f32(16, 3)
+    y = f(x, w, u, jnp.zeros(3), v, jnp.float32(8.0))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-5)
+
+
+def test_adapter_kernel_grads():
+    f = make_adapter_apply()
+    x, w, u, v = _f32(5, 8), _f32(8, 8), _f32(8, 2), _f32(8, 2)
+    lam = _f32(2)
+
+    def lk(args):
+        return jnp.sum(f(x, w, *args, jnp.float32(1.0)) ** 2)
+
+    def lr(args):
+        return jnp.sum(ref.adapter_apply(x, w, *args, 1.0) ** 2)
+
+    gk = jax.grad(lk)((u, lam, v))
+    gr = jax.grad(lr)((u, lam, v))
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-3)

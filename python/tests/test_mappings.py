@@ -1,0 +1,129 @@
+"""Lie-algebra mappings (A.1): unitarity, Stiefel frames, K' masking."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantum import mappings
+
+EXACT = ("exp", "cayley", "householder", "givens")
+APPROX = ("taylor", "neumann")
+
+
+def _theta(n, k, seed=0, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(
+        0, scale, mappings.lower_params_count(n, k)).astype(np.float32))
+
+
+def test_lower_params_count():
+    # full lower triangle when k >= n-1
+    assert mappings.lower_params_count(5, 4) == 10
+    assert mappings.lower_params_count(5, 10) == 10
+    assert mappings.lower_params_count(6, 2) == 5 + 4
+    assert mappings.lower_params_count(1, 1) == 0
+
+
+def test_params_to_lower_roundtrip():
+    n, k = 6, 3
+    th = _theta(n, k)
+    bk = np.asarray(mappings.params_to_lower(th, n, k))
+    assert bk.shape == (n, k)
+    assert np.allclose(np.triu(bk), 0)          # strictly lower
+    # every parameter lands somewhere exactly once
+    assert np.count_nonzero(bk) == mappings.lower_params_count(n, k)
+
+
+def test_skew_from_factor_is_skew():
+    n, k = 8, 3
+    bk = mappings.params_to_lower(_theta(n, k), n, k)
+    a = np.asarray(mappings.skew_from_factor(bk, n))
+    np.testing.assert_allclose(a, -a.T, atol=0)
+
+
+@pytest.mark.parametrize("method", EXACT)
+@pytest.mark.parametrize("n,k", [(8, 2), (16, 4), (12, 3)])
+def test_exact_mappings_are_orthogonal(method, n, k):
+    u = np.asarray(mappings.orthogonal(_theta(n, k), n, k, method))
+    np.testing.assert_allclose(u.T @ u, np.eye(k), atol=1e-5)
+
+
+@pytest.mark.parametrize("method", APPROX)
+def test_approx_mappings_converge_with_order(method):
+    # small scale keeps ||A|| < 1 so the Neumann series converges (A.1)
+    n, k = 16, 4
+    th = _theta(n, k, scale=0.1)
+    errs = []
+    for order in (2, 6, 16):
+        u = np.asarray(mappings.orthogonal(th, n, k, method, order=order))
+        errs.append(np.abs(u.T @ u - np.eye(k)).max())
+    assert errs[2] < errs[0]
+    assert errs[2] < 1e-4
+
+
+def test_taylor_matches_exp_at_high_order():
+    n, k = 10, 3
+    th = _theta(n, k, scale=0.2)
+    qt = np.asarray(mappings.orthogonal(th, n, k, "taylor", order=20))
+    qe = np.asarray(mappings.orthogonal(th, n, k, "exp"))
+    np.testing.assert_allclose(qt, qe, atol=1e-5)
+
+
+def test_taylor_apply_matches_materialized():
+    n, k, order = 12, 4, 8
+    th = _theta(n, k)
+    bk = mappings.params_to_lower(th, n, k)
+    a = mappings.skew_from_factor(bk, n)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(5, n)).astype(np.float32))
+    y = np.asarray(mappings.q_taylor_apply(a, x, order))
+    q = np.asarray(mappings.q_taylor(a, order))
+    np.testing.assert_allclose(y, np.asarray(x) @ q, atol=1e-5)
+
+
+def test_intrinsic_mask_zeroes_columns():
+    m = np.asarray(mappings.intrinsic_mask(6, 4, 2))
+    assert m.shape == (6, 4)
+    np.testing.assert_array_equal(m[:, :2], 1.0)
+    np.testing.assert_array_equal(m[:, 2:], 0.0)
+
+
+def test_intrinsic_rank_reduces_effective_params():
+    """Masked columns must not affect the output (Table 8 mechanics)."""
+    n, k = 10, 4
+    th = _theta(n, k)
+    u_full = mappings.orthogonal(th, n, k, "taylor", k_prime=4)
+    u_kp1 = mappings.orthogonal(th, n, k, "taylor", k_prime=1)
+    # zeroing all but col 0 of B must equal using only col-0 params
+    th0 = np.array(mappings.params_to_lower(th, n, k))  # writable copy
+    th0[:, 1:] = 0.0
+    bk0 = jnp.asarray(th0)
+    q = mappings.q_taylor(mappings.skew_from_factor(bk0, n), 8)[:, :k]
+    np.testing.assert_allclose(np.asarray(u_kp1), np.asarray(q), atol=1e-6)
+    assert np.abs(np.asarray(u_full) - np.asarray(u_kp1)).max() > 1e-4
+
+
+def test_unitarity_error_metric():
+    q = jnp.eye(5, dtype=jnp.float32)
+    assert float(mappings.unitarity_error(q)) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([4, 8, 12, 16]), k=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+def test_cayley_orthogonal_property(n, k, seed):
+    u = np.asarray(mappings.orthogonal(_theta(n, k, seed), n, k, "cayley"))
+    assert np.abs(u.T @ u - np.eye(k)).max() < 1e-4
+
+
+def test_gradients_flow():
+    n, k = 8, 2
+    th = _theta(n, k)
+
+    def f(t):
+        u = mappings.orthogonal(t, n, k, "taylor")
+        return jnp.sum(u ** 2 * jnp.arange(k, dtype=jnp.float32))
+
+    g = np.asarray(jax.grad(f)(th))
+    assert np.any(g != 0)

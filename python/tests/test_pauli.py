@@ -1,0 +1,120 @@
+"""Pauli parameterization Q_P (eq. 2): structure, orthogonality, scaling."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantum import gates, pauli
+
+
+def _rand_angles(circ, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 0.7, circ.num_params).astype(np.float32))
+
+
+@pytest.mark.parametrize("q,l", [(1, 0), (1, 1), (2, 1), (3, 1), (3, 2),
+                                 (4, 1), (5, 2), (6, 1), (7, 1)])
+def test_param_count_formula(q, l):
+    """(2L+1) log2(N) - 2L of §4.1 (q >= 2; q = 1 degenerates to 1 angle)."""
+    circ = pauli.build(q, l)
+    if q == 1:
+        assert circ.num_params == 1
+    else:
+        assert circ.num_params == (2 * l + 1) * q - 2 * l
+        assert circ.num_params == pauli.num_params(1 << q, l)
+
+
+@pytest.mark.parametrize("q,l", [(2, 1), (3, 1), (4, 2), (5, 1), (6, 3)])
+def test_orthogonality(q, l):
+    circ = pauli.build(q, l)
+    m = np.asarray(circ.materialize(_rand_angles(circ)))
+    np.testing.assert_allclose(m @ m.T, np.eye(circ.dim), atol=1e-5)
+
+
+@pytest.mark.parametrize("q,l", [(3, 1), (4, 1), (5, 2)])
+def test_full_rank(q, l):
+    """Q_P has full effective rank N despite tensor rank 2 (§4.1)."""
+    circ = pauli.build(q, l)
+    m = np.asarray(circ.materialize(_rand_angles(circ, seed=3)))
+    s = np.linalg.svd(m, compute_uv=False)
+    assert s.min() > 0.99  # orthogonal: all singular values are 1
+
+
+@pytest.mark.parametrize("q,l", [(2, 1), (4, 2), (5, 1)])
+def test_apply_matches_materialize(q, l):
+    circ = pauli.build(q, l)
+    th = _rand_angles(circ, seed=1)
+    x = np.random.default_rng(1).normal(size=(9, circ.dim)).astype(np.float32)
+    y = np.asarray(circ.apply(jnp.asarray(x), th))
+    np.testing.assert_allclose(y, x @ np.asarray(circ.materialize(th)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("q,l", [(3, 1), (4, 2)])
+def test_apply_t_is_transpose(q, l):
+    circ = pauli.build(q, l)
+    th = _rand_angles(circ, seed=2)
+    x = np.random.default_rng(2).normal(size=(4, circ.dim)).astype(np.float32)
+    yt = np.asarray(circ.apply_t(jnp.asarray(x), th))
+    np.testing.assert_allclose(
+        yt, x @ np.asarray(circ.materialize(th)).T, atol=1e-5)
+
+
+@pytest.mark.parametrize("q,l", [(1, 0), (2, 0), (3, 1), (4, 2), (6, 1)])
+def test_materialize_kron_equals_layered(q, l):
+    """The compact Kronecker-chain product (the AOT model path, §Perf L2)
+    must equal the layered apply exactly."""
+    circ = pauli.build(q, l)
+    th = _rand_angles(circ, seed=5)
+    a = np.asarray(circ.materialize(th))
+    b = np.asarray(circ.materialize_kron(th))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_identity_at_zero_angles():
+    circ = pauli.build(4, 2)
+    m = np.asarray(circ.materialize(jnp.zeros(circ.num_params)))
+    # CZ sign layers act even at zero rotation; composing layer signs gives
+    # a diagonal +-1 matrix, i.e. |M| == I.
+    np.testing.assert_allclose(np.abs(m), np.eye(16), atol=1e-6)
+
+
+def test_stiefel_columns():
+    circ = pauli.build(5, 1)
+    u = np.asarray(circ.columns(_rand_angles(circ), 4))
+    assert u.shape == (32, 4)
+    np.testing.assert_allclose(u.T @ u, np.eye(4), atol=1e-5)
+
+
+def test_gradients_flow_to_all_angles():
+    circ = pauli.build(3, 2)
+    x = jnp.ones((2, 8), dtype=jnp.float32)
+
+    def f(th):
+        return jnp.sum(circ.apply(x, th) ** 2 * jnp.arange(8.0))
+
+    g = np.asarray(jax.grad(f)(_rand_angles(circ)))
+    assert np.count_nonzero(g) == circ.num_params
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.integers(2, 6), l=st.integers(0, 3), seed=st.integers(0, 2**16))
+def test_orthogonality_property(q, l, seed):
+    """Hypothesis: every (q, L, angles) circuit is orthogonal."""
+    circ = pauli.build(q, l)
+    m = np.asarray(circ.materialize(_rand_angles(circ, seed)))
+    assert np.abs(m @ m.T - np.eye(circ.dim)).max() < 1e-4
+
+
+def test_cz_sign_vector():
+    s = gates.cz_sign_vector(2, [(0, 1)])
+    np.testing.assert_array_equal(s, [1, 1, 1, -1])
+    # disjoint pairs compose multiplicatively
+    s2 = gates.cz_sign_vector(4, [(0, 1), (2, 3)])
+    assert s2[0b1111] == 1.0 and s2[0b0011] == -1.0 and s2[0b1100] == -1.0
+
+
+def test_adjacent_pairs():
+    assert gates.adjacent_pairs([0, 1, 2, 3, 4]) == [(0, 1), (2, 3)]
+    assert gates.adjacent_pairs([1]) == []

@@ -1,0 +1,125 @@
+"""PEFT methods: shapes, zero-init Delta-W, apply == W + Delta-W, counts."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.peft import ALL_METHODS, make_method
+
+N, M = 16, 32
+PER_WEIGHT = [m for m in ALL_METHODS
+              if m not in ("ft", "bitfit", "hadapter", "padapter")]
+
+
+def _method(name):
+    kw = {}
+    if name in ("lora", "adalora", "loha", "lokr", "mora", "qpeft_taylor"):
+        kw = dict(k=4)
+    if name == "qpeft_pauli":
+        kw = dict(k=3, n_layers=1)
+    if name == "qpeft_tn":
+        kw = dict(network="ttd", k=4)
+    return make_method(name, **kw)
+
+
+@pytest.mark.parametrize("name", PER_WEIGHT)
+def test_init_and_count(name):
+    m = _method(name)
+    p = m.init(jax.random.PRNGKey(0), N, M)
+    actual = sum(int(np.prod(a.shape)) for a in jax.tree_util.tree_leaves(p))
+    assert actual == m.num_params(N, M), f"{name}: count formula mismatch"
+
+
+@pytest.mark.parametrize("name", PER_WEIGHT)
+def test_delta_w_zero_at_init(name):
+    """Every method must start at Delta-W = 0 (fine-tuning identity init)."""
+    m = _method(name)
+    p = m.init(jax.random.PRNGKey(1), N, M)
+    dw = np.asarray(m.delta_w(p, N, M))
+    np.testing.assert_allclose(dw, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", PER_WEIGHT)
+def test_apply_consistent_with_delta(name):
+    """y = x(W + Delta-W) must hold for the fused/apply path."""
+    m = _method(name)
+    key = jax.random.PRNGKey(2)
+    p = m.init(key, N, M)
+    # push adapters off the zero init so the test is non-trivial
+    p = jax.tree_util.tree_map(
+        lambda a: a + 0.1 * jax.random.normal(key, a.shape, a.dtype), p)
+    x = jax.random.normal(jax.random.PRNGKey(3), (9, N), dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (N, M), dtype=jnp.float32)
+    y = np.asarray(m.apply(p, x, w))
+    y_ref = np.asarray(x @ (w + m.delta_w(p, N, M)))
+    np.testing.assert_allclose(y, y_ref, atol=2e-3)
+
+
+def test_qpeft_pauli_fewer_params_than_lora_rank1():
+    """The paper's headline: Pauli Quantum-PEFT beats even rank-1 LoRA."""
+    big_n = 256
+    qp = make_method("qpeft_pauli", k=3, n_layers=1)
+    lora1 = make_method("lora", k=1)
+    assert qp.num_params(big_n, big_n) < lora1.num_params(big_n, big_n)
+
+
+def test_qpeft_pauli_log_scaling():
+    qp = make_method("qpeft_pauli", k=3, n_layers=1)
+    p64 = qp.num_params(64, 64)
+    p1024 = qp.num_params(1024, 1024)
+    # 16x the dimension, well under 2x the parameters
+    assert p1024 < 2 * p64
+
+
+def test_qpeft_taylor_param_formula():
+    """2NK - K^2 at N'=N, K'=K and square N=M (§4.2): our count is the
+    strictly-lower-triangle version (exact, not the paper's big-O)."""
+    qt = make_method("qpeft_taylor", k=4)
+    n = 32
+    from compile.quantum.mappings import lower_params_count
+
+    assert qt.num_params(n, n) == 2 * lower_params_count(n, 4) + 4
+
+
+def test_adalora_orth_regularizer_decreases_for_orthogonal():
+    m = make_method("adalora", k=4)
+    p_orth = {"u": jnp.eye(N, 4), "v": jnp.eye(M, 4),
+              "lam": jnp.zeros(4)}
+    key = jax.random.PRNGKey(5)
+    p_rand = {"u": jax.random.normal(key, (N, 4)),
+              "v": jax.random.normal(key, (M, 4)), "lam": jnp.zeros(4)}
+    assert float(m.extra_loss(p_orth)) < float(m.extra_loss(p_rand))
+
+
+def test_bitfit_marks_biases():
+    m = make_method("bitfit")
+    assert m.bias_trainable and not m.base_trainable
+    assert m.init(jax.random.PRNGKey(0), N, M) == {}
+
+
+def test_bottleneck_adapters():
+    for style, sites in (("hadapter", 2), ("padapter", 1)):
+        m = make_method(style, bottleneck=4)
+        p = m.init_bottleneck(jax.random.PRNGKey(0), 16)
+        h = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 16))
+        out = m.bottleneck_apply(p, h)
+        assert out.shape == h.shape
+        # zero-init up-projection => identity at start
+        np.testing.assert_allclose(np.asarray(out), np.asarray(h), atol=1e-6)
+        assert m.bottleneck_params(16) == 2 * 16 * 4
+
+
+def test_lokr_kron_structure():
+    m = make_method("lokr", k=2, f=4)
+    p = m.init(jax.random.PRNGKey(0), 16, 32)
+    assert p["c"].shape == (4, 4)
+    assert p["b"].shape == (4, 2) and p["a"].shape == (8, 2)
+
+
+def test_mora_square_matrix():
+    m = make_method("mora", k=4)
+    p = m.init(jax.random.PRNGKey(0), N, M)
+    import math
+
+    kh = math.isqrt((N + M) * 4)
+    assert p["m"].shape == (kh, kh)

@@ -1,0 +1,81 @@
+"""Quantum Shannon decomposition (eq. 4): arbitrary-dimension unitaries."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantum import pauli, qsd
+
+
+def _angles(node, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 0.5, node.num_params).astype(np.float32))
+
+
+def test_split():
+    assert qsd.split(12) == (8, 4)
+    assert qsd.split(28) == (16, 12)
+    assert qsd.split(257) == (256, 1)
+    assert qsd.split(16) == (8, 8)  # power of two halves
+
+
+def test_power_of_two_blocks_example_4_1():
+    assert qsd.power_of_two_blocks(12) == [8, 4]
+    assert qsd.power_of_two_blocks(28) == [16, 8, 4]
+    assert qsd.power_of_two_blocks(257) == [256, 1]
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 7, 10, 12, 28, 33])
+def test_orthogonality_any_dim(n):
+    node = qsd.build(n, 1)
+    q = np.asarray(node.materialize(_angles(node)))
+    np.testing.assert_allclose(q @ q.T, np.eye(n), atol=1e-5)
+
+
+def test_pow2_leaf_is_pauli():
+    node = qsd.build(16, 2)
+    assert node.leaf is not None
+    assert node.num_params == pauli.num_params(16, 2)
+
+
+def test_recursion_structure_n12():
+    """Example 4.1: N = 12 -> N1 = 8, N2 = 4, four power-of-two blocks."""
+    node = qsd.build(12, 1)
+    assert (node.n1, node.n2) == (8, 4)
+    assert node.u1.leaf is not None and node.u2.leaf is not None
+    assert node.v1.leaf is not None and node.v2.leaf is not None
+    expected = (2 * pauli.num_params(8, 1) + 2 * pauli.num_params(4, 1) + 4)
+    assert node.num_params == expected
+
+
+def test_apply_matches_materialize():
+    node = qsd.build(10, 1)
+    th = _angles(node, seed=4)
+    x = np.random.default_rng(4).normal(size=(6, 10)).astype(np.float32)
+    y = np.asarray(node.apply(jnp.asarray(x), th))
+    np.testing.assert_allclose(y, x @ np.asarray(node.materialize(th)),
+                               atol=1e-5)
+
+
+def test_columns_are_stiefel():
+    node = qsd.build(12, 1)
+    u = np.asarray(node.columns(_angles(node), 3))
+    assert u.shape == (12, 3)
+    np.testing.assert_allclose(u.T @ u, np.eye(3), atol=1e-5)
+
+
+def test_param_scaling_sublinear():
+    """QSD of power-of-two dims keeps the log scaling; CS couplings add
+    the N2 angles the paper's eq. (4) requires."""
+    p_256 = qsd.num_params(256, 1)
+    p_4096 = qsd.num_params(4096, 1)
+    assert p_4096 < 4 * p_256  # log-ish growth between pow2 leaves
+    assert p_256 == pauli.num_params(256, 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 40), seed=st.integers(0, 500))
+def test_orthogonality_property(n, seed):
+    node = qsd.build(n, 1)
+    q = np.asarray(node.materialize(_angles(node, seed)))
+    assert np.abs(q @ q.T - np.eye(n)).max() < 1e-4

@@ -1,0 +1,101 @@
+"""Quantization & QAT (Table 7, Appendix A.5)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.quantum import quantize
+
+
+def _theta(n=300, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=n).astype(np.float32))
+
+
+def test_quantize_exact_at_high_levels():
+    th = _theta()
+    q = quantize.quantize_groups(th, 2.0 ** 16 - 1, 128)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(th), atol=1e-3)
+
+
+def test_quantize_error_shrinks_with_bits():
+    th = _theta()
+    errs = [float(jnp.abs(quantize.quantize_groups(th, 2.0 ** b - 1, 64)
+                          - th).max()) for b in (1, 2, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < errs[0]
+
+
+def test_quantize_respects_group_range():
+    """Quantized values never leave the group's [min, max] interval."""
+    th = _theta(256)
+    q = np.asarray(quantize.quantize_groups(th, 3.0, 64)).reshape(4, 64)
+    t = np.asarray(th).reshape(4, 64)
+    for gq, gt in zip(q, t):
+        assert gq.min() >= gt.min() - 1e-6
+        assert gq.max() <= gt.max() + 1e-6
+
+
+def test_fake_quant_straight_through_gradient():
+    """QAT trick: forward quantized, backward identity."""
+    th = _theta(64)
+    g = jax.grad(lambda t: jnp.sum(quantize.fake_quant_st(t, 3.0, 32) * 2.0))(th)
+    np.testing.assert_allclose(np.asarray(g), 2.0, atol=1e-6)
+
+
+def test_fake_quant_forward_is_quantized():
+    th = _theta(64)
+    f = quantize.fake_quant_st(th, 1.0, 64)  # 1 level: endpoints only
+    uniq = np.unique(np.round(np.asarray(f), 5))
+    assert len(uniq) <= 2
+
+
+def test_adaptive_bit_loading_prunes_flat_groups():
+    """A flat group (tiny dynamic range) gets ~0 bits -> pruned to its
+    zero point; a wide group keeps fidelity (A.5's structural pruning)."""
+    flat = 1e-6 * np.ones(32, np.float32) + 0.5
+    wide = np.random.default_rng(0).normal(0, 5, 32).astype(np.float32)
+    th = jnp.asarray(np.concatenate([flat, wide]))
+    out = np.asarray(quantize.adaptive_bit_loading(th, 3.0, 32))
+    # wide group should track its values much better than 1-bit uniform
+    uni = np.asarray(quantize.fake_quant_st(th, 1.0, 32))
+    err_ada = np.abs(out[32:] - np.asarray(th)[32:]).mean()
+    err_uni = np.abs(uni[32:] - np.asarray(th)[32:]).mean()
+    assert err_ada < err_uni
+
+
+def test_adaptive_gradient_is_straight_through():
+    th = _theta(96)
+    g = jax.grad(lambda t: jnp.sum(quantize.adaptive_bit_loading(t, 2.0, 32)))(th)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+
+def test_storage_bits_formula():
+    assert quantize.storage_bits_per_param(4, 128) == 4 + 32 / 128
+    assert quantize.storage_bits_per_param(1, 128) == 1.25  # Table 7 row
+
+
+def test_base_weight_quantization_shape_preserved():
+    w = jnp.asarray(np.random.default_rng(1).normal(
+        size=(24, 16)).astype(np.float32))
+    q = quantize.quantize_base_weights(w, 3, 64)
+    assert q.shape == w.shape
+    assert float(jnp.abs(q - w).max()) < float(jnp.abs(w).max())
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), g=st.sampled_from([16, 64, 128]),
+       bits=st.integers(1, 8), seed=st.integers(0, 100))
+def test_quantize_property_bounded_error(n, g, bits, seed):
+    """|q - theta| <= group_range / levels for every element."""
+    th = jnp.asarray(np.random.default_rng(seed).normal(
+        size=n).astype(np.float32))
+    levels = 2.0 ** bits - 1
+    q = np.asarray(quantize.quantize_groups(th, levels, g))
+    t = np.asarray(th)
+    n_groups = -(-n // g)
+    for i in range(n_groups):
+        seg = slice(i * g, min((i + 1) * g, n))
+        rng_ = t[seg].max() - t[seg].min()
+        bound = rng_ / levels if rng_ > 0 else 1e-6
+        assert np.abs(q[seg] - t[seg]).max() <= bound * 0.5 + 1e-5

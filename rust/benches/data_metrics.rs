@@ -1,0 +1,74 @@
+//! L3 hot-path benches: synthetic data generation and metric computation
+//! (these run between every train step / after every eval in a sweep, so
+//! the coordinator must not bottleneck the PJRT step — DESIGN.md §Perf L3).
+
+use quantum_peft::data::{e2e::E2eData, glue, grammar::Grammar, images};
+use quantum_peft::metrics::{classification as cls, ngram};
+use quantum_peft::util::bench::{bench, black_box};
+use quantum_peft::util::rng::Rng;
+
+fn main() {
+    println!("# L3 data + metrics throughput");
+    let g = Grammar::new();
+
+    bench("data/glue-batch-16x24 (sst2)", 300, || {
+        let mut rng = Rng::new(1);
+        let b: Vec<_> = (0..16)
+            .map(|_| glue::example(&g, glue::Task::Sst2, &mut rng, 24))
+            .collect();
+        black_box(b);
+    });
+
+    bench("data/dae-pair-batch-16x24", 300, || {
+        let mut rng = Rng::new(2);
+        let b: Vec<_> = (0..16).map(|_| glue::dae_pair(&g, &mut rng, 24)).collect();
+        black_box(b);
+    });
+
+    let d = E2eData::new();
+    bench("data/e2e-batch-16x48", 300, || {
+        let mut rng = Rng::new(3);
+        let b: Vec<_> = (0..16).map(|_| d.training_example(&mut rng, 48)).collect();
+        black_box(b);
+    });
+
+    bench("data/images-batch-16 (16x16x3)", 300, || {
+        let mut rng = Rng::new(4);
+        let b: Vec<_> = (0..16)
+            .map(|_| images::render(&mut rng, images::PATTERNS[1], 2, 0.05))
+            .collect();
+        black_box(b);
+    });
+
+    // metric suite over a realistic corpus size (Table 3 eval)
+    let mut rng = Rng::new(5);
+    let cases: Vec<(Vec<u32>, Vec<Vec<u32>>)> = (0..96)
+        .map(|_| {
+            let mr = d.sample_mr(&mut rng);
+            let refs = d.references(&mr);
+            (refs[0].clone(), refs)
+        })
+        .collect();
+    bench("metrics/bleu-96x3refs", 400, || {
+        black_box(ngram::bleu(&cases, 4));
+    });
+    bench("metrics/nist-96x3refs", 400, || {
+        black_box(ngram::nist(&cases, 5));
+    });
+    bench("metrics/cider-96x3refs", 400, || {
+        black_box(ngram::cider(&cases));
+    });
+    bench("metrics/rouge-l-96x3refs", 400, || {
+        black_box(ngram::rouge_l(&cases));
+    });
+    bench("metrics/meteor-96x3refs", 400, || {
+        black_box(ngram::meteor(&cases));
+    });
+
+    let mut rng = Rng::new(6);
+    let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+    bench("metrics/stsb-corr-256", 300, || {
+        black_box(cls::stsb_corr(&x, &y));
+    });
+}

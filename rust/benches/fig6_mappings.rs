@@ -1,0 +1,42 @@
+//! Figure 6 bench: unitarity error and wall-clock of every unitary
+//! mapping vs matrix size N (K = 4, P = 18) — the pure-Rust mirror of the
+//! paper's RTX6000 comparison. Run: cargo bench --bench fig6_mappings
+
+use quantum_peft::quantum::mappings::{self, Mapping};
+use quantum_peft::quantum::pauli;
+use quantum_peft::util::bench::{bench, black_box};
+use quantum_peft::util::rng::Rng;
+
+fn main() {
+    println!("# Figure 6 — mapping speed (forward) and unitarity error");
+    let sizes = [16usize, 64, 256, 1024];
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let th = mappings::random_theta(&mut rng, n, 4, 0.3);
+        for m in Mapping::all(18) {
+            // dense O(N^3) mappings get prohibitive on one core at large N
+            // (the paper's figure shows exactly this blow-up) — keep the
+            // bench under budget and report them up to N = 256
+            if n > 256 && !matches!(m, Mapping::Taylor(_)) {
+                continue;
+            }
+            let q = mappings::orthogonal(&th, n, 4, m);
+            let err = q.unitarity_error();
+            bench(&format!("fig6/N={n}/{}", m.name()), 300, || {
+                black_box(mappings::orthogonal(&th, n, 4, m));
+            });
+            println!("  unitarity_error {:>12}: {err:.3e}", m.name());
+        }
+        // Pauli circuit: the O(N log N) apply path
+        let qb = n.trailing_zeros() as usize;
+        let circ = pauli::build(qb, 1);
+        let tp: Vec<f32> = (0..circ.num_params)
+            .map(|_| rng.normal() as f32 * 0.5).collect();
+        let x0: Vec<f32> = (0..32 * n).map(|_| rng.normal() as f32).collect();
+        bench(&format!("fig6/N={n}/pauli-apply(b=32)"), 300, || {
+            let mut x = x0.clone();
+            circ.apply(&mut x, 32, &tp);
+            black_box(x);
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Literal-marshalling overhead: HostTensor <-> xla::Literal conversions
+//! that run on every step (L3 §Perf — must stay well under the step's
+//! compute time).
+
+use quantum_peft::runtime::{tensors, HostTensor};
+use quantum_peft::util::bench::{bench, black_box};
+use quantum_peft::util::rng::Rng;
+
+fn main() {
+    println!("# HostTensor <-> Literal marshalling");
+    let mut rng = Rng::new(1);
+
+    // typical parameter tensor (64x64 f32)
+    let w = HostTensor::f32(vec![64, 64],
+                            (0..4096).map(|_| rng.normal() as f32).collect());
+    bench("marshal/to_literal-64x64-f32", 300, || {
+        black_box(w.to_literal().unwrap());
+    });
+    let lit = w.to_literal().unwrap();
+    bench("marshal/from_literal-64x64-f32", 300, || {
+        black_box(HostTensor::from_literal(&lit).unwrap());
+    });
+
+    // a full frozen set: 36 tensors of the encoder scale
+    let frozen: Vec<HostTensor> = (0..36)
+        .map(|_| HostTensor::f32(vec![64, 64],
+                                 (0..4096).map(|_| rng.normal() as f32).collect()))
+        .collect();
+    bench("marshal/frozen-set-36x64x64", 400, || {
+        let lits: Vec<_> = frozen.iter().map(|t| t.to_literal().unwrap()).collect();
+        black_box(lits);
+    });
+
+    // batch assembly (the per-step data path)
+    let rows: Vec<Vec<u32>> = (0..16)
+        .map(|_| (0..24).map(|_| rng.below(200) as u32).collect())
+        .collect();
+    bench("marshal/stack-tokens-16x24", 300, || {
+        black_box(tensors::stack_tokens(&rows));
+    });
+    let imgs: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..768).map(|_| rng.normal() as f32).collect())
+        .collect();
+    bench("marshal/stack-images-16x768", 300, || {
+        black_box(tensors::stack_f32(&imgs, &[16, 16, 3]));
+    });
+}

@@ -1,0 +1,57 @@
+//! End-to-end train-step latency per artifact — the Table-4 timing basis
+//! (ms/batch per PEFT method) and the L3 §Perf hot path. Skips politely
+//! when artifacts/ has not been built.
+
+use std::collections::BTreeMap;
+
+use quantum_peft::coordinator::trainer::default_extras;
+use quantum_peft::data::{glue, grammar::Grammar};
+use quantum_peft::runtime::{tensors, HostTensor, Manifest, Runtime,
+                            TrainSession};
+use quantum_peft::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    let g = Grammar::new();
+
+    println!("# train-step latency per method (Table 4 basis, enc family)");
+    for tag in ["enc_ft", "enc_lora", "enc_adalora", "enc_loha", "enc_lokr",
+                "enc_qpeft_taylor", "enc_qpeft_pauli"] {
+        let entry = manifest.get(tag)?;
+        let mut session = TrainSession::new(&rt, entry, 0)?;
+        let bsz = entry.batch_size();
+        let seq = entry.batch[0].shape[1];
+        let ds = glue::dataset(&g, glue::Task::Sst2, 0, bsz, seq);
+        let toks: Vec<Vec<u32>> = ds.iter().map(|x| x.tokens.clone()).collect();
+        let labels: Vec<f32> = ds.iter().map(|x| x.label).collect();
+        let batch = [tensors::stack_tokens(&toks),
+                     HostTensor::f32(vec![bsz], labels)];
+        let extras = default_extras(&session.entry, 0.0, &BTreeMap::new());
+        bench(&format!("train_step/{tag}"), 1500, || {
+            session.step(&batch, 1e-3, 0.01, &extras).unwrap();
+        });
+    }
+
+    println!("\n# eval-step latency");
+    for tag in ["enc_lora", "enc_qpeft_pauli"] {
+        let entry = manifest.get(tag)?;
+        let session = TrainSession::new(&rt, entry, 0)?;
+        let bsz = entry.batch_size();
+        let seq = entry.batch[0].shape[1];
+        let ds = glue::dataset(&g, glue::Task::Sst2, 0, bsz, seq);
+        let toks: Vec<Vec<u32>> = ds.iter().map(|x| x.tokens.clone()).collect();
+        let x = tensors::stack_tokens(&toks);
+        let extras = default_extras(&session.entry, 0.0, &BTreeMap::new());
+        bench(&format!("eval_step/{tag}"), 1000, || {
+            session.eval(&x, &extras).unwrap();
+        });
+    }
+    println!("\n(total XLA compile: {:.1}s)", rt.total_compile_seconds());
+    Ok(())
+}

@@ -1,0 +1,197 @@
+//! Experiment configuration: a minimal TOML-subset parser (key = value
+//! with [section] headers; strings, numbers, booleans, inline arrays of
+//! scalars) plus the preset experiment profiles shipped in configs/.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_strs(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|x| Ok(x.as_str()?.to_string())).collect(),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+}
+
+/// section -> key -> value; top-level keys live in section "".
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str().ok().map(String::from))
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    s.parse::<f64>().map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value {s:?}"))
+}
+
+/// Training-profile defaults used by the CLI when no config file is given.
+/// `quick` keeps the full pipeline exercised in minutes on one core;
+/// `full` approaches the paper's budgets (hours).
+pub fn preset(name: &str) -> Result<Config> {
+    let text = match name {
+        "quick" => "\
+[train]\nsteps = 60\nlr = 0.01\nweight_decay = 0.01\n\
+train_examples = 256\ntest_examples = 128\neval_every = 30\n\
+[pretrain]\nsteps = 150\nlr = 0.003\n\
+[sweep]\nseeds = [0]\n",
+        "default" => "\
+[train]\nsteps = 150\nlr = 0.01\nweight_decay = 0.01\n\
+train_examples = 512\ntest_examples = 256\neval_every = 50\n\
+[pretrain]\nsteps = 400\nlr = 0.003\n\
+[sweep]\nseeds = [0, 1]\n",
+        "full" => "\
+[train]\nsteps = 400\nlr = 0.01\nweight_decay = 0.01\n\
+train_examples = 1024\ntest_examples = 512\neval_every = 100\n\
+[pretrain]\nsteps = 1000\nlr = 0.003\n\
+[sweep]\nseeds = [0, 1, 2, 3, 4]\n",
+        other => bail!("unknown preset {other:?} (quick|default|full)"),
+    };
+    Config::parse(text)
+}
+
+/// Build a TrainConfig from a parsed profile.
+pub fn train_config(cfg: &Config) -> crate::coordinator::trainer::TrainConfig {
+    crate::coordinator::trainer::TrainConfig {
+        steps: cfg.f64_or("train", "steps", 150.0) as usize,
+        lr: cfg.f64_or("train", "lr", 0.01) as f32,
+        weight_decay: cfg.f64_or("train", "weight_decay", 0.01) as f32,
+        warmup_frac: cfg.f64_or("train", "warmup_frac", 0.1) as f32,
+        eval_every: cfg.f64_or("train", "eval_every", 50.0) as usize,
+        seed: cfg.f64_or("train", "seed", 0.0) as u64,
+        train_examples: cfg.f64_or("train", "train_examples", 512.0) as usize,
+        test_examples: cfg.f64_or("train", "test_examples", 256.0) as usize,
+    }
+}
+
+pub fn sweep_seeds(cfg: &Config) -> Vec<u64> {
+    match cfg.get("sweep", "seeds") {
+        Some(Value::Arr(v)) => v.iter()
+            .filter_map(|x| x.as_f64().ok().map(|f| f as u64)).collect(),
+        _ => vec![0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(
+            "top = 1\n[a]\nx = 2.5\nname = \"hi\" # comment\nflag = true\n\
+             seeds = [0, 1, 2]\n[b]\ny = -3\n").unwrap();
+        assert_eq!(c.f64_or("", "top", 0.0), 1.0);
+        assert_eq!(c.f64_or("a", "x", 0.0), 2.5);
+        assert_eq!(c.str_or("a", "name", ""), "hi");
+        assert_eq!(c.get("a", "flag"), Some(&Value::Bool(true)));
+        assert_eq!(c.f64_or("b", "y", 0.0), -3.0);
+        if let Some(Value::Arr(v)) = c.get("a", "seeds") {
+            assert_eq!(v.len(), 3);
+        } else {
+            panic!("seeds not parsed");
+        }
+    }
+
+    #[test]
+    fn presets_parse_and_scale() {
+        let q = preset("quick").unwrap();
+        let f = preset("full").unwrap();
+        assert!(train_config(&q).steps < train_config(&f).steps);
+        assert_eq!(sweep_seeds(&f).len(), 5);
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("no equals sign here").is_err());
+        assert!(Config::parse("x = @@@").is_err());
+    }
+}

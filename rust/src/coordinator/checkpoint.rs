@@ -1,0 +1,147 @@
+//! Checkpoint format (own binary container; no external deps):
+//!
+//!   magic "QPCK" | u32 version | u32 count
+//!   per tensor: u32 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
+//!               | u32 ndim | u64 dims... | payload (LE)
+//!
+//! Stores either a full model (pretraining output) or adapters only
+//! (PEFT fine-tuning output — the paper's few-KB artifact story).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 4] = b"QPCK";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        match t {
+            HostTensor::F32 { shape, data } => {
+                f.write_all(&[0u8])?;
+                f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for &d in shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                for &x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            HostTensor::I32 { shape, data } => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for &d in shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                for &x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a QPCK checkpoint");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut dt = [0u8; 1];
+        f.read_exact(&mut dt)?;
+        f.read_exact(&mut u32buf)?;
+        let ndim = u32::from_le_bytes(u32buf) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        let mut u64buf = [0u8; 8];
+        for _ in 0..ndim {
+            f.read_exact(&mut u64buf)?;
+            shape.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let tensor = match dt[0] {
+            0 => {
+                let mut data = vec![0f32; numel];
+                for x in data.iter_mut() {
+                    f.read_exact(&mut u32buf)?;
+                    *x = f32::from_le_bytes(u32buf);
+                }
+                HostTensor::F32 { shape, data }
+            }
+            1 => {
+                let mut data = vec![0i32; numel];
+                for x in data.iter_mut() {
+                    f.read_exact(&mut u32buf)?;
+                    *x = i32::from_le_bytes(u32buf);
+                }
+                HostTensor::I32 { shape, data }
+            }
+            other => bail!("bad dtype byte {other}"),
+        };
+        out.push((name, tensor));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qp_ckpt_test");
+        let path = dir.join("t.qpck");
+        let tensors = vec![
+            ("base.w".to_string(),
+             HostTensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-8, 9.0])),
+            ("tokens".to_string(), HostTensor::i32(vec![4], vec![1, -5, 7, 0])),
+            ("scalar".to_string(), HostTensor::f32(vec![], vec![42.0])),
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(tensors.len(), back.len());
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("qp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.qpck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Structured event/metrics log (JSONL): every training run appends
+//! step losses, eval metrics and timing so experiments are auditable and
+//! EXPERIMENTS.md numbers can be traced to a log line.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::Result;
+
+use crate::util::json::{obj, Json};
+
+pub struct EventLog {
+    file: Option<Mutex<std::fs::File>>,
+    pub echo: bool,
+}
+
+impl EventLog {
+    /// Log to `path` (append), or a null logger when path is None.
+    pub fn new(path: Option<PathBuf>, echo: bool) -> Result<EventLog> {
+        let file = match path {
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    std::fs::create_dir_all(parent).ok();
+                }
+                Some(Mutex::new(std::fs::OpenOptions::new()
+                    .create(true).append(true).open(p)?))
+            }
+            None => None,
+        };
+        Ok(EventLog { file, echo })
+    }
+
+    pub fn null() -> EventLog {
+        EventLog { file: None, echo: false }
+    }
+
+    pub fn emit(&self, kind: &str, mut fields: Vec<(&str, Json)>) {
+        let ts = SystemTime::now().duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64()).unwrap_or(0.0);
+        fields.insert(0, ("ts", Json::Num(ts)));
+        fields.insert(0, ("event", Json::Str(kind.to_string())));
+        let line = obj(fields).dump();
+        if self.echo {
+            println!("{line}");
+        }
+        if let Some(f) = &self.file {
+            let mut f = f.lock().unwrap();
+            let _ = writeln!(f, "{line}");
+        }
+    }
+
+    pub fn train_step(&self, tag: &str, task: &str, step: usize, loss: f32) {
+        self.emit("train_step", vec![
+            ("tag", tag.into()), ("task", task.into()),
+            ("step", step.into()), ("loss", Json::Num(loss as f64)),
+        ]);
+    }
+
+    pub fn eval(&self, tag: &str, task: &str, metric: &str, value: f64,
+                step: usize) {
+        self.emit("eval", vec![
+            ("tag", tag.into()), ("task", task.into()),
+            ("metric", metric.into()), ("value", Json::Num(value)),
+            ("step", step.into()),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_parseable_jsonl() {
+        let path = std::env::temp_dir().join("qp_events_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::new(Some(path.clone()), false).unwrap();
+        log.train_step("enc_lora", "sst2", 3, 0.5);
+        log.eval("enc_lora", "sst2", "accuracy", 0.91, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let j = Json::parse(l).unwrap();
+            assert!(j.get("ts").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn null_logger_is_silent() {
+        EventLog::null().train_step("x", "y", 0, 1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! The Layer-3 coordinator: training sessions, experiment sweeps,
+//! checkpoints and event logging. This is the process that owns the
+//! paper's experimental protocol end to end.
+
+pub mod checkpoint;
+pub mod events;
+pub mod sweep;
+pub mod trainer;

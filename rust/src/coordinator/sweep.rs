@@ -1,0 +1,194 @@
+//! Experiment scheduler: plans a grid of (artifact, task, seed) cells,
+//! executes them through the task drivers, and aggregates per-cell
+//! results into the paper's table rows (mean over seeds, as in §5.1's
+//! five-run protocol).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::glue;
+use crate::runtime::{Manifest, Runtime};
+
+use super::events::EventLog;
+use super::trainer::{self, GlueRunSpec, RunResult, TrainConfig};
+
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    pub tags: Vec<String>,
+    pub tasks: Vec<glue::Task>,
+    pub seeds: Vec<u64>,
+    pub cfg: TrainConfig,
+    pub backbone: Option<PathBuf>,
+    /// per-task learning-rate overrides (the paper sweeps LRs per task)
+    pub task_lr: BTreeMap<String, f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub tag: String,
+    pub task: glue::Task,
+    pub seed: u64,
+}
+
+impl SweepPlan {
+    /// Every (tag, task, seed) cell, exactly once.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for tag in &self.tags {
+            for &task in &self.tasks {
+                for &seed in &self.seeds {
+                    out.push(Cell { tag: tag.clone(), task, seed });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Aggregated result of one (tag, task): mean over seeds.
+#[derive(Clone, Debug)]
+pub struct AggResult {
+    pub tag: String,
+    pub task: String,
+    pub metric_name: String,
+    pub mean_metric: f64,
+    pub std_metric: f64,
+    pub n_seeds: usize,
+    pub adapter_params: usize,
+    pub trainable_params: usize,
+    pub mean_step_ms: f64,
+}
+
+pub fn aggregate(results: &[RunResult]) -> Vec<AggResult> {
+    let mut groups: BTreeMap<(String, String), Vec<&RunResult>> = BTreeMap::new();
+    for r in results {
+        groups.entry((r.tag.clone(), r.task.clone())).or_default().push(r);
+    }
+    groups.into_iter()
+        .map(|((tag, task), rs)| {
+            let vals: Vec<f64> = rs.iter().map(|r| r.best_metric).collect();
+            let n = vals.len() as f64;
+            let mean = vals.iter().sum::<f64>() / n;
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+            AggResult {
+                tag,
+                task,
+                metric_name: rs[0].metric_name.clone(),
+                mean_metric: mean,
+                std_metric: var.sqrt(),
+                n_seeds: rs.len(),
+                adapter_params: rs[0].adapter_params,
+                trainable_params: rs[0].trainable_params,
+                mean_step_ms: rs.iter().map(|r| r.step_ms).sum::<f64>() / n,
+            }
+        })
+        .collect()
+}
+
+/// Execute a GLUE-family sweep sequentially (the image is single-core;
+/// the scheduler still guarantees every cell exactly once and isolates
+/// per-cell RNG streams).
+pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
+                      log: &EventLog) -> Result<Vec<RunResult>> {
+    let cells = plan.cells();
+    let mut results = Vec::with_capacity(cells.len());
+    let total = cells.len();
+    for (i, cell) in cells.into_iter().enumerate() {
+        let mut cfg = plan.cfg.clone();
+        cfg.seed = cell.seed;
+        if let Some(&lr) = plan.task_lr.get(cell.task.name()) {
+            cfg.lr = lr;
+        }
+        log.emit("cell_start", vec![
+            ("i", i.into()), ("total", total.into()),
+            ("tag", cell.tag.as_str().into()),
+            ("task", cell.task.name().into()),
+            ("seed", (cell.seed as usize).into()),
+        ]);
+        let spec = GlueRunSpec {
+            tag: &cell.tag,
+            task: cell.task,
+            cfg,
+            backbone: plan.backbone.as_deref(),
+            extras_override: BTreeMap::new(),
+        };
+        let r = trainer::run_glue(rt, manifest, &spec, log)?;
+        log.emit("cell_done", vec![
+            ("tag", cell.tag.as_str().into()),
+            ("task", cell.task.name().into()),
+            ("metric", crate::util::json::Json::Num(r.best_metric)),
+        ]);
+        results.push(r);
+    }
+    Ok(results)
+}
+
+/// The GLUE "Avg." column of Tables 2/5: mean of per-task means for one tag.
+pub fn glue_average(aggs: &[AggResult], tag: &str) -> Option<f64> {
+    let vals: Vec<f64> = aggs.iter()
+        .filter(|a| a.tag == tag)
+        .map(|a| a.mean_metric)
+        .collect();
+    if vals.is_empty() {
+        None
+    } else {
+        Some(vals.iter().sum::<f64>() / vals.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn cells_cover_grid_exactly_once() {
+        check_property("sweep covers grid", 15, |rng| {
+            let tags: Vec<String> = (0..rng.range(1, 4))
+                .map(|i| format!("tag{i}")).collect();
+            let tasks = vec![glue::Task::Sst2, glue::Task::Cola];
+            let seeds: Vec<u64> = (0..rng.range(1, 4) as u64).collect();
+            let plan = SweepPlan {
+                tags: tags.clone(), tasks: tasks.clone(), seeds: seeds.clone(),
+                cfg: TrainConfig::default(), backbone: None,
+                task_lr: BTreeMap::new(),
+            };
+            let cells = plan.cells();
+            assert_eq!(cells.len(), tags.len() * tasks.len() * seeds.len());
+            let mut set = std::collections::HashSet::new();
+            for c in &cells {
+                assert!(set.insert((c.tag.clone(), c.task.name(), c.seed)),
+                        "duplicate cell");
+            }
+        });
+    }
+
+    #[test]
+    fn aggregate_means_and_stds() {
+        let mk = |metric: f64| RunResult {
+            tag: "t".into(), task: "sst2".into(), metric_name: "accuracy".into(),
+            best_metric: metric, final_metric: metric, losses: vec![],
+            adapter_params: 10, trainable_params: 20, wall_seconds: 1.0,
+            step_ms: 5.0, extra_metrics: BTreeMap::new(),
+        };
+        let aggs = aggregate(&[mk(0.8), mk(0.9), mk(1.0)]);
+        assert_eq!(aggs.len(), 1);
+        assert!((aggs[0].mean_metric - 0.9).abs() < 1e-12);
+        assert!(aggs[0].std_metric > 0.0);
+        assert_eq!(aggs[0].n_seeds, 3);
+    }
+
+    #[test]
+    fn glue_average_over_tasks() {
+        let mk = |task: &str, m: f64| AggResult {
+            tag: "t".into(), task: task.into(), metric_name: "x".into(),
+            mean_metric: m, std_metric: 0.0, n_seeds: 1, adapter_params: 0,
+            trainable_params: 0, mean_step_ms: 0.0,
+        };
+        let aggs = vec![mk("sst2", 0.9), mk("cola", 0.5)];
+        assert!((glue_average(&aggs, "t").unwrap() - 0.7).abs() < 1e-12);
+        assert!(glue_average(&aggs, "missing").is_none());
+    }
+}

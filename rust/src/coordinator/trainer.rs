@@ -1,0 +1,564 @@
+//! Task drivers: the coordinator-side training/eval loops per experiment
+//! family (GLUE-substitute classification, E2E generation, ViT transfer,
+//! and the pretraining runs that produce frozen backbones).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{batcher::Batcher, e2e::E2eData, glue, grammar::Grammar,
+                  images};
+use crate::metrics::{classification as cls, ngram};
+use crate::runtime::{tensors, HostTensor, Manifest, Runtime, TrainSession};
+use crate::util::rng::Rng;
+
+use super::events::EventLog;
+
+/// Linear warmup + linear decay (the paper's schedule, Tables 12/14).
+pub fn lr_at(step: usize, total: usize, base: f32, warmup_frac: f32) -> f32 {
+    let warmup = ((total as f32 * warmup_frac) as usize).max(1);
+    if step < warmup {
+        base * (step + 1) as f32 / warmup as f32
+    } else {
+        let rest = (total - warmup).max(1) as f32;
+        base * (1.0 - (step - warmup) as f32 / rest).max(0.0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub warmup_frac: f32,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub test_examples: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 1e-2,
+            weight_decay: 0.01,
+            warmup_frac: 0.1,
+            eval_every: 50,
+            seed: 0,
+            train_examples: 512,
+            test_examples: 256,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub tag: String,
+    pub task: String,
+    pub metric_name: String,
+    pub best_metric: f64,
+    pub final_metric: f64,
+    pub losses: Vec<f32>,
+    pub adapter_params: usize,
+    pub trainable_params: usize,
+    pub wall_seconds: f64,
+    pub step_ms: f64,
+    /// extra named metrics (BLEU/NIST/... for generation runs)
+    pub extra_metrics: BTreeMap<String, f64>,
+}
+
+/// Default values for a config's runtime extras, given the task and the
+/// method hyperparameters recorded in the manifest. Overridable per run
+/// (Tables 7/8 sweep exactly these).
+pub fn default_extras(entry: &crate::runtime::ArtifactEntry, task_kind: f32,
+                      overrides: &BTreeMap<String, f32>) -> Vec<f32> {
+    entry.extras.iter()
+        .map(|name| {
+            if let Some(v) = overrides.get(name) {
+                return *v;
+            }
+            match name.as_str() {
+                "task_kind" => task_kind,
+                "k_prime" => entry.method_kw.get("k").copied().unwrap_or(4.0) as f32,
+                "quant_levels" => 0.0, // quantization off
+                "quant_mode" => 0.0,   // uniform
+                _ => 0.0,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- GLUE ---
+
+pub struct GlueRunSpec<'a> {
+    pub tag: &'a str,
+    pub task: glue::Task,
+    pub cfg: TrainConfig,
+    pub backbone: Option<&'a Path>,
+    pub extras_override: BTreeMap<String, f32>,
+}
+
+/// Fine-tune one (artifact, task) pair and report the task metric.
+pub fn run_glue(rt: &Runtime, manifest: &Manifest, spec: &GlueRunSpec,
+                log: &EventLog) -> Result<RunResult> {
+    let entry = manifest.get(spec.tag)?;
+    let g = Grammar::new();
+    let seq_len = entry.batch[0].shape[1];
+    let bsz = entry.batch_size();
+    let train = glue::dataset(&g, spec.task, spec.cfg.seed,
+                              spec.cfg.train_examples, seq_len);
+    let test = glue::dataset(&g, spec.task, spec.cfg.seed ^ 0xE7A1,
+                             spec.cfg.test_examples, seq_len);
+
+    let mut session = TrainSession::new(rt, entry, spec.cfg.seed as i32)?;
+    if let Some(ckpt) = spec.backbone {
+        let named = super::checkpoint::load(ckpt)
+            .with_context(|| format!("loading backbone {ckpt:?}"))?;
+        let n = session.load_named(&named)?;
+        log.emit("backbone_loaded", vec![("tag", spec.tag.into()),
+                                         ("tensors", n.into())]);
+    }
+    let task_kind = spec.task.task_kind();
+    let extras = default_extras(&session.entry, task_kind,
+                                &spec.extras_override);
+
+    let mut batcher = Batcher::new(train.len(), bsz, spec.cfg.seed ^ 0xba7c4);
+    let mut losses = Vec::with_capacity(spec.cfg.steps);
+    let mut best = f64::NEG_INFINITY;
+    let t0 = Instant::now();
+    for step in 0..spec.cfg.steps {
+        let idx = batcher.next_batch();
+        let toks: Vec<Vec<u32>> = idx.iter().map(|&i| train[i].tokens.clone())
+            .collect();
+        let labels: Vec<f32> = idx.iter().map(|&i| train[i].label).collect();
+        let batch = [tensors::stack_tokens(&toks),
+                     HostTensor::f32(vec![bsz], labels)];
+        let lr = lr_at(step, spec.cfg.steps, spec.cfg.lr, spec.cfg.warmup_frac);
+        let loss = session.step(&batch, lr, spec.cfg.weight_decay, &extras)?;
+        losses.push(loss);
+        log.train_step(spec.tag, spec.task.name(), step, loss);
+        if (step + 1) % spec.cfg.eval_every == 0 || step + 1 == spec.cfg.steps {
+            let m = eval_glue(&session, &test, spec.task, &extras)?;
+            log.eval(spec.tag, spec.task.name(), spec.task.metric_name(), m,
+                     step + 1);
+            best = best.max(m);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let final_metric = eval_glue(&session, &test, spec.task, &extras)?;
+    best = best.max(final_metric);
+    Ok(RunResult {
+        tag: spec.tag.to_string(),
+        task: spec.task.name().to_string(),
+        metric_name: spec.task.metric_name().to_string(),
+        best_metric: best,
+        final_metric,
+        losses,
+        adapter_params: entry.adapter_param_count,
+        trainable_params: entry.trainable_param_count,
+        wall_seconds: wall,
+        step_ms: wall * 1000.0 / spec.cfg.steps.max(1) as f64,
+        extra_metrics: BTreeMap::new(),
+    })
+}
+
+pub fn eval_glue(session: &TrainSession, test: &[glue::Example],
+                 task: glue::Task, extras: &[f32]) -> Result<f64> {
+    let bsz = session.entry.batch_size();
+    let mut preds_cls: Vec<u32> = Vec::new();
+    let mut preds_reg: Vec<f64> = Vec::new();
+    for batch_idx in Batcher::eval_batches(test.len(), bsz) {
+        let toks: Vec<Vec<u32>> = batch_idx.iter()
+            .map(|&i| test[i].tokens.clone()).collect();
+        let logits = session.eval(&tensors::stack_tokens(&toks), extras)?;
+        let data = logits.as_f32()?;
+        let n_out = logits.shape()[1];
+        for row in 0..batch_idx.len() {
+            let r = &data[row * n_out..(row + 1) * n_out];
+            if task == glue::Task::Stsb {
+                preds_reg.push(r[0] as f64);
+            } else {
+                let p = if r[1] > r[0] { 1u32 } else { 0u32 };
+                preds_cls.push(p);
+            }
+        }
+    }
+    // trim wrap-padding
+    if task == glue::Task::Stsb {
+        preds_reg.truncate(test.len());
+        let gold: Vec<f64> = test.iter().map(|e| e.label as f64).collect();
+        Ok(cls::stsb_corr(&preds_reg, &gold))
+    } else {
+        preds_cls.truncate(test.len());
+        let gold: Vec<u32> = test.iter().map(|e| e.label as u32).collect();
+        Ok(match task {
+            glue::Task::Cola => cls::matthews(&preds_cls, &gold),
+            _ => cls::accuracy(&preds_cls, &gold),
+        })
+    }
+}
+
+// ------------------------------------------------------------ pretrain ---
+
+/// Pretrain the encoder backbone with the denoising objective and save a
+/// full checkpoint. Returns the final loss curve.
+pub fn pretrain_encoder(rt: &Runtime, manifest: &Manifest, tag: &str,
+                        steps: usize, lr: f32, seed: u64, out: &Path,
+                        log: &EventLog) -> Result<Vec<f32>> {
+    let entry = manifest.get(tag)?;
+    let g = Grammar::new();
+    let seq_len = entry.batch[0].shape[1];
+    let bsz = entry.batch_size();
+    let mut session = TrainSession::new(rt, entry, seed as i32)?;
+    let mut rng = Rng::new(seed ^ 0xdae);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let mut corr = Vec::with_capacity(bsz);
+        let mut clean = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            let (c, cl) = glue::dae_pair(&g, &mut rng, seq_len);
+            corr.push(c);
+            clean.push(cl);
+        }
+        let batch = [tensors::stack_tokens(&corr), tensors::stack_tokens(&clean)];
+        let lr_t = lr_at(step, steps, lr, 0.1);
+        let loss = session.step(&batch, lr_t, 0.01, &[])?;
+        losses.push(loss);
+        if step % 25 == 0 {
+            log.train_step(tag, "pretrain", step, loss);
+        }
+    }
+    super::checkpoint::save(out, &session.export_named()?)?;
+    log.emit("checkpoint_saved", vec![("path", format!("{out:?}").into())]);
+    Ok(losses)
+}
+
+/// Pretrain the decoder LM on domain text (reference realizations without
+/// MR prefixes — the "generic corpus" for the E2E family).
+pub fn pretrain_decoder(rt: &Runtime, manifest: &Manifest, tag: &str,
+                        steps: usize, lr: f32, seed: u64, out: &Path,
+                        log: &EventLog) -> Result<Vec<f32>> {
+    let entry = manifest.get(tag)?;
+    let data = E2eData::new();
+    let seq_len = entry.batch[0].shape[1];
+    let bsz = entry.batch_size();
+    let mut session = TrainSession::new(rt, entry, seed as i32)?;
+    let mut rng = Rng::new(seed ^ 0x1a);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let mut toks = Vec::with_capacity(bsz);
+        let mut masks = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            let mr = data.sample_mr(&mut rng);
+            let refs = data.references(&mr);
+            let text = refs[rng.below(refs.len())].clone();
+            let mut t = vec![crate::data::tokenizer::CLS];
+            t.extend(&text);
+            t.push(crate::data::tokenizer::EOS);
+            let end = t.len();
+            let t = crate::data::tokenizer::pad_to(t, seq_len);
+            let mut m = vec![0.0f32; seq_len];
+            for mm in m.iter_mut().take(end.min(seq_len)).skip(1) {
+                *mm = 1.0;
+            }
+            toks.push(t);
+            masks.push(m);
+        }
+        let batch = [tensors::stack_tokens(&toks),
+                     tensors::stack_f32(&masks, &[seq_len])];
+        let loss = session.step(&batch, lr_at(step, steps, lr, 0.1), 0.01, &[])?;
+        losses.push(loss);
+        if step % 25 == 0 {
+            log.train_step(tag, "pretrain", step, loss);
+        }
+    }
+    super::checkpoint::save(out, &session.export_named()?)?;
+    Ok(losses)
+}
+
+/// Pretrain the ViT on the 20-class synthetic pretask.
+pub fn pretrain_vit(rt: &Runtime, manifest: &Manifest, tag: &str,
+                    steps: usize, lr: f32, seed: u64, out: &Path,
+                    log: &EventLog) -> Result<Vec<f32>> {
+    let entry = manifest.get(tag)?;
+    let bsz = entry.batch_size();
+    let ds = images::dataset(seed, 2048, false, 0.05);
+    let mut session = TrainSession::new(rt, entry, seed as i32)?;
+    let mut batcher = Batcher::new(ds.len(), bsz, seed ^ 0x717);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let idx = batcher.next_batch();
+        let pix: Vec<Vec<f32>> = idx.iter().map(|&i| ds[i].pixels.clone()).collect();
+        let labels: Vec<i32> = idx.iter().map(|&i| ds[i].label as i32).collect();
+        let batch = [
+            tensors::stack_f32(&pix, &[images::IMG, images::IMG, images::CH]),
+            HostTensor::i32(vec![bsz], labels),
+        ];
+        let loss = session.step(&batch, lr_at(step, steps, lr, 0.1), 0.01, &[])?;
+        losses.push(loss);
+        if step % 25 == 0 {
+            log.train_step(tag, "pretrain", step, loss);
+        }
+    }
+    super::checkpoint::save(out, &session.export_named()?)?;
+    Ok(losses)
+}
+
+// ----------------------------------------------------------------- ViT ---
+
+pub struct VitRunSpec<'a> {
+    pub tag: &'a str,
+    pub cfg: TrainConfig,
+    pub backbone: Option<&'a Path>,
+    /// quantize the frozen backbone to this many bits (Table 6: 3)
+    pub base_bits: Option<u32>,
+    pub extras_override: BTreeMap<String, f32>,
+}
+
+pub fn run_vit(rt: &Runtime, manifest: &Manifest, spec: &VitRunSpec,
+               log: &EventLog) -> Result<RunResult> {
+    let entry = manifest.get(spec.tag)?;
+    let bsz = entry.batch_size();
+    let train = images::dataset(spec.cfg.seed ^ 0x77, spec.cfg.train_examples,
+                                true, 0.05);
+    let test = images::dataset(spec.cfg.seed ^ 0x7e57, spec.cfg.test_examples,
+                               true, 0.05);
+    let mut session = TrainSession::new(rt, entry, spec.cfg.seed as i32)?;
+    if let Some(ckpt) = spec.backbone {
+        let named = super::checkpoint::load(ckpt)?;
+        session.load_named(&named)?;
+    }
+    if let Some(bits) = spec.base_bits {
+        session.map_frozen(|_, data| {
+            crate::peft::quantization::quantize_inplace(data, bits, 128);
+        })?;
+    }
+    let extras = default_extras(&session.entry, 0.0, &spec.extras_override);
+    let mut batcher = Batcher::new(train.len(), bsz, spec.cfg.seed ^ 0xb);
+    let mut losses = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    let t0 = Instant::now();
+    for step in 0..spec.cfg.steps {
+        let idx = batcher.next_batch();
+        let pix: Vec<Vec<f32>> = idx.iter().map(|&i| train[i].pixels.clone()).collect();
+        let labels: Vec<i32> = idx.iter().map(|&i| train[i].label as i32).collect();
+        let batch = [
+            tensors::stack_f32(&pix, &[images::IMG, images::IMG, images::CH]),
+            HostTensor::i32(vec![bsz], labels),
+        ];
+        let lr = lr_at(step, spec.cfg.steps, spec.cfg.lr, spec.cfg.warmup_frac);
+        let loss = session.step(&batch, lr, spec.cfg.weight_decay, &extras)?;
+        losses.push(loss);
+        log.train_step(spec.tag, "vit", step, loss);
+        if (step + 1) % spec.cfg.eval_every == 0 || step + 1 == spec.cfg.steps {
+            let acc = eval_vit(&session, &test, &extras)?;
+            log.eval(spec.tag, "vit", "accuracy", acc, step + 1);
+            best = best.max(acc);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let final_metric = eval_vit(&session, &test, &extras)?;
+    best = best.max(final_metric);
+    Ok(RunResult {
+        tag: spec.tag.to_string(),
+        task: "vit".into(),
+        metric_name: "accuracy".into(),
+        best_metric: best,
+        final_metric,
+        losses,
+        adapter_params: entry.adapter_param_count,
+        trainable_params: entry.trainable_param_count,
+        wall_seconds: wall,
+        step_ms: wall * 1000.0 / spec.cfg.steps.max(1) as f64,
+        extra_metrics: BTreeMap::new(),
+    })
+}
+
+pub fn eval_vit(session: &TrainSession, test: &[images::LabeledImage],
+                extras: &[f32]) -> Result<f64> {
+    let bsz = session.entry.batch_size();
+    let mut preds: Vec<u32> = Vec::new();
+    for batch_idx in Batcher::eval_batches(test.len(), bsz) {
+        let pix: Vec<Vec<f32>> = batch_idx.iter()
+            .map(|&i| test[i].pixels.clone()).collect();
+        let logits = session.eval(
+            &tensors::stack_f32(&pix, &[images::IMG, images::IMG, images::CH]),
+            extras)?;
+        let data = logits.as_f32()?;
+        let n_out = logits.shape()[1];
+        for row in 0..batch_idx.len() {
+            let r = &data[row * n_out..(row + 1) * n_out];
+            let arg = r.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+            preds.push(arg as u32);
+        }
+    }
+    preds.truncate(test.len());
+    let gold: Vec<u32> = test.iter().map(|e| e.label).collect();
+    Ok(cls::accuracy(&preds, &gold))
+}
+
+// ----------------------------------------------------------------- E2E ---
+
+pub struct E2eRunSpec<'a> {
+    pub tag: &'a str,
+    pub cfg: TrainConfig,
+    pub backbone: Option<&'a Path>,
+    pub gen_cases: usize,
+}
+
+pub fn run_e2e(rt: &Runtime, manifest: &Manifest, spec: &E2eRunSpec,
+               log: &EventLog) -> Result<RunResult> {
+    let entry = manifest.get(spec.tag)?;
+    let data = E2eData::new();
+    let seq_len = entry.batch[0].shape[1];
+    let bsz = entry.batch_size();
+    let mut session = TrainSession::new(rt, entry, spec.cfg.seed as i32)?;
+    if let Some(ckpt) = spec.backbone {
+        let named = super::checkpoint::load(ckpt)?;
+        session.load_named(&named)?;
+    }
+    let extras = default_extras(&session.entry, 0.0, &BTreeMap::new());
+    let mut rng = Rng::new(spec.cfg.seed ^ 0xe2e);
+    let mut losses = Vec::new();
+    let t0 = Instant::now();
+    for step in 0..spec.cfg.steps {
+        let mut toks = Vec::with_capacity(bsz);
+        let mut masks = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            let (t, m, _) = data.training_example(&mut rng, seq_len);
+            toks.push(t);
+            masks.push(m);
+        }
+        let batch = [tensors::stack_tokens(&toks),
+                     tensors::stack_f32(&masks, &[seq_len])];
+        let lr = lr_at(step, spec.cfg.steps, spec.cfg.lr, spec.cfg.warmup_frac);
+        let loss = session.step(&batch, lr, spec.cfg.weight_decay, &extras)?;
+        losses.push(loss);
+        log.train_step(spec.tag, "e2e", step, loss);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- generation + n-gram metrics ---
+    let mut gen_rng = Rng::new(spec.cfg.seed ^ 0x9e4);
+    let mut cases: Vec<(Vec<u32>, Vec<Vec<u32>>)> = Vec::new();
+    let mut batch_mrs = Vec::new();
+    for _ in 0..spec.gen_cases {
+        batch_mrs.push(data.sample_mr(&mut gen_rng));
+    }
+    for chunk in batch_mrs.chunks(bsz) {
+        let hyps = greedy_generate(&session, &data, chunk, seq_len, &extras)?;
+        for (mr, hyp) in chunk.iter().zip(hyps) {
+            cases.push((hyp, data.references(mr)));
+        }
+    }
+    let mut extra_metrics: BTreeMap<String, f64> = BTreeMap::new();
+    extra_metrics.insert("bleu".to_string(), ngram::bleu(&cases, 4));
+    extra_metrics.insert("nist".to_string(), ngram::nist(&cases, 5));
+    extra_metrics.insert("meteor".to_string(), ngram::meteor(&cases));
+    extra_metrics.insert("rouge_l".to_string(), ngram::rouge_l(&cases));
+    extra_metrics.insert("cider".to_string(), ngram::cider(&cases));
+    for (k, v) in &extra_metrics {
+        log.eval(spec.tag, "e2e", k, *v, spec.cfg.steps);
+    }
+    let bleu = extra_metrics["bleu"];
+    Ok(RunResult {
+        tag: spec.tag.to_string(),
+        task: "e2e".into(),
+        metric_name: "bleu".into(),
+        best_metric: bleu,
+        final_metric: bleu,
+        losses,
+        adapter_params: entry.adapter_param_count,
+        trainable_params: entry.trainable_param_count,
+        wall_seconds: wall,
+        step_ms: wall * 1000.0 / spec.cfg.steps.max(1) as f64,
+        extra_metrics,
+    })
+}
+
+/// Greedy decoding for a batch of MRs using the eval (logits) artifact.
+/// Feeds the growing sequence each step (O(T^2), T <= 48 — fine on CPU).
+pub fn greedy_generate(session: &TrainSession, data: &E2eData,
+                       mrs: &[crate::data::e2e::Mr], seq_len: usize,
+                       extras: &[f32]) -> Result<Vec<Vec<u32>>> {
+    let bsz = session.entry.batch_size();
+    let mut rows: Vec<Vec<u32>> = mrs.iter()
+        .map(|mr| crate::data::tokenizer::pad_to(data.prompt(mr), seq_len))
+        .collect();
+    let prompt_len = data.prompt(&mrs[0]).len();
+    while rows.len() < bsz {
+        rows.push(rows[0].clone()); // pad batch with copies
+    }
+    let mut done = vec![false; rows.len()];
+    for t in prompt_len..seq_len {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let logits = session.eval(&tensors::stack_tokens(&rows), extras)?;
+        let d = logits.as_f32()?;
+        let vocab = logits.shape()[2];
+        for (b, row) in rows.iter_mut().enumerate() {
+            if done[b] {
+                continue;
+            }
+            let base = (b * seq_len + (t - 1)) * vocab;
+            let next = d[base..base + vocab].iter().enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap()).unwrap().0 as u32;
+            row[t] = next;
+            if next == crate::data::tokenizer::EOS {
+                done[b] = true;
+            }
+        }
+    }
+    Ok(rows.into_iter().take(mrs.len())
+        .map(|row| {
+            let gen: Vec<u32> = row[prompt_len..].iter()
+                .take_while(|&&t| t != crate::data::tokenizer::EOS
+                            && t != crate::data::tokenizer::PAD)
+                .copied().collect();
+            gen
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let total = 100;
+        let base = 0.01;
+        assert!(lr_at(0, total, base, 0.1) < base * 0.2);
+        assert!((lr_at(9, total, base, 0.1) - base).abs() < 1e-6);
+        assert!(lr_at(50, total, base, 0.1) < base);
+        assert!(lr_at(99, total, base, 0.1) < lr_at(50, total, base, 0.1));
+        assert!(lr_at(99, total, base, 0.1) >= 0.0);
+    }
+
+    #[test]
+    fn default_extras_mapping() {
+        use crate::runtime::manifest::*;
+        let entry = ArtifactEntry {
+            tag: "t".into(), model: "vit".into(), method: "qpeft_taylor".into(),
+            task: "img".into(),
+            init_file: "x".into(), train_file: "x".into(), eval_file: "x".into(),
+            frozen: vec![], trainable: vec![],
+            extras: vec!["task_kind".into(), "k_prime".into(),
+                         "quant_levels".into(), "quant_mode".into()],
+            batch: vec![], trainable_param_count: 0, adapter_param_count: 0,
+            total_param_count: 0, cfg: Default::default(),
+            method_kw: [("k".to_string(), 8.0)].into_iter().collect(),
+        };
+        let e = default_extras(&entry, 1.0, &Default::default());
+        assert_eq!(e, vec![1.0, 8.0, 0.0, 0.0]);
+        let ov: std::collections::BTreeMap<String, f32> =
+            [("k_prime".to_string(), 2.0)].into_iter().collect();
+        let e = default_extras(&entry, 0.0, &ov);
+        assert_eq!(e, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+}

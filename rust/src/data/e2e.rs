@@ -1,0 +1,194 @@
+//! Synthetic E2E-NLG substitute (Table 3/4 — DESIGN.md §2).
+//!
+//! Meaning representations over restaurant-domain slots are rendered
+//! through templated realizations with multiple references per MR, mirroring
+//! the structure of Novikova et al.'s E2E dataset: the model must learn
+//! slot->surface mappings and template grammar. Token stream layout:
+//!
+//!   [CLS] <mr tokens> [SEP] <text tokens> [EOS] <pad...>
+//!
+//! with loss_mask = 1 exactly on the text segment (the lm_loss contract in
+//! python/compile/models/decoder.py).
+
+use super::tokenizer::{pad_to, Vocab, CLS, EOS, SEP};
+use crate::util::rng::Rng;
+
+pub const NAMES: &[&str] = &["alimentum", "aromi", "bibimbap", "clowns",
+                             "cocum", "cotto", "fitzbillies", "giraffe",
+                             "strada", "travellers"];
+pub const FOODS: &[&str] = &["chinese", "english", "french", "indian",
+                             "italian", "japanese", "fast", "pub"];
+pub const PRICES: &[&str] = &["cheap", "moderate", "high"];
+pub const AREAS: &[&str] = &["riverside", "city"];
+pub const RATINGS: &[&str] = &["low", "average", "excellent"];
+pub const EXTRA_WORDS: &[&str] = &[
+    "name", "food", "price", "area", "rating", "serves", "is", "a", "it",
+    "has", "restaurant", "in", "the", "an", "with", "prices", "located",
+    "near", "centre", "offering", "cuisine", "place", "rated", "customers",
+    "by", "quality", "range", "priced",
+];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mr {
+    pub name: usize,
+    pub food: usize,
+    pub price: usize,
+    pub area: usize,
+    pub rating: usize,
+}
+
+pub struct E2eData {
+    pub vocab: Vocab,
+}
+
+impl Default for E2eData {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl E2eData {
+    pub fn new() -> E2eData {
+        let mut words: Vec<&str> = Vec::new();
+        for set in [NAMES, FOODS, PRICES, AREAS, RATINGS, EXTRA_WORDS] {
+            for w in set {
+                if !words.contains(w) {
+                    words.push(w);
+                }
+            }
+        }
+        E2eData { vocab: Vocab::new(&words) }
+    }
+
+    pub fn sample_mr(&self, rng: &mut Rng) -> Mr {
+        Mr {
+            name: rng.below(NAMES.len()),
+            food: rng.below(FOODS.len()),
+            price: rng.below(PRICES.len()),
+            area: rng.below(AREAS.len()),
+            rating: rng.below(RATINGS.len()),
+        }
+    }
+
+    /// Slot-value prefix tokens: "name <v> food <v> price <v> area <v>
+    /// rating <v>".
+    pub fn mr_tokens(&self, mr: &Mr) -> Vec<u32> {
+        let v = &self.vocab;
+        vec![
+            v.id("name"), v.id(NAMES[mr.name]),
+            v.id("food"), v.id(FOODS[mr.food]),
+            v.id("price"), v.id(PRICES[mr.price]),
+            v.id("area"), v.id(AREAS[mr.area]),
+            v.id("rating"), v.id(RATINGS[mr.rating]),
+        ]
+    }
+
+    /// All reference realizations of an MR (template bank). The paper's
+    /// E2E has ~arbitrary human references; we use 3 templates.
+    pub fn references(&self, mr: &Mr) -> Vec<Vec<u32>> {
+        let v = &self.vocab;
+        let name = NAMES[mr.name];
+        let food = FOODS[mr.food];
+        let price = PRICES[mr.price];
+        let area = AREAS[mr.area];
+        let rating = RATINGS[mr.rating];
+        let t1: Vec<&str> = vec![
+            name, "is", "a", price, food, "restaurant", "in", "the", area,
+            "with", "an", rating, "rating",
+        ];
+        let t2: Vec<&str> = vec![
+            "the", food, "place", name, "in", "the", area, "has", rating,
+            "quality", "and", price, "prices",
+        ];
+        let t3: Vec<&str> = vec![
+            name, "serves", price, food, "cuisine", "near", "the", area,
+            "centre", "rated", rating, "by", "customers",
+        ];
+        // "and" may be absent from vocab; add safe fallback
+        [t1, t2, t3]
+            .into_iter()
+            .map(|t| t.iter()
+                 .filter(|w| **w != "and" || v.id("and") != super::tokenizer::UNK)
+                 .map(|w| v.id(w)).collect())
+            .collect()
+    }
+
+    /// One training example: (tokens, loss_mask) at fixed seq_len, using a
+    /// randomly chosen reference as the target text.
+    pub fn training_example(&self, rng: &mut Rng, seq_len: usize)
+                            -> (Vec<u32>, Vec<f32>, Mr) {
+        let mr = self.sample_mr(rng);
+        let refs = self.references(&mr);
+        let text = refs[rng.below(refs.len())].clone();
+        let mut toks = vec![CLS];
+        toks.extend(self.mr_tokens(&mr));
+        toks.push(SEP);
+        let text_start = toks.len();
+        toks.extend(&text);
+        toks.push(EOS);
+        let text_end = toks.len();
+        let toks = pad_to(toks, seq_len);
+        let mut mask = vec![0.0f32; seq_len];
+        for m in mask.iter_mut().take(text_end.min(seq_len)).skip(text_start) {
+            *m = 1.0;
+        }
+        (toks, mask, mr)
+    }
+
+    /// Decode prompt for generation: [CLS] mr [SEP].
+    pub fn prompt(&self, mr: &Mr) -> Vec<u32> {
+        let mut toks = vec![CLS];
+        toks.extend(self.mr_tokens(mr));
+        toks.push(SEP);
+        toks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn vocab_fits() {
+        let d = E2eData::new();
+        assert!(d.vocab.len() <= 256);
+    }
+
+    #[test]
+    fn references_mention_all_slots() {
+        let d = E2eData::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let mr = d.sample_mr(&mut rng);
+            for r in d.references(&mr) {
+                assert!(r.contains(&d.vocab.id(NAMES[mr.name])));
+                assert!(r.contains(&d.vocab.id(FOODS[mr.food])));
+                assert!(r.contains(&d.vocab.id(RATINGS[mr.rating])));
+            }
+        }
+    }
+
+    #[test]
+    fn loss_mask_covers_exactly_text() {
+        check_property("e2e mask aligns", 20, |rng| {
+            let d = E2eData::new();
+            let (toks, mask, _) = d.training_example(rng, 48);
+            assert_eq!(toks.len(), 48);
+            let sep = toks.iter().position(|&t| t == SEP).unwrap();
+            // mask zero on MR prefix including SEP
+            assert!(mask[..=sep].iter().all(|&m| m == 0.0));
+            // mask one right after SEP
+            assert_eq!(mask[sep + 1], 1.0);
+        });
+    }
+
+    #[test]
+    fn prompt_is_mr_prefix() {
+        let d = E2eData::new();
+        let mut rng = Rng::new(2);
+        let (toks, _, mr) = d.training_example(&mut rng, 48);
+        let p = d.prompt(&mr);
+        assert_eq!(&toks[..p.len()], &p[..]);
+    }
+}

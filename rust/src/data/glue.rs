@@ -1,0 +1,267 @@
+//! Synthetic GLUE suite (Tables 2 & 5 substitute — DESIGN.md §2).
+//!
+//! Five tasks with the same *shape* as the paper's GLUE subset:
+//!   sst2   sentence -> binary sentiment            (accuracy)
+//!   cola   sentence -> grammatical?                (Matthews corr)
+//!   rte    premise/hypothesis -> entailment?       (accuracy)
+//!   mrpc   pair -> paraphrase?                     (accuracy)
+//!   stsb   pair -> similarity in [0, 5]            (Pearson/Spearman avg)
+//!
+//! Each example is (tokens[T], label f32); pair tasks use the
+//! [CLS] a [SEP] b [EOS] encoding. Labels are latent *rules* of the
+//! grammar, not surface artifacts, so a frozen pretrained backbone helps
+//! and adapter capacity matters — the regime Table 2 probes.
+
+use super::grammar::{Grammar, NOUNS, VERBS};
+use super::tokenizer::{encode_pair, pad_to, CLS, EOS};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Sst2,
+    Cola,
+    Rte,
+    Mrpc,
+    Stsb,
+}
+
+pub const ALL_TASKS: [Task; 5] = [Task::Sst2, Task::Cola, Task::Rte,
+                                  Task::Mrpc, Task::Stsb];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Sst2 => "sst2",
+            Task::Cola => "cola",
+            Task::Rte => "rte",
+            Task::Mrpc => "mrpc",
+            Task::Stsb => "stsb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// 1.0 for the regression task (selects MSE in the AOT graph).
+    pub fn task_kind(&self) -> f32 {
+        if *self == Task::Stsb { 1.0 } else { 0.0 }
+    }
+
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            Task::Cola => "matthews",
+            Task::Stsb => "pearson+spearman/2",
+            _ => "accuracy",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    pub label: f32,
+}
+
+/// Generate one example of `task` at sequence length `seq_len`.
+pub fn example(g: &Grammar, task: Task, rng: &mut Rng, seq_len: usize) -> Example {
+    match task {
+        Task::Sst2 => {
+            let label = rng.chance(0.5);
+            let s = g.sentence(rng, if label { 1 } else { -1 });
+            let mut toks = vec![CLS];
+            toks.extend(g.encode(&s));
+            toks.push(EOS);
+            Example { tokens: pad_to(toks, seq_len), label: label as u32 as f32 }
+        }
+        Task::Cola => {
+            let s = g.sentence(rng, 0);
+            let label = rng.chance(0.5);
+            let words = if label {
+                s.words.clone()
+            } else {
+                g.corrupt_grammar(rng, &s)
+            };
+            let mut toks = vec![CLS];
+            toks.extend(words.iter().map(|w| g.vocab.id(w)));
+            toks.push(EOS);
+            Example { tokens: pad_to(toks, seq_len), label: label as u32 as f32 }
+        }
+        Task::Rte => {
+            // premise: full sentence; hypothesis: "DET subject verb DET
+            // object" — entailed iff roles match the premise.
+            let p = g.sentence(rng, 0);
+            let label = rng.chance(0.5);
+            let (subj, verb, obj) = if label {
+                (p.subject.clone(), p.verb.clone(), p.object.clone())
+            } else {
+                // break one role
+                match rng.below(3) {
+                    0 => (NOUNS[rng.below(NOUNS.len())].to_string(),
+                          p.verb.clone(), p.object.clone()),
+                    1 => (p.subject.clone(),
+                          VERBS[rng.below(VERBS.len())].to_string(),
+                          p.object.clone()),
+                    _ => (p.subject.clone(), p.verb.clone(),
+                          NOUNS[rng.below(NOUNS.len())].to_string()),
+                }
+            };
+            let hyp = [
+                "the".to_string(), subj, verb, "the".to_string(), obj,
+            ];
+            let pa = g.encode(&p);
+            let hb: Vec<u32> = hyp.iter().map(|w| g.vocab.id(w)).collect();
+            Example { tokens: encode_pair(&pa, &hb, seq_len),
+                      label: label as u32 as f32 }
+        }
+        Task::Mrpc => {
+            let a = g.sentence(rng, 0);
+            let label = rng.chance(0.5);
+            let b_words = if label {
+                g.paraphrase(rng, &a)
+            } else {
+                g.sentence(rng, 0).words
+            };
+            let ta = g.encode(&a);
+            let tb: Vec<u32> = b_words.iter().map(|w| g.vocab.id(w)).collect();
+            Example { tokens: encode_pair(&ta, &tb, seq_len),
+                      label: label as u32 as f32 }
+        }
+        Task::Stsb => {
+            // graded similarity: interpolate between paraphrase (5.0),
+            // shared-topic (2-3), and unrelated (0-1) by shared content.
+            let a = g.sentence(rng, 0);
+            let level = rng.below(3);
+            let (b_words, base) = match level {
+                0 => (g.paraphrase(rng, &a), 4.0),
+                1 => {
+                    // same subject, new everything else
+                    let mut b = g.sentence(rng, 0);
+                    let pos = b.words.iter().position(|w| *w == b.subject);
+                    if let Some(p) = pos {
+                        b.words[p] = a.subject.clone();
+                    }
+                    (b.words, 2.0)
+                }
+                _ => (g.sentence(rng, 0).words, 0.0),
+            };
+            let jitter = rng.f32();
+            let ta = g.encode(&a);
+            let tb: Vec<u32> = b_words.iter().map(|w| g.vocab.id(w)).collect();
+            Example { tokens: encode_pair(&ta, &tb, seq_len),
+                      label: base + jitter }
+        }
+    }
+}
+
+/// A full split: deterministic in (task, seed, n).
+pub fn dataset(g: &Grammar, task: Task, seed: u64, n: usize,
+               seq_len: usize) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0x61_75_67 ^ (task as u64) << 32);
+    (0..n).map(|_| example(g, task, &mut rng, seq_len)).collect()
+}
+
+/// Denoising-pretraining pair: (corrupted, clean), 15% token replacement.
+pub fn dae_pair(g: &Grammar, rng: &mut Rng, seq_len: usize) -> (Vec<u32>, Vec<u32>) {
+    let sentiment = if rng.chance(0.5) { 1 } else { -1 };
+    let s = g.sentence(rng, sentiment);
+    let mut toks = vec![CLS];
+    toks.extend(g.encode(&s));
+    toks.push(EOS);
+    let clean = pad_to(toks, seq_len);
+    let vocab_hi = g.vocab.len() as u32;
+    let corrupted: Vec<u32> = clean.iter()
+        .map(|&t| {
+            if t != 0 && rng.chance(0.15) {
+                rng.range(5, vocab_hi as usize) as u32
+            } else {
+                t
+            }
+        })
+        .collect();
+    (corrupted, clean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn deterministic_datasets() {
+        let g = Grammar::new();
+        let a = dataset(&g, Task::Sst2, 7, 32, 24);
+        let b = dataset(&g, Task::Sst2, 7, 32, 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let g = Grammar::new();
+        for task in [Task::Sst2, Task::Cola, Task::Rte, Task::Mrpc] {
+            let ds = dataset(&g, task, 3, 400, 24);
+            let pos = ds.iter().filter(|e| e.label > 0.5).count();
+            assert!(pos > 120 && pos < 280, "{}: {pos}/400", task.name());
+        }
+    }
+
+    #[test]
+    fn stsb_labels_in_range() {
+        let g = Grammar::new();
+        for e in dataset(&g, Task::Stsb, 1, 200, 24) {
+            assert!((0.0..=5.0).contains(&e.label));
+        }
+    }
+
+    #[test]
+    fn token_shape_property() {
+        check_property("glue examples well-formed", 20, |rng| {
+            let g = Grammar::new();
+            let t = *rng.pick(&ALL_TASKS);
+            let e = example(&g, t, rng, 24);
+            assert_eq!(e.tokens.len(), 24);
+            assert_eq!(e.tokens[0], CLS);
+            assert!(e.tokens.iter().all(|&x| (x as usize) < g.vocab.len()));
+        });
+    }
+
+    #[test]
+    fn dae_pair_corrupts_some_tokens() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(5);
+        let mut diffs = 0;
+        for _ in 0..50 {
+            let (c, cl) = dae_pair(&g, &mut rng, 24);
+            assert_eq!(c.len(), 24);
+            diffs += c.iter().zip(&cl).filter(|(a, b)| a != b).count();
+        }
+        assert!(diffs > 20, "too few corruptions: {diffs}");
+    }
+
+    #[test]
+    fn sst2_is_learnable_from_lexicon() {
+        // sanity: a bag-of-words linear rule must separate the classes
+        use super::super::grammar::{NEG_ADJ, POS_ADJ};
+        let g = Grammar::new();
+        let ds = dataset(&g, Task::Sst2, 11, 300, 24);
+        let mut correct = 0;
+        let mut undecided = 0;
+        for e in &ds {
+            let pos = e.tokens.iter()
+                .filter(|&&t| POS_ADJ.contains(&g.vocab.word(t))).count();
+            let neg = e.tokens.iter()
+                .filter(|&&t| NEG_ADJ.contains(&g.vocab.word(t))).count();
+            if pos == neg {
+                undecided += 1;
+            } else if (pos > neg) == (e.label > 0.5) {
+                correct += 1;
+            }
+        }
+        let decided = ds.len() - undecided;
+        assert!(correct as f64 > 0.95 * decided as f64,
+                "lexicon rule acc {correct}/{decided}");
+    }
+}

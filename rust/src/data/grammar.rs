@@ -1,0 +1,237 @@
+//! The synthetic language: a toy probabilistic grammar with a sentiment-
+//! and-semantics-bearing lexicon. All GLUE-substitute tasks (data/glue.rs)
+//! and the pretraining corpus derive from this grammar, so a backbone
+//! pretrained on it learns features the downstream tasks genuinely reuse —
+//! the property the paper's transfer-learning claims rely on (DESIGN.md §2).
+
+use super::tokenizer::Vocab;
+use crate::util::rng::Rng;
+
+pub const NOUNS: &[&str] = &[
+    "cat", "dog", "bird", "chef", "pilot", "teacher", "robot", "violin",
+    "garden", "river", "engine", "novel", "painter", "island", "market",
+    "piano", "doctor", "sailor", "lantern", "bridge",
+];
+pub const VERBS: &[&str] = &[
+    "sees", "finds", "follows", "builds", "paints", "plays", "repairs",
+    "visits", "studies", "watches", "carries", "greets", "admires",
+    "describes", "examines", "observes",
+];
+pub const POS_ADJ: &[&str] = &[
+    "good", "great", "lovely", "bright", "charming", "splendid", "warm",
+    "gentle", "brilliant", "delightful", "graceful", "superb",
+];
+pub const NEG_ADJ: &[&str] = &[
+    "bad", "awful", "gloomy", "broken", "dreadful", "bitter", "harsh",
+    "rusty", "dismal", "bleak", "clumsy", "grim",
+];
+pub const NEU_ADJ: &[&str] = &[
+    "small", "large", "old", "young", "quiet", "round", "distant", "wooden",
+    "early", "narrow",
+];
+pub const DETS: &[&str] = &["the", "a", "every", "some", "this"];
+pub const ADVS: &[&str] = &["quickly", "slowly", "often", "rarely", "calmly", "eagerly"];
+pub const CONJ: &[&str] = &["and", "while", "because"];
+pub const NEGATION: &str = "never";
+
+/// One generated sentence plus the semantic roles the tasks key on.
+#[derive(Clone, Debug)]
+pub struct Sentence {
+    pub words: Vec<String>,
+    pub subject: String,
+    pub verb: String,
+    pub object: String,
+    pub adjectives: Vec<String>,
+    pub negated: bool,
+}
+
+pub struct Grammar {
+    pub vocab: Vocab,
+}
+
+impl Default for Grammar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Grammar {
+    pub fn new() -> Grammar {
+        let mut words: Vec<&str> = Vec::new();
+        for set in [NOUNS, VERBS, POS_ADJ, NEG_ADJ, NEU_ADJ, DETS, ADVS, CONJ] {
+            words.extend_from_slice(set);
+        }
+        words.push(NEGATION);
+        Grammar { vocab: Vocab::new(&words) }
+    }
+
+    /// Sample an adjective with the given sentiment in {-1, 0, +1}.
+    pub fn adjective(&self, rng: &mut Rng, sentiment: i32) -> &'static str {
+        match sentiment {
+            1 => POS_ADJ[rng.below(POS_ADJ.len())],
+            -1 => NEG_ADJ[rng.below(NEG_ADJ.len())],
+            _ => NEU_ADJ[rng.below(NEU_ADJ.len())],
+        }
+    }
+
+    /// DET (ADJ) NOUN VERB (never) DET (ADJ) NOUN (ADV) — the canonical
+    /// grammatical template. `sentiment` biases the adjective draws.
+    pub fn sentence(&self, rng: &mut Rng, sentiment: i32) -> Sentence {
+        let subject = NOUNS[rng.below(NOUNS.len())].to_string();
+        let object = NOUNS[rng.below(NOUNS.len())].to_string();
+        let verb = VERBS[rng.below(VERBS.len())].to_string();
+        let negated = rng.chance(0.15);
+        let mut adjectives = Vec::new();
+        let mut words: Vec<String> = Vec::new();
+        words.push(DETS[rng.below(DETS.len())].into());
+        if rng.chance(0.8) {
+            let s = if rng.chance(0.7) { sentiment } else { 0 };
+            let a = self.adjective(rng, s);
+            adjectives.push(a.to_string());
+            words.push(a.into());
+        }
+        words.push(subject.clone());
+        if negated {
+            words.push(NEGATION.into());
+        }
+        words.push(verb.clone());
+        words.push(DETS[rng.below(DETS.len())].into());
+        if rng.chance(0.6) {
+            let s = if rng.chance(0.7) { sentiment } else { 0 };
+            let a = self.adjective(rng, s);
+            adjectives.push(a.to_string());
+            words.push(a.into());
+        }
+        words.push(object.clone());
+        if rng.chance(0.4) {
+            words.push(ADVS[rng.below(ADVS.len())].into());
+        }
+        Sentence { words, subject, verb, object, adjectives, negated }
+    }
+
+    /// Token ids of a sentence.
+    pub fn encode(&self, s: &Sentence) -> Vec<u32> {
+        s.words.iter().map(|w| self.vocab.id(w)).collect()
+    }
+
+    /// Agrammatical corruption for the CoLA substitute: structural edits
+    /// that break the template (word-order swap across roles, doubled
+    /// determiner, dropped verb).
+    pub fn corrupt_grammar(&self, rng: &mut Rng, s: &Sentence) -> Vec<String> {
+        let mut w = s.words.clone();
+        match rng.below(4) {
+            0 => {
+                // move the verb to the front (aux-less inversion)
+                if let Some(pos) = w.iter().position(|x| *x == s.verb) {
+                    let v = w.remove(pos);
+                    w.insert(0, v);
+                }
+            }
+            1 => {
+                // double determiner
+                let d = DETS[rng.below(DETS.len())].to_string();
+                w.insert(0, d);
+                w.insert(0, DETS[rng.below(DETS.len())].to_string());
+            }
+            2 => {
+                // drop the verb entirely
+                w.retain(|x| *x != s.verb);
+            }
+            _ => {
+                // shuffle a random window of 4
+                if w.len() >= 4 {
+                    let start = rng.below(w.len() - 3);
+                    let mut win: Vec<String> = w[start..start + 4].to_vec();
+                    let orig = win.clone();
+                    rng.shuffle(&mut win);
+                    if win == orig {
+                        win.swap(0, 3);
+                    }
+                    w.splice(start..start + 4, win);
+                }
+            }
+        }
+        w
+    }
+
+    /// Paraphrase for MRPC/STS-B: synonym-free but role-preserving edits
+    /// (determiner swap, adverb add/remove, adjective reorder).
+    pub fn paraphrase(&self, rng: &mut Rng, s: &Sentence) -> Vec<String> {
+        let mut w = s.words.clone();
+        for word in w.iter_mut() {
+            if DETS.contains(&word.as_str()) && rng.chance(0.7) {
+                *word = DETS[rng.below(DETS.len())].to_string();
+            }
+        }
+        if rng.chance(0.5) {
+            if let Some(last) = w.last().cloned() {
+                if ADVS.contains(&last.as_str()) {
+                    w.pop();
+                } else {
+                    w.push(ADVS[rng.below(ADVS.len())].to_string());
+                }
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn vocab_fits_256() {
+        let g = Grammar::new();
+        assert!(g.vocab.len() <= 256);
+        assert!(g.vocab.len() > 80);
+    }
+
+    #[test]
+    fn sentence_contains_roles() {
+        check_property("sentence roles present", 30, |rng| {
+            let g = Grammar::new();
+            let s = g.sentence(rng, 1);
+            assert!(s.words.contains(&s.subject));
+            assert!(s.words.contains(&s.verb));
+            assert!(s.words.contains(&s.object));
+            assert!(s.words.len() >= 4 && s.words.len() <= 12);
+        });
+    }
+
+    #[test]
+    fn sentiment_bias_shows_up() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(11);
+        let mut pos = 0;
+        let mut neg = 0;
+        for _ in 0..300 {
+            let s = g.sentence(&mut rng, 1);
+            pos += s.adjectives.iter().filter(|a| POS_ADJ.contains(&a.as_str())).count();
+            neg += s.adjectives.iter().filter(|a| NEG_ADJ.contains(&a.as_str())).count();
+        }
+        assert!(pos > 5 * neg.max(1), "pos {pos} neg {neg}");
+    }
+
+    #[test]
+    fn corruption_changes_word_sequence() {
+        check_property("corruption differs", 30, |rng| {
+            let g = Grammar::new();
+            let s = g.sentence(rng, 0);
+            let c = g.corrupt_grammar(rng, &s);
+            assert_ne!(c, s.words);
+        });
+    }
+
+    #[test]
+    fn encode_uses_no_unk() {
+        let g = Grammar::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let s = g.sentence(&mut rng, -1);
+            let ids = g.encode(&s);
+            assert!(ids.iter().all(|&i| i >= super::super::tokenizer::FIRST_WORD));
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Synthetic shape/texture image corpus (ViT transfer substitute,
+//! Tables 6-10 — DESIGN.md §2). 16x16x3 f32 images in [0, 1].
+//!
+//! A class is a (pattern, palette) combination. The *pretrain* task uses
+//! 20 classes (all 5 patterns x 4 palettes); the *transfer* task uses 10
+//! held-out pairings at shifted phases/noise — same features, new labels,
+//! i.e. genuine transfer as in ImageNet-21k -> CIFAR10.
+
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const CH: usize = 3;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Pattern {
+    HStripes,
+    VStripes,
+    Checker,
+    Blob,
+    Cross,
+}
+
+pub const PATTERNS: [Pattern; 5] = [Pattern::HStripes, Pattern::VStripes,
+                                    Pattern::Checker, Pattern::Blob,
+                                    Pattern::Cross];
+
+/// RGB palettes (foreground, background).
+pub const PALETTES: [([f32; 3], [f32; 3]); 4] = [
+    ([0.9, 0.2, 0.2], [0.1, 0.1, 0.3]),
+    ([0.2, 0.9, 0.3], [0.3, 0.1, 0.1]),
+    ([0.2, 0.4, 0.9], [0.3, 0.3, 0.1]),
+    ([0.9, 0.9, 0.2], [0.1, 0.3, 0.3]),
+];
+
+fn pattern_value(p: Pattern, x: usize, y: usize, phase: usize, period: usize) -> bool {
+    match p {
+        Pattern::HStripes => ((y + phase) / period) % 2 == 0,
+        Pattern::VStripes => ((x + phase) / period) % 2 == 0,
+        Pattern::Checker => (((x + phase) / period) + ((y + phase) / period)) % 2 == 0,
+        Pattern::Blob => {
+            let cx = (IMG / 2 + phase % 5) as f32;
+            let cy = (IMG / 2 + (phase / 5) % 5) as f32;
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            dx * dx + dy * dy < (period * 2) as f32 * (period * 2) as f32
+        }
+        Pattern::Cross => {
+            let c = IMG / 2 + phase % 3;
+            x.abs_diff(c) < period || y.abs_diff(c) < period
+        }
+    }
+}
+
+/// Render one image of (pattern, palette) with random phase/period/noise.
+pub fn render(rng: &mut Rng, pattern: Pattern, palette: usize,
+              noise: f32) -> Vec<f32> {
+    let (fg, bg) = PALETTES[palette];
+    let phase = rng.below(8);
+    let period = rng.range(2, 5);
+    let mut img = vec![0.0f32; IMG * IMG * CH];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let on = pattern_value(pattern, x, y, phase, period);
+            let col = if on { fg } else { bg };
+            for c in 0..CH {
+                let v = col[c] + noise * rng.normal() as f32;
+                img[(y * IMG + x) * CH + c] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// Class id -> (pattern, palette) for the 20-class pretrain task.
+pub fn pretrain_class(id: usize) -> (Pattern, usize) {
+    assert!(id < 20);
+    (PATTERNS[id % 5], id / 5)
+}
+
+/// Class id -> (pattern, palette) for the 10-class transfer task:
+/// held-out pairings (diagonal-shifted) the pretrain task never used as
+/// *labels* (features transfer, labels do not).
+pub fn transfer_class(id: usize) -> (Pattern, usize) {
+    assert!(id < 10);
+    (PATTERNS[(id * 2 + 1) % 5], (id + id / 5 + 1) % 4)
+}
+
+#[derive(Clone, Debug)]
+pub struct LabeledImage {
+    pub pixels: Vec<f32>,
+    pub label: u32,
+}
+
+pub fn dataset(seed: u64, n: usize, transfer: bool, noise: f32) -> Vec<LabeledImage> {
+    let mut rng = Rng::new(seed ^ if transfer { 0x1000 } else { 0 });
+    let n_classes = if transfer { 10 } else { 20 };
+    (0..n)
+        .map(|_| {
+            let label = rng.below(n_classes);
+            let (p, pal) = if transfer {
+                transfer_class(label)
+            } else {
+                pretrain_class(label)
+            };
+            LabeledImage { pixels: render(&mut rng, p, pal, noise),
+                           label: label as u32 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn image_shape_and_range() {
+        check_property("images in range", 20, |rng| {
+            let p = *rng.pick(&PATTERNS);
+            let pal = rng.below(4);
+            let img = render(rng, p, pal, 0.05);
+            assert_eq!(img.len(), IMG * IMG * CH);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        });
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean-pixel distance between two classes exceeds within-class
+        let mut rng = Rng::new(9);
+        let mean = |p: Pattern, pal: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut acc = vec![0.0f32; IMG * IMG * CH];
+            for _ in 0..10 {
+                for (a, b) in acc.iter_mut().zip(render(rng, p, pal, 0.02)) {
+                    *a += b / 10.0;
+                }
+            }
+            acc
+        };
+        let a = mean(Pattern::HStripes, 0, &mut rng);
+        let b = mean(Pattern::Blob, 2, &mut rng);
+        let a2 = mean(Pattern::HStripes, 0, &mut rng);
+        let d_between: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        let d_within: f32 = a.iter().zip(&a2).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d_between > 2.0 * d_within, "between {d_between} within {d_within}");
+    }
+
+    #[test]
+    fn dataset_deterministic_and_labeled() {
+        let a = dataset(4, 50, true, 0.05);
+        let b = dataset(4, 50, true, 0.05);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+        assert!(a.iter().all(|e| e.label < 10));
+        assert!(dataset(4, 50, false, 0.05).iter().any(|e| e.label >= 10));
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic data substrates (the paper's datasets are substituted per
+//! DESIGN.md §2): a toy probabilistic grammar, GLUE-shaped tasks, an
+//! E2E-NLG-shaped generation corpus, and a shape/texture image corpus —
+//! all seeded and exactly reproducible.
+
+pub mod batcher;
+pub mod e2e;
+pub mod glue;
+pub mod grammar;
+pub mod images;
+pub mod tokenizer;

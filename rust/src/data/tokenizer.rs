@@ -1,0 +1,114 @@
+//! Word-level vocabulary shared by every text substrate. Token ids fit
+//! the AOT graphs' vocab=256; ids 0..4 are reserved specials.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const EOS: u32 = 3;
+pub const UNK: u32 = 4;
+pub const FIRST_WORD: u32 = 5;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    pub fn new(words: &[&str]) -> Vocab {
+        let mut id_to_word: Vec<String> =
+            ["<pad>", "<cls>", "<sep>", "<eos>", "<unk>"]
+                .iter().map(|s| s.to_string()).collect();
+        for w in words {
+            assert!(!id_to_word.iter().any(|x| x == w), "duplicate word {w}");
+            id_to_word.push(w.to_string());
+        }
+        assert!(id_to_word.len() <= 256, "vocab exceeds the AOT graphs' 256");
+        let word_to_id = id_to_word.iter().enumerate()
+            .map(|(i, w)| (w.clone(), i as u32)).collect();
+        Vocab { word_to_id, id_to_word }
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        *self.word_to_id.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        self.id_to_word.get(id as usize).map(|s| s.as_str()).unwrap_or("<bad>")
+    }
+
+    pub fn encode(&self, words: &[&str]) -> Vec<u32> {
+        words.iter().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD && i != CLS && i != SEP && i != EOS)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Pad/truncate a token sequence to exactly `len`.
+pub fn pad_to(mut toks: Vec<u32>, len: usize) -> Vec<u32> {
+    toks.truncate(len);
+    while toks.len() < len {
+        toks.push(PAD);
+    }
+    toks
+}
+
+/// [CLS] a... [SEP] b... [EOS], padded to `len` (pair-task encoding).
+pub fn encode_pair(a: &[u32], b: &[u32], len: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(len);
+    out.push(CLS);
+    out.extend_from_slice(a);
+    out.push(SEP);
+    out.extend_from_slice(b);
+    out.push(EOS);
+    pad_to(out, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = Vocab::new(&["cat", "dog", "runs"]);
+        let ids = v.encode(&["dog", "runs", "cat"]);
+        assert_eq!(v.decode(&ids), "dog runs cat");
+        assert_eq!(v.id("zebra"), UNK);
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let v = Vocab::new(&["a"]);
+        assert_eq!(v.id("a"), FIRST_WORD);
+        assert_eq!(v.word(PAD), "<pad>");
+    }
+
+    #[test]
+    fn pair_encoding_layout() {
+        let e = encode_pair(&[10, 11], &[12], 8);
+        assert_eq!(e, vec![CLS, 10, 11, SEP, 12, EOS, PAD, PAD]);
+        assert_eq!(e.len(), 8);
+    }
+
+    #[test]
+    fn pad_truncates() {
+        assert_eq!(pad_to(vec![1, 2, 3, 4], 2), vec![1, 2]);
+        assert_eq!(pad_to(vec![1], 3), vec![1, 0, 0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Quantum-PEFT reproduction — Layer-3 Rust coordinator.
+//!
+//! The paper's contribution (quantum unitary PEFT parameterizations) lives
+//! in the AOT-compiled JAX/Pallas artifacts under `artifacts/`; this crate
+//! owns everything at run time: the PJRT runtime that loads and executes
+//! those artifacts, synthetic data substrates, evaluation metrics, the
+//! fine-tuning coordinator (training sessions, sweeps, checkpoints), a
+//! pure-Rust mirror of the unitary math (Figure 6 benches, accounting),
+//! and table/report generation for every experiment in the paper.
+//!
+//! Python never runs on any path in this crate — `make artifacts` is the
+//! only Python invocation in the whole system.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod peft;
+pub mod quantum;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,150 @@
+//! Classification/regression metrics for the GLUE-substitute tables:
+//! accuracy, F1, Matthews correlation (CoLA), Pearson & Spearman (STS-B).
+
+pub fn accuracy(pred: &[u32], gold: &[u32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(gold).filter(|(a, b)| a == b).count() as f64
+        / pred.len() as f64
+}
+
+/// Binary F1 (positive class = 1).
+pub fn f1(pred: &[u32], gold: &[u32]) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 1).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 0).count() as f64;
+    let fnn = pred.iter().zip(gold).filter(|(&p, &g)| p == 0 && g == 1).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    2.0 * tp / (2.0 * tp + fp + fnn)
+}
+
+/// Matthews correlation coefficient (binary) — the CoLA metric.
+pub fn matthews(pred: &[u32], gold: &[u32]) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 1).count() as f64;
+    let tn = pred.iter().zip(gold).filter(|(&p, &g)| p == 0 && g == 0).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(&p, &g)| p == 1 && g == 0).count() as f64;
+    let fnn = pred.iter().zip(gold).filter(|(&p, &g)| p == 0 && g == 1).count() as f64;
+    let den = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if den == 0.0 {
+        return 0.0;
+    }
+    (tp * tn - fp * fnn) / den
+}
+
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Average ranks with ties (fractional ranking).
+fn ranks(x: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let mut r = vec![0.0; x.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// The STS-B reported metric: (Pearson + Spearman) / 2.
+pub fn stsb_corr(pred: &[f64], gold: &[f64]) -> f64 {
+    (pearson(pred, gold) + spearman(pred, gold)) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 0, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[1, 1], &[1, 1]), 1.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn matthews_bounds_and_signs() {
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_linear_invariance() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg: Vec<f64> = x.iter().map(|v| -2.0 * v).collect();
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_invariance() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y: Vec<f64> = x.iter().map(|v| f64::exp(*v)).collect(); // nonlinear monotone
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_handle_ties() {
+        assert_eq!(ranks(&[1.0, 2.0, 2.0, 3.0]), vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn bounds_property() {
+        check_property("classification metrics bounded", 25, |rng: &mut Rng| {
+            let n = rng.range(4, 60);
+            let p: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+            let g: Vec<u32> = (0..n).map(|_| rng.below(2) as u32).collect();
+            assert!((0.0..=1.0).contains(&accuracy(&p, &g)));
+            assert!((0.0..=1.0).contains(&f1(&p, &g)));
+            let m = matthews(&p, &g);
+            assert!((-1.0..=1.0).contains(&m), "mcc {m}");
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            assert!(pearson(&x, &y).abs() <= 1.0 + 1e-9);
+            assert!(spearman(&x, &y).abs() <= 1.0 + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation metrics, mirrored after the paper's reporting: GLUE
+//! (accuracy / Matthews / Pearson+Spearman) and E2E NLG
+//! (BLEU / NIST / METEOR / ROUGE-L / CIDEr).
+
+pub mod classification;
+pub mod ngram;

@@ -1,0 +1,350 @@
+//! N-gram generation metrics for the E2E table (Table 3): BLEU, NIST,
+//! METEOR (unigram-F variant), ROUGE-L, CIDEr. All corpus-level with
+//! multi-reference support, operating on token-id sequences.
+
+use std::collections::HashMap;
+
+type Gram = Vec<u32>;
+
+fn ngrams(seq: &[u32], n: usize) -> HashMap<Gram, usize> {
+    let mut m = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU-4 with brevity penalty and +1 smoothing on higher orders
+/// (the standard NLG setup). `cases`: (hypothesis, references).
+pub fn bleu(cases: &[(Vec<u32>, Vec<Vec<u32>>)], max_n: usize) -> f64 {
+    let mut match_n = vec![0usize; max_n];
+    let mut total_n = vec![0usize; max_n];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, refs) in cases {
+        hyp_len += hyp.len();
+        // closest reference length
+        ref_len += refs.iter()
+            .map(|r| r.len())
+            .min_by_key(|&l| (l as i64 - hyp.len() as i64).abs())
+            .unwrap_or(0);
+        for n in 1..=max_n {
+            let h = ngrams(hyp, n);
+            let mut matches = 0usize;
+            for (g, &c) in &h {
+                let max_ref = refs.iter()
+                    .map(|r| *ngrams(r, n).get(g).unwrap_or(&0))
+                    .max().unwrap_or(0);
+                matches += c.min(max_ref);
+            }
+            match_n[n - 1] += matches;
+            total_n[n - 1] += hyp.len().saturating_sub(n - 1);
+        }
+    }
+    let mut logsum = 0.0;
+    for n in 0..max_n {
+        let (num, den) = if n == 0 {
+            (match_n[0] as f64, total_n[0] as f64)
+        } else {
+            // +1 smoothing for higher orders
+            (match_n[n] as f64 + 1.0, total_n[n] as f64 + 1.0)
+        };
+        if den == 0.0 || num == 0.0 {
+            return 0.0;
+        }
+        logsum += (num / den).ln() / max_n as f64;
+    }
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    bp * logsum.exp()
+}
+
+/// Corpus NIST-5: information-weighted n-gram precision. Info weights are
+/// computed from the reference corpus; score is the standard NIST sum with
+/// its length penalty.
+pub fn nist(cases: &[(Vec<u32>, Vec<Vec<u32>>)], max_n: usize) -> f64 {
+    // reference-corpus n-gram counts for info weights
+    let mut ref_counts: Vec<HashMap<Gram, usize>> = vec![HashMap::new(); max_n + 1];
+    let mut n_ref_words = 0usize;
+    for (_, refs) in cases {
+        for r in refs {
+            n_ref_words += r.len();
+            for n in 1..=max_n {
+                for (g, c) in ngrams(r, n) {
+                    *ref_counts[n].entry(g).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let info = |g: &Gram| -> f64 {
+        let n = g.len();
+        let c_full = *ref_counts[n].get(g).unwrap_or(&0) as f64;
+        if c_full == 0.0 {
+            return 0.0;
+        }
+        let c_prefix = if n == 1 {
+            n_ref_words as f64
+        } else {
+            *ref_counts[n - 1].get(&g[..n - 1].to_vec()).unwrap_or(&1) as f64
+        };
+        (c_prefix / c_full).log2().max(0.0)
+    };
+    let mut score = 0.0;
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for n in 1..=max_n {
+        let mut num = 0.0;
+        let mut den = 0usize;
+        for (hyp, refs) in cases {
+            if n == 1 {
+                hyp_len += hyp.len();
+                ref_len += refs.iter().map(|r| r.len()).sum::<usize>()
+                    / refs.len().max(1);
+            }
+            let h = ngrams(hyp, n);
+            let mut ref_merged: HashMap<Gram, usize> = HashMap::new();
+            for r in refs {
+                for (g, c) in ngrams(r, n) {
+                    let e = ref_merged.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, &c) in &h {
+                let m = c.min(*ref_merged.get(g).unwrap_or(&0));
+                num += m as f64 * info(g);
+            }
+            den += hyp.len().saturating_sub(n - 1);
+        }
+        if den > 0 {
+            score += num / den as f64;
+        }
+    }
+    // NIST length penalty: exp(beta * log^2(min(1, Lh/Lr)))
+    let ratio = (hyp_len as f64 / ref_len.max(1) as f64).min(1.0);
+    let beta = -(0.5f64.ln()) / (1.5f64.ln() * 1.5f64.ln());
+    let penalty = (-beta * ratio.ln() * ratio.ln()).exp();
+    score * penalty
+}
+
+/// ROUGE-L: corpus-mean LCS F-measure against the best reference.
+pub fn rouge_l(cases: &[(Vec<u32>, Vec<Vec<u32>>)]) -> f64 {
+    fn lcs(a: &[u32], b: &[u32]) -> usize {
+        let mut dp = vec![0usize; b.len() + 1];
+        for &x in a {
+            let mut prev = 0;
+            for (j, &y) in b.iter().enumerate() {
+                let cur = dp[j + 1];
+                dp[j + 1] = if x == y { prev + 1 } else { dp[j + 1].max(dp[j]) };
+                prev = cur;
+            }
+        }
+        dp[b.len()]
+    }
+    let beta2 = 1.2f64 * 1.2;
+    let mut total = 0.0;
+    for (hyp, refs) in cases {
+        let mut best = 0.0f64;
+        for r in refs {
+            if hyp.is_empty() || r.is_empty() {
+                continue;
+            }
+            let l = lcs(hyp, r) as f64;
+            let p = l / hyp.len() as f64;
+            let rc = l / r.len() as f64;
+            if p + rc > 0.0 {
+                let f = (1.0 + beta2) * p * rc / (rc + beta2 * p);
+                best = best.max(f);
+            }
+        }
+        total += best;
+    }
+    total / cases.len().max(1) as f64
+}
+
+/// METEOR (exact-match variant): unigram F_{9P R/(R+9P)} with the
+/// fragmentation penalty over contiguous match chunks.
+pub fn meteor(cases: &[(Vec<u32>, Vec<Vec<u32>>)]) -> f64 {
+    let mut total = 0.0;
+    for (hyp, refs) in cases {
+        let mut best = 0.0f64;
+        for r in refs {
+            // greedy left-to-right alignment on exact matches
+            let mut used = vec![false; r.len()];
+            let mut align: Vec<Option<usize>> = Vec::with_capacity(hyp.len());
+            for &h in hyp {
+                let mut found = None;
+                for (j, &rv) in r.iter().enumerate() {
+                    if !used[j] && rv == h {
+                        found = Some(j);
+                        break;
+                    }
+                }
+                if let Some(j) = found {
+                    used[j] = true;
+                }
+                align.push(found);
+            }
+            let m = align.iter().flatten().count() as f64;
+            if m == 0.0 {
+                continue;
+            }
+            let p = m / hyp.len() as f64;
+            let rc = m / r.len() as f64;
+            let fmean = 10.0 * p * rc / (rc + 9.0 * p);
+            // chunks: maximal runs of consecutive aligned positions
+            let mut chunks = 0usize;
+            let mut prev: Option<usize> = None;
+            for a in &align {
+                match (a, prev) {
+                    (Some(j), Some(pj)) if *j == pj + 1 => {}
+                    (Some(_), _) => chunks += 1,
+                    (None, _) => {}
+                }
+                prev = *a;
+            }
+            let frag = chunks as f64 / m;
+            let score = fmean * (1.0 - 0.5 * frag.powi(3));
+            best = best.max(score);
+        }
+        total += best;
+    }
+    total / cases.len().max(1) as f64
+}
+
+/// CIDEr: mean tf-idf cosine over n = 1..4, idf from the reference corpus,
+/// scaled by 10 as in the original metric.
+pub fn cider(cases: &[(Vec<u32>, Vec<Vec<u32>>)]) -> f64 {
+    let max_n = 4;
+    let n_docs = cases.len() as f64;
+    // document frequency of each n-gram over reference sets
+    let mut df: Vec<HashMap<Gram, f64>> = vec![HashMap::new(); max_n + 1];
+    for (_, refs) in cases {
+        for n in 1..=max_n {
+            let mut seen: HashMap<Gram, bool> = HashMap::new();
+            for r in refs {
+                for g in ngrams(r, n).into_keys() {
+                    seen.insert(g, true);
+                }
+            }
+            for g in seen.into_keys() {
+                *df[n].entry(g).or_insert(0.0) += 1.0;
+            }
+        }
+    }
+    let tfidf = |seq: &[u32], n: usize| -> HashMap<Gram, f64> {
+        let counts = ngrams(seq, n);
+        let total: usize = counts.values().sum();
+        counts.into_iter()
+            .map(|(g, c)| {
+                // standard CIDEr idf: log(N / df), df >= 1
+                let idf = (n_docs / df[n].get(&g).copied().unwrap_or(0.0).max(1.0))
+                    .ln().max(0.0);
+                (g, c as f64 / total.max(1) as f64 * idf)
+            })
+            .collect()
+    };
+    let cosine = |a: &HashMap<Gram, f64>, b: &HashMap<Gram, f64>| -> f64 {
+        let dot: f64 = a.iter()
+            .map(|(g, v)| v * b.get(g).copied().unwrap_or(0.0)).sum();
+        let na: f64 = a.values().map(|v| v * v).sum::<f64>().sqrt();
+        let nb: f64 = b.values().map(|v| v * v).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 { 0.0 } else { dot / (na * nb) }
+    };
+    let mut total = 0.0;
+    for (hyp, refs) in cases {
+        let mut case_score = 0.0;
+        for n in 1..=max_n {
+            let h = tfidf(hyp, n);
+            let mut s = 0.0;
+            for r in refs {
+                s += cosine(&h, &tfidf(r, n));
+            }
+            case_score += s / refs.len().max(1) as f64 / max_n as f64;
+        }
+        total += case_score;
+    }
+    10.0 * total / cases.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+    use crate::util::rng::Rng;
+
+    fn perfect_case() -> Vec<(Vec<u32>, Vec<Vec<u32>>)> {
+        vec![
+            (vec![5, 6, 7, 8, 9, 10], vec![vec![5, 6, 7, 8, 9, 10]]),
+            (vec![11, 12, 13, 14, 15], vec![vec![11, 12, 13, 14, 15],
+                                            vec![11, 12, 13, 20, 21]]),
+        ]
+    }
+
+    #[test]
+    fn perfect_hypothesis_maxes_metrics() {
+        let c = perfect_case();
+        assert!(bleu(&c, 4) > 0.99, "bleu {}", bleu(&c, 4));
+        assert!((rouge_l(&c) - 1.0).abs() < 1e-9);
+        assert!(meteor(&c) > 0.99);
+        assert!(cider(&c) > 5.0);
+        assert!(nist(&c, 5) > 1.0);
+    }
+
+    #[test]
+    fn disjoint_hypothesis_scores_zero() {
+        let c = vec![(vec![100u32, 101, 102, 103],
+                      vec![vec![5u32, 6, 7, 8, 9]])];
+        assert_eq!(bleu(&c, 4), 0.0);
+        assert_eq!(rouge_l(&c), 0.0);
+        assert_eq!(meteor(&c), 0.0);
+        assert!(cider(&c) < 1e-9);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_bites() {
+        let full = vec![(vec![5u32, 6, 7, 8, 9, 10, 11, 12],
+                         vec![vec![5u32, 6, 7, 8, 9, 10, 11, 12]])];
+        let short = vec![(vec![5u32, 6, 7, 8],
+                          vec![vec![5u32, 6, 7, 8, 9, 10, 11, 12]])];
+        assert!(bleu(&short, 4) < bleu(&full, 4));
+    }
+
+    #[test]
+    fn metrics_bounded_property() {
+        check_property("ngram metrics bounded", 15, |rng| {
+            let mk = |len: usize, r: &mut Rng| -> Vec<u32> {
+                (0..len).map(|_| r.range(5, 30) as u32).collect()
+            };
+            let cases: Vec<(Vec<u32>, Vec<Vec<u32>>)> = (0..4)
+                .map(|_| {
+                    let h = mk(rng.range(1, 15), rng);
+                    let refs = (0..rng.range(1, 4))
+                        .map(|_| mk(rng.range(1, 15), rng)).collect();
+                    (h, refs)
+                })
+                .collect();
+            let b = bleu(&cases, 4);
+            assert!((0.0..=1.0).contains(&b), "bleu {b}");
+            let r = rouge_l(&cases);
+            assert!((0.0..=1.0).contains(&r), "rouge {r}");
+            let m = meteor(&cases);
+            assert!((0.0..=1.0).contains(&m), "meteor {m}");
+            assert!(nist(&cases, 5) >= 0.0);
+            assert!(cider(&cases) >= 0.0);
+        });
+    }
+
+    #[test]
+    fn rouge_prefers_longer_overlap() {
+        let better = vec![(vec![5u32, 6, 7, 8, 20],
+                           vec![vec![5u32, 6, 7, 8, 9]])];
+        let worse = vec![(vec![5u32, 20, 21, 22, 23],
+                          vec![vec![5u32, 6, 7, 8, 9]])];
+        assert!(rouge_l(&better) > rouge_l(&worse));
+    }
+}

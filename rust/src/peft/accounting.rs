@@ -1,0 +1,141 @@
+//! Analytic trainable-parameter / storage accounting (Table 1, Table 5,
+//! Table 4 memory column) — mirror of python/compile/quantum/accounting.py.
+
+use crate::quantum::{pauli, qsd};
+
+pub fn lora_params(n: usize, m: usize, k: usize) -> usize {
+    (n + m) * k
+}
+
+pub fn adalora_params(n: usize, m: usize, k: usize) -> usize {
+    (n + m) * k + k
+}
+
+pub fn loha_params(n: usize, m: usize, k: usize) -> usize {
+    2 * (n + m) * k
+}
+
+pub fn lokr_params(n: usize, m: usize, k: usize, f: usize) -> usize {
+    f * f + (n / f + m / f) * k
+}
+
+fn lower_params_count(n: usize, k: usize) -> usize {
+    crate::quantum::mappings::lower_params_count(n, k)
+}
+
+/// Pauli Q_P on both sides + K-dim diagonal; QSD for non-power-of-two dims.
+pub fn qpeft_pauli_params(n: usize, m: usize, k: usize, l: usize) -> usize {
+    let side = |d: usize| -> usize {
+        if d >= 2 && d.is_power_of_two() {
+            pauli::num_params(d, l)
+        } else {
+            qsd::num_params(d, l)
+        }
+    };
+    side(n) + side(m) + k
+}
+
+/// Taylor mapping both sides + diagonal (2NK - K^2 in the paper's count).
+pub fn qpeft_taylor_params(n: usize, m: usize, k: usize, k_prime: usize) -> usize {
+    lower_params_count(n, k_prime) + lower_params_count(m, k_prime) + k
+}
+
+/// One Table-1 model geometry: PEFT on q/v projections.
+pub struct ModelGeom {
+    pub name: &'static str,
+    pub dim: usize,
+    pub sites: usize,
+}
+
+pub const TABLE1_MODELS: [ModelGeom; 3] = [
+    ModelGeom { name: "DeBERTaV3-base", dim: 768, sites: 24 },
+    ModelGeom { name: "Llama-3.1-405B", dim: 16384, sites: 252 },
+    ModelGeom { name: "GPT-4 (assumed 120x24576)", dim: 24576, sites: 240 },
+];
+
+pub struct Table1Row {
+    pub model: &'static str,
+    pub rank: usize,
+    pub lora_params: usize,
+    pub qpeft_params: usize,
+}
+
+impl Table1Row {
+    pub fn lora_bytes(&self) -> usize {
+        self.lora_params * 4
+    }
+    pub fn qpeft_bytes(&self) -> usize {
+        self.qpeft_params * 4
+    }
+}
+
+pub fn table1() -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for geom in &TABLE1_MODELS {
+        for &k in &[1usize, 16, 256] {
+            rows.push(Table1Row {
+                model: geom.name,
+                rank: k,
+                lora_params: geom.sites * lora_params(geom.dim, geom.dim, k),
+                qpeft_params: geom.sites
+                    * qpeft_pauli_params(geom.dim, geom.dim, k, 1),
+            });
+        }
+    }
+    rows
+}
+
+/// Optimizer-state bytes for AdamW fine-tuning: params + grads + m + v,
+/// 4 bytes each — the "Memory Ratio" column of Tables 2/4 is the ratio of
+/// this quantity across methods.
+pub fn adamw_state_bytes(trainable_params: usize) -> usize {
+    trainable_params * 4 * 4
+}
+
+/// Lie-parameter storage under n-bit group quantization: n + 32/g bits
+/// per parameter (fp16 scale + zero per group) — §4.2 "Quantization".
+pub fn quantized_bits_per_param(n_bits: f64, group: usize) -> f64 {
+    n_bits + 32.0 / group as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lora_matches_paper() {
+        let rows = table1();
+        let deberta_k1 = rows.iter()
+            .find(|r| r.model.starts_with("DeBERTa") && r.rank == 1).unwrap();
+        assert_eq!(deberta_k1.lora_params, 36_864);         // paper: 36.9K
+        let deberta_k16 = rows.iter()
+            .find(|r| r.model.starts_with("DeBERTa") && r.rank == 16).unwrap();
+        assert_eq!(deberta_k16.lora_params, 589_824);       // paper: 589.8K
+        let llama_k1 = rows.iter()
+            .find(|r| r.model.starts_with("Llama") && r.rank == 1).unwrap();
+        assert_eq!(llama_k1.lora_params, 8_257_536);        // paper: 8.26M
+    }
+
+    #[test]
+    fn qpeft_always_orders_of_magnitude_smaller_at_high_rank() {
+        for r in table1() {
+            if r.rank >= 16 {
+                assert!(r.qpeft_params * 10 < r.lora_params,
+                        "{} K={}", r.model, r.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn python_rust_agreement() {
+        // values cross-checked against compile.quantum.accounting
+        assert_eq!(qpeft_pauli_params(64, 64, 3, 1), 35);
+        assert_eq!(qpeft_taylor_params(32, 32, 4, 4), 2 * 118 + 4);
+        assert_eq!(lora_params(768, 768, 1) * 24, 36_864);
+    }
+
+    #[test]
+    fn quantized_storage_formula() {
+        assert!((quantized_bits_per_param(1.0, 128) - 1.25).abs() < 1e-12);
+    }
+}

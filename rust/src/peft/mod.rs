@@ -1,0 +1,5 @@
+//! PEFT-side host logic: analytic accounting (Tables 1/4/5) and frozen
+//! base-model quantization (Tables 6/7).
+
+pub mod accounting;
+pub mod quantization;

@@ -1,0 +1,94 @@
+//! Host-side groupwise integer quantization of *frozen* base weights
+//! (Table 6's 3-bit ViT backbone, §B.3). Mirrors the formula of §4.2:
+//!   w_q = round((w - mu) / beta) * beta + mu,  beta = range / (2^n - 1)
+//! applied by the coordinator to pretrained checkpoints before feeding
+//! them to the fine-tuning artifacts (adapters stay full precision; QAT
+//! of Lie parameters happens *inside* the graph via runtime extras).
+
+/// Quantize a flat f32 buffer in place, groups of `g`, `bits`-bit levels.
+pub fn quantize_inplace(w: &mut [f32], bits: u32, g: usize) {
+    assert!(bits >= 1 && bits <= 16);
+    let levels = ((1u32 << bits) - 1) as f32;
+    for chunk in w.chunks_mut(g) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in chunk.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let beta = (hi - lo) / levels;
+        if beta <= 0.0 || !beta.is_finite() {
+            continue; // constant group: exact already
+        }
+        for x in chunk.iter_mut() {
+            *x = ((*x - lo) / beta).round() * beta + lo;
+        }
+    }
+}
+
+/// Storage bytes of a quantized buffer: n bits per weight + fp16 scale
+/// and zero point per group.
+pub fn quantized_storage_bytes(len: usize, bits: u32, g: usize) -> usize {
+    let payload_bits = len * bits as usize;
+    let groups = len.div_ceil(g);
+    payload_bits.div_ceil(8) + groups * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn high_bits_nearly_exact() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let mut w = orig.clone();
+        quantize_inplace(&mut w, 16, 128);
+        for (a, b) in w.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_step() {
+        let mut rng = Rng::new(2);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        for bits in [1u32, 2, 3, 4, 8] {
+            let mut w = orig.clone();
+            quantize_inplace(&mut w, bits, 64);
+            let levels = ((1u32 << bits) - 1) as f32;
+            for (grp_w, grp_o) in w.chunks(64).zip(orig.chunks(64)) {
+                let lo = grp_o.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = grp_o.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let step = (hi - lo) / levels;
+                for (a, b) in grp_w.iter().zip(grp_o) {
+                    assert!((a - b).abs() <= step / 2.0 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let mut rng = Rng::new(3);
+        let orig: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let mut last_err = f32::INFINITY;
+        for bits in [1u32, 2, 4, 8] {
+            let mut w = orig.clone();
+            quantize_inplace(&mut w, bits, 128);
+            let err: f32 = w.iter().zip(&orig).map(|(a, b)| (a - b).abs()).sum();
+            assert!(err <= last_err);
+            last_err = err;
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        // 330 MiB fp32 ViT -> ~34 MiB at 3 bits (paper §B.3 ratio ~9.7x)
+        let fp32 = 86_000_000 * 4usize;
+        let q3 = quantized_storage_bytes(86_000_000, 3, 128);
+        let ratio = fp32 as f64 / q3 as f64;
+        assert!(ratio > 8.0 && ratio < 11.0, "ratio {ratio}");
+    }
+}

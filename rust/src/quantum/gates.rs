@@ -1,0 +1,86 @@
+//! RY/CZ gate primitives — bit-for-bit mirror of python/compile/quantum/
+//! gates.py (qubit k = bit k of the basis index, little-endian).
+
+/// Sign vector in {±1}^(2^q) of a CZ layer on the given qubit pairs.
+pub fn cz_sign_vector(q: usize, pairs: &[(usize, usize)]) -> Vec<f32> {
+    let n = 1usize << q;
+    let mut sign = vec![1.0f32; n];
+    for &(a, b) in pairs {
+        for (idx, s) in sign.iter_mut().enumerate() {
+            if (idx >> a) & 1 == 1 && (idx >> b) & 1 == 1 {
+                *s = -*s;
+            }
+        }
+    }
+    sign
+}
+
+/// [(q0,q1), (q2,q3), ...] over a qubit list; odd leftover untouched.
+pub fn adjacent_pairs(qubits: &[usize]) -> Vec<(usize, usize)> {
+    qubits.chunks_exact(2).map(|c| (c[0], c[1])).collect()
+}
+
+/// In-place RY(theta) on qubit k of a batch of states, x: [b, 2^q]
+/// flattened row-major. Strided pairwise rotation, O(b * N).
+pub fn apply_ry_axis(x: &mut [f32], b: usize, q: usize, k: usize, theta: f32) {
+    let n = 1usize << q;
+    let (c, s) = ((theta / 2.0).cos(), (theta / 2.0).sin());
+    let stride = 1usize << k;
+    for row in 0..b {
+        let base = row * n;
+        let mut blk = 0;
+        while blk < n {
+            for off in 0..stride {
+                let i0 = base + blk + off;
+                let i1 = i0 + stride;
+                let (x0, x1) = (x[i0], x[i1]);
+                x[i0] = c * x0 - s * x1;
+                x[i1] = s * x0 + c * x1;
+            }
+            blk += 2 * stride;
+        }
+    }
+}
+
+/// Elementwise multiply each row by a sign vector.
+pub fn apply_sign(x: &mut [f32], b: usize, sign: &[f32]) {
+    let n = sign.len();
+    for row in 0..b {
+        for (v, s) in x[row * n..(row + 1) * n].iter_mut().zip(sign) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cz_matches_diag() {
+        assert_eq!(cz_sign_vector(2, &[(0, 1)]), vec![1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn ry_preserves_norm() {
+        let mut x = vec![0.3f32, -1.2, 0.7, 2.0, 0.0, 1.0, -1.0, 0.5];
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        apply_ry_axis(&mut x, 1, 3, 1, 0.9);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ry_on_qubit0_rotates_adjacent_pairs() {
+        let mut x = vec![1.0f32, 0.0, 0.0, 0.0];
+        apply_ry_axis(&mut x, 1, 2, 0, std::f32::consts::PI);
+        // RY(pi) sends e0 -> e1 within the (0,1) pair
+        assert!((x[0]).abs() < 1e-6 && (x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pairs() {
+        assert_eq!(adjacent_pairs(&[0, 1, 2, 3, 4]), vec![(0, 1), (2, 3)]);
+        assert_eq!(adjacent_pairs(&[2]), vec![]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Dense f64 matrix kernel for the pure-Rust unitary-mapping mirror
+//! (Figure 6 benches + property tests). Row-major, cache-blocked matmul;
+//! LU solve for the Cayley transform; scaling-and-squaring expm.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols,
+              data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    pub fn add(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat { rows: self.rows, cols: self.cols,
+              data: self.data.iter().zip(&o.data).map(|(a, b)| a + b).collect() }
+    }
+
+    pub fn sub(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat { rows: self.rows, cols: self.cols,
+              data: self.data.iter().zip(&o.data).map(|(a, b)| a - b).collect() }
+    }
+
+    /// Cache-friendly ikj matmul (the L3 hot loop for dense mappings).
+    pub fn matmul(&self, o: &Mat) -> Mat {
+        assert_eq!(self.cols, o.rows, "matmul dim mismatch");
+        let (n, k, m) = (self.rows, self.cols, o.cols);
+        let mut out = Mat::zeros(n, m);
+        for i in 0..n {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &o.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// y = x A for a batch of row-vectors x: [b, n] @ [n, m].
+    pub fn apply_rows(&self, x: &Mat) -> Mat {
+        x.matmul(self)
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+
+    /// inf-norm (max row sum) — used by expm scaling.
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.data[i * self.cols..(i + 1) * self.cols]
+                 .iter().map(|x| x.abs()).sum::<f64>())
+            .fold(0.0_f64, f64::max)
+    }
+
+    /// ||Q Q^T - I||_inf-elementwise — Figure 6's unitarity error.
+    pub fn unitarity_error(&self) -> f64 {
+        let qqt = self.matmul(&self.t());
+        let n = self.rows;
+        let mut err = 0.0_f64;
+        for i in 0..n {
+            for j in 0..n {
+                let target = if i == j { 1.0 } else { 0.0 };
+                err = err.max((qqt[(i, j)] - target).abs());
+            }
+        }
+        err
+    }
+
+    /// Solve A X = B via LU with partial pivoting (A consumed).
+    pub fn solve(mut self, mut b: Mat) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(self.rows, b.rows);
+        let n = self.rows;
+        let m = b.cols;
+        for col in 0..n {
+            // pivot
+            let mut piv = col;
+            for r in col + 1..n {
+                if self[(r, col)].abs() > self[(piv, col)].abs() {
+                    piv = r;
+                }
+            }
+            if piv != col {
+                for j in 0..n {
+                    self.data.swap(col * n + j, piv * n + j);
+                }
+                for j in 0..m {
+                    b.data.swap(col * m + j, piv * m + j);
+                }
+            }
+            let d = self[(col, col)];
+            assert!(d.abs() > 1e-14, "singular matrix in solve");
+            for r in col + 1..n {
+                let f = self[(r, col)] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in col..n {
+                    let v = self[(col, j)];
+                    self[(r, j)] -= f * v;
+                }
+                for j in 0..m {
+                    let v = b[(col, j)];
+                    b[(r, j)] -= f * v;
+                }
+            }
+        }
+        // back substitution
+        let mut x = Mat::zeros(n, m);
+        for r in (0..n).rev() {
+            for j in 0..m {
+                let mut s = b[(r, j)];
+                for kk in r + 1..n {
+                    s -= self[(r, kk)] * x[(kk, j)];
+                }
+                x[(r, j)] = s / self[(r, r)];
+            }
+        }
+        x
+    }
+
+    /// Matrix exponential via scaling-and-squaring with a 12-term Taylor
+    /// core — ample accuracy for skew-symmetric generators of modest norm.
+    pub fn expm(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let norm = self.norm_inf();
+        let s = if norm > 0.5 { (norm / 0.5).log2().ceil() as i32 } else { 0 };
+        let a = self.scale(1.0 / 2f64.powi(s));
+        let mut term = Mat::eye(self.rows);
+        let mut sum = Mat::eye(self.rows);
+        for p in 1..=12 {
+            term = term.matmul(&a).scale(1.0 / p as f64);
+            sum = sum.add(&term);
+        }
+        let mut r = sum;
+        for _ in 0..s {
+            r = r.matmul(&r);
+        }
+        r
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        assert_eq!(Mat::eye(3).matmul(&a), a);
+        assert_eq!(a.matmul(&Mat::eye(4)), a);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { 3.0 } else { 0.5 / (1.0 + i as f64 + j as f64) });
+        let x_true = Mat::from_fn(4, 2, |i, j| (i + 2 * j) as f64);
+        let b = a.matmul(&x_true);
+        let x = a.clone().solve(b);
+        for (u, v) in x.data.iter().zip(&x_true.data) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn expm_of_zero_is_identity() {
+        let z = Mat::zeros(5, 5);
+        let e = z.expm();
+        assert!(e.sub(&Mat::eye(5)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_skew_is_orthogonal() {
+        let mut a = Mat::zeros(6, 6);
+        for i in 0..6 {
+            for j in 0..i {
+                let v = ((i * 7 + j * 3) % 5) as f64 * 0.2 - 0.4;
+                a[(i, j)] = v;
+                a[(j, i)] = -v;
+            }
+        }
+        let q = a.expm();
+        assert!(q.unitarity_error() < 1e-10, "err {}", q.unitarity_error());
+    }
+
+    #[test]
+    fn expm_matches_rotation() {
+        // exp([[0,-t],[t,0]]) = [[cos t, -sin t],[sin t, cos t]]
+        let t = 0.7_f64;
+        let mut a = Mat::zeros(2, 2);
+        a[(0, 1)] = -t;
+        a[(1, 0)] = t;
+        let e = a.expm();
+        assert!((e[(0, 0)] - t.cos()).abs() < 1e-12);
+        assert!((e[(1, 0)] - t.sin()).abs() < 1e-12);
+    }
+}

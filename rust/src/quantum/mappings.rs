@@ -1,0 +1,235 @@
+//! Lie-algebra -> orthogonal mappings in pure Rust (Appendix A.1):
+//! exponential, Cayley, Taylor, Neumann, Householder, Givens. Drives the
+//! Figure-6 unitarity/speed benchmark (`repro table --id fig6` and
+//! `cargo bench fig6_mappings`), mirroring python/compile/quantum/mappings.py.
+
+use super::linalg::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mapping {
+    Exp,
+    Cayley,
+    Taylor(usize),
+    Neumann(usize),
+    Householder,
+    Givens,
+}
+
+impl Mapping {
+    pub fn name(&self) -> String {
+        match self {
+            Mapping::Exp => "exp".into(),
+            Mapping::Cayley => "cayley".into(),
+            Mapping::Taylor(p) => format!("taylor(P={p})"),
+            Mapping::Neumann(p) => format!("neumann(P={p})"),
+            Mapping::Householder => "householder".into(),
+            Mapping::Givens => "givens".into(),
+        }
+    }
+
+    pub fn all(order: usize) -> Vec<Mapping> {
+        vec![Mapping::Exp, Mapping::Cayley, Mapping::Taylor(order),
+             Mapping::Neumann(order), Mapping::Householder, Mapping::Givens]
+    }
+}
+
+/// #strictly-lower entries in the first k columns of an n x n matrix.
+pub fn lower_params_count(n: usize, k: usize) -> usize {
+    let k = k.min(n.saturating_sub(1));
+    (0..k).map(|j| n - 1 - j).sum()
+}
+
+/// Random Lie parameters (the B_K factor content) for benchmarking.
+pub fn random_theta(rng: &mut Rng, n: usize, k: usize, scale: f64) -> Vec<f64> {
+    (0..lower_params_count(n, k)).map(|_| rng.normal() * scale).collect()
+}
+
+/// Scatter flat params into the strictly-lower N x K factor (column-major
+/// fill — same convention as params_to_lower in python).
+pub fn params_to_lower(theta: &[f64], n: usize, k: usize) -> Mat {
+    let mut bk = Mat::zeros(n, k);
+    let mut ofs = 0;
+    for j in 0..k.min(n.saturating_sub(1)) {
+        for i in j + 1..n {
+            bk[(i, j)] = theta[ofs];
+            ofs += 1;
+        }
+    }
+    assert_eq!(ofs, theta.len());
+    bk
+}
+
+/// A = B - B^T from the N x K strictly-lower factor.
+pub fn skew_from_factor(bk: &Mat, n: usize) -> Mat {
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..bk.cols.min(i) {
+            a[(i, j)] = bk[(i, j)];
+            a[(j, i)] = -bk[(i, j)];
+        }
+    }
+    a
+}
+
+pub fn q_exp(a: &Mat) -> Mat {
+    a.expm()
+}
+
+pub fn q_cayley(a: &Mat) -> Mat {
+    let n = a.rows;
+    let i_plus = Mat::eye(n).add(a);
+    let i_minus = Mat::eye(n).sub(a);
+    // (I+A)(I-A)^{-1} = solve((I-A)^T, (I+A)^T)^T
+    i_minus.t().solve(i_plus.t()).t()
+}
+
+pub fn q_taylor(a: &Mat, order: usize) -> Mat {
+    let n = a.rows;
+    let mut acc = Mat::eye(n);
+    for p in (1..=order).rev() {
+        acc = Mat::eye(n).add(&a.matmul(&acc).scale(1.0 / p as f64));
+    }
+    acc
+}
+
+pub fn q_neumann(a: &Mat, order: usize) -> Mat {
+    let n = a.rows;
+    let mut acc = Mat::eye(n);
+    for _ in 0..order {
+        acc = Mat::eye(n).add(&a.matmul(&acc));
+    }
+    Mat::eye(n).add(a).matmul(&acc)
+}
+
+pub fn q_householder(bk: &Mat, n: usize) -> Mat {
+    let mut q = Mat::eye(n);
+    for j in 0..bk.cols {
+        let mut v: Vec<f64> = (0..n).map(|i| bk[(i, j)]).collect();
+        let nrm2: f64 = v.iter().map(|x| x * x).sum::<f64>().max(1e-12);
+        for x in &mut v {
+            *x /= nrm2.sqrt();
+        }
+        // q <- q (I - 2 v v^T): rank-1 update, O(n^2)
+        let mut qv = vec![0.0f64; n];
+        for i in 0..n {
+            let row = q.row(i);
+            qv[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        for i in 0..n {
+            for jj in 0..n {
+                q[(i, jj)] -= 2.0 * qv[i] * v[jj];
+            }
+        }
+    }
+    q
+}
+
+pub fn q_givens(bk: &Mat, n: usize) -> Mat {
+    let mut q = Mat::eye(n);
+    for j in 0..bk.cols.min(n.saturating_sub(1)) {
+        for m in j + 1..n {
+            let th = bk[(m, j)];
+            let (c, s) = (th.cos(), th.sin());
+            // rotate rows m-1, m
+            for col in 0..n {
+                let a = q[(m - 1, col)];
+                let b = q[(m, col)];
+                q[(m - 1, col)] = c * a - s * b;
+                q[(m, col)] = s * a + c * b;
+            }
+        }
+    }
+    q
+}
+
+/// Figure 3(a) pipeline: flat Lie params -> orthogonal Q (square; callers
+/// truncate columns for the Stiefel frame).
+pub fn orthogonal(theta: &[f64], n: usize, k: usize, mapping: Mapping) -> Mat {
+    let bk = params_to_lower(theta, n, k);
+    match mapping {
+        Mapping::Householder => q_householder(&bk, n),
+        Mapping::Givens => q_givens(&bk, n),
+        m => {
+            let a = skew_from_factor(&bk, n);
+            match m {
+                Mapping::Exp => q_exp(&a),
+                Mapping::Cayley => q_cayley(&a),
+                Mapping::Taylor(p) => q_taylor(&a, p),
+                Mapping::Neumann(p) => q_neumann(&a, p),
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    #[test]
+    fn counts() {
+        assert_eq!(lower_params_count(5, 4), 10);
+        assert_eq!(lower_params_count(5, 99), 10);
+        assert_eq!(lower_params_count(6, 2), 9);
+    }
+
+    #[test]
+    fn exact_mappings_orthogonal_property() {
+        check_property("exact mappings orthogonal", 12, |rng| {
+            let n = rng.range(4, 24);
+            let k = rng.range(1, 5.min(n));
+            let th = random_theta(rng, n, k, 0.3);
+            for m in [Mapping::Exp, Mapping::Cayley, Mapping::Householder,
+                      Mapping::Givens] {
+                let q = orthogonal(&th, n, k, m);
+                assert!(q.unitarity_error() < 1e-8,
+                        "{} err {}", m.name(), q.unitarity_error());
+            }
+        });
+    }
+
+    #[test]
+    fn taylor_converges_to_exp() {
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let th = random_theta(&mut rng, n, 3, 0.2);
+        let qt = orthogonal(&th, n, 3, Mapping::Taylor(18));
+        let qe = orthogonal(&th, n, 3, Mapping::Exp);
+        assert!(qt.sub(&qe).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn neumann_approaches_cayley() {
+        let mut rng = Rng::new(6);
+        let n = 10;
+        let th = random_theta(&mut rng, n, 2, 0.05);
+        let qn = orthogonal(&th, n, 2, Mapping::Neumann(30));
+        let qc = orthogonal(&th, n, 2, Mapping::Cayley);
+        assert!(qn.sub(&qc).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn error_ordering_matches_figure6() {
+        // exact mappings beat truncated series at moderate angle scale
+        let mut rng = Rng::new(7);
+        let n = 32;
+        let th = random_theta(&mut rng, n, 4, 0.3);
+        let e_exact = orthogonal(&th, n, 4, Mapping::Cayley).unitarity_error();
+        let e_taylor = orthogonal(&th, n, 4, Mapping::Taylor(6)).unitarity_error();
+        assert!(e_exact < e_taylor);
+    }
+
+    #[test]
+    fn python_convention_agreement() {
+        // same column-major scatter as mappings.params_to_lower
+        let th = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let bk = params_to_lower(&th, 4, 2);
+        assert_eq!(bk[(1, 0)], 1.0);
+        assert_eq!(bk[(2, 0)], 2.0);
+        assert_eq!(bk[(3, 0)], 3.0);
+        assert_eq!(bk[(2, 1)], 4.0);
+        assert_eq!(bk[(3, 1)], 5.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Pure-Rust mirror of the paper's unitary math. The training path always
+//! executes the AOT artifacts; this mirror exists for (a) the Figure-6
+//! mapping benchmark, (b) analytic accounting (Tables 1/5), and (c)
+//! cross-layer property tests that pin the Python and Rust conventions
+//! to each other.
+
+pub mod gates;
+pub mod linalg;
+pub mod mappings;
+pub mod pauli;
+pub mod qsd;

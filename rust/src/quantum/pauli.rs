@@ -1,0 +1,161 @@
+//! Pauli parameterization Q_P (eq. 2) in pure Rust — mirrors
+//! python/compile/quantum/pauli.py exactly (same layer order, same angle
+//! layout). Used by the Figure-6 speed/accuracy bench and the accounting
+//! cross-checks; the *training* path always uses the AOT artifacts.
+
+use super::gates;
+
+pub struct Layer {
+    pub qubits: Vec<usize>,
+    pub theta_ofs: usize,
+    pub sign: Option<Vec<f32>>,
+}
+
+pub struct PauliCircuit {
+    pub q: usize,
+    pub n_layers: usize,
+    pub layers: Vec<Layer>,
+    pub num_params: usize,
+}
+
+impl PauliCircuit {
+    pub fn dim(&self) -> usize {
+        1usize << self.q
+    }
+
+    /// x <- x @ Q_P for x: [b, 2^q] row-major. O(b · N · q · L).
+    pub fn apply(&self, x: &mut [f32], b: usize, thetas: &[f32]) {
+        assert_eq!(thetas.len(), self.num_params);
+        for layer in &self.layers {
+            for (i, &k) in layer.qubits.iter().enumerate() {
+                gates::apply_ry_axis(x, b, self.q, k, thetas[layer.theta_ofs + i]);
+            }
+            if let Some(sign) = &layer.sign {
+                gates::apply_sign(x, b, sign);
+            }
+        }
+    }
+
+    /// Dense Q_P (row i = e_i Q_P), for tests and unitarity checks.
+    pub fn materialize(&self, thetas: &[f32]) -> Vec<f32> {
+        let n = self.dim();
+        let mut x = vec![0.0f32; n * n];
+        for i in 0..n {
+            x[i * n + i] = 1.0;
+        }
+        self.apply(&mut x, n, thetas);
+        x
+    }
+}
+
+/// Build the eq.-(2) structure for q qubits, L entanglement blocks.
+pub fn build(q: usize, n_layers: usize) -> PauliCircuit {
+    assert!(q >= 1);
+    let mut layers = Vec::new();
+    let mut ofs = 0usize;
+    layers.push(Layer { qubits: (0..q).collect(), theta_ofs: ofs, sign: None });
+    ofs += q;
+    for _ in 0..n_layers {
+        if q >= 2 {
+            let qa: Vec<usize> = (0..q - 1).collect();
+            layers.push(Layer {
+                sign: Some(gates::cz_sign_vector(q, &gates::adjacent_pairs(&qa))),
+                theta_ofs: ofs,
+                qubits: qa.clone(),
+            });
+            ofs += qa.len();
+            let qb: Vec<usize> = (1..q).collect();
+            layers.push(Layer {
+                sign: Some(gates::cz_sign_vector(q, &gates::adjacent_pairs(&qb))),
+                theta_ofs: ofs,
+                qubits: qb.clone(),
+            });
+            ofs += qb.len();
+        }
+    }
+    PauliCircuit { q, n_layers, layers, num_params: ofs }
+}
+
+/// (2L+1) log2(N) - 2L (power-of-two N, q >= 2; q = 1 gives 1).
+pub fn num_params(n: usize, n_layers: usize) -> usize {
+    assert!(n.is_power_of_two() && n >= 2);
+    let q = n.trailing_zeros() as usize;
+    if q == 1 {
+        1
+    } else {
+        q + 2 * n_layers * (q - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_property;
+
+    fn unit_err(m: &[f32], n: usize) -> f32 {
+        let mut err = 0.0f32;
+        for i in 0..n {
+            for j in 0..n {
+                let mut dot = 0.0f32;
+                for k in 0..n {
+                    dot += m[i * n + k] * m[j * n + k];
+                }
+                let target = if i == j { 1.0 } else { 0.0 };
+                err = err.max((dot - target).abs());
+            }
+        }
+        err
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        for (q, l) in [(2, 1), (3, 1), (4, 2), (6, 1), (8, 3)] {
+            assert_eq!(build(q, l).num_params, num_params(1 << q, l));
+        }
+    }
+
+    #[test]
+    fn orthogonality_property() {
+        check_property("pauli circuit orthogonal", 25, |rng| {
+            let q = rng.range(2, 7);
+            let l = rng.range(0, 4);
+            let c = build(q, l);
+            let th: Vec<f32> = (0..c.num_params)
+                .map(|_| rng.normal() as f32 * 0.7).collect();
+            let m = c.materialize(&th);
+            assert!(unit_err(&m, c.dim()) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn matches_python_convention_q2() {
+        // q=2, L=0: pure Kronecker RY(t0) (x) RY(t1); e_0 @ Q row:
+        // basis |00> -> cos(t0/2)cos(t1/2) on |00>, sin on the bit axes.
+        let c = build(2, 0);
+        let (t0, t1) = (0.6f32, -0.8f32);
+        let m = c.materialize(&[t0, t1]);
+        let (c0, s0) = ((t0 / 2.0).cos(), (t0 / 2.0).sin());
+        let (c1, s1) = ((t1 / 2.0).cos(), (t1 / 2.0).sin());
+        // row 0 = e_0 rotated: [c0*c1, s0*c1, c1? ...] index = b1*2 + b0
+        assert!((m[0] - c0 * c1).abs() < 1e-6);
+        assert!((m[1] - s0 * c1).abs() < 1e-6);
+        assert!((m[2] - c0 * s1).abs() < 1e-6);
+        assert!((m[3] - s0 * s1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn apply_preserves_norms() {
+        let c = build(5, 2);
+        let th: Vec<f32> = (0..c.num_params).map(|i| (i as f32 * 0.37).sin()).collect();
+        let n = c.dim();
+        let mut x: Vec<f32> = (0..3 * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let before: Vec<f32> = (0..3)
+            .map(|r| x[r * n..(r + 1) * n].iter().map(|v| v * v).sum())
+            .collect();
+        c.apply(&mut x, 3, &th);
+        for (r, &bn) in before.iter().enumerate() {
+            let an: f32 = x[r * n..(r + 1) * n].iter().map(|v| v * v).sum();
+            assert!((bn - an).abs() / bn.max(1.0) < 1e-4);
+        }
+    }
+}

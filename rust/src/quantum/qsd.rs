@@ -1,0 +1,69 @@
+//! Quantum Shannon decomposition split planning (eq. 4) — mirror of
+//! python/compile/quantum/qsd.py for accounting and structure checks.
+
+use super::pauli;
+
+/// (N1, N2): N1 = largest power of two <= n (halved when n itself is 2^k).
+pub fn split(n: usize) -> (usize, usize) {
+    assert!(n >= 2);
+    let mut n1 = 1usize << (usize::BITS - 1 - n.leading_zeros());
+    if n1 == n {
+        n1 >>= 1;
+    }
+    (n1, n - n1)
+}
+
+/// Greedy binary partition: 28 -> [16, 8, 4] (Example 4.1), 257 -> [256, 1].
+pub fn power_of_two_blocks(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    while n > 0 {
+        let b = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        out.push(b);
+        n -= b;
+    }
+    out
+}
+
+/// Trainable parameter count of the recursive QSD circuit with Pauli
+/// leaves of depth L — [U1|U2|phi|V1|V2] per split, recursing on
+/// non-power-of-two sub-blocks (same recursion as the python builder).
+pub fn num_params(n: usize, n_layers: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    if n.is_power_of_two() {
+        return pauli::num_params(n, n_layers);
+    }
+    let (n1, n2) = split(n);
+    2 * num_params(n1, n_layers) + 2 * num_params(n2, n_layers) + n2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_examples() {
+        assert_eq!(split(12), (8, 4));
+        assert_eq!(split(28), (16, 12));
+        assert_eq!(split(257), (256, 1));
+        assert_eq!(split(16), (8, 8));
+    }
+
+    #[test]
+    fn blocks_example_4_1() {
+        assert_eq!(power_of_two_blocks(28), vec![16, 8, 4]);
+        assert_eq!(power_of_two_blocks(12), vec![8, 4]);
+    }
+
+    #[test]
+    fn pow2_reduces_to_pauli() {
+        assert_eq!(num_params(64, 1), pauli::num_params(64, 1));
+    }
+
+    #[test]
+    fn n12_matches_python_builder() {
+        // 2*pauli(8) + 2*pauli(4) + 4 = 2*7 + 2*4 + 4 = 26 at L=1
+        assert_eq!(num_params(12, 1), 26);
+    }
+}

@@ -1,0 +1,84 @@
+//! Experiment orchestration + table rendering: one entry point per paper
+//! table/figure (`repro table --id <id>`). Each regenerates its rows from
+//! scratch (pretraining backbones on demand, cached under runs/).
+
+pub mod tables;
+
+/// Fixed-width table renderer (markdown-ish, matches EXPERIMENTS.md).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        s
+    };
+    out.push_str(&line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+                       &widths));
+    out.push('\n');
+    out.push_str(&line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+                       &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Human-readable byte counts (Table 1's MB/GB column).
+pub fn fmt_bytes(b: usize) -> String {
+    let bf = b as f64;
+    if bf < 1024.0 * 1024.0 {
+        format!("{:.2}MB", bf / 1e6)
+    } else if bf < 1e9 {
+        format!("{:.2}MB", bf / 1e6)
+    } else {
+        format!("{:.2}GB", bf / 1e9)
+    }
+}
+
+/// Human-readable parameter counts (36.9K / 8.26M style).
+pub fn fmt_params(p: usize) -> String {
+    let pf = p as f64;
+    if pf < 1e3 {
+        format!("{p}")
+    } else if pf < 1e6 {
+        format!("{:.2}K", pf / 1e3)
+    } else if pf < 1e9 {
+        format!("{:.2}M", pf / 1e6)
+    } else {
+        format!("{:.2}B", pf / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_alignment() {
+        let t = super::render_table(&["a", "bb"], &[
+            vec!["xxx".into(), "1".into()],
+            vec!["y".into(), "22222".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(super::fmt_params(36_864), "36.86K");
+        assert_eq!(super::fmt_params(8_257_536), "8.26M");
+        assert!(super::fmt_bytes(37_748_736).contains("MB"));
+        assert!(super::fmt_bytes(8_455_716_864).contains("GB"));
+    }
+}

@@ -1,0 +1,69 @@
+//! PJRT client wrapper + executable cache.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax >= 0.5 serialized protos — see /opt/xla-example/README.md); the
+//! text parser reassigns instruction ids and round-trips cleanly.
+//! Compiles are cached per artifact path: a sweep touching the same
+//! (train, eval) computations across tasks/seeds compiles each exactly
+//! once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct Runtime {
+    client: PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<PjRtLoadedExecutable>>>,
+    pub compile_log: Mutex<Vec<(PathBuf, f64)>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()),
+                     compile_log: Mutex::new(Vec::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp)
+                .with_context(|| format!("XLA compile of {path:?}"))?,
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        self.compile_log.lock().unwrap().push((path.to_path_buf(), secs));
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs (owned or borrowed); returns the
+    /// flattened output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, exe: &PjRtLoadedExecutable, inputs: &[L])
+        -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<L>(inputs)
+            .context("PJRT execute")?;
+        let out = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        Ok(out.to_tuple()?)
+    }
+
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.compile_log.lock().unwrap().iter().map(|(_, s)| s).sum()
+    }
+}

@@ -1,0 +1,186 @@
+//! artifacts/manifest.json parsing — the contract emitted by
+//! python/compile/aot.py. After `make artifacts`, this file fully
+//! describes every computation's I/O so the coordinator never needs
+//! Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.as_arr()?
+                .iter().map(|x| x.as_usize()).collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub tag: String,
+    pub model: String,
+    pub method: String,
+    pub task: String,
+    pub init_file: PathBuf,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub frozen: Vec<TensorSpec>,
+    pub trainable: Vec<TensorSpec>,
+    pub extras: Vec<String>,
+    pub batch: Vec<TensorSpec>,
+    pub trainable_param_count: usize,
+    pub adapter_param_count: usize,
+    pub total_param_count: usize,
+    pub cfg: BTreeMap<String, f64>,
+    /// Numeric method hyperparameters (k, order, n_layers, ...).
+    pub method_kw: BTreeMap<String, f64>,
+}
+
+impl ArtifactEntry {
+    pub fn batch_size(&self) -> usize {
+        self.batch.first().map(|b| b.shape[0]).unwrap_or(0)
+    }
+
+    /// Number of train-step inputs:
+    /// frozen + 3*trainable + (step, lr, wd) + extras + batch.
+    pub fn train_input_count(&self) -> usize {
+        self.frozen.len() + 3 * self.trainable.len() + 3 + self.extras.len()
+            + self.batch.len()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (tag, entry) in root.get("artifacts")?.as_obj()? {
+            let files = entry.get("files")?;
+            let cfg = entry.get("cfg")?.as_obj()?
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().ok().map(|f| (k.clone(), f)))
+                .collect();
+            let method_kw = entry.opt("method_kw")
+                .and_then(|m| m.as_obj().ok())
+                .map(|m| m.iter()
+                     .filter_map(|(k, v)| v.as_f64().ok().map(|f| (k.clone(), f)))
+                     .collect())
+                .unwrap_or_default();
+            artifacts.insert(tag.clone(), ArtifactEntry {
+                tag: tag.clone(),
+                model: entry.get("model")?.as_str()?.to_string(),
+                method: entry.get("method")?.as_str()?.to_string(),
+                task: entry.get("task")?.as_str()?.to_string(),
+                init_file: dir.join(files.get("init")?.as_str()?),
+                train_file: dir.join(files.get("train")?.as_str()?),
+                eval_file: dir.join(files.get("eval")?.as_str()?),
+                frozen: entry.get("frozen")?.as_arr()?
+                    .iter().map(TensorSpec::from_json).collect::<Result<_>>()?,
+                trainable: entry.get("trainable")?.as_arr()?
+                    .iter().map(TensorSpec::from_json).collect::<Result<_>>()?,
+                extras: entry.get("extras")?.as_arr()?
+                    .iter().map(|x| Ok(x.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                batch: entry.get("batch")?.as_arr()?
+                    .iter().map(TensorSpec::from_json).collect::<Result<_>>()?,
+                trainable_param_count: entry.get("trainable_param_count")?
+                    .as_usize()?,
+                adapter_param_count: entry.get("adapter_param_count")?
+                    .as_usize()?,
+                total_param_count: entry.get("total_param_count")?.as_usize()?,
+                cfg,
+                method_kw,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, tag: &str) -> Result<&ArtifactEntry> {
+        self.artifacts.get(tag).with_context(|| {
+            format!("artifact {tag:?} not in manifest (have: {:?})",
+                    self.artifacts.keys().take(8).collect::<Vec<_>>())
+        })
+    }
+
+    /// Default artifacts directory: $REPRO_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("qp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let j = r#"{"artifacts": {"toy": {
+            "tag": "toy", "model": "encoder", "method": "lora", "task": "cls",
+            "files": {"init": "t.init", "train": "t.train", "eval": "t.eval"},
+            "frozen": [{"name": "base.w", "shape": [4, 4], "dtype": "float32"}],
+            "trainable": [{"name": "head.w", "shape": [4, 2], "dtype": "float32"}],
+            "extras": ["task_kind"],
+            "batch": [{"name": "tokens", "shape": [8, 16], "dtype": "int32"}],
+            "cfg": {"d": 64, "vocab": 256},
+            "trainable_param_count": 8, "adapter_param_count": 0,
+            "total_param_count": 24}}, "version": 1}"#;
+        std::fs::write(dir.join("manifest.json"), j).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("toy").unwrap();
+        assert_eq!(e.frozen[0].numel(), 16);
+        assert_eq!(e.batch_size(), 8);
+        assert_eq!(e.train_input_count(), 1 + 3 + 3 + 1 + 1);
+        assert_eq!(e.cfg["d"], 64.0);
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn dtype_rejects_unknown() {
+        assert!(DType::parse("bfloat16").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (HLO text) once, execute them from
+//! the coordinator's hot path. Python never runs here.
+
+pub mod client;
+pub mod manifest;
+pub mod session;
+pub mod tensors;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
+pub use session::TrainSession;
+pub use tensors::HostTensor;

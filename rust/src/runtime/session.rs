@@ -1,0 +1,186 @@
+//! TrainSession — one fine-tuning run of one artifact config.
+//!
+//! Owns the parameter state as XLA literals. Frozen backbone tensors are
+//! converted to literals once and *borrowed* into every step (host
+//! memcpy only at PJRT ingestion); trainable/optimizer state cycles
+//! through the step outputs. Argument layout is the aot.py contract:
+//!
+//!   train: (frozen..., train..., m..., v..., step, lr, wd, extras..., batch...)
+//!          -> (loss, train', m', v')
+//!   eval:  (frozen..., train..., extras..., batch_x) -> (logits,)
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::client::Runtime;
+use super::manifest::ArtifactEntry;
+use super::tensors::HostTensor;
+
+pub struct TrainSession<'rt> {
+    rt: &'rt Runtime,
+    pub entry: ArtifactEntry,
+    train_exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub frozen: Vec<Literal>,
+    pub train: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    pub step_count: usize,
+}
+
+impl<'rt> TrainSession<'rt> {
+    /// Initialize from the artifact's init computation at `seed`.
+    pub fn new(rt: &'rt Runtime, entry: &ArtifactEntry, seed: i32)
+               -> Result<TrainSession<'rt>> {
+        let init_exe = rt.load(&entry.init_file)?;
+        let train_exe = rt.load(&entry.train_file)?;
+        let eval_exe = rt.load(&entry.eval_file)?;
+        let outs = rt.run(&init_exe, &[Literal::scalar(seed)])
+            .context("running init artifact")?;
+        let nf = entry.frozen.len();
+        let nt = entry.trainable.len();
+        if outs.len() != nf + nt {
+            bail!("init returned {} tensors, manifest says {}+{}",
+                  outs.len(), nf, nt);
+        }
+        let mut it = outs.into_iter();
+        let frozen: Vec<Literal> = (&mut it).take(nf).collect();
+        let train: Vec<Literal> = it.collect();
+        let zeros = |specs: &[super::manifest::TensorSpec]| -> Result<Vec<Literal>> {
+            specs.iter()
+                .map(|s| HostTensor::zeros_like_spec(s).to_literal())
+                .collect()
+        };
+        Ok(TrainSession {
+            rt,
+            entry: entry.clone(),
+            train_exe,
+            eval_exe,
+            frozen,
+            m: zeros(&entry.trainable)?,
+            v: zeros(&entry.trainable)?,
+            train,
+            step_count: 0,
+        })
+    }
+
+    /// Replace tensors by name from a checkpoint (pretrained backbone).
+    /// Tensors whose name or shape does not match this config are
+    /// *skipped* — a pretraining checkpoint legitimately carries a
+    /// different task head (DAE vocab head vs 2-class classifier) that
+    /// the fine-tune config re-initializes. Returns how many loaded.
+    pub fn load_named(&mut self, named: &[(String, HostTensor)]) -> Result<usize> {
+        let mut loaded = 0;
+        for (name, tensor) in named {
+            if let Some(ix) = self.entry.frozen.iter().position(|s| &s.name == name) {
+                if tensor.matches_spec(&self.entry.frozen[ix]) {
+                    self.frozen[ix] = tensor.to_literal()?;
+                    loaded += 1;
+                }
+            } else if let Some(ix) =
+                self.entry.trainable.iter().position(|s| &s.name == name)
+            {
+                if tensor.matches_spec(&self.entry.trainable[ix]) {
+                    self.train[ix] = tensor.to_literal()?;
+                    loaded += 1;
+                }
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Apply a host-side transform to every frozen f32 tensor (base-model
+    /// quantization for Tables 6/7).
+    pub fn map_frozen(&mut self, f: impl Fn(&str, &mut Vec<f32>)) -> Result<()> {
+        for (spec, lit) in self.entry.frozen.clone().iter().zip(self.frozen.iter_mut()) {
+            let ht = HostTensor::from_literal(lit)?;
+            if let HostTensor::F32 { shape, mut data } = ht {
+                f(&spec.name, &mut data);
+                *lit = HostTensor::f32(shape, data).to_literal()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One fused AdamW step. `extras` must match entry.extras in length.
+    pub fn step(&mut self, batch: &[HostTensor], lr: f32, wd: f32,
+                extras: &[f32]) -> Result<f32> {
+        if extras.len() != self.entry.extras.len() {
+            bail!("expected {} extras ({:?}), got {}",
+                  self.entry.extras.len(), self.entry.extras, extras.len());
+        }
+        if batch.len() != self.entry.batch.len() {
+            bail!("expected {} batch tensors, got {}",
+                  self.entry.batch.len(), batch.len());
+        }
+        self.step_count += 1;
+        let mut args: Vec<&Literal> = Vec::with_capacity(
+            self.entry.train_input_count());
+        args.extend(self.frozen.iter());
+        args.extend(self.train.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        let scalars = [
+            Literal::scalar(self.step_count as f32),
+            Literal::scalar(lr),
+            Literal::scalar(wd),
+        ];
+        args.extend(scalars.iter());
+        let extra_lits: Vec<Literal> =
+            extras.iter().map(|&e| Literal::scalar(e)).collect();
+        args.extend(extra_lits.iter());
+        let batch_lits: Vec<Literal> = batch.iter()
+            .map(|t| t.to_literal()).collect::<Result<_>>()?;
+        args.extend(batch_lits.iter());
+
+        let outs = self.rt.run(&self.train_exe, &args)?;
+        let nt = self.train.len();
+        if outs.len() != 1 + 3 * nt {
+            bail!("train step returned {} tensors, expected {}",
+                  outs.len(), 1 + 3 * nt);
+        }
+        let mut it = outs.into_iter();
+        let loss_lit = it.next().unwrap();
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.train = (&mut it).take(nt).collect();
+        self.m = (&mut it).take(nt).collect();
+        self.v = it.collect();
+        Ok(loss)
+    }
+
+    /// Forward pass: logits for one eval batch.
+    pub fn eval(&self, batch_x: &HostTensor, extras: &[f32]) -> Result<HostTensor> {
+        let mut args: Vec<&Literal> = Vec::new();
+        args.extend(self.frozen.iter());
+        args.extend(self.train.iter());
+        let extra_lits: Vec<Literal> =
+            extras.iter().map(|&e| Literal::scalar(e)).collect();
+        args.extend(extra_lits.iter());
+        let x = batch_x.to_literal()?;
+        args.push(&x);
+        let outs = self.rt.run(&self.eval_exe, &args)?;
+        HostTensor::from_literal(&outs[0])
+    }
+
+    /// Snapshot all state as named host tensors (checkpointing).
+    pub fn export_named(&self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::new();
+        for (spec, lit) in self.entry.frozen.iter().zip(&self.frozen) {
+            out.push((spec.name.clone(), HostTensor::from_literal(lit)?));
+        }
+        for (spec, lit) in self.entry.trainable.iter().zip(&self.train) {
+            out.push((spec.name.clone(), HostTensor::from_literal(lit)?));
+        }
+        Ok(out)
+    }
+
+    /// Trainable-only snapshot — what a PEFT checkpoint stores (the
+    /// paper's storage story: adapters are the only delta).
+    pub fn export_adapters(&self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::new();
+        for (spec, lit) in self.entry.trainable.iter().zip(&self.train) {
+            out.push((spec.name.clone(), HostTensor::from_literal(lit)?));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,169 @@
+//! Host tensors and Literal marshalling — the only place where raw data
+//! crosses the Rust/XLA boundary.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host-side tensor (f32 or i32) with shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_like_spec(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(),
+                                            data: vec![0.0; spec.numel()] },
+            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(),
+                                            data: vec![0; spec.numel()] },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Host -> XLA literal (reshaped to the stored dims).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => Literal::vec1(data),
+            HostTensor::I32 { data, .. } => Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// XLA literal -> host (shape taken from the literal itself).
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    pub fn matches_spec(&self, spec: &TensorSpec) -> bool {
+        let dt_ok = matches!(
+            (self, spec.dtype),
+            (HostTensor::F32 { .. }, DType::F32) | (HostTensor::I32 { .. }, DType::I32)
+        );
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+}
+
+/// Batch assembly: stack rows of token sequences into an i32 [b, t] tensor.
+pub fn stack_tokens(rows: &[Vec<u32>]) -> HostTensor {
+    let b = rows.len();
+    let t = rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut data = Vec::with_capacity(b * t);
+    for r in rows {
+        assert_eq!(r.len(), t, "ragged token batch");
+        data.extend(r.iter().map(|&x| x as i32));
+    }
+    HostTensor::i32(vec![b, t], data)
+}
+
+/// Stack f32 feature rows into [b, ...dims].
+pub fn stack_f32(rows: &[Vec<f32>], item_shape: &[usize]) -> HostTensor {
+    let b = rows.len();
+    let numel: usize = item_shape.iter().product();
+    let mut data = Vec::with_capacity(b * numel);
+    for r in rows {
+        assert_eq!(r.len(), numel, "row size mismatch");
+        data.extend_from_slice(r);
+    }
+    let mut shape = vec![b];
+    shape.extend_from_slice(item_shape);
+    HostTensor::f32(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&l).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let t = HostTensor::i32(vec![4], vec![7, -1, 0, 3]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = HostTensor::scalar_f32(2.5);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn stacking() {
+        let t = stack_tokens(&[vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4, 5, 6]);
+        let f = stack_f32(&[vec![0.0; 6], vec![1.0; 6]], &[2, 3]);
+        assert_eq!(f.shape(), &[2, 2, 3]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        use crate::runtime::manifest::{DType, TensorSpec};
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3],
+                                dtype: DType::F32 };
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).matches_spec(&spec));
+        assert!(!HostTensor::i32(vec![2, 3], vec![0; 6]).matches_spec(&spec));
+        assert!(!HostTensor::f32(vec![3, 2], vec![0.0; 6]).matches_spec(&spec));
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny benchmarking harness (criterion is unavailable offline): warmup,
+//! repeated timed runs, median + MAD, and a stable one-line report format
+//! every `cargo bench` target uses.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>12} /iter (±{:>10}, n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then up to `max_runs` timed runs or
+/// `budget_ms` of wall clock, whichever first. Prints and returns stats.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut samples: Vec<f64> = Vec::new();
+    let max_runs = 1000;
+    while samples.len() < 3 || (start.elapsed() < budget && samples.len() < max_runs) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns: median,
+        mad_ns: mad,
+        iters: samples.len(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 20, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

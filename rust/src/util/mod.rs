@@ -1,0 +1,23 @@
+//! Self-contained infrastructure (the image has no registry access beyond
+//! the `xla` closure): JSON, a seeded RNG, a tiny bench timer, and a
+//! property-testing helper used across the test suite.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// proptest-lite: run `f` over `n` seeded random cases; panics with the
+/// failing seed for reproduction. Used where the real proptest crate
+/// would be (coordinator/quantum invariants).
+pub fn check_property<F: Fn(&mut rng::Rng)>(name: &str, n: usize, f: F) {
+    for case in 0..n {
+        let seed = 0x9e3779b9_u64.wrapping_mul(case as u64 + 1) ^ 0xdead_beef;
+        let mut rng = rng::Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property {name} failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}

