@@ -1,0 +1,95 @@
+//! Sequential-vs-parallel sweep wall-clock (the tentpole's speedup
+//! evidence). Part 1 needs no artifacts: the work-stealing pool runs a
+//! grid of CPU-bound orthogonal-mapping cells (the Figure-6 math — the
+//! same flavor of dense f64 compute a training cell spends its time in)
+//! at jobs = 1/2/4/auto and reports the speedup and a bit-exactness
+//! check. Part 2 drives a real mini GLUE sweep when artifacts + native
+//! XLA bindings are present, and skips politely otherwise.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use quantum_peft::config;
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::sweep::{self, SweepPlan};
+use quantum_peft::data::glue;
+use quantum_peft::quantum::mappings::{self, Mapping};
+use quantum_peft::runtime::{Manifest, Runtime};
+use quantum_peft::util::pool;
+use quantum_peft::util::rng::Rng;
+
+/// One synthetic sweep cell: a few orthogonal-map constructions at the
+/// Figure-6 scale. Returns a checksum so results can be compared
+/// bit-exactly across jobs settings.
+fn synthetic_cell(seed: u64) -> u64 {
+    let n = 96;
+    let k = 4;
+    let mut rng = Rng::new(seed);
+    let th = mappings::random_theta(&mut rng, n, k, 0.3);
+    let mut acc = 0u64;
+    for m in [Mapping::Taylor(18), Mapping::Cayley, Mapping::Householder] {
+        let q = mappings::orthogonal(&th, n, k, m);
+        acc ^= q.data.iter().fold(0u64, |h, v| {
+            h.rotate_left(7) ^ v.to_bits()
+        });
+    }
+    acc
+}
+
+fn run_grid(jobs: usize, cells: usize) -> (f64, Vec<u64>) {
+    let t0 = Instant::now();
+    let results = pool::run(jobs, (0..cells as u64).collect(),
+                            |_ctx, seed| Ok(synthetic_cell(seed)));
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, pool::collect_ordered(results).unwrap())
+}
+
+fn real_sweep(jobs: usize) -> anyhow::Result<f64> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    let cfg = config::preset("quick")?;
+    let mut tcfg = config::train_config(&cfg);
+    tcfg.steps = 20;
+    tcfg.train_examples = 64;
+    tcfg.test_examples = 32;
+    let plan = SweepPlan {
+        tags: vec!["enc_lora".into(), "enc_qpeft_pauli".into()],
+        tasks: vec![glue::Task::Sst2, glue::Task::Cola],
+        seeds: vec![0, 1],
+        cfg: tcfg,
+        backbone: None,
+        task_lr: BTreeMap::new(),
+    };
+    let t0 = Instant::now();
+    sweep::run_glue_sweep_jobs(&rt, &manifest, &plan, &EventLog::null(), jobs)?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("# parallel sweep engine: wall-clock vs --jobs");
+    let cells = 24;
+    let auto = pool::default_jobs();
+    println!("(host reports {auto} available cores)");
+
+    let (t1, base) = run_grid(1, cells);
+    println!("bench sweep_synthetic/jobs=1   {cells} cells in {t1:.3}s (1.00x)");
+    for jobs in [2usize, 4, auto] {
+        if jobs <= 1 {
+            continue;
+        }
+        let (t, out) = run_grid(jobs, cells);
+        assert_eq!(out, base, "parallel results diverged from sequential");
+        println!("bench sweep_synthetic/jobs={jobs}   {cells} cells in {t:.3}s \
+                  ({:.2}x, bit-identical)", t1 / t);
+    }
+
+    println!("\n# real GLUE sweep (needs artifacts + native XLA bindings)");
+    match real_sweep(1).and_then(|t1| Ok((t1, real_sweep(4)?))) {
+        Ok((seq, par)) => {
+            println!("bench sweep_glue/jobs=1 {seq:.2}s, jobs=4 {par:.2}s \
+                      ({:.2}x)", seq / par);
+        }
+        Err(e) => println!("SKIP: {e}"),
+    }
+}

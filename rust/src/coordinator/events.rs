@@ -1,39 +1,55 @@
 //! Structured event/metrics log (JSONL): every training run appends
 //! step losses, eval metrics and timing so experiments are auditable and
 //! EXPERIMENTS.md numbers can be traced to a log line.
+//!
+//! The log is thread-safe and shareable: the sink is an `Arc<Mutex<File>>`
+//! and every event is serialized to a single `write_all` of one complete
+//! line, so concurrent sweep workers can emit through the same file with
+//! no interleaving (line-atomic JSONL). `for_worker(id)` derives a handle
+//! that stamps a `"worker"` field on every line it emits, which is how
+//! parallel sweep output stays attributable per worker.
 
 use std::io::Write;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::Result;
 
 use crate::util::json::{obj, Json};
 
+#[derive(Clone)]
 pub struct EventLog {
-    file: Option<Mutex<std::fs::File>>,
+    sink: Option<Arc<Mutex<std::fs::File>>>,
     pub echo: bool,
+    /// When set, every emitted line carries a `"worker"` field.
+    worker: Option<usize>,
 }
 
 impl EventLog {
     /// Log to `path` (append), or a null logger when path is None.
     pub fn new(path: Option<PathBuf>, echo: bool) -> Result<EventLog> {
-        let file = match path {
+        let sink = match path {
             Some(p) => {
                 if let Some(parent) = p.parent() {
                     std::fs::create_dir_all(parent).ok();
                 }
-                Some(Mutex::new(std::fs::OpenOptions::new()
-                    .create(true).append(true).open(p)?))
+                Some(Arc::new(Mutex::new(std::fs::OpenOptions::new()
+                    .create(true).append(true).open(p)?)))
             }
             None => None,
         };
-        Ok(EventLog { file, echo })
+        Ok(EventLog { sink, echo, worker: None })
     }
 
     pub fn null() -> EventLog {
-        EventLog { file: None, echo: false }
+        EventLog { sink: None, echo: false, worker: None }
+    }
+
+    /// A handle onto the same sink that tags every line with `worker`.
+    /// Handles are cheap (Arc clone) and safe to use from other threads.
+    pub fn for_worker(&self, worker: usize) -> EventLog {
+        EventLog { sink: self.sink.clone(), echo: self.echo, worker: Some(worker) }
     }
 
     pub fn emit(&self, kind: &str, mut fields: Vec<(&str, Json)>) {
@@ -41,13 +57,19 @@ impl EventLog {
             .map(|d| d.as_secs_f64()).unwrap_or(0.0);
         fields.insert(0, ("ts", Json::Num(ts)));
         fields.insert(0, ("event", Json::Str(kind.to_string())));
+        if let Some(w) = self.worker {
+            fields.push(("worker", w.into()));
+        }
         let line = obj(fields).dump();
         if self.echo {
             println!("{line}");
         }
-        if let Some(f) = &self.file {
-            let mut f = f.lock().unwrap();
-            let _ = writeln!(f, "{line}");
+        if let Some(f) = &self.sink {
+            // one write_all per event keeps each JSONL line atomic even
+            // under contention from multiple sweep workers
+            let mut buf = line.into_bytes();
+            buf.push(b'\n');
+            let _ = f.lock().unwrap().write_all(&buf);
         }
     }
 
@@ -91,5 +113,59 @@ mod tests {
     #[test]
     fn null_logger_is_silent() {
         EventLog::null().train_step("x", "y", 0, 1.0);
+    }
+
+    #[test]
+    fn worker_handles_tag_lines() {
+        let path = std::env::temp_dir().join("qp_events_worker_tag.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::new(Some(path.clone()), false).unwrap();
+        log.emit("plain", vec![]);
+        log.for_worker(3).emit("tagged", vec![("x", 1usize.into())]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let plain = Json::parse(lines[0]).unwrap();
+        assert!(plain.opt("worker").is_none());
+        let tagged = Json::parse(lines[1]).unwrap();
+        assert_eq!(tagged.get("worker").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(tagged.get("x").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn concurrent_emit_is_line_atomic() {
+        // N workers x M events through one sink: every line must parse
+        // back as complete JSON with intact fields and the right worker id
+        let path = std::env::temp_dir().join("qp_events_contention.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::new(Some(path.clone()), false).unwrap();
+        const WORKERS: usize = 8;
+        const EVENTS: usize = 50;
+        std::thread::scope(|scope| {
+            for w in 0..WORKERS {
+                let wlog = log.for_worker(w);
+                scope.spawn(move || {
+                    for i in 0..EVENTS {
+                        wlog.emit("contend", vec![
+                            ("i", i.into()),
+                            ("payload", format!("w{w}-padding-{}", "x".repeat(64)).into()),
+                        ]);
+                    }
+                });
+            }
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), WORKERS * EVENTS, "lost or split lines");
+        let mut per_worker = vec![0usize; WORKERS];
+        for l in lines {
+            let j = Json::parse(l).unwrap_or_else(|e| panic!("bad line {l:?}: {e}"));
+            assert_eq!(j.get("event").unwrap().as_str().unwrap(), "contend");
+            let w = j.get("worker").unwrap().as_usize().unwrap();
+            assert!(w < WORKERS);
+            assert!(j.get("i").unwrap().as_usize().unwrap() < EVENTS);
+            per_worker[w] += 1;
+        }
+        assert!(per_worker.iter().all(|&c| c == EVENTS), "{per_worker:?}");
     }
 }

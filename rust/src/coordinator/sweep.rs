@@ -1,7 +1,14 @@
 //! Experiment scheduler: plans a grid of (artifact, task, seed) cells,
-//! executes them through the task drivers, and aggregates per-cell
-//! results into the paper's table rows (mean over seeds, as in §5.1's
-//! five-run protocol).
+//! executes them through the task drivers — sequentially or on a
+//! work-stealing pool — and aggregates per-cell results into the paper's
+//! table rows (mean over seeds, as in §5.1's five-run protocol).
+//!
+//! Determinism contract: results are always returned in `plan.cells()`
+//! order and every cell derives its RNG streams from its own seed, so
+//! `aggregate()` output is byte-identical for any `--jobs` value and any
+//! completion order. The JSONL event log is NOT part of the contract:
+//! across jobs settings the line order differs (workers interleave) and
+//! parallel runs additionally stamp a `"worker"` field on each line.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -10,6 +17,7 @@ use anyhow::Result;
 
 use crate::data::glue;
 use crate::runtime::{Manifest, Runtime};
+use crate::util::pool;
 
 use super::events::EventLog;
 use super::trainer::{self, GlueRunSpec, RunResult, TrainConfig};
@@ -45,10 +53,23 @@ impl SweepPlan {
         }
         out
     }
+
+    /// The train config for one cell: the plan config with the cell's
+    /// seed and any per-task LR override applied. All cell-level RNG
+    /// streams derive from this seed, so cells are isolated by
+    /// construction no matter which worker runs them.
+    pub fn cell_config(&self, cell: &Cell) -> TrainConfig {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = cell.seed;
+        if let Some(&lr) = self.task_lr.get(cell.task.name()) {
+            cfg.lr = lr;
+        }
+        cfg
+    }
 }
 
 /// Aggregated result of one (tag, task): mean over seeds.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AggResult {
     pub tag: String,
     pub task: String,
@@ -87,20 +108,49 @@ pub fn aggregate(results: &[RunResult]) -> Vec<AggResult> {
         .collect()
 }
 
-/// Execute a GLUE-family sweep sequentially (the image is single-core;
-/// the scheduler still guarantees every cell exactly once and isolates
-/// per-cell RNG streams).
+/// Generic parallel executor for a sweep plan: every cell runs through
+/// `run_cell` on one of `jobs` workers, each worker owning private state
+/// from `init(worker_id)` (for real sweeps: its own PJRT runtime). The
+/// returned vector is in `plan.cells()` order regardless of jobs or
+/// completion order. Cell lifecycle events carry the worker id.
+pub fn run_plan_with<S, I, F>(plan: &SweepPlan, jobs: usize, log: &EventLog,
+                              init: I, run_cell: F) -> Result<Vec<RunResult>>
+where
+    I: Fn(usize) -> Result<S> + Sync,
+    F: Fn(&mut S, &Cell, TrainConfig, &EventLog) -> Result<RunResult> + Sync,
+{
+    let cells = plan.cells();
+    let total = cells.len();
+    let results = pool::run_stateful(jobs, cells, init, |state, ctx, cell| {
+        let wlog = log.for_worker(ctx.worker);
+        let cfg = plan.cell_config(&cell);
+        wlog.emit("cell_start", vec![
+            ("i", ctx.index.into()), ("total", total.into()),
+            ("tag", cell.tag.as_str().into()),
+            ("task", cell.task.name().into()),
+            ("seed", (cell.seed as usize).into()),
+        ]);
+        let r = run_cell(state, &cell, cfg, &wlog)?;
+        wlog.emit("cell_done", vec![
+            ("tag", cell.tag.as_str().into()),
+            ("task", cell.task.name().into()),
+            ("metric", crate::util::json::Json::Num(r.best_metric)),
+        ]);
+        Ok(r)
+    });
+    pool::collect_ordered(results)
+}
+
+/// Execute a GLUE-family sweep sequentially on the caller's runtime (one
+/// shared compile cache; every cell exactly once; per-cell RNG streams
+/// isolated via the cell seed).
 pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                       log: &EventLog) -> Result<Vec<RunResult>> {
     let cells = plan.cells();
     let mut results = Vec::with_capacity(cells.len());
     let total = cells.len();
     for (i, cell) in cells.into_iter().enumerate() {
-        let mut cfg = plan.cfg.clone();
-        cfg.seed = cell.seed;
-        if let Some(&lr) = plan.task_lr.get(cell.task.name()) {
-            cfg.lr = lr;
-        }
+        let cfg = plan.cell_config(&cell);
         log.emit("cell_start", vec![
             ("i", i.into()), ("total", total.into()),
             ("tag", cell.tag.as_str().into()),
@@ -123,6 +173,32 @@ pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
         results.push(r);
     }
     Ok(results)
+}
+
+/// Execute a GLUE-family sweep across `jobs` workers. `jobs <= 1` is the
+/// sequential path on `rt` (shared compile cache). With `jobs > 1` every
+/// worker builds its own PJRT runtime (XLA compile caches are per-worker;
+/// the pretrained backbone checkpoint on disk is built once and shared),
+/// and cells are distributed by work stealing. Either way the result
+/// vector — and therefore `aggregate()` — is byte-identical.
+pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
+                           log: &EventLog, jobs: usize)
+                           -> Result<Vec<RunResult>> {
+    if jobs <= 1 || plan.cells().len() <= 1 {
+        return run_glue_sweep(rt, manifest, plan, log);
+    }
+    run_plan_with(plan, jobs, log,
+        |_worker| Runtime::cpu(),
+        |rt, cell, cfg, wlog| {
+            let spec = GlueRunSpec {
+                tag: &cell.tag,
+                task: cell.task,
+                cfg,
+                backbone: plan.backbone.as_deref(),
+                extras_override: BTreeMap::new(),
+            };
+            trainer::run_glue(rt, manifest, &spec, wlog)
+        })
 }
 
 /// The GLUE "Avg." column of Tables 2/5: mean of per-task means for one tag.
@@ -178,6 +254,47 @@ mod tests {
         assert!((aggs[0].mean_metric - 0.9).abs() < 1e-12);
         assert!(aggs[0].std_metric > 0.0);
         assert_eq!(aggs[0].n_seeds, 3);
+    }
+
+    #[test]
+    fn aggregate_single_seed_std_is_zero_not_nan() {
+        let r = RunResult {
+            tag: "t".into(), task: "sst2".into(), metric_name: "accuracy".into(),
+            best_metric: 0.75, final_metric: 0.75, losses: vec![],
+            adapter_params: 1, trainable_params: 2, wall_seconds: 1.0,
+            step_ms: 5.0, extra_metrics: BTreeMap::new(),
+        };
+        let aggs = aggregate(&[r]);
+        assert_eq!(aggs.len(), 1);
+        assert_eq!(aggs[0].n_seeds, 1);
+        assert_eq!(aggs[0].std_metric, 0.0);
+        assert!(!aggs[0].std_metric.is_nan());
+        assert_eq!(aggs[0].mean_metric, 0.75);
+    }
+
+    #[test]
+    fn aggregate_empty_is_empty() {
+        assert!(aggregate(&[]).is_empty());
+    }
+
+    #[test]
+    fn cell_config_applies_seed_and_task_lr() {
+        let mut task_lr = BTreeMap::new();
+        task_lr.insert("cola".to_string(), 0.5f32);
+        let plan = SweepPlan {
+            tags: vec!["t".into()],
+            tasks: vec![glue::Task::Sst2, glue::Task::Cola],
+            seeds: vec![7],
+            cfg: TrainConfig::default(),
+            backbone: None,
+            task_lr,
+        };
+        let cells = plan.cells();
+        let c_sst2 = plan.cell_config(&cells[0]);
+        assert_eq!(c_sst2.seed, 7);
+        assert_eq!(c_sst2.lr, TrainConfig::default().lr);
+        let c_cola = plan.cell_config(&cells[1]);
+        assert_eq!(c_cola.lr, 0.5);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //!   repro list                             show artifacts + param counts
 //!   repro pretrain --family enc|encw|dec|vit [--preset quick|default|full]
 //!   repro train --tag enc_lora --task sst2 [--steps N] [--lr F] [--seed S]
+//!   repro sweep --tags a,b [--tasks sst2,cola] [--seeds 0..4] [--jobs N]
 //!   repro table --id table1..table10|fig6|fig5-params [--preset ...]
 //!   repro e2e   --tag dec_lora             one E2E generation run
 //!
@@ -10,15 +11,18 @@
 //! flags are `--key value` pairs after the subcommand.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use quantum_peft::config;
 use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::sweep::{self, SweepPlan};
 use quantum_peft::coordinator::trainer::{self, GlueRunSpec};
 use quantum_peft::data::glue;
 use quantum_peft::report::{self, tables};
 use quantum_peft::runtime::{Manifest, Runtime};
+use quantum_peft::util::pool;
 
 struct Args {
     cmd: String,
@@ -48,6 +52,7 @@ fn main() -> Result<()> {
         "list" => cmd_list(),
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "e2e" => cmd_e2e(&args),
         "table" => cmd_table(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
@@ -59,10 +64,22 @@ commands:
   list                              artifacts + parameter accounting
   pretrain --family enc|encw|dec|vit [--preset quick|default|full]
   train    --tag <tag> [--task sst2|cola|rte|mrpc|stsb] [--steps N]
-           [--lr F] [--seed S] [--preset P] [--no-backbone true]
+           [--lr F] [--seed S] [--preset P] [--no-backbone true|false]
+  sweep    --tags <a,b,...> [--tasks sst2,cola,...] [--seeds 0..4|0,1,2]
+           [--jobs N|auto] [--steps N] [--lr F] [--preset P]
+           [--no-backbone true|false]
+           runs the (tag, task, seed) grid on a work-stealing pool
+           (--jobs workers, each with its own runtime; default 1) and
+           prints mean±std over seeds. --seeds a..b is INCLUSIVE
+           (0..4 = the paper's five-seed protocol). Results and
+           aggregates are byte-identical for every --jobs value; only
+           wall-clock and the event log's interleaving and per-line
+           worker tags change (jobs > 1 stamps a \"worker\" field).
   e2e      --tag <dec_tag> [--preset P]
   table    --id table1|table2|...|table10|fig6|fig5-params [--preset P]
-env: REPRO_ARTIFACTS (default ./artifacts), REPRO_RUNS (default ./runs)";
+           (sweep-backed tables honor REPRO_JOBS / [sweep] jobs)
+env: REPRO_ARTIFACTS (default ./artifacts), REPRO_RUNS (default ./runs),
+     REPRO_JOBS (table sweep workers; 'auto' = one per core)";
 
 fn load_env() -> Result<(Runtime, Manifest)> {
     let rt = Runtime::cpu()?;
@@ -80,6 +97,60 @@ fn preset_of(args: &Args) -> Result<config::Config> {
 
 fn event_log() -> Result<EventLog> {
     EventLog::new(Some(tables::runs_dir().join("events.jsonl")), false)
+}
+
+/// Parse a boolean-valued flag. Absent flags are `false`; present flags
+/// must carry an explicit value, so `--no-backbone false` really means
+/// "use the backbone" (the flag's *value* decides, not its presence).
+fn flag_bool(args: &Args, key: &str) -> Result<bool> {
+    match args.flags.get(key) {
+        None => Ok(false),
+        Some(v) => match v.as_str() {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            other => bail!("--{key} expects true|false, got {other:?}"),
+        },
+    }
+}
+
+/// Seed-list syntax: "0,1,2" or an INCLUSIVE range "a..b" / "a..=b"
+/// (so `--seeds 0..4` is the paper's five-seed protocol, §5.1).
+fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: u64 = lo.trim().parse()
+            .with_context(|| format!("bad seed range start in {s:?}"))?;
+        let hi: u64 = hi.trim().trim_start_matches('=').parse()
+            .with_context(|| format!("bad seed range end in {s:?}"))?;
+        if hi < lo {
+            bail!("empty seed range {s:?}");
+        }
+        return Ok((lo..=hi).collect());
+    }
+    s.split(',')
+        .map(|p| p.trim().parse::<u64>()
+             .with_context(|| format!("bad seed {p:?} in {s:?}")))
+        .collect()
+}
+
+fn parse_jobs(args: &Args) -> Result<usize> {
+    match args.flags.get("jobs") {
+        None => Ok(1),
+        Some(v) => pool::parse_jobs_value(v).context("--jobs"),
+    }
+}
+
+/// Backbone family of a GLUE-capable encoder tag. The GLUE drivers
+/// (`train`, `sweep`) only make sense for enc*/encw* artifacts — the
+/// ViT/decoder panels live behind `repro table`.
+fn glue_family(tag: &str) -> Result<&'static str> {
+    if tag.starts_with("encw") {
+        Ok("encw")
+    } else if tag.starts_with("enc") {
+        Ok("enc")
+    } else {
+        bail!("tag {tag:?} is not a GLUE-family (enc*/encw*) artifact; \
+               use `repro table` for the ViT/decoder panels")
+    }
 }
 
 fn cmd_list() -> Result<()> {
@@ -128,10 +199,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(s) = args.flags.get("seed") {
         tcfg.seed = s.parse()?;
     }
-    let family = if tag.starts_with("encw") { "encw" } else { "enc" };
-    let backbone = if args.flags.get("no-backbone").is_some() {
+    let backbone = if flag_bool(args, "no-backbone")? {
         None
     } else {
+        let family = glue_family(tag)?;
         Some(tables::ensure_backbone(&rt, &manifest, family, &cfg, &log)?)
     };
     let spec = GlueRunSpec {
@@ -146,6 +217,115 @@ fn cmd_train(args: &Args) -> Result<()> {
               step={:.1}ms  compile={:.1}s",
              r.tag, r.task, r.metric_name, r.final_metric, r.best_metric,
              r.adapter_params, r.step_ms, rt.total_compile_seconds());
+    Ok(())
+}
+
+/// The grid axes must be duplicate-free, or `cells()`'s "every cell
+/// exactly once" breaks and aggregate() inflates the seed count.
+fn reject_duplicates<T: PartialEq + std::fmt::Debug>(what: &str, xs: &[T])
+                                                    -> Result<()> {
+    for (i, x) in xs.iter().enumerate() {
+        if xs[..i].contains(x) {
+            bail!("--{what} lists {x:?} more than once");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (rt, manifest) = load_env()?;
+    let cfg = preset_of(args)?;
+    let log = event_log()?;
+    // the singular train-style spellings are silently-dropped typos here
+    for (bad, good) in [("seed", "seeds"), ("task", "tasks"), ("tag", "tags")] {
+        if args.flags.contains_key(bad) {
+            bail!("sweep takes --{good}, not --{bad}");
+        }
+    }
+    let tags: Vec<String> = args.flags.get("tags")
+        .context("--tags required (comma-separated artifact tags)")?
+        .split(',').map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty()).collect();
+    if tags.is_empty() {
+        bail!("--tags is empty");
+    }
+    let tasks: Vec<glue::Task> = match args.flags.get("tasks") {
+        None => glue::ALL_TASKS.to_vec(),
+        Some(list) => list.split(',')
+            .map(|p| glue::Task::from_name(p.trim())
+                 .with_context(|| format!("unknown task {p:?}")))
+            .collect::<Result<_>>()?,
+    };
+    let seeds = match args.flags.get("seeds") {
+        Some(s) => parse_seeds(s)?,
+        None => config::sweep_seeds(&cfg),
+    };
+    reject_duplicates("tags", &tags)?;
+    reject_duplicates("tasks", &tasks)?;
+    reject_duplicates("seeds", &seeds)?;
+    let mut tcfg = config::train_config(&cfg);
+    if let Some(s) = args.flags.get("steps") {
+        tcfg.steps = s.parse()?;
+    }
+    if let Some(s) = args.flags.get("lr") {
+        tcfg.lr = s.parse()?;
+    }
+    let jobs = parse_jobs(args)?;
+    // fail fast, before any backbone pretraining: every tag must exist
+    // in the manifest, and when a backbone is used all tags must share
+    // one GLUE-capable encoder family (mixed or non-GLUE families would
+    // silently fine-tune against the wrong family's checkpoint)
+    for tag in &tags {
+        manifest.get(tag)?;
+    }
+    let backbone = if flag_bool(args, "no-backbone")? {
+        None
+    } else {
+        let families = tags.iter().map(|t| glue_family(t))
+            .collect::<Result<Vec<_>>>()?;
+        let family = families[0];
+        if families.iter().any(|f| *f != family) {
+            bail!("--tags mixes model families {families:?}; run one sweep \
+                   per family (each family uses its own backbone checkpoint)");
+        }
+        Some(tables::ensure_backbone(&rt, &manifest, family, &cfg, &log)?)
+    };
+    let plan = SweepPlan {
+        tags,
+        tasks,
+        seeds,
+        cfg: tcfg,
+        backbone,
+        task_lr: BTreeMap::new(),
+    };
+    let n_cells = plan.cells().len();
+    println!("sweep: {n_cells} cells ({} tags x {} tasks x {} seeds), jobs={jobs}",
+             plan.tags.len(), plan.tasks.len(), plan.seeds.len());
+    let t0 = Instant::now();
+    let results = sweep::run_glue_sweep_jobs(&rt, &manifest, &plan, &log, jobs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let aggs = sweep::aggregate(&results);
+    let rows: Vec<Vec<String>> = aggs.iter()
+        .map(|a| vec![
+            a.tag.clone(),
+            a.task.clone(),
+            a.metric_name.clone(),
+            format!("{:.2} ± {:.2}", 100.0 * a.mean_metric,
+                    100.0 * a.std_metric),
+            a.n_seeds.to_string(),
+            report::fmt_params(a.adapter_params),
+            format!("{:.1}", a.mean_step_ms),
+        ])
+        .collect();
+    print!("{}", report::render_table(
+        &["tag", "task", "metric", "mean ± std %", "seeds", "adapter",
+          "ms/step"], &rows));
+    for tag in &plan.tags {
+        if let Some(avg) = sweep::glue_average(&aggs, tag) {
+            println!("{tag}: GLUE avg {:.2}", 100.0 * avg);
+        }
+    }
+    println!("\n{n_cells} cells in {wall:.1}s with {jobs} worker(s)");
     Ok(())
 }
 
@@ -195,6 +375,8 @@ fn cmd_table(args: &Args) -> Result<()> {
     let (rt, manifest) = load_env()?;
     let cfg = preset_of(args)?;
     let log = event_log()?;
+    // validate worker settings up front, not after hours of table work
+    let jobs = tables::sweep_jobs(&cfg)?;
     match id {
         "table2" => tables::print_table(
             "Table 2 — synthetic-GLUE, encoder backbone",
@@ -224,6 +406,16 @@ fn cmd_table(args: &Args) -> Result<()> {
             &tables::table10(&rt, &manifest, &cfg, &log)?),
         other => bail!("unknown table id {other:?}"),
     }
-    println!("\n(total XLA compile time: {:.1}s)", rt.total_compile_seconds());
+    // per-worker runtimes own their compile logs, so when this table id
+    // actually fanned out (tables 3/4 run sequentially) the shared
+    // runtime's figure undercounts
+    let pool_backed = !matches!(id, "table3" | "table4");
+    if jobs > 1 && pool_backed {
+        println!("\n(XLA compile time on the shared runtime: {:.1}s; \
+                  per-worker compiles at jobs={jobs} not included)",
+                 rt.total_compile_seconds());
+    } else {
+        println!("\n(total XLA compile time: {:.1}s)", rt.total_compile_seconds());
+    }
     Ok(())
 }

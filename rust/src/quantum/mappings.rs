@@ -222,6 +222,49 @@ mod tests {
     }
 
     #[test]
+    fn householder_all_zero_column_hits_clamp_path() {
+        // A zero reflection vector exercises the 1e-12 norm clamp: the
+        // normalized v stays zero, the rank-1 update is a no-op, and Q
+        // must remain exactly orthogonal (no NaN/Inf from 0/0).
+        let n = 8;
+        let k = 3;
+        let bk = Mat::zeros(n, k); // every column all-zero
+        let q = q_householder(&bk, n);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+        assert!(q.unitarity_error() < 1e-12, "err {}", q.unitarity_error());
+        // mixed case: one live column between two zero columns
+        let mut rng = Rng::new(11);
+        let mut bk = Mat::zeros(n, 3);
+        for i in 1..n {
+            bk[(i, 1)] = rng.normal() * 0.3;
+        }
+        let q = q_householder(&bk, n);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+        assert!(q.unitarity_error() < 1e-8);
+    }
+
+    #[test]
+    fn k_at_least_n_is_capped_not_out_of_bounds() {
+        // lower_params_count caps k at n-1; params_to_lower, q_givens and
+        // the full orthogonal() pipeline must agree on that cap for
+        // k == n and k > n instead of indexing out of bounds.
+        let n = 6;
+        for k in [n, n + 1, n + 5] {
+            assert_eq!(lower_params_count(n, k), lower_params_count(n, n - 1));
+            let mut rng = Rng::new(13 ^ k as u64);
+            let th = random_theta(&mut rng, n, k, 0.2);
+            assert_eq!(th.len(), lower_params_count(n, n - 1));
+            let bk = params_to_lower(&th, n, k);
+            assert_eq!(bk.cols, k); // trailing columns stay zero
+            for m in [Mapping::Givens, Mapping::Householder, Mapping::Cayley] {
+                let q = orthogonal(&th, n, k, m);
+                assert!(q.unitarity_error() < 1e-8,
+                        "{} err {} at k={k}", m.name(), q.unitarity_error());
+            }
+        }
+    }
+
+    #[test]
     fn python_convention_agreement() {
         // same column-major scatter as mappings.params_to_lower
         let th = vec![1.0, 2.0, 3.0, 4.0, 5.0];

@@ -16,6 +16,7 @@ use crate::data::glue;
 use crate::peft::accounting;
 use crate::quantum::mappings::{self, Mapping};
 use crate::runtime::{Manifest, Runtime};
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 use super::{fmt_bytes, fmt_params, render_table};
@@ -25,6 +26,34 @@ pub type Table = (Vec<&'static str>, Vec<Vec<String>>);
 pub fn runs_dir() -> PathBuf {
     std::env::var("REPRO_RUNS").map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("runs"))
+}
+
+/// Worker count for table sweeps: $REPRO_JOBS beats the config's
+/// `[sweep] jobs` key; both default to 1 (sequential). "auto" or 0 means
+/// one worker per available core. Any value yields byte-identical tables
+/// (see coordinator::sweep's determinism contract). A malformed
+/// $REPRO_JOBS is an error, not a silent fallback to sequential.
+pub fn sweep_jobs(cfg: &config::Config) -> Result<usize> {
+    use anyhow::Context as _;
+    match std::env::var("REPRO_JOBS") {
+        Ok(s) => pool::parse_jobs_value(&s).context("REPRO_JOBS"),
+        Err(_) => match cfg.get("sweep", "jobs") {
+            None => Ok(1),
+            Some(config::Value::Num(v)) => {
+                if *v < 0.0 || v.fract() != 0.0 {
+                    anyhow::bail!(
+                        "[sweep] jobs expects a non-negative integer \
+                         (0 = auto), got {v}");
+                }
+                Ok(if *v == 0.0 { pool::default_jobs() } else { *v as usize })
+            }
+            Some(config::Value::Str(s)) => {
+                pool::parse_jobs_value(s).context("[sweep] jobs")
+            }
+            Some(other) => anyhow::bail!(
+                "[sweep] jobs expects a count or \"auto\", got {other:?}"),
+        },
+    }
 }
 
 /// Pretrain (or reuse) a backbone checkpoint for a model family.
@@ -94,7 +123,8 @@ fn glue_table(rt: &Runtime, manifest: &Manifest, tags: &[&str], family: &str,
         backbone: Some(backbone),
         task_lr: BTreeMap::new(),
     };
-    let results = sweep::run_glue_sweep(rt, manifest, &plan, log)?;
+    let results = sweep::run_glue_sweep_jobs(rt, manifest, &plan, log,
+                                             sweep_jobs(cfg)?)?;
     let aggs = sweep::aggregate(&results);
     let headers = vec!["Method", "#Adapter Params", "SST-2", "CoLA", "RTE",
                        "MRPC", "STS-B", "Avg.", "Mem (opt-state)"];
@@ -194,18 +224,56 @@ pub fn table3_and_4(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
 
 // -------------------------------------------------------- Tables 6..10 ---
 
-fn vit_row(rt: &Runtime, manifest: &Manifest, tag: &str, cfg: &TrainConfig,
-           backbone: &PathBuf, base_bits: Option<u32>,
-           overrides: BTreeMap<String, f32>, log: &EventLog)
-           -> Result<trainer::RunResult> {
-    let spec = VitRunSpec {
-        tag,
-        cfg: cfg.clone(),
-        backbone: Some(backbone),
-        base_bits,
-        extras_override: overrides,
-    };
-    trainer::run_vit(rt, manifest, &spec, log)
+/// One independent fine-tuning cell of a ViT ablation panel.
+struct VitCell {
+    tag: String,
+    base_bits: Option<u32>,
+    overrides: BTreeMap<String, f32>,
+}
+
+impl VitCell {
+    fn new(tag: &str, base_bits: Option<u32>,
+           overrides: BTreeMap<String, f32>) -> VitCell {
+        VitCell { tag: tag.to_string(), base_bits, overrides }
+    }
+}
+
+/// Run a panel of independent ViT cells, in input order, across `jobs`
+/// workers (each with its own runtime; the backbone checkpoint is built
+/// once and shared). `jobs <= 1` runs inline on the caller's runtime —
+/// both paths produce identical results (per-cell RNG derives only from
+/// the train config seed).
+fn vit_panel(rt: &Runtime, manifest: &Manifest, cells: Vec<VitCell>,
+             tcfg: &TrainConfig, backbone: &PathBuf, jobs: usize,
+             log: &EventLog) -> Result<Vec<trainer::RunResult>> {
+    if jobs <= 1 || cells.len() <= 1 {
+        let mut out = Vec::with_capacity(cells.len());
+        for c in cells {
+            let spec = VitRunSpec {
+                tag: &c.tag,
+                cfg: tcfg.clone(),
+                backbone: Some(backbone),
+                base_bits: c.base_bits,
+                extras_override: c.overrides,
+            };
+            out.push(trainer::run_vit(rt, manifest, &spec, log)?);
+        }
+        return Ok(out);
+    }
+    let results = pool::run_stateful(jobs, cells,
+        |_worker| Runtime::cpu(),
+        |wrt, ctx, c| {
+            let wlog = log.for_worker(ctx.worker);
+            let spec = VitRunSpec {
+                tag: &c.tag,
+                cfg: tcfg.clone(),
+                backbone: Some(backbone),
+                base_bits: c.base_bits,
+                extras_override: c.overrides,
+            };
+            trainer::run_vit(wrt, manifest, &spec, &wlog)
+        });
+    pool::collect_ordered(results)
 }
 
 pub fn table6(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
@@ -214,12 +282,15 @@ pub fn table6(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
     let tcfg = config::train_config(cfg);
     let tags = ["vit_ft", "vit_lora_k1", "vit_lora_k2", "vit_lora_k4",
                 "vit_qpt_pauli"];
+    let cells = tags.iter()
+        .map(|t| VitCell::new(t, Some(3), BTreeMap::new()))
+        .collect();
+    let panel = vit_panel(rt, manifest, cells, &tcfg, &backbone,
+                          sweep_jobs(cfg)?, log)?;
     let mut rows = Vec::new();
     // "Original" row: transfer accuracy with untrained head ~ chance
     rows.push(vec!["original (no FT)".into(), "-".into(), "~10.00 (chance)".into()]);
-    for tag in tags {
-        let r = vit_row(rt, manifest, tag, &tcfg, &backbone, Some(3),
-                        BTreeMap::new(), log)?;
+    for (tag, r) in tags.iter().zip(&panel) {
         rows.push(vec![
             tag.to_string(),
             fmt_params(r.adapter_params),
@@ -233,34 +304,48 @@ pub fn table7(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
               log: &EventLog) -> Result<Table> {
     let backbone = ensure_backbone(rt, manifest, "vit", cfg, log)?;
     let tcfg = config::train_config(cfg);
-    let mut rows = Vec::new();
-    for (label, bits) in [("FP32", 0.0f32), ("INT8", 8.0), ("INT4", 4.0),
-                          ("INT3", 3.0), ("INT2", 2.0), ("INT1", 1.0)] {
-        let mut row = vec![label.to_string(),
-                           if bits == 0.0 { "32".into() }
-                           else {
-                               format!("{:.2}",
-                                       accounting::quantized_bits_per_param(
-                                           bits as f64, 32))
-                           }];
-        for mode in [0.0f32, 1.0] {
+    let levels = [("FP32", 0.0f32), ("INT8", 8.0), ("INT4", 4.0),
+                  ("INT3", 3.0), ("INT2", 2.0), ("INT1", 1.0)];
+    // FP32 is one cell (uniform == adaptive by construction); each INT
+    // level is two cells (uniform, adaptive) — all independent. Each row
+    // records the panel indices of its cells so the pairing between
+    // construction and consumption is structural, not positional.
+    let mut cells = Vec::new();
+    let mut row_cells: Vec<(&str, f32, Vec<usize>)> = Vec::new();
+    for (label, bits) in levels {
+        let modes: &[f32] = if bits == 0.0 { &[0.0] } else { &[0.0, 1.0] };
+        let mut ixs = Vec::new();
+        for &mode in modes {
             let mut ov = BTreeMap::new();
             if bits > 0.0 {
                 ov.insert("quant_levels".to_string(),
                           (2f32.powf(bits) - 1.0) as f32);
                 ov.insert("quant_mode".to_string(), mode);
             }
-            let r = vit_row(rt, manifest, "vit_qpt_taylor", &tcfg, &backbone,
-                            None, ov, log)?;
-            row.push(format!("{:.2}", 100.0 * r.best_metric));
-            if bits == 0.0 {
-                // FP32: uniform == adaptive by construction
-                row.push(format!("{:.2}", 100.0 * r.best_metric));
-                break;
-            }
+            ixs.push(cells.len());
+            cells.push(VitCell::new("vit_qpt_taylor", None, ov));
         }
-        rows.push(row);
+        row_cells.push((label, bits, ixs));
     }
+    let panel = vit_panel(rt, manifest, cells, &tcfg, &backbone,
+                          sweep_jobs(cfg)?, log)?;
+    let rows = row_cells.into_iter()
+        .map(|(label, bits, ixs)| {
+            let mut row = vec![label.to_string(),
+                               if bits == 0.0 { "32".into() }
+                               else {
+                                   format!("{:.2}",
+                                           accounting::quantized_bits_per_param(
+                                               bits as f64, 32))
+                               }];
+            // FP32's single cell fills both mode columns
+            for col in 0..2 {
+                let r = &panel[ixs[col.min(ixs.len() - 1)]];
+                row.push(format!("{:.2}", 100.0 * r.best_metric));
+            }
+            row
+        })
+        .collect();
     Ok((vec!["Quantization", "Bits/param", "Acc % (Uniform)",
              "Acc % (Adaptive)"], rows))
 }
@@ -271,20 +356,27 @@ pub fn table8(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
     let tcfg = config::train_config(cfg);
     let entry = manifest.get("vit_qpt_taylor")?;
     let d = entry.cfg.get("d").copied().unwrap_or(64.0) as usize;
-    let mut rows = Vec::new();
-    for kp in 1..=8usize {
-        let mut ov = BTreeMap::new();
-        ov.insert("k_prime".to_string(), kp as f32);
-        let r = vit_row(rt, manifest, "vit_qpt_taylor", &tcfg, &backbone,
-                        None, ov, log)?;
-        // effective params at this K' (analytic; masked columns train 0)
-        let eff = 4 * accounting::qpeft_taylor_params(d, d, 8, kp);
-        rows.push(vec![
-            kp.to_string(),
-            fmt_params(eff),
-            format!("{:.2}", 100.0 * r.best_metric),
-        ]);
-    }
+    let kps: Vec<usize> = (1..=8).collect();
+    let cells = kps.iter()
+        .map(|&kp| {
+            let mut ov = BTreeMap::new();
+            ov.insert("k_prime".to_string(), kp as f32);
+            VitCell::new("vit_qpt_taylor", None, ov)
+        })
+        .collect();
+    let panel = vit_panel(rt, manifest, cells, &tcfg, &backbone,
+                          sweep_jobs(cfg)?, log)?;
+    let rows = kps.iter().zip(&panel)
+        .map(|(&kp, r)| {
+            // effective params at this K' (analytic; masked columns train 0)
+            let eff = 4 * accounting::qpeft_taylor_params(d, d, 8, kp);
+            vec![
+                kp.to_string(),
+                fmt_params(eff),
+                format!("{:.2}", 100.0 * r.best_metric),
+            ]
+        })
+        .collect();
     Ok((vec!["Intrinsic rank K'", "#Effective Params", "Accuracy %"], rows))
 }
 
@@ -292,17 +384,20 @@ pub fn table9(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
               log: &EventLog) -> Result<Table> {
     let backbone = ensure_backbone(rt, manifest, "vit", cfg, log)?;
     let tcfg = config::train_config(cfg);
-    let mut rows = Vec::new();
-    for (l, tag) in [(1usize, "vit_qpt_pauli"), (2, "vit_qpt_pauli_l2"),
-                     (3, "vit_qpt_pauli_l3"), (4, "vit_qpt_pauli_l4")] {
-        let r = vit_row(rt, manifest, tag, &tcfg, &backbone, Some(2),
-                        BTreeMap::new(), log)?;
-        rows.push(vec![
+    let variants = [(1usize, "vit_qpt_pauli"), (2, "vit_qpt_pauli_l2"),
+                    (3, "vit_qpt_pauli_l3"), (4, "vit_qpt_pauli_l4")];
+    let cells = variants.iter()
+        .map(|(_, tag)| VitCell::new(tag, Some(2), BTreeMap::new()))
+        .collect();
+    let panel = vit_panel(rt, manifest, cells, &tcfg, &backbone,
+                          sweep_jobs(cfg)?, log)?;
+    let rows = variants.iter().zip(&panel)
+        .map(|((l, _), r)| vec![
             l.to_string(),
             fmt_params(r.adapter_params),
             format!("{:.2}", 100.0 * r.best_metric),
-        ]);
-    }
+        ])
+        .collect();
     Ok((vec!["Entanglement layers L (2-bit base)", "#Adapter Params",
              "Accuracy %"], rows))
 }
@@ -311,18 +406,21 @@ pub fn table10(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
                log: &EventLog) -> Result<Table> {
     let backbone = ensure_backbone(rt, manifest, "vit", cfg, log)?;
     let tcfg = config::train_config(cfg);
-    let mut rows = Vec::new();
-    for (name, tag) in [("CP", "vit_tn_cp"), ("TRD", "vit_tn_trd"),
-                        ("HTD (TTN)", "vit_tn_htd"), ("TD", "vit_tn_td"),
-                        ("TTD (MPS)", "vit_tn_ttd")] {
-        let r = vit_row(rt, manifest, tag, &tcfg, &backbone, None,
-                        BTreeMap::new(), log)?;
-        rows.push(vec![
+    let variants = [("CP", "vit_tn_cp"), ("TRD", "vit_tn_trd"),
+                    ("HTD (TTN)", "vit_tn_htd"), ("TD", "vit_tn_td"),
+                    ("TTD (MPS)", "vit_tn_ttd")];
+    let cells = variants.iter()
+        .map(|(_, tag)| VitCell::new(tag, None, BTreeMap::new()))
+        .collect();
+    let panel = vit_panel(rt, manifest, cells, &tcfg, &backbone,
+                          sweep_jobs(cfg)?, log)?;
+    let rows = variants.iter().zip(&panel)
+        .map(|((name, _), r)| vec![
             name.to_string(),
             fmt_params(r.adapter_params),
             format!("{:.2}", 100.0 * r.best_metric),
-        ]);
-    }
+        ])
+        .collect();
     Ok((vec!["Tensor network", "#Adapter Params", "Accuracy %"], rows))
 }
 

@@ -1,9 +1,11 @@
 //! Self-contained infrastructure (the image has no registry access beyond
-//! the `xla` closure): JSON, a seeded RNG, a tiny bench timer, and a
-//! property-testing helper used across the test suite.
+//! the `xla` closure): JSON, a seeded RNG, a tiny bench timer, a
+//! work-stealing thread pool, and a property-testing helper used across
+//! the test suite.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 /// proptest-lite: run `f` over `n` seeded random cases; panics with the

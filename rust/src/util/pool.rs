@@ -1,0 +1,442 @@
+//! Work-stealing thread pool for embarrassingly parallel experiment grids
+//! (std threads + mutex deques — no external deps, per the offline image).
+//!
+//! Design, in service of *deterministic* sweeps:
+//! - every task carries its input index; results are returned **in input
+//!   order** regardless of which worker ran what or when it finished, so
+//!   downstream aggregation is byte-identical to sequential execution;
+//! - tasks are dealt round-robin into per-worker deques; a worker pops
+//!   from the back of its own deque (LIFO, cache-friendly) and, when
+//!   empty, steals from the front of a victim's deque (FIFO — steals the
+//!   oldest, largest-remaining work first);
+//! - each worker owns private state `S` built by `init(worker_id)` (for
+//!   sweeps: its own PJRT runtime + compile cache), so no shared mutable
+//!   state crosses threads besides the queues and result slots;
+//! - a panicking task is caught and surfaced as an `Err` for that item —
+//!   the pool never hangs or aborts the process;
+//! - the first failing task aborts the pool (fail-fast, matching the
+//!   sequential sweep's early return): finished tasks keep their
+//!   results, still-queued tasks report a skip error that embeds the
+//!   root cause, and no further compute is wasted on a doomed grid;
+//! - a worker whose `init` fails simply exits; its dealt items are stolen
+//!   by surviving workers. Only if *every* worker fails do items report
+//!   an init error.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// Identity of one task execution: which worker ran it, which input slot.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskCtx {
+    pub worker: usize,
+    pub index: usize,
+}
+
+/// Number of workers to use when the caller asks for "auto".
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a user-facing worker-count value (`--jobs`, `$REPRO_JOBS`):
+/// "auto" or "0" means one worker per core, otherwise a count. One
+/// shared definition so the CLI flag and the env var can't drift.
+pub fn parse_jobs_value(s: &str) -> Result<usize> {
+    let t = s.trim();
+    if t == "auto" || t == "0" {
+        return Ok(default_jobs());
+    }
+    t.parse::<usize>()
+        .map_err(|_| anyhow!("expected a worker count or 'auto', got {s:?}"))
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_one<T, R, S, W>(work: &W, state: &mut S, ctx: TaskCtx, item: T) -> Result<R>
+where
+    W: Fn(&mut S, TaskCtx, T) -> Result<R>,
+{
+    match catch_unwind(AssertUnwindSafe(|| work(state, ctx, item))) {
+        Ok(r) => r,
+        Err(p) => Err(anyhow!(
+            "task {} panicked in worker {}: {}",
+            ctx.index,
+            ctx.worker,
+            panic_msg(p.as_ref())
+        )),
+    }
+}
+
+type Queue<T> = Mutex<VecDeque<(usize, T)>>;
+
+fn pop_own<T>(queues: &[Queue<T>], w: usize) -> Option<(usize, T)> {
+    queues[w].lock().unwrap().pop_back()
+}
+
+fn steal<T>(queues: &[Queue<T>], w: usize) -> Option<(usize, T)> {
+    let jobs = queues.len();
+    for d in 1..jobs {
+        let victim = (w + d) % jobs;
+        if let Some(t) = queues[victim].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Execute `items` on up to `jobs` workers, each with private state from
+/// `init(worker_id)`. Returns one `Result` per item, **in input order**.
+///
+/// `jobs <= 1` (or a single item) runs inline on the caller's thread with
+/// zero pool overhead — the two paths produce identical outputs for pure
+/// `work` functions, which is the sweep determinism guarantee.
+pub fn run_stateful<T, R, S, I, W>(
+    jobs: usize,
+    items: Vec<T>,
+    init: I,
+    work: W,
+) -> Vec<Result<R>>
+where
+    T: Send,
+    R: Send,
+    I: Fn(usize) -> Result<S> + Sync,
+    W: Fn(&mut S, TaskCtx, T) -> Result<R> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(n);
+    if jobs == 1 {
+        let mut out = Vec::with_capacity(n);
+        let state0 = catch_unwind(AssertUnwindSafe(|| init(0))).unwrap_or_else(|p| {
+            Err(anyhow!("init panicked: {}", panic_msg(p.as_ref())))
+        });
+        match state0 {
+            Ok(mut state) => {
+                let mut failed: Option<(usize, String)> = None;
+                for (i, item) in items.into_iter().enumerate() {
+                    if let Some((j, msg)) = &failed {
+                        out.push(Err(skip_error(i, *j, msg)));
+                        continue;
+                    }
+                    let ctx = TaskCtx { worker: 0, index: i };
+                    let r = run_one(&work, &mut state, ctx, item);
+                    if let Err(e) = &r {
+                        failed = Some((i, e.to_string()));
+                    }
+                    out.push(r);
+                }
+            }
+            Err(e) => {
+                let msg = format!("worker 0 init failed: {e}");
+                for _ in 0..n {
+                    out.push(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+        return out;
+    }
+
+    let queues: Vec<Queue<T>> = (0..jobs).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        queues[i % jobs].lock().unwrap().push_back((i, item));
+    }
+    let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let init_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let abort = AtomicBool::new(false);
+    // lowest-index failure seen so far; skip errors embed its message so
+    // whichever error surfaces first carries the root cause
+    let first_error: Mutex<Option<(usize, String)>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for w in 0..jobs {
+            let queues = &queues;
+            let slots = &slots;
+            let init = &init;
+            let work = &work;
+            let init_errors = &init_errors;
+            let abort = &abort;
+            let first_error = &first_error;
+            scope.spawn(move || {
+                // contain init panics too — a worker that cannot start
+                // must exit quietly (its deque gets stolen), not take the
+                // process down when the scope re-raises
+                let mut state = match catch_unwind(AssertUnwindSafe(|| init(w))) {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => {
+                        init_errors.lock().unwrap().push(format!("worker {w}: {e}"));
+                        return;
+                    }
+                    Err(p) => {
+                        init_errors.lock().unwrap().push(format!(
+                            "worker {w}: init panicked: {}", panic_msg(p.as_ref())));
+                        return;
+                    }
+                };
+                while !abort.load(Ordering::Relaxed) {
+                    let Some((i, item)) = pop_own(queues, w).or_else(|| steal(queues, w))
+                    else {
+                        break;
+                    };
+                    let ctx = TaskCtx { worker: w, index: i };
+                    let r = run_one(work, &mut state, ctx, item);
+                    if let Err(e) = &r {
+                        let mut fe = first_error.lock().unwrap();
+                        if fe.as_ref().map_or(true, |(j, _)| i < *j) {
+                            *fe = Some((i, e.to_string()));
+                        }
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+
+    let init_errors = init_errors.into_inner().unwrap();
+    let first_error = first_error.into_inner().unwrap();
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner().unwrap().unwrap_or_else(|| match &first_error {
+                Some((j, msg)) => Err(skip_error(i, *j, msg)),
+                None => Err(anyhow!(
+                    "task {i} was never executed (worker init failures: [{}])",
+                    init_errors.join("; ")
+                )),
+            })
+        })
+        .collect()
+}
+
+fn skip_error(i: usize, failed: usize, msg: &str) -> anyhow::Error {
+    anyhow!("task {i} skipped: pool aborted after task {failed} failed: {msg}")
+}
+
+/// Stateless convenience wrapper around [`run_stateful`].
+pub fn run<T, R, W>(jobs: usize, items: Vec<T>, work: W) -> Vec<Result<R>>
+where
+    T: Send,
+    R: Send,
+    W: Fn(TaskCtx, T) -> Result<R> + Sync,
+{
+    run_stateful(jobs, items, |_| Ok(()), |_, ctx, item| work(ctx, item))
+}
+
+/// Collapse per-item results to the first error (by input index), or the
+/// full ordered output vector.
+pub fn collect_ordered<R>(results: Vec<Result<R>>) -> Result<Vec<R>> {
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn results_are_in_input_order() {
+        for jobs in [1, 2, 4, 8] {
+            let items: Vec<usize> = (0..64).collect();
+            let results = run(jobs, items, |_ctx, i| {
+                // stagger so completion order differs from input order
+                std::thread::sleep(Duration::from_micros(((i * 7) % 13) as u64));
+                Ok(i * 2)
+            });
+            let vals = collect_ordered(results).unwrap();
+            assert_eq!(vals, (0..64).map(|i| i * 2).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_input_returns_empty() {
+        let results = run(4, Vec::<usize>::new(), |_ctx, i| Ok(i));
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn more_jobs_than_items() {
+        let results = run(16, vec![1usize, 2, 3], |_ctx, i| Ok(i + 10));
+        assert_eq!(collect_ordered(results).unwrap(), vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn panic_surfaces_as_error_not_hang() {
+        for jobs in [1, 4] {
+            let results = run(jobs, (0..8).collect::<Vec<usize>>(), |_ctx, i| {
+                if i == 3 {
+                    panic!("boom at {i}");
+                }
+                Ok(i)
+            });
+            assert_eq!(results.len(), 8);
+            let e = results[3].as_ref().unwrap_err().to_string();
+            assert!(e.contains("panicked"), "{e}");
+            assert!(e.contains("boom at 3"), "{e}");
+            // fail-fast: other items either finished before the abort
+            // (their own value) or were skipped with the cause embedded
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Ok(v) => assert_eq!(*v, i),
+                    Err(e) if i == 3 => assert!(e.to_string().contains("panicked")),
+                    Err(e) => {
+                        let m = e.to_string();
+                        assert!(m.contains("skipped"), "{m}");
+                        assert!(m.contains("boom at 3"), "{m}");
+                    }
+                }
+            }
+            // whichever error index surfaces first, it names the root cause
+            let surfaced = collect_ordered(results).unwrap_err().to_string();
+            assert!(surfaced.contains("boom at 3"), "{surfaced}");
+        }
+    }
+
+    #[test]
+    fn fail_fast_skips_remaining_work_sequentially() {
+        // jobs=1 is fully deterministic: everything after the failing
+        // index is skipped, nothing before it is
+        let results = run(1, (0..6).collect::<Vec<usize>>(), |_ctx, i| {
+            if i == 2 {
+                anyhow::bail!("item 2 refused");
+            }
+            Ok(i)
+        });
+        assert_eq!(*results[0].as_ref().unwrap(), 0);
+        assert_eq!(*results[1].as_ref().unwrap(), 1);
+        assert!(results[2].as_ref().unwrap_err().to_string().contains("refused"));
+        for r in &results[3..] {
+            let m = r.as_ref().unwrap_err().to_string();
+            assert!(m.contains("skipped") && m.contains("refused"), "{m}");
+        }
+    }
+
+    #[test]
+    fn failed_init_items_are_stolen_by_survivors() {
+        let results = run_stateful(
+            2,
+            (0..10).collect::<Vec<usize>>(),
+            |w| {
+                if w == 0 {
+                    Err(anyhow!("worker 0 cannot start"))
+                } else {
+                    Ok(w)
+                }
+            },
+            |state, _ctx, i| Ok(i + *state * 0),
+        );
+        assert_eq!(collect_ordered(results).unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn init_panic_is_contained_not_process_abort() {
+        // one worker's init panics: its items are stolen, the pool
+        // completes; all inits panicking degrades to per-item errors
+        let results = run_stateful(
+            2,
+            (0..6).collect::<Vec<usize>>(),
+            |w| {
+                if w == 0 {
+                    panic!("no device for worker {w}");
+                }
+                Ok(())
+            },
+            |_s, _ctx, i| Ok(i),
+        );
+        assert_eq!(collect_ordered(results).unwrap(), (0..6).collect::<Vec<_>>());
+
+        let results = run_stateful(
+            1,
+            vec![1usize, 2],
+            |_w| -> Result<()> { panic!("init always panics") },
+            |_s, _ctx, i| Ok(i),
+        );
+        for r in &results {
+            let m = r.as_ref().unwrap_err().to_string();
+            assert!(m.contains("panicked"), "{m}");
+        }
+    }
+
+    #[test]
+    fn all_init_failures_error_every_item() {
+        let results = run_stateful(
+            3,
+            (0..6).collect::<Vec<usize>>(),
+            |w| -> Result<()> { Err(anyhow!("no runtime on worker {w}")) },
+            |_state, _ctx, i| Ok(i),
+        );
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            let e = r.as_ref().unwrap_err().to_string();
+            assert!(e.contains("never executed"), "{e}");
+            assert!(e.contains("no runtime"), "{e}");
+        }
+    }
+
+    #[test]
+    fn work_is_stolen_from_a_busy_worker() {
+        // Handshake instead of a timing-dependent sleep: worker 0 blocks
+        // inside each of its tasks until worker 1 has executed 6 tasks —
+        // its own 5 dealt items plus at least one it could only have
+        // STOLEN from worker 0's deque (worker 0 is parked, not done).
+        let w1_count = AtomicUsize::new(0);
+        let results = run_stateful(
+            2,
+            (0..10).collect::<Vec<usize>>(),
+            |w| Ok(w),
+            |me, _ctx, i| {
+                if *me == 1 {
+                    w1_count.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    let t0 = std::time::Instant::now();
+                    while w1_count.load(Ordering::SeqCst) < 6
+                        && t0.elapsed() < Duration::from_secs(5)
+                    {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                Ok((*me, i))
+            },
+        );
+        let pairs = collect_ordered(results).unwrap();
+        assert_eq!(pairs.len(), 10);
+        // every even index was dealt to worker 0's deque; at least one of
+        // them must have been executed by worker 1 (stolen)
+        let stolen = pairs.iter().filter(|(w, i)| *w == 1 && i % 2 == 0).count();
+        assert!(stolen > 0, "no work was stolen: {pairs:?}");
+    }
+
+    #[test]
+    fn worker_state_is_initialized_once_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let results = run_stateful(
+            4,
+            (0..32).collect::<Vec<usize>>(),
+            |w| {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Ok(w)
+            },
+            |_state, _ctx, i| Ok(i),
+        );
+        assert!(collect_ordered(results).is_ok());
+        assert!(inits.load(Ordering::SeqCst) <= 4);
+    }
+}

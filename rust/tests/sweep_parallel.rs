@@ -1,0 +1,193 @@
+//! Parallel sweep engine: the determinism regression guard (jobs=1 vs
+//! jobs=N must produce byte-identical results and aggregates) plus
+//! concurrency edge cases, all through the public `run_plan_with` API
+//! with a synthetic cell runner — no artifacts required.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::sweep::{self, Cell, SweepPlan};
+use quantum_peft::coordinator::trainer::{RunResult, TrainConfig};
+use quantum_peft::data::glue;
+use quantum_peft::util::json::Json;
+use quantum_peft::util::rng::Rng;
+
+fn plan(tags: &[&str], tasks: Vec<glue::Task>, seeds: Vec<u64>) -> SweepPlan {
+    SweepPlan {
+        tags: tags.iter().map(|s| s.to_string()).collect(),
+        tasks,
+        seeds,
+        cfg: TrainConfig::default(),
+        backbone: None,
+        task_lr: BTreeMap::new(),
+    }
+}
+
+/// Deterministic stand-in for `trainer::run_glue`: the metric is a pure
+/// function of (tag, task, seed), like a real run with isolated RNG
+/// streams; the sleep scrambles completion order across workers.
+fn fake_run(cell: &Cell, cfg: &TrainConfig, sleep: bool) -> RunResult {
+    let tag_hash: u64 = cell.tag.bytes().map(|b| b as u64).sum();
+    let task_hash: u64 = cell.task.name().bytes().map(|b| b as u64).sum();
+    let mut rng = Rng::new(cfg.seed ^ (tag_hash << 16) ^ (task_hash << 32));
+    let metric = rng.f64();
+    if sleep {
+        std::thread::sleep(Duration::from_millis(rng.below(8) as u64));
+    }
+    RunResult {
+        tag: cell.tag.clone(),
+        task: cell.task.name().to_string(),
+        metric_name: cell.task.metric_name().to_string(),
+        best_metric: metric,
+        final_metric: metric,
+        losses: vec![],
+        adapter_params: 100 + tag_hash as usize,
+        trainable_params: 200 + tag_hash as usize,
+        wall_seconds: 0.0,
+        step_ms: (cfg.seed + 1) as f64,
+        extra_metrics: BTreeMap::new(),
+    }
+}
+
+fn run_with_jobs(p: &SweepPlan, jobs: usize, log: &EventLog) -> Vec<RunResult> {
+    sweep::run_plan_with(p, jobs, log, |_w| Ok(()),
+                         |_s, cell, cfg, _wlog| Ok(fake_run(cell, &cfg, jobs > 1)))
+        .unwrap()
+}
+
+fn assert_identical(a: &[RunResult], b: &[RunResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.tag, y.tag);
+        assert_eq!(x.task, y.task);
+        assert_eq!(x.metric_name, y.metric_name);
+        // bit-exact, not approximately equal: the determinism contract
+        assert_eq!(x.best_metric.to_bits(), y.best_metric.to_bits());
+        assert_eq!(x.final_metric.to_bits(), y.final_metric.to_bits());
+        assert_eq!(x.adapter_params, y.adapter_params);
+        assert_eq!(x.trainable_params, y.trainable_params);
+    }
+}
+
+#[test]
+fn jobs_1_and_jobs_4_are_byte_identical() {
+    let p = plan(&["enc_qpeft_pauli", "enc_lora"],
+                 vec![glue::Task::Sst2, glue::Task::Cola],
+                 vec![0, 1, 2]);
+    let log = EventLog::null();
+    let seq = run_with_jobs(&p, 1, &log);
+    assert_eq!(seq.len(), 12);
+    for jobs in [2, 4, 16] {
+        let par = run_with_jobs(&p, jobs, &log);
+        assert_identical(&seq, &par);
+        // aggregates must match exactly too: order, means, stds
+        let a_seq = sweep::aggregate(&seq);
+        let a_par = sweep::aggregate(&par);
+        assert_eq!(a_seq.len(), a_par.len());
+        for (x, y) in a_seq.iter().zip(&a_par) {
+            assert_eq!((&x.tag, &x.task), (&y.tag, &y.task));
+            assert_eq!(x.mean_metric.to_bits(), y.mean_metric.to_bits());
+            assert_eq!(x.std_metric.to_bits(), y.std_metric.to_bits());
+            assert_eq!(x.n_seeds, y.n_seeds);
+        }
+    }
+}
+
+#[test]
+fn results_follow_plan_cell_order_not_completion_order() {
+    let p = plan(&["a", "b", "c"], vec![glue::Task::Rte], vec![0, 1]);
+    let cells = p.cells();
+    let results = run_with_jobs(&p, 4, &EventLog::null());
+    assert_eq!(results.len(), cells.len());
+    for (cell, r) in cells.iter().zip(&results) {
+        assert_eq!(cell.tag, r.tag);
+        assert_eq!(cell.task.name(), r.task);
+    }
+}
+
+#[test]
+fn more_jobs_than_cells() {
+    let p = plan(&["only"], vec![glue::Task::Sst2], vec![0]);
+    let results = run_with_jobs(&p, 32, &EventLog::null());
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].tag, "only");
+}
+
+#[test]
+fn empty_plan_is_empty_not_hung() {
+    let p = plan(&[], vec![glue::Task::Sst2], vec![0, 1]);
+    let results = run_with_jobs(&p, 4, &EventLog::null());
+    assert!(results.is_empty());
+    assert!(sweep::aggregate(&results).is_empty());
+    // empty task / seed axes too
+    let p = plan(&["t"], vec![], vec![0]);
+    assert!(run_with_jobs(&p, 4, &EventLog::null()).is_empty());
+}
+
+#[test]
+fn panicking_cell_surfaces_as_error_not_hang() {
+    let p = plan(&["ok", "bad"], vec![glue::Task::Sst2], vec![0, 1]);
+    let err = sweep::run_plan_with(
+        &p, 4, &EventLog::null(), |_w| Ok(()),
+        |_s, cell, cfg, _wlog| {
+            if cell.tag == "bad" {
+                panic!("cell exploded: {}-{}", cell.tag, cell.seed);
+            }
+            Ok(fake_run(cell, &cfg, false))
+        })
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("panicked"), "{msg}");
+    assert!(msg.contains("cell exploded"), "{msg}");
+}
+
+#[test]
+fn failing_cell_is_a_deterministic_error() {
+    let p = plan(&["a", "b"], vec![glue::Task::Sst2], vec![0, 1]);
+    for jobs in [1, 4] {
+        let err = sweep::run_plan_with(
+            &p, jobs, &EventLog::null(), |_w| Ok(()),
+            |_s, cell, cfg, _wlog| {
+                if cell.tag == "b" && cell.seed == 0 {
+                    anyhow::bail!("cell b/0 refused");
+                }
+                Ok(fake_run(cell, &cfg, false))
+            })
+            .unwrap_err();
+        // fail-fast pool: whichever cell's error surfaces (the failure
+        // itself or a skip it caused), the message names the root cause
+        assert!(err.to_string().contains("cell b/0 refused"), "{err}");
+    }
+}
+
+#[test]
+fn parallel_sweep_logs_worker_tagged_lifecycle_events() {
+    let path = std::env::temp_dir().join("qp_sweep_parallel_events.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let log = EventLog::new(Some(path.clone()), false).unwrap();
+    let p = plan(&["x", "y"], vec![glue::Task::Sst2, glue::Task::Cola],
+                 vec![0, 1, 2]);
+    let n_cells = p.cells().len();
+    run_with_jobs(&p, 3, &log);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut starts = 0;
+    let mut dones = 0;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        match j.get("event").unwrap().as_str().unwrap() {
+            "cell_start" => {
+                starts += 1;
+                assert!(j.get("worker").unwrap().as_usize().unwrap() < 3);
+                assert!(j.get("i").unwrap().as_usize().unwrap() < n_cells);
+            }
+            "cell_done" => {
+                dones += 1;
+                assert!(j.get("worker").unwrap().as_usize().unwrap() < 3);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(starts, n_cells);
+    assert_eq!(dones, n_cells);
+}

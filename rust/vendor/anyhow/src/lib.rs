@@ -1,0 +1,225 @@
+//! Offline stand-in for the `anyhow` crate, API-compatible with the subset
+//! this repository uses: `Result`, `Error`, the `Context` extension trait
+//! on `Result`/`Option`, and the `anyhow!` / `bail!` macros.
+//!
+//! The build image has no crates.io access, so the dependency is vendored
+//! as a path crate (see rust/Cargo.toml). Swapping in the real `anyhow`
+//! later is a one-line Cargo.toml change; no call sites need to move.
+//!
+//! Semantics match real anyhow where it matters:
+//! - `Error` does NOT implement `std::error::Error` (this is what makes
+//!   the blanket `From<E: std::error::Error>` impl coherent alongside the
+//!   identity `From<Error>` used by `?`);
+//! - `.context(..)` wraps the prior error, and `Display` shows the chain
+//!   outermost-first (`"outer: inner"`), `Debug` shows a Caused-by list.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, as in real anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = vec![self.msg.as_str()];
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost message (root cause).
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, m) in self.chain().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{m}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into `Error`, flattening its source chain. This
+/// is what makes `?` work on io/parse/utf8/... results inside functions
+/// returning `anyhow::Result`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut cause = None;
+        for m in msgs.into_iter().rev() {
+            cause = Some(Box::new(Error { msg: m, cause }));
+        }
+        Error { msg: e.to_string(), cause }
+    }
+}
+
+// -- Context extension trait (the anyhow ext-trait pattern) ---------------
+
+mod ext {
+    /// Sealed adapter: anything that can become an `Error`. The blanket
+    /// impl for std errors and the concrete impl for `Error` are coherent
+    /// because `Error` never implements `std::error::Error` (same trick
+    /// real anyhow uses in its ext module).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// -- macros ---------------------------------------------------------------
+
+/// `anyhow!("fmt {args}")` — construct an ad-hoc `Error`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chains_and_displays() {
+        let r: Result<()> = io_err().context("opening config");
+        let e = r.unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("opening config"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through {}", 42))
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "fell through 42");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+}

@@ -1,0 +1,290 @@
+//! Offline stub of the `xla` (xla-rs / xla_extension) PJRT bindings.
+//!
+//! The build image does not ship the native XLA closure, so this crate
+//! provides the exact API surface the coordinator uses:
+//!
+//! - `Literal` is FULLY FUNCTIONAL as a host-side container (scalar/vec1/
+//!   reshape/to_vec/array_shape round-trips work), so all marshalling code
+//!   and its tests behave identically to the real bindings;
+//! - `PjRtClient::cpu()` succeeds (it is just a host handle), but
+//!   `compile`/`execute`/`from_text_file` return a clear "bindings
+//!   unavailable" error, so artifact-dependent paths fail loudly at run
+//!   time instead of at link time.
+//!
+//! Replacing this stub with the real bindings is a Cargo.toml swap; no
+//! call sites change.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: native XLA/PJRT bindings are not available in this build \
+         (the `xla` crate is an offline stub — see rust/vendor/xla)"
+    ))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host element types the coordinator marshals (f32 / i32).
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn to_buf(v: Vec<Self>) -> Buf;
+    fn from_buf(b: &Buf) -> Option<Vec<Self>>;
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Buf::F32(_) => ElementType::F32,
+            Buf::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_buf(v: Vec<f32>) -> Buf {
+        Buf::F32(v)
+    }
+    fn from_buf(b: &Buf) -> Option<Vec<f32>> {
+        match b {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_buf(v: Vec<i32>) -> Buf {
+        Buf::I32(v)
+    }
+    fn from_buf(b: &Buf) -> Option<Vec<i32>> {
+        match b {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Repr {
+    Array { dims: Vec<i64>, buf: Buf },
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: a typed buffer with dims, or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal(Repr);
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal(Repr::Array { dims: vec![], buf: T::to_buf(vec![v]) })
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal(Repr::Array {
+            dims: vec![v.len() as i64],
+            buf: T::to_buf(v.to_vec()),
+        })
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal(Repr::Tuple(elems))
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.0 {
+            Repr::Array { buf, .. } => {
+                let numel: i64 = dims.iter().product();
+                if numel as usize != buf.len() {
+                    return Err(Error(format!(
+                        "reshape to {dims:?} ({numel} elements) from buffer of {}",
+                        buf.len()
+                    )));
+                }
+                Ok(Literal(Repr::Array { dims: dims.to_vec(), buf: buf.clone() }))
+            }
+            Repr::Tuple(_) => Err(Error("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { dims, buf } => {
+                Ok(ArrayShape { dims: dims.clone(), ty: buf.ty() })
+            }
+            Repr::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.0 {
+            Repr::Array { buf, .. } => T::from_buf(buf).ok_or_else(|| {
+                Error(format!("literal holds {:?}, not {:?}", buf.ty(), T::TY))
+            }),
+            Repr::Tuple(_) => Err(Error("tuple literal has no flat buffer".into())),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.0 {
+            Repr::Tuple(elems) => Ok(elems),
+            Repr::Array { .. } => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+// -- PJRT handles (constructible, but compile/execute are unavailable) ----
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(Error(format!("HLO text file {p:?} does not exist")));
+        }
+        Err(unavailable(&format!("parsing HLO text {p:?}")))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub — PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compile"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PJRT buffer readback"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_scalar_and_vec_roundtrip() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+
+        let v = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = v.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.array_shape().unwrap().ty(), ElementType::S32);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_numel() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_an_error() {
+        assert!(Literal::vec1(&[1i32]).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+    }
+}
