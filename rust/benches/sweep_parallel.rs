@@ -7,13 +7,15 @@
 //! XLA bindings are present, and skips politely otherwise.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use quantum_peft::config;
 use quantum_peft::coordinator::events::EventLog;
 use quantum_peft::coordinator::sweep::{self, SweepPlan};
 use quantum_peft::data::glue;
 use quantum_peft::quantum::mappings::{self, Mapping};
+use quantum_peft::runtime::exe_cache::{CacheEvent, CompileLog, OnceMap};
 use quantum_peft::runtime::{Manifest, Runtime};
 use quantum_peft::util::pool;
 use quantum_peft::util::rng::Rng;
@@ -66,6 +68,39 @@ fn real_sweep(jobs: usize) -> anyhow::Result<f64> {
     Ok(t0.elapsed().as_secs_f64())
 }
 
+/// Parallel warm-up with a simulated compile (a sleep standing in for an
+/// XLA compile): `shared = true` routes all workers through one cache
+/// namespace (each path compiles once for the pool, as on CPU);
+/// `shared = false` namespaces per worker (the old per-worker-cache
+/// behavior, and today's fallback when clients cannot be shared).
+/// Returns (wall seconds, number of compiles actually run).
+fn cache_warmup(jobs: usize, paths: usize, shared: bool) -> (f64, usize) {
+    let cache: OnceMap<(usize, PathBuf), u32> = OnceMap::new();
+    let log = CompileLog::new();
+    // every worker touches every path, like sweep cells sharing (train,
+    // eval) computations across tasks and seeds
+    let items: Vec<usize> = (0..jobs * 2).collect();
+    let t0 = Instant::now();
+    let results = pool::run(jobs, items, |ctx, i| {
+        for p in 0..paths {
+            // namespace by item slot, not executing worker: work stealing
+            // makes ctx.worker nondeterministic, which would make the
+            // per-worker baseline's compile count noisy run-to-run
+            let ns = if shared { 0 } else { i % jobs };
+            let key = (ns, PathBuf::from(format!("artifacts/a{p}.hlo")));
+            cache.get_or_try_init(&key, || {
+                std::thread::sleep(Duration::from_millis(10));
+                log.record(&key.1, CacheEvent::Compile, 0.01,
+                           Some(ctx.worker));
+                Ok(0)
+            })?;
+        }
+        Ok(())
+    });
+    pool::collect_ordered(results).unwrap();
+    (t0.elapsed().as_secs_f64(), log.snapshot().len())
+}
+
 fn main() {
     println!("# parallel sweep engine: wall-clock vs --jobs");
     let cells = 24;
@@ -82,6 +117,15 @@ fn main() {
         assert_eq!(out, base, "parallel results diverged from sequential");
         println!("bench sweep_synthetic/jobs={jobs}   {cells} cells in {t:.3}s \
                   ({:.2}x, bit-identical)", t1 / t);
+    }
+
+    println!("\n# shared compile cache: pool warm-up, 6 paths x 10ms compile");
+    for jobs in [2usize, 4] {
+        let (tp, np) = cache_warmup(jobs, 6, false);
+        let (ts, ns) = cache_warmup(jobs, 6, true);
+        println!("bench cache_warmup/jobs={jobs}   per-worker {np} compiles \
+                  in {tp:.3}s | shared {ns} compiles in {ts:.3}s \
+                  ({:.2}x less compile work)", np as f64 / ns as f64);
     }
 
     println!("\n# real GLUE sweep (needs artifacts + native XLA bindings)");

@@ -141,6 +141,37 @@ where
     pool::collect_ordered(results)
 }
 
+/// Generic parallel executor for a *panel*: an ordered list of
+/// independent items, one result row each (no (task, seed) grid — the
+/// E2E Table-3/4 tag panel and the ViT ablation panels are this shape).
+/// Same contract as [`run_plan_with`]: results come back in input order
+/// for any `jobs`, each worker owns private state from `init(worker_id)`,
+/// and item lifecycle events carry the worker id.
+pub fn run_panel_with<T, S, I, F>(items: Vec<T>, jobs: usize, log: &EventLog,
+                                  init: I, run_item: F)
+                                  -> Result<Vec<RunResult>>
+where
+    T: Send,
+    I: Fn(usize) -> Result<S> + Sync,
+    F: Fn(&mut S, &T, &EventLog) -> Result<RunResult> + Sync,
+{
+    let total = items.len();
+    let results = pool::run_stateful(jobs, items, init, |state, ctx, item| {
+        let wlog = log.for_worker(ctx.worker);
+        wlog.emit("panel_start", vec![
+            ("i", ctx.index.into()), ("total", total.into()),
+        ]);
+        let r = run_item(state, &item, &wlog)?;
+        wlog.emit("panel_done", vec![
+            ("i", ctx.index.into()),
+            ("tag", r.tag.as_str().into()),
+            ("metric", crate::util::json::Json::Num(r.best_metric)),
+        ]);
+        Ok(r)
+    });
+    pool::collect_ordered(results)
+}
+
 /// Execute a GLUE-family sweep sequentially on the caller's runtime (one
 /// shared compile cache; every cell exactly once; per-cell RNG streams
 /// isolated via the cell seed).
@@ -176,11 +207,14 @@ pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
 }
 
 /// Execute a GLUE-family sweep across `jobs` workers. `jobs <= 1` is the
-/// sequential path on `rt` (shared compile cache). With `jobs > 1` every
-/// worker builds its own PJRT runtime (XLA compile caches are per-worker;
-/// the pretrained backbone checkpoint on disk is built once and shared),
-/// and cells are distributed by work stealing. Either way the result
-/// vector — and therefore `aggregate()` — is byte-identical.
+/// sequential path on `rt`. With `jobs > 1` cells are distributed by work
+/// stealing and every worker acquires its runtime via `rt.for_worker`:
+/// all workers share `rt`'s compile cache, so on backends that allow
+/// client sharing (CPU) each distinct artifact path compiles exactly once
+/// for the whole sweep, and otherwise workers fall back to private
+/// clients that still share parsed HLO protos and the aggregated compile
+/// log. Either way the result vector — and therefore `aggregate()` — is
+/// byte-identical for any `jobs`.
 pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                            log: &EventLog, jobs: usize)
                            -> Result<Vec<RunResult>> {
@@ -188,8 +222,8 @@ pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
         return run_glue_sweep(rt, manifest, plan, log);
     }
     run_plan_with(plan, jobs, log,
-        |_worker| Runtime::cpu(),
-        |rt, cell, cfg, wlog| {
+        |worker| rt.for_worker(worker),
+        |wrt, cell, cfg, wlog| {
             let spec = GlueRunSpec {
                 tag: &cell.tag,
                 task: cell.task,
@@ -197,7 +231,7 @@ pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                 backbone: plan.backbone.as_deref(),
                 extras_override: BTreeMap::new(),
             };
-            trainer::run_glue(rt, manifest, &spec, wlog)
+            trainer::run_glue(wrt.rt(), manifest, &spec, wlog)
         })
 }
 

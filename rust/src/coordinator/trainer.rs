@@ -17,12 +17,15 @@ use crate::util::rng::Rng;
 use super::events::EventLog;
 
 /// Linear warmup + linear decay (the paper's schedule, Tables 12/14).
+/// Degenerate configs are clamped instead of panicking: the warmup span
+/// never exceeds `total` (so `warmup_frac >= 1` or `total == 0` cannot
+/// underflow the decay span) and the decay denominator stays >= 1.
 pub fn lr_at(step: usize, total: usize, base: f32, warmup_frac: f32) -> f32 {
-    let warmup = ((total as f32 * warmup_frac) as usize).max(1);
+    let warmup = ((total as f32 * warmup_frac) as usize).max(1).min(total);
     if step < warmup {
         base * (step + 1) as f32 / warmup as f32
     } else {
-        let rest = (total - warmup).max(1) as f32;
+        let rest = total.saturating_sub(warmup).max(1) as f32;
         base * (1.0 - (step - warmup) as f32 / rest).max(0.0)
     }
 }
@@ -538,6 +541,25 @@ mod tests {
         assert!(lr_at(50, total, base, 0.1) < base);
         assert!(lr_at(99, total, base, 0.1) < lr_at(50, total, base, 0.1));
         assert!(lr_at(99, total, base, 0.1) >= 0.0);
+    }
+
+    #[test]
+    fn lr_schedule_degenerate_configs_do_not_underflow() {
+        // warmup_frac = 1.0: every step is warmup; the decay span used to
+        // compute `total - warmup` and wrap/panic
+        for step in 0..10 {
+            let lr = lr_at(step, 10, 0.01, 1.0);
+            assert!(lr.is_finite() && lr >= 0.0 && lr <= 0.01 + 1e-9,
+                    "step {step}: {lr}");
+        }
+        // warmup_frac > 1 used to make warmup > total
+        let lr = lr_at(5, 10, 0.01, 2.5);
+        assert!(lr.is_finite() && (0.0..=0.01).contains(&lr));
+        // total == 0: nothing to schedule, but no step may panic
+        assert!(lr_at(0, 0, 0.01, 0.1).is_finite());
+        assert!(lr_at(3, 0, 0.01, 0.1) >= 0.0);
+        // past-the-end steps decay to zero, never negative
+        assert_eq!(lr_at(1000, 10, 0.01, 0.1), 0.0);
     }
 
     #[test]

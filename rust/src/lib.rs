@@ -10,6 +10,28 @@
 //!
 //! Python never runs on any path in this crate — `make artifacts` is the
 //! only Python invocation in the whole system.
+//!
+//! ## Parallelism and the shared compile cache
+//!
+//! Sweep-backed tables (2/5/6–10), the E2E panel (Tables 3/4), and
+//! `repro sweep` run their cells on a work-stealing pool
+//! ([`util::pool`]). Worker count: the `$REPRO_JOBS` env var beats the
+//! preset's `[sweep] jobs` key; both accept a count or `auto`/`0` (one
+//! worker per core) and default to 1 (sequential). Results — and every
+//! rendered table — are byte-identical for any jobs value; only
+//! wall-clock and event-log interleaving change.
+//!
+//! All workers load artifacts through one shared
+//! [`runtime::exe_cache::ExeCache`]: parsed HLO protos are shared
+//! unconditionally, and on backends whose client tolerates concurrent
+//! execution (CPU PJRT) the compiled executable is shared too, so each
+//! distinct artifact path compiles **exactly once per process**, with
+//! in-flight compiles deduplicated (a path being compiled by one worker
+//! blocks, not re-compiles, in the others). On backends that cannot
+//! share a client, [`runtime::Runtime::for_worker`] falls back to a
+//! private same-platform client per worker that still shares the parse
+//! cache and the aggregated compile log; `REPRO_SHARE_CLIENT=0` forces
+//! that fallback on CPU (an A/B knob for shared vs per-worker warm-up).
 
 pub mod config;
 pub mod coordinator;

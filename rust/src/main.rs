@@ -69,7 +69,7 @@ commands:
            [--jobs N|auto] [--steps N] [--lr F] [--preset P]
            [--no-backbone true|false]
            runs the (tag, task, seed) grid on a work-stealing pool
-           (--jobs workers, each with its own runtime; default 1) and
+           (--jobs workers sharing one compile cache; default 1) and
            prints mean±std over seeds. --seeds a..b is INCLUSIVE
            (0..4 = the paper's five-seed protocol). Results and
            aggregates are byte-identical for every --jobs value; only
@@ -77,9 +77,16 @@ commands:
            worker tags change (jobs > 1 stamps a \"worker\" field).
   e2e      --tag <dec_tag> [--preset P]
   table    --id table1|table2|...|table10|fig6|fig5-params [--preset P]
-           (sweep-backed tables honor REPRO_JOBS / [sweep] jobs)
+           (sweep- and panel-backed tables — including the Table 3/4 E2E
+           panel — honor REPRO_JOBS / [sweep] jobs)
+all parallel paths share one compile cache: each distinct artifact path
+compiles exactly once per process on CPU (in-flight compiles dedup across
+workers); other backends fall back to per-worker compiles that still
+share parsed HLO protos and one aggregated compile log.
 env: REPRO_ARTIFACTS (default ./artifacts), REPRO_RUNS (default ./runs),
-     REPRO_JOBS (table sweep workers; 'auto' = one per core)";
+     REPRO_JOBS (sweep/panel workers; 'auto' = one per core),
+     REPRO_SHARE_CLIENT=0 (force per-worker clients; still shares the
+     parse cache + aggregated compile log)";
 
 fn load_env() -> Result<(Runtime, Manifest)> {
     let rt = Runtime::cpu()?;
@@ -406,16 +413,11 @@ fn cmd_table(args: &Args) -> Result<()> {
             &tables::table10(&rt, &manifest, &cfg, &log)?),
         other => bail!("unknown table id {other:?}"),
     }
-    // per-worker runtimes own their compile logs, so when this table id
-    // actually fanned out (tables 3/4 run sequentially) the shared
-    // runtime's figure undercounts
-    let pool_backed = !matches!(id, "table3" | "table4");
-    if jobs > 1 && pool_backed {
-        println!("\n(XLA compile time on the shared runtime: {:.1}s; \
-                  per-worker compiles at jobs={jobs} not included)",
-                 rt.total_compile_seconds());
-    } else {
-        println!("\n(total XLA compile time: {:.1}s)", rt.total_compile_seconds());
-    }
+    // every worker loads through the caller's shared compile cache, so
+    // this figure aggregates the whole pool's compiles at any --jobs
+    let n_compiles = rt.compile_log().len();
+    println!("\n(total XLA compile time: {:.1}s across {n_compiles} \
+              cache event(s), {jobs} worker(s) configured)",
+             rt.total_compile_seconds());
     Ok(())
 }

@@ -96,15 +96,18 @@ pub fn nist(cases: &[(Vec<u32>, Vec<Vec<u32>>)], max_n: usize) -> f64 {
     };
     let mut score = 0.0;
     let mut hyp_len = 0usize;
-    let mut ref_len = 0usize;
+    let mut ref_len = 0.0f64;
     for n in 1..=max_n {
         let mut num = 0.0;
         let mut den = 0usize;
         for (hyp, refs) in cases {
             if n == 1 {
                 hyp_len += hyp.len();
-                ref_len += refs.iter().map(|r| r.len()).sum::<usize>()
-                    / refs.len().max(1);
+                // per-case mean reference length, in f64 — integer
+                // division truncated (refs of len 2 and 3 averaged to 2,
+                // not 2.5) and skewed the length penalty below
+                ref_len += refs.iter().map(|r| r.len()).sum::<usize>() as f64
+                    / refs.len().max(1) as f64;
             }
             let h = ngrams(hyp, n);
             let mut ref_merged: HashMap<Gram, usize> = HashMap::new();
@@ -125,7 +128,7 @@ pub fn nist(cases: &[(Vec<u32>, Vec<Vec<u32>>)], max_n: usize) -> f64 {
         }
     }
     // NIST length penalty: exp(beta * log^2(min(1, Lh/Lr)))
-    let ratio = (hyp_len as f64 / ref_len.max(1) as f64).min(1.0);
+    let ratio = (hyp_len as f64 / ref_len.max(1.0)).min(1.0);
     let beta = -(0.5f64.ln()) / (1.5f64.ln() * 1.5f64.ln());
     let penalty = (-beta * ratio.ln() * ratio.ln()).exp();
     score * penalty
@@ -337,6 +340,30 @@ mod tests {
             assert!(nist(&cases, 5) >= 0.0);
             assert!(cider(&cases) >= 0.0);
         });
+    }
+
+    #[test]
+    fn nist_length_penalty_uses_fractional_mean_ref_len() {
+        // One case, hyp exactly matching the short reference:
+        //   hyp  = [1,2]             (len 2)
+        //   refs = [1,2], [1,2,3]    (mean len 2.5)
+        // Reference-corpus unigram counts: 1 -> 2, 2 -> 2, 3 -> 1 over 5
+        // words, so info(1) = info(2) = log2(5/2) and the matched
+        // info-weighted precision at n=1 is exactly log2(2.5). The length
+        // penalty must use ratio = 2/2.5 = 0.8; the old integer division
+        // truncated the mean to 2 (ratio 1.0, penalty 1.0) and overstated
+        // the score.
+        let c = vec![(vec![1u32, 2], vec![vec![1u32, 2], vec![1, 2, 3]])];
+        let got = nist(&c, 1);
+        let precision = 2.5f64.log2();
+        let beta = -(0.5f64.ln()) / (1.5f64.ln() * 1.5f64.ln());
+        let ratio: f64 = 2.0 / 2.5;
+        let penalty = (-beta * ratio.ln() * ratio.ln()).exp();
+        let want = precision * penalty;
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        // the truncated-mean value (penalty 1.0) is measurably different
+        assert!((got - precision).abs() > 0.2,
+                "length penalty did not bite: {got} vs {precision}");
     }
 
     #[test]

@@ -209,7 +209,9 @@ mod tests {
 
     #[test]
     fn solve_roundtrip() {
-        let a = Mat::from_fn(4, 4, |i, j| if i == j { 3.0 } else { 0.5 / (1.0 + i as f64 + j as f64) });
+        let a = Mat::from_fn(4, 4, |i, j| {
+            if i == j { 3.0 } else { 0.5 / (1.0 + i as f64 + j as f64) }
+        });
         let x_true = Mat::from_fn(4, 2, |i, j| (i + 2 * j) as f64);
         let b = a.matmul(&x_true);
         let x = a.clone().solve(b);

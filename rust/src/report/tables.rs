@@ -179,28 +179,50 @@ pub fn table5(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
 const TABLE3_TAGS: &[&str] = &["dec_ft", "dec_lora", "dec_adalora",
                                "dec_loha", "dec_lokr", "dec_qpeft_taylor"];
 
+/// Run the Table-3/4 E2E tag panel (fine-tune + greedy generation per
+/// cell) across `jobs` workers on the shared compile cache: the decoder
+/// backbone is pretrained once up front via `ensure_backbone`, results
+/// come back in `TABLE3_TAGS` order, and the rendered tables are
+/// byte-identical for any `jobs` value.
 pub fn table3_and_4(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
                     log: &EventLog) -> Result<(Table, Table)> {
     let backbone = ensure_backbone(rt, manifest, "dec", cfg, log)?;
     let tcfg = config::train_config(cfg);
-    let mut t3_rows = Vec::new();
-    let mut t4_rows = Vec::new();
+    let results = e2e_panel(rt, manifest, TABLE3_TAGS, &tcfg, &backbone,
+                            sweep_jobs(cfg)?, log)?;
+    Ok(table3_and_4_rows(&results))
+}
+
+fn e2e_panel(rt: &Runtime, manifest: &Manifest, tags: &[&str],
+             tcfg: &TrainConfig, backbone: &PathBuf, jobs: usize,
+             log: &EventLog) -> Result<Vec<trainer::RunResult>> {
+    let items: Vec<String> = tags.iter().map(|s| s.to_string()).collect();
+    sweep::run_panel_with(items, jobs, log,
+        |worker| rt.for_worker(worker),
+        |wrt, tag, wlog| {
+            let spec = E2eRunSpec {
+                tag: tag.as_str(),
+                cfg: tcfg.clone(),
+                backbone: Some(backbone),
+                gen_cases: tcfg.test_examples.min(96),
+            };
+            trainer::run_e2e(wrt.rt(), manifest, &spec, wlog)
+        })
+}
+
+/// Pure row construction from E2E panel results (in input order), shared
+/// with the determinism tests: identical result vectors render
+/// byte-identical tables.
+pub fn table3_and_4_rows(results: &[trainer::RunResult]) -> (Table, Table) {
     let mut qpeft_mem = 1usize;
-    let mut results = Vec::new();
-    for tag in TABLE3_TAGS {
-        let spec = E2eRunSpec {
-            tag,
-            cfg: tcfg.clone(),
-            backbone: Some(&backbone),
-            gen_cases: tcfg.test_examples.min(96),
-        };
-        let r = trainer::run_e2e(rt, manifest, &spec, log)?;
-        if tag.contains("qpeft") {
+    for r in results {
+        if r.tag.contains("qpeft") {
             qpeft_mem = accounting::adamw_state_bytes(r.trainable_params);
         }
-        results.push(r);
     }
-    for r in &results {
+    let mut t3_rows = Vec::new();
+    let mut t4_rows = Vec::new();
+    for r in results {
         t3_rows.push(vec![
             r.tag.clone(),
             fmt_params(r.adapter_params),
@@ -217,9 +239,9 @@ pub fn table3_and_4(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,
             format!("{:.2}x", mem as f64 / qpeft_mem.max(1) as f64),
         ]);
     }
-    Ok(((vec!["Method", "#Adapter Params", "BLEU", "NIST", "METEOR",
-              "ROUGE-L", "CIDEr"], t3_rows),
-        (vec!["Method", "Train ms/batch", "Opt-state Memory Ratio"], t4_rows)))
+    ((vec!["Method", "#Adapter Params", "BLEU", "NIST", "METEOR",
+           "ROUGE-L", "CIDEr"], t3_rows),
+     (vec!["Method", "Train ms/batch", "Opt-state Memory Ratio"], t4_rows))
 }
 
 // -------------------------------------------------------- Tables 6..10 ---
@@ -239,41 +261,25 @@ impl VitCell {
 }
 
 /// Run a panel of independent ViT cells, in input order, across `jobs`
-/// workers (each with its own runtime; the backbone checkpoint is built
-/// once and shared). `jobs <= 1` runs inline on the caller's runtime —
-/// both paths produce identical results (per-cell RNG derives only from
-/// the train config seed).
+/// workers on the shared compile cache (`rt.for_worker`; the backbone
+/// checkpoint is built once and shared). `jobs <= 1` runs inline on the
+/// caller's thread — both paths produce identical results (per-cell RNG
+/// derives only from the train config seed).
 fn vit_panel(rt: &Runtime, manifest: &Manifest, cells: Vec<VitCell>,
              tcfg: &TrainConfig, backbone: &PathBuf, jobs: usize,
              log: &EventLog) -> Result<Vec<trainer::RunResult>> {
-    if jobs <= 1 || cells.len() <= 1 {
-        let mut out = Vec::with_capacity(cells.len());
-        for c in cells {
+    sweep::run_panel_with(cells, jobs, log,
+        |worker| rt.for_worker(worker),
+        |wrt, c, wlog| {
             let spec = VitRunSpec {
                 tag: &c.tag,
                 cfg: tcfg.clone(),
                 backbone: Some(backbone),
                 base_bits: c.base_bits,
-                extras_override: c.overrides,
+                extras_override: c.overrides.clone(),
             };
-            out.push(trainer::run_vit(rt, manifest, &spec, log)?);
-        }
-        return Ok(out);
-    }
-    let results = pool::run_stateful(jobs, cells,
-        |_worker| Runtime::cpu(),
-        |wrt, ctx, c| {
-            let wlog = log.for_worker(ctx.worker);
-            let spec = VitRunSpec {
-                tag: &c.tag,
-                cfg: tcfg.clone(),
-                backbone: Some(backbone),
-                base_bits: c.base_bits,
-                extras_override: c.overrides,
-            };
-            trainer::run_vit(wrt, manifest, &spec, &wlog)
-        });
-    pool::collect_ordered(results)
+            trainer::run_vit(wrt.rt(), manifest, &spec, wlog)
+        })
 }
 
 pub fn table6(rt: &Runtime, manifest: &Manifest, cfg: &config::Config,

@@ -1,69 +1,169 @@
-//! PJRT client wrapper + executable cache.
+//! PJRT client wrapper over the shared compile cache.
 //!
 //! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
 //! jax >= 0.5 serialized protos — see /opt/xla-example/README.md); the
 //! text parser reassigns instruction ids and round-trips cleanly.
-//! Compiles are cached per artifact path: a sweep touching the same
-//! (train, eval) computations across tasks/seeds compiles each exactly
-//! once.
+//!
+//! Compiles go through `runtime::exe_cache`: one `ExeCache` can back any
+//! number of runtimes, sharing parsed HLO protos, the aggregated compile
+//! log, and — for runtimes on the same client — the compiled executables
+//! themselves, with in-flight deduplication under concurrency. A sweep
+//! touching the same (train, eval) computations across workers, tasks and
+//! seeds compiles each artifact path exactly once on backends that allow
+//! client sharing (see `Runtime::for_worker`).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
-use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, Context, Result};
+use xla::PjRtClient;
+
+use super::exe_cache::{CompileRecord, ExeCache};
 
 pub struct Runtime {
     client: PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<PjRtLoadedExecutable>>>,
-    pub compile_log: Mutex<Vec<(PathBuf, f64)>>,
+    cache: Arc<ExeCache>,
+    client_id: u64,
+    /// Pool worker this runtime serves (stamped into compile records).
+    worker: Option<usize>,
 }
 
 impl Runtime {
+    /// A CPU runtime with its own fresh compile cache.
     pub fn cpu() -> Result<Runtime> {
+        Runtime::cpu_with_cache(Arc::new(ExeCache::new()), None)
+    }
+
+    /// A CPU runtime attached to an existing shared cache: parsed HLO
+    /// protos and the aggregated compile log are shared with every other
+    /// runtime on `cache`; compiled executables stay per-client (a PJRT
+    /// executable is only valid on the client that compiled it).
+    pub fn cpu_with_cache(cache: Arc<ExeCache>, worker: Option<usize>)
+                          -> Result<Runtime> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()),
-                     compile_log: Mutex::new(Vec::new()) })
+        let client_id = cache.register_client();
+        Ok(Runtime { client, cache, client_id, worker })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(path) {
-            return Ok(exe.clone());
+    /// The shared compile cache this runtime loads through.
+    pub fn cache(&self) -> &Arc<ExeCache> {
+        &self.cache
+    }
+
+    /// Whether this runtime's client tolerates concurrent compilation and
+    /// execution from multiple worker threads (so one compiled executable
+    /// can serve the whole pool). True for host-side CPU PJRT; device
+    /// backends with per-thread contexts must answer false and take the
+    /// private-client fallback in [`Runtime::for_worker`]. Setting
+    /// `REPRO_SHARE_CLIENT=0` forces false, which makes the fallback a
+    /// live, testable path on CPU (and an A/B knob for benchmarking
+    /// shared vs per-worker warm-up).
+    ///
+    /// NOTE for the real-bindings swap (rust/vendor/xla is a stub): the
+    /// shared path also relies on `PjRtClient`/`PjRtLoadedExecutable`
+    /// being `Sync` so `&Runtime` can cross pool threads. If the real
+    /// types are not, or the native client is not safe under concurrent
+    /// execute, this must return false — the fallback keeps parse-once
+    /// and the aggregated log either way.
+    pub fn supports_concurrent_execution(&self) -> bool {
+        if let Ok(v) = std::env::var("REPRO_SHARE_CLIENT") {
+            // setting the var at all signals intent to override: only an
+            // explicit truthy value keeps sharing, so "0"/"off"/"no"/""
+            // and any other spelling all force the private fallback
+            // instead of silently doing nothing
+            let v = v.trim().to_ascii_lowercase();
+            if !matches!(v.as_str(), "1" | "true" | "yes" | "on") {
+                return false;
+            }
         }
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp)
-                .with_context(|| format!("XLA compile of {path:?}"))?,
-        );
-        let secs = t0.elapsed().as_secs_f64();
-        self.compile_log.lock().unwrap().push((path.to_path_buf(), secs));
-        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
-        Ok(exe)
+        self.client.platform_name().starts_with("cpu")
+    }
+
+    /// A runtime handle for one pool worker: the caller's own client when
+    /// the backend allows concurrent execution — every artifact then
+    /// compiles exactly once for the whole pool — or, as the fallback, a
+    /// private same-platform client on the same shared cache (parses
+    /// exactly once; compiles once per worker; one aggregated log either
+    /// way). A backend with no per-worker client constructor is an error,
+    /// not a silent CPU substitution: jobs > 1 must never train on a
+    /// different device than jobs = 1.
+    pub fn for_worker(&self, worker: usize) -> Result<WorkerRuntime<'_>> {
+        if self.supports_concurrent_execution() {
+            Ok(WorkerRuntime::Shared(self))
+        } else if self.client.platform_name().starts_with("cpu") {
+            Ok(WorkerRuntime::Private(Runtime::cpu_with_cache(
+                self.cache.clone(), Some(worker))?))
+        } else {
+            anyhow::bail!(
+                "backend {:?} cannot share its client across sweep workers \
+                 and has no per-worker client constructor; run with jobs=1",
+                self.platform())
+        }
+    }
+
+    /// Load + compile an HLO-text artifact through the shared cache
+    /// (parse-once, compile-once per client, in-flight deduplicated).
+    pub fn load(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.cache.load(&self.client, self.client_id, path, self.worker)
     }
 
     /// Execute with literal inputs (owned or borrowed); returns the
     /// flattened output tuple.
     pub fn run<L: std::borrow::Borrow<xla::Literal>>(
-        &self, exe: &PjRtLoadedExecutable, inputs: &[L])
+        &self, exe: &xla::PjRtLoadedExecutable, inputs: &[L])
         -> Result<Vec<xla::Literal>> {
         let bufs = exe.execute::<L>(inputs)
             .context("PJRT execute")?;
-        let out = bufs[0][0].to_literal_sync()?;
+        let buf = bufs.first().and_then(|d| d.first()).ok_or_else(|| {
+            anyhow!("PJRT execute returned no output buffer \
+                     (devices={}, first-device outputs={})",
+                    bufs.len(), bufs.first().map_or(0, |d| d.len()))
+        })?;
+        let out = buf.to_literal_sync()?;
         // aot.py lowers with return_tuple=True: output is always a tuple
         Ok(out.to_tuple()?)
     }
 
+    /// Seconds spent in XLA compiles, aggregated across every runtime
+    /// sharing this cache (all pool workers included).
     pub fn total_compile_seconds(&self) -> f64 {
-        self.compile_log.lock().unwrap().iter().map(|(_, s)| s).sum()
+        self.cache.log().total_compile_seconds()
+    }
+
+    /// Snapshot of the shared cache's parse/compile records.
+    pub fn compile_log(&self) -> Vec<CompileRecord> {
+        self.cache.log().snapshot()
+    }
+}
+
+/// One pool worker's view of a runtime — either a borrow of the shared
+/// runtime (backend allows concurrent execution; executables shared) or a
+/// private runtime on the same cache (parse cache + log shared). Dropping
+/// a private worker runtime evicts its executables from the shared cache:
+/// its client id is never reused, so they could never be requested again
+/// and would otherwise accumulate across panels.
+pub enum WorkerRuntime<'a> {
+    Shared(&'a Runtime),
+    Private(Runtime),
+}
+
+impl WorkerRuntime<'_> {
+    pub fn rt(&self) -> &Runtime {
+        match self {
+            WorkerRuntime::Shared(rt) => rt,
+            WorkerRuntime::Private(rt) => rt,
+        }
+    }
+}
+
+impl Drop for WorkerRuntime<'_> {
+    fn drop(&mut self) {
+        if let WorkerRuntime::Private(rt) = self {
+            rt.cache.evict_client(rt.client_id);
+        }
     }
 }

@@ -1,0 +1,468 @@
+//! Shared concurrent compile cache (`runtime::exe_cache`).
+//!
+//! Every `Runtime` loads artifacts through an `ExeCache`. The cache is a
+//! process-wide (Arc-shared) subsystem with three guarantees the parallel
+//! sweep/panel engines rely on:
+//!
+//! - **In-flight deduplication** (`OnceMap`): a path being compiled by
+//!   one worker *blocks* — rather than re-compiles — in every other
+//!   worker that requests it; all of them share the one result.
+//! - **Parse-once, everywhere**: the HLO text proto for a path is parsed
+//!   exactly once per process and shared across all clients on the cache.
+//! - **Compile-once where the backend allows**: executables are keyed by
+//!   (client id, path) because a PJRT executable is only valid on the
+//!   client that compiled it. Workers that share one client (the CPU
+//!   path — see `Runtime::for_worker`) therefore compile each distinct
+//!   artifact path exactly once for the whole pool; workers that must
+//!   own private clients fall back to one compile per (worker, path)
+//!   while still sharing the parse cache and the aggregated log.
+//!
+//! The `CompileLog` aggregates every parse/compile across all sharing
+//! runtimes, so `repro table`'s compile-time figure is the whole-pool
+//! total no matter how many workers ran.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+// ---------------------------------------------------------------- OnceMap ---
+
+use crate::util::panic_msg;
+
+enum SlotState<V> {
+    InFlight,
+    Ready(V),
+    Failed(String),
+}
+
+struct Slot<V> {
+    state: Mutex<SlotState<V>>,
+    cv: Condvar,
+}
+
+/// Concurrent fill-once map with in-flight deduplication: for each key,
+/// exactly one caller runs the init closure; concurrent callers for the
+/// same key block until it finishes and then clone its result. A failed
+/// init propagates its error to the initiator and to everyone already
+/// waiting, and is *not* cached — the key becomes initializable again
+/// (matching the old per-runtime cache, which retried failed compiles).
+///
+/// The init closure runs without any map-wide lock held, so inits for
+/// different keys proceed in parallel; it must not recurse into the same
+/// map with the same key (that would self-deadlock).
+pub struct OnceMap<K, V> {
+    slots: Mutex<HashMap<K, Arc<Slot<V>>>>,
+}
+
+impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
+    pub fn new() -> OnceMap<K, V> {
+        OnceMap { slots: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of keys present (ready or in flight).
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove every key matching `pred`. Used for client eviction; the
+    /// caller must ensure no init for a matching key is still in flight
+    /// (waiters already holding the slot are unaffected — they see its
+    /// terminal state — but the key becomes initializable again).
+    pub fn remove_where(&self, pred: impl Fn(&K) -> bool) {
+        self.slots.lock().unwrap().retain(|k, _| !pred(k));
+    }
+
+    /// The cached value for `key`, or the result of running `init` —
+    /// exactly once per key under any amount of concurrency.
+    pub fn get_or_try_init<F>(&self, key: &K, init: F) -> Result<V>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        let (slot, claimed) = {
+            let mut slots = self.slots.lock().unwrap();
+            match slots.get(key) {
+                Some(s) => (s.clone(), false),
+                None => {
+                    let s = Arc::new(Slot {
+                        state: Mutex::new(SlotState::InFlight),
+                        cv: Condvar::new(),
+                    });
+                    slots.insert(key.clone(), s.clone());
+                    (s, true)
+                }
+            }
+        };
+        if claimed {
+            // contain init panics: a panic that left the slot InFlight
+            // would deadlock every waiter (the pool catches the panic at
+            // the cell boundary, but sibling workers block in here)
+            let r = match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(init)) {
+                Ok(r) => r,
+                Err(p) => Err(anyhow!("init panicked: {}", panic_msg(p.as_ref()))),
+            };
+            let mut st = slot.state.lock().unwrap();
+            return match r {
+                Ok(v) => {
+                    *st = SlotState::Ready(v.clone());
+                    slot.cv.notify_all();
+                    Ok(v)
+                }
+                Err(e) => {
+                    // alternate formatting renders the full context chain
+                    // (root cause included) under real anyhow too
+                    *st = SlotState::Failed(format!("{e:#}"));
+                    slot.cv.notify_all();
+                    drop(st);
+                    // failures are retryable: forget the slot (waiters
+                    // already hold an Arc to it and will see Failed)
+                    self.slots.lock().unwrap().remove(key);
+                    Err(e)
+                }
+            };
+        }
+        let mut st = slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Ready(v) => return Ok(v.clone()),
+                SlotState::Failed(msg) => {
+                    return Err(anyhow!("shared compile failed: {msg}"));
+                }
+                SlotState::InFlight => st = slot.cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+impl<K: Clone + Eq + Hash, V: Clone> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        OnceMap::new()
+    }
+}
+
+// ------------------------------------------------------------- CompileLog ---
+
+/// What kind of work a cache record describes: an HLO-text parse (shared
+/// across all clients) or an XLA compile (per client).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheEvent {
+    Parse,
+    Compile,
+}
+
+/// One record in the aggregated compile log.
+#[derive(Clone, Debug)]
+pub struct CompileRecord {
+    pub path: PathBuf,
+    pub event: CacheEvent,
+    pub secs: f64,
+    /// Pool worker on whose behalf the work ran. Populated by
+    /// private-client fallback runtimes (`Runtime::cpu_with_cache` with a
+    /// worker tag, e.g. under `REPRO_SHARE_CLIENT=0`); `None` on the
+    /// shared-client path, where a compile serves every worker at once
+    /// and single-worker attribution would be arbitrary.
+    pub worker: Option<usize>,
+}
+
+/// Thread-safe, append-only log of every parse/compile the cache ran,
+/// aggregated across all runtimes sharing it.
+pub struct CompileLog {
+    records: Mutex<Vec<CompileRecord>>,
+}
+
+impl CompileLog {
+    pub fn new() -> CompileLog {
+        CompileLog { records: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, path: &Path, event: CacheEvent, secs: f64,
+                  worker: Option<usize>) {
+        self.records.lock().unwrap().push(CompileRecord {
+            path: path.to_path_buf(),
+            event,
+            secs,
+            worker,
+        });
+    }
+
+    /// Snapshot of all records, in recording order.
+    pub fn snapshot(&self) -> Vec<CompileRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    /// Total seconds spent in XLA compiles (parses excluded).
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.records.lock().unwrap().iter()
+            .filter(|r| r.event == CacheEvent::Compile)
+            .map(|r| r.secs)
+            .sum()
+    }
+
+    /// Compile count per artifact path — the "each distinct path compiles
+    /// exactly once" guard asserted by the parallel-panel tests.
+    pub fn compiles_per_path(&self) -> BTreeMap<PathBuf, usize> {
+        let mut out = BTreeMap::new();
+        for r in self.records.lock().unwrap().iter() {
+            if r.event == CacheEvent::Compile {
+                *out.entry(r.path.clone()).or_insert(0) += 1;
+            }
+        }
+        out
+    }
+}
+
+impl Default for CompileLog {
+    fn default() -> Self {
+        CompileLog::new()
+    }
+}
+
+// --------------------------------------------------------------- ExeCache ---
+
+/// The shared artifact cache: parse-once HLO protos, compile-once
+/// executables per client, one aggregated log. Construct once, wrap in an
+/// `Arc`, and hand to every `Runtime` that should share warm-up work.
+pub struct ExeCache {
+    protos: OnceMap<PathBuf, Arc<HloModuleProto>>,
+    exes: OnceMap<(u64, PathBuf), Arc<PjRtLoadedExecutable>>,
+    log: CompileLog,
+    next_client: AtomicU64,
+}
+
+impl ExeCache {
+    pub fn new() -> ExeCache {
+        ExeCache {
+            protos: OnceMap::new(),
+            exes: OnceMap::new(),
+            log: CompileLog::new(),
+            next_client: AtomicU64::new(0),
+        }
+    }
+
+    /// Register one PJRT client with this cache, returning its executable
+    /// namespace id. Compiled executables never cross client ids (a PJRT
+    /// executable is only valid on the client that compiled it); parsed
+    /// protos and the log are shared across all of them.
+    pub fn register_client(&self) -> u64 {
+        self.next_client.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// The aggregated parse/compile log.
+    pub fn log(&self) -> &CompileLog {
+        &self.log
+    }
+
+    /// Number of distinct (client, path) executables currently cached or
+    /// in flight.
+    pub fn cached_executables(&self) -> usize {
+        self.exes.len()
+    }
+
+    /// Drop every executable compiled for one client. Called when a
+    /// private worker runtime is released: its client id is never handed
+    /// out again, so its executables could otherwise never be requested —
+    /// or, under real PJRT, even remain valid — yet would stay alive in
+    /// the process-wide map. Parsed protos and the log are kept.
+    pub fn evict_client(&self, client_id: u64) {
+        self.exes.remove_where(|(id, _)| *id == client_id);
+    }
+
+    /// Parse-once: the HLO text proto for `path`, shared across clients.
+    pub fn proto(&self, path: &Path, worker: Option<usize>)
+                 -> Result<Arc<HloModuleProto>> {
+        self.protos.get_or_try_init(&path.to_path_buf(), || {
+            let t0 = Instant::now();
+            let proto = HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            self.log.record(path, CacheEvent::Parse,
+                            t0.elapsed().as_secs_f64(), worker);
+            Ok(Arc::new(proto))
+        })
+    }
+
+    /// Load + compile an artifact for one client — compile-once per
+    /// (client, path), with concurrent requests for the same executable
+    /// blocking on the in-flight compile instead of duplicating it.
+    pub fn load(&self, client: &PjRtClient, client_id: u64, path: &Path,
+                worker: Option<usize>) -> Result<Arc<PjRtLoadedExecutable>> {
+        self.exes.get_or_try_init(&(client_id, path.to_path_buf()), || {
+            let proto = self.proto(path, worker)?;
+            let t0 = Instant::now();
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)
+                .with_context(|| format!("XLA compile of {path:?}"))?;
+            self.log.record(path, CacheEvent::Compile,
+                            t0.elapsed().as_secs_f64(), worker);
+            Ok(Arc::new(exe))
+        })
+    }
+}
+
+impl Default for ExeCache {
+    fn default() -> Self {
+        ExeCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn once_map_initializes_each_key_exactly_once_under_contention() {
+        let map: OnceMap<PathBuf, u64> = OnceMap::new();
+        let log = CompileLog::new();
+        let inits = AtomicUsize::new(0);
+        const THREADS: usize = 8;
+        const PATHS: usize = 5;
+        std::thread::scope(|scope| {
+            for w in 0..THREADS {
+                let map = &map;
+                let log = &log;
+                let inits = &inits;
+                scope.spawn(move || {
+                    for p in 0..PATHS {
+                        let path = PathBuf::from(format!("artifacts/{p}.hlo"));
+                        let v = map.get_or_try_init(&path, || {
+                            inits.fetch_add(1, Ordering::SeqCst);
+                            // widen the in-flight window so threads pile up
+                            std::thread::sleep(Duration::from_millis(5));
+                            log.record(&path, CacheEvent::Compile, 0.005,
+                                       Some(w));
+                            Ok(p as u64 * 10)
+                        }).unwrap();
+                        assert_eq!(v, p as u64 * 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(inits.load(Ordering::SeqCst), PATHS,
+                   "a concurrent request re-ran an init");
+        let per_path = log.compiles_per_path();
+        assert_eq!(per_path.len(), PATHS);
+        for (path, n) in per_path {
+            assert_eq!(n, 1, "{path:?} compiled more than once");
+        }
+    }
+
+    #[test]
+    fn failed_init_propagates_and_is_retryable() {
+        let map: OnceMap<u32, u32> = OnceMap::new();
+        let e = map.get_or_try_init(&7, || Err(anyhow!("no backend")))
+            .unwrap_err();
+        assert!(e.to_string().contains("no backend"), "{e}");
+        // the failure is not cached: a later caller re-runs init
+        let v = map.get_or_try_init(&7, || Ok(42)).unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(map.len(), 1);
+        // and the ready value sticks
+        let v = map.get_or_try_init(&7, || Ok(99)).unwrap();
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn panicking_init_fails_cleanly_and_releases_the_key() {
+        let map: OnceMap<u32, u32> = OnceMap::new();
+        let e = map.get_or_try_init(&3, || panic!("compile exploded"))
+            .unwrap_err();
+        assert!(e.to_string().contains("compile exploded"), "{e}");
+        // the key is retryable afterwards, exactly like an Err init
+        assert_eq!(map.get_or_try_init(&3, || Ok(9)).unwrap(), 9);
+    }
+
+    #[test]
+    fn waiters_observe_the_in_flight_failure_or_retry_cleanly() {
+        use std::sync::atomic::AtomicBool;
+        let map: OnceMap<u32, u32> = OnceMap::new();
+        let entered = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let map = &map;
+            let entered = &entered;
+            scope.spawn(move || {
+                let r = map.get_or_try_init(&1, || {
+                    entered.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(40));
+                    Err(anyhow!("boom"))
+                });
+                assert!(r.unwrap_err().to_string().contains("boom"));
+            });
+            scope.spawn(move || {
+                while !entered.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                // arrives during the in-flight failure (gets its error) or
+                // just after the retryable removal (runs its own init)
+                match map.get_or_try_init(&1, || Ok(5)) {
+                    Err(e) => assert!(e.to_string().contains("boom"), "{e}"),
+                    Ok(v) => assert_eq!(v, 5),
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn remove_where_evicts_one_client_namespace_and_allows_reinit() {
+        let map: OnceMap<(u64, PathBuf), u32> = OnceMap::new();
+        let inits = AtomicUsize::new(0);
+        let get = |id: u64, p: &str| {
+            map.get_or_try_init(&(id, PathBuf::from(p)), || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Ok(id as u32)
+            }).unwrap()
+        };
+        assert_eq!(get(0, "a.hlo"), 0);
+        assert_eq!(get(1, "a.hlo"), 1);
+        assert_eq!(get(1, "b.hlo"), 1);
+        assert_eq!(map.len(), 3);
+        // evict client 1: its keys go, client 0's survive
+        map.remove_where(|(id, _)| *id == 1);
+        assert_eq!(map.len(), 1);
+        assert_eq!(get(0, "a.hlo"), 0); // still cached
+        assert_eq!(inits.load(Ordering::SeqCst), 3);
+        assert_eq!(get(1, "a.hlo"), 1); // evicted: re-initializable
+        assert_eq!(inits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn exe_cache_namespaces_clients_and_shares_the_log() {
+        let cache = ExeCache::new();
+        let a = cache.register_client();
+        let b = cache.register_client();
+        assert_ne!(a, b);
+        assert_eq!(cache.cached_executables(), 0);
+        assert_eq!(cache.log().total_compile_seconds(), 0.0);
+        assert!(cache.log().compiles_per_path().is_empty());
+        cache.log().record(Path::new("x.hlo"), CacheEvent::Compile, 1.5, None);
+        cache.log().record(Path::new("x.hlo"), CacheEvent::Parse, 0.5, Some(2));
+        assert!((cache.log().total_compile_seconds() - 1.5).abs() < 1e-12);
+        assert_eq!(cache.log().compiles_per_path()[Path::new("x.hlo")], 1);
+        assert_eq!(cache.log().snapshot().len(), 2);
+    }
+
+    #[test]
+    fn exe_cache_load_fails_loudly_without_bindings() {
+        // the offline xla stub cannot parse/compile; the cache must
+        // surface that with path context and cache nothing for the key
+        let cache = ExeCache::new();
+        let client = PjRtClient::cpu().unwrap();
+        let id = cache.register_client();
+        let err = cache.load(&client, id, Path::new("/nonexistent.hlo"), None)
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("/nonexistent.hlo"), "{msg}");
+        assert_eq!(cache.log().snapshot().len(), 0);
+        assert_eq!(cache.cached_executables(), 0);
+    }
+}

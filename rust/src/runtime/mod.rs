@@ -2,11 +2,13 @@
 //! the coordinator's hot path. Python never runs here.
 
 pub mod client;
+pub mod exe_cache;
 pub mod manifest;
 pub mod session;
 pub mod tensors;
 
-pub use client::Runtime;
+pub use client::{Runtime, WorkerRuntime};
+pub use exe_cache::ExeCache;
 pub use manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
 pub use session::TrainSession;
 pub use tensors::HostTensor;

@@ -159,7 +159,12 @@ impl<'rt> TrainSession<'rt> {
         let x = batch_x.to_literal()?;
         args.push(&x);
         let outs = self.rt.run(&self.eval_exe, &args)?;
-        HostTensor::from_literal(&outs[0])
+        let logits = match outs.into_iter().next() {
+            Some(l) => l,
+            None => bail!("eval artifact for {:?} returned an empty output \
+                           tuple (expected logits)", self.entry.tag),
+        };
+        HostTensor::from_literal(&logits)
     }
 
     /// Snapshot all state as named host tensors (checkpointing).

@@ -8,6 +8,18 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 
+/// Best-effort text of a caught panic payload (shared by the pool's task
+/// containment and the compile cache's init containment).
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// proptest-lite: run `f` over `n` seeded random cases; panics with the
 /// failing seed for reproduction. Used where the real proptest crate
 /// would be (coordinator/quantum invariants).

@@ -29,6 +29,8 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
+use super::panic_msg;
+
 /// Identity of one task execution: which worker ran it, which input slot.
 #[derive(Clone, Copy, Debug)]
 pub struct TaskCtx {
@@ -51,16 +53,6 @@ pub fn parse_jobs_value(s: &str) -> Result<usize> {
     }
     t.parse::<usize>()
         .map_err(|_| anyhow!("expected a worker count or 'auto', got {s:?}"))
-}
-
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
 }
 
 fn run_one<T, R, S, W>(work: &W, state: &mut S, ctx: TaskCtx, item: T) -> Result<R>

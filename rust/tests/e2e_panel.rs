@@ -1,0 +1,185 @@
+//! Parallel E2E (Table 3/4) panel + shared compile cache guards, through
+//! the public `run_panel_with` / `table3_and_4_rows` / `exe_cache` APIs
+//! with a synthetic cell runner — no artifacts required:
+//!
+//! - jobs=1 vs jobs=N must produce byte-identical results and rendered
+//!   tables (the Table 3/4 determinism contract);
+//! - under a concurrent panel, the shared cache must compile each
+//!   distinct artifact path exactly once, asserted on the aggregated
+//!   compile log.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::sweep;
+use quantum_peft::coordinator::trainer::RunResult;
+use quantum_peft::report::{self, tables};
+use quantum_peft::runtime::exe_cache::{CacheEvent, CompileLog, OnceMap};
+use quantum_peft::runtime::{Runtime, WorkerRuntime};
+use quantum_peft::util::rng::Rng;
+
+const TAGS: [&str; 6] = ["dec_ft", "dec_lora", "dec_adalora",
+                         "dec_loha", "dec_lokr", "dec_qpeft_taylor"];
+
+/// Deterministic stand-in for `trainer::run_e2e`: every metric is a pure
+/// function of the tag (like a real run with isolated RNG streams); the
+/// sleep scrambles completion order across workers.
+fn fake_e2e(tag: &str, sleep: bool) -> RunResult {
+    let h: u64 = tag.bytes().map(|b| b as u64).sum();
+    let mut rng = Rng::new(h);
+    let mut extra = BTreeMap::new();
+    for k in ["bleu", "nist", "meteor", "rouge_l", "cider"] {
+        extra.insert(k.to_string(), rng.f64());
+    }
+    if sleep {
+        std::thread::sleep(Duration::from_millis(rng.below(8) as u64));
+    }
+    let bleu = extra["bleu"];
+    RunResult {
+        tag: tag.to_string(),
+        task: "e2e".into(),
+        metric_name: "bleu".into(),
+        best_metric: bleu,
+        final_metric: bleu,
+        losses: vec![],
+        adapter_params: 10 + h as usize,
+        trainable_params: 20 + h as usize,
+        wall_seconds: 0.0,
+        step_ms: h as f64,
+        extra_metrics: extra,
+    }
+}
+
+fn run_panel(jobs: usize) -> Vec<RunResult> {
+    let items: Vec<String> = TAGS.iter().map(|s| s.to_string()).collect();
+    sweep::run_panel_with(items, jobs, &EventLog::null(), |_w| Ok(()),
+                          |_s, tag, _wlog| Ok(fake_e2e(tag, jobs > 1)))
+        .unwrap()
+}
+
+/// The full rendered Table 3 + Table 4 text, for byte comparison.
+fn render(results: &[RunResult]) -> String {
+    let (t3, t4) = tables::table3_and_4_rows(results);
+    format!("{}{}", report::render_table(&t3.0, &t3.1),
+            report::render_table(&t4.0, &t4.1))
+}
+
+#[test]
+fn e2e_panel_jobs_1_vs_jobs_n_renders_byte_identical_tables() {
+    let seq = run_panel(1);
+    assert_eq!(seq.len(), TAGS.len());
+    let seq_text = render(&seq);
+    for jobs in [2, 4, 8] {
+        let par = run_panel(jobs);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.tag, b.tag);
+            assert_eq!(a.best_metric.to_bits(), b.best_metric.to_bits());
+            for (k, v) in &a.extra_metrics {
+                assert_eq!(v.to_bits(), b.extra_metrics[k].to_bits(),
+                           "{}/{k} diverged at jobs={jobs}", a.tag);
+            }
+        }
+        assert_eq!(seq_text, render(&par),
+                   "rendered tables diverged at jobs={jobs}");
+    }
+}
+
+#[test]
+fn e2e_panel_results_follow_input_order_not_completion_order() {
+    let par = run_panel(4);
+    for (tag, r) in TAGS.iter().zip(&par) {
+        assert_eq!(*tag, r.tag);
+    }
+}
+
+#[test]
+fn e2e_panel_failure_surfaces_root_cause() {
+    let items: Vec<String> = TAGS.iter().map(|s| s.to_string()).collect();
+    for jobs in [1, 4] {
+        let err = sweep::run_panel_with(
+            items.clone(), jobs, &EventLog::null(), |_w| Ok(()),
+            |_s, tag: &String, _wlog| {
+                if tag == "dec_lokr" {
+                    anyhow::bail!("lokr cell refused");
+                }
+                Ok(fake_e2e(tag, false))
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("lokr cell refused"), "{err}");
+    }
+}
+
+#[test]
+fn table4_memory_column_normalizes_to_the_qpeft_row() {
+    let results = run_panel(1);
+    let (_, t4) = tables::table3_and_4_rows(&results);
+    let qpeft_ix = TAGS.iter().position(|t| t.contains("qpeft")).unwrap();
+    assert_eq!(t4.1[qpeft_ix][2], "1.00x");
+}
+
+#[test]
+fn share_client_env_override_forces_the_private_worker_fallback() {
+    // No other test reads REPRO_SHARE_CLIENT, so the set/remove window
+    // cannot race a parallel test in this binary.
+    std::env::set_var("REPRO_SHARE_CLIENT", "0");
+    let rt = Runtime::cpu().unwrap();
+    assert!(!rt.supports_concurrent_execution());
+    let w = rt.for_worker(3).unwrap();
+    match &w {
+        WorkerRuntime::Private(p) => {
+            // private worker runtimes stay on the caller's shared cache
+            assert!(std::sync::Arc::ptr_eq(p.cache(), rt.cache()));
+        }
+        WorkerRuntime::Shared(_) => panic!("expected the private fallback"),
+    }
+    drop(w); // evicts the worker client's (empty) executable namespace
+    std::env::remove_var("REPRO_SHARE_CLIENT");
+    assert!(rt.supports_concurrent_execution());
+    assert!(matches!(rt.for_worker(0).unwrap(), WorkerRuntime::Shared(_)));
+}
+
+#[test]
+fn shared_cache_compiles_each_path_exactly_once_under_parallel_panel() {
+    // Every cell loads three panel-wide artifacts plus one per-tag
+    // adapter artifact through one shared cache while 8 workers run
+    // concurrently: 3 + |TAGS| distinct paths, each compiled exactly
+    // once — the others block on the in-flight compile and share it.
+    let cache: OnceMap<PathBuf, usize> = OnceMap::new();
+    let log = CompileLog::new();
+    let compiles = AtomicUsize::new(0);
+    let items: Vec<String> = TAGS.iter().map(|s| s.to_string()).collect();
+    let results = sweep::run_panel_with(
+        items, 8, &EventLog::null(), |w| Ok(w),
+        |w, tag, _wlog| {
+            let tag_art = format!("artifacts/{tag}.hlo");
+            let paths = ["artifacts/shared_init.hlo",
+                         "artifacts/shared_train.hlo",
+                         "artifacts/shared_eval.hlo",
+                         tag_art.as_str()];
+            for p in paths {
+                let path = PathBuf::from(p);
+                cache.get_or_try_init(&path, || {
+                    compiles.fetch_add(1, Ordering::SeqCst);
+                    // widen the in-flight window so workers pile up
+                    std::thread::sleep(Duration::from_millis(3));
+                    log.record(&path, CacheEvent::Compile, 0.003, Some(*w));
+                    Ok(1usize)
+                })?;
+            }
+            Ok(fake_e2e(tag, true))
+        })
+        .unwrap();
+    assert_eq!(results.len(), TAGS.len());
+    let distinct = 3 + TAGS.len();
+    assert_eq!(compiles.load(Ordering::SeqCst), distinct,
+               "a concurrent worker re-compiled a cached path");
+    let per_path = log.compiles_per_path();
+    assert_eq!(per_path.len(), distinct);
+    for (path, n) in per_path {
+        assert_eq!(n, 1, "{path:?} compiled {n} times, expected exactly 1");
+    }
+    assert_eq!(cache.len(), distinct);
+}
