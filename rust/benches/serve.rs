@@ -1,0 +1,102 @@
+//! Multi-tenant serving benchmark: requests/sec and p99 latency across a
+//! worker x tenant grid (the ISSUE-3 acceptance grid: 1/4/8 workers x
+//! 1/16/256 tenants), plus the checkpoint bulk-I/O speedup measurement.
+//!
+//! Uses the in-tree harness conventions (criterion is unavailable
+//! offline): self-contained, prints a stable one-line-per-cell report,
+//! asserts nothing timing-dependent.
+
+use std::time::Instant;
+
+use quantum_peft::coordinator::checkpoint::{self, AdapterManifest};
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::runtime::HostTensor;
+use quantum_peft::serve::{BenchOpts, LoadSpec, PauliSpec};
+use quantum_peft::util::bench::fmt_ns;
+
+fn serve_grid() {
+    println!("# serve: closed-loop seeded loadgen, q=5 L=1, zipf s=1.0");
+    println!("{:>8} {:>8} {:>10} {:>12} {:>12} {:>12}",
+             "workers", "tenants", "requests", "req/s", "p50", "p99");
+    for &workers in &[1usize, 4, 8] {
+        for &tenants in &[1usize, 16, 256] {
+            let opts = BenchOpts {
+                load: LoadSpec {
+                    tenants,
+                    requests: 2048,
+                    concurrency: 64,
+                    pauli: PauliSpec { q: 5, n_layers: 1 },
+                    seed: 42,
+                    zipf_s: 1.0,
+                    open_rate_rps: 0.0,
+                },
+                serve: quantum_peft::serve::ServeConfig {
+                    workers,
+                    ..Default::default()
+                },
+                cache_bytes: 8 << 20,
+            };
+            match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
+                Ok((s, _)) => {
+                    println!("{:>8} {:>8} {:>10} {:>12.0} {:>12} {:>12}",
+                             workers, tenants, s.completed, s.rps,
+                             fmt_ns(s.p50_us * 1e3), fmt_ns(s.p99_us * 1e3));
+                }
+                Err(e) => println!("{workers:>8} {tenants:>8} failed: {e}"),
+            }
+        }
+    }
+}
+
+/// The satellite's evidence: bulk byte-slice checkpoint I/O vs the old
+/// element-at-a-time reads. The writer is bulk-only now, so the
+/// element-wise reference below re-implements the old read loop against
+/// the same on-disk bytes.
+fn checkpoint_io() {
+    use std::io::Read as _;
+    let dir = std::env::temp_dir().join("qp_serve_bench_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("big.qpck");
+    let n = 1 << 20; // 1M f32 = 4 MiB payload
+    let data: Vec<f32> = (0..n).map(|i| (i as f32 * 0.001).sin()).collect();
+    let manifest = AdapterManifest { tenant: "bench".into(), q: 5, n_layers: 1 };
+    let tensors = vec![("w".to_string(), HostTensor::f32(vec![n], data))];
+
+    let t0 = Instant::now();
+    checkpoint::save_adapter(&path, &manifest, &tensors).unwrap();
+    let save_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let back = checkpoint::load(&path).unwrap();
+    let load_s = t0.elapsed().as_secs_f64();
+    assert_eq!(back[0].1, tensors[0].1, "roundtrip mismatch");
+
+    // element-at-a-time reference: what load() did before the bulk-I/O
+    // satellite — same file, same BufReader, one read_exact per element
+    let t0 = Instant::now();
+    let mut f = std::io::BufReader::new(std::fs::File::open(&path).unwrap());
+    // header: magic 4 + version 4 + tenant_len 4 + "bench" 5 + q 4 + L 4
+    // + count 4 + name_len 4 + "w" 1 + dtype 1 + ndim 4 + dim 8 = 47
+    let mut skip = vec![0u8; 47];
+    f.read_exact(&mut skip).unwrap();
+    let mut out = vec![0f32; n];
+    let mut u32buf = [0u8; 4];
+    for x in out.iter_mut() {
+        f.read_exact(&mut u32buf).unwrap();
+        *x = f32::from_le_bytes(u32buf);
+    }
+    let slow_s = t0.elapsed().as_secs_f64();
+    assert_eq!(out, *tensors[0].1.as_f32().unwrap(), "reference mismatch");
+
+    let mb = (n * 4) as f64 / (1 << 20) as f64;
+    println!("# checkpoint I/O, {mb:.0} MiB f32 payload");
+    println!("save (bulk)          {:>10.1} MiB/s", mb / save_s);
+    println!("load (bulk)          {:>10.1} MiB/s", mb / load_s);
+    println!("load (element-wise)  {:>10.1} MiB/s", mb / slow_s);
+    println!("bulk read speedup    {:>10.1}x", slow_s / load_s);
+}
+
+fn main() {
+    checkpoint_io();
+    serve_grid();
+}

@@ -1,11 +1,21 @@
 //! Checkpoint format (own binary container; no external deps):
 //!
-//!   magic "QPCK" | u32 version | u32 count
+//!   magic "QPCK" | u32 version
+//!   version 2 only (adapter manifest):
+//!     u32 tenant_len | tenant utf8 | u32 q | u32 n_layers
+//!   both versions: u32 count
 //!   per tensor: u32 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
 //!               | u32 ndim | u64 dims... | payload (LE)
 //!
-//! Stores either a full model (pretraining output) or adapters only
-//! (PEFT fine-tuning output — the paper's few-KB artifact story).
+//! Stores either a full model (pretraining output), adapters only (PEFT
+//! fine-tuning output — the paper's few-KB artifact story), or — version
+//! 2 — an adapter plus the manifest the serving registry needs to
+//! validate tenant identity and Pauli shape *before* materializing.
+//!
+//! Loading is hardened against corrupt or hostile files: every
+//! length/count field read from the file is capped before it sizes an
+//! allocation, and payloads are bulk byte-slice reads so truncation
+//! surfaces as one contextual error instead of a multi-GB `vec!` attempt.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,15 +26,80 @@ use crate::runtime::HostTensor;
 
 const MAGIC: &[u8; 4] = b"QPCK";
 const VERSION: u32 = 1;
+const VERSION_ADAPTER: u32 = 2;
+
+/// Header caps: far above anything the repro writes, far below anything
+/// that could turn a short garbage file into a giant allocation.
+const MAX_TENSORS: usize = 65_536;
+const MAX_NAME_LEN: usize = 4_096;
+const MAX_NDIM: usize = 16;
+const MAX_NUMEL: usize = 1 << 28; // 256M elements = 1 GiB of f32
+const MAX_TENANT_LEN: usize = 256;
+
+/// Serving metadata stored in version-2 checkpoints: which tenant this
+/// adapter belongs to and the Pauli circuit shape its thetas parameterize
+/// (`q` qubits, `n_layers` entanglement blocks — eq. 2). The registry
+/// validates both against the tensor payload before materializing Q_P.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdapterManifest {
+    pub tenant: String,
+    pub q: u32,
+    pub n_layers: u32,
+}
 
 pub fn save(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
+    save_impl(path, None, tensors)
+}
+
+/// Save a version-2 adapter checkpoint: manifest header + tensors.
+pub fn save_adapter(path: &Path, manifest: &AdapterManifest,
+                    tensors: &[(String, HostTensor)]) -> Result<()> {
+    if manifest.tenant.len() > MAX_TENANT_LEN {
+        bail!("tenant id of {} bytes exceeds cap {MAX_TENANT_LEN}",
+              manifest.tenant.len());
+    }
+    save_impl(path, Some(manifest), tensors)
+}
+
+fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
+             tensors: &[(String, HostTensor)]) -> Result<()> {
+    // enforce the same caps load enforces, with write-time messages: a
+    // file save can produce but load rejects would read as "corrupt"
+    // when the data is merely out of spec — fail before writing instead
+    if tensors.len() > MAX_TENSORS {
+        bail!("refusing to save {} tensors (cap {MAX_TENSORS})", tensors.len());
+    }
+    for (name, t) in tensors {
+        if name.len() > MAX_NAME_LEN {
+            bail!("refusing to save tensor with a {}-byte name (cap \
+                   {MAX_NAME_LEN})", name.len());
+        }
+        if t.shape().len() > MAX_NDIM {
+            bail!("refusing to save {name:?} with {} dims (cap {MAX_NDIM})",
+                  t.shape().len());
+        }
+        if t.numel() > MAX_NUMEL {
+            bail!("refusing to save {name:?} with {} elements (cap {MAX_NUMEL})",
+                  t.numel());
+        }
+    }
     if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent).ok();
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("create checkpoint dir {parent:?}"))?;
     }
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("create {path:?}"))?);
     f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
+    match manifest {
+        None => f.write_all(&VERSION.to_le_bytes())?,
+        Some(m) => {
+            f.write_all(&VERSION_ADAPTER.to_le_bytes())?;
+            f.write_all(&(m.tenant.len() as u32).to_le_bytes())?;
+            f.write_all(m.tenant.as_bytes())?;
+            f.write_all(&m.q.to_le_bytes())?;
+            f.write_all(&m.n_layers.to_le_bytes())?;
+        }
+    }
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
         f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -32,95 +107,204 @@ pub fn save(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
         match t {
             HostTensor::F32 { shape, data } => {
                 f.write_all(&[0u8])?;
-                f.write_all(&(shape.len() as u32).to_le_bytes())?;
-                for &d in shape {
-                    f.write_all(&(d as u64).to_le_bytes())?;
-                }
-                for &x in data {
-                    f.write_all(&x.to_le_bytes())?;
-                }
+                write_shape(&mut f, shape)?;
+                write_f32s(&mut f, data)?;
             }
             HostTensor::I32 { shape, data } => {
                 f.write_all(&[1u8])?;
-                f.write_all(&(shape.len() as u32).to_le_bytes())?;
-                for &d in shape {
-                    f.write_all(&(d as u64).to_le_bytes())?;
-                }
-                for &x in data {
-                    f.write_all(&x.to_le_bytes())?;
-                }
+                write_shape(&mut f, shape)?;
+                write_i32s(&mut f, data)?;
             }
         }
     }
     Ok(())
 }
 
+fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
+    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Bulk LE payload writes: one buffer fill + one `write_all` per tensor
+/// instead of one 4-byte write per element (benches/serve.rs records the
+/// resulting MB/s next to an element-at-a-time reference).
+fn write_f32s(f: &mut impl Write, data: &[f32]) -> Result<()> {
+    let mut buf = vec![0u8; data.len() * 4];
+    for (c, x) in buf.chunks_exact_mut(4).zip(data) {
+        c.copy_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_i32s(f: &mut impl Write, data: &[i32]) -> Result<()> {
+    let mut buf = vec![0u8; data.len() * 4];
+    for (c, x) in buf.chunks_exact_mut(4).zip(data) {
+        c.copy_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
 pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
+    Ok(load_impl(path)?.1)
+}
+
+/// Load a version-2 adapter checkpoint: the manifest plus its tensors.
+/// A version-1 file (no manifest) is an error — the registry must never
+/// guess which tenant or circuit shape an adapter belongs to.
+pub fn load_adapter(path: &Path)
+                    -> Result<(AdapterManifest, Vec<(String, HostTensor)>)> {
+    let (manifest, tensors) = load_impl(path)?;
+    match manifest {
+        Some(m) => Ok((m, tensors)),
+        None => bail!("{path:?} is a v1 checkpoint with no adapter manifest; \
+                       re-save with save_adapter (tenant + pauli config)"),
+    }
+}
+
+fn load_impl(path: &Path)
+             -> Result<(Option<AdapterManifest>, Vec<(String, HostTensor)>)> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    // actual file size bounds every payload allocation below: a ~50-byte
+    // hostile file whose header passes the caps must not be able to
+    // demand a 1 GiB zeroed buffer before read_exact notices the EOF
+    let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
+    let mut f = std::io::BufReader::new(file);
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{path:?}: reading magic (truncated file?)"))?;
     if &magic != MAGIC {
         bail!("{path:?}: not a QPCK checkpoint");
     }
-    let mut u32buf = [0u8; 4];
-    f.read_exact(&mut u32buf)?;
-    let version = u32::from_le_bytes(u32buf);
-    if version != VERSION {
-        bail!("{path:?}: unsupported checkpoint version {version}");
+    let version = read_u32(&mut f, path, "version")?;
+    let manifest = match version {
+        VERSION => None,
+        VERSION_ADAPTER => {
+            let tenant_len = read_u32(&mut f, path, "tenant_len")? as usize;
+            if tenant_len > MAX_TENANT_LEN {
+                bail!("{path:?}: tenant_len {tenant_len} exceeds cap \
+                       {MAX_TENANT_LEN} (corrupt header?)");
+            }
+            let mut tenant = vec![0u8; tenant_len];
+            f.read_exact(&mut tenant)
+                .with_context(|| format!("{path:?}: reading tenant id"))?;
+            let tenant = String::from_utf8(tenant)
+                .with_context(|| format!("{path:?}: tenant id is not utf8"))?;
+            let q = read_u32(&mut f, path, "q")?;
+            let n_layers = read_u32(&mut f, path, "n_layers")?;
+            Some(AdapterManifest { tenant, q, n_layers })
+        }
+        other => bail!("{path:?}: unsupported checkpoint version {other}"),
+    };
+    let count = read_u32(&mut f, path, "tensor count")? as usize;
+    if count > MAX_TENSORS {
+        bail!("{path:?}: tensor count {count} exceeds cap {MAX_TENSORS} \
+               (corrupt header?)");
     }
-    f.read_exact(&mut u32buf)?;
-    let count = u32::from_le_bytes(u32buf) as usize;
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        f.read_exact(&mut u32buf)?;
-        let name_len = u32::from_le_bytes(u32buf) as usize;
+    for ti in 0..count {
+        let name_len = read_u32(&mut f, path, "name_len")? as usize;
+        if name_len > MAX_NAME_LEN {
+            bail!("{path:?}: tensor {ti} name_len {name_len} exceeds cap \
+                   {MAX_NAME_LEN} (corrupt header?)");
+        }
         let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
+        f.read_exact(&mut name).with_context(|| {
+            format!("{path:?}: reading tensor {ti} name (truncated file?)")
+        })?;
+        let name = String::from_utf8(name)
+            .with_context(|| format!("{path:?}: tensor {ti} name is not utf8"))?;
         let mut dt = [0u8; 1];
-        f.read_exact(&mut dt)?;
-        f.read_exact(&mut u32buf)?;
-        let ndim = u32::from_le_bytes(u32buf) as usize;
+        f.read_exact(&mut dt).with_context(|| {
+            format!("{path:?}: reading {name:?} dtype (truncated file?)")
+        })?;
+        let ndim = read_u32(&mut f, path, "ndim")? as usize;
+        if ndim > MAX_NDIM {
+            bail!("{path:?}: tensor {name:?} ndim {ndim} exceeds cap {MAX_NDIM} \
+                   (corrupt header?)");
+        }
         let mut shape = Vec::with_capacity(ndim);
         let mut u64buf = [0u8; 8];
         for _ in 0..ndim {
-            f.read_exact(&mut u64buf)?;
-            shape.push(u64::from_le_bytes(u64buf) as usize);
+            f.read_exact(&mut u64buf).with_context(|| {
+                format!("{path:?}: reading {name:?} dims (truncated file?)")
+            })?;
+            let d = u64::from_le_bytes(u64buf);
+            if d > MAX_NUMEL as u64 {
+                bail!("{path:?}: tensor {name:?} dim {d} exceeds cap {MAX_NUMEL}");
+            }
+            shape.push(d as usize);
         }
-        let numel: usize = shape.iter().product();
+        let numel = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+            .filter(|&n| n <= MAX_NUMEL)
+            .with_context(|| format!(
+                "{path:?}: tensor {name:?} shape {shape:?} exceeds element cap \
+                 {MAX_NUMEL} (corrupt header?)"))?;
+        if (numel as u64).saturating_mul(4) > file_len {
+            bail!("{path:?}: tensor {name:?} claims {numel} elements but the \
+                   whole file is only {file_len} bytes (truncated or corrupt)");
+        }
         let tensor = match dt[0] {
-            0 => {
-                let mut data = vec![0f32; numel];
-                for x in data.iter_mut() {
-                    f.read_exact(&mut u32buf)?;
-                    *x = f32::from_le_bytes(u32buf);
-                }
-                HostTensor::F32 { shape, data }
-            }
-            1 => {
-                let mut data = vec![0i32; numel];
-                for x in data.iter_mut() {
-                    f.read_exact(&mut u32buf)?;
-                    *x = i32::from_le_bytes(u32buf);
-                }
-                HostTensor::I32 { shape, data }
-            }
-            other => bail!("bad dtype byte {other}"),
+            0 => HostTensor::F32 { data: read_f32s(&mut f, numel, path, &name)?,
+                                   shape },
+            1 => HostTensor::I32 { data: read_i32s(&mut f, numel, path, &name)?,
+                                   shape },
+            other => bail!("{path:?}: tensor {name:?} has bad dtype byte {other}"),
         };
         out.push((name, tensor));
     }
-    Ok(out)
+    Ok((manifest, out))
+}
+
+fn read_u32(f: &mut impl Read, path: &Path, what: &str) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("{path:?}: reading {what} (truncated file?)"))?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+/// Bulk LE payload reads: one `read_exact` of the whole payload, then an
+/// in-memory decode — the counterpart of [`write_f32s`]. A truncated file
+/// fails here with the tensor named, before any decode work.
+fn read_f32s(f: &mut impl Read, numel: usize, path: &Path, name: &str)
+             -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; numel * 4];
+    f.read_exact(&mut buf).with_context(|| format!(
+        "{path:?}: reading {name:?} f32 payload ({numel} elements; \
+         truncated file?)"))?;
+    Ok(buf.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32s(f: &mut impl Read, numel: usize, path: &Path, name: &str)
+             -> Result<Vec<i32>> {
+    let mut buf = vec![0u8; numel * 4];
+    f.read_exact(&mut buf).with_context(|| format!(
+        "{path:?}: reading {name:?} i32 payload ({numel} elements; \
+         truncated file?)"))?;
+    Ok(buf.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qp_ckpt_test").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("qp_ckpt_test");
-        let path = dir.join("t.qpck");
+        let path = tdir("rt").join("t.qpck");
         let tensors = vec![
             ("base.w".to_string(),
              HostTensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-8, 9.0])),
@@ -137,11 +321,145 @@ mod tests {
     }
 
     #[test]
+    fn adapter_roundtrip_and_v1_interop() {
+        let path = tdir("ad").join("a.qpck");
+        let m = AdapterManifest { tenant: "acme-042".into(), q: 5, n_layers: 2 };
+        let tensors = vec![
+            ("thetas".to_string(), HostTensor::f32(vec![21], vec![0.25; 21])),
+        ];
+        save_adapter(&path, &m, &tensors).unwrap();
+        let (back_m, back_t) = load_adapter(&path).unwrap();
+        assert_eq!(back_m, m);
+        assert_eq!(back_t, tensors);
+        // plain load skips the manifest but returns the same tensors
+        assert_eq!(load(&path).unwrap(), tensors);
+        // a v1 file has no manifest: load_adapter must refuse, not guess
+        let v1 = tdir("ad").join("v1.qpck");
+        save(&v1, &tensors).unwrap();
+        let e = load_adapter(&v1).unwrap_err().to_string();
+        assert!(e.contains("no adapter manifest"), "{e}");
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("qp_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.qpck");
+        let path = tdir("bad").join("bad.qpck");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors_with_context() {
+        let dir = tdir("trunc");
+        let full = dir.join("full.qpck");
+        let tensors = vec![
+            ("w".to_string(), HostTensor::f32(vec![64], vec![0.5; 64])),
+        ];
+        save(&full, &tensors).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+        // cut at several depths: mid-payload, mid-header, mid-magic
+        for cut in [bytes.len() - 1, bytes.len() / 2, 24, 13, 2] {
+            let p = dir.join(format!("cut{cut}.qpck"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            let e = load(&p).unwrap_err().to_string();
+            assert!(
+                e.contains("truncated") || e.contains("not a QPCK"),
+                "cut={cut}: {e}"
+            );
+        }
+    }
+
+    /// A hostile header must fail on its cap check, never reach the
+    /// allocation it tried to size.
+    #[test]
+    fn oversized_header_fields_are_rejected() {
+        let dir = tdir("hostile");
+        let header = |fields: &[u8]| {
+            let mut b = Vec::new();
+            b.extend_from_slice(MAGIC);
+            b.extend_from_slice(&1u32.to_le_bytes());
+            b.extend_from_slice(fields);
+            b
+        };
+        // count = u32::MAX
+        let p = dir.join("count.qpck");
+        std::fs::write(&p, header(&u32::MAX.to_le_bytes())).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("exceeds cap"), "{e}");
+        // one tensor with name_len = 1 GiB
+        let p = dir.join("name.qpck");
+        let mut b = header(&1u32.to_le_bytes());
+        b.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("name_len") && e.contains("exceeds cap"), "{e}");
+        // ndim = 1000
+        let p = dir.join("ndim.qpck");
+        let mut b = header(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes()); // name_len 1
+        b.push(b'x');
+        b.push(0u8); // dtype f32
+        b.extend_from_slice(&1000u32.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("ndim") && e.contains("exceeds cap"), "{e}");
+        // numel overflow: dims whose product wraps usize
+        let p = dir.join("numel.qpck");
+        let mut b = header(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.push(0u8);
+        b.extend_from_slice(&4u32.to_le_bytes()); // ndim 4
+        for _ in 0..4 {
+            b.extend_from_slice(&(1u64 << 24).to_le_bytes());
+        }
+        std::fs::write(&p, &b).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("element cap"), "{e}");
+        // numel under the cap but far beyond the file's actual size: the
+        // ~50-byte file must be rejected before the 1 GiB zeroed buffer
+        // it tries to demand is ever allocated
+        let p = dir.join("bigclaim.qpck");
+        let mut b = header(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.push(0u8);
+        b.extend_from_slice(&1u32.to_le_bytes()); // ndim 1
+        b.extend_from_slice(&(1u64 << 28).to_le_bytes()); // dim = MAX_NUMEL
+        std::fs::write(&p, &b).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("whole file is only"), "{e}");
+        // oversized tenant_len in a v2 header
+        let p = dir.join("tenant.qpck");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("tenant_len") && e.contains("exceeds cap"), "{e}");
+    }
+
+    #[test]
+    fn save_enforces_the_same_caps_as_load() {
+        let path = tdir("savecap").join("t.qpck");
+        let t = vec![(
+            "n".repeat(MAX_NAME_LEN + 1),
+            HostTensor::f32(vec![1], vec![0.0]),
+        )];
+        let e = save(&path, &t).unwrap_err().to_string();
+        assert!(e.contains("refusing to save") && e.contains("name"), "{e}");
+        assert!(!path.exists(), "cap failure must not leave a file behind");
+    }
+
+    #[test]
+    fn save_propagates_unwritable_dir() {
+        // a parent that exists as a *file* makes create_dir_all fail;
+        // the old code swallowed this with .ok() and failed confusingly
+        let dir = tdir("unwritable");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"file, not dir").unwrap();
+        let path = blocker.join("sub").join("t.qpck");
+        let e = save(&path, &[]).unwrap_err().to_string();
+        assert!(e.contains("create checkpoint dir"), "{e}");
     }
 }

@@ -21,6 +21,17 @@
 //! rendered table — are byte-identical for any jobs value; only
 //! wall-clock and event-log interleaving change.
 //!
+//! ## Multi-tenant adapter serving
+//!
+//! [`serve`] turns the few-KB-adapter storage story (Table 1) into a
+//! serving story: a concurrent tenant registry with versioned hot-swap
+//! and an LRU-bounded materialization cache, a micro-batching scheduler
+//! over the same work-stealing pool, per-tenant latency/throughput
+//! metrics through the `EventLog`, and a seeded load generator
+//! (`repro serve-bench`). Its `fifo` mode plus the seeded loadgen give a
+//! byte-identical response log at any worker count — the same
+//! determinism contract the sweep engine makes.
+//!
 //! All workers load artifacts through one shared
 //! [`runtime::exe_cache::ExeCache`]: parsed HLO protos are shared
 //! unconditionally, and on backends whose client tolerates concurrent
@@ -41,4 +52,5 @@ pub mod peft;
 pub mod quantum;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

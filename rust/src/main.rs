@@ -55,6 +55,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "e2e" => cmd_e2e(&args),
         "table" => cmd_table(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
 }
@@ -79,6 +80,16 @@ commands:
   table    --id table1|table2|...|table10|fig6|fig5-params [--preset P]
            (sweep- and panel-backed tables — including the Table 3/4 E2E
            panel — honor REPRO_JOBS / [sweep] jobs)
+  serve-bench  [--workers N|auto] [--tenants N] [--requests N] [--seed S]
+           [--skew F] [--qubits Q] [--layers L] [--max-batch N]
+           [--max-wait-us N] [--mode fifo|timed] [--concurrency C]
+           [--rate RPS] [--cache-mb F]
+           multi-tenant adapter serving benchmark: seeded Zipf loadgen
+           against the serve registry/scheduler (closed loop by default;
+           --rate > 0 switches to open-loop arrivals and timed batching).
+           fifo mode is byte-deterministic per seed at any --workers;
+           summary (p50/p95/p99, req/s, batch histogram, cache counters)
+           prints here and lands in the event log as serve_* lines.
 all parallel paths share one compile cache: each distinct artifact path
 compiles exactly once per process on CPU (in-flight compiles dedup across
 workers); other backends fall back to per-worker compiles that still
@@ -354,6 +365,70 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     for (k, v) in &r.extra_metrics {
         println!("  {k:10} {v:.4}");
     }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use quantum_peft::serve::{self, BenchOpts, LoadSpec, ServeConfig};
+    let mut opts = BenchOpts::default();
+    if let Some(v) = args.flags.get("workers") {
+        opts.serve.workers = pool::parse_jobs_value(v).context("--workers")?;
+    }
+    let mut load = LoadSpec::default();
+    if let Some(v) = args.flags.get("tenants") {
+        load.tenants = v.parse().context("--tenants")?;
+    }
+    if let Some(v) = args.flags.get("requests") {
+        load.requests = v.parse().context("--requests")?;
+    }
+    if let Some(v) = args.flags.get("seed") {
+        load.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = args.flags.get("skew") {
+        load.zipf_s = v.parse().context("--skew")?;
+    }
+    if let Some(v) = args.flags.get("qubits") {
+        load.pauli.q = v.parse().context("--qubits")?;
+    }
+    if let Some(v) = args.flags.get("layers") {
+        load.pauli.n_layers = v.parse().context("--layers")?;
+    }
+    if let Some(v) = args.flags.get("concurrency") {
+        load.concurrency = v.parse().context("--concurrency")?;
+    }
+    if let Some(v) = args.flags.get("rate") {
+        load.open_rate_rps = v.parse().context("--rate")?;
+    }
+    let mut serve_cfg = ServeConfig { workers: opts.serve.workers,
+                                      ..ServeConfig::default() };
+    if let Some(v) = args.flags.get("max-batch") {
+        serve_cfg.policy.max_batch = v.parse().context("--max-batch")?;
+    }
+    if let Some(v) = args.flags.get("max-wait-us") {
+        serve_cfg.policy.max_wait_us = v.parse().context("--max-wait-us")?;
+    }
+    serve_cfg.fifo = match args.flags.get("mode").map(|s| s.as_str()) {
+        None => load.open_rate_rps <= 0.0, // open loop implies timed
+        Some("fifo") => true,
+        Some("timed") => false,
+        Some(other) => bail!("--mode expects fifo|timed, got {other:?}"),
+    };
+    if let Some(v) = args.flags.get("cache-mb") {
+        let mb: f64 = v.parse().context("--cache-mb")?;
+        opts.cache_bytes = (mb * (1 << 20) as f64) as usize;
+    }
+    opts.load = load;
+    opts.serve = serve_cfg;
+    let log = event_log()?;
+    let (summary, _log_text) = serve::run_serve_bench(&opts, &log)?;
+    println!(
+        "serve-bench: {} tenants (zipf s={}), q={} L={}, {} mode, \
+         max-batch {} / max-wait {}µs",
+        opts.load.tenants, opts.load.zipf_s, opts.load.pauli.q,
+        opts.load.pauli.n_layers,
+        if opts.serve.fifo { "fifo" } else { "timed" },
+        opts.serve.policy.max_batch, opts.serve.policy.max_wait_us);
+    print!("{}", summary.render());
     Ok(())
 }
 

@@ -5,12 +5,14 @@
 
 use super::gates;
 
+#[derive(Clone)]
 pub struct Layer {
     pub qubits: Vec<usize>,
     pub theta_ofs: usize,
     pub sign: Option<Vec<f32>>,
 }
 
+#[derive(Clone)]
 pub struct PauliCircuit {
     pub q: usize,
     pub n_layers: usize,
@@ -21,6 +23,12 @@ pub struct PauliCircuit {
 impl PauliCircuit {
     pub fn dim(&self) -> usize {
         1usize << self.q
+    }
+
+    /// Bytes a dense [`materialize`](Self::materialize) result occupies
+    /// (f32 N x N) — the unit the serve registry's LRU byte budget counts.
+    pub fn materialized_bytes(&self) -> usize {
+        self.dim() * self.dim() * 4
     }
 
     /// x <- x @ Q_P for x: [b, 2^q] row-major. O(b · N · q · L).

@@ -158,6 +158,13 @@ impl WorkerRuntime<'_> {
             WorkerRuntime::Private(rt) => rt,
         }
     }
+
+    /// Whether this worker shares the caller's client (compile-once for
+    /// the whole pool) or owns a private one. Serving and sweep drivers
+    /// report this so benchmark output records which warm-up regime ran.
+    pub fn is_shared(&self) -> bool {
+        matches!(self, WorkerRuntime::Shared(_))
+    }
 }
 
 impl Drop for WorkerRuntime<'_> {

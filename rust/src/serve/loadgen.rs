@@ -1,0 +1,310 @@
+//! Seeded synthetic load generator: measurable throughput and tail
+//! latency for the serving subsystem *today*, before real PJRT bindings
+//! land.
+//!
+//! Two driving disciplines:
+//! - **closed loop**: waves of `concurrency` outstanding requests; the
+//!   next wave starts when the previous one has fully responded. Purely
+//!   seed-deterministic (no wall clock in any decision), which is what
+//!   the `fifo`-mode byte-reproducibility guarantee builds on.
+//! - **open loop**: requests arrive at `open_rate_rps` with exponential
+//!   interarrival gaps, regardless of completions — the discipline that
+//!   actually exposes queueing tail latency (closed loops self-throttle).
+//!
+//! Tenant choice is Zipf-skewed (`zipf_s = 0` is uniform): real
+//! multi-tenant traffic concentrates on few hot tenants, which is
+//! exactly what exercises the materialization cache's LRU policy.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::events::EventLog;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::registry::{theta_checksum, PauliSpec, Registry};
+use super::scheduler::Response;
+use super::server::{serve, ServeConfig, ServeSummary, ServerHandle};
+
+/// Load shape: how many tenants, how much traffic, how skewed.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub tenants: usize,
+    pub pauli: PauliSpec,
+    pub requests: usize,
+    pub seed: u64,
+    /// Zipf skew exponent over tenant ranks; 0.0 = uniform.
+    pub zipf_s: f64,
+    /// Closed-loop wave size (outstanding requests per wave).
+    pub concurrency: usize,
+    /// > 0 switches to open-loop arrivals at this rate (req/s).
+    pub open_rate_rps: f64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            tenants: 16,
+            pauli: PauliSpec { q: 5, n_layers: 1 },
+            requests: 512,
+            seed: 0,
+            zipf_s: 1.0,
+            concurrency: 32,
+            open_rate_rps: 0.0,
+        }
+    }
+}
+
+/// Stable tenant naming shared by the populate and driving phases.
+pub fn tenant_name(i: usize) -> String {
+    format!("tenant{i:04}")
+}
+
+/// Zipf sampler over ranks `0..n` (rank 0 hottest), via inverse CDF.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n >= 1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        let i = match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        i.min(self.cdf.len() - 1)
+    }
+}
+
+/// Register `tenants` seeded adapters (version 1 each). Returns the
+/// per-tenant theta checksums so callers can verify responses came from
+/// consistent (version, params) pairs.
+pub fn populate(registry: &Registry, load: &LoadSpec) -> Result<Vec<u64>> {
+    if load.tenants == 0 {
+        bail!("loadgen needs at least one tenant");
+    }
+    let n_params = load.pauli.num_params();
+    let mut checksums = Vec::with_capacity(load.tenants);
+    for i in 0..load.tenants {
+        let mut rng = Rng::new(load.seed ^ (i as u64 + 1).wrapping_mul(
+            0x9e37_79b9_7f4a_7c15));
+        let thetas: Vec<f32> = (0..n_params)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        checksums.push(theta_checksum(&thetas));
+        registry.register(&tenant_name(i), load.pauli, thetas)?;
+    }
+    Ok(checksums)
+}
+
+/// The input vector for global request number `k` — a pure function of
+/// (seed, k), so any driver discipline generates identical payloads.
+fn request_input(load: &LoadSpec, k: u64) -> Vec<f32> {
+    let mut rng = Rng::new(load.seed ^ (k + 1).wrapping_mul(0x2545_f491_4f6c_dd1d));
+    (0..load.pauli.dim()).map(|_| rng.normal() as f32 * 0.5).collect()
+}
+
+/// Closed-loop driver: waves of `concurrency` requests, fully collected
+/// before the next wave. Returns responses in submission order.
+pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
+                   -> Result<Vec<Response>> {
+    let zipf = Zipf::new(load.tenants, load.zipf_s);
+    let mut pick = Rng::new(load.seed ^ 0xc1ed_1007);
+    let mut out = Vec::with_capacity(load.requests);
+    let mut sent = 0u64;
+    while (sent as usize) < load.requests {
+        let wave = load.concurrency.max(1).min(load.requests - sent as usize);
+        let mut handles = Vec::with_capacity(wave);
+        for _ in 0..wave {
+            let t = zipf.sample(&mut pick);
+            handles.push(handle.submit(
+                &tenant_name(t), sent, request_input(load, sent))?);
+            sent += 1;
+        }
+        handle.flush();
+        for h in handles {
+            out.push(h.wait()?);
+        }
+    }
+    Ok(out)
+}
+
+/// Open-loop driver: seeded-exponential interarrival gaps at
+/// `open_rate_rps`, submissions never waiting on completions. Responses
+/// are collected at the end, in submission order.
+pub fn open_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
+                 -> Result<Vec<Response>> {
+    if load.open_rate_rps <= 0.0 {
+        bail!("open_loop needs open_rate_rps > 0");
+    }
+    let zipf = Zipf::new(load.tenants, load.zipf_s);
+    let mut pick = Rng::new(load.seed ^ 0xc1ed_1007);
+    let mut gaps = Rng::new(load.seed ^ 0x0be9_1007);
+    let mean_gap = 1.0 / load.open_rate_rps;
+    let mut handles = Vec::with_capacity(load.requests);
+    for k in 0..load.requests as u64 {
+        let t = zipf.sample(&mut pick);
+        handles.push(handle.submit(&tenant_name(t), k, request_input(load, k))?);
+        // honor the requested rate faithfully — a clamp here would make
+        // the emitted summary describe a different workload than asked
+        let gap = -mean_gap * (1.0 - gaps.f64()).ln();
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+    }
+    handle.flush();
+    handles.into_iter().map(|h| h.wait()).collect()
+}
+
+/// Render responses as a canonical text log (sorted by request `meta`):
+/// one line per response with the adapter identity that served it and an
+/// FNV digest of the output bits. Byte-identical across worker counts in
+/// `fifo` mode — the serving determinism guarantee tests assert on.
+pub fn response_log(responses: &[Response]) -> String {
+    use std::fmt::Write as _;
+    let mut sorted: Vec<&Response> = responses.iter().collect();
+    sorted.sort_by_key(|r| r.meta);
+    let mut s = String::new();
+    for r in sorted {
+        let _ = writeln!(
+            s,
+            "meta={} tenant={} version={} checksum={:016x} out={:016x}",
+            r.meta, r.tenant, r.version, r.checksum,
+            theta_checksum(&r.output));
+    }
+    s
+}
+
+/// Everything `repro serve-bench` needs in one struct.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub load: LoadSpec,
+    pub serve: ServeConfig,
+    pub cache_bytes: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts {
+            load: LoadSpec::default(),
+            serve: ServeConfig::default(),
+            cache_bytes: 8 << 20,
+        }
+    }
+}
+
+/// Build a registry, populate it with seeded adapters, run the loadgen
+/// through a serve session, and emit the summary through `log`. Returns
+/// the summary and the canonical response log.
+pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
+                       -> Result<(ServeSummary, String)> {
+    let registry = Registry::new(opts.cache_bytes);
+    populate(&registry, &opts.load)?;
+    let rt = Runtime::cpu()?;
+    let mode = if opts.serve.fifo { "fifo" } else { "timed" };
+    let discipline = if opts.load.open_rate_rps > 0.0 { "open" } else { "closed" };
+    log.emit("serve_bench", vec![
+        ("tenants", opts.load.tenants.into()),
+        ("requests", opts.load.requests.into()),
+        ("workers", opts.serve.workers.into()),
+        ("seed", Json::Num(opts.load.seed as f64)),
+        ("zipf_s", Json::Num(opts.load.zipf_s)),
+        ("q", (opts.load.pauli.q as usize).into()),
+        ("n_layers", (opts.load.pauli.n_layers as usize).into()),
+        ("max_batch", opts.serve.policy.max_batch.into()),
+        ("max_wait_us", Json::Num(opts.serve.policy.max_wait_us as f64)),
+        ("mode", mode.into()),
+        ("discipline", discipline.into()),
+        ("cache_bytes", opts.cache_bytes.into()),
+    ]);
+    let outcome = serve(&rt, &registry, &opts.serve, log, |h| {
+        if opts.load.open_rate_rps > 0.0 {
+            open_loop(h, &opts.load)
+        } else {
+            closed_loop(h, &opts.load)
+        }
+    })?;
+    Ok((outcome.summary, response_log(&outcome.body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let zipf = Zipf::new(8, 1.2);
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 8];
+        for _ in 0..4000 {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 4000);
+        assert!(counts[0] > counts[3], "{counts:?}");
+        assert!(counts[0] > counts[7], "{counts:?}");
+        // uniform: roughly even
+        let uni = Zipf::new(4, 0.0);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[uni.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_sampling_is_seed_deterministic() {
+        let zipf = Zipf::new(16, 1.0);
+        let a: Vec<usize> = {
+            let mut r = Rng::new(3);
+            (0..64).map(|_| zipf.sample(&mut r)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = Rng::new(3);
+            (0..64).map(|_| zipf.sample(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn populate_is_deterministic_per_seed() {
+        let load = LoadSpec { tenants: 4, ..LoadSpec::default() };
+        let r1 = Registry::new(1 << 20);
+        let r2 = Registry::new(1 << 20);
+        let c1 = populate(&r1, &load).unwrap();
+        let c2 = populate(&r2, &load).unwrap();
+        assert_eq!(c1, c2);
+        assert_eq!(r1.len(), 4);
+        // different seed, different adapters
+        let r3 = Registry::new(1 << 20);
+        let c3 = populate(&r3, &LoadSpec { seed: 9, ..load }).unwrap();
+        assert_ne!(c1, c3);
+    }
+
+    #[test]
+    fn request_inputs_differ_by_index_not_call_order() {
+        let load = LoadSpec::default();
+        let a = request_input(&load, 5);
+        let b = request_input(&load, 6);
+        assert_ne!(a, b);
+        assert_eq!(a, request_input(&load, 5));
+        assert_eq!(a.len(), load.pauli.dim());
+    }
+}

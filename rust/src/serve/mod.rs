@@ -1,0 +1,38 @@
+//! Multi-tenant adapter serving.
+//!
+//! The paper's eq.-(2) Pauli parameterization makes a fine-tuned task a
+//! few-KB theta vector (log-scale in the ambient dimension), so — unlike
+//! LoRA-scale PEFT, whose adapters grow linearly with dimension —
+//! thousands of per-tenant adapters fit in RAM next to one shared
+//! backbone. This subsystem is the runtime half of that claim:
+//!
+//! - [`registry`]: concurrent tenant -> adapter map, loading/evicting
+//!   `QPCK` v2 adapter checkpoints, versioned torn-read-free hot-swap,
+//!   and a byte-budgeted LRU of materialized dense `Q_P` matrices with
+//!   hit/miss/eviction counters;
+//! - [`scheduler`]: micro-batching — same-tenant requests coalesce under
+//!   a max-batch / max-wait policy into tenant-homogeneous batches;
+//! - [`server`]: the scoped request loop (submit -> future-like handle
+//!   -> response) over [`crate::util::pool`] service workers, each
+//!   holding a `Runtime::for_worker` handle onto the shared compile
+//!   cache, with per-tenant and global p50/p95/p99, throughput, queue
+//!   depth and batch-size metrics exported through the `EventLog`;
+//! - [`loadgen`]: seeded closed-/open-loop synthetic load with Zipf
+//!   tenant skew, so throughput and tail latency are measurable offline
+//!   today (`repro serve-bench`, `benches/serve.rs`).
+//!
+//! Determinism knobs: `fifo` server mode forms batches purely from the
+//! submission sequence (no wall clock), and the loadgen derives every
+//! tenant pick and input payload from its seed — together, one seed
+//! yields a byte-identical response log at any worker count, which is
+//! the property `tests/serve.rs` pins.
+
+pub mod loadgen;
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+
+pub use loadgen::{run_serve_bench, BenchOpts, LoadSpec};
+pub use registry::{AdapterVersion, CacheStats, PauliSpec, Registry};
+pub use scheduler::{BatchPolicy, Response, ResponseHandle};
+pub use server::{serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle};

@@ -1,0 +1,582 @@
+//! Concurrent multi-tenant adapter registry with versioned hot-swap and
+//! an LRU-bounded cache of materialized Q_P matrices.
+//!
+//! The Quantum-PEFT serving story: an adapter is a few-KB theta vector
+//! (log-scale in the ambient dimension, eq. 2), so thousands of tenants
+//! fit in RAM next to one shared backbone. What is *not* few-KB is the
+//! dense N x N `Q_P` a tenant's thetas materialize into — so those live
+//! in a byte-budgeted LRU cache with hit/miss/eviction counters, while
+//! the registry proper holds only the cheap theta vectors.
+//!
+//! Hot-swap is torn-read-free by construction: an [`AdapterVersion`] is
+//! immutable once registered (thetas behind an `Arc`, version tag and
+//! checksum computed at registration), and a swap atomically replaces
+//! the tenant's `Arc` — an in-flight request keeps serving the snapshot
+//! it already resolved, and can never observe old params under a new
+//! version tag.
+//!
+//! Eviction safety: requests hold a [`RequestGuard`] (per-tenant
+//! in-flight count) from admission to response. The LRU never evicts a
+//! materialization whose tenant has in-flight requests, and
+//! [`Registry::evict_tenant`] refuses outright while requests are in
+//! flight, so eviction can temporarily overshoot the byte budget rather
+//! than ever dropping live work.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::{self, AdapterManifest};
+use crate::quantum::pauli;
+use crate::runtime::exe_cache::OnceMap;
+
+/// Largest supported circuit: q = 12 is a 4096-dim Q_P (64 MiB dense) —
+/// far beyond the adapter sizes the paper uses, small enough that a
+/// hostile manifest cannot request a multi-GiB materialization.
+pub const MAX_QUBITS: u32 = 12;
+
+/// Pauli circuit shape an adapter parameterizes (eq. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PauliSpec {
+    pub q: u32,
+    pub n_layers: u32,
+}
+
+impl PauliSpec {
+    pub fn dim(&self) -> usize {
+        1usize << self.q
+    }
+
+    pub fn num_params(&self) -> usize {
+        pauli::build(self.q as usize, self.n_layers as usize).num_params
+    }
+}
+
+/// One immutable registered adapter version. All fields are fixed at
+/// registration; `checksum` is a digest of the theta bits, which is what
+/// lets tests prove a response was served from a consistent
+/// (version, params) pair.
+pub struct AdapterVersion {
+    pub tenant: String,
+    pub version: u64,
+    pub spec: PauliSpec,
+    pub thetas: Arc<Vec<f32>>,
+    pub checksum: u64,
+}
+
+/// FNV-1a over the LE bytes of a theta vector — the adapter identity
+/// digest stamped into [`AdapterVersion::checksum`] and responses.
+pub fn theta_checksum(thetas: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in thetas {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct TenantSlot {
+    current: Mutex<Arc<AdapterVersion>>,
+    inflight: AtomicUsize,
+}
+
+/// Admission token for one in-flight request: holds the tenant's
+/// in-flight count up from submit to response, which is what pins the
+/// tenant's materializations in cache and blocks tenant eviction.
+pub struct RequestGuard {
+    slot: Arc<TenantSlot>,
+}
+
+impl Drop for RequestGuard {
+    fn drop(&mut self) {
+        self.slot.inflight.fetch_sub(1, Ordering::Release);
+    }
+}
+
+// ------------------------------------------------------------- mat cache ---
+
+/// Counter snapshot of the materialization cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: usize,
+    pub capacity_bytes: usize,
+    pub entries: usize,
+}
+
+struct MatEntry {
+    mat: Arc<Vec<f32>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Cache key: (tenant, version, theta checksum). The checksum term is
+/// load-bearing: per-tenant version numbers restart at 1 when a tenant
+/// is evicted and re-registered, so (tenant, version) alone could pair a
+/// stale generation's matrix with a new adapter's identity.
+type MatKey = (String, u64, u64);
+
+struct MatInner {
+    entries: HashMap<MatKey, MatEntry>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// LRU cache of dense Q_P materializations, bounded in bytes. Keyed by
+/// [`MatKey`] so a hot-swap naturally ages the old version out instead
+/// of serving stale matrices. Concurrent first touches of one key
+/// deduplicate in flight (reusing the compile cache's [`OnceMap`]):
+/// one worker materializes, the others block and share the result.
+struct MatCache {
+    inner: Mutex<MatInner>,
+    inflight: OnceMap<MatKey, Arc<Vec<f32>>>,
+    capacity_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl MatCache {
+    fn new(capacity_bytes: usize) -> MatCache {
+        MatCache {
+            inner: Mutex::new(MatInner {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            inflight: OnceMap::new(),
+            capacity_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The materialized Q_P for `adapter`, from cache or built now.
+    /// `pinned(tenant)` reports whether a tenant has in-flight requests;
+    /// pinned entries are skipped by eviction (the budget may overshoot
+    /// until their guards drop, never the other way around).
+    fn get(&self, adapter: &AdapterVersion, pinned: &dyn Fn(&str) -> bool)
+           -> Result<Arc<Vec<f32>>> {
+        let key = (adapter.tenant.clone(), adapter.version, adapter.checksum);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.get_mut(&key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.mat.clone());
+            }
+        }
+        let mut built_here = false;
+        let mut entry_bytes = 0usize;
+        let mat = self.inflight.get_or_try_init(&key, || {
+            built_here = true;
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let circuit = pauli::build(adapter.spec.q as usize,
+                                       adapter.spec.n_layers as usize);
+            entry_bytes = circuit.materialized_bytes();
+            Ok(Arc::new(circuit.materialize(&adapter.thetas)))
+        })?;
+        if built_here {
+            self.insert_and_evict(&key, &mat, entry_bytes, pinned);
+            // un-park the key so a future re-materialization (after LRU
+            // eviction) goes through a fresh init instead of the old slot
+            self.inflight.remove_where(|k| k == &key);
+        }
+        Ok(mat)
+    }
+
+    fn insert_and_evict(&self, key: &MatKey, mat: &Arc<Vec<f32>>,
+                        bytes: usize, pinned: &dyn Fn(&str) -> bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        // a racing re-build of the same key (both workers missed before
+        // either inserted) replaces the old entry: account for it, or
+        // inner.bytes inflates permanently and the budget shrinks
+        if let Some(old) = inner.entries.insert(
+            key.clone(),
+            MatEntry { mat: mat.clone(), bytes, last_used: tick },
+        ) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        while inner.bytes > self.capacity_bytes {
+            let victim = inner.entries.iter()
+                .filter(|(k, _)| !pinned(&k.0))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = inner.entries.remove(&k) {
+                        inner.bytes -= e.bytes;
+                    }
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // everything left is pinned by in-flight requests:
+                // overshoot the budget rather than evict live work
+                None => break,
+            }
+        }
+    }
+
+    fn purge_tenant(&self, tenant: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let keys: Vec<MatKey> = inner.entries.keys()
+            .filter(|k| k.0 == tenant)
+            .cloned()
+            .collect();
+        for k in keys {
+            if let Some(e) = inner.entries.remove(&k) {
+                inner.bytes -= e.bytes;
+            }
+        }
+        self.inflight.remove_where(|k| k.0 == tenant);
+    }
+
+    fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: inner.bytes,
+            capacity_bytes: self.capacity_bytes,
+            entries: inner.entries.len(),
+        }
+    }
+}
+
+// -------------------------------------------------------------- registry ---
+
+/// The multi-tenant adapter registry: tenant id -> current adapter
+/// version, plus the shared materialization cache. All methods are safe
+/// to call from any number of server workers concurrently.
+pub struct Registry {
+    tenants: RwLock<BTreeMap<String, Arc<TenantSlot>>>,
+    cache: MatCache,
+}
+
+impl Registry {
+    /// `cache_capacity_bytes` bounds the dense-Q_P LRU (the theta vectors
+    /// themselves are few-KB and uncounted).
+    pub fn new(cache_capacity_bytes: usize) -> Registry {
+        Registry {
+            tenants: RwLock::new(BTreeMap::new()),
+            cache: MatCache::new(cache_capacity_bytes),
+        }
+    }
+
+    /// Register (tenant absent) or hot-swap (tenant present) an adapter.
+    /// Returns the version now live. Validation happens *before* any
+    /// slot is touched: a bad upload can never leave a tenant broken.
+    pub fn register(&self, tenant: &str, spec: PauliSpec, thetas: Vec<f32>)
+                    -> Result<u64> {
+        if tenant.is_empty() {
+            bail!("empty tenant id");
+        }
+        if spec.q < 1 || spec.q > MAX_QUBITS {
+            bail!("tenant {tenant:?}: q={} outside supported range 1..={}",
+                  spec.q, MAX_QUBITS);
+        }
+        let want = spec.num_params();
+        if thetas.len() != want {
+            bail!("tenant {tenant:?}: adapter has {} thetas but a (q={}, L={}) \
+                   pauli circuit takes {want}",
+                  thetas.len(), spec.q, spec.n_layers);
+        }
+        let checksum = theta_checksum(&thetas);
+        let mut tenants = self.tenants.write().unwrap();
+        match tenants.get(tenant) {
+            Some(slot) => {
+                let mut cur = slot.current.lock().unwrap();
+                let version = cur.version + 1;
+                *cur = Arc::new(AdapterVersion {
+                    tenant: tenant.to_string(),
+                    version,
+                    spec,
+                    thetas: Arc::new(thetas),
+                    checksum,
+                });
+                Ok(version)
+            }
+            None => {
+                let version = 1;
+                tenants.insert(tenant.to_string(), Arc::new(TenantSlot {
+                    current: Mutex::new(Arc::new(AdapterVersion {
+                        tenant: tenant.to_string(),
+                        version,
+                        spec,
+                        thetas: Arc::new(thetas),
+                        checksum,
+                    })),
+                    inflight: AtomicUsize::new(0),
+                }));
+                Ok(version)
+            }
+        }
+    }
+
+    /// Load a v2 `QPCK` adapter checkpoint and register it under the
+    /// tenant named in its manifest. Shape is validated from the manifest
+    /// before anything is materialized.
+    pub fn load_checkpoint(&self, path: &std::path::Path) -> Result<(String, u64)> {
+        let (manifest, tensors) = checkpoint::load_adapter(path)
+            .with_context(|| format!("loading adapter checkpoint {path:?}"))?;
+        let AdapterManifest { tenant, q, n_layers } = manifest;
+        let spec = PauliSpec { q, n_layers };
+        if q < 1 || q > MAX_QUBITS {
+            bail!("{path:?}: manifest q={q} outside supported range 1..={}",
+                  MAX_QUBITS);
+        }
+        let thetas = tensors.iter()
+            .find(|(name, _)| name == "thetas")
+            .with_context(|| format!("{path:?}: no \"thetas\" tensor"))?;
+        let data = thetas.1.as_f32()
+            .with_context(|| format!("{path:?}: \"thetas\" is not f32"))?;
+        let want = spec.num_params();
+        if data.len() != want {
+            bail!("{path:?}: manifest (q={q}, L={n_layers}) implies {want} \
+                   thetas but the tensor holds {}", data.len());
+        }
+        let version = self.register(&tenant, spec, data.to_vec())?;
+        Ok((tenant, version))
+    }
+
+    /// The tenant's live adapter right now (an immutable snapshot — safe
+    /// to keep using across a concurrent hot-swap).
+    pub fn snapshot(&self, tenant: &str) -> Result<Arc<AdapterVersion>> {
+        let tenants = self.tenants.read().unwrap();
+        let slot = tenants.get(tenant)
+            .with_context(|| format!("unknown tenant {tenant:?}"))?;
+        Ok(slot.current.lock().unwrap().clone())
+    }
+
+    /// Admit one request for `tenant`: bumps its in-flight count until
+    /// the returned guard drops (pins its cache entries, blocks tenant
+    /// eviction).
+    pub fn begin(&self, tenant: &str) -> Result<RequestGuard> {
+        let tenants = self.tenants.read().unwrap();
+        let slot = tenants.get(tenant)
+            .with_context(|| format!("unknown tenant {tenant:?}"))?;
+        slot.inflight.fetch_add(1, Ordering::Acquire);
+        Ok(RequestGuard { slot: slot.clone() })
+    }
+
+    /// Current in-flight request count for a tenant (0 if unknown).
+    pub fn inflight(&self, tenant: &str) -> usize {
+        let tenants = self.tenants.read().unwrap();
+        tenants.get(tenant)
+            .map(|s| s.inflight.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+
+    /// The dense Q_P for an adapter snapshot, through the LRU cache.
+    pub fn materialized(&self, adapter: &AdapterVersion) -> Result<Arc<Vec<f32>>> {
+        self.cache.get(adapter, &|tenant| self.inflight(tenant) > 0)
+    }
+
+    /// Remove a tenant and purge its materializations. Refuses while the
+    /// tenant has in-flight requests — eviction never drops live work.
+    pub fn evict_tenant(&self, tenant: &str) -> Result<()> {
+        {
+            let mut tenants = self.tenants.write().unwrap();
+            let slot = tenants.get(tenant)
+                .with_context(|| format!("unknown tenant {tenant:?}"))?;
+            let inflight = slot.inflight.load(Ordering::Acquire);
+            if inflight > 0 {
+                bail!("tenant {tenant:?} has {inflight} in-flight request(s); \
+                       refusing to evict");
+            }
+            tenants.remove(tenant);
+        }
+        // cache purge happens after the tenant lock drops: the cache's
+        // pin check takes the tenant lock, so nesting the other way
+        // around would be a lock-order inversion
+        self.cache.purge_tenant(tenant);
+        Ok(())
+    }
+
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn thetas_for(spec: PauliSpec, fill: f32) -> Vec<f32> {
+        vec![fill; spec.num_params()]
+    }
+
+    #[test]
+    fn register_validates_before_touching_state() {
+        let reg = Registry::new(1 << 20);
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        assert!(reg.register("", spec, thetas_for(spec, 0.1)).is_err());
+        assert!(reg.register("t", PauliSpec { q: 0, n_layers: 0 }, vec![]).is_err());
+        assert!(reg.register("t", PauliSpec { q: 13, n_layers: 0 }, vec![]).is_err());
+        // wrong theta count
+        assert!(reg.register("t", spec, vec![0.0; 3]).is_err());
+        assert_eq!(reg.len(), 0);
+        assert_eq!(reg.register("t", spec, thetas_for(spec, 0.1)).unwrap(), 1);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_keeps_old_snapshot_alive() {
+        let reg = Registry::new(1 << 20);
+        let spec = PauliSpec { q: 2, n_layers: 0 };
+        reg.register("acme", spec, thetas_for(spec, 0.1)).unwrap();
+        let old = reg.snapshot("acme").unwrap();
+        assert_eq!(old.version, 1);
+        let v2 = reg.register("acme", spec, thetas_for(spec, 0.9)).unwrap();
+        assert_eq!(v2, 2);
+        let new = reg.snapshot("acme").unwrap();
+        assert_eq!(new.version, 2);
+        assert_ne!(old.checksum, new.checksum);
+        // the pre-swap snapshot is still fully usable
+        assert_eq!(old.thetas.len(), spec.num_params());
+        assert_eq!(old.checksum, theta_checksum(&old.thetas));
+    }
+
+    #[test]
+    fn cache_respects_byte_budget_with_counters() {
+        let spec = PauliSpec { q: 4, n_layers: 1 }; // 16x16 f32 = 1 KiB each
+        let one = 16 * 16 * 4;
+        let reg = Registry::new(2 * one); // room for exactly two matrices
+        for t in ["a", "b", "c"] {
+            reg.register(t, spec, thetas_for(spec, 0.2)).unwrap();
+        }
+        let a = reg.snapshot("a").unwrap();
+        let b = reg.snapshot("b").unwrap();
+        let c = reg.snapshot("c").unwrap();
+        reg.materialized(&a).unwrap(); // miss
+        reg.materialized(&a).unwrap(); // hit
+        reg.materialized(&b).unwrap(); // miss
+        reg.materialized(&c).unwrap(); // miss -> evicts LRU ("a")
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 3, 1), "{s:?}");
+        assert!(s.bytes <= s.capacity_bytes, "{s:?}");
+        assert_eq!(s.entries, 2);
+        reg.materialized(&a).unwrap(); // re-materialize after eviction
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 4, 2), "{s:?}");
+        assert!(s.bytes <= s.capacity_bytes, "{s:?}");
+    }
+
+    #[test]
+    fn pinned_tenants_survive_eviction_and_block_removal() {
+        let spec = PauliSpec { q: 4, n_layers: 1 };
+        let one = 16 * 16 * 4;
+        let reg = Registry::new(one); // room for exactly one matrix
+        reg.register("pinned", spec, thetas_for(spec, 0.3)).unwrap();
+        reg.register("other", spec, thetas_for(spec, 0.4)).unwrap();
+        let guard = reg.begin("pinned").unwrap();
+        let guard_o = reg.begin("other").unwrap();
+        assert_eq!(reg.inflight("pinned"), 1);
+        let p = reg.snapshot("pinned").unwrap();
+        let o = reg.snapshot("other").unwrap();
+        reg.materialized(&p).unwrap();
+        // over budget, but every candidate is pinned: overshoot, no drops
+        reg.materialized(&o).unwrap();
+        let s = reg.cache_stats();
+        assert_eq!(s.entries, 2, "{s:?}");
+        assert!(s.bytes > s.capacity_bytes, "expected overshoot: {s:?}");
+        assert_eq!(s.evictions, 0, "{s:?}");
+        // an unpinned materialization that does not fit next to a pinned
+        // one is served but not retained (the cache self-evicts it
+        // rather than touch the pinned entry)
+        drop(guard_o);
+        reg.materialized(&o).unwrap(); // hit: still cached from above
+        let s = reg.cache_stats();
+        assert_eq!(s.hits, 1, "{s:?}");
+        // tenant eviction refuses while in flight
+        let e = reg.evict_tenant("pinned").unwrap_err().to_string();
+        assert!(e.contains("in-flight"), "{e}");
+        drop(guard);
+        assert_eq!(reg.inflight("pinned"), 0);
+        reg.evict_tenant("pinned").unwrap();
+        let s = reg.cache_stats();
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes <= s.capacity_bytes, "{s:?}");
+        assert!(reg.snapshot("pinned").is_err());
+    }
+
+    #[test]
+    fn re_registered_tenant_never_hits_a_stale_generation_matrix() {
+        // evict + re-register restarts the per-tenant version counter at
+        // 1; the cache key's checksum term must keep the generations'
+        // materializations apart
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        let reg = Registry::new(1 << 20);
+        reg.register("t", spec, thetas_for(spec, 0.1)).unwrap();
+        let old_snap = reg.snapshot("t").unwrap();
+        reg.evict_tenant("t").unwrap();
+        assert_eq!(reg.register("t", spec, thetas_for(spec, 0.9)).unwrap(), 1);
+        let new_snap = reg.snapshot("t").unwrap();
+        assert_eq!((old_snap.version, new_snap.version), (1, 1));
+        // a holdover of the old snapshot re-populates the cache...
+        let old_mat = reg.materialized(&old_snap).unwrap();
+        // ...but the new generation must materialize its own matrix, not
+        // hit the old generation's entry under the colliding version
+        let new_mat = reg.materialized(&new_snap).unwrap();
+        assert_ne!(old_mat.as_slice(), new_mat.as_slice());
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses), (0, 2), "{s:?}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_through_registry() {
+        use crate::coordinator::checkpoint::{save_adapter, AdapterManifest};
+        use crate::runtime::HostTensor;
+        let dir = std::env::temp_dir().join("qp_serve_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("acme.qpck");
+        let spec = PauliSpec { q: 5, n_layers: 2 };
+        let thetas: Vec<f32> = (0..spec.num_params())
+            .map(|i| (i as f32 * 0.13).sin())
+            .collect();
+        let m = AdapterManifest { tenant: "acme".into(), q: 5, n_layers: 2 };
+        save_adapter(&path, &m, &[(
+            "thetas".to_string(),
+            HostTensor::f32(vec![thetas.len()], thetas.clone()),
+        )]).unwrap();
+        let reg = Registry::new(1 << 20);
+        let (tenant, version) = reg.load_checkpoint(&path).unwrap();
+        assert_eq!((tenant.as_str(), version), ("acme", 1));
+        let snap = reg.snapshot("acme").unwrap();
+        assert_eq!(snap.thetas.as_slice(), thetas.as_slice());
+        assert_eq!(snap.checksum, theta_checksum(&thetas));
+        // manifest/tensor shape mismatch is caught before materialization
+        let bad = dir.join("bad.qpck");
+        let m2 = AdapterManifest { tenant: "acme".into(), q: 6, n_layers: 2 };
+        save_adapter(&bad, &m2, &[(
+            "thetas".to_string(),
+            HostTensor::f32(vec![thetas.len()], thetas),
+        )]).unwrap();
+        let e = reg.load_checkpoint(&bad).unwrap_err().to_string();
+        assert!(e.contains("implies"), "{e}");
+    }
+}

@@ -1,0 +1,323 @@
+//! Micro-batching request scheduler: coalesces same-tenant requests into
+//! batches under a max-batch-size / max-wait policy, for dispatch onto
+//! [`crate::util::pool`] service workers.
+//!
+//! A request's lifecycle: submit -> [`PendingRequest`] buffered in the
+//! [`Batcher`] -> grouped into a [`Batch`] (tenant-homogeneous) -> popped
+//! by a worker -> response filled into the request's [`ResponseSlot`].
+//! The slot is a future-like completion channel: the submitter holds a
+//! [`ResponseHandle`] and blocks in [`ResponseHandle::wait`].
+//!
+//! No request is ever silently lost: if a `PendingRequest` is dropped
+//! unserved (worker panic mid-batch, pool shut down, queue strand-drain)
+//! its `Drop` impl fails the slot, so every `wait` call returns.
+//!
+//! Determinism: batch composition is a pure function of the submission
+//! sequence (per-tenant buffers, flushed at `max_batch` or explicitly),
+//! and the wall-clock `max_wait` path is only consulted when the caller
+//! asks for expired batches — the `fifo` server mode never does, which
+//! is what makes end-to-end runs byte-reproducible at any worker count.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::registry::RequestGuard;
+
+/// Batching policy knobs: a batch dispatches when it holds `max_batch`
+/// requests, or (timed mode) when its oldest request has waited
+/// `max_wait_us` microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait_us: 200 }
+    }
+}
+
+/// One served response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Caller-chosen request identity (the loadgen packs client and
+    /// request index here); response logs sort by it.
+    pub meta: u64,
+    pub tenant: String,
+    /// Adapter version that served this request, with the checksum of
+    /// the exact thetas behind it — a consistent pair by construction.
+    pub version: u64,
+    pub checksum: u64,
+    pub output: Vec<f32>,
+    pub latency_us: f64,
+}
+
+enum SlotState {
+    Pending,
+    Ready(Result<Response, String>),
+    Taken,
+}
+
+/// Completion channel between a worker and the submitter.
+pub struct ResponseSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> Arc<ResponseSlot> {
+        Arc::new(ResponseSlot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// First fill wins; later fills (e.g. the drop-path error after a
+    /// successful complete) are ignored.
+    fn fill(&self, r: Result<Response, String>) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, SlotState::Pending) {
+            *st = SlotState::Ready(r);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Future-like handle to one submitted request.
+pub struct ResponseHandle {
+    slot: Arc<ResponseSlot>,
+}
+
+impl ResponseHandle {
+    /// Block until the response (or the request's failure) arrives.
+    pub fn wait(self) -> Result<Response> {
+        let mut st = self.slot.state.lock().unwrap();
+        while matches!(*st, SlotState::Pending) {
+            st = self.slot.cv.wait(st).unwrap();
+        }
+        match std::mem::replace(&mut *st, SlotState::Taken) {
+            SlotState::Ready(Ok(r)) => Ok(r),
+            SlotState::Ready(Err(e)) => Err(anyhow!("{e}")),
+            SlotState::Taken => Err(anyhow!("response already taken")),
+            SlotState::Pending => unreachable!("wait loop exits on non-pending"),
+        }
+    }
+}
+
+/// One admitted, not-yet-served request. Holds its tenant's
+/// [`RequestGuard`] from admission to response, so the in-flight count
+/// covers time spent buffered and queued, not just time on a worker.
+pub struct PendingRequest {
+    pub meta: u64,
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+    slot: Arc<ResponseSlot>,
+    /// Held until this request drops: the tenant's in-flight pin covers
+    /// buffering, queueing and service, releasing only after the slot
+    /// has been filled.
+    _guard: RequestGuard,
+    completed: bool,
+}
+
+impl PendingRequest {
+    pub fn new(meta: u64, input: Vec<f32>, guard: RequestGuard)
+               -> (PendingRequest, ResponseHandle) {
+        let slot = ResponseSlot::new();
+        let req = PendingRequest {
+            meta,
+            input,
+            submitted: Instant::now(),
+            slot: slot.clone(),
+            _guard: guard,
+            completed: false,
+        };
+        (req, ResponseHandle { slot })
+    }
+
+    /// Deliver the response and consume the request.
+    pub fn complete(mut self, r: Response) {
+        self.completed = true;
+        self.slot.fill(Ok(r));
+    }
+
+    /// Deliver a failure and consume the request.
+    pub fn fail(mut self, msg: String) {
+        self.completed = true;
+        self.slot.fill(Err(msg));
+    }
+}
+
+impl Drop for PendingRequest {
+    fn drop(&mut self) {
+        if !self.completed {
+            self.slot.fill(Err(
+                "request dropped unserved (server shut down or worker died)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// A tenant-homogeneous batch ready for dispatch.
+pub struct Batch {
+    pub tenant: String,
+    pub requests: Vec<PendingRequest>,
+}
+
+/// Per-tenant request coalescing. Not itself thread-safe — the server
+/// wraps it in a mutex on the submission side; workers never touch it.
+pub struct Batcher {
+    policy: BatchPolicy,
+    buffers: BTreeMap<String, Vec<PendingRequest>>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, buffers: BTreeMap::new() }
+    }
+
+    /// Buffer one request; returns a full batch if this push completed
+    /// one.
+    pub fn push(&mut self, tenant: &str, req: PendingRequest) -> Option<Batch> {
+        let buf = self.buffers.entry(tenant.to_string()).or_default();
+        buf.push(req);
+        if buf.len() >= self.policy.max_batch.max(1) {
+            let requests = std::mem::take(buf);
+            Some(Batch { tenant: tenant.to_string(), requests })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every buffer whose oldest request has waited past
+    /// `max_wait_us` (timed mode only; `fifo` mode never calls this).
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let max_wait = Duration::from_micros(self.policy.max_wait_us);
+        let expired: Vec<String> = self.buffers.iter()
+            .filter(|(_, buf)| {
+                buf.first().map_or(false, |r| {
+                    now.saturating_duration_since(r.submitted) >= max_wait
+                })
+            })
+            .map(|(t, _)| t.clone())
+            .collect();
+        expired.into_iter()
+            .map(|tenant| {
+                let requests = std::mem::take(
+                    self.buffers.get_mut(&tenant).expect("key from iteration"));
+                Batch { tenant, requests }
+            })
+            .collect()
+    }
+
+    /// Flush everything, in tenant order (deterministic).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let buffers = std::mem::take(&mut self.buffers);
+        buffers.into_iter()
+            .filter(|(_, buf)| !buf.is_empty())
+            .map(|(tenant, requests)| Batch { tenant, requests })
+            .collect()
+    }
+
+    /// Buffered (not yet batched) request count.
+    pub fn pending(&self) -> usize {
+        self.buffers.values().map(|b| b.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::{PauliSpec, Registry};
+
+    fn reg_with(tenants: &[&str]) -> Registry {
+        let reg = Registry::new(1 << 20);
+        let spec = PauliSpec { q: 2, n_layers: 0 };
+        for t in tenants {
+            reg.register(t, spec, vec![0.1; spec.num_params()]).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn batcher_flushes_at_max_batch_in_push_order() {
+        let reg = reg_with(&["a", "b"]);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait_us: 0 });
+        let mut handles = Vec::new();
+        let mut full = Vec::new();
+        for i in 0..7u64 {
+            let tenant = if i % 2 == 0 { "a" } else { "b" };
+            let (req, h) = PendingRequest::new(
+                i, vec![0.0; 4], reg.begin(tenant).unwrap());
+            handles.push(h);
+            if let Some(batch) = b.push(tenant, req) {
+                full.push(batch);
+            }
+        }
+        // a got 0,2,4 (flush) then 6; b got 1,3,5 (flush)
+        assert_eq!(full.len(), 2);
+        assert_eq!(full[0].tenant, "a");
+        assert_eq!(full[0].requests.iter().map(|r| r.meta).collect::<Vec<_>>(),
+                   vec![0, 2, 4]);
+        assert_eq!(full[1].tenant, "b");
+        assert_eq!(full[1].requests.iter().map(|r| r.meta).collect::<Vec<_>>(),
+                   vec![1, 3, 5]);
+        assert_eq!(b.pending(), 1);
+        let rest = b.drain();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].requests[0].meta, 6);
+        assert_eq!(b.pending(), 0);
+        // in-flight pins survive batching and release on request drop
+        assert_eq!(reg.inflight("a"), 4);
+        drop(full);
+        drop(rest);
+        assert_eq!(reg.inflight("a"), 0);
+    }
+
+    #[test]
+    fn dropped_request_fails_its_handle() {
+        let reg = reg_with(&["a"]);
+        let (req, h) = PendingRequest::new(9, vec![0.0; 4],
+                                           reg.begin("a").unwrap());
+        drop(req);
+        let e = h.wait().unwrap_err().to_string();
+        assert!(e.contains("dropped unserved"), "{e}");
+        assert_eq!(reg.inflight("a"), 0);
+    }
+
+    #[test]
+    fn completed_request_delivers_response() {
+        let reg = reg_with(&["a"]);
+        let (req, h) = PendingRequest::new(5, vec![1.0; 4],
+                                           reg.begin("a").unwrap());
+        let resp = Response {
+            meta: 5,
+            tenant: "a".into(),
+            version: 1,
+            checksum: 42,
+            output: vec![2.0; 4],
+            latency_us: 10.0,
+        };
+        req.complete(resp.clone());
+        assert_eq!(h.wait().unwrap(), resp);
+    }
+
+    #[test]
+    fn take_expired_respects_max_wait() {
+        let reg = reg_with(&["a"]);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait_us: 50 });
+        let (req, _h) = PendingRequest::new(0, vec![0.0; 4],
+                                            reg.begin("a").unwrap());
+        let t0 = req.submitted;
+        assert!(b.push("a", req).is_none());
+        assert!(b.take_expired(t0).is_empty());
+        let later = t0 + Duration::from_micros(60);
+        let batches = b.take_expired(later);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+    }
+}

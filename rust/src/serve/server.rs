@@ -1,0 +1,579 @@
+//! In-process serving loop: submit -> future-like handle -> response.
+//!
+//! A serve session is scoped ([`serve`] wraps [`pool::run_service`]):
+//! `workers` service threads each hold a [`Runtime::for_worker`] handle
+//! (so any artifact compile goes through the process-wide
+//! `runtime::exe_cache` exactly once) plus a worker-tagged [`EventLog`];
+//! the caller's `body` closure drives traffic through a [`ServerHandle`].
+//! When `body` returns, partial batches flush, the queue closes, workers
+//! drain it, and the session's [`ServeSummary`] is computed and emitted.
+//!
+//! Two modes:
+//! - **fifo** (deterministic, for tests): batches form purely from the
+//!   submission sequence (`max_batch` or an explicit flush); no wall
+//!   clock is consulted, so a seeded driver produces a byte-identical
+//!   response log at any worker count;
+//! - **timed**: submissions also flush any buffer whose oldest request
+//!   has waited past `max_wait_us`, trading determinism for bounded
+//!   batching delay.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::events::EventLog;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::pool::{self, Service, TaskCtx};
+
+use super::registry::{CacheStats, Registry};
+use super::scheduler::{
+    Batch, Batcher, BatchPolicy, PendingRequest, Response, ResponseHandle,
+};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    /// Deterministic mode: never consult the wall clock for batching.
+    pub fifo: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { workers: 1, policy: BatchPolicy::default(), fifo: true }
+    }
+}
+
+// --------------------------------------------------------------- metrics ---
+
+struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Outstanding requests (submitted, not yet responded) — the queue
+    /// depth gauge; covers batcher buffers, the service queue, and
+    /// requests on a worker.
+    outstanding: AtomicUsize,
+    max_outstanding: AtomicUsize,
+    shared_client_workers: AtomicUsize,
+    lat_ns: Mutex<Vec<u64>>,
+    per_tenant_ns: Mutex<std::collections::BTreeMap<String, Vec<u64>>>,
+    batch_sizes: Mutex<std::collections::BTreeMap<usize, u64>>,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            outstanding: AtomicUsize::new(0),
+            max_outstanding: AtomicUsize::new(0),
+            shared_client_workers: AtomicUsize::new(0),
+            lat_ns: Mutex::new(Vec::new()),
+            per_tenant_ns: Mutex::new(std::collections::BTreeMap::new()),
+            batch_sizes: Mutex::new(std::collections::BTreeMap::new()),
+        }
+    }
+
+    fn note_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let depth = self.outstanding.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_outstanding.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    fn note_batch(&self, size: usize) {
+        *self.batch_sizes.lock().unwrap().entry(size).or_insert(0) += 1;
+    }
+
+    /// Per-request hot path: atomics only. Latencies are buffered
+    /// per-worker (in [`WorkerState`]) and merged once at worker exit,
+    /// so completing a request never takes a process-global lock.
+    fn note_complete_counts(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One worker's buffered latencies, merged at its exit.
+    fn merge_worker(&self, lat_ns: Vec<u64>,
+                    per_tenant: std::collections::BTreeMap<String, Vec<u64>>) {
+        self.lat_ns.lock().unwrap().extend(lat_ns);
+        let mut all = self.per_tenant_ns.lock().unwrap();
+        for (tenant, ns) in per_tenant {
+            all.entry(tenant).or_default().extend(ns);
+        }
+    }
+
+    fn note_failed(&self, n: usize) {
+        self.failed.fetch_add(n as u64, Ordering::Relaxed);
+        self.outstanding.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    fn summarize(&self, workers: usize, wall_s: f64, cache: CacheStats)
+                 -> ServeSummary {
+        let mut lat = self.lat_ns.lock().unwrap().clone();
+        lat.sort_unstable();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let tenants = self.per_tenant_ns.lock().unwrap().iter()
+            .map(|(tenant, ns)| {
+                let mut ns = ns.clone();
+                ns.sort_unstable();
+                TenantSummary {
+                    tenant: tenant.clone(),
+                    requests: ns.len() as u64,
+                    p50_us: percentile_us(&ns, 50.0),
+                    p95_us: percentile_us(&ns, 95.0),
+                    p99_us: percentile_us(&ns, 99.0),
+                }
+            })
+            .collect();
+        ServeSummary {
+            workers,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            wall_s,
+            rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+            p50_us: percentile_us(&lat, 50.0),
+            p95_us: percentile_us(&lat, 95.0),
+            p99_us: percentile_us(&lat, 99.0),
+            max_queue_depth: self.max_outstanding.load(Ordering::Relaxed),
+            shared_client_workers: self.shared_client_workers.load(Ordering::Relaxed),
+            batch_hist: self.batch_sizes.lock().unwrap().iter()
+                .map(|(&s, &c)| (s, c)).collect(),
+            cache,
+            tenants,
+        }
+    }
+}
+
+/// Nearest-rank percentile over a sorted nanosecond vector, in µs.
+fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ns.len() as f64 - 1.0)).round() as usize;
+    sorted_ns[idx.min(sorted_ns.len() - 1)] as f64 / 1_000.0
+}
+
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub tenant: String,
+    pub requests: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// End-of-session metrics: global and per-tenant latency percentiles,
+/// throughput, queue depth, batch-size histogram, cache counters.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub workers: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_queue_depth: usize,
+    pub shared_client_workers: usize,
+    /// (batch size, batches dispatched at that size), ascending.
+    pub batch_hist: Vec<(usize, u64)>,
+    pub cache: CacheStats,
+    pub tenants: Vec<TenantSummary>,
+}
+
+impl ServeSummary {
+    /// Export through the event log: one `serve_summary` line, one
+    /// `serve_tenant` line per tenant.
+    pub fn emit(&self, log: &EventLog) {
+        let hist = Json::Arr(self.batch_hist.iter()
+            .map(|&(s, c)| Json::Arr(vec![s.into(), Json::Num(c as f64)]))
+            .collect());
+        log.emit("serve_summary", vec![
+            ("workers", self.workers.into()),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("rps", Json::Num(self.rps)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("max_queue_depth", self.max_queue_depth.into()),
+            ("shared_client_workers", self.shared_client_workers.into()),
+            ("batch_hist", hist),
+            ("cache_hits", Json::Num(self.cache.hits as f64)),
+            ("cache_misses", Json::Num(self.cache.misses as f64)),
+            ("cache_evictions", Json::Num(self.cache.evictions as f64)),
+            ("cache_bytes", self.cache.bytes.into()),
+            ("cache_capacity_bytes", self.cache.capacity_bytes.into()),
+        ]);
+        for t in &self.tenants {
+            log.emit("serve_tenant", vec![
+                ("tenant", t.tenant.as_str().into()),
+                ("requests", Json::Num(t.requests as f64)),
+                ("p50_us", Json::Num(t.p50_us)),
+                ("p95_us", Json::Num(t.p95_us)),
+                ("p99_us", Json::Num(t.p99_us)),
+            ]);
+        }
+    }
+
+    /// Human-readable one-screen report for the CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "served {} requests in {:.3}s with {} worker(s): {:.0} req/s \
+             ({} failed)",
+            self.completed, self.wall_s, self.workers, self.rps, self.failed);
+        let _ = writeln!(
+            s,
+            "latency p50 {:.1}µs  p95 {:.1}µs  p99 {:.1}µs  \
+             max queue depth {}",
+            self.p50_us, self.p95_us, self.p99_us, self.max_queue_depth);
+        let hist: Vec<String> = self.batch_hist.iter()
+            .map(|&(sz, c)| format!("{sz}x{c}"))
+            .collect();
+        let _ = writeln!(s, "batch sizes [{}]", hist.join(" "));
+        let _ = writeln!(
+            s,
+            "mat cache: {} hits / {} misses / {} evictions, {} / {} bytes \
+             ({} entries)",
+            self.cache.hits, self.cache.misses, self.cache.evictions,
+            self.cache.bytes, self.cache.capacity_bytes, self.cache.entries);
+        s
+    }
+}
+
+// ---------------------------------------------------------------- server ---
+
+/// What `body` gets: the submission side of a live serve session.
+pub struct ServerHandle<'a> {
+    registry: &'a Registry,
+    service: &'a Service<Batch>,
+    metrics: &'a Metrics,
+    batcher: Mutex<Batcher>,
+    fifo: bool,
+}
+
+impl ServerHandle<'_> {
+    /// Admit one request. Validates tenant and input dimension up front;
+    /// the returned handle resolves when a worker serves the batch this
+    /// request lands in.
+    pub fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
+                  -> Result<ResponseHandle> {
+        let snap = self.registry.snapshot(tenant)?;
+        if input.len() != snap.spec.dim() {
+            bail!("tenant {tenant:?}: input has {} elements, adapter dim is {}",
+                  input.len(), snap.spec.dim());
+        }
+        let guard = self.registry.begin(tenant)?;
+        let (req, handle) = PendingRequest::new(meta, input, guard);
+        self.metrics.note_submit();
+        let full = self.batcher.lock().unwrap().push(tenant, req);
+        if let Some(batch) = full {
+            self.dispatch(batch);
+        }
+        if !self.fifo {
+            self.flush_expired();
+        }
+        Ok(handle)
+    }
+
+    /// Dispatch every buffer that has outwaited the policy (timed mode).
+    pub fn flush_expired(&self) {
+        let expired = self.batcher.lock().unwrap().take_expired(Instant::now());
+        for batch in expired {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Dispatch all partial batches now (the closed-loop driver calls
+    /// this at each wave boundary; `serve` calls it after `body`).
+    pub fn flush(&self) {
+        let drained = self.batcher.lock().unwrap().drain();
+        for batch in drained {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Outstanding requests: buffered + queued + on a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.metrics.outstanding.load(Ordering::Relaxed)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        self.registry
+    }
+
+    fn dispatch(&self, batch: Batch) {
+        self.metrics.note_batch(batch.requests.len());
+        self.service.push(batch);
+    }
+}
+
+struct WorkerState<'a> {
+    /// Held for the session: on real PJRT bindings this is where batch
+    /// execution compiles/loads artifacts, exactly-once per process via
+    /// the shared exe_cache. The pure-Rust Q_P path needs no compiles.
+    _wrt: crate::runtime::WorkerRuntime<'a>,
+    log: EventLog,
+    metrics: &'a Metrics,
+    /// Worker-local latency buffers — merged into `metrics` on drop so
+    /// the per-request path stays lock-free (see `note_complete_counts`).
+    lat_ns: Vec<u64>,
+    per_tenant_ns: std::collections::BTreeMap<String, Vec<u64>>,
+}
+
+impl Drop for WorkerState<'_> {
+    fn drop(&mut self) {
+        self.metrics.merge_worker(
+            std::mem::take(&mut self.lat_ns),
+            std::mem::take(&mut self.per_tenant_ns));
+    }
+}
+
+/// out = x @ Q_P for one request row (Q_P row-major [n, n]).
+fn apply_row(input: &[f32], qp: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    for (k, &xv) in input.iter().enumerate() {
+        let row = &qp[k * n..(k + 1) * n];
+        for (o, &w) in out.iter_mut().zip(row) {
+            *o += xv * w;
+        }
+    }
+    out
+}
+
+fn process_batch(registry: &Registry, metrics: &Metrics,
+                 state: &mut WorkerState<'_>, ctx: TaskCtx, batch: Batch) {
+    // resolve the adapter at service time: an immutable snapshot, so a
+    // concurrent hot-swap can never tear version/params mid-batch
+    let snap = match registry.snapshot(&batch.tenant) {
+        Ok(s) => s,
+        Err(e) => return fail_batch(metrics, &state.log, ctx, batch, &e.to_string()),
+    };
+    let qp = match registry.materialized(&snap) {
+        Ok(m) => m,
+        Err(e) => return fail_batch(metrics, &state.log, ctx, batch, &e.to_string()),
+    };
+    let n = snap.spec.dim();
+    let tenant_lat = state.per_tenant_ns.entry(batch.tenant.clone()).or_default();
+    for req in batch.requests {
+        if req.input.len() != n {
+            let msg = format!(
+                "tenant {:?}: input has {} elements but the live adapter \
+                 (version {}) has dim {n}",
+                batch.tenant, req.input.len(), snap.version);
+            metrics.note_failed(1);
+            req.fail(msg);
+            continue;
+        }
+        let output = apply_row(&req.input, &qp, n);
+        let latency_ns = req.submitted.elapsed().as_nanos() as u64;
+        metrics.note_complete_counts();
+        state.lat_ns.push(latency_ns);
+        tenant_lat.push(latency_ns);
+        let meta = req.meta;
+        req.complete(Response {
+            meta,
+            tenant: batch.tenant.clone(),
+            version: snap.version,
+            checksum: snap.checksum,
+            output,
+            latency_us: latency_ns as f64 / 1_000.0,
+        });
+    }
+}
+
+fn fail_batch(metrics: &Metrics, log: &EventLog, ctx: TaskCtx, batch: Batch,
+              msg: &str) {
+    log.emit("serve_error", vec![
+        ("tenant", batch.tenant.as_str().into()),
+        ("batch_index", ctx.index.into()),
+        ("requests", batch.requests.len().into()),
+        ("error", msg.into()),
+    ]);
+    metrics.note_failed(batch.requests.len());
+    for req in batch.requests {
+        req.fail(msg.to_string());
+    }
+}
+
+/// A completed serve session: whatever `body` returned, plus the metrics.
+pub struct ServeOutcome<R> {
+    pub body: R,
+    pub summary: ServeSummary,
+}
+
+/// Run a scoped serve session (see the module docs). The summary is
+/// emitted through `log` before returning.
+pub fn serve<R, F>(rt: &Runtime, registry: &Registry, cfg: &ServeConfig,
+                   log: &EventLog, body: F) -> Result<ServeOutcome<R>>
+where
+    F: FnOnce(&ServerHandle<'_>) -> Result<R>,
+{
+    let metrics = Metrics::new();
+    let t0 = Instant::now();
+    let (body_result, init_errors): (Result<R>, Vec<String>) = pool::run_service(
+        cfg.workers,
+        |w| {
+            let wrt = rt.for_worker(w)?;
+            if wrt.is_shared() {
+                metrics.shared_client_workers.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(WorkerState {
+                _wrt: wrt,
+                log: log.for_worker(w),
+                metrics: &metrics,
+                lat_ns: Vec::new(),
+                per_tenant_ns: std::collections::BTreeMap::new(),
+            })
+        },
+        |state, ctx, batch: Batch| process_batch(registry, &metrics, state, ctx, batch),
+        |service| {
+            let handle = ServerHandle {
+                registry,
+                service,
+                metrics: &metrics,
+                batcher: Mutex::new(Batcher::new(cfg.policy)),
+                fifo: cfg.fifo,
+            };
+            let r = if cfg.fifo {
+                body(&handle)
+            } else {
+                // timed mode's max-wait bound must hold even when no
+                // further submit arrives to piggyback a flush on: a
+                // flusher thread sweeps expired buffers on a half-wait
+                // cadence for the whole session
+                let stop = AtomicBool::new(false);
+                let tick = Duration::from_micros(
+                    (cfg.policy.max_wait_us / 2).max(50));
+                std::thread::scope(|s| {
+                    s.spawn(|| {
+                        while !stop.load(Ordering::Relaxed) {
+                            handle.flush_expired();
+                            std::thread::sleep(tick);
+                        }
+                    });
+                    let r = catch_unwind(AssertUnwindSafe(|| body(&handle)));
+                    stop.store(true, Ordering::Relaxed);
+                    match r {
+                        Ok(r) => r,
+                        Err(p) => resume_unwind(p),
+                    }
+                })
+            };
+            handle.flush();
+            r
+        },
+    );
+    let wall_s = t0.elapsed().as_secs_f64();
+    // worker-init failures are the root cause behind any "request
+    // dropped unserved" errors the body saw — log them and attach them
+    // to the body's error instead of discarding the diagnosis
+    for e in &init_errors {
+        log.emit("serve_error", vec![("error", e.as_str().into())]);
+    }
+    let body_value = match body_result {
+        Ok(v) => v,
+        Err(e) if !init_errors.is_empty() => {
+            return Err(e.context(format!(
+                "serve worker(s) failed to start: [{}]",
+                init_errors.join("; "))));
+        }
+        Err(e) => return Err(e),
+    };
+    let summary = metrics.summarize(cfg.workers, wall_s, registry.cache_stats());
+    summary.emit(log);
+    Ok(ServeOutcome { body: body_value, summary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantum::pauli;
+    use crate::serve::registry::PauliSpec;
+
+    fn test_registry() -> Registry {
+        let reg = Registry::new(1 << 22);
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        let thetas: Vec<f32> = (0..spec.num_params())
+            .map(|i| (i as f32 * 0.31).sin())
+            .collect();
+        reg.register("t0", spec, thetas).unwrap();
+        reg
+    }
+
+    #[test]
+    fn serve_round_trip_matches_direct_apply() {
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+        let input: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).cos()).collect();
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            let r = h.submit("t0", 7, input.clone())?;
+            h.flush();
+            r.wait()
+        }).unwrap();
+        let resp = outcome.body;
+        assert_eq!(resp.meta, 7);
+        assert_eq!(resp.version, 1);
+        // the served output is exactly x @ Q_P for the registered thetas
+        let snap = reg.snapshot("t0").unwrap();
+        let c = pauli::build(3, 1);
+        let mut expect = input.clone();
+        c.apply(&mut expect, 1, &snap.thetas);
+        for (a, b) in resp.output.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(outcome.summary.completed, 1);
+        assert_eq!(outcome.summary.failed, 0);
+        assert_eq!(outcome.summary.max_queue_depth, 1);
+    }
+
+    #[test]
+    fn unknown_tenant_and_bad_dim_fail_at_submit() {
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig::default();
+        serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            assert!(h.submit("nope", 0, vec![0.0; 8]).is_err());
+            assert!(h.submit("t0", 0, vec![0.0; 7]).is_err());
+            Ok(())
+        }).unwrap();
+    }
+
+    #[test]
+    fn unwaited_requests_resolve_on_session_end() {
+        // submit without flush: serve()'s end-of-body flush dispatches
+        // the partial batch; the handle resolves after the session
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig::default();
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            h.submit("t0", 3, vec![0.5; 8])
+        }).unwrap();
+        let resp = outcome.body.wait().unwrap();
+        assert_eq!(resp.meta, 3);
+        assert_eq!(outcome.summary.submitted, 1);
+    }
+
+    #[test]
+    fn percentiles_are_sane() {
+        let ns: Vec<u64> = (1..=100).map(|i| i * 1000).collect();
+        assert!((percentile_us(&ns, 50.0) - 51.0).abs() < 2.0);
+        assert!((percentile_us(&ns, 99.0) - 99.0).abs() < 2.0);
+        assert_eq!(percentile_us(&[], 50.0), 0.0);
+    }
+}

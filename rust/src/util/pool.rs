@@ -25,7 +25,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -216,6 +216,193 @@ where
 
 fn skip_error(i: usize, failed: usize, msg: &str) -> anyhow::Error {
     anyhow!("task {i} skipped: pool aborted after task {failed} failed: {msg}")
+}
+
+// ---------------------------------------------------------------- service ---
+
+struct ServiceState<T> {
+    queue: VecDeque<(usize, T)>,
+    seq: usize,
+    closed: bool,
+    live_workers: usize,
+}
+
+/// A long-running work queue for service-style pools (the adapter-serving
+/// scheduler), complementing the batch-oriented [`run_stateful`]: items
+/// arrive over time via [`push`](Service::push) and workers loop popping
+/// until the queue is closed and drained.
+///
+/// Liveness contract — a `Service` never strands an item silently:
+/// - `push` after `close`, or after every worker has exited, *drops* the
+///   item immediately (items are expected to carry their own completion
+///   channel whose `Drop` reports the failure, as the serve scheduler's
+///   pending requests do);
+/// - when the last worker exits while items are still queued, the queue
+///   is drained and those items are dropped the same way, so a caller
+///   blocked on an item's completion channel always wakes.
+pub struct Service<T> {
+    state: Mutex<ServiceState<T>>,
+    cv: Condvar,
+    init_errors: Mutex<Vec<String>>,
+}
+
+impl<T> Service<T> {
+    fn new(workers: usize) -> Service<T> {
+        Service {
+            state: Mutex::new(ServiceState {
+                queue: VecDeque::new(),
+                seq: 0,
+                closed: false,
+                live_workers: workers,
+            }),
+            cv: Condvar::new(),
+            init_errors: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Enqueue one item; returns its submission sequence number. If the
+    /// queue is closed or every worker has exited, the item is dropped
+    /// (see the liveness contract above) but a sequence number is still
+    /// consumed so numbering stays gap-free from the caller's view.
+    pub fn push(&self, item: T) -> usize {
+        let dropped;
+        let seq;
+        {
+            let mut st = self.state.lock().unwrap();
+            seq = st.seq;
+            st.seq += 1;
+            if st.closed || st.live_workers == 0 {
+                dropped = Some(item);
+            } else {
+                st.queue.push_back((seq, item));
+                dropped = None;
+            }
+        }
+        if dropped.is_none() {
+            self.cv.notify_one();
+        }
+        drop(dropped); // outside the lock: item Drop may take other locks
+        seq
+    }
+
+    /// Pending (not yet popped) item count — the scheduler's queue-depth
+    /// gauge reads this.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: workers drain what is already queued, then exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker init failures, for diagnostics after the pool winds down.
+    pub fn init_errors(&self) -> Vec<String> {
+        self.init_errors.lock().unwrap().clone()
+    }
+
+    /// Blocking worker-side pop: an item, or `None` once the queue is
+    /// closed and empty.
+    fn pop(&self) -> Option<(usize, T)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(it) = st.queue.pop_front() {
+                return Some(it);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// One worker is gone. When the last one goes, strand-drain the queue
+    /// (dropped items report through their own completion channels).
+    fn worker_exit(&self) {
+        let drained: Vec<(usize, T)>;
+        {
+            let mut st = self.state.lock().unwrap();
+            st.live_workers = st.live_workers.saturating_sub(1);
+            if st.live_workers > 0 {
+                return;
+            }
+            drained = st.queue.drain(..).collect();
+        }
+        drop(drained); // outside the lock, as in push
+        self.cv.notify_all();
+    }
+}
+
+/// Run a service pool: `jobs` workers (each with private state from
+/// `init(worker_id)`, as in [`run_stateful`]) loop over a shared
+/// [`Service`] queue while `body` runs on the caller's thread, submitting
+/// items through the `&Service` it receives. When `body` returns the
+/// queue closes, workers drain it, and `body`'s value is returned along
+/// with every worker-init failure (collected after all workers have
+/// exited, so the list is complete — callers should surface it when the
+/// session failed, since dropped items only report a generic error).
+///
+/// `work` is infallible by signature: service items own their error
+/// reporting (a completion channel filled on drop), so a failed or
+/// panicking item never wedges the pool — the panic is contained and the
+/// item's drop runs during unwind.
+pub fn run_service<T, S, R, I, W, B>(jobs: usize, init: I, work: W, body: B)
+                                     -> (R, Vec<String>)
+where
+    T: Send,
+    I: Fn(usize) -> Result<S> + Sync,
+    W: Fn(&mut S, TaskCtx, T) + Sync,
+    B: FnOnce(&Service<T>) -> R,
+{
+    let jobs = jobs.max(1);
+    let service = Service::new(jobs);
+    let out = std::thread::scope(|scope| {
+        for w in 0..jobs {
+            let service = &service;
+            let init = &init;
+            let work = &work;
+            scope.spawn(move || {
+                let mut state = match catch_unwind(AssertUnwindSafe(|| init(w))) {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => {
+                        service.init_errors.lock().unwrap()
+                            .push(format!("worker {w}: {e}"));
+                        service.worker_exit();
+                        return;
+                    }
+                    Err(p) => {
+                        service.init_errors.lock().unwrap().push(format!(
+                            "worker {w}: init panicked: {}", panic_msg(p.as_ref())));
+                        service.worker_exit();
+                        return;
+                    }
+                };
+                while let Some((i, item)) = service.pop() {
+                    let ctx = TaskCtx { worker: w, index: i };
+                    // a panicking item is consumed by the unwind (its drop
+                    // reports through its completion channel); the worker
+                    // itself survives to serve the next item
+                    let _ = catch_unwind(AssertUnwindSafe(|| work(&mut state, ctx, item)));
+                }
+                service.worker_exit();
+            });
+        }
+        let body_result = catch_unwind(AssertUnwindSafe(|| body(&service)));
+        // close even when body panicked, or the scope would join forever
+        service.close();
+        match body_result {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    });
+    // all workers have joined: the init-error list is final
+    let init_errors = service.init_errors.into_inner().unwrap();
+    (out, init_errors)
 }
 
 /// Stateless convenience wrapper around [`run_stateful`].
@@ -414,6 +601,123 @@ mod tests {
         // them must have been executed by worker 1 (stolen)
         let stolen = pairs.iter().filter(|(w, i)| *w == 1 && i % 2 == 0).count();
         assert!(stolen > 0, "no work was stolen: {pairs:?}");
+    }
+
+    /// A service item whose drop records whether it was ever processed —
+    /// the completion-channel pattern the serve scheduler uses.
+    struct Probe {
+        id: usize,
+        done: std::sync::Arc<Mutex<Vec<(usize, bool)>>>,
+        processed: bool,
+    }
+
+    impl Drop for Probe {
+        fn drop(&mut self) {
+            self.done.lock().unwrap().push((self.id, self.processed));
+        }
+    }
+
+    #[test]
+    fn service_processes_all_items() {
+        let done = std::sync::Arc::new(Mutex::new(Vec::new()));
+        for jobs in [1, 4] {
+            done.lock().unwrap().clear();
+            let n = 32;
+            let (out, errs) = run_service(
+                jobs,
+                |w| Ok(w),
+                |_state, _ctx, mut item: Probe| {
+                    item.processed = true;
+                },
+                |svc| {
+                    for id in 0..n {
+                        svc.push(Probe { id, done: done.clone(), processed: false });
+                    }
+                    n
+                },
+            );
+            assert_eq!(out, n);
+            assert!(errs.is_empty(), "{errs:?}");
+            let d = done.lock().unwrap();
+            assert_eq!(d.len(), n, "jobs={jobs}");
+            assert!(d.iter().all(|&(_, p)| p), "unprocessed items: {d:?}");
+        }
+    }
+
+    #[test]
+    fn service_push_after_close_drops_item() {
+        let done = std::sync::Arc::new(Mutex::new(Vec::new()));
+        run_service(
+            1,
+            |w| Ok(w),
+            |_s, _ctx, mut item: Probe| {
+                item.processed = true;
+            },
+            |svc| {
+                svc.close();
+                svc.push(Probe { id: 7, done: done.clone(), processed: false });
+            },
+        );
+        let d = done.lock().unwrap();
+        assert_eq!(d.as_slice(), &[(7, false)], "{d:?}");
+    }
+
+    #[test]
+    fn service_all_workers_dead_drains_queue() {
+        // every init fails: pushed items must still be dropped (their
+        // completion channels fire) rather than stranded forever
+        let done = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let (_, errs) = run_service(
+            2,
+            |w| -> Result<()> { Err(anyhow!("worker {w} cannot start")) },
+            |_s, _ctx, mut item: Probe| {
+                item.processed = true;
+            },
+            |svc| {
+                // workers may exit before or after these pushes; both
+                // paths (dead-pool drop and strand-drain) end in a drop
+                for id in 0..4 {
+                    svc.push(Probe { id, done: done.clone(), processed: false });
+                }
+                let t0 = std::time::Instant::now();
+                while done.lock().unwrap().len() < 4
+                    && t0.elapsed() < Duration::from_secs(5)
+                {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                assert_eq!(svc.init_errors().len(), 2);
+            },
+        );
+        assert_eq!(errs.len(), 2, "{errs:?}");
+        assert!(errs.iter().all(|e| e.contains("cannot start")), "{errs:?}");
+        let d = done.lock().unwrap();
+        assert_eq!(d.len(), 4, "{d:?}");
+        assert!(d.iter().all(|&(_, p)| !p));
+    }
+
+    #[test]
+    fn service_worker_panic_consumes_item_not_pool() {
+        let done = std::sync::Arc::new(Mutex::new(Vec::new()));
+        run_service(
+            2,
+            |w| Ok(w),
+            |_s, _ctx, mut item: Probe| {
+                if item.id == 1 {
+                    panic!("boom on {}", item.id);
+                }
+                item.processed = true;
+            },
+            |svc| {
+                for id in 0..8 {
+                    svc.push(Probe { id, done: done.clone(), processed: false });
+                }
+            },
+        );
+        let d = done.lock().unwrap();
+        assert_eq!(d.len(), 8);
+        for &(id, p) in d.iter() {
+            assert_eq!(p, id != 1, "item {id}");
+        }
     }
 
     #[test]

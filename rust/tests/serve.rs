@@ -1,0 +1,278 @@
+//! Integration tests for the multi-tenant adapter serving subsystem
+//! (ISSUE 3 acceptance): fifo-mode byte-determinism at any worker count,
+//! hot-swap atomicity under 8-worker load, the LRU materialization
+//! cache's byte budget and counters end-to-end, and the `serve-bench`
+//! loadgen's EventLog summary.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::quantum::pauli;
+use quantum_peft::runtime::Runtime;
+use quantum_peft::serve::loadgen::{self, response_log};
+use quantum_peft::serve::registry::theta_checksum;
+use quantum_peft::serve::scheduler::BatchPolicy;
+use quantum_peft::serve::{
+    BenchOpts, LoadSpec, PauliSpec, Registry, ServeConfig,
+};
+use quantum_peft::util::json::Json;
+use quantum_peft::util::rng::Rng;
+
+#[test]
+fn fifo_mode_is_byte_identical_for_any_worker_count() {
+    let mk = |workers: usize, seed: u64| {
+        let opts = BenchOpts {
+            load: LoadSpec {
+                tenants: 8,
+                requests: 192,
+                concurrency: 24,
+                seed,
+                zipf_s: 1.1,
+                pauli: PauliSpec { q: 4, n_layers: 1 },
+                open_rate_rps: 0.0,
+            },
+            serve: ServeConfig {
+                workers,
+                policy: BatchPolicy { max_batch: 5, max_wait_us: 1 },
+                fifo: true,
+            },
+            cache_bytes: 1 << 20,
+        };
+        loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap()
+    };
+    let (s1, log1) = mk(1, 7);
+    assert_eq!(s1.completed, 192);
+    assert_eq!(s1.failed, 0);
+    for workers in [2, 4, 8] {
+        let (s, log) = mk(workers, 7);
+        assert_eq!(s.completed, 192, "workers={workers}");
+        assert_eq!(log, log1, "response log diverged at workers={workers}");
+        // batch formation is submission-order-determined too, so even
+        // the histogram is reproducible across worker counts
+        assert_eq!(s.batch_hist, s1.batch_hist, "workers={workers}");
+    }
+    // a different seed must actually change the traffic
+    let (_, other) = mk(2, 8);
+    assert_ne!(other, log1);
+}
+
+#[test]
+fn hot_swap_under_load_never_tears_version_and_params() {
+    const WORKERS: usize = 8;
+    const SWAPS: usize = 40;
+    const REQS_PER_ROUND: usize = 16;
+    let spec = PauliSpec { q: 5, n_layers: 1 };
+    let dim = spec.dim();
+    let reg = Registry::new(16 << 20);
+    let mut root = Rng::new(123);
+    let mk_thetas = |rng: &mut Rng| -> Vec<f32> {
+        (0..spec.num_params()).map(|_| rng.normal() as f32 * 0.5).collect()
+    };
+    let v1 = mk_thetas(&mut root);
+    reg.register("hot", spec, v1.clone()).unwrap();
+    // version -> (checksum, thetas), grown as the swapper publishes
+    let published: Mutex<BTreeMap<u64, Vec<f32>>> = Mutex::new(
+        [(1u64, v1)].into_iter().collect());
+
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ServeConfig {
+        workers: WORKERS,
+        policy: BatchPolicy { max_batch: 4, max_wait_us: 1 },
+        fifo: true,
+    };
+    let inputs: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+    let outcome = quantum_peft::serve::serve(
+        &rt, &reg, &cfg, &EventLog::null(), |h| {
+            let mut responses = Vec::new();
+            let mut swap_rng = root.fork(1);
+            let mut in_rng = root.fork(2);
+            for round in 0..SWAPS {
+                let mut handles = Vec::new();
+                for k in 0..REQS_PER_ROUND {
+                    let input: Vec<f32> = (0..dim)
+                        .map(|_| in_rng.normal() as f32 * 0.5)
+                        .collect();
+                    let meta = (round * REQS_PER_ROUND + k) as u64;
+                    inputs.lock().unwrap().push(input.clone());
+                    handles.push(h.submit("hot", meta, input)?);
+                }
+                // swap while this round's batches are in flight on 8
+                // workers: each batch serves whichever snapshot it
+                // resolves — old or new is fine, a mix never is
+                let thetas = mk_thetas(&mut swap_rng);
+                let v = reg.register("hot", spec, thetas.clone()).unwrap();
+                assert_eq!(v as usize, round + 2);
+                published.lock().unwrap().insert(v, thetas);
+                h.flush();
+                for hd in handles {
+                    responses.push(hd.wait()?);
+                }
+            }
+            Ok(responses)
+        }).unwrap();
+
+    let published = published.into_inner().unwrap();
+    let inputs = inputs.into_inner().unwrap();
+    let circuit = pauli::build(5, 1);
+    assert_eq!(outcome.body.len(), SWAPS * REQS_PER_ROUND);
+    for resp in &outcome.body {
+        // (a) the version tag matches the checksum of that version's
+        // exact thetas — old params under a new tag would fail here
+        let thetas = published.get(&resp.version).unwrap_or_else(|| {
+            panic!("response claims unpublished version {}", resp.version)
+        });
+        assert_eq!(resp.checksum, theta_checksum(thetas),
+                   "torn read at version {}", resp.version);
+        // (b) the output is exactly x @ Q_P(thetas[version])
+        let mut expect = inputs[resp.meta as usize].clone();
+        circuit.apply(&mut expect, 1, thetas);
+        for (a, b) in resp.output.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4,
+                    "output mismatch at version {}: {a} vs {b}", resp.version);
+        }
+    }
+    assert_eq!(outcome.summary.failed, 0);
+    // hot-swap must not leak in-flight pins
+    assert_eq!(reg.inflight("hot"), 0);
+}
+
+#[test]
+fn lru_cache_respects_budget_end_to_end() {
+    // capacity = exactly two 16x16 f32 matrices; three tenants served
+    // strictly sequentially (max_batch 1, one wait per submit) so the
+    // hit/miss/eviction sequence is fully deterministic
+    let spec = PauliSpec { q: 4, n_layers: 1 };
+    let one = 16 * 16 * 4;
+    let reg = Registry::new(2 * one);
+    for t in ["a", "b", "c"] {
+        let thetas: Vec<f32> = (0..spec.num_params())
+            .map(|i| (i as f32 * 0.17).sin())
+            .collect();
+        reg.register(t, spec, thetas).unwrap();
+    }
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ServeConfig {
+        workers: 1,
+        policy: BatchPolicy { max_batch: 1, max_wait_us: 1 },
+        fifo: true,
+    };
+    quantum_peft::serve::serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+        // a(miss) a(hit) b(miss) c(miss, evicts a) a(miss, evicts b)
+        for (i, t) in ["a", "a", "b", "c", "a"].iter().enumerate() {
+            h.submit(t, i as u64, vec![0.25; 16])?.wait()?;
+        }
+        Ok(())
+    }).unwrap();
+    let s = reg.cache_stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (1, 4, 2), "{s:?}");
+    assert!(s.bytes <= s.capacity_bytes, "{s:?}");
+    assert_eq!(s.entries, 2, "{s:?}");
+}
+
+#[test]
+fn serve_bench_emits_summary_through_event_log() {
+    let path = std::env::temp_dir().join("qp_serve_bench_events.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let log = EventLog::new(Some(path.clone()), false).unwrap();
+    let opts = BenchOpts {
+        load: LoadSpec {
+            tenants: 4,
+            requests: 64,
+            concurrency: 16,
+            seed: 3,
+            zipf_s: 1.0,
+            pauli: PauliSpec { q: 3, n_layers: 1 },
+            open_rate_rps: 0.0,
+        },
+        serve: ServeConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            fifo: true,
+        },
+        cache_bytes: 1 << 20,
+    };
+    let (summary, _) = loadgen::run_serve_bench(&opts, &log).unwrap();
+    assert_eq!(summary.completed, 64);
+    assert!(summary.rps > 0.0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    let mut summary_line = None;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        let kind = j.get("event").unwrap().as_str().unwrap().to_string();
+        if kind == "serve_summary" {
+            summary_line = Some(j.clone());
+        }
+        *kinds.entry(kind).or_insert(0) += 1;
+    }
+    assert_eq!(kinds.get("serve_bench"), Some(&1), "{kinds:?}");
+    assert_eq!(kinds.get("serve_summary"), Some(&1), "{kinds:?}");
+    // one line per tenant that saw traffic (Zipf may starve cold ranks)
+    let tenant_lines = *kinds.get("serve_tenant").unwrap_or(&0);
+    assert!((1..=4).contains(&tenant_lines), "{kinds:?}");
+    // per-tenant request counts must account for every request exactly
+    let per_tenant_total: usize = text.lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|j| j.get("event").unwrap().as_str().unwrap() == "serve_tenant")
+        .map(|j| j.get("requests").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(per_tenant_total, 64);
+    let s = summary_line.unwrap();
+    assert_eq!(s.get("completed").unwrap().as_usize().unwrap(), 64);
+    assert!(s.get("rps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(s.get("p99_us").unwrap().as_f64().unwrap()
+            >= s.get("p50_us").unwrap().as_f64().unwrap());
+    // batch histogram is a [[size, count], ...] array summing to the
+    // dispatched batches
+    let hist = s.get("batch_hist").unwrap().as_arr().unwrap();
+    let total: usize = hist.iter()
+        .map(|p| p.as_arr().unwrap()[1].as_usize().unwrap())
+        .sum();
+    assert!(total > 0, "empty batch histogram");
+}
+
+#[test]
+fn open_loop_timed_mode_completes_all_requests() {
+    // open-loop arrivals + timed batching: not byte-deterministic, but
+    // every request must complete and the queue must fully drain
+    let opts = BenchOpts {
+        load: LoadSpec {
+            tenants: 3,
+            requests: 48,
+            concurrency: 1,
+            seed: 5,
+            zipf_s: 0.5,
+            pauli: PauliSpec { q: 3, n_layers: 1 },
+            open_rate_rps: 20_000.0,
+        },
+        serve: ServeConfig {
+            workers: 4,
+            policy: BatchPolicy { max_batch: 6, max_wait_us: 100 },
+            fifo: false,
+        },
+        cache_bytes: 1 << 20,
+    };
+    let (summary, log) = loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap();
+    assert_eq!(summary.completed, 48);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(log.lines().count(), 48);
+}
+
+#[test]
+fn response_log_sorts_by_meta() {
+    use quantum_peft::serve::Response;
+    let r = |meta: u64| Response {
+        meta,
+        tenant: "t".into(),
+        version: 1,
+        checksum: 9,
+        output: vec![1.0],
+        latency_us: 1.0,
+    };
+    let log = response_log(&[r(2), r(0), r(1)]);
+    let metas: Vec<&str> = log.lines()
+        .map(|l| l.split_whitespace().next().unwrap())
+        .collect();
+    assert_eq!(metas, vec!["meta=0", "meta=1", "meta=2"]);
+}
