@@ -1,6 +1,9 @@
 //! Multi-tenant serving benchmark: requests/sec and p99 latency across a
 //! worker x tenant grid (the ISSUE-3 acceptance grid: 1/4/8 workers x
-//! 1/16/256 tenants), plus the checkpoint bulk-I/O speedup measurement.
+//! 1/16/256 tenants), the checkpoint bulk-I/O speedup measurement, the
+//! ISSUE-4 overload-shedding scenario (open loop at ~5x the admitted
+//! budget: rejected share + admitted-request p99), and the dense-vs-
+//! structured apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`.
 //!
 //! Uses the in-tree harness conventions (criterion is unavailable
 //! offline): self-contained, prints a stable one-line-per-cell report,
@@ -10,9 +13,14 @@ use std::time::Instant;
 
 use quantum_peft::coordinator::checkpoint::{self, AdapterManifest};
 use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::quantum::pauli;
 use quantum_peft::runtime::HostTensor;
-use quantum_peft::serve::{BenchOpts, LoadSpec, PauliSpec};
+use quantum_peft::serve::scheduler::BatchPolicy;
+use quantum_peft::serve::{
+    AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, ServeConfig,
+};
 use quantum_peft::util::bench::fmt_ns;
+use quantum_peft::util::rng::Rng;
 
 fn serve_grid() {
     println!("# serve: closed-loop seeded loadgen, q=5 L=1, zipf s=1.0");
@@ -30,11 +38,9 @@ fn serve_grid() {
                     zipf_s: 1.0,
                     open_rate_rps: 0.0,
                 },
-                serve: quantum_peft::serve::ServeConfig {
-                    workers,
-                    ..Default::default()
-                },
+                serve: ServeConfig { workers, ..ServeConfig::default() },
                 cache_bytes: 8 << 20,
+                spool_dir: None,
             };
             match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
                 Ok((s, _)) => {
@@ -96,7 +102,120 @@ fn checkpoint_io() {
     println!("bulk read speedup    {:>10.1}x", slow_s / load_s);
 }
 
+/// ISSUE-4 acceptance scenario: open-loop arrivals at ~5x the aggregate
+/// admitted budget with per-tenant rate limits on. fifo mode, so the
+/// seeded gaps drive a logical clock (no sleeping — the cell runs at
+/// full speed) and the shed set is byte-deterministic at any worker
+/// count; wall-clock latency of the admitted requests is still real.
+fn overload_shedding() {
+    println!("# overload shedding: open loop 2000 req/s (logical) vs \
+              16 tenants x 25 rps admitted budget, zipf s=1.0");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
+             "workers", "arrivals", "admitted", "shed%", "p99(adm)", "hot-shed%");
+    for &workers in &[1usize, 4, 8] {
+        let opts = BenchOpts {
+            load: LoadSpec {
+                tenants: 16,
+                requests: 4096,
+                concurrency: 1,
+                pauli: PauliSpec { q: 5, n_layers: 1 },
+                seed: 42,
+                zipf_s: 1.0,
+                open_rate_rps: 2000.0,
+            },
+            serve: ServeConfig {
+                workers,
+                policy: BatchPolicy { max_batch: 8, max_wait_us: 1 },
+                fifo: true,
+                admission: AdmissionConfig {
+                    rate_rps: 25.0,
+                    burst: 25.0,
+                    max_queue: 0,
+                },
+            },
+            cache_bytes: 8 << 20,
+            spool_dir: None,
+        };
+        match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
+            Ok((s, _)) => {
+                let a = &s.admission;
+                let arrivals = a.admitted + a.rejected_total();
+                let shed = 100.0 * a.rejected_total() as f64
+                    / arrivals.max(1) as f64;
+                let hot = a.per_tenant.iter()
+                    .find(|t| t.tenant == "tenant0000")
+                    .map(|t| {
+                        let att = t.admitted + t.rejected_rate_limited
+                            + t.rejected_queue_full;
+                        100.0 * (t.rejected_rate_limited
+                                 + t.rejected_queue_full) as f64
+                            / att.max(1) as f64
+                    })
+                    .unwrap_or(0.0);
+                println!("{:>8} {:>10} {:>10} {:>9.1}% {:>12} {:>11.1}%",
+                         workers, arrivals, a.admitted, shed,
+                         fmt_ns(s.p99_us * 1e3), hot);
+            }
+            Err(e) => println!("{workers:>8} failed: {e}"),
+        }
+    }
+}
+
+/// The routing decision behind `STRUCTURED_APPLY_MIN_Q`, measured: dense
+/// row-multiply against a pre-materialized Q_P (what the LRU path pays
+/// per request once cached) vs structured gate application straight from
+/// the thetas. Also prints the one-off dense materialization cost the
+/// structured path never pays.
+fn structured_vs_dense() {
+    println!("# apply path: dense x@Q_P row-multiply vs structured \
+              PauliCircuit::apply, L=1, per row");
+    println!("{:>4} {:>6} {:>12} {:>12} {:>12} {:>10}",
+             "q", "dim", "dense/row", "struct/row", "material.", "speedup");
+    let mut rng = Rng::new(7);
+    for &q in &[4usize, 6, 8, 10, 12] {
+        let circuit = pauli::build(q, 1);
+        let n = circuit.dim();
+        let thetas: Vec<f32> =
+            (0..circuit.num_params).map(|_| rng.normal() as f32 * 0.5).collect();
+        let input: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+        let t0 = Instant::now();
+        let dense = circuit.materialize(&thetas);
+        let mat_s = t0.elapsed().as_secs_f64();
+        // enough rows to dominate timer noise, few enough that q=12
+        // (4096-dim, 64 MiB dense) stays quick
+        let iters = (1 << 22) / (n * n).max(1 << 14);
+        let iters = iters.max(4);
+        let mut sink = 0.0f32;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            // dense row-multiply, exactly what the server's LRU path does
+            let mut out = vec![0f32; n];
+            for (k, &xv) in input.iter().enumerate() {
+                let row = &dense[k * n..(k + 1) * n];
+                for (o, &w) in out.iter_mut().zip(row) {
+                    *o += xv * w;
+                }
+            }
+            sink += out[0];
+        }
+        let dense_s = t0.elapsed().as_secs_f64() / iters as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut row = input.clone();
+            circuit.apply(&mut row, 1, &thetas);
+            sink += row[0];
+        }
+        let struct_s = t0.elapsed().as_secs_f64() / iters as f64;
+        assert!(sink.is_finite());
+        println!("{:>4} {:>6} {:>12} {:>12} {:>12} {:>9.1}x",
+                 q, n, fmt_ns(dense_s * 1e9), fmt_ns(struct_s * 1e9),
+                 fmt_ns(mat_s * 1e9), dense_s / struct_s);
+    }
+}
+
 fn main() {
     checkpoint_io();
+    structured_vs_dense();
+    overload_shedding();
     serve_grid();
 }

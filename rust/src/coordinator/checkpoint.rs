@@ -61,6 +61,34 @@ pub fn save_adapter(path: &Path, manifest: &AdapterManifest,
     save_impl(path, Some(manifest), tensors)
 }
 
+/// Save a version-2 adapter checkpoint through a hidden temp file plus an
+/// atomic same-directory rename — the uploader-side half of the spool
+/// protocol ([`crate::serve::spool`]): a watcher polling the target
+/// directory can never observe a partially-written file under the final
+/// name (it skips dot-files, and the rename is atomic). The temp name
+/// embeds the pid and a process-global sequence number, so concurrent
+/// uploaders of the *same* adapter write disjoint temp files and the
+/// last rename wins whole — never a byte-interleaved hybrid. The temp
+/// file is removed on a failed save.
+pub fn save_adapter_atomic(path: &Path, manifest: &AdapterManifest,
+                           tensors: &[(String, HostTensor)]) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let file_name = path.file_name()
+        .with_context(|| format!("checkpoint path {path:?} has no file name"))?;
+    let tmp = path.with_file_name(format!(
+        ".tmp.{}.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        file_name.to_string_lossy()));
+    if let Err(e) = save_adapter(&tmp, manifest, tensors) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("atomic rename {tmp:?} -> {path:?}"))
+}
+
 fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
              tensors: &[(String, HostTensor)]) -> Result<()> {
     // enforce the same caps load enforces, with write-time messages: a
@@ -338,6 +366,39 @@ mod tests {
         save(&v1, &tensors).unwrap();
         let e = load_adapter(&v1).unwrap_err().to_string();
         assert!(e.contains("no adapter manifest"), "{e}");
+    }
+
+    #[test]
+    fn atomic_adapter_save_leaves_no_temp_and_roundtrips() {
+        let dir = tdir("atomic");
+        let path = dir.join("acme.qpck");
+        let m = AdapterManifest { tenant: "acme".into(), q: 3, n_layers: 1 };
+        let tensors = vec![
+            ("thetas".to_string(), HostTensor::f32(vec![7], vec![0.5; 7])),
+        ];
+        save_adapter_atomic(&path, &m, &tensors).unwrap();
+        let (back_m, back_t) = load_adapter(&path).unwrap();
+        assert_eq!(back_m, m);
+        assert_eq!(back_t, tensors);
+        // the staging dot-file must not linger next to the final file
+        let stray: Vec<_> = std::fs::read_dir(&dir).unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
+        // a failed save cleans its temp file up too
+        let bad = vec![(
+            "n".repeat(MAX_NAME_LEN + 1),
+            HostTensor::f32(vec![1], vec![0.0]),
+        )];
+        assert!(save_adapter_atomic(&path, &m, &bad).is_err());
+        let stray: Vec<_> = std::fs::read_dir(&dir).unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
+        // and the previously-saved final file is untouched
+        assert!(load_adapter(&path).is_ok());
     }
 
     #[test]

@@ -28,9 +28,17 @@
 //! and an LRU-bounded materialization cache, a micro-batching scheduler
 //! over the same work-stealing pool, per-tenant latency/throughput
 //! metrics through the `EventLog`, and a seeded load generator
-//! (`repro serve-bench`). Its `fifo` mode plus the seeded loadgen give a
-//! byte-identical response log at any worker count — the same
-//! determinism contract the sweep engine makes.
+//! (`repro serve-bench`). The control plane on top: per-tenant
+//! token-bucket rate limits and a global queue-depth cap enforced at
+//! submit time (overload sheds with a typed, counted rejection instead
+//! of unbounded queue growth), and a spool-directory watcher that
+//! hot-loads `QPCK` v2 adapter uploads — validated through the hardened
+//! checkpoint loader, quarantined on failure — and evicts tenants whose
+//! files are deleted, deferring on in-flight pins. The `fifo` mode plus
+//! the seeded loadgen give a byte-identical response log — and, with
+//! admission on a logical clock, a byte-identical rejection ledger — at
+//! any worker count: the same determinism contract the sweep engine
+//! makes.
 //!
 //! All workers load artifacts through one shared
 //! [`runtime::exe_cache::ExeCache`]: parsed HLO protos are shared

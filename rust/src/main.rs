@@ -83,13 +83,24 @@ commands:
   serve-bench  [--workers N|auto] [--tenants N] [--requests N] [--seed S]
            [--skew F] [--qubits Q] [--layers L] [--max-batch N]
            [--max-wait-us N] [--mode fifo|timed] [--concurrency C]
-           [--rate RPS] [--cache-mb F]
+           [--rate RPS] [--cache-mb F] [--rate-rps F] [--burst F]
+           [--max-queue N] [--spool-dir PATH]
            multi-tenant adapter serving benchmark: seeded Zipf loadgen
            against the serve registry/scheduler (closed loop by default;
            --rate > 0 switches to open-loop arrivals and timed batching).
-           fifo mode is byte-deterministic per seed at any --workers;
-           summary (p50/p95/p99, req/s, batch histogram, cache counters)
-           prints here and lands in the event log as serve_* lines.
+           admission control: --rate-rps caps each tenant's sustained
+           admission rate (token bucket, capacity --burst; default one
+           second's worth) and --max-queue caps global queue depth —
+           overload sheds with per-tenant rejection counters in the
+           event log instead of growing the queue. --spool-dir starts a
+           watcher that hot-loads QPCK v2 adapter uploads dropped into
+           that directory (quarantining malformed ones to rejected/)
+           and evicts tenants whose files are deleted.
+           fifo mode is byte-deterministic per seed at any --workers,
+           rejections included (open-loop gaps advance a logical clock
+           instead of sleeping); summary (p50/p95/p99, req/s, batch
+           histogram, cache + admission counters) prints here and lands
+           in the event log as serve_* lines.
 all parallel paths share one compile cache: each distinct artifact path
 compiles exactly once per process on CPU (in-flight compiles dedup across
 workers); other backends fall back to per-worker compiles that still
@@ -413,6 +424,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         Some("timed") => false,
         Some(other) => bail!("--mode expects fifo|timed, got {other:?}"),
     };
+    if let Some(v) = args.flags.get("rate-rps") {
+        serve_cfg.admission.rate_rps = v.parse().context("--rate-rps")?;
+    }
+    match args.flags.get("burst") {
+        Some(v) => serve_cfg.admission.burst = v.parse().context("--burst")?,
+        // default burst: one second's worth of the sustained rate
+        None if serve_cfg.admission.rate_rps > 0.0 => {
+            serve_cfg.admission.burst = serve_cfg.admission.rate_rps.max(1.0);
+        }
+        None => {}
+    }
+    if let Some(v) = args.flags.get("max-queue") {
+        serve_cfg.admission.max_queue = v.parse().context("--max-queue")?;
+    }
+    opts.spool_dir = args.flags.get("spool-dir").map(std::path::PathBuf::from);
     if let Some(v) = args.flags.get("cache-mb") {
         let mb: f64 = v.parse().context("--cache-mb")?;
         opts.cache_bytes = (mb * (1 << 20) as f64) as usize;

@@ -1,13 +1,19 @@
 //! Host-side groupwise integer quantization of *frozen* base weights
-//! (Table 6's 3-bit ViT backbone, §B.3). Mirrors the formula of §4.2:
-//!   w_q = round((w - mu) / beta) * beta + mu,  beta = range / (2^n - 1)
-//! applied by the coordinator to pretrained checkpoints before feeding
-//! them to the fine-tuning artifacts (adapters stay full precision; QAT
-//! of Lie parameters happens *inside* the graph via runtime extras).
+//! (Table 6's 3-bit ViT backbone, §B.3). Asymmetric min-anchored uniform
+//! quantization:
+//!   w_q = round((w - lo) / beta) * beta + lo,  beta = (hi - lo) / (2^n - 1)
+//! with lo/hi the per-group min/max — the §4.2 uniform-grid scheme
+//! anchored at the group *minimum* rather than a midpoint `mu`, so the
+//! grid's end levels land exactly on lo and hi (a zero-point-free,
+//! range-exact variant; the midpoint form shifts both ends off the
+//! observed extremes). Applied by the coordinator to pretrained
+//! checkpoints before feeding them to the fine-tuning artifacts
+//! (adapters stay full precision; QAT of Lie parameters happens *inside*
+//! the graph via runtime extras).
 
 /// Quantize a flat f32 buffer in place, groups of `g`, `bits`-bit levels.
 pub fn quantize_inplace(w: &mut [f32], bits: u32, g: usize) {
-    assert!(bits >= 1 && bits <= 16);
+    assert!((1..=16).contains(&bits));
     let levels = ((1u32 << bits) - 1) as f32;
     for chunk in w.chunks_mut(g) {
         let mut lo = f32::INFINITY;

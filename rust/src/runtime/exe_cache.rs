@@ -60,9 +60,15 @@ pub struct OnceMap<K, V> {
     slots: Mutex<HashMap<K, Arc<Slot<V>>>>,
 }
 
+impl<K, V> Default for OnceMap<K, V> {
+    fn default() -> OnceMap<K, V> {
+        OnceMap { slots: Mutex::new(HashMap::new()) }
+    }
+}
+
 impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
     pub fn new() -> OnceMap<K, V> {
-        OnceMap { slots: Mutex::new(HashMap::new()) }
+        OnceMap::default()
     }
 
     /// Number of keys present (ready or in flight).
@@ -180,9 +186,15 @@ pub struct CompileLog {
     records: Mutex<Vec<CompileRecord>>,
 }
 
+impl Default for CompileLog {
+    fn default() -> CompileLog {
+        CompileLog { records: Mutex::new(Vec::new()) }
+    }
+}
+
 impl CompileLog {
     pub fn new() -> CompileLog {
-        CompileLog { records: Mutex::new(Vec::new()) }
+        CompileLog::default()
     }
 
     pub fn record(&self, path: &Path, event: CacheEvent, secs: f64,
@@ -239,14 +251,20 @@ pub struct ExeCache {
     next_client: AtomicU64,
 }
 
-impl ExeCache {
-    pub fn new() -> ExeCache {
+impl Default for ExeCache {
+    fn default() -> ExeCache {
         ExeCache {
             protos: OnceMap::new(),
             exes: OnceMap::new(),
             log: CompileLog::new(),
             next_client: AtomicU64::new(0),
         }
+    }
+}
+
+impl ExeCache {
+    pub fn new() -> ExeCache {
+        ExeCache::default()
     }
 
     /// Register one PJRT client with this cache, returning its executable

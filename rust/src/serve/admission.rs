@@ -1,0 +1,393 @@
+//! Admission control: per-tenant token-bucket rate limits and a global
+//! queue-depth cap, enforced at the serving front door
+//! ([`crate::serve::server::ServerHandle::submit`]) *before* a request is
+//! ever enqueued.
+//!
+//! Rejected requests fail fast with the typed [`Rejected`] error — they
+//! never consume a batcher slot, a queue entry, or a worker. Open-loop
+//! drivers (the loadgen, `repro serve-bench`) recover the type with
+//! `anyhow`'s `downcast_ref`, count the shed share, and keep going
+//! instead of aborting the run. Per-tenant and global rejection counters
+//! are exported at session end as `serve_admission` /
+//! `serve_admission_tenant` EventLog lines (see
+//! [`crate::serve::server::ServeSummary::emit`]).
+//!
+//! Two clocks, preserving the [`crate::serve`] fifo-determinism contract:
+//! - **wall** (timed mode): buckets refill on `Instant` time and the
+//!   queue cap reads the server's real outstanding gauge — true
+//!   backpressure under overload;
+//! - **logical** (fifo mode): the clock moves only when the driver calls
+//!   [`AdmissionController::advance`] — the open-loop loadgen advances it
+//!   by its seeded interarrival gaps instead of sleeping — and the queue
+//!   cap reads the deterministic buffered backlog. Every admission
+//!   decision is then a pure function of the submission sequence, so
+//!   rejection counts and the response log stay byte-identical at any
+//!   worker count.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Why admission turned a request away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The tenant's token bucket was empty.
+    RateLimited,
+    /// The global queue-depth cap was reached.
+    QueueFull,
+}
+
+impl RejectReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::RateLimited => "rate_limited",
+            RejectReason::QueueFull => "queue_full",
+        }
+    }
+}
+
+/// Typed fail-fast admission error. Implements `std::error::Error`, so it
+/// converts into `anyhow::Error` through `?` and stays recoverable on the
+/// caller side via `err.downcast_ref::<Rejected>()` however much context
+/// wraps it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Rejected {
+    pub tenant: String,
+    pub reason: RejectReason,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tenant {:?} rejected at admission: {}", self.tenant, self.reason.as_str())
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Admission policy knobs. The all-zeros default admits everything.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Sustained per-tenant admission rate in requests per second
+    /// (logical seconds in fifo mode). `0.0` disables rate limiting.
+    pub rate_rps: f64,
+    /// Token-bucket capacity: how many requests a tenant may burst above
+    /// the sustained rate. Clamped to at least 1 when rate limiting is
+    /// on (a bucket that can never hold one token admits nothing).
+    pub burst: f64,
+    /// Global queue-depth cap (`0` disables): timed mode caps the real
+    /// outstanding-request count, fifo mode the deterministic buffered
+    /// backlog (see the module docs).
+    pub max_queue: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig { rate_rps: 0.0, burst: 1.0, max_queue: 0 }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn enabled(&self) -> bool {
+        self.rate_rps > 0.0 || self.max_queue > 0
+    }
+}
+
+enum Clock {
+    Wall(Instant),
+    /// Seconds, advanced only by [`AdmissionController::advance`].
+    Logical(Mutex<f64>),
+}
+
+struct Bucket {
+    tokens: f64,
+    last_s: f64,
+    admitted: u64,
+    rejected_rate_limited: u64,
+    rejected_queue_full: u64,
+}
+
+/// One tenant's admission counters, snapshotted at session end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantAdmissionStats {
+    pub tenant: String,
+    pub admitted: u64,
+    pub rejected_rate_limited: u64,
+    pub rejected_queue_full: u64,
+}
+
+/// Counter snapshot of an [`AdmissionController`]. `per_tenant` is sorted
+/// by tenant name (deterministic) and only populated while admission is
+/// enabled.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AdmissionStats {
+    pub enabled: bool,
+    pub rate_rps: f64,
+    pub max_queue: usize,
+    pub admitted: u64,
+    pub rejected_rate_limited: u64,
+    pub rejected_queue_full: u64,
+    pub per_tenant: Vec<TenantAdmissionStats>,
+}
+
+impl AdmissionStats {
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_rate_limited + self.rejected_queue_full
+    }
+}
+
+/// The admission decision point, shared by the submission side of a serve
+/// session. All methods are callable from any thread, but determinism in
+/// logical mode assumes what the server already guarantees: submissions
+/// arrive from one driving thread in a defined order.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    clock: Clock,
+    buckets: Mutex<BTreeMap<String, Bucket>>,
+    admitted: AtomicU64,
+    rejected_rate_limited: AtomicU64,
+    rejected_queue_full: AtomicU64,
+}
+
+impl AdmissionController {
+    /// `logical = true` (fifo mode) freezes the clock except for explicit
+    /// [`advance`](Self::advance) calls; `false` uses wall time.
+    pub fn new(cfg: AdmissionConfig, logical: bool) -> AdmissionController {
+        AdmissionController {
+            cfg,
+            clock: if logical {
+                Clock::Logical(Mutex::new(0.0))
+            } else {
+                Clock::Wall(Instant::now())
+            },
+            buckets: Mutex::new(BTreeMap::new()),
+            admitted: AtomicU64::new(0),
+            rejected_rate_limited: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    fn now_s(&self) -> f64 {
+        match &self.clock {
+            Clock::Wall(t0) => t0.elapsed().as_secs_f64(),
+            Clock::Logical(t) => *t.lock().unwrap(),
+        }
+    }
+
+    /// Advance the logical clock by `dt` seconds. No-op on a wall clock
+    /// (which advances by itself) and for non-positive `dt`.
+    pub fn advance(&self, dt_s: f64) {
+        if let Clock::Logical(t) = &self.clock {
+            if dt_s > 0.0 && dt_s.is_finite() {
+                *t.lock().unwrap() += dt_s;
+            }
+        }
+    }
+
+    /// Decide one request: `queue_depth` is the caller's current depth
+    /// gauge (mode-dependent, see the module docs). On `Err` nothing was
+    /// consumed except the rejection counter.
+    pub fn try_admit(&self, tenant: &str, queue_depth: usize) -> Result<(), Rejected> {
+        if !self.cfg.enabled() {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        let burst = self.cfg.burst.max(1.0);
+        let mut buckets = self.buckets.lock().unwrap();
+        let now = self.now_s();
+        let b = buckets.entry(tenant.to_string()).or_insert(Bucket {
+            tokens: burst,
+            last_s: now,
+            admitted: 0,
+            rejected_rate_limited: 0,
+            rejected_queue_full: 0,
+        });
+        if self.cfg.max_queue > 0 && queue_depth >= self.cfg.max_queue {
+            b.rejected_queue_full += 1;
+            self.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejected {
+                tenant: tenant.to_string(),
+                reason: RejectReason::QueueFull,
+            });
+        }
+        if self.cfg.rate_rps > 0.0 {
+            let dt = (now - b.last_s).max(0.0);
+            b.tokens = (b.tokens + dt * self.cfg.rate_rps).min(burst);
+            b.last_s = now;
+            if b.tokens < 1.0 {
+                b.rejected_rate_limited += 1;
+                self.rejected_rate_limited.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejected {
+                    tenant: tenant.to_string(),
+                    reason: RejectReason::RateLimited,
+                });
+            }
+            b.tokens -= 1.0;
+        }
+        b.admitted += 1;
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let buckets = self.buckets.lock().unwrap();
+        AdmissionStats {
+            enabled: self.cfg.enabled(),
+            rate_rps: self.cfg.rate_rps,
+            max_queue: self.cfg.max_queue,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_rate_limited: self.rejected_rate_limited.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            per_tenant: buckets
+                .iter()
+                .map(|(tenant, b)| TenantAdmissionStats {
+                    tenant: tenant.clone(),
+                    admitted: b.admitted,
+                    rejected_rate_limited: b.rejected_rate_limited,
+                    rejected_queue_full: b.rejected_queue_full,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rate_rps: f64, burst: f64, max_queue: usize) -> AdmissionConfig {
+        AdmissionConfig { rate_rps, burst, max_queue }
+    }
+
+    #[test]
+    fn disabled_config_admits_everything() {
+        let c = AdmissionController::new(AdmissionConfig::default(), true);
+        for _ in 0..1000 {
+            c.try_admit("t", usize::MAX - 1).unwrap();
+        }
+        let s = c.stats();
+        assert!(!s.enabled);
+        assert_eq!(s.admitted, 1000);
+        assert_eq!(s.rejected_total(), 0);
+        assert!(s.per_tenant.is_empty());
+    }
+
+    #[test]
+    fn logical_bucket_is_a_pure_function_of_the_submit_sequence() {
+        let run = || {
+            let c = AdmissionController::new(cfg(2.0, 3.0, 0), true);
+            let mut decisions = Vec::new();
+            // burst of 5 at t=0: 3 admitted, 2 rejected
+            for _ in 0..5 {
+                decisions.push(c.try_admit("t", 0).is_ok());
+            }
+            // +1 logical second refills 2 tokens
+            c.advance(1.0);
+            for _ in 0..3 {
+                decisions.push(c.try_admit("t", 0).is_ok());
+            }
+            // +10s refills to the burst cap (3), never beyond
+            c.advance(10.0);
+            for _ in 0..4 {
+                decisions.push(c.try_admit("t", 0).is_ok());
+            }
+            (decisions, c.stats())
+        };
+        let (d1, s1) = run();
+        let (d2, s2) = run();
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+        assert_eq!(
+            d1,
+            vec![
+                true, true, true, false, false, // burst
+                true, true, false, // refill 2
+                true, true, true, false, // capped refill
+            ]
+        );
+        assert_eq!(s1.admitted, 8);
+        assert_eq!(s1.rejected_rate_limited, 4);
+        assert_eq!(s1.per_tenant.len(), 1);
+        assert_eq!(s1.per_tenant[0].tenant, "t");
+        assert_eq!(s1.per_tenant[0].admitted, 8);
+        assert_eq!(s1.per_tenant[0].rejected_rate_limited, 4);
+    }
+
+    #[test]
+    fn buckets_are_per_tenant() {
+        let c = AdmissionController::new(cfg(1.0, 1.0, 0), true);
+        assert!(c.try_admit("a", 0).is_ok());
+        // a's bucket is empty, b's is untouched
+        let e = c.try_admit("a", 0).unwrap_err();
+        assert_eq!(e.reason, RejectReason::RateLimited);
+        assert_eq!(e.tenant, "a");
+        assert!(c.try_admit("b", 0).is_ok());
+        let s = c.stats();
+        assert_eq!(s.per_tenant.len(), 2);
+        // sorted by tenant name, deterministic
+        assert_eq!(s.per_tenant[0].tenant, "a");
+        assert_eq!(s.per_tenant[1].tenant, "b");
+    }
+
+    #[test]
+    fn queue_cap_rejects_without_consuming_tokens() {
+        let c = AdmissionController::new(cfg(1000.0, 1.0, 4), true);
+        let e = c.try_admit("t", 4).unwrap_err();
+        assert_eq!(e.reason, RejectReason::QueueFull);
+        let e = c.try_admit("t", 5).unwrap_err();
+        assert_eq!(e.reason, RejectReason::QueueFull);
+        // below the cap the single burst token is still there
+        assert!(c.try_admit("t", 3).is_ok());
+        let s = c.stats();
+        assert_eq!(s.admitted, 1);
+        assert_eq!(s.rejected_queue_full, 2);
+        assert_eq!(s.rejected_rate_limited, 0);
+    }
+
+    #[test]
+    fn burst_below_one_still_admits_at_rate() {
+        // a sub-1 burst would deadlock the bucket; it is clamped to 1
+        let c = AdmissionController::new(cfg(1.0, 0.0, 0), true);
+        assert!(c.try_admit("t", 0).is_ok());
+        assert!(c.try_admit("t", 0).is_err());
+        c.advance(1.0);
+        assert!(c.try_admit("t", 0).is_ok());
+    }
+
+    #[test]
+    fn wall_clock_refills_on_its_own() {
+        let c = AdmissionController::new(cfg(10_000.0, 1.0, 0), false);
+        assert!(c.try_admit("t", 0).is_ok());
+        // at 10k rps a token is back within 100µs; poll briefly
+        let t0 = Instant::now();
+        let mut admitted_again = false;
+        while t0.elapsed() < std::time::Duration::from_secs(5) {
+            if c.try_admit("t", 0).is_ok() {
+                admitted_again = true;
+                break;
+            }
+        }
+        assert!(admitted_again, "wall bucket never refilled");
+        // advance() is a documented no-op on a wall clock
+        c.advance(1e9);
+    }
+
+    #[test]
+    fn rejected_is_a_recoverable_typed_error() {
+        fn submit_like() -> anyhow::Result<()> {
+            let c = AdmissionController::new(cfg(0.0, 1.0, 1), true);
+            c.try_admit("acme", 1)?;
+            Ok(())
+        }
+        let e = submit_like().unwrap_err();
+        let r = e.downcast_ref::<Rejected>().expect("typed rejection lost");
+        assert_eq!(r.tenant, "acme");
+        assert_eq!(r.reason, RejectReason::QueueFull);
+        assert!(e.to_string().contains("queue_full"), "{e}");
+    }
+}

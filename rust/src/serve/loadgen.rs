@@ -13,7 +13,13 @@
 //!
 //! Tenant choice is Zipf-skewed (`zipf_s = 0` is uniform): real
 //! multi-tenant traffic concentrates on few hot tenants, which is
-//! exactly what exercises the materialization cache's LRU policy.
+//! exactly what exercises the materialization cache's LRU policy — and,
+//! under admission control, what makes hot tenants hit their per-tenant
+//! rate budgets first. Both drivers *shed* on a typed
+//! [`Rejected`](super::admission::Rejected) rejection (count it, move
+//! on) rather than aborting; in fifo sessions the open-loop driver
+//! advances the admission controller's logical clock by its seeded gaps
+//! instead of sleeping, so overload runs are deterministic end to end.
 
 use std::time::Duration;
 
@@ -24,9 +30,11 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::admission::Rejected;
 use super::registry::{theta_checksum, PauliSpec, Registry};
-use super::scheduler::Response;
+use super::scheduler::{Response, ResponseHandle};
 use super::server::{serve, ServeConfig, ServeSummary, ServerHandle};
+use super::spool::{SpoolConfig, SpoolWatcher};
 
 /// Load shape: how many tenants, how much traffic, how skewed.
 #[derive(Clone, Copy, Debug)]
@@ -83,9 +91,21 @@ impl Zipf {
     }
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
-        let u = rng.f64();
+        self.sample_u(rng.f64())
+    }
+
+    /// The rank for one uniform draw `u` in [0, 1) — the inverse-CDF step
+    /// behind [`sample`](Self::sample), exposed so boundary behavior is
+    /// pinned with exact values. An exact hit on `cdf[i]` belongs to rank
+    /// `i` (the standard right-continuous inverse CDF,
+    /// `min {i : cdf[i] >= u}`). The boundary is reachable: with `s = 0`
+    /// and a power-of-two `n`, every cdf value is a dyadic rational that
+    /// the 53-bit grid `Rng::f64` draws from represents exactly — and the
+    /// old `Ok(i) => i + 1` mapping shifted that boundary mass onto the
+    /// next rank.
+    pub fn sample_u(&self, u: f64) -> usize {
         let i = match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
-            Ok(i) => i + 1,
+            Ok(i) => i,
             Err(i) => i,
         };
         i.min(self.cdf.len() - 1)
@@ -120,8 +140,24 @@ fn request_input(load: &LoadSpec, k: u64) -> Vec<f32> {
     (0..load.pauli.dim()).map(|_| rng.normal() as f32 * 0.5).collect()
 }
 
+/// Submit one loadgen request, translating a typed admission rejection
+/// ([`Rejected`]) into `Ok(None)` — open-loop overload *sheds* load, it
+/// doesn't abort the run; the per-tenant shed counts surface in the
+/// session's admission stats. Any other submit error still fails the
+/// driver.
+fn submit_or_shed(handle: &ServerHandle<'_>, tenant: &str, meta: u64,
+                  input: Vec<f32>) -> Result<Option<ResponseHandle>> {
+    match handle.submit(tenant, meta, input) {
+        Ok(h) => Ok(Some(h)),
+        Err(e) if e.downcast_ref::<Rejected>().is_some() => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
 /// Closed-loop driver: waves of `concurrency` requests, fully collected
-/// before the next wave. Returns responses in submission order.
+/// before the next wave. Returns responses in submission order (admitted
+/// requests only — request numbering always advances, so the workload is
+/// a pure function of the seed whether or not admission sheds).
 pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
                    -> Result<Vec<Response>> {
     let zipf = Zipf::new(load.tenants, load.zipf_s);
@@ -133,8 +169,11 @@ pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
         let mut handles = Vec::with_capacity(wave);
         for _ in 0..wave {
             let t = zipf.sample(&mut pick);
-            handles.push(handle.submit(
-                &tenant_name(t), sent, request_input(load, sent))?);
+            if let Some(h) = submit_or_shed(
+                handle, &tenant_name(t), sent, request_input(load, sent))?
+            {
+                handles.push(h);
+            }
             sent += 1;
         }
         handle.flush();
@@ -148,6 +187,13 @@ pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
 /// Open-loop driver: seeded-exponential interarrival gaps at
 /// `open_rate_rps`, submissions never waiting on completions. Responses
 /// are collected at the end, in submission order.
+///
+/// In a fifo (deterministic) session the driver does not sleep: each gap
+/// advances the admission controller's *logical* clock instead
+/// ([`ServerHandle::advance_clock`]), so an overload run — arrivals
+/// beyond the per-tenant rate budget — sheds exactly the same requests
+/// at any worker count. In timed mode the gaps are real sleeps and
+/// admission runs on the wall clock.
 pub fn open_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
                  -> Result<Vec<Response>> {
     if load.open_rate_rps <= 0.0 {
@@ -157,14 +203,21 @@ pub fn open_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
     let mut pick = Rng::new(load.seed ^ 0xc1ed_1007);
     let mut gaps = Rng::new(load.seed ^ 0x0be9_1007);
     let mean_gap = 1.0 / load.open_rate_rps;
+    let logical = handle.is_fifo();
     let mut handles = Vec::with_capacity(load.requests);
     for k in 0..load.requests as u64 {
         let t = zipf.sample(&mut pick);
-        handles.push(handle.submit(&tenant_name(t), k, request_input(load, k))?);
+        if let Some(h) = submit_or_shed(
+            handle, &tenant_name(t), k, request_input(load, k))?
+        {
+            handles.push(h);
+        }
         // honor the requested rate faithfully — a clamp here would make
         // the emitted summary describe a different workload than asked
         let gap = -mean_gap * (1.0 - gaps.f64()).ln();
-        if gap > 0.0 {
+        if logical {
+            handle.advance_clock(gap);
+        } else if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap));
         }
     }
@@ -192,11 +245,14 @@ pub fn response_log(responses: &[Response]) -> String {
 }
 
 /// Everything `repro serve-bench` needs in one struct.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BenchOpts {
     pub load: LoadSpec,
     pub serve: ServeConfig,
     pub cache_bytes: usize,
+    /// When set, a [`SpoolWatcher`] ingests adapter uploads from this
+    /// directory for the duration of the bench (joined on exit).
+    pub spool_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for BenchOpts {
@@ -205,16 +261,33 @@ impl Default for BenchOpts {
             load: LoadSpec::default(),
             serve: ServeConfig::default(),
             cache_bytes: 8 << 20,
+            spool_dir: None,
         }
     }
 }
 
 /// Build a registry, populate it with seeded adapters, run the loadgen
 /// through a serve session, and emit the summary through `log`. Returns
-/// the summary and the canonical response log.
+/// the summary and the canonical response log. With a spool dir set, a
+/// watcher thread ingests uploads for the whole session and is stopped
+/// and joined before this returns.
 pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
                        -> Result<(ServeSummary, String)> {
-    let registry = Registry::new(opts.cache_bytes);
+    if opts.serve.fifo
+        && opts.serve.admission.rate_rps > 0.0
+        && opts.load.open_rate_rps <= 0.0
+    {
+        // in fifo mode the admission clock is logical and only the
+        // open-loop driver advances it (by its seeded gaps); a closed
+        // loop would leave it frozen at 0, so each tenant gets exactly
+        // `burst` admissions for the whole run and everything after is
+        // silently shed — reject the combination instead of reporting
+        // a meaningless benchmark
+        bail!("--rate-rps with fifo mode needs open-loop arrivals \
+               (--rate > 0), or use --mode timed: the closed-loop fifo \
+               driver never advances the logical admission clock");
+    }
+    let registry = std::sync::Arc::new(Registry::new(opts.cache_bytes));
     populate(&registry, &opts.load)?;
     let rt = Runtime::cpu()?;
     let mode = if opts.serve.fifo { "fifo" } else { "timed" };
@@ -232,14 +305,33 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
         ("mode", mode.into()),
         ("discipline", discipline.into()),
         ("cache_bytes", opts.cache_bytes.into()),
+        ("rate_rps", Json::Num(opts.serve.admission.rate_rps)),
+        ("burst", Json::Num(opts.serve.admission.burst)),
+        ("max_queue", opts.serve.admission.max_queue.into()),
+        ("spool",
+         opts.spool_dir.as_ref()
+             .map(|p| p.display().to_string())
+             .unwrap_or_default()
+             .into()),
     ]);
+    let watcher = match &opts.spool_dir {
+        Some(dir) => Some(SpoolWatcher::start(
+            registry.clone(), SpoolConfig::new(dir), log.clone())?),
+        None => None,
+    };
     let outcome = serve(&rt, &registry, &opts.serve, log, |h| {
         if opts.load.open_rate_rps > 0.0 {
             open_loop(h, &opts.load)
         } else {
             closed_loop(h, &opts.load)
         }
-    })?;
+    });
+    // stop and JOIN the watcher before reporting, success or failure:
+    // the session's shutdown must never leak its poller
+    if let Some(w) = watcher {
+        w.shutdown();
+    }
+    let outcome = outcome?;
     Ok((outcome.summary, response_log(&outcome.body)))
 }
 
@@ -266,6 +358,33 @@ mod tests {
         }
         for &c in &counts {
             assert!((800..1200).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_exact_cdf_hit_returns_the_boundary_rank() {
+        // s = 0, power-of-two n: cdf = [0.25, 0.5, 0.75, 1.0], every
+        // value exactly representable on the 53-bit grid Rng::f64 draws
+        // from, so a synthetic draw can hit a boundary dead-on. The
+        // right-continuous inverse CDF assigns the hit to rank i itself;
+        // the old `Ok(i) => i + 1` skipped it onto the next rank.
+        let uni = Zipf::new(4, 0.0);
+        assert_eq!(uni.sample_u(0.0), 0);
+        assert_eq!(uni.sample_u(0.25), 0);
+        assert_eq!(uni.sample_u(0.25 + f64::EPSILON), 1);
+        assert_eq!(uni.sample_u(0.5), 1);
+        assert_eq!(uni.sample_u(0.75), 2);
+        assert_eq!(uni.sample_u(0.999), 3);
+        // u is drawn from [0, 1), but even a hostile u = 1.0 stays in
+        // range instead of indexing one past the end
+        assert_eq!(uni.sample_u(1.0), 3);
+        // sample() is exactly sample_u over the rng's f64 stream, so the
+        // boundary fix applies to the real driver path too
+        let zipf = Zipf::new(16, 1.0);
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..256 {
+            assert_eq!(zipf.sample(&mut a), zipf.sample_u(b.f64()));
         }
     }
 

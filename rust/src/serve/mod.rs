@@ -19,20 +19,41 @@
 //!   depth and batch-size metrics exported through the `EventLog`;
 //! - [`loadgen`]: seeded closed-/open-loop synthetic load with Zipf
 //!   tenant skew, so throughput and tail latency are measurable offline
-//!   today (`repro serve-bench`, `benches/serve.rs`).
+//!   today (`repro serve-bench`, `benches/serve.rs`);
+//! - [`admission`]: the control plane's front door — per-tenant
+//!   token-bucket rate limits and a global queue-depth cap enforced at
+//!   submit time; overload sheds with a typed `Rejected` error (counted
+//!   per tenant in the `EventLog`) instead of growing the queue without
+//!   bound;
+//! - [`spool`]: adapter persistence — a joined-on-shutdown watcher
+//!   thread ingests `QPCK` v2 uploads from a spool directory (validated
+//!   through the hardened checkpoint loader, hot-swapped live,
+//!   quarantined to `rejected/` on failure) and evicts tenants whose
+//!   files are deleted, deferring while requests are in flight.
 //!
 //! Determinism knobs: `fifo` server mode forms batches purely from the
-//! submission sequence (no wall clock), and the loadgen derives every
-//! tenant pick and input payload from its seed — together, one seed
-//! yields a byte-identical response log at any worker count, which is
-//! the property `tests/serve.rs` pins.
+//! submission sequence (no wall clock), admission runs on a logical
+//! clock the driver advances explicitly, and the loadgen derives every
+//! tenant pick, input payload and interarrival gap from its seed —
+//! together, one seed yields a byte-identical response log *and
+//! rejection ledger* at any worker count, which is the property
+//! `tests/serve.rs` pins.
 
+pub mod admission;
 pub mod loadgen;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod spool;
 
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionStats, RejectReason, Rejected,
+};
 pub use loadgen::{run_serve_bench, BenchOpts, LoadSpec};
-pub use registry::{AdapterVersion, CacheStats, PauliSpec, Registry};
+pub use registry::{AdapterVersion, CacheStats, EvictAttempt, PauliSpec, Registry};
 pub use scheduler::{BatchPolicy, Response, ResponseHandle};
-pub use server::{serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle};
+pub use server::{
+    serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle,
+    STRUCTURED_APPLY_MIN_Q,
+};
+pub use spool::{Spool, SpoolConfig, SpoolStats, SpoolWatcher};

@@ -91,6 +91,17 @@ pub struct RequestGuard {
     slot: Arc<TenantSlot>,
 }
 
+/// Outcome of [`Registry::try_evict_tenant`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictAttempt {
+    /// Tenant removed; its materializations were purged.
+    Evicted,
+    /// Tenant has this many in-flight requests — try again later.
+    Deferred(usize),
+    /// No such tenant (already gone).
+    Unknown,
+}
+
 impl Drop for RequestGuard {
     fn drop(&mut self) {
         self.slot.inflight.fetch_sub(1, Ordering::Release);
@@ -387,14 +398,28 @@ impl Registry {
     /// Remove a tenant and purge its materializations. Refuses while the
     /// tenant has in-flight requests — eviction never drops live work.
     pub fn evict_tenant(&self, tenant: &str) -> Result<()> {
+        match self.try_evict_tenant(tenant) {
+            EvictAttempt::Evicted => Ok(()),
+            EvictAttempt::Deferred(inflight) => {
+                bail!("tenant {tenant:?} has {inflight} in-flight request(s); \
+                       refusing to evict")
+            }
+            EvictAttempt::Unknown => bail!("unknown tenant {tenant:?}"),
+        }
+    }
+
+    /// Non-erroring eviction probe (the spool watcher's deletion path):
+    /// evict now if possible, report in-flight pins as a retryable
+    /// deferral, and an absent tenant as already gone.
+    pub fn try_evict_tenant(&self, tenant: &str) -> EvictAttempt {
         {
             let mut tenants = self.tenants.write().unwrap();
-            let slot = tenants.get(tenant)
-                .with_context(|| format!("unknown tenant {tenant:?}"))?;
+            let Some(slot) = tenants.get(tenant) else {
+                return EvictAttempt::Unknown;
+            };
             let inflight = slot.inflight.load(Ordering::Acquire);
             if inflight > 0 {
-                bail!("tenant {tenant:?} has {inflight} in-flight request(s); \
-                       refusing to evict");
+                return EvictAttempt::Deferred(inflight);
             }
             tenants.remove(tenant);
         }
@@ -402,7 +427,7 @@ impl Registry {
         // pin check takes the tenant lock, so nesting the other way
         // around would be a lock-order inversion
         self.cache.purge_tenant(tenant);
-        Ok(())
+        EvictAttempt::Evicted
     }
 
     pub fn tenant_names(&self) -> Vec<String> {

@@ -2,11 +2,13 @@
 //! batches under a max-batch-size / max-wait policy, for dispatch onto
 //! [`crate::util::pool`] service workers.
 //!
-//! A request's lifecycle: submit -> [`PendingRequest`] buffered in the
-//! [`Batcher`] -> grouped into a [`Batch`] (tenant-homogeneous) -> popped
-//! by a worker -> response filled into the request's [`ResponseSlot`].
-//! The slot is a future-like completion channel: the submitter holds a
-//! [`ResponseHandle`] and blocks in [`ResponseHandle::wait`].
+//! A request's lifecycle: submit -> admission ([`super::admission`] —
+//! a rejected request never reaches the batcher) -> [`PendingRequest`]
+//! buffered in the [`Batcher`] -> grouped into a [`Batch`]
+//! (tenant-homogeneous) -> popped by a worker -> response filled into
+//! the request's [`ResponseSlot`]. The slot is a future-like completion
+//! channel: the submitter holds a [`ResponseHandle`] and blocks in
+//! [`ResponseHandle::wait`].
 //!
 //! No request is ever silently lost: if a `PendingRequest` is dropped
 //! unserved (worker panic mid-batch, pool shut down, queue strand-drain)
@@ -199,7 +201,7 @@ impl Batcher {
         let max_wait = Duration::from_micros(self.policy.max_wait_us);
         let expired: Vec<String> = self.buffers.iter()
             .filter(|(_, buf)| {
-                buf.first().map_or(false, |r| {
+                buf.first().is_some_and(|r| {
                     now.saturating_duration_since(r.submitted) >= max_wait
                 })
             })
@@ -223,7 +225,10 @@ impl Batcher {
             .collect()
     }
 
-    /// Buffered (not yet batched) request count.
+    /// Buffered (not yet batched) request count. In fifo sessions this
+    /// doubles as the admission queue-depth gauge: it moves only with
+    /// the submission sequence, so a queue-cap decision made against it
+    /// is deterministic at any worker count.
     pub fn pending(&self) -> usize {
         self.buffers.values().map(|b| b.len()).sum()
     }

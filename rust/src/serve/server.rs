@@ -16,23 +16,46 @@
 //! - **timed**: submissions also flush any buffer whose oldest request
 //!   has waited past `max_wait_us`, trading determinism for bounded
 //!   batching delay.
+//!
+//! `submit` runs [`super::admission`] before anything is enqueued:
+//! per-tenant token buckets and a global queue-depth cap reject overload
+//! with a typed error instead of letting the queue grow without bound.
+//! In fifo mode the buckets run on a logical clock and the cap reads the
+//! buffered backlog, so rejections are part of the same byte-identity
+//! guarantee; in timed mode both run on real time and real queue depth.
+//!
+//! Per batch, workers route through one of two apply paths: small
+//! adapters multiply against the LRU-cached dense `Q_P`; adapters with
+//! `q >= STRUCTURED_APPLY_MIN_Q` apply the Pauli gate structure directly
+//! (O(N·q·L) per row instead of O(N²), and no dense materialization at
+//! all — a q = 12 tenant never forces a 64 MiB cache entry).
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::events::EventLog;
+use crate::quantum::pauli;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::pool::{self, Service, TaskCtx};
 
+use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats};
 use super::registry::{CacheStats, Registry};
 use super::scheduler::{
     Batch, Batcher, BatchPolicy, PendingRequest, Response, ResponseHandle,
 };
+
+/// Adapters with `q >= STRUCTURED_APPLY_MIN_Q` are served through the
+/// structured [`pauli::PauliCircuit::apply`] path — O(N·q·L) per row —
+/// instead of materializing and multiplying the dense N x N `Q_P`
+/// (O(N²) per row, and a 64 MiB LRU entry at q = 12). Below the
+/// threshold the cached dense matrix wins: the whole Q_P fits in L1/L2
+/// and one row-multiply beats re-walking the gate sequence.
+pub const STRUCTURED_APPLY_MIN_Q: u32 = 6;
 
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -40,11 +63,18 @@ pub struct ServeConfig {
     pub policy: BatchPolicy,
     /// Deterministic mode: never consult the wall clock for batching.
     pub fifo: bool,
+    /// Admission control (rate limits + queue cap); default admits all.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { workers: 1, policy: BatchPolicy::default(), fifo: true }
+        ServeConfig {
+            workers: 1,
+            policy: BatchPolicy::default(),
+            fifo: true,
+            admission: AdmissionConfig::default(),
+        }
     }
 }
 
@@ -113,8 +143,8 @@ impl Metrics {
         self.outstanding.fetch_sub(n, Ordering::Relaxed);
     }
 
-    fn summarize(&self, workers: usize, wall_s: f64, cache: CacheStats)
-                 -> ServeSummary {
+    fn summarize(&self, workers: usize, wall_s: f64, cache: CacheStats,
+                 admission: AdmissionStats) -> ServeSummary {
         let mut lat = self.lat_ns.lock().unwrap().clone();
         lat.sort_unstable();
         let completed = self.completed.load(Ordering::Relaxed);
@@ -146,18 +176,24 @@ impl Metrics {
             batch_hist: self.batch_sizes.lock().unwrap().iter()
                 .map(|(&s, &c)| (s, c)).collect(),
             cache,
+            admission,
             tenants,
         }
     }
 }
 
-/// Nearest-rank percentile over a sorted nanosecond vector, in µs.
+/// Nearest-rank percentile over a sorted nanosecond vector, in µs: the
+/// value at the smallest rank whose cumulative share reaches `p`%
+/// (`idx = ceil(p/100 · len) - 1`), so the result is always an observed
+/// sample. len = 1 returns that sample at every p; len = 2 returns the
+/// lower sample up to p50 and the upper one after.
 fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
     if sorted_ns.is_empty() {
         return 0.0;
     }
-    let idx = ((p / 100.0) * (sorted_ns.len() as f64 - 1.0)).round() as usize;
-    sorted_ns[idx.min(sorted_ns.len() - 1)] as f64 / 1_000.0
+    let rank = ((p / 100.0) * sorted_ns.len() as f64).ceil() as usize;
+    let idx = rank.clamp(1, sorted_ns.len()) - 1;
+    sorted_ns[idx] as f64 / 1_000.0
 }
 
 #[derive(Clone, Debug)]
@@ -187,12 +223,16 @@ pub struct ServeSummary {
     /// (batch size, batches dispatched at that size), ascending.
     pub batch_hist: Vec<(usize, u64)>,
     pub cache: CacheStats,
+    /// Admission counters (admitted / rejected per reason, per tenant).
+    pub admission: AdmissionStats,
     pub tenants: Vec<TenantSummary>,
 }
 
 impl ServeSummary {
     /// Export through the event log: one `serve_summary` line, one
-    /// `serve_tenant` line per tenant.
+    /// `serve_tenant` line per tenant, and — when admission control is
+    /// enabled — one global `serve_admission` line plus one
+    /// `serve_admission_tenant` line per tenant the controller saw.
     pub fn emit(&self, log: &EventLog) {
         let hist = Json::Arr(self.batch_hist.iter()
             .map(|&(s, c)| Json::Arr(vec![s.into(), Json::Num(c as f64)]))
@@ -225,6 +265,26 @@ impl ServeSummary {
                 ("p99_us", Json::Num(t.p99_us)),
             ]);
         }
+        if self.admission.enabled {
+            let a = &self.admission;
+            log.emit("serve_admission", vec![
+                ("rate_rps", Json::Num(a.rate_rps)),
+                ("max_queue", a.max_queue.into()),
+                ("admitted", Json::Num(a.admitted as f64)),
+                ("rejected_rate_limited", Json::Num(a.rejected_rate_limited as f64)),
+                ("rejected_queue_full", Json::Num(a.rejected_queue_full as f64)),
+                ("rejected_total", Json::Num(a.rejected_total() as f64)),
+            ]);
+            for t in &a.per_tenant {
+                log.emit("serve_admission_tenant", vec![
+                    ("tenant", t.tenant.as_str().into()),
+                    ("admitted", Json::Num(t.admitted as f64)),
+                    ("rejected_rate_limited",
+                     Json::Num(t.rejected_rate_limited as f64)),
+                    ("rejected_queue_full", Json::Num(t.rejected_queue_full as f64)),
+                ]);
+            }
+        }
     }
 
     /// Human-readable one-screen report for the CLI.
@@ -251,6 +311,21 @@ impl ServeSummary {
              ({} entries)",
             self.cache.hits, self.cache.misses, self.cache.evictions,
             self.cache.bytes, self.cache.capacity_bytes, self.cache.entries);
+        if self.admission.enabled {
+            let a = &self.admission;
+            let attempts = a.admitted + a.rejected_total();
+            let shed = if attempts > 0 {
+                100.0 * a.rejected_total() as f64 / attempts as f64
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                s,
+                "admission: {} admitted / {} rejected ({} rate-limited, \
+                 {} queue-full) — {shed:.1}% shed",
+                a.admitted, a.rejected_total(), a.rejected_rate_limited,
+                a.rejected_queue_full);
+        }
         s
     }
 }
@@ -262,14 +337,17 @@ pub struct ServerHandle<'a> {
     registry: &'a Registry,
     service: &'a Service<Batch>,
     metrics: &'a Metrics,
+    admission: &'a AdmissionController,
     batcher: Mutex<Batcher>,
     fifo: bool,
 }
 
 impl ServerHandle<'_> {
-    /// Admit one request. Validates tenant and input dimension up front;
-    /// the returned handle resolves when a worker serves the batch this
-    /// request lands in.
+    /// Admit one request. Validates tenant and input dimension up front,
+    /// then runs admission control — a rejected request fails fast with
+    /// the typed [`super::admission::Rejected`] error and is **never**
+    /// enqueued. The returned handle resolves when a worker serves the
+    /// batch this request lands in.
     pub fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
                   -> Result<ResponseHandle> {
         let snap = self.registry.snapshot(tenant)?;
@@ -277,7 +355,28 @@ impl ServerHandle<'_> {
             bail!("tenant {tenant:?}: input has {} elements, adapter dim is {}",
                   input.len(), snap.spec.dim());
         }
+        // pin the tenant BEFORE consuming an admission token: begin()
+        // can still fail (tenant evicted between snapshot and here, e.g.
+        // by the spool watcher), and failing after try_admit would leak
+        // an admitted++ / a rate token for a request that never existed,
+        // breaking the admitted == completed + failed ledger. A rejected
+        // request drops the guard immediately, so the transient pin
+        // cannot block eviction.
         let guard = self.registry.begin(tenant)?;
+        // queue-depth gauge for the cap: fifo mode reads the buffered
+        // backlog (driven only by the submission sequence, so admission
+        // stays byte-deterministic at any worker count); timed mode reads
+        // real outstanding requests for true backpressure. Skipped
+        // entirely when admission is off — no extra batcher lock on the
+        // hot path.
+        let depth = if !self.admission.enabled() {
+            0
+        } else if self.fifo {
+            self.batcher.lock().unwrap().pending()
+        } else {
+            self.metrics.outstanding.load(Ordering::Relaxed)
+        };
+        self.admission.try_admit(tenant, depth)?;
         let (req, handle) = PendingRequest::new(meta, input, guard);
         self.metrics.note_submit();
         let full = self.batcher.lock().unwrap().push(tenant, req);
@@ -288,6 +387,19 @@ impl ServerHandle<'_> {
             self.flush_expired();
         }
         Ok(handle)
+    }
+
+    /// Advance the admission controller's logical clock (fifo mode): the
+    /// open-loop loadgen declares its seeded interarrival gaps here
+    /// instead of sleeping, which is what keeps rate-limited overload
+    /// runs deterministic. No-op in timed mode.
+    pub fn advance_clock(&self, dt_s: f64) {
+        self.admission.advance(dt_s);
+    }
+
+    /// Whether this session batches in deterministic fifo mode.
+    pub fn is_fifo(&self) -> bool {
+        self.fifo
     }
 
     /// Dispatch every buffer that has outwaited the policy (timed mode).
@@ -355,6 +467,15 @@ fn apply_row(input: &[f32], qp: &[f32], n: usize) -> Vec<f32> {
     out
 }
 
+/// How a worker applies one adapter to request rows (resolved per batch).
+enum ApplyPath {
+    /// Cached dense Q_P, one row-multiply per request (small q).
+    Dense(Arc<Vec<f32>>),
+    /// Structured gate application straight from the thetas — no dense
+    /// materialization, no LRU traffic (q >= [`STRUCTURED_APPLY_MIN_Q`]).
+    Structured(pauli::PauliCircuit),
+}
+
 fn process_batch(registry: &Registry, metrics: &Metrics,
                  state: &mut WorkerState<'_>, ctx: TaskCtx, batch: Batch) {
     // resolve the adapter at service time: an immutable snapshot, so a
@@ -363,13 +484,20 @@ fn process_batch(registry: &Registry, metrics: &Metrics,
         Ok(s) => s,
         Err(e) => return fail_batch(metrics, &state.log, ctx, batch, &e.to_string()),
     };
-    let qp = match registry.materialized(&snap) {
-        Ok(m) => m,
-        Err(e) => return fail_batch(metrics, &state.log, ctx, batch, &e.to_string()),
+    let path = if snap.spec.q >= STRUCTURED_APPLY_MIN_Q {
+        ApplyPath::Structured(pauli::build(
+            snap.spec.q as usize, snap.spec.n_layers as usize))
+    } else {
+        match registry.materialized(&snap) {
+            Ok(m) => ApplyPath::Dense(m),
+            Err(e) => {
+                return fail_batch(metrics, &state.log, ctx, batch, &e.to_string())
+            }
+        }
     };
     let n = snap.spec.dim();
     let tenant_lat = state.per_tenant_ns.entry(batch.tenant.clone()).or_default();
-    for req in batch.requests {
+    for mut req in batch.requests {
         if req.input.len() != n {
             let msg = format!(
                 "tenant {:?}: input has {} elements but the live adapter \
@@ -379,7 +507,14 @@ fn process_batch(registry: &Registry, metrics: &Metrics,
             req.fail(msg);
             continue;
         }
-        let output = apply_row(&req.input, &qp, n);
+        let output = match &path {
+            ApplyPath::Dense(qp) => apply_row(&req.input, qp, n),
+            ApplyPath::Structured(circuit) => {
+                let mut row = std::mem::take(&mut req.input);
+                circuit.apply(&mut row, 1, &snap.thetas);
+                row
+            }
+        };
         let latency_ns = req.submitted.elapsed().as_nanos() as u64;
         metrics.note_complete_counts();
         state.lat_ns.push(latency_ns);
@@ -424,6 +559,10 @@ where
     F: FnOnce(&ServerHandle<'_>) -> Result<R>,
 {
     let metrics = Metrics::new();
+    // logical clock in fifo mode: admission decisions depend only on the
+    // submission sequence (plus explicit advance_clock calls), never on
+    // wall time — the fifo byte-identity guarantee extends to rejections
+    let admission = AdmissionController::new(cfg.admission, cfg.fifo);
     let t0 = Instant::now();
     let (body_result, init_errors): (Result<R>, Vec<String>) = pool::run_service(
         cfg.workers,
@@ -446,6 +585,7 @@ where
                 registry,
                 service,
                 metrics: &metrics,
+                admission: &admission,
                 batcher: Mutex::new(Batcher::new(cfg.policy)),
                 fifo: cfg.fifo,
             };
@@ -494,7 +634,8 @@ where
         }
         Err(e) => return Err(e),
     };
-    let summary = metrics.summarize(cfg.workers, wall_s, registry.cache_stats());
+    let summary = metrics.summarize(cfg.workers, wall_s, registry.cache_stats(),
+                                    admission.stats());
     summary.emit(log);
     Ok(ServeOutcome { body: body_value, summary })
 }
@@ -575,5 +716,149 @@ mod tests {
         assert!((percentile_us(&ns, 50.0) - 51.0).abs() < 2.0);
         assert!((percentile_us(&ns, 99.0) - 99.0).abs() < 2.0);
         assert_eq!(percentile_us(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_at_tiny_lengths() {
+        // len = 1: every percentile is that one observation
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_us(&[5_000], p), 5.0, "p={p}");
+        }
+        // len = 2: nearest-rank takes the lower sample up to p50
+        // (ceil(0.5 * 2) = 1) and the upper one strictly after
+        assert_eq!(percentile_us(&[1_000, 9_000], 0.0), 1.0);
+        assert_eq!(percentile_us(&[1_000, 9_000], 50.0), 1.0);
+        assert_eq!(percentile_us(&[1_000, 9_000], 51.0), 9.0);
+        assert_eq!(percentile_us(&[1_000, 9_000], 99.0), 9.0);
+        assert_eq!(percentile_us(&[1_000, 9_000], 100.0), 9.0);
+        // the returned value is always an observed sample, never an
+        // interpolation
+        let ns = [1_000u64, 2_000, 4_000];
+        for p in [10.0, 33.4, 66.7, 90.0] {
+            let v = (percentile_us(&ns, p) * 1_000.0) as u64;
+            assert!(ns.contains(&v), "p={p} gave {v}");
+        }
+    }
+
+    #[test]
+    fn structured_apply_path_matches_dense_and_skips_the_cache() {
+        // q = 6 sits exactly at STRUCTURED_APPLY_MIN_Q: output must equal
+        // the dense x @ Q_P while the materialization cache stays untouched
+        let reg = Registry::new(1 << 26);
+        let spec = PauliSpec { q: 6, n_layers: 2 };
+        let thetas: Vec<f32> = (0..spec.num_params())
+            .map(|i| (i as f32 * 0.23).sin())
+            .collect();
+        reg.register("big", spec, thetas.clone()).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+        let input: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            let r = h.submit("big", 1, input.clone())?;
+            h.flush();
+            r.wait()
+        })
+        .unwrap();
+        // dense reference computed directly from the same snapshot
+        let circuit = pauli::build(6, 2);
+        let dense = circuit.materialize(&thetas);
+        let expect = apply_row(&input, &dense, 64);
+        for (a, b) in outcome.body.output.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0),
+                   "structured path touched the dense LRU: {s:?}");
+    }
+
+    #[test]
+    fn fifo_queue_cap_rejects_deterministically_and_counts_per_tenant() {
+        use crate::serve::admission::{AdmissionConfig, RejectReason, Rejected};
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig {
+            workers: 2,
+            // max_batch larger than the cap so nothing auto-dispatches:
+            // the buffered backlog is exactly the admit count
+            policy: BatchPolicy { max_batch: 100, max_wait_us: 0 },
+            fifo: true,
+            admission: AdmissionConfig { rate_rps: 0.0, burst: 1.0, max_queue: 10 },
+        };
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            let mut handles = Vec::new();
+            let mut rejected = 0u64;
+            for i in 0..50u64 {
+                match h.submit("t0", i, vec![0.5; 8]) {
+                    Ok(hd) => handles.push(hd),
+                    Err(e) => {
+                        let r = e.downcast_ref::<Rejected>().expect("typed");
+                        assert_eq!(r.reason, RejectReason::QueueFull);
+                        assert_eq!(r.tenant, "t0");
+                        rejected += 1;
+                    }
+                }
+            }
+            // exactly the first 10 fit under the cap, rest shed
+            assert_eq!(handles.len(), 10);
+            assert_eq!(rejected, 40);
+            h.flush();
+            for hd in handles {
+                hd.wait()?;
+            }
+            // backlog drained: the cap admits again
+            assert!(h.submit("t0", 99, vec![0.5; 8]).is_ok());
+            Ok(())
+        })
+        .unwrap();
+        let a = &outcome.summary.admission;
+        assert!(a.enabled);
+        assert_eq!(a.admitted, 11);
+        assert_eq!(a.rejected_queue_full, 40);
+        assert_eq!(a.rejected_rate_limited, 0);
+        assert_eq!(a.per_tenant.len(), 1);
+        assert_eq!(a.per_tenant[0].tenant, "t0");
+        assert_eq!(a.per_tenant[0].rejected_queue_full, 40);
+        assert_eq!(outcome.summary.completed, 11);
+    }
+
+    #[test]
+    fn timed_queue_cap_bounds_real_outstanding_depth() {
+        use crate::serve::admission::{AdmissionConfig, Rejected};
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 1, max_wait_us: 50 },
+            fifo: false,
+            admission: AdmissionConfig { rate_rps: 0.0, burst: 1.0, max_queue: 4 },
+        };
+        let attempts = 64u64;
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            let mut handles = Vec::new();
+            let mut rejected = 0u64;
+            for i in 0..attempts {
+                match h.submit("t0", i, vec![0.5; 8]) {
+                    Ok(hd) => handles.push(hd),
+                    Err(e) => {
+                        assert!(e.downcast_ref::<Rejected>().is_some(), "{e}");
+                        rejected += 1;
+                    }
+                }
+            }
+            for hd in handles {
+                hd.wait()?;
+            }
+            Ok(rejected)
+        })
+        .unwrap();
+        let a = &outcome.summary.admission;
+        // accounting closes: every attempt either completed or rejected
+        assert_eq!(a.admitted + a.rejected_queue_full, attempts);
+        assert_eq!(outcome.summary.completed, a.admitted);
+        assert_eq!(outcome.body, a.rejected_queue_full);
+        // the cap held: with the gauge read before each admit, the
+        // outstanding gauge can never exceed max_queue
+        assert!(outcome.summary.max_queue_depth <= 4,
+                "depth {} breached the cap", outcome.summary.max_queue_depth);
     }
 }

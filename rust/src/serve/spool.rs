@@ -1,0 +1,448 @@
+//! Spool-directory adapter ingestion: hot upload without a registration
+//! API. A watcher polls a directory for `QPCK` v2 adapter checkpoints,
+//! validates each through the hardened [`checkpoint::load_adapter`] path
+//! (via [`Registry::load_checkpoint`]), and hot-swaps it into the live
+//! [`Registry`] — a dropped file becomes servable with no restart, and a
+//! deleted file evicts its tenant.
+//!
+//! ## Protocol
+//!
+//! - **upload**: write the file elsewhere and atomically rename it into
+//!   `spool/<name>.qpck` ([`checkpoint::save_adapter_atomic`] does this
+//!   for you). As a second line of defense for non-atomic uploaders, a
+//!   file is only ingested once its (size, mtime) is *stable across two
+//!   consecutive polls*, so a write in progress is never read mid-way;
+//! - **ingest** (atomic rename-after-read): the watcher first renames
+//!   the candidate to a hidden staging name it owns (`.ingest.<name>`) —
+//!   an atomic claim, so the bytes it validates cannot be swapped under
+//!   it by a concurrent re-upload (that re-upload creates a new
+//!   directory entry, picked up next poll) — then reads and validates,
+//!   and only after the read renames the file back to its public name.
+//!   Dot-files are invisible to the scanner, so a half-ingested file is
+//!   never double-claimed;
+//! - **reject**: a file that fails validation is quarantined to
+//!   `spool/rejected/<name>` with the reason in the event log
+//!   (`serve_spool_reject`) — it is never retried; a fixed upload under
+//!   the same name is a fresh candidate;
+//! - **delete**: removing `spool/<name>.qpck` evicts the tenant it
+//!   loaded — *deferred* while the tenant has in-flight requests
+//!   ([`Registry::try_evict_tenant`]) and retried every poll until the
+//!   pins drain, so eviction never drops live work.
+//!
+//! [`Spool`] is the synchronous poll-state machine (drive [`Spool::poll`]
+//! directly in tests — no sleeps, fully deterministic);
+//! [`SpoolWatcher`] runs it on a [`pool::Background`] thread whose
+//! shutdown **joins** the poller, so a serve session can never leak its
+//! watcher.
+//!
+//! [`checkpoint::load_adapter`]: crate::coordinator::checkpoint::load_adapter
+//! [`checkpoint::save_adapter_atomic`]: crate::coordinator::checkpoint::save_adapter_atomic
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::events::EventLog;
+use crate::util::json::Json;
+use crate::util::pool::Background;
+
+use super::registry::{EvictAttempt, Registry};
+
+/// Quarantine subdirectory for files that failed validation.
+pub const REJECTED_SUBDIR: &str = "rejected";
+
+/// Where and how often to poll.
+#[derive(Clone, Debug)]
+pub struct SpoolConfig {
+    pub dir: PathBuf,
+    pub poll_interval: Duration,
+}
+
+impl SpoolConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> SpoolConfig {
+        SpoolConfig { dir: dir.into(), poll_interval: Duration::from_millis(20) }
+    }
+}
+
+/// Monotonic counters over a spool's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpoolStats {
+    pub polls: u64,
+    /// Successful ingests (registrations + hot-swaps).
+    pub loaded: u64,
+    /// Files quarantined to `rejected/`.
+    pub rejected: u64,
+    /// Tenants evicted after their file was deleted.
+    pub evicted: u64,
+    /// Eviction attempts deferred on in-flight pins (one per poll).
+    pub eviction_deferred: u64,
+}
+
+enum Tracked {
+    /// Seen once; ingested when unchanged on the next poll.
+    /// `prev_tenant` carries the tenant a prior generation of this file
+    /// loaded as, so a re-upload that switches tenants (or a deletion
+    /// mid-window) can still orphan-evict the old one.
+    Pending { len: u64, mtime: SystemTime, prev_tenant: Option<String> },
+    /// Live in the registry, backed by this file state.
+    Loaded { len: u64, mtime: SystemTime, tenant: String },
+}
+
+impl Tracked {
+    fn tenant(&self) -> Option<&String> {
+        match self {
+            Tracked::Pending { prev_tenant, .. } => prev_tenant.as_ref(),
+            Tracked::Loaded { tenant, .. } => Some(tenant),
+        }
+    }
+}
+
+enum Action {
+    Skip,
+    Track,
+    Ingest,
+}
+
+/// The synchronous spool state machine: one [`poll`](Spool::poll) call
+/// scans the directory once and converges the registry toward it.
+pub struct Spool {
+    registry: Arc<Registry>,
+    dir: PathBuf,
+    log: EventLog,
+    /// File name -> what we know about it (public `*.qpck` names only).
+    seen: BTreeMap<String, Tracked>,
+    /// Tenants whose backing file is gone but whose eviction is blocked
+    /// by in-flight pins; retried first thing every poll.
+    pending_evictions: BTreeSet<String>,
+    stats: SpoolStats,
+}
+
+impl Spool {
+    pub fn new(registry: Arc<Registry>, cfg: &SpoolConfig, log: EventLog)
+               -> Result<Spool> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("create spool dir {:?}", cfg.dir))?;
+        Ok(Spool {
+            registry,
+            dir: cfg.dir.clone(),
+            log,
+            seen: BTreeMap::new(),
+            pending_evictions: BTreeSet::new(),
+            stats: SpoolStats::default(),
+        })
+    }
+
+    /// One full pass: retry deferred evictions, evict tenants whose files
+    /// vanished, ingest stable new/changed files. Filesystem races
+    /// (files vanishing between list and claim) degrade to "observe
+    /// again next poll", never to a panic or a wedged watcher.
+    pub fn poll(&mut self) -> SpoolStats {
+        self.stats.polls += 1;
+        let deferred: Vec<String> =
+            self.pending_evictions.iter().cloned().collect();
+        for tenant in deferred {
+            self.pending_evictions.remove(&tenant);
+            self.evict(tenant);
+        }
+        let listing = self.list();
+        let gone: Vec<String> = self.seen.keys()
+            .filter(|name| !listing.contains_key(*name))
+            .cloned()
+            .collect();
+        for name in gone {
+            if let Some(tenant) =
+                self.seen.remove(&name).as_ref().and_then(Tracked::tenant)
+            {
+                let tenant = tenant.clone();
+                self.evict(tenant);
+            }
+        }
+        for (name, (len, mtime)) in listing {
+            let action = match self.seen.get(&name) {
+                Some(Tracked::Loaded { len: l, mtime: m, .. })
+                    if *l == len && *m == mtime => Action::Skip,
+                Some(Tracked::Pending { len: l, mtime: m, .. })
+                    if *l == len && *m == mtime => Action::Ingest,
+                // new file, or its bytes are still moving: (re)arm the
+                // stability window, remembering any tenant a previous
+                // generation of this file loaded as
+                _ => Action::Track,
+            };
+            match action {
+                Action::Skip => {}
+                Action::Track => {
+                    let prev_tenant =
+                        self.seen.get(&name).and_then(Tracked::tenant).cloned();
+                    self.seen.insert(
+                        name,
+                        Tracked::Pending { len, mtime, prev_tenant },
+                    );
+                }
+                Action::Ingest => self.ingest(&name, len, mtime),
+            }
+        }
+        self.stats
+    }
+
+    pub fn stats(&self) -> SpoolStats {
+        self.stats
+    }
+
+    /// Public `*.qpck` entries of the spool dir (dot-files and the
+    /// `rejected/` subdirectory are invisible).
+    fn list(&self) -> BTreeMap<String, (u64, SystemTime)> {
+        let mut out = BTreeMap::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in rd.flatten() {
+            let fname = entry.file_name();
+            let Some(name) = fname.to_str() else {
+                continue;
+            };
+            if name.starts_with('.') || !name.ends_with(".qpck") {
+                continue;
+            }
+            let Ok(md) = entry.metadata() else {
+                continue;
+            };
+            if !md.is_file() {
+                continue;
+            }
+            let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            out.insert(name.to_string(), (md.len(), mtime));
+        }
+        out
+    }
+
+    fn ingest(&mut self, name: &str, len: u64, mtime: SystemTime) {
+        let public = self.dir.join(name);
+        let staging = self.dir.join(format!(".ingest.{name}"));
+        // atomic claim: from here no concurrent re-upload can change the
+        // bytes we are about to validate
+        if std::fs::rename(&public, &staging).is_err() {
+            // vanished between listing and claim — re-observe next poll
+            self.seen.remove(name);
+            return;
+        }
+        match self.registry.load_checkpoint(&staging) {
+            Ok((tenant, version)) => {
+                // a tenant just (re)loaded from disk is no longer
+                // eviction-pending, whatever an earlier deletion said
+                self.pending_evictions.remove(&tenant);
+                // the same file switching manifest tenants orphans the
+                // old tenant: its backing file is gone now
+                let prev = self.seen.get(name).and_then(Tracked::tenant).cloned();
+                if let Some(old) = prev {
+                    if old != tenant {
+                        self.evict(old);
+                    }
+                }
+                self.stats.loaded += 1;
+                self.log.emit("serve_spool_load", vec![
+                    ("file", name.into()),
+                    ("tenant", tenant.as_str().into()),
+                    ("version", Json::Num(version as f64)),
+                ]);
+                if std::fs::rename(&staging, &public).is_ok() {
+                    self.seen.insert(
+                        name.to_string(),
+                        Tracked::Loaded { len, mtime, tenant },
+                    );
+                } else {
+                    // could not restore the public name: treat the file
+                    // as deleted so the tenant cannot outlive a file
+                    // that is not there
+                    self.log.emit("serve_spool_error", vec![
+                        ("file", name.into()),
+                        ("error", "failed to restore ingested file".into()),
+                    ]);
+                    self.seen.remove(name);
+                    self.evict(tenant);
+                }
+            }
+            Err(e) => {
+                self.stats.rejected += 1;
+                let dest = self.quarantine_dest(name);
+                let moved = std::fs::create_dir_all(self.dir.join(REJECTED_SUBDIR))
+                    .and_then(|()| std::fs::rename(&staging, &dest));
+                self.log.emit("serve_spool_reject", vec![
+                    ("file", name.into()),
+                    ("quarantined", moved.is_ok().to_string().into()),
+                    ("error", e.to_string().into()),
+                ]);
+                // whether or not the quarantine rename worked, the public
+                // name is gone: nothing left to retry forever
+                self.seen.remove(name);
+            }
+        }
+    }
+
+    fn quarantine_dest(&self, name: &str) -> PathBuf {
+        let base = self.dir.join(REJECTED_SUBDIR);
+        let mut dest = base.join(name);
+        let mut k = 1;
+        while dest.exists() {
+            k += 1;
+            dest = base.join(format!("{name}.{k}"));
+        }
+        dest
+    }
+
+    /// Evict now if possible; defer (and retry every poll) on in-flight
+    /// pins.
+    fn evict(&mut self, tenant: String) {
+        match self.registry.try_evict_tenant(&tenant) {
+            EvictAttempt::Evicted => {
+                self.stats.evicted += 1;
+                self.log.emit("serve_spool_evict", vec![
+                    ("tenant", tenant.as_str().into()),
+                ]);
+            }
+            EvictAttempt::Unknown => {}
+            EvictAttempt::Deferred(inflight) => {
+                self.stats.eviction_deferred += 1;
+                if self.pending_evictions.insert(tenant.clone()) {
+                    self.log.emit("serve_spool_evict_deferred", vec![
+                        ("tenant", tenant.as_str().into()),
+                        ("inflight", inflight.into()),
+                    ]);
+                }
+            }
+        }
+    }
+}
+
+/// A [`Spool`] driven by a [`Background`] poller thread. Shutdown —
+/// explicit [`shutdown`](SpoolWatcher::shutdown) or drop — stops the
+/// thread and joins it.
+pub struct SpoolWatcher {
+    stats: Arc<Mutex<SpoolStats>>,
+    bg: Background,
+}
+
+impl SpoolWatcher {
+    pub fn start(registry: Arc<Registry>, cfg: SpoolConfig, log: EventLog)
+                 -> Result<SpoolWatcher> {
+        let mut spool = Spool::new(registry, &cfg, log)?;
+        let stats = Arc::new(Mutex::new(SpoolStats::default()));
+        let tick_stats = stats.clone();
+        let bg = Background::spawn("spool-watcher", cfg.poll_interval, move || {
+            *tick_stats.lock().unwrap() = spool.poll();
+        })
+        .context("spawn spool watcher thread")?;
+        Ok(SpoolWatcher { stats, bg })
+    }
+
+    /// Counters as of the most recent completed poll.
+    pub fn stats(&self) -> SpoolStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Stop polling and join the watcher thread (dropping the watcher
+    /// does the same).
+    pub fn shutdown(self) {
+        self.bg.stop_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::{save_adapter_atomic, AdapterManifest};
+    use crate::runtime::HostTensor;
+    use crate::serve::registry::PauliSpec;
+    use std::path::Path;
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("qp_spool_unit")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn drop_adapter(dir: &Path, file: &str, tenant: &str, q: u32, l: u32) {
+        let spec = PauliSpec { q, n_layers: l };
+        let thetas: Vec<f32> = (0..spec.num_params())
+            .map(|i| (i as f32 * 0.19).sin())
+            .collect();
+        let m = AdapterManifest { tenant: tenant.into(), q, n_layers: l };
+        save_adapter_atomic(&dir.join(file), &m, &[(
+            "thetas".to_string(),
+            HostTensor::f32(vec![thetas.len()], thetas),
+        )])
+        .unwrap();
+    }
+
+    #[test]
+    fn stability_window_defers_ingest_one_poll() {
+        let dir = tdir("stable");
+        let reg = Arc::new(Registry::new(1 << 20));
+        let mut spool =
+            Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null())
+                .unwrap();
+        drop_adapter(&dir, "a.qpck", "acme", 3, 1);
+        // first sighting only arms the window
+        let s = spool.poll();
+        assert_eq!(s.loaded, 0);
+        assert!(reg.snapshot("acme").is_err());
+        // unchanged on the second poll -> ingested
+        let s = spool.poll();
+        assert_eq!(s.loaded, 1);
+        assert_eq!(reg.snapshot("acme").unwrap().version, 1);
+        // steady state: no re-ingest
+        let s = spool.poll();
+        assert_eq!(s.loaded, 1);
+        assert_eq!(reg.snapshot("acme").unwrap().version, 1);
+    }
+
+    #[test]
+    fn changed_file_hot_swaps_and_tenant_rename_evicts_the_old() {
+        let dir = tdir("swap");
+        let reg = Arc::new(Registry::new(1 << 20));
+        let mut spool =
+            Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null())
+                .unwrap();
+        drop_adapter(&dir, "a.qpck", "acme", 3, 1);
+        spool.poll();
+        spool.poll();
+        let v1 = reg.snapshot("acme").unwrap();
+        // re-upload under the same file name: hot-swap bumps the version
+        // (different shape -> different bytes, so (len, mtime) changes)
+        drop_adapter(&dir, "a.qpck", "acme", 3, 2);
+        spool.poll();
+        spool.poll();
+        let v2 = reg.snapshot("acme").unwrap();
+        assert_eq!((v1.version, v2.version), (1, 2));
+        assert_ne!(v1.checksum, v2.checksum);
+        // the same file switching manifest tenants orphans the old one
+        drop_adapter(&dir, "a.qpck", "globex", 3, 1);
+        spool.poll();
+        spool.poll();
+        assert!(reg.snapshot("acme").is_err(), "orphaned tenant survived");
+        assert_eq!(reg.snapshot("globex").unwrap().version, 1);
+    }
+
+    #[test]
+    fn non_qpck_and_dot_files_are_ignored() {
+        let dir = tdir("ignore");
+        let reg = Arc::new(Registry::new(1 << 20));
+        let mut spool =
+            Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null())
+                .unwrap();
+        std::fs::write(dir.join("notes.txt"), b"not an adapter").unwrap();
+        std::fs::write(dir.join(".hidden.qpck"), b"partial upload").unwrap();
+        std::fs::create_dir_all(dir.join("rejected")).unwrap();
+        for _ in 0..3 {
+            spool.poll();
+        }
+        let s = spool.stats();
+        assert_eq!((s.loaded, s.rejected), (0, 0), "{s:?}");
+        assert!(reg.is_empty());
+    }
+}

@@ -186,7 +186,11 @@ where
                     let r = run_one(work, &mut state, ctx, item);
                     if let Err(e) = &r {
                         let mut fe = first_error.lock().unwrap();
-                        if fe.as_ref().map_or(true, |(j, _)| i < *j) {
+                        let lowest_so_far = match fe.as_ref() {
+                            Some((j, _)) => i < *j,
+                            None => true,
+                        };
+                        if lowest_so_far {
                             *fe = Some((i, e.to_string()));
                         }
                         abort.store(true, Ordering::Relaxed);
@@ -403,6 +407,68 @@ where
     // all workers have joined: the init-error list is final
     let init_errors = service.init_errors.into_inner().unwrap();
     (out, init_errors)
+}
+
+// ------------------------------------------------------------- background ---
+
+/// A named background thread with cooperative shutdown: `tick` runs once
+/// immediately and then once per `interval` until the owner stops it.
+/// Shutdown **joins** the thread (explicitly via
+/// [`stop_and_join`](Background::stop_and_join), or implicitly on drop),
+/// so a service that owns one — the serve spool watcher runs on a
+/// `Background` — can never leak its poller past its own shutdown.
+///
+/// The interval sleep is sliced so stop latency stays bounded (~10ms)
+/// even for long poll intervals.
+pub struct Background {
+    stop: std::sync::Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Background {
+    pub fn spawn<F>(name: &str, interval: std::time::Duration, mut tick: F)
+                    -> std::io::Result<Background>
+    where
+        F: FnMut() + Send + 'static,
+    {
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                let slice = std::time::Duration::from_millis(10);
+                while !thread_stop.load(Ordering::Relaxed) {
+                    tick();
+                    let mut remaining = interval;
+                    while !thread_stop.load(Ordering::Relaxed)
+                        && remaining > std::time::Duration::ZERO
+                    {
+                        let step = remaining.min(slice);
+                        std::thread::sleep(step);
+                        remaining = remaining.saturating_sub(step);
+                    }
+                }
+            })?;
+        Ok(Background { stop, handle: Some(handle) })
+    }
+
+    /// Signal the thread to stop and block until it has exited.
+    pub fn stop_and_join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Background {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 /// Stateless convenience wrapper around [`run_stateful`].
@@ -718,6 +784,26 @@ mod tests {
         for &(id, p) in d.iter() {
             assert_eq!(p, id != 1, "item {id}");
         }
+    }
+
+    #[test]
+    fn background_ticks_and_never_outlives_join() {
+        let count = std::sync::Arc::new(AtomicUsize::new(0));
+        let tick_count = count.clone();
+        let bg = Background::spawn("test-bg", Duration::from_millis(1), move || {
+            tick_count.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        while count.load(Ordering::SeqCst) < 3 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(count.load(Ordering::SeqCst) >= 3, "watcher never ticked");
+        bg.stop_and_join();
+        // joined means stopped: no tick can land after stop_and_join
+        let after = count.load(Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(count.load(Ordering::SeqCst), after, "ticked after join");
     }
 
     #[test]

@@ -51,10 +51,28 @@ impl Rng {
         self.f64() as f32
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), by integer rejection sampling on
+    /// [`next_u64`](Self::next_u64) — every residue exactly equally
+    /// likely. (The old float path `(f64() * n) as usize % n` doubled
+    /// rank 0's probability at the rounding edge — `f64() * n` can round
+    /// up to exactly `n`, which `% n` folds back onto 0 — and had
+    /// resolution bias for n beyond the 53-bit float grid.)
     pub fn below(&mut self, n: usize) -> usize {
         assert!(n > 0);
-        (self.f64() * n as f64) as usize % n
+        let n64 = n as u64;
+        if n64.is_power_of_two() {
+            return (self.next_u64() & (n64 - 1)) as usize;
+        }
+        // accept draws below the largest multiple of n, so the fold to
+        // [0, n) is exact; rejection probability < 2^-11 for n < 2^53,
+        // expected draws < 2 always
+        let zone = u64::MAX - u64::MAX % n64;
+        loop {
+            let x = self.next_u64();
+            if x < zone {
+                return (x % n64) as usize;
+            }
+        }
     }
 
     /// Uniform integer in [lo, hi).
@@ -118,6 +136,33 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_exact_and_unbiased() {
+        // power-of-two path is a pure mask of next_u64
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..256 {
+            assert_eq!(a.below(8), (b.next_u64() & 7) as usize);
+        }
+        // non-power-of-two: in range, and every residue reachable
+        let mut r = Rng::new(10);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            // 5 bins x 10k expected; ±6% is > 8 sigma
+            assert!((9_400..10_600).contains(&c), "{counts:?}");
+        }
+        // the old float path could round (f64() * n) up to n and fold it
+        // onto 0; the integer path stays in range even for huge n where
+        // f64 resolution ran out
+        let huge = (1usize << 62) + 3;
+        for _ in 0..64 {
+            assert!(r.below(huge) < huge);
+        }
     }
 
     #[test]

@@ -1,20 +1,25 @@
-//! Integration tests for the multi-tenant adapter serving subsystem
-//! (ISSUE 3 acceptance): fifo-mode byte-determinism at any worker count,
-//! hot-swap atomicity under 8-worker load, the LRU materialization
-//! cache's byte budget and counters end-to-end, and the `serve-bench`
-//! loadgen's EventLog summary.
+//! Integration tests for the multi-tenant adapter serving subsystem:
+//! fifo-mode byte-determinism at any worker count (ISSUE 3), hot-swap
+//! atomicity under 8-worker load, the LRU materialization cache's byte
+//! budget and counters end-to-end, the `serve-bench` loadgen's EventLog
+//! summary, and the ISSUE 4 control plane — deterministic rate-limited
+//! overload shedding with per-tenant rejection counters, and
+//! spool-directory adapter ingestion (hot upload / quarantine /
+//! pin-respecting eviction) with no server restart.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use quantum_peft::coordinator::checkpoint::{save_adapter_atomic, AdapterManifest};
 use quantum_peft::coordinator::events::EventLog;
 use quantum_peft::quantum::pauli;
-use quantum_peft::runtime::Runtime;
+use quantum_peft::runtime::{HostTensor, Runtime};
 use quantum_peft::serve::loadgen::{self, response_log};
 use quantum_peft::serve::registry::theta_checksum;
 use quantum_peft::serve::scheduler::BatchPolicy;
 use quantum_peft::serve::{
-    BenchOpts, LoadSpec, PauliSpec, Registry, ServeConfig,
+    AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, Registry, ServeConfig,
+    Spool, SpoolConfig, SpoolWatcher,
 };
 use quantum_peft::util::json::Json;
 use quantum_peft::util::rng::Rng;
@@ -36,8 +41,10 @@ fn fifo_mode_is_byte_identical_for_any_worker_count() {
                 workers,
                 policy: BatchPolicy { max_batch: 5, max_wait_us: 1 },
                 fifo: true,
+                ..ServeConfig::default()
             },
             cache_bytes: 1 << 20,
+            spool_dir: None,
         };
         loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap()
     };
@@ -80,6 +87,7 @@ fn hot_swap_under_load_never_tears_version_and_params() {
         workers: WORKERS,
         policy: BatchPolicy { max_batch: 4, max_wait_us: 1 },
         fifo: true,
+        ..ServeConfig::default()
     };
     let inputs: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
     let outcome = quantum_peft::serve::serve(
@@ -156,6 +164,7 @@ fn lru_cache_respects_budget_end_to_end() {
         workers: 1,
         policy: BatchPolicy { max_batch: 1, max_wait_us: 1 },
         fifo: true,
+        ..ServeConfig::default()
     };
     quantum_peft::serve::serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
         // a(miss) a(hit) b(miss) c(miss, evicts a) a(miss, evicts b)
@@ -189,8 +198,10 @@ fn serve_bench_emits_summary_through_event_log() {
             workers: 2,
             policy: BatchPolicy { max_batch: 4, max_wait_us: 50 },
             fifo: true,
+            ..ServeConfig::default()
         },
         cache_bytes: 1 << 20,
+        spool_dir: None,
     };
     let (summary, _) = loadgen::run_serve_bench(&opts, &log).unwrap();
     assert_eq!(summary.completed, 64);
@@ -250,13 +261,258 @@ fn open_loop_timed_mode_completes_all_requests() {
             workers: 4,
             policy: BatchPolicy { max_batch: 6, max_wait_us: 100 },
             fifo: false,
+            ..ServeConfig::default()
         },
         cache_bytes: 1 << 20,
+        spool_dir: None,
     };
     let (summary, log) = loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap();
     assert_eq!(summary.completed, 48);
     assert_eq!(summary.failed, 0);
     assert_eq!(log.lines().count(), 48);
+}
+
+// ------------------------------------------------------------ admission ---
+
+fn overload_opts(workers: usize) -> BenchOpts {
+    BenchOpts {
+        load: LoadSpec {
+            tenants: 8,
+            requests: 400,
+            concurrency: 1,
+            seed: 11,
+            zipf_s: 1.2,
+            pauli: PauliSpec { q: 4, n_layers: 1 },
+            // open loop at ~5x the aggregate admitted budget: a true
+            // overload, but in fifo mode the gaps advance the logical
+            // clock instead of sleeping, so the run is instant and
+            // deterministic
+            open_rate_rps: 2000.0,
+        },
+        serve: ServeConfig {
+            workers,
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 1 },
+            fifo: true,
+            admission: AdmissionConfig { rate_rps: 50.0, burst: 5.0, max_queue: 0 },
+        },
+        cache_bytes: 1 << 20,
+        spool_dir: None,
+    }
+}
+
+fn tenant_rejections(
+    s: &quantum_peft::serve::ServeSummary, tenant: &str,
+) -> u64 {
+    s.admission.per_tenant.iter()
+        .find(|t| t.tenant == tenant)
+        .map(|t| t.rejected_rate_limited + t.rejected_queue_full)
+        .unwrap_or(0)
+}
+
+#[test]
+fn rate_limited_overload_sheds_deterministically_at_any_worker_count() {
+    let (s1, log1) =
+        loadgen::run_serve_bench(&overload_opts(1), &EventLog::null()).unwrap();
+    // a real overload: something was shed, everything admitted completed,
+    // and the ledger closes exactly
+    assert!(s1.admission.rejected_rate_limited > 0, "{:?}", s1.admission);
+    assert_eq!(s1.admission.rejected_queue_full, 0);
+    assert_eq!(s1.completed, s1.admission.admitted);
+    assert_eq!(s1.admission.admitted + s1.admission.rejected_total(), 400);
+    // Zipf skew makes the hottest tenant blow its budget hardest
+    let hot = tenant_rejections(&s1, &loadgen::tenant_name(0));
+    let cold = tenant_rejections(&s1, &loadgen::tenant_name(7));
+    assert!(hot > cold, "hot {hot} vs cold {cold}");
+    // fifo byte-identity now covers rejections too: same response log,
+    // same admission ledger, at any worker count
+    for workers in [4, 8] {
+        let (s, log) = loadgen::run_serve_bench(
+            &overload_opts(workers), &EventLog::null()).unwrap();
+        assert_eq!(log, log1, "response log diverged at workers={workers}");
+        assert_eq!(s.admission, s1.admission,
+                   "admission ledger diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn admission_counters_land_in_the_event_log_per_tenant() {
+    let path = std::env::temp_dir().join(format!(
+        "qp_serve_admission_events_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let log = EventLog::new(Some(path.clone()), false).unwrap();
+    let (summary, _) =
+        loadgen::run_serve_bench(&overload_opts(2), &log).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let global: Vec<&Json> = lines.iter()
+        .filter(|j| j.get("event").unwrap().as_str().unwrap() == "serve_admission")
+        .collect();
+    assert_eq!(global.len(), 1);
+    let g = global[0];
+    assert_eq!(g.get("rejected_rate_limited").unwrap().as_usize().unwrap() as u64,
+               summary.admission.rejected_rate_limited);
+    assert_eq!(g.get("admitted").unwrap().as_usize().unwrap() as u64,
+               summary.admission.admitted);
+    // per-tenant lines account for every rejection exactly
+    let per_tenant: Vec<&Json> = lines.iter()
+        .filter(|j| {
+            j.get("event").unwrap().as_str().unwrap() == "serve_admission_tenant"
+        })
+        .collect();
+    assert!(!per_tenant.is_empty());
+    let rejected_sum: usize = per_tenant.iter()
+        .map(|j| j.get("rejected_rate_limited").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(rejected_sum as u64, summary.admission.rejected_rate_limited);
+    let admitted_sum: usize = per_tenant.iter()
+        .map(|j| j.get("admitted").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(admitted_sum as u64, summary.admission.admitted);
+}
+
+// ---------------------------------------------------------------- spool ---
+
+fn spool_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("qp_spool_e2e")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn adapter_thetas(spec: PauliSpec, salt: f32) -> Vec<f32> {
+    (0..spec.num_params()).map(|i| (i as f32 * salt).sin()).collect()
+}
+
+fn write_adapter(dir: &std::path::Path, file: &str, tenant: &str,
+                 spec: PauliSpec, thetas: &[f32]) {
+    let m = AdapterManifest {
+        tenant: tenant.into(), q: spec.q, n_layers: spec.n_layers,
+    };
+    save_adapter_atomic(&dir.join(file), &m, &[(
+        "thetas".to_string(),
+        HostTensor::f32(vec![thetas.len()], thetas.to_vec()),
+    )])
+    .unwrap();
+}
+
+#[test]
+fn spool_upload_becomes_servable_with_no_restart() {
+    let dir = spool_dir("servable");
+    let reg = Arc::new(Registry::new(1 << 20));
+    let mut spool =
+        Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    let thetas = adapter_thetas(spec, 0.29);
+    let input: Vec<f32> = (0..8).map(|i| (i as f32 * 0.41).cos()).collect();
+    let outcome = quantum_peft::serve::serve(
+        &rt, &reg, &cfg, &EventLog::null(), |h| {
+            // before the upload the tenant does not exist
+            assert!(h.submit("acme", 0, input.clone()).is_err());
+            // drop the adapter into the spool mid-session; two polls
+            // (stability window) later it serves — no restart, no
+            // re-registration API
+            write_adapter(&dir, "acme.qpck", "acme", spec, &thetas);
+            spool.poll();
+            spool.poll();
+            let r = h.submit("acme", 1, input.clone())?;
+            h.flush();
+            r.wait()
+        })
+        .unwrap();
+    let resp = outcome.body;
+    assert_eq!((resp.tenant.as_str(), resp.version), ("acme", 1));
+    assert_eq!(resp.checksum, theta_checksum(&thetas));
+    let mut expect = input.clone();
+    pauli::build(3, 1).apply(&mut expect, 1, &thetas);
+    for (a, b) in resp.output.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    assert_eq!(spool.stats().loaded, 1);
+    // the ingested file is still in place under its public name
+    assert!(dir.join("acme.qpck").exists());
+}
+
+#[test]
+fn spool_quarantines_malformed_files_without_touching_the_registry() {
+    let dir = spool_dir("quarantine");
+    let reg = Arc::new(Registry::new(1 << 20));
+    let mut spool =
+        Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null()).unwrap();
+    // a truncated/hostile header and a v1 checkpoint with no manifest:
+    // both must fail validation, not register anything
+    std::fs::write(dir.join("evil.qpck"), b"QPCK\x02garbage-truncated").unwrap();
+    quantum_peft::coordinator::checkpoint::save(
+        &dir.join("v1.qpck"),
+        &[("thetas".to_string(), HostTensor::f32(vec![2], vec![0.0; 2]))])
+        .unwrap();
+    spool.poll(); // arm stability window
+    let s = spool.poll(); // ingest -> reject both
+    assert_eq!(s.rejected, 2, "{s:?}");
+    assert_eq!(s.loaded, 0);
+    assert!(reg.is_empty(), "hostile file mutated the registry");
+    // quarantined out of the spool, present under rejected/
+    assert!(!dir.join("evil.qpck").exists());
+    assert!(!dir.join("v1.qpck").exists());
+    assert!(dir.join("rejected").join("evil.qpck").exists());
+    assert!(dir.join("rejected").join("v1.qpck").exists());
+    // never retried: further polls change nothing
+    let s = spool.poll();
+    assert_eq!((s.rejected, s.loaded), (2, 0), "{s:?}");
+}
+
+#[test]
+fn spool_deletion_evicts_only_after_inflight_pins_drain() {
+    let dir = spool_dir("evict");
+    let reg = Arc::new(Registry::new(1 << 20));
+    let mut spool =
+        Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null()).unwrap();
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    write_adapter(&dir, "acme.qpck", "acme", spec, &adapter_thetas(spec, 0.31));
+    spool.poll();
+    spool.poll();
+    assert_eq!(reg.snapshot("acme").unwrap().version, 1);
+    // an in-flight request pins the tenant across the file deletion
+    let guard = reg.begin("acme").unwrap();
+    std::fs::remove_file(dir.join("acme.qpck")).unwrap();
+    let s = spool.poll();
+    assert_eq!(s.evicted, 0, "{s:?}");
+    assert!(s.eviction_deferred >= 1, "{s:?}");
+    assert!(reg.snapshot("acme").is_ok(), "evicted under an in-flight pin");
+    spool.poll();
+    assert!(reg.snapshot("acme").is_ok());
+    // pin drains -> the deferred eviction lands on the next poll
+    drop(guard);
+    let s = spool.poll();
+    assert_eq!(s.evicted, 1, "{s:?}");
+    assert!(reg.snapshot("acme").is_err());
+    assert_eq!(reg.len(), 0);
+}
+
+#[test]
+fn spool_watcher_ingests_in_background_and_joins_on_shutdown() {
+    use std::time::{Duration, Instant};
+    let dir = spool_dir("watcher");
+    let reg = Arc::new(Registry::new(1 << 20));
+    let watcher = SpoolWatcher::start(
+        reg.clone(),
+        SpoolConfig { dir: dir.clone(), poll_interval: Duration::from_millis(2) },
+        EventLog::null())
+        .unwrap();
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    write_adapter(&dir, "bg.qpck", "bg-tenant", spec, &adapter_thetas(spec, 0.37));
+    let t0 = Instant::now();
+    while watcher.stats().loaded < 1 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(watcher.stats().loaded >= 1, "watcher never ingested the upload");
+    assert_eq!(reg.snapshot("bg-tenant").unwrap().version, 1);
+    // shutdown joins the poller; the registry stays as the watcher left it
+    watcher.shutdown();
+    assert_eq!(reg.len(), 1);
 }
 
 #[test]

@@ -1,6 +1,8 @@
 //! Offline stand-in for the `anyhow` crate, API-compatible with the subset
 //! this repository uses: `Result`, `Error`, the `Context` extension trait
-//! on `Result`/`Option`, and the `anyhow!` / `bail!` macros.
+//! on `Result`/`Option`, the `anyhow!` / `bail!` macros, and
+//! `downcast_ref` for recovering typed errors (e.g. the serve admission
+//! controller's `Rejected`).
 //!
 //! The build image has no crates.io access, so the dependency is vendored
 //! as a path crate (see rust/Cargo.toml). Swapping in the real `anyhow`
@@ -11,7 +13,9 @@
 //!   the blanket `From<E: std::error::Error>` impl coherent alongside the
 //!   identity `From<Error>` used by `?`);
 //! - `.context(..)` wraps the prior error, and `Display` shows the chain
-//!   outermost-first (`"outer: inner"`), `Debug` shows a Caused-by list.
+//!   outermost-first (`"outer: inner"`), `Debug` shows a Caused-by list;
+//! - a typed error that entered the chain through `?`/`From` stays
+//!   reachable via `downcast_ref` no matter how much context wraps it.
 
 use std::fmt;
 
@@ -22,16 +26,34 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     msg: String,
     cause: Option<Box<Error>>,
+    /// The concrete error value the chain was built from, when it entered
+    /// through the `From<E: std::error::Error>` conversion — what makes
+    /// `downcast_ref` work across context wrapping.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), cause: None }
+        Error { msg: message.to_string(), cause: None, payload: None }
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+        Error { msg: context.to_string(), cause: Some(Box::new(self)), payload: None }
+    }
+
+    /// A reference to the typed error `T` anywhere in this chain, if one
+    /// entered through `From`/`?` — context wrapping does not hide it
+    /// (matching real anyhow's downcast-through-context behavior).
+    pub fn downcast_ref<T: std::any::Any>(&self) -> Option<&T> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(t) = e.payload.as_deref().and_then(|p| p.downcast_ref::<T>()) {
+                return Some(t);
+            }
+            cur = e.cause.as_deref();
+        }
+        None
     }
 
     /// The error chain, outermost first.
@@ -91,9 +113,9 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
         }
         let mut cause = None;
         for m in msgs.into_iter().rev() {
-            cause = Some(Box::new(Error { msg: m, cause }));
+            cause = Some(Box::new(Error { msg: m, cause, payload: None }));
         }
-        Error { msg: e.to_string(), cause }
+        Error { msg: e.to_string(), cause, payload: Some(Box::new(e)) }
     }
 }
 
@@ -213,6 +235,29 @@ mod tests {
         }
         assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
         assert_eq!(format!("{}", f(false).unwrap_err()), "fell through 42");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_wrapping() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        fn inner() -> Result<()> {
+            Err(Typed(7))?;
+            Ok(())
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // ad-hoc string errors carry no payload
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]
