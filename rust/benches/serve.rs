@@ -2,8 +2,11 @@
 //! worker x tenant grid (the ISSUE-3 acceptance grid: 1/4/8 workers x
 //! 1/16/256 tenants), the checkpoint bulk-I/O speedup measurement, the
 //! ISSUE-4 overload-shedding scenario (open loop at ~5x the admitted
-//! budget: rejected share + admitted-request p99), and the dense-vs-
-//! structured apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`.
+//! budget: rejected share + admitted-request p99), the dense-vs-
+//! structured apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`,
+//! and the ISSUE-5 durability lines: WAL append throughput per
+//! durability mode, and recovery wall-clock for 256 tenants before vs
+//! after snapshot compaction.
 //!
 //! Uses the in-tree harness conventions (criterion is unavailable
 //! offline): self-contained, prints a stable one-line-per-cell report,
@@ -15,9 +18,13 @@ use quantum_peft::coordinator::checkpoint::{self, AdapterManifest};
 use quantum_peft::coordinator::events::EventLog;
 use quantum_peft::quantum::pauli;
 use quantum_peft::runtime::HostTensor;
+use quantum_peft::serve::registry::theta_checksum;
 use quantum_peft::serve::scheduler::BatchPolicy;
 use quantum_peft::serve::{
     AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, ServeConfig,
+};
+use quantum_peft::store::{
+    recover, Durability, StateRecord, StateStore, TenantState,
 };
 use quantum_peft::util::bench::fmt_ns;
 use quantum_peft::util::rng::Rng;
@@ -40,7 +47,7 @@ fn serve_grid() {
                 },
                 serve: ServeConfig { workers, ..ServeConfig::default() },
                 cache_bytes: 8 << 20,
-                spool_dir: None,
+                ..BenchOpts::default()
             };
             match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
                 Ok((s, _)) => {
@@ -132,9 +139,10 @@ fn overload_shedding() {
                     burst: 25.0,
                     max_queue: 0,
                 },
+                ..ServeConfig::default()
             },
             cache_bytes: 8 << 20,
-            spool_dir: None,
+            ..BenchOpts::default()
         };
         match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
             Ok((s, _)) => {
@@ -213,8 +221,119 @@ fn structured_vs_dense() {
     }
 }
 
+/// One seeded register-record for the WAL benches (q=5 L=1 thetas
+/// inline — the realistic few-KB adapter payload).
+fn bench_record(tenant_index: usize, version: u64) -> StateRecord {
+    let spec = PauliSpec { q: 5, n_layers: 1 };
+    let mut rng = Rng::new(0xb0b ^ tenant_index as u64 ^ (version << 32));
+    let thetas: Vec<f32> = (0..spec.num_params())
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let ts = TenantState {
+        tenant: format!("tenant{tenant_index:04}"),
+        version,
+        q: spec.q,
+        n_layers: spec.n_layers,
+        checksum: theta_checksum(&thetas),
+        path: format!("/spool/tenant{tenant_index:04}.qpck"),
+        thetas,
+    };
+    if version == 1 {
+        StateRecord::Register(ts)
+    } else {
+        StateRecord::Swap(ts)
+    }
+}
+
+fn bench_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("qp_serve_bench_store")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// ISSUE-5 acceptance: WAL append throughput per durability mode. The
+/// record payload is a real register record (tenant + manifest + theta
+/// vector), so records/s is the adapter-churn rate the control plane
+/// can absorb durably.
+fn wal_append_throughput() {
+    println!("# state store: WAL append throughput, q=5 L=1 register records");
+    println!("{:>12} {:>10} {:>14} {:>12}",
+             "durability", "records", "records/s", "MiB/s");
+    for (label, durability, n) in [
+        ("buffered", Durability::Buffered, 20_000usize),
+        ("every64", Durability::EveryN(64), 8_192),
+        ("always", Durability::Always, 256),
+    ] {
+        let dir = bench_dir(&format!("wal_{label}"));
+        let store = StateStore::open(&dir, durability).unwrap().store;
+        // one record re-appended n times: measures the log, not the RNG
+        let rec = bench_record(0, 1);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            store.append(&rec).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let bytes = std::fs::metadata(dir.join(quantum_peft::store::WAL_FILE))
+            .map(|m| m.len())
+            .unwrap_or(0) as f64;
+        println!("{:>12} {:>10} {:>14.0} {:>12.1}",
+                 label, n, n as f64 / wall,
+                 bytes / (1 << 20) as f64 / wall);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// ISSUE-5 acceptance: recovery wall-clock for 256 tenants, full-WAL
+/// replay (registers + 8 swap generations each = 2304 records) vs
+/// recovery after snapshot compaction truncated the log. The
+/// post-compaction number must be measurably cheaper — that is the
+/// entire point of the snapshot.
+fn recovery_wall_clock() {
+    const TENANTS: usize = 256;
+    const SWAPS: u64 = 8;
+    let dir = bench_dir("recover");
+    let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+    for i in 0..TENANTS {
+        store.append(&bench_record(i, 1)).unwrap();
+    }
+    for v in 2..=(1 + SWAPS) {
+        for i in 0..TENANTS {
+            store.append(&bench_record(i, v)).unwrap();
+        }
+    }
+    let records = store.wal_records();
+    drop(store);
+
+    let t0 = Instant::now();
+    let full = recover(&dir).unwrap();
+    let full_s = t0.elapsed().as_secs_f64();
+    assert_eq!(full.tenants.len(), TENANTS);
+
+    // compact: the live state (final generation of each tenant) becomes
+    // the snapshot, the WAL truncates
+    let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+    store.compact(&full.tenants).unwrap();
+    drop(store);
+
+    let t0 = Instant::now();
+    let compacted = recover(&dir).unwrap();
+    let compact_s = t0.elapsed().as_secs_f64();
+    assert_eq!(compacted.tenants.len(), TENANTS);
+    assert_eq!(compacted.tenants, full.tenants);
+
+    println!("# state store: recovery wall-clock, {TENANTS} tenants");
+    println!("full-WAL replay ({records} records)   {:>10}", fmt_ns(full_s * 1e9));
+    println!("after snapshot+truncate           {:>10}  ({:.1}x cheaper)",
+             fmt_ns(compact_s * 1e9), full_s / compact_s.max(1e-9));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     checkpoint_io();
+    wal_append_throughput();
+    recovery_wall_clock();
     structured_vs_dense();
     overload_shedding();
     serve_grid();

@@ -1,16 +1,28 @@
 //! Checkpoint format (own binary container; no external deps):
 //!
 //!   magic "QPCK" | u32 version
-//!   version 2 only (adapter manifest):
+//!   versions 2 and 3 (adapter manifest):
 //!     u32 tenant_len | tenant utf8 | u32 q | u32 n_layers
-//!   both versions: u32 count
+//!   all versions: u32 count
 //!   per tensor: u32 name_len | name utf8 | u8 dtype (0=f32, 1=i32)
 //!               | u32 ndim | u64 dims... | payload (LE)
+//!   version 3 only: u64 FNV-1a digest of every byte after the version
+//!                   field (trailer; integrity checksum)
 //!
-//! Stores either a full model (pretraining output), adapters only (PEFT
-//! fine-tuning output — the paper's few-KB artifact story), or — version
-//! 2 — an adapter plus the manifest the serving registry needs to
+//! Stores either a full model (pretraining output, version 1), adapters
+//! only (PEFT fine-tuning output — the paper's few-KB artifact story),
+//! or an adapter plus the manifest the serving registry needs to
 //! validate tenant identity and Pauli shape *before* materializing.
+//! Adapter checkpoints are written as **version 3**: the whole-payload
+//! FNV-1a trailer means any single-byte corruption anywhere after the
+//! version field is detected at load time, before anything
+//! materializes (the xor-multiply FNV step is injective per byte, so a
+//! same-length substitution always changes the digest). Version-2
+//! files — written before the checksum existed — still load, without
+//! verification. The spool watcher quarantines mismatches to
+//! `rejected/` like any other validation failure; this is the
+//! integrity half of upload trust (authenticity/signatures remain
+//! future work).
 //!
 //! Loading is hardened against corrupt or hostile files: every
 //! length/count field read from the file is capped before it sizes an
@@ -23,10 +35,55 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::HostTensor;
+use crate::util::fnv;
 
 const MAGIC: &[u8; 4] = b"QPCK";
 const VERSION: u32 = 1;
+/// Legacy adapter format: manifest, no integrity trailer (read-only).
 const VERSION_ADAPTER: u32 = 2;
+/// Current adapter format: manifest + whole-payload FNV-1a trailer.
+const VERSION_ADAPTER_CK: u32 = 3;
+
+/// `Write` adapter that FNV-digests everything written through it
+/// while `active` (the v3 save path; the digest becomes the file's
+/// trailer — v1 full-model saves skip the per-byte pass entirely).
+struct HashWriter<W: Write> {
+    inner: W,
+    digest: u64,
+    active: bool,
+}
+
+impl<W: Write> Write for HashWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        if self.active {
+            self.digest = fnv::update(self.digest, &buf[..n]);
+        }
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// `Read` adapter that FNV-digests everything read through it while
+/// `active` (the v3 load path; switched off to read the trailer itself).
+struct HashReader<R: Read> {
+    inner: R,
+    digest: u64,
+    active: bool,
+}
+
+impl<R: Read> Read for HashReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        if self.active {
+            self.digest = fnv::update(self.digest, &buf[..n]);
+        }
+        Ok(n)
+    }
+}
 
 /// Header caps: far above anything the repro writes, far below anything
 /// that could turn a short garbage file into a giant allocation.
@@ -51,7 +108,8 @@ pub fn save(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
     save_impl(path, None, tensors)
 }
 
-/// Save a version-2 adapter checkpoint: manifest header + tensors.
+/// Save an adapter checkpoint (version 3): manifest header + tensors +
+/// whole-payload FNV-1a integrity trailer.
 pub fn save_adapter(path: &Path, manifest: &AdapterManifest,
                     tensors: &[(String, HostTensor)]) -> Result<()> {
     if manifest.tenant.len() > MAX_TENANT_LEN {
@@ -61,7 +119,7 @@ pub fn save_adapter(path: &Path, manifest: &AdapterManifest,
     save_impl(path, Some(manifest), tensors)
 }
 
-/// Save a version-2 adapter checkpoint through a hidden temp file plus an
+/// Save an adapter checkpoint through a hidden temp file plus an
 /// atomic same-directory rename — the uploader-side half of the spool
 /// protocol ([`crate::serve::spool`]): a watcher polling the target
 /// directory can never observe a partially-written file under the final
@@ -115,18 +173,27 @@ fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
         std::fs::create_dir_all(parent)
             .with_context(|| format!("create checkpoint dir {parent:?}"))?;
     }
-    let mut f = std::io::BufWriter::new(
+    let mut raw = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("create {path:?}"))?);
-    f.write_all(MAGIC)?;
-    match manifest {
-        None => f.write_all(&VERSION.to_le_bytes())?,
-        Some(m) => {
-            f.write_all(&VERSION_ADAPTER.to_le_bytes())?;
-            f.write_all(&(m.tenant.len() as u32).to_le_bytes())?;
-            f.write_all(m.tenant.as_bytes())?;
-            f.write_all(&m.q.to_le_bytes())?;
-            f.write_all(&m.n_layers.to_le_bytes())?;
-        }
+    raw.write_all(MAGIC)?;
+    let version = match manifest {
+        None => VERSION,
+        Some(_) => VERSION_ADAPTER_CK,
+    };
+    raw.write_all(&version.to_le_bytes())?;
+    // everything after the version field streams through the digest
+    // (adapter files only — v1 skips the hashing pass); the trailer is
+    // written outside it
+    let mut f = HashWriter {
+        inner: raw,
+        digest: fnv::OFFSET,
+        active: manifest.is_some(),
+    };
+    if let Some(m) = manifest {
+        f.write_all(&(m.tenant.len() as u32).to_le_bytes())?;
+        f.write_all(m.tenant.as_bytes())?;
+        f.write_all(&m.q.to_le_bytes())?;
+        f.write_all(&m.n_layers.to_le_bytes())?;
     }
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
@@ -145,6 +212,11 @@ fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
             }
         }
     }
+    if manifest.is_some() {
+        let digest = f.digest;
+        f.inner.write_all(&digest.to_le_bytes())?;
+    }
+    f.flush().with_context(|| format!("flush {path:?}"))?;
     Ok(())
 }
 
@@ -181,7 +253,10 @@ pub fn load(path: &Path) -> Result<Vec<(String, HostTensor)>> {
     Ok(load_impl(path)?.1)
 }
 
-/// Load a version-2 adapter checkpoint: the manifest plus its tensors.
+/// Load an adapter checkpoint: the manifest plus its tensors. Version-3
+/// files have their whole-payload FNV-1a checksum verified before
+/// anything is returned (any single-byte corruption after the version
+/// field fails here); version-2 legacy files load without verification.
 /// A version-1 file (no manifest) is an error — the registry must never
 /// guess which tenant or circuit shape an adapter belongs to.
 pub fn load_adapter(path: &Path)
@@ -201,17 +276,24 @@ fn load_impl(path: &Path)
     // hostile file whose header passes the caps must not be able to
     // demand a 1 GiB zeroed buffer before read_exact notices the EOF
     let file_len = file.metadata().map(|m| m.len()).unwrap_or(u64::MAX);
-    let mut f = std::io::BufReader::new(file);
+    let mut raw = std::io::BufReader::new(file);
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)
+    raw.read_exact(&mut magic)
         .with_context(|| format!("{path:?}: reading magic (truncated file?)"))?;
     if &magic != MAGIC {
         bail!("{path:?}: not a QPCK checkpoint");
     }
-    let version = read_u32(&mut f, path, "version")?;
+    let version = read_u32(&mut raw, path, "version")?;
+    // v3 files digest everything between the version field and the
+    // trailer; other versions read through the same adapter unhashed
+    let mut f = HashReader {
+        inner: raw,
+        digest: fnv::OFFSET,
+        active: version == VERSION_ADAPTER_CK,
+    };
     let manifest = match version {
         VERSION => None,
-        VERSION_ADAPTER => {
+        VERSION_ADAPTER | VERSION_ADAPTER_CK => {
             let tenant_len = read_u32(&mut f, path, "tenant_len")? as usize;
             if tenant_len > MAX_TENANT_LEN {
                 bail!("{path:?}: tenant_len {tenant_len} exceeds cap \
@@ -284,6 +366,30 @@ fn load_impl(path: &Path)
             other => bail!("{path:?}: tensor {name:?} has bad dtype byte {other}"),
         };
         out.push((name, tensor));
+    }
+    if version == VERSION_ADAPTER_CK {
+        let computed = f.digest;
+        f.active = false; // the trailer is not part of its own digest
+        let mut trailer = [0u8; 8];
+        f.read_exact(&mut trailer).with_context(|| format!(
+            "{path:?}: reading payload checksum trailer (truncated file?)"))?;
+        let stored = u64::from_le_bytes(trailer);
+        if stored != computed {
+            bail!("{path:?}: payload checksum mismatch (stored \
+                   {stored:016x}, computed {computed:016x}) — corrupt or \
+                   tampered checkpoint");
+        }
+    }
+    // strict container: nothing may follow the last tensor (or the v3
+    // trailer). Without this, a corrupted version field could demote a
+    // checksummed file to the legacy format and skip verification with
+    // the trailer silently ignored.
+    let mut probe = [0u8; 1];
+    let extra = f.read(&mut probe)
+        .with_context(|| format!("{path:?}: probing for trailing bytes"))?;
+    if extra != 0 {
+        bail!("{path:?}: trailing bytes after the last tensor (corrupt \
+               header or truncated rewrite?)");
     }
     Ok((manifest, out))
 }
@@ -399,6 +505,80 @@ mod tests {
         assert!(stray.is_empty(), "{stray:?}");
         // and the previously-saved final file is untouched
         assert!(load_adapter(&path).is_ok());
+    }
+
+    #[test]
+    fn adapter_checksum_catches_any_single_byte_corruption() {
+        let dir = tdir("cksum");
+        let path = dir.join("a.qpck");
+        let m = AdapterManifest { tenant: "acme".into(), q: 3, n_layers: 1 };
+        let tensors = vec![
+            ("thetas".to_string(),
+             HostTensor::f32(vec![7], vec![0.5, -1.0, 0.25, 2.0, 0.0, 1.5, -0.125])),
+        ];
+        save_adapter(&path, &m, &tensors).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        assert!(load_adapter(&path).is_ok());
+        // flip one byte at a time across the whole file — header,
+        // manifest, tensor payload, trailer — and every flip must be
+        // caught (magic/version by their own checks, everything else by
+        // the FNV trailer, whose per-byte xor-multiply step is injective
+        // so a same-length substitution always changes the digest)
+        let bad_path = dir.join("bad.qpck");
+        for pos in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x20;
+            std::fs::write(&bad_path, &bad).unwrap();
+            assert!(load_adapter(&bad_path).is_err(),
+                    "byte flip at {pos} loaded successfully");
+        }
+        // and the pristine bytes still load
+        std::fs::write(&bad_path, &clean).unwrap();
+        assert!(load_adapter(&bad_path).is_ok());
+    }
+
+    #[test]
+    fn corrupt_payload_reports_a_checksum_mismatch() {
+        let dir = tdir("cksum_msg");
+        let path = dir.join("a.qpck");
+        let m = AdapterManifest { tenant: "acme".into(), q: 3, n_layers: 1 };
+        save_adapter(&path, &m, &[(
+            "thetas".to_string(),
+            HostTensor::f32(vec![4], vec![0.5; 4]),
+        )]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip a bit inside the theta payload (well past the header,
+        // before the 8-byte trailer)
+        let pos = bytes.len() - 12;
+        bytes[pos] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = load_adapter(&path).unwrap_err().to_string();
+        assert!(e.contains("payload checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn legacy_v2_adapter_without_trailer_still_loads() {
+        // hand-built v2 file: magic | version 2 | tenant "t" | q | L |
+        // count 0 — written before the integrity trailer existed
+        let dir = tdir("v2_legacy");
+        let path = dir.join("legacy.qpck");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION_ADAPTER.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b't');
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        let (m, tensors) = load_adapter(&path).unwrap();
+        assert_eq!(m, AdapterManifest { tenant: "t".into(), q: 3, n_layers: 1 });
+        assert!(tensors.is_empty());
+        // everything written today is v3 (checksummed)
+        let out = dir.join("fresh.qpck");
+        save_adapter(&out, &m, &[]).unwrap();
+        let bytes = std::fs::read(&out).unwrap();
+        assert_eq!(&bytes[4..8], &3u32.to_le_bytes());
     }
 
     #[test]

@@ -40,6 +40,22 @@
 //! any worker count: the same determinism contract the sweep engine
 //! makes.
 //!
+//! ## Durability model
+//!
+//! [`store`] makes the serving control plane's state durable: registry
+//! mutations (register / hot-swap / evict, with tenant, version, theta
+//! checksum and originating `QPCK` path) stream through a
+//! [`store::StateSink`] into a CRC-framed write-ahead log, periodically
+//! compacted into an atomic-rename snapshot. A server restarted with
+//! the same `--state-dir` recovers the same tenants at the same
+//! versions and serves byte-identical responses. fsync cadence is the
+//! [`store::Durability`] knob (`Buffered` = OS-crash-safe, `EveryN` /
+//! `Always` = power-cut-safe up to a bounded tail); recovery tolerates
+//! exactly one torn trailing WAL record and reports anything worse as a
+//! typed [`store::CorruptState`] error. The default
+//! [`store::NullSink`] keeps the purely in-RAM behavior — and the
+//! serving determinism guarantees — unchanged.
+//!
 //! All workers load artifacts through one shared
 //! [`runtime::exe_cache::ExeCache`]: parsed HLO protos are shared
 //! unconditionally, and on backends whose client tolerates concurrent
@@ -61,4 +77,5 @@ pub mod quantum;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod util;

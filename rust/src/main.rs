@@ -83,8 +83,10 @@ commands:
   serve-bench  [--workers N|auto] [--tenants N] [--requests N] [--seed S]
            [--skew F] [--qubits Q] [--layers L] [--max-batch N]
            [--max-wait-us N] [--mode fifo|timed] [--concurrency C]
-           [--rate RPS] [--cache-mb F] [--rate-rps F] [--burst F]
-           [--max-queue N] [--spool-dir PATH]
+           [--rate RPS] [--cache-mb F] [--tenant-quota-mb F]
+           [--rate-rps F] [--burst F] [--max-queue N]
+           [--admission-config FILE] [--spool-dir PATH]
+           [--state-dir PATH] [--durability buffered|always|N]
            multi-tenant adapter serving benchmark: seeded Zipf loadgen
            against the serve registry/scheduler (closed loop by default;
            --rate > 0 switches to open-loop arrivals and timed batching).
@@ -92,10 +94,21 @@ commands:
            admission rate (token bucket, capacity --burst; default one
            second's worth) and --max-queue caps global queue depth —
            overload sheds with per-tenant rejection counters in the
-           event log instead of growing the queue. --spool-dir starts a
-           watcher that hot-loads QPCK v2 adapter uploads dropped into
-           that directory (quarantining malformed ones to rejected/)
-           and evicts tenants whose files are deleted.
+           event log instead of growing the queue. --admission-config
+           FILE seeds rate/burst/queue-cap from a JSON file and
+           hot-reloads it live (spool-style stability window) without
+           dropping in-flight requests. --tenant-quota-mb caps any one
+           tenant's share of the materialization cache (its own LRU
+           entries recycle first; quota rejections are counted).
+           --spool-dir starts a watcher that hot-loads QPCK adapter
+           uploads dropped into that directory (quarantining malformed
+           or checksum-mismatched ones to rejected/) and evicts tenants
+           whose files are deleted. --state-dir makes registry state
+           durable: mutations append to a CRC-framed WAL (fsync cadence
+           per --durability: buffered, always, or every N appends),
+           compacted to a snapshot at session end; a restart with the
+           same --state-dir recovers every tenant at its recorded
+           version and serves byte-identical responses.
            fifo mode is byte-deterministic per seed at any --workers,
            rejections included (open-loop gaps advance a logical clock
            instead of sleeping); summary (p50/p95/p99, req/s, batch
@@ -379,8 +392,27 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--durability` values: `buffered` | `always` | a number N (fsync
+/// every N appends).
+fn parse_durability(v: &str) -> Result<quantum_peft::store::Durability> {
+    use quantum_peft::store::Durability;
+    match v {
+        "buffered" => Ok(Durability::Buffered),
+        "always" => Ok(Durability::Always),
+        n => {
+            let every: u64 = n.parse().with_context(|| format!(
+                "--durability expects buffered|always|<N>, got {v:?}"))?;
+            if every == 0 {
+                bail!("--durability 0 is ambiguous; use buffered or always");
+            }
+            Ok(Durability::EveryN(every))
+        }
+    }
+}
+
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use quantum_peft::serve::{self, BenchOpts, LoadSpec, ServeConfig};
+    use quantum_peft::serve::{self, AdmissionConfig, BenchOpts, LoadSpec,
+                              ServeConfig};
     let mut opts = BenchOpts::default();
     if let Some(v) = args.flags.get("workers") {
         opts.serve.workers = pool::parse_jobs_value(v).context("--workers")?;
@@ -424,21 +456,50 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         Some("timed") => false,
         Some(other) => bail!("--mode expects fifo|timed, got {other:?}"),
     };
+    // --admission-config seeds the initial limits from the file AND
+    // arms the hot-reload watcher on it; explicit --rate-rps/--burst/
+    // --max-queue flags still override the file's initial values
+    let mut burst_pinned = false;
+    if let Some(p) = args.flags.get("admission-config") {
+        // AdmissionReloadSpec::read records the file's pre-read
+        // signature, so an edit racing session startup still reloads
+        let (spec, text) = quantum_peft::serve::AdmissionReloadSpec::read(p)
+            .with_context(|| format!("--admission-config {p:?}"))?;
+        // only an explicit "burst" key pins the burst; a file-derived
+        // default re-derives if a CLI flag changes the rate below
+        let (cfg, pinned) = AdmissionConfig::from_json_spec(&text)
+            .with_context(|| format!("parse --admission-config {p:?}"))?;
+        serve_cfg.admission = cfg;
+        burst_pinned = pinned;
+        serve_cfg.admission_reload = Some(spec);
+    }
     if let Some(v) = args.flags.get("rate-rps") {
         serve_cfg.admission.rate_rps = v.parse().context("--rate-rps")?;
     }
-    match args.flags.get("burst") {
-        Some(v) => serve_cfg.admission.burst = v.parse().context("--burst")?,
-        // default burst: one second's worth of the sustained rate
-        None if serve_cfg.admission.rate_rps > 0.0 => {
-            serve_cfg.admission.burst = serve_cfg.admission.rate_rps.max(1.0);
-        }
-        None => {}
+    if let Some(v) = args.flags.get("burst") {
+        serve_cfg.admission.burst = v.parse().context("--burst")?;
+        burst_pinned = true;
+    }
+    // default burst: one second's worth of the final sustained rate,
+    // unless the file or a flag pinned an explicit value
+    if !burst_pinned && serve_cfg.admission.rate_rps > 0.0 {
+        serve_cfg.admission.burst = serve_cfg.admission.rate_rps.max(1.0);
     }
     if let Some(v) = args.flags.get("max-queue") {
         serve_cfg.admission.max_queue = v.parse().context("--max-queue")?;
     }
     opts.spool_dir = args.flags.get("spool-dir").map(std::path::PathBuf::from);
+    opts.state_dir = args.flags.get("state-dir").map(std::path::PathBuf::from);
+    if let Some(v) = args.flags.get("durability") {
+        if opts.state_dir.is_none() {
+            bail!("--durability needs --state-dir");
+        }
+        opts.durability = parse_durability(v)?;
+    }
+    if let Some(v) = args.flags.get("tenant-quota-mb") {
+        let mb: f64 = v.parse().context("--tenant-quota-mb")?;
+        opts.tenant_quota_bytes = (mb * (1 << 20) as f64) as usize;
+    }
     if let Some(v) = args.flags.get("cache-mb") {
         let mb: f64 = v.parse().context("--cache-mb")?;
         opts.cache_bytes = (mb * (1 << 20) as f64) as usize;

@@ -26,9 +26,17 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Instant, SystemTime};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::events::EventLog;
+use crate::util::json::Json;
+
+use super::spool::FileWatch;
 
 /// Why admission turned a request away.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,6 +100,68 @@ impl AdmissionConfig {
     pub fn enabled(&self) -> bool {
         self.rate_rps > 0.0 || self.max_queue > 0
     }
+
+    /// Parse the `--admission-config` file format: a JSON object with
+    /// optional `rate_rps`, `burst` and `max_queue` keys (`{}` disables
+    /// admission). An absent `burst` with a positive `rate_rps`
+    /// defaults to one second's worth of the rate, matching the
+    /// `--rate-rps` CLI behavior. Unknown keys are **errors**, not
+    /// ignored: a typo'd limit in a hot-reloaded file must never
+    /// silently disable admission control on a live server.
+    pub fn from_json(text: &str) -> Result<AdmissionConfig> {
+        Ok(AdmissionConfig::from_json_spec(text)?.0)
+    }
+
+    /// [`from_json`](AdmissionConfig::from_json) plus whether the file
+    /// *explicitly pinned* `burst` — the CLI needs this to decide if
+    /// the one-second's-worth default should re-derive after a
+    /// `--rate-rps` flag overrides the file's rate.
+    pub fn from_json_spec(text: &str) -> Result<(AdmissionConfig, bool)> {
+        let j = Json::parse(text).context("admission config is not valid JSON")?;
+        let obj = j.as_obj().context("admission config must be a JSON object")?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "rate_rps" | "burst" | "max_queue") {
+                bail!("admission config has unknown key {key:?} (expected \
+                       rate_rps, burst, max_queue)");
+            }
+        }
+        let mut cfg = AdmissionConfig::default();
+        if let Some(v) = j.opt("rate_rps") {
+            cfg.rate_rps = v.as_f64().context("admission config rate_rps")?;
+        }
+        if !cfg.rate_rps.is_finite() || cfg.rate_rps < 0.0 {
+            bail!("admission config rate_rps must be finite and >= 0, got {}",
+                  cfg.rate_rps);
+        }
+        let mut burst_pinned = false;
+        match j.opt("burst") {
+            Some(v) => {
+                cfg.burst = v.as_f64().context("admission config burst")?;
+                burst_pinned = true;
+            }
+            // default burst: one second's worth of the sustained rate
+            None if cfg.rate_rps > 0.0 => {
+                cfg.burst = cfg.rate_rps.max(1.0);
+            }
+            None => {}
+        }
+        if !cfg.burst.is_finite() || cfg.burst < 0.0 {
+            bail!("admission config burst must be finite and >= 0, got {}",
+                  cfg.burst);
+        }
+        if let Some(v) = j.opt("max_queue") {
+            // validate the raw number: as_usize would saturate a
+            // negative (sign typo) to 0 = "no queue cap", silently
+            // disabling protection on a live reload
+            let raw = v.as_f64().context("admission config max_queue")?;
+            if !raw.is_finite() || raw < 0.0 || raw.fract() != 0.0 {
+                bail!("admission config max_queue must be a non-negative \
+                       integer, got {raw}");
+            }
+            cfg.max_queue = raw as usize;
+        }
+        Ok((cfg, burst_pinned))
+    }
 }
 
 enum Clock {
@@ -125,6 +195,8 @@ pub struct AdmissionStats {
     pub enabled: bool,
     pub rate_rps: f64,
     pub max_queue: usize,
+    /// Hot-reloads applied over the controller's lifetime.
+    pub reloads: u64,
     pub admitted: u64,
     pub rejected_rate_limited: u64,
     pub rejected_queue_full: u64,
@@ -142,12 +214,17 @@ impl AdmissionStats {
 /// logical mode assumes what the server already guarantees: submissions
 /// arrive from one driving thread in a defined order.
 pub struct AdmissionController {
-    cfg: AdmissionConfig,
+    /// Live policy — behind an `RwLock` so
+    /// [`reconfigure`](Self::reconfigure) (the `--admission-config`
+    /// hot-reload path) can swap limits without touching in-flight
+    /// requests or per-tenant bucket history.
+    cfg: RwLock<AdmissionConfig>,
     clock: Clock,
     buckets: Mutex<BTreeMap<String, Bucket>>,
     admitted: AtomicU64,
     rejected_rate_limited: AtomicU64,
     rejected_queue_full: AtomicU64,
+    reloads: AtomicU64,
 }
 
 impl AdmissionController {
@@ -155,7 +232,7 @@ impl AdmissionController {
     /// [`advance`](Self::advance) calls; `false` uses wall time.
     pub fn new(cfg: AdmissionConfig, logical: bool) -> AdmissionController {
         AdmissionController {
-            cfg,
+            cfg: RwLock::new(cfg),
             clock: if logical {
                 Clock::Logical(Mutex::new(0.0))
             } else {
@@ -165,11 +242,27 @@ impl AdmissionController {
             admitted: AtomicU64::new(0),
             rejected_rate_limited: AtomicU64::new(0),
             rejected_queue_full: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
         }
     }
 
     pub fn enabled(&self) -> bool {
-        self.cfg.enabled()
+        self.cfg.read().unwrap().enabled()
+    }
+
+    /// The policy currently in force.
+    pub fn config(&self) -> AdmissionConfig {
+        *self.cfg.read().unwrap()
+    }
+
+    /// Swap the policy live. In-flight requests are untouched (admission
+    /// only ever runs at submit time), per-tenant bucket levels carry
+    /// over (a shrunken burst takes effect at the next refill, which
+    /// clamps tokens to the new cap), and counters keep accumulating
+    /// across the change.
+    pub fn reconfigure(&self, cfg: AdmissionConfig) {
+        *self.cfg.write().unwrap() = cfg;
+        self.reloads.fetch_add(1, Ordering::Relaxed);
     }
 
     fn now_s(&self) -> f64 {
@@ -193,11 +286,12 @@ impl AdmissionController {
     /// gauge (mode-dependent, see the module docs). On `Err` nothing was
     /// consumed except the rejection counter.
     pub fn try_admit(&self, tenant: &str, queue_depth: usize) -> Result<(), Rejected> {
-        if !self.cfg.enabled() {
+        let cfg = *self.cfg.read().unwrap();
+        if !cfg.enabled() {
             self.admitted.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
-        let burst = self.cfg.burst.max(1.0);
+        let burst = cfg.burst.max(1.0);
         let mut buckets = self.buckets.lock().unwrap();
         let now = self.now_s();
         let b = buckets.entry(tenant.to_string()).or_insert(Bucket {
@@ -207,7 +301,7 @@ impl AdmissionController {
             rejected_rate_limited: 0,
             rejected_queue_full: 0,
         });
-        if self.cfg.max_queue > 0 && queue_depth >= self.cfg.max_queue {
+        if cfg.max_queue > 0 && queue_depth >= cfg.max_queue {
             b.rejected_queue_full += 1;
             self.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
             return Err(Rejected {
@@ -215,9 +309,9 @@ impl AdmissionController {
                 reason: RejectReason::QueueFull,
             });
         }
-        if self.cfg.rate_rps > 0.0 {
+        if cfg.rate_rps > 0.0 {
             let dt = (now - b.last_s).max(0.0);
-            b.tokens = (b.tokens + dt * self.cfg.rate_rps).min(burst);
+            b.tokens = (b.tokens + dt * cfg.rate_rps).min(burst);
             b.last_s = now;
             if b.tokens < 1.0 {
                 b.rejected_rate_limited += 1;
@@ -235,11 +329,13 @@ impl AdmissionController {
     }
 
     pub fn stats(&self) -> AdmissionStats {
+        let cfg = *self.cfg.read().unwrap();
         let buckets = self.buckets.lock().unwrap();
         AdmissionStats {
-            enabled: self.cfg.enabled(),
-            rate_rps: self.cfg.rate_rps,
-            max_queue: self.cfg.max_queue,
+            enabled: cfg.enabled(),
+            rate_rps: cfg.rate_rps,
+            max_queue: cfg.max_queue,
+            reloads: self.reloads.load(Ordering::Relaxed),
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected_rate_limited: self.rejected_rate_limited.load(Ordering::Relaxed),
             rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
@@ -252,6 +348,103 @@ impl AdmissionController {
                     rejected_queue_full: b.rejected_queue_full,
                 })
                 .collect(),
+        }
+    }
+}
+
+// -------------------------------------------------------------- hot reload ---
+
+/// Where the hot-reload watcher polls, plus the (len, mtime) signature
+/// of the version the session was configured from. The baseline is
+/// captured when the file is **read** ([`AdmissionReloadSpec::read`]),
+/// not when the watcher starts: session startup (state recovery,
+/// populate) can take a while, and an edit landing in that window must
+/// be detected as a change, never silently counted as already applied.
+#[derive(Clone, Debug)]
+pub struct AdmissionReloadSpec {
+    pub path: PathBuf,
+    pub baseline: Option<(u64, SystemTime)>,
+}
+
+impl AdmissionReloadSpec {
+    /// Stat-then-read: returns the spec (baseline = the signature
+    /// observed *before* the read — an edit racing the read itself is
+    /// re-detected by the watcher rather than swallowed) and the file's
+    /// contents for the caller to parse.
+    pub fn read(path: impl Into<PathBuf>)
+                -> Result<(AdmissionReloadSpec, String)> {
+        let path = path.into();
+        let baseline = std::fs::metadata(&path)
+            .ok()
+            .filter(|md| md.is_file())
+            .map(|md| {
+                (md.len(),
+                 md.modified().unwrap_or(SystemTime::UNIX_EPOCH))
+            });
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read admission config {path:?}"))?;
+        Ok((AdmissionReloadSpec { path, baseline }, text))
+    }
+}
+
+/// The `--admission-config` hot-reload poller: a [`FileWatch`]
+/// stability window on the config file; each new stable version is
+/// parsed ([`AdmissionConfig::from_json`]) and applied to the live
+/// controller via [`AdmissionController::reconfigure`] — rate, burst
+/// and queue-cap changes take effect for the *next* submit, and no
+/// in-flight request is dropped or re-evaluated. A malformed file never
+/// kills serving: the current limits stay in force, the failure is
+/// logged (`serve_admission_reload_error`), and the watcher retries
+/// when the file changes again.
+///
+/// Note the trade: a reload arrives on wall-clock file polls, so runs
+/// that exercise it are not covered by the fifo byte-identity
+/// guarantee. Determinism suites simply do not use the watcher (or
+/// drive [`poll`](AdmissionReload::poll) explicitly, which is
+/// deterministic).
+pub struct AdmissionReload {
+    watch: FileWatch,
+    ctrl: Arc<AdmissionController>,
+    log: EventLog,
+}
+
+impl AdmissionReload {
+    /// `spec.baseline` — the version the session was configured from —
+    /// counts as already applied; only edits *after* that signature
+    /// reload (including any that landed while the session was still
+    /// starting up).
+    pub fn new(spec: AdmissionReloadSpec, ctrl: Arc<AdmissionController>,
+               log: EventLog) -> AdmissionReload {
+        AdmissionReload {
+            watch: FileWatch::starting_from(spec.path, spec.baseline),
+            ctrl,
+            log,
+        }
+    }
+
+    /// One poll; returns the newly applied config when a reload landed.
+    pub fn poll(&mut self) -> Option<AdmissionConfig> {
+        let bytes = self.watch.poll()?;
+        let text = String::from_utf8_lossy(&bytes);
+        let file = self.watch.path().display().to_string();
+        match AdmissionConfig::from_json(&text) {
+            Ok(cfg) => {
+                self.ctrl.reconfigure(cfg);
+                self.log.emit("serve_admission_reload", vec![
+                    ("file", file.as_str().into()),
+                    ("rate_rps", Json::Num(cfg.rate_rps)),
+                    ("burst", Json::Num(cfg.burst)),
+                    ("max_queue", cfg.max_queue.into()),
+                ]);
+                Some(cfg)
+            }
+            Err(e) => {
+                self.log.emit("serve_admission_reload_error", vec![
+                    ("file", file.as_str().into()),
+                    ("error", e.to_string().into()),
+                ]);
+                None
+            }
         }
     }
 }
@@ -375,6 +568,94 @@ mod tests {
         assert!(admitted_again, "wall bucket never refilled");
         // advance() is a documented no-op on a wall clock
         c.advance(1e9);
+    }
+
+    #[test]
+    fn config_parses_from_json_with_defaults_and_caps() {
+        let c = AdmissionConfig::from_json(
+            r#"{"rate_rps": 25.0, "burst": 5, "max_queue": 64}"#).unwrap();
+        assert_eq!((c.rate_rps, c.burst, c.max_queue), (25.0, 5.0, 64));
+        // absent keys fall back to defaults: {} disables admission
+        let c = AdmissionConfig::from_json("{}").unwrap();
+        assert!(!c.enabled());
+        let c = AdmissionConfig::from_json(r#"{"max_queue": 8}"#).unwrap();
+        assert!(c.enabled());
+        assert_eq!(c.rate_rps, 0.0);
+        // absent burst with a rate defaults to one second's worth —
+        // the same rule as the --rate-rps CLI flag
+        let c = AdmissionConfig::from_json(r#"{"rate_rps": 100}"#).unwrap();
+        assert_eq!(c.burst, 100.0);
+        let c = AdmissionConfig::from_json(r#"{"rate_rps": 0.5}"#).unwrap();
+        assert_eq!(c.burst, 1.0);
+        // from_json_spec reports whether burst was explicitly pinned
+        let (_, pinned) =
+            AdmissionConfig::from_json_spec(r#"{"burst": 3}"#).unwrap();
+        assert!(pinned);
+        let (_, pinned) =
+            AdmissionConfig::from_json_spec(r#"{"rate_rps": 9}"#).unwrap();
+        assert!(!pinned);
+        // malformed JSON and out-of-range values are errors
+        assert!(AdmissionConfig::from_json("not json").is_err());
+        assert!(AdmissionConfig::from_json(r#"{"rate_rps": -1}"#).is_err());
+        assert!(AdmissionConfig::from_json(r#"{"burst": -0.5}"#).is_err());
+        // a negative or fractional max_queue must error, not saturate
+        // to 0 (= cap disabled)
+        assert!(AdmissionConfig::from_json(r#"{"max_queue": -1}"#).is_err());
+        assert!(AdmissionConfig::from_json(r#"{"max_queue": 2.5}"#).is_err());
+        // a typo'd key must error, never silently disable limits; and
+        // the config must be an object
+        let e = AdmissionConfig::from_json(r#"{"rate": 50}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown key"), "{e}");
+        assert!(AdmissionConfig::from_json("[1, 2]").is_err());
+        assert!(AdmissionConfig::from_json("42").is_err());
+    }
+
+    #[test]
+    fn reconfigure_applies_live_without_resetting_counters() {
+        let c = AdmissionController::new(cfg(0.0, 1.0, 1), true);
+        c.try_admit("t", 0).unwrap();
+        assert!(c.try_admit("t", 1).is_err()); // queue cap 1
+        // raise the cap live: the same depth now admits
+        c.reconfigure(cfg(0.0, 1.0, 8));
+        c.try_admit("t", 1).unwrap();
+        // disable entirely: everything admits
+        c.reconfigure(AdmissionConfig::default());
+        c.try_admit("t", usize::MAX - 1).unwrap();
+        let s = c.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.rejected_queue_full, 1);
+        assert_eq!(s.reloads, 2);
+        assert!(!s.enabled);
+    }
+
+    #[test]
+    fn reload_poller_applies_stable_config_and_survives_garbage() {
+        let dir = std::env::temp_dir()
+            .join("qp_admission_reload")
+            .join(format!("unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("admission.json");
+        let ctrl = Arc::new(AdmissionController::new(cfg(0.0, 1.0, 1), true));
+        let spec =
+            AdmissionReloadSpec { path: path.clone(), baseline: None };
+        let mut reload =
+            AdmissionReload::new(spec, ctrl.clone(), EventLog::null());
+        // no file yet: nothing happens
+        assert!(reload.poll().is_none());
+        std::fs::write(&path, r#"{"max_queue": 32}"#).unwrap();
+        assert!(reload.poll().is_none()); // stability window arms
+        let applied = reload.poll().expect("stable config applies");
+        assert_eq!(applied.max_queue, 32);
+        assert_eq!(ctrl.config().max_queue, 32);
+        // garbage keeps the current limits in force
+        std::fs::write(&path, b"{ definitely not json").unwrap();
+        reload.poll();
+        assert!(reload.poll().is_none());
+        assert_eq!(ctrl.config().max_queue, 32);
+        assert_eq!(ctrl.stats().reloads, 1);
     }
 
     #[test]

@@ -23,10 +23,11 @@
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::events::EventLog;
 use crate::runtime::Runtime;
+use crate::store::{Durability, StateStore};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -112,7 +113,14 @@ impl Zipf {
     }
 }
 
-/// Register `tenants` seeded adapters (version 1 each). Returns the
+/// Register `tenants` seeded adapters (version 1 each), keeping any
+/// already-registered tenant whose live adapter is *exactly* what this
+/// seed would produce (same Pauli spec, same theta checksum) — which is
+/// what lets a `--state-dir` restart serve its recovered tenants at
+/// their recorded versions instead of hot-swapping every one of them.
+/// A tenant that exists with a different spec or different thetas
+/// (state dir from another seed or shape) is hot-swapped to this run's
+/// seeded adapter rather than silently served stale. Returns the
 /// per-tenant theta checksums so callers can verify responses came from
 /// consistent (version, params) pairs.
 pub fn populate(registry: &Registry, load: &LoadSpec) -> Result<Vec<u64>> {
@@ -127,8 +135,15 @@ pub fn populate(registry: &Registry, load: &LoadSpec) -> Result<Vec<u64>> {
         let thetas: Vec<f32> = (0..n_params)
             .map(|_| rng.normal() as f32 * 0.5)
             .collect();
-        checksums.push(theta_checksum(&thetas));
-        registry.register(&tenant_name(i), load.pauli, thetas)?;
+        let checksum = theta_checksum(&thetas);
+        checksums.push(checksum);
+        let name = tenant_name(i);
+        let already_live = registry.snapshot(&name)
+            .map(|snap| snap.spec == load.pauli && snap.checksum == checksum)
+            .unwrap_or(false);
+        if !already_live {
+            registry.register(&name, load.pauli, thetas)?;
+        }
     }
     Ok(checksums)
 }
@@ -250,9 +265,19 @@ pub struct BenchOpts {
     pub load: LoadSpec,
     pub serve: ServeConfig,
     pub cache_bytes: usize,
+    /// Per-tenant byte quota on the materialization cache (0 = off).
+    pub tenant_quota_bytes: usize,
     /// When set, a [`SpoolWatcher`] ingests adapter uploads from this
     /// directory for the duration of the bench (joined on exit).
     pub spool_dir: Option<std::path::PathBuf>,
+    /// When set, registry mutations are durable: the directory is
+    /// opened-or-recovered on startup (`--state-dir`), recovered tenants
+    /// are restored at their recorded versions before the seeded
+    /// populate runs, and the log is compacted into a snapshot at
+    /// session end.
+    pub state_dir: Option<std::path::PathBuf>,
+    /// WAL fsync cadence for `state_dir` (`--durability`).
+    pub durability: Durability,
 }
 
 impl Default for BenchOpts {
@@ -261,7 +286,10 @@ impl Default for BenchOpts {
             load: LoadSpec::default(),
             serve: ServeConfig::default(),
             cache_bytes: 8 << 20,
+            tenant_quota_bytes: 0,
             spool_dir: None,
+            state_dir: None,
+            durability: Durability::Buffered,
         }
     }
 }
@@ -287,7 +315,36 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
                (--rate > 0), or use --mode timed: the closed-loop fifo \
                driver never advances the logical admission clock");
     }
-    let registry = std::sync::Arc::new(Registry::new(opts.cache_bytes));
+    let mut registry = Registry::new(opts.cache_bytes)
+        .with_tenant_quota(opts.tenant_quota_bytes);
+    // open-or-recover the durable state store BEFORE populate: recovered
+    // tenants come back at their recorded versions (and byte-identical
+    // thetas), and populate skips them
+    let store = match &opts.state_dir {
+        Some(dir) => {
+            let opened = StateStore::open(dir, opts.durability)
+                .with_context(|| format!("open state dir {dir:?}"))?;
+            for ts in &opened.recovered.tenants {
+                registry.restore(ts).with_context(|| {
+                    format!("restoring recovered tenant {:?}", ts.tenant)
+                })?;
+            }
+            let r = &opened.recovered;
+            log.emit("serve_state_recovered", vec![
+                ("dir", dir.display().to_string().into()),
+                ("tenants", r.tenants.len().into()),
+                ("snapshot_entries", r.snapshot_entries.into()),
+                ("wal_records", Json::Num(r.wal_records as f64)),
+                ("last_seq", Json::Num(r.last_seq as f64)),
+                ("torn_tail", r.torn_tail.to_string().into()),
+            ]);
+            let store = std::sync::Arc::new(opened.store);
+            registry = registry.with_state_sink(store.clone());
+            Some(store)
+        }
+        None => None,
+    };
+    let registry = std::sync::Arc::new(registry);
     populate(&registry, &opts.load)?;
     let rt = Runtime::cpu()?;
     let mode = if opts.serve.fifo { "fifo" } else { "timed" };
@@ -313,6 +370,13 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
              .map(|p| p.display().to_string())
              .unwrap_or_default()
              .into()),
+        ("state_dir",
+         opts.state_dir.as_ref()
+             .map(|p| p.display().to_string())
+             .unwrap_or_default()
+             .into()),
+        ("durability", format!("{:?}", opts.durability).into()),
+        ("tenant_quota_bytes", opts.tenant_quota_bytes.into()),
     ]);
     let watcher = match &opts.spool_dir {
         Some(dir) => Some(SpoolWatcher::start(
@@ -332,6 +396,15 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
         w.shutdown();
     }
     let outcome = outcome?;
+    // session-end compaction: the next restart recovers from one
+    // snapshot instead of replaying the whole mutation history
+    if let Some(store) = &store {
+        registry.compact_into(store).context("compact state store")?;
+        log.emit("serve_state_compacted", vec![
+            ("tenants", registry.len().into()),
+            ("last_seq", Json::Num(store.last_seq() as f64)),
+        ]);
+    }
     Ok((outcome.summary, response_log(&outcome.body)))
 }
 

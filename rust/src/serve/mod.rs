@@ -38,6 +38,28 @@
 //! together, one seed yields a byte-identical response log *and
 //! rejection ledger* at any worker count, which is the property
 //! `tests/serve.rs` pins.
+//!
+//! ## Durability
+//!
+//! With a state sink attached
+//! ([`Registry::with_state_sink`](registry::Registry::with_state_sink),
+//! `repro serve-bench --state-dir`), every registry mutation — direct
+//! registration, spool ingest, hot-swap, eviction — is appended to the
+//! [`crate::store`] write-ahead log *before* it applies (so RAM never
+//! runs ahead of the log), and compacted into a snapshot at session
+//! end. What is durable: tenant identity, version, Pauli shape, theta
+//! payload + checksum, and the originating `QPCK` path. When fsync
+//! happens is the [`crate::store::Durability`] knob: `Buffered` is
+//! process-crash-safe (OS page cache), `EveryN`/`Always` shrink the
+//! power-cut loss window to a bounded tail. On restart, recovery
+//! replays snapshot + WAL tail: a single *torn trailing record* (a
+//! crash mid-append) is expected, tolerated and truncated away — the
+//! restart simply doesn't know about the one mutation whose append
+//! never completed; anything worse is a typed
+//! [`crate::store::CorruptState`] error. A recovered server serves the
+//! surviving tenants at their recorded versions with byte-identical
+//! responses (`tests/store.rs` pins this with a crash-injection
+//! matrix).
 
 pub mod admission;
 pub mod loadgen;
@@ -47,7 +69,8 @@ pub mod server;
 pub mod spool;
 
 pub use admission::{
-    AdmissionConfig, AdmissionController, AdmissionStats, RejectReason, Rejected,
+    AdmissionConfig, AdmissionController, AdmissionReload,
+    AdmissionReloadSpec, AdmissionStats, RejectReason, Rejected,
 };
 pub use loadgen::{run_serve_bench, BenchOpts, LoadSpec};
 pub use registry::{AdapterVersion, CacheStats, EvictAttempt, PauliSpec, Registry};
@@ -56,4 +79,4 @@ pub use server::{
     serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle,
     STRUCTURED_APPLY_MIN_Q,
 };
-pub use spool::{Spool, SpoolConfig, SpoolStats, SpoolWatcher};
+pub use spool::{FileWatch, Spool, SpoolConfig, SpoolStats, SpoolWatcher};

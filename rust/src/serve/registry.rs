@@ -21,6 +21,25 @@
 //! [`Registry::evict_tenant`] refuses outright while requests are in
 //! flight, so eviction can temporarily overshoot the byte budget rather
 //! than ever dropping live work.
+//!
+//! Fairness: [`Registry::with_tenant_quota`] bounds how many cache
+//! bytes any one tenant may occupy. A tenant over its quota recycles
+//! its *own* least-recently-used entries first (in-flight users hold
+//! their own `Arc`s, so dropping the cache's copy never breaks live
+//! work); a single materialization that alone busts the quota is served
+//! but not retained, counted in [`CacheStats::quota_rejections`]. One
+//! hot tenant can therefore no longer evict everyone else.
+//!
+//! Durability: every successful mutation (register, hot-swap, evict)
+//! is emitted through a [`StateSink`] *before* it is applied —
+//! write-ahead discipline — under the registry's write lock, so the
+//! log order is the mutation order. The default [`NullSink`] keeps the
+//! registry purely in-RAM (and byte-identical to its pre-durability
+//! behavior); [`Registry::with_state_sink`] attaches a
+//! [`crate::store::StateStore`], and [`Registry::restore`] replays
+//! recovered [`TenantState`]s back in — at their recorded versions,
+//! without re-emitting — so a restarted server serves the same tenants
+//! at the same versions.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -31,11 +50,20 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::checkpoint::{self, AdapterManifest};
 use crate::quantum::pauli;
 use crate::runtime::exe_cache::OnceMap;
+use crate::store::{NullSink, StateLogFailed, StateRecord, StateSink,
+                   TenantState};
 
 /// Largest supported circuit: q = 12 is a 4096-dim Q_P (64 MiB dense) —
 /// far beyond the adapter sizes the paper uses, small enough that a
 /// hostile manifest cannot request a multi-GiB materialization.
 pub const MAX_QUBITS: u32 = 12;
+
+/// Deepest supported circuit: generous headroom over the paper's L <= 3
+/// while keeping a hostile manifest or state record from driving
+/// `pauli::build` (which loops `n_layers` times allocating 2^q-element
+/// sign vectors) into billions of iterations. Checked *before* anything
+/// calls [`PauliSpec::num_params`].
+pub const MAX_LAYERS: u32 = 4096;
 
 /// Pauli circuit shape an adapter parameterizes (eq. 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,17 +92,18 @@ pub struct AdapterVersion {
     pub spec: PauliSpec,
     pub thetas: Arc<Vec<f32>>,
     pub checksum: u64,
+    /// Originating `QPCK` path ("" for programmatic registrations) —
+    /// carried into durable state records as provenance.
+    pub origin: String,
 }
 
-/// FNV-1a over the LE bytes of a theta vector — the adapter identity
-/// digest stamped into [`AdapterVersion::checksum`] and responses.
+/// FNV-1a ([`crate::util::fnv`]) over the LE bytes of a theta vector —
+/// the adapter identity digest stamped into [`AdapterVersion::checksum`],
+/// responses, and durable state records.
 pub fn theta_checksum(thetas: &[f32]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut h = crate::util::fnv::OFFSET;
     for t in thetas {
-        for b in t.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
+        h = crate::util::fnv::update(h, &t.to_le_bytes());
     }
     h
 }
@@ -82,6 +111,20 @@ pub fn theta_checksum(thetas: &[f32]) -> u64 {
 struct TenantSlot {
     current: Mutex<Arc<AdapterVersion>>,
     inflight: AtomicUsize,
+}
+
+/// One slot's durable state (what a snapshot persists for it).
+fn slot_state(name: &str, slot: &TenantSlot) -> TenantState {
+    let cur = slot.current.lock().unwrap();
+    TenantState {
+        tenant: name.to_string(),
+        version: cur.version,
+        q: cur.spec.q,
+        n_layers: cur.spec.n_layers,
+        checksum: cur.checksum,
+        path: cur.origin.clone(),
+        thetas: cur.thetas.as_ref().clone(),
+    }
 }
 
 /// Admission token for one in-flight request: holds the tenant's
@@ -116,8 +159,13 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Materializations served but not retained because the tenant's
+    /// byte quota could not accommodate them.
+    pub quota_rejections: u64,
     pub bytes: usize,
     pub capacity_bytes: usize,
+    /// Per-tenant byte quota (0 = unlimited).
+    pub per_tenant_quota_bytes: usize,
     pub entries: usize,
 }
 
@@ -135,22 +183,43 @@ type MatKey = (String, u64, u64);
 
 struct MatInner {
     entries: HashMap<MatKey, MatEntry>,
+    /// Cached bytes per tenant — the quota's accounting.
+    tenant_bytes: HashMap<String, usize>,
     bytes: usize,
     tick: u64,
 }
 
-/// LRU cache of dense Q_P materializations, bounded in bytes. Keyed by
-/// [`MatKey`] so a hot-swap naturally ages the old version out instead
-/// of serving stale matrices. Concurrent first touches of one key
-/// deduplicate in flight (reusing the compile cache's [`OnceMap`]):
-/// one worker materializes, the others block and share the result.
+impl MatInner {
+    /// Remove an entry, keeping both byte ledgers exact.
+    fn remove_entry(&mut self, key: &MatKey) {
+        if let Some(e) = self.entries.remove(key) {
+            self.bytes -= e.bytes;
+            if let Some(tb) = self.tenant_bytes.get_mut(&key.0) {
+                *tb = tb.saturating_sub(e.bytes);
+                if *tb == 0 {
+                    self.tenant_bytes.remove(&key.0);
+                }
+            }
+        }
+    }
+}
+
+/// LRU cache of dense Q_P materializations, bounded in bytes globally
+/// and (optionally) per tenant. Keyed by [`MatKey`] so a hot-swap
+/// naturally ages the old version out instead of serving stale
+/// matrices. Concurrent first touches of one key deduplicate in flight
+/// (reusing the compile cache's [`OnceMap`]): one worker materializes,
+/// the others block and share the result.
 struct MatCache {
     inner: Mutex<MatInner>,
     inflight: OnceMap<MatKey, Arc<Vec<f32>>>,
     capacity_bytes: usize,
+    /// Max cached bytes for any one tenant; 0 = unlimited.
+    per_tenant_quota: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    quota_rejections: AtomicU64,
 }
 
 impl MatCache {
@@ -158,14 +227,17 @@ impl MatCache {
         MatCache {
             inner: Mutex::new(MatInner {
                 entries: HashMap::new(),
+                tenant_bytes: HashMap::new(),
                 bytes: 0,
                 tick: 0,
             }),
             inflight: OnceMap::new(),
             capacity_bytes,
+            per_tenant_quota: 0,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            quota_rejections: AtomicU64::new(0),
         }
     }
 
@@ -218,8 +290,45 @@ impl MatCache {
             MatEntry { mat: mat.clone(), bytes, last_used: tick },
         ) {
             inner.bytes -= old.bytes;
+            if let Some(tb) = inner.tenant_bytes.get_mut(&key.0) {
+                *tb = tb.saturating_sub(old.bytes);
+            }
         }
         inner.bytes += bytes;
+        *inner.tenant_bytes.entry(key.0.clone()).or_insert(0) += bytes;
+        // per-tenant quota: an over-quota tenant recycles its OWN
+        // least-recently-used entries first — never a neighbor's. The
+        // in-flight pin is deliberately not consulted here: the pin
+        // exists to stop cross-tenant thrashing, while a tenant over its
+        // own budget is trading its own oldest entry (any live user
+        // holds its own Arc, so nothing in flight breaks). An entry that
+        // alone busts the quota is rejected *up front* — served but not
+        // retained — so it can never flush the tenant's warm entries on
+        // its way to an inevitable rejection.
+        if self.per_tenant_quota > 0 {
+            if bytes > self.per_tenant_quota {
+                inner.remove_entry(key);
+                self.quota_rejections.fetch_add(1, Ordering::Relaxed);
+            } else {
+                while inner.tenant_bytes.get(&key.0).copied().unwrap_or(0)
+                    > self.per_tenant_quota
+                {
+                    let victim = inner.entries.iter()
+                        .filter(|(k, _)| k.0 == key.0 && *k != key)
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone());
+                    match victim {
+                        Some(k) => {
+                            inner.remove_entry(&k);
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // unreachable in practice: the new entry fits the
+                        // quota, so an over-quota tenant has older entries
+                        None => break,
+                    }
+                }
+            }
+        }
         while inner.bytes > self.capacity_bytes {
             let victim = inner.entries.iter()
                 .filter(|(k, _)| !pinned(&k.0))
@@ -227,9 +336,7 @@ impl MatCache {
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
-                    if let Some(e) = inner.entries.remove(&k) {
-                        inner.bytes -= e.bytes;
-                    }
+                    inner.remove_entry(&k);
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 // everything left is pinned by in-flight requests:
@@ -246,10 +353,9 @@ impl MatCache {
             .cloned()
             .collect();
         for k in keys {
-            if let Some(e) = inner.entries.remove(&k) {
-                inner.bytes -= e.bytes;
-            }
+            inner.remove_entry(&k);
         }
+        inner.tenant_bytes.remove(tenant);
         self.inflight.remove_where(|k| k.0 == tenant);
     }
 
@@ -259,8 +365,10 @@ impl MatCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            quota_rejections: self.quota_rejections.load(Ordering::Relaxed),
             bytes: inner.bytes,
             capacity_bytes: self.capacity_bytes,
+            per_tenant_quota_bytes: self.per_tenant_quota,
             entries: inner.entries.len(),
         }
     }
@@ -274,6 +382,10 @@ impl MatCache {
 pub struct Registry {
     tenants: RwLock<BTreeMap<String, Arc<TenantSlot>>>,
     cache: MatCache,
+    /// Durable mutation log (write-ahead: appended under the tenants
+    /// write lock, *before* the mutation applies). [`NullSink`] by
+    /// default.
+    sink: Arc<dyn StateSink>,
 }
 
 impl Registry {
@@ -283,7 +395,24 @@ impl Registry {
         Registry {
             tenants: RwLock::new(BTreeMap::new()),
             cache: MatCache::new(cache_capacity_bytes),
+            sink: Arc::new(NullSink),
         }
+    }
+
+    /// Bound any one tenant's share of the materialization cache
+    /// (0 = unlimited, the default). Builder-style: call before serving.
+    pub fn with_tenant_quota(mut self, quota_bytes: usize) -> Registry {
+        self.cache.per_tenant_quota = quota_bytes;
+        self
+    }
+
+    /// Attach a durable mutation sink (typically a
+    /// [`crate::store::StateStore`]). Builder-style: call before
+    /// serving, after [`Registry::restore`]-ing any recovered state —
+    /// restores must not re-append to the log they came from.
+    pub fn with_state_sink(mut self, sink: Arc<dyn StateSink>) -> Registry {
+        self.sink = sink;
+        self
     }
 
     /// Register (tenant absent) or hot-swap (tenant present) an adapter.
@@ -291,12 +420,26 @@ impl Registry {
     /// slot is touched: a bad upload can never leave a tenant broken.
     pub fn register(&self, tenant: &str, spec: PauliSpec, thetas: Vec<f32>)
                     -> Result<u64> {
+        self.register_from(tenant, spec, thetas, "")
+    }
+
+    /// [`register`](Registry::register) with provenance: `origin` is the
+    /// `QPCK` path the adapter came from ("" for programmatic
+    /// registrations), stamped into the durable state record. The WAL
+    /// record is appended before the slot mutates (write-ahead), so a
+    /// sink failure leaves the registry untouched.
+    pub fn register_from(&self, tenant: &str, spec: PauliSpec,
+                         thetas: Vec<f32>, origin: &str) -> Result<u64> {
         if tenant.is_empty() {
             bail!("empty tenant id");
         }
         if spec.q < 1 || spec.q > MAX_QUBITS {
             bail!("tenant {tenant:?}: q={} outside supported range 1..={}",
                   spec.q, MAX_QUBITS);
+        }
+        if spec.n_layers > MAX_LAYERS {
+            bail!("tenant {tenant:?}: n_layers={} exceeds cap {MAX_LAYERS}",
+                  spec.n_layers);
         }
         let want = spec.num_params();
         if thetas.len() != want {
@@ -305,22 +448,48 @@ impl Registry {
                   thetas.len(), spec.q, spec.n_layers);
         }
         let checksum = theta_checksum(&thetas);
+        let state = |version: u64, thetas: &Vec<f32>| TenantState {
+            tenant: tenant.to_string(),
+            version,
+            q: spec.q,
+            n_layers: spec.n_layers,
+            checksum,
+            path: origin.to_string(),
+            thetas: thetas.clone(),
+        };
         let mut tenants = self.tenants.write().unwrap();
         match tenants.get(tenant) {
             Some(slot) => {
                 let mut cur = slot.current.lock().unwrap();
                 let version = cur.version + 1;
+                if self.sink.wants_records() {
+                    self.sink
+                        .record(&StateRecord::Swap(state(version, &thetas)))
+                        .map_err(|e| StateLogFailed {
+                            tenant: tenant.to_string(),
+                            detail: e.to_string(),
+                        })?;
+                }
                 *cur = Arc::new(AdapterVersion {
                     tenant: tenant.to_string(),
                     version,
                     spec,
                     thetas: Arc::new(thetas),
                     checksum,
+                    origin: origin.to_string(),
                 });
                 Ok(version)
             }
             None => {
                 let version = 1;
+                if self.sink.wants_records() {
+                    self.sink
+                        .record(&StateRecord::Register(state(version, &thetas)))
+                        .map_err(|e| StateLogFailed {
+                            tenant: tenant.to_string(),
+                            detail: e.to_string(),
+                        })?;
+                }
                 tenants.insert(tenant.to_string(), Arc::new(TenantSlot {
                     current: Mutex::new(Arc::new(AdapterVersion {
                         tenant: tenant.to_string(),
@@ -328,6 +497,7 @@ impl Registry {
                         spec,
                         thetas: Arc::new(thetas),
                         checksum,
+                        origin: origin.to_string(),
                     })),
                     inflight: AtomicUsize::new(0),
                 }));
@@ -336,9 +506,83 @@ impl Registry {
         }
     }
 
-    /// Load a v2 `QPCK` adapter checkpoint and register it under the
-    /// tenant named in its manifest. Shape is validated from the manifest
-    /// before anything is materialized.
+    /// Re-install one recovered [`TenantState`] at its *recorded*
+    /// version (the recovery half of the durability contract; see
+    /// [`mod@crate::store::recover`]). Validates shape and re-verifies
+    /// the
+    /// theta checksum; does **not** emit to the state sink — the record
+    /// being restored is already in the log. Call before
+    /// [`Registry::with_state_sink`] attaches the store.
+    pub fn restore(&self, ts: &TenantState) -> Result<u64> {
+        let spec = PauliSpec { q: ts.q, n_layers: ts.n_layers };
+        if ts.tenant.is_empty() {
+            bail!("recovered state has an empty tenant id");
+        }
+        if ts.q < 1 || ts.q > MAX_QUBITS {
+            bail!("recovered tenant {:?}: q={} outside supported range 1..={}",
+                  ts.tenant, ts.q, MAX_QUBITS);
+        }
+        if ts.n_layers > MAX_LAYERS {
+            bail!("recovered tenant {:?}: n_layers={} exceeds cap {MAX_LAYERS}",
+                  ts.tenant, ts.n_layers);
+        }
+        let want = spec.num_params();
+        if ts.thetas.len() != want {
+            bail!("recovered tenant {:?}: {} thetas but (q={}, L={}) takes \
+                   {want}", ts.tenant, ts.thetas.len(), ts.q, ts.n_layers);
+        }
+        let computed = theta_checksum(&ts.thetas);
+        if computed != ts.checksum {
+            bail!("recovered tenant {:?}: theta checksum mismatch (recorded \
+                   {:016x}, computed {computed:016x})", ts.tenant, ts.checksum);
+        }
+        let adapter = Arc::new(AdapterVersion {
+            tenant: ts.tenant.clone(),
+            version: ts.version,
+            spec,
+            thetas: Arc::new(ts.thetas.clone()),
+            checksum: ts.checksum,
+            origin: ts.path.clone(),
+        });
+        let mut tenants = self.tenants.write().unwrap();
+        match tenants.get(&ts.tenant) {
+            Some(slot) => *slot.current.lock().unwrap() = adapter,
+            None => {
+                tenants.insert(ts.tenant.clone(), Arc::new(TenantSlot {
+                    current: Mutex::new(adapter),
+                    inflight: AtomicUsize::new(0),
+                }));
+            }
+        }
+        Ok(ts.version)
+    }
+
+    /// Every tenant's durable state, sorted by tenant name — what a
+    /// snapshot compaction persists.
+    pub fn export_state(&self) -> Vec<TenantState> {
+        let tenants = self.tenants.read().unwrap();
+        tenants.iter()
+            .map(|(name, slot)| slot_state(name, slot))
+            .collect()
+    }
+
+    /// Compact the attached store's WAL into a snapshot of this
+    /// registry's live state. Holds the registry write lock for the
+    /// duration, so the snapshot and its last-sequence pin are captured
+    /// atomically with respect to concurrent mutations (both this and
+    /// [`register`](Registry::register) take registry-lock-then-WAL-lock,
+    /// so there is no ordering inversion).
+    pub fn compact_into(&self, store: &crate::store::StateStore) -> Result<()> {
+        let tenants = self.tenants.write().unwrap();
+        let entries: Vec<TenantState> = tenants.iter()
+            .map(|(name, slot)| slot_state(name, slot))
+            .collect();
+        store.compact(&entries)
+    }
+
+    /// Load a `QPCK` adapter checkpoint (v2 legacy or v3 checksummed)
+    /// and register it under the tenant named in its manifest. Shape is
+    /// validated from the manifest before anything is materialized.
     pub fn load_checkpoint(&self, path: &std::path::Path) -> Result<(String, u64)> {
         let (manifest, tensors) = checkpoint::load_adapter(path)
             .with_context(|| format!("loading adapter checkpoint {path:?}"))?;
@@ -347,6 +591,10 @@ impl Registry {
         if q < 1 || q > MAX_QUBITS {
             bail!("{path:?}: manifest q={q} outside supported range 1..={}",
                   MAX_QUBITS);
+        }
+        if n_layers > MAX_LAYERS {
+            bail!("{path:?}: manifest n_layers={n_layers} exceeds cap \
+                   {MAX_LAYERS}");
         }
         let thetas = tensors.iter()
             .find(|(name, _)| name == "thetas")
@@ -358,7 +606,9 @@ impl Registry {
             bail!("{path:?}: manifest (q={q}, L={n_layers}) implies {want} \
                    thetas but the tensor holds {}", data.len());
         }
-        let version = self.register(&tenant, spec, data.to_vec())?;
+        let origin = path.display().to_string();
+        let version =
+            self.register_from(&tenant, spec, data.to_vec(), &origin)?;
         Ok((tenant, version))
     }
 
@@ -398,7 +648,7 @@ impl Registry {
     /// Remove a tenant and purge its materializations. Refuses while the
     /// tenant has in-flight requests — eviction never drops live work.
     pub fn evict_tenant(&self, tenant: &str) -> Result<()> {
-        match self.try_evict_tenant(tenant) {
+        match self.try_evict_tenant(tenant)? {
             EvictAttempt::Evicted => Ok(()),
             EvictAttempt::Deferred(inflight) => {
                 bail!("tenant {tenant:?} has {inflight} in-flight request(s); \
@@ -410,16 +660,26 @@ impl Registry {
 
     /// Non-erroring eviction probe (the spool watcher's deletion path):
     /// evict now if possible, report in-flight pins as a retryable
-    /// deferral, and an absent tenant as already gone.
-    pub fn try_evict_tenant(&self, tenant: &str) -> EvictAttempt {
+    /// deferral, and an absent tenant as already gone. `Err` means the
+    /// durable eviction record could not be appended — the tenant stays
+    /// live (RAM never diverges ahead of the log).
+    pub fn try_evict_tenant(&self, tenant: &str) -> Result<EvictAttempt> {
         {
             let mut tenants = self.tenants.write().unwrap();
             let Some(slot) = tenants.get(tenant) else {
-                return EvictAttempt::Unknown;
+                return Ok(EvictAttempt::Unknown);
             };
             let inflight = slot.inflight.load(Ordering::Acquire);
             if inflight > 0 {
-                return EvictAttempt::Deferred(inflight);
+                return Ok(EvictAttempt::Deferred(inflight));
+            }
+            if self.sink.wants_records() {
+                self.sink
+                    .record(&StateRecord::Evict { tenant: tenant.to_string() })
+                    .map_err(|e| StateLogFailed {
+                        tenant: tenant.to_string(),
+                        detail: e.to_string(),
+                    })?;
             }
             tenants.remove(tenant);
         }
@@ -427,7 +687,7 @@ impl Registry {
         // pin check takes the tenant lock, so nesting the other way
         // around would be a lock-order inversion
         self.cache.purge_tenant(tenant);
-        EvictAttempt::Evicted
+        Ok(EvictAttempt::Evicted)
     }
 
     pub fn tenant_names(&self) -> Vec<String> {
@@ -509,6 +769,7 @@ mod tests {
         let s = reg.cache_stats();
         assert_eq!((s.hits, s.misses, s.evictions), (1, 4, 2), "{s:?}");
         assert!(s.bytes <= s.capacity_bytes, "{s:?}");
+        assert_eq!(s.quota_rejections, 0, "{s:?}");
     }
 
     #[test]
@@ -547,6 +808,105 @@ mod tests {
         assert_eq!(s.entries, 1);
         assert!(s.bytes <= s.capacity_bytes, "{s:?}");
         assert!(reg.snapshot("pinned").is_err());
+    }
+
+    #[test]
+    fn tenant_quota_recycles_own_entries_not_neighbors() {
+        let spec = PauliSpec { q: 4, n_layers: 1 }; // 1 KiB dense each
+        let one = 16 * 16 * 4;
+        // global room for four matrices, but no tenant may hold more
+        // than one of them
+        let reg = Registry::new(4 * one).with_tenant_quota(one);
+        reg.register("hot", spec, thetas_for(spec, 0.1)).unwrap();
+        reg.register("cold", spec, thetas_for(spec, 0.2)).unwrap();
+        let cold = reg.snapshot("cold").unwrap();
+        reg.materialized(&cold).unwrap(); // miss: cold cached
+        let hot1 = reg.snapshot("hot").unwrap();
+        reg.materialized(&hot1).unwrap(); // miss: hot v1 cached
+        // hot-swap; the new generation's materialization must push out
+        // hot's OWN v1 entry, never cold's
+        reg.register("hot", spec, thetas_for(spec, 0.9)).unwrap();
+        let hot2 = reg.snapshot("hot").unwrap();
+        reg.materialized(&hot2).unwrap(); // miss: evicts hot v1 by quota
+        let s = reg.cache_stats();
+        assert_eq!((s.misses, s.evictions, s.quota_rejections), (3, 1, 0),
+                   "{s:?}");
+        assert_eq!(s.entries, 2, "{s:?}");
+        reg.materialized(&cold).unwrap(); // cold survived: hit
+        reg.materialized(&hot2).unwrap(); // hot v2 cached: hit
+        let s = reg.cache_stats();
+        assert_eq!(s.hits, 2, "{s:?}");
+        // hot v1 is gone: re-materializing it is a fresh miss (and
+        // recycles v2, keeping the tenant at its quota)
+        reg.materialized(&hot1).unwrap();
+        let s = reg.cache_stats();
+        assert_eq!((s.misses, s.evictions), (4, 2), "{s:?}");
+        assert_eq!(s.entries, 2, "{s:?}");
+    }
+
+    #[test]
+    fn entry_larger_than_quota_is_served_uncached() {
+        let spec = PauliSpec { q: 4, n_layers: 1 };
+        let one = 16 * 16 * 4;
+        // quota below a single materialization: serve, don't retain
+        let reg = Registry::new(4 * one).with_tenant_quota(one - 1);
+        reg.register("t", spec, thetas_for(spec, 0.5)).unwrap();
+        let snap = reg.snapshot("t").unwrap();
+        let m1 = reg.materialized(&snap).unwrap();
+        let s = reg.cache_stats();
+        assert_eq!((s.misses, s.quota_rejections, s.entries), (1, 1, 0),
+                   "{s:?}");
+        assert_eq!(s.bytes, 0, "{s:?}");
+        // next request misses again (nothing was retained) but still
+        // serves the right matrix
+        let m2 = reg.materialized(&snap).unwrap();
+        assert_eq!(m1.as_slice(), m2.as_slice());
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses, s.quota_rejections), (0, 2, 2), "{s:?}");
+    }
+
+    #[test]
+    fn oversized_entry_rejection_spares_existing_warm_entries() {
+        let small = PauliSpec { q: 3, n_layers: 1 }; // 8x8x4 = 256 B dense
+        let big = PauliSpec { q: 4, n_layers: 1 }; // 16x16x4 = 1 KiB dense
+        let reg = Registry::new(1 << 20).with_tenant_quota(512);
+        reg.register("t", small, thetas_for(small, 0.1)).unwrap();
+        let s_snap = reg.snapshot("t").unwrap();
+        reg.materialized(&s_snap).unwrap(); // 256 B cached, under quota
+        // hot-swap to a shape whose matrix alone busts the quota: it is
+        // served uncached WITHOUT flushing the warm 256 B entry first
+        reg.register("t", big, thetas_for(big, 0.2)).unwrap();
+        let b_snap = reg.snapshot("t").unwrap();
+        reg.materialized(&b_snap).unwrap();
+        let s = reg.cache_stats();
+        assert_eq!((s.misses, s.evictions, s.quota_rejections), (2, 0, 1),
+                   "{s:?}");
+        assert_eq!(s.entries, 1, "oversized entry flushed the warm cache: {s:?}");
+        // the old generation's entry is still warm
+        reg.materialized(&s_snap).unwrap();
+        assert_eq!(reg.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn layer_cap_rejects_hostile_depth_before_building_anything() {
+        let reg = Registry::new(1 << 20);
+        let deep = PauliSpec { q: 3, n_layers: u32::MAX };
+        // must fail fast on the cap — not iterate u32::MAX layers inside
+        // pauli::build on the way to a theta-count mismatch
+        let e = reg.register("t", deep, vec![0.0; 8]).unwrap_err().to_string();
+        assert!(e.contains("exceeds cap"), "{e}");
+        let thetas = vec![0.5; 7];
+        let e = reg.restore(&TenantState {
+            tenant: "t".into(),
+            version: 1,
+            q: 3,
+            n_layers: u32::MAX,
+            checksum: theta_checksum(&thetas),
+            path: String::new(),
+            thetas,
+        }).unwrap_err().to_string();
+        assert!(e.contains("exceeds cap"), "{e}");
+        assert!(reg.is_empty());
     }
 
     #[test]
@@ -594,6 +954,8 @@ mod tests {
         let snap = reg.snapshot("acme").unwrap();
         assert_eq!(snap.thetas.as_slice(), thetas.as_slice());
         assert_eq!(snap.checksum, theta_checksum(&thetas));
+        // provenance: the originating checkpoint path is recorded
+        assert_eq!(snap.origin, path.display().to_string());
         // manifest/tensor shape mismatch is caught before materialization
         let bad = dir.join("bad.qpck");
         let m2 = AdapterManifest { tenant: "acme".into(), q: 6, n_layers: 2 };
@@ -603,5 +965,117 @@ mod tests {
         )]).unwrap();
         let e = reg.load_checkpoint(&bad).unwrap_err().to_string();
         assert!(e.contains("implies"), "{e}");
+    }
+
+    // ------------------------------------------------------ state sink ---
+
+    /// Recording sink for tests: remembers every record, optionally
+    /// failing to prove the write-ahead ordering.
+    struct RecordingSink {
+        records: Mutex<Vec<StateRecord>>,
+        fail: std::sync::atomic::AtomicBool,
+    }
+
+    impl RecordingSink {
+        fn new() -> Arc<RecordingSink> {
+            Arc::new(RecordingSink {
+                records: Mutex::new(Vec::new()),
+                fail: std::sync::atomic::AtomicBool::new(false),
+            })
+        }
+    }
+
+    impl StateSink for RecordingSink {
+        fn record(&self, rec: &StateRecord) -> Result<()> {
+            if self.fail.load(Ordering::Relaxed) {
+                bail!("sink down");
+            }
+            self.records.lock().unwrap().push(rec.clone());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn mutations_emit_state_records_in_order() {
+        let sink = RecordingSink::new();
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        let reg = Registry::new(1 << 20).with_state_sink(sink.clone());
+        reg.register("a", spec, thetas_for(spec, 0.1)).unwrap();
+        reg.register("a", spec, thetas_for(spec, 0.2)).unwrap();
+        reg.register("b", spec, thetas_for(spec, 0.3)).unwrap();
+        reg.evict_tenant("b").unwrap();
+        let recs = sink.records.lock().unwrap();
+        assert_eq!(recs.len(), 4);
+        match (&recs[0], &recs[1], &recs[2], &recs[3]) {
+            (
+                StateRecord::Register(r0),
+                StateRecord::Swap(r1),
+                StateRecord::Register(r2),
+                StateRecord::Evict { tenant },
+            ) => {
+                assert_eq!((r0.tenant.as_str(), r0.version), ("a", 1));
+                assert_eq!((r1.tenant.as_str(), r1.version), ("a", 2));
+                assert_eq!(r1.checksum, theta_checksum(&thetas_for(spec, 0.2)));
+                assert_eq!((r2.tenant.as_str(), r2.version), ("b", 1));
+                assert_eq!(tenant, "b");
+            }
+            other => panic!("unexpected record shapes: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sink_failure_aborts_the_mutation_before_it_applies() {
+        let sink = RecordingSink::new();
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        let reg = Registry::new(1 << 20).with_state_sink(sink.clone());
+        reg.register("t", spec, thetas_for(spec, 0.1)).unwrap();
+        sink.fail.store(true, Ordering::Relaxed);
+        // write-ahead: a failed log append must leave RAM untouched,
+        // and surface as the typed (retryable) StateLogFailed
+        let e = reg.register("t", spec, thetas_for(spec, 0.9)).unwrap_err();
+        let typed = e.downcast_ref::<StateLogFailed>().expect("typed log failure");
+        assert_eq!(typed.tenant, "t");
+        assert_eq!(reg.snapshot("t").unwrap().version, 1);
+        assert!(reg.register("u", spec, thetas_for(spec, 0.2)).is_err());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.try_evict_tenant("t").is_err());
+        assert_eq!(reg.snapshot("t").unwrap().version, 1);
+        sink.fail.store(false, Ordering::Relaxed);
+        assert_eq!(reg.register("t", spec, thetas_for(spec, 0.9)).unwrap(), 2);
+    }
+
+    #[test]
+    fn restore_reinstalls_recorded_versions_without_emitting() {
+        let spec = PauliSpec { q: 3, n_layers: 1 };
+        let thetas = thetas_for(spec, 0.4);
+        let ts = TenantState {
+            tenant: "acme".into(),
+            version: 7,
+            q: 3,
+            n_layers: 1,
+            checksum: theta_checksum(&thetas),
+            path: "/spool/acme.qpck".into(),
+            thetas: thetas.clone(),
+        };
+        let sink = RecordingSink::new();
+        let reg = Registry::new(1 << 20).with_state_sink(sink.clone());
+        assert_eq!(reg.restore(&ts).unwrap(), 7);
+        assert!(sink.records.lock().unwrap().is_empty(),
+                "restore must not re-append");
+        let snap = reg.snapshot("acme").unwrap();
+        assert_eq!((snap.version, snap.checksum), (7, ts.checksum));
+        assert_eq!(snap.origin, "/spool/acme.qpck");
+        // the next real mutation continues from the recorded version
+        assert_eq!(reg.register("acme", spec, thetas).unwrap(), 8);
+        // a tampered recovered state (checksum mismatch) is refused
+        let mut bad = ts.clone();
+        bad.thetas[0] += 1.0;
+        let e = reg.restore(&bad).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        // export round-trips the durable fields
+        let exported = reg.export_state();
+        assert_eq!(exported.len(), 1);
+        assert_eq!(exported[0].version, 8);
+        assert_eq!(exported[0].tenant, "acme");
     }
 }

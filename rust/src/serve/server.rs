@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::events::EventLog;
 use crate::quantum::pauli;
@@ -43,7 +43,10 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::pool::{self, Service, TaskCtx};
 
-use super::admission::{AdmissionConfig, AdmissionController, AdmissionStats};
+use super::admission::{
+    AdmissionConfig, AdmissionController, AdmissionReload,
+    AdmissionReloadSpec, AdmissionStats,
+};
 use super::registry::{CacheStats, Registry};
 use super::scheduler::{
     Batch, Batcher, BatchPolicy, PendingRequest, Response, ResponseHandle,
@@ -57,7 +60,7 @@ use super::scheduler::{
 /// and one row-multiply beats re-walking the gate sequence.
 pub const STRUCTURED_APPLY_MIN_Q: u32 = 6;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub workers: usize,
     pub policy: BatchPolicy,
@@ -65,6 +68,12 @@ pub struct ServeConfig {
     pub fifo: bool,
     /// Admission control (rate limits + queue cap); default admits all.
     pub admission: AdmissionConfig,
+    /// Hot-reload source for `admission`: a config file watched with a
+    /// spool-style stability window for the whole session
+    /// (`--admission-config`); limit changes apply live without
+    /// dropping in-flight requests. `None` (default) keeps the static
+    /// policy — and full fifo determinism.
+    pub admission_reload: Option<AdmissionReloadSpec>,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +83,7 @@ impl Default for ServeConfig {
             policy: BatchPolicy::default(),
             fifo: true,
             admission: AdmissionConfig::default(),
+            admission_reload: None,
         }
     }
 }
@@ -253,8 +263,12 @@ impl ServeSummary {
             ("cache_hits", Json::Num(self.cache.hits as f64)),
             ("cache_misses", Json::Num(self.cache.misses as f64)),
             ("cache_evictions", Json::Num(self.cache.evictions as f64)),
+            ("cache_quota_rejections",
+             Json::Num(self.cache.quota_rejections as f64)),
             ("cache_bytes", self.cache.bytes.into()),
             ("cache_capacity_bytes", self.cache.capacity_bytes.into()),
+            ("cache_tenant_quota_bytes",
+             self.cache.per_tenant_quota_bytes.into()),
         ]);
         for t in &self.tenants {
             log.emit("serve_tenant", vec![
@@ -274,6 +288,7 @@ impl ServeSummary {
                 ("rejected_rate_limited", Json::Num(a.rejected_rate_limited as f64)),
                 ("rejected_queue_full", Json::Num(a.rejected_queue_full as f64)),
                 ("rejected_total", Json::Num(a.rejected_total() as f64)),
+                ("reloads", Json::Num(a.reloads as f64)),
             ]);
             for t in &a.per_tenant {
                 log.emit("serve_admission_tenant", vec![
@@ -311,6 +326,13 @@ impl ServeSummary {
              ({} entries)",
             self.cache.hits, self.cache.misses, self.cache.evictions,
             self.cache.bytes, self.cache.capacity_bytes, self.cache.entries);
+        if self.cache.per_tenant_quota_bytes > 0 {
+            let _ = writeln!(
+                s,
+                "tenant quota: {} bytes each, {} quota rejection(s)",
+                self.cache.per_tenant_quota_bytes,
+                self.cache.quota_rejections);
+        }
         if self.admission.enabled {
             let a = &self.admission;
             let attempts = a.admitted + a.rejected_total();
@@ -562,7 +584,27 @@ where
     // logical clock in fifo mode: admission decisions depend only on the
     // submission sequence (plus explicit advance_clock calls), never on
     // wall time — the fifo byte-identity guarantee extends to rejections
-    let admission = AdmissionController::new(cfg.admission, cfg.fifo);
+    let admission = Arc::new(AdmissionController::new(cfg.admission, cfg.fifo));
+    // admission hot-reload: a stability-window watcher applies config
+    // file changes live for the whole session; joined when this guard
+    // drops at the end of serve()
+    let _reload_watcher = match &cfg.admission_reload {
+        Some(spec) => {
+            let mut reload =
+                AdmissionReload::new(spec.clone(), admission.clone(), log.clone());
+            Some(
+                pool::Background::spawn(
+                    "admission-reload",
+                    Duration::from_millis(20),
+                    move || {
+                        reload.poll();
+                    },
+                )
+                .context("spawn admission-reload watcher")?,
+            )
+        }
+        None => None,
+    };
     let t0 = Instant::now();
     let (body_result, init_errors): (Result<R>, Vec<String>) = pool::run_service(
         cfg.workers,
@@ -585,7 +627,7 @@ where
                 registry,
                 service,
                 metrics: &metrics,
-                admission: &admission,
+                admission: admission.as_ref(),
                 batcher: Mutex::new(Batcher::new(cfg.policy)),
                 fifo: cfg.fifo,
             };
@@ -783,6 +825,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 100, max_wait_us: 0 },
             fifo: true,
             admission: AdmissionConfig { rate_rps: 0.0, burst: 1.0, max_queue: 10 },
+            ..ServeConfig::default()
         };
         let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
             let mut handles = Vec::new();
@@ -831,6 +874,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 1, max_wait_us: 50 },
             fifo: false,
             admission: AdmissionConfig { rate_rps: 0.0, burst: 1.0, max_queue: 4 },
+            ..ServeConfig::default()
         };
         let attempts = 64u64;
         let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {

@@ -23,11 +23,20 @@
 //! - **reject**: a file that fails validation is quarantined to
 //!   `spool/rejected/<name>` with the reason in the event log
 //!   (`serve_spool_reject`) — it is never retried; a fixed upload under
-//!   the same name is a fresh candidate;
+//!   the same name is a fresh candidate. A *durable-log* failure
+//!   ([`StateLogFailed`]) is not a rejection: the claim is restored and
+//!   the ingest retried every window until the log recovers
+//!   (`serve_spool_ingest_deferred`, logged once per episode);
 //! - **delete**: removing `spool/<name>.qpck` evicts the tenant it
 //!   loaded — *deferred* while the tenant has in-flight requests
 //!   ([`Registry::try_evict_tenant`]) and retried every poll until the
 //!   pins drain, so eviction never drops live work.
+//!
+//! Every ingest and eviction flows through the registry's durable
+//! [`StateSink`](crate::store::StateSink) (when one is attached): an
+//! upload or deletion observed by the spool survives a server restart.
+//! A failed durable append defers the eviction (retried next poll)
+//! rather than letting the in-RAM registry run ahead of its log.
 //!
 //! [`Spool`] is the synchronous poll-state machine (drive [`Spool::poll`]
 //! directly in tests — no sleeps, fully deterministic);
@@ -48,6 +57,8 @@ use anyhow::{Context, Result};
 use crate::coordinator::events::EventLog;
 use crate::util::json::Json;
 use crate::util::pool::Background;
+
+use crate::store::StateLogFailed;
 
 use super::registry::{EvictAttempt, Registry};
 
@@ -79,6 +90,9 @@ pub struct SpoolStats {
     pub evicted: u64,
     /// Eviction attempts deferred on in-flight pins (one per poll).
     pub eviction_deferred: u64,
+    /// Valid uploads whose durable log append failed — put back and
+    /// retried (never quarantined for a log hiccup).
+    pub ingest_deferred: u64,
 }
 
 enum Tracked {
@@ -117,6 +131,9 @@ pub struct Spool {
     /// Tenants whose backing file is gone but whose eviction is blocked
     /// by in-flight pins; retried first thing every poll.
     pending_evictions: BTreeSet<String>,
+    /// File names whose ingest hit a durable-log failure (logged once
+    /// per episode; cleared on the next successful ingest).
+    sink_deferred: BTreeSet<String>,
     stats: SpoolStats,
 }
 
@@ -131,6 +148,7 @@ impl Spool {
             log,
             seen: BTreeMap::new(),
             pending_evictions: BTreeSet::new(),
+            sink_deferred: BTreeSet::new(),
             stats: SpoolStats::default(),
         })
     }
@@ -230,6 +248,7 @@ impl Spool {
         }
         match self.registry.load_checkpoint(&staging) {
             Ok((tenant, version)) => {
+                self.sink_deferred.remove(name);
                 // a tenant just (re)loaded from disk is no longer
                 // eviction-pending, whatever an earlier deletion said
                 self.pending_evictions.remove(&tenant);
@@ -264,8 +283,30 @@ impl Spool {
                     self.evict(tenant);
                 }
             }
+            // a failed durable-log append is NOT a bad upload: put the
+            // claim back under its public name and retry next window —
+            // quarantining a valid adapter over a log-disk hiccup would
+            // lose the upload permanently
+            Err(e) if e.downcast_ref::<StateLogFailed>().is_some() => {
+                self.stats.ingest_deferred += 1;
+                let restored = std::fs::rename(&staging, &public).is_ok();
+                if self.sink_deferred.insert(name.to_string()) || !restored {
+                    self.log.emit("serve_spool_ingest_deferred", vec![
+                        ("file", name.into()),
+                        ("restored", restored.to_string().into()),
+                        ("error", e.to_string().into()),
+                    ]);
+                }
+                // forget the window state either way: a restored file is
+                // re-observed (and retried) next poll; an unrestorable
+                // one is effectively gone
+                self.seen.remove(name);
+            }
             Err(e) => {
                 self.stats.rejected += 1;
+                // a quarantine ends any sink-deferral episode for this
+                // name: a future genuine log outage must log afresh
+                self.sink_deferred.remove(name);
                 let dest = self.quarantine_dest(name);
                 let moved = std::fs::create_dir_all(self.dir.join(REJECTED_SUBDIR))
                     .and_then(|()| std::fs::rename(&staging, &dest));
@@ -293,17 +334,19 @@ impl Spool {
     }
 
     /// Evict now if possible; defer (and retry every poll) on in-flight
-    /// pins.
+    /// pins or on a failed durable-eviction append (the registry keeps
+    /// the tenant live when its WAL record cannot be written — RAM must
+    /// never run ahead of the log).
     fn evict(&mut self, tenant: String) {
         match self.registry.try_evict_tenant(&tenant) {
-            EvictAttempt::Evicted => {
+            Ok(EvictAttempt::Evicted) => {
                 self.stats.evicted += 1;
                 self.log.emit("serve_spool_evict", vec![
                     ("tenant", tenant.as_str().into()),
                 ]);
             }
-            EvictAttempt::Unknown => {}
-            EvictAttempt::Deferred(inflight) => {
+            Ok(EvictAttempt::Unknown) => {}
+            Ok(EvictAttempt::Deferred(inflight)) => {
                 self.stats.eviction_deferred += 1;
                 if self.pending_evictions.insert(tenant.clone()) {
                     self.log.emit("serve_spool_evict_deferred", vec![
@@ -312,6 +355,112 @@ impl Spool {
                     ]);
                 }
             }
+            Err(e) => {
+                self.stats.eviction_deferred += 1;
+                // log on first deferral only (like the Deferred arm): a
+                // persistently failing sink must not flood the event
+                // log once per poll interval
+                if self.pending_evictions.insert(tenant.clone()) {
+                    self.log.emit("serve_spool_error", vec![
+                        ("tenant", tenant.as_str().into()),
+                        ("error", e.to_string().into()),
+                    ]);
+                }
+            }
+        }
+    }
+}
+
+/// Stability-window watcher for **one** file — the spool's
+/// (len, mtime)-stable-across-two-polls technique applied to a single
+/// path (used by the admission-config hot-reload,
+/// [`crate::serve::admission::AdmissionReload`]). [`poll`](FileWatch::poll)
+/// returns the file's contents exactly once per new stable version;
+/// a write in progress is never read half-way. Drive `poll` directly in
+/// tests (no clock, fully deterministic) or from a
+/// [`Background`] thread in production.
+pub struct FileWatch {
+    path: PathBuf,
+    /// Seen once; reported when unchanged on the next poll.
+    pending: Option<(u64, SystemTime)>,
+    /// The version already reported.
+    loaded: Option<(u64, SystemTime)>,
+}
+
+impl FileWatch {
+    pub fn new(path: impl Into<PathBuf>) -> FileWatch {
+        FileWatch { path: path.into(), pending: None, loaded: None }
+    }
+
+    /// A watcher that treats `already_loaded` — a (len, mtime)
+    /// signature the caller observed when it consumed the file itself —
+    /// as the reported version: [`poll`](FileWatch::poll) fires only
+    /// when the file *changes from that signature*. The hot-reload
+    /// startup case: the session was configured from the file (possibly
+    /// with CLI overrides on top), so re-applying the unchanged file
+    /// would revert the overrides, while an edit that raced session
+    /// startup must still be detected — which is why the caller records
+    /// the signature at read time rather than this watcher stat-ing the
+    /// (possibly already-edited) file later.
+    pub fn starting_from(path: impl Into<PathBuf>,
+                         already_loaded: Option<(u64, SystemTime)>)
+                         -> FileWatch {
+        FileWatch { path: path.into(), pending: None, loaded: already_loaded }
+    }
+
+    /// [`starting_from`](FileWatch::starting_from) with the signature
+    /// observed right now (callers that read the file at the same
+    /// moment; prefer recording the signature at read time when the
+    /// read happened earlier).
+    pub fn starting_from_current(path: impl Into<PathBuf>) -> FileWatch {
+        let mut w = FileWatch::new(path);
+        if let Ok(md) = std::fs::metadata(&w.path) {
+            if md.is_file() {
+                w.loaded = Some((
+                    md.len(),
+                    md.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+                ));
+            }
+        }
+        w
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// One poll: `Some(contents)` the first time a new (len, mtime)
+    /// signature has been stable across two consecutive polls; `None`
+    /// otherwise (missing file, still-moving bytes, already reported).
+    pub fn poll(&mut self) -> Option<Vec<u8>> {
+        let Ok(md) = std::fs::metadata(&self.path) else {
+            self.pending = None;
+            return None;
+        };
+        if !md.is_file() {
+            self.pending = None;
+            return None;
+        }
+        let sig = (md.len(), md.modified().unwrap_or(SystemTime::UNIX_EPOCH));
+        if Some(sig) == self.loaded {
+            return None;
+        }
+        if Some(sig) == self.pending {
+            match std::fs::read(&self.path) {
+                Ok(bytes) => {
+                    self.loaded = Some(sig);
+                    self.pending = None;
+                    Some(bytes)
+                }
+                // vanished between stat and read: observe again next poll
+                Err(_) => {
+                    self.pending = None;
+                    None
+                }
+            }
+        } else {
+            self.pending = Some(sig);
+            None
         }
     }
 }
@@ -426,6 +575,83 @@ mod tests {
         spool.poll();
         assert!(reg.snapshot("acme").is_err(), "orphaned tenant survived");
         assert_eq!(reg.snapshot("globex").unwrap().version, 1);
+    }
+
+    #[test]
+    fn sink_failure_defers_ingest_instead_of_quarantining() {
+        use crate::store::{StateRecord, StateSink};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        struct FlakySink {
+            down: AtomicBool,
+        }
+        impl StateSink for FlakySink {
+            fn record(&self, _rec: &StateRecord) -> anyhow::Result<()> {
+                if self.down.load(Ordering::Relaxed) {
+                    anyhow::bail!("log disk full");
+                }
+                Ok(())
+            }
+        }
+
+        let dir = tdir("sink_defer");
+        let sink = Arc::new(FlakySink { down: AtomicBool::new(true) });
+        let reg = Arc::new(
+            Registry::new(1 << 20).with_state_sink(sink.clone()));
+        let mut spool =
+            Spool::new(reg.clone(), &SpoolConfig::new(&dir), EventLog::null())
+                .unwrap();
+        drop_adapter(&dir, "a.qpck", "acme", 3, 1);
+        spool.poll();
+        let s = spool.poll(); // ingest attempt hits the failing sink
+        assert_eq!((s.loaded, s.rejected), (0, 0), "{s:?}");
+        assert!(s.ingest_deferred >= 1, "{s:?}");
+        assert!(reg.is_empty());
+        // the upload was NOT quarantined: it is back under its public
+        // name, and once the log recovers the retry ingests it
+        assert!(dir.join("a.qpck").exists(), "valid upload was lost");
+        assert!(!dir.join("rejected").join("a.qpck").exists());
+        sink.down.store(false, Ordering::Relaxed);
+        spool.poll(); // re-observe (stability window re-arms)
+        let s = spool.poll(); // retry succeeds
+        assert_eq!((s.loaded, s.rejected), (1, 0), "{s:?}");
+        assert_eq!(reg.snapshot("acme").unwrap().version, 1);
+    }
+
+    #[test]
+    fn file_watch_reports_each_stable_version_once() {
+        let dir = tdir("fwatch");
+        let path = dir.join("cfg.json");
+        let mut w = FileWatch::new(&path);
+        // missing file: silent
+        assert!(w.poll().is_none());
+        std::fs::write(&path, b"v1").unwrap();
+        // first sighting arms the window, second reports, third is quiet
+        assert!(w.poll().is_none());
+        assert_eq!(w.poll().as_deref(), Some(b"v1".as_slice()));
+        assert!(w.poll().is_none());
+        // a rewrite goes through the same window
+        std::fs::write(&path, b"version-two").unwrap();
+        assert!(w.poll().is_none());
+        assert_eq!(w.poll().as_deref(), Some(b"version-two".as_slice()));
+        assert!(w.poll().is_none());
+        // deletion is silent and re-arms for the next upload
+        std::fs::remove_file(&path).unwrap();
+        assert!(w.poll().is_none());
+        // a different length than any earlier version, so the (len,
+        // mtime) signature changes even on coarse-mtime filesystems
+        std::fs::write(&path, b"v3-value").unwrap();
+        assert!(w.poll().is_none());
+        assert_eq!(w.poll().as_deref(), Some(b"v3-value".as_slice()));
+        // starting_from_current: the existing version is pre-loaded and
+        // never reported; only a subsequent edit fires
+        let mut pre = FileWatch::starting_from_current(&path);
+        for _ in 0..3 {
+            assert!(pre.poll().is_none(), "unchanged file re-reported");
+        }
+        std::fs::write(&path, b"edited-after-start").unwrap();
+        assert!(pre.poll().is_none());
+        assert_eq!(pre.poll().as_deref(), Some(b"edited-after-start".as_slice()));
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Durable serving state store: write-ahead log + snapshots + crash
+//! recovery for the adapter registry's control-plane state.
+//!
+//! The paper's log-scale Pauli adapters make thousands of per-tenant
+//! fine-tunes cheap to *hold* in RAM — which means a serve-plane restart
+//! used to lose every ingested tenant, version counter and eviction.
+//! This subsystem makes registry **mutations** durable, so a restarted
+//! server serves the same tenants at the same versions with
+//! byte-identical responses:
+//!
+//! - [`wal`]: an append-only record log of registry mutations
+//!   (register / swap / evict, each carrying tenant, version, theta
+//!   checksum, originating `QPCK` path and the theta payload itself).
+//!   Records are length-prefixed and CRC32-framed; fsync cadence sits
+//!   behind the [`Durability`] knob;
+//! - [`snapshot`]: periodic compaction — the live registry state is
+//!   written to a single checksummed snapshot file via temp-file +
+//!   atomic same-directory rename, then the WAL is truncated, so
+//!   recovery cost stays proportional to the live tenant count, not the
+//!   mutation history;
+//! - [`mod@recover`]: startup replay — load the snapshot (if any), then
+//!   apply the WAL tail, skipping records the snapshot already covers
+//!   (every record carries a sequence number; the snapshot pins the last
+//!   one it includes). Exactly one **torn trailing record** — the
+//!   fingerprint of a crash mid-append — is tolerated and truncated
+//!   away; anything worse (a CRC mismatch with complete records after
+//!   it, a non-monotonic sequence, an undecodable record) is a typed
+//!   [`CorruptState`] error, never a silent partial load.
+//!
+//! ## What is durable, and when
+//!
+//! A mutation is durable once its WAL record is on disk: the registry
+//! appends the record *before* applying the mutation in RAM (classic
+//! write-ahead discipline, see
+//! [`Registry::with_state_sink`](crate::serve::registry::Registry::with_state_sink)),
+//! so a crash can lose at most the in-RAM effect of a record that will
+//! be replayed — never a mutation that was acknowledged. How hard
+//! "on disk" is depends on [`Durability`]: `Buffered` leaves it to the
+//! OS page cache (a *process* crash loses nothing, a power cut may lose
+//! the tail), `EveryN(n)` bounds the loss window to n records, `Always`
+//! fsyncs every append. Snapshots and WAL truncations are always
+//! fsynced — compaction never weakens what the WAL had already made
+//! durable.
+//!
+//! The store knows nothing about the serving layer: it logs and
+//! recovers [`TenantState`] values. The registry side of the contract
+//! lives in [`crate::serve::registry`] (the [`StateSink`] emission and
+//! [`Registry::restore`](crate::serve::registry::Registry::restore)).
+
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use recover::{recover, RecoveredState};
+pub use snapshot::SNAPSHOT_FILE;
+pub use wal::{Durability, WalWriter, WAL_FILE};
+
+/// One tenant's complete durable state: everything recovery needs to
+/// re-register the tenant at the same version with the same parameters
+/// (the thetas ride along — they are few-KB by the paper's eq. 2, so
+/// the *metadata churn*, not the bytes, dominates the log).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantState {
+    pub tenant: String,
+    pub version: u64,
+    pub q: u32,
+    pub n_layers: u32,
+    /// FNV-1a digest of the theta bits (the registry's adapter identity
+    /// digest); recovery re-verifies it against `thetas`.
+    pub checksum: u64,
+    /// Originating `QPCK` checkpoint path ("" for programmatic
+    /// registrations) — diagnostic provenance, not a load dependency.
+    pub path: String,
+    pub thetas: Vec<f32>,
+}
+
+/// One registry mutation, as logged. `Register` is a tenant's first
+/// version, `Swap` a hot-swap of an existing tenant; both carry the full
+/// [`TenantState`] and replay identically.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateRecord {
+    Register(TenantState),
+    Swap(TenantState),
+    Evict { tenant: String },
+}
+
+impl StateRecord {
+    /// The tenant this record mutates.
+    pub fn tenant(&self) -> &str {
+        match self {
+            StateRecord::Register(ts) | StateRecord::Swap(ts) => &ts.tenant,
+            StateRecord::Evict { tenant } => tenant,
+        }
+    }
+}
+
+/// Where the registry sends its mutation records. The serving layer is
+/// generic over this: [`NullSink`] (the default) preserves the purely
+/// in-RAM behavior byte-for-byte; [`StateStore`] makes mutations
+/// durable. An `Err` from [`record`](StateSink::record) aborts the
+/// mutation *before* it is applied in RAM (write-ahead discipline).
+pub trait StateSink: Send + Sync {
+    fn record(&self, rec: &StateRecord) -> Result<()>;
+
+    /// Whether this sink wants records at all. The registry checks it
+    /// before *building* a record — constructing one clones the full
+    /// theta vector, and the default [`NullSink`] configuration must
+    /// stay byte- and allocation-identical to the pre-durability
+    /// registry. Defaults to `true`.
+    fn wants_records(&self) -> bool {
+        true
+    }
+}
+
+/// The no-op sink: accepts every record, persists nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl StateSink for NullSink {
+    fn record(&self, _rec: &StateRecord) -> Result<()> {
+        Ok(())
+    }
+
+    fn wants_records(&self) -> bool {
+        false
+    }
+}
+
+/// Typed corruption error: the state directory holds something neither
+/// a clean log nor a single torn trailing record can explain. Carried
+/// through `anyhow` as a payload, so callers can
+/// `err.downcast_ref::<CorruptState>()` however much context wraps it
+/// (the same recoverable-typed-error pattern as
+/// [`crate::serve::admission::Rejected`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CorruptState {
+    /// The offending file (WAL or snapshot), as a display path.
+    pub file: String,
+    /// Byte offset of the first bad frame (0 for whole-file problems).
+    pub offset: u64,
+    pub detail: String,
+}
+
+impl fmt::Display for CorruptState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "corrupt state file {} at offset {}: {}",
+            self.file, self.offset, self.detail
+        )
+    }
+}
+
+impl std::error::Error for CorruptState {}
+
+/// Typed marker for a failed durable append: the [`StateSink`] could
+/// not log a mutation, so the mutation was aborted *before* applying
+/// (write-ahead discipline) and the caller may safely retry. Carried as
+/// an `anyhow` payload so callers can `downcast_ref` it apart from
+/// permanent validation failures — the spool uses this to defer-and-
+/// retry an ingest or eviction instead of quarantining a valid upload
+/// because the log disk hiccuped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StateLogFailed {
+    pub tenant: String,
+    pub detail: String,
+}
+
+impl fmt::Display for StateLogFailed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "durable state log append failed for tenant {:?}: {}",
+            self.tenant, self.detail
+        )
+    }
+}
+
+impl std::error::Error for StateLogFailed {}
+
+/// A [`StateStore`] freshly opened on a state directory, plus whatever
+/// [`recover()`] reconstructed from it (empty on a first run).
+pub struct OpenedStore {
+    pub store: StateStore,
+    pub recovered: RecoveredState,
+}
+
+/// The open, writable state store: a [`WalWriter`] behind a mutex (so
+/// any number of registry threads can append; order is the mutex's
+/// order, which the registry makes coincide with mutation order by
+/// appending under its own write lock) plus the directory the snapshot
+/// compactions go to.
+pub struct StateStore {
+    dir: PathBuf,
+    wal: Mutex<WalWriter>,
+}
+
+impl StateStore {
+    /// Open-or-recover: create `dir` if needed, replay snapshot + WAL
+    /// (see [`recover()`]), truncate away a torn trailing record if one
+    /// exists, and position the log for appending. The recovered tenant
+    /// states come back alongside the store so the caller can restore
+    /// them into a registry *before* attaching the store as its sink.
+    pub fn open(dir: &Path, durability: Durability) -> Result<OpenedStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create state dir {dir:?}"))?;
+        let recovered = recover::recover(dir)?;
+        let wal = WalWriter::open(
+            &dir.join(WAL_FILE),
+            recovered.wal_valid_len,
+            recovered.last_seq + 1,
+            durability,
+        )?;
+        Ok(OpenedStore {
+            store: StateStore { dir: dir.to_path_buf(), wal: Mutex::new(wal) },
+            recovered,
+        })
+    }
+
+    /// Append one mutation record; returns its sequence number. Durable
+    /// per the store's [`Durability`] once this returns.
+    pub fn append(&self, rec: &StateRecord) -> Result<u64> {
+        self.wal.lock().unwrap().append(rec)
+    }
+
+    /// Compact: write `live` (the complete current registry state) as
+    /// an atomic-rename snapshot pinned to the last appended sequence
+    /// number, then truncate the WAL. `live` must include the effect of
+    /// every record appended so far — callers must quiesce mutations
+    /// for the call (the registry integration,
+    /// [`Registry::compact_into`](crate::serve::registry::Registry::compact_into),
+    /// holds the registry write lock to guarantee it).
+    pub fn compact(&self, live: &[TenantState]) -> Result<()> {
+        let mut wal = self.wal.lock().unwrap();
+        snapshot::write(&self.dir, wal.last_seq(), live)
+            .with_context(|| format!("write snapshot in {:?}", self.dir))?;
+        wal.truncate_to_header()
+            .context("truncate WAL after snapshot")
+    }
+
+    /// Force the WAL to disk now, whatever the durability mode.
+    pub fn sync(&self) -> Result<()> {
+        self.wal.lock().unwrap().sync()
+    }
+
+    /// Sequence number of the most recently appended record (0 if none
+    /// were ever appended to this log line).
+    pub fn last_seq(&self) -> u64 {
+        self.wal.lock().unwrap().last_seq()
+    }
+
+    /// Records appended since open or the last compaction — what a
+    /// recovery would have to replay right now.
+    pub fn wal_records(&self) -> u64 {
+        self.wal.lock().unwrap().records_since_truncate()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl StateSink for StateStore {
+    fn record(&self, rec: &StateRecord) -> Result<()> {
+        self.append(rec).map(|_seq| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("qp_store_unit")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn ts(tenant: &str, version: u64, fill: f32) -> TenantState {
+        let thetas = vec![fill; 9];
+        TenantState {
+            tenant: tenant.to_string(),
+            version,
+            q: 3,
+            n_layers: 1,
+            checksum: crate::serve::registry::theta_checksum(&thetas),
+            path: format!("/spool/{tenant}.qpck"),
+            thetas,
+        }
+    }
+
+    #[test]
+    fn open_append_reopen_recovers_exact_state() {
+        let dir = tdir("roundtrip");
+        let opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+        assert!(opened.recovered.tenants.is_empty());
+        let store = opened.store;
+        store.append(&StateRecord::Register(ts("a", 1, 0.1))).unwrap();
+        store.append(&StateRecord::Register(ts("b", 1, 0.2))).unwrap();
+        store.append(&StateRecord::Swap(ts("a", 2, 0.3))).unwrap();
+        store.append(&StateRecord::Evict { tenant: "b".into() }).unwrap();
+        assert_eq!(store.last_seq(), 4);
+        drop(store);
+        let opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+        let r = &opened.recovered;
+        assert_eq!(r.last_seq, 4);
+        assert!(!r.torn_tail);
+        assert_eq!(r.wal_records, 4);
+        assert_eq!(r.tenants, vec![ts("a", 2, 0.3)]);
+        // appends continue the sequence, never reuse it
+        assert_eq!(
+            opened.store.append(&StateRecord::Register(ts("c", 1, 0.4))).unwrap(),
+            5
+        );
+    }
+
+    #[test]
+    fn compact_bounds_replay_and_preserves_state() {
+        let dir = tdir("compact");
+        let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+        for i in 0..8u64 {
+            store
+                .append(&StateRecord::Swap(ts("t", i + 1, i as f32)))
+                .unwrap();
+        }
+        store.compact(&[ts("t", 8, 7.0)]).unwrap();
+        assert_eq!(store.wal_records(), 0);
+        // post-compaction mutations land in the fresh WAL tail
+        store.append(&StateRecord::Register(ts("u", 1, 0.5))).unwrap();
+        let opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+        let r = &opened.recovered;
+        assert_eq!(r.snapshot_entries, 1);
+        assert_eq!(r.wal_records, 1);
+        assert_eq!(r.last_seq, 9);
+        assert_eq!(r.tenants, vec![ts("t", 8, 7.0), ts("u", 1, 0.5)]);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        NullSink.record(&StateRecord::Evict { tenant: "x".into() }).unwrap();
+    }
+
+    #[test]
+    fn corrupt_state_displays_and_downcasts() {
+        fn fail() -> Result<()> {
+            Err(CorruptState {
+                file: "wal.log".into(),
+                offset: 42,
+                detail: "CRC mismatch".into(),
+            })?;
+            Ok(())
+        }
+        let e = fail().context("recovering").unwrap_err();
+        assert!(e.to_string().contains("offset 42"), "{e}");
+        let c = e.downcast_ref::<CorruptState>().expect("typed corruption lost");
+        assert_eq!(c.offset, 42);
+    }
+}

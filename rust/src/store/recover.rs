@@ -1,0 +1,294 @@
+//! Startup recovery: snapshot first, then the WAL tail.
+//!
+//! The replay contract, which `tests/store.rs` pins with a truncate-
+//! everywhere crash-injection matrix:
+//!
+//! - the reconstructed state is exactly the state after the **last
+//!   complete record** — a crash mid-append loses that append and
+//!   nothing else;
+//! - exactly one *torn trailing record* is tolerated (a frame that runs
+//!   past EOF, or a CRC-failed frame that is the last thing in the
+//!   file — both are what a single interrupted `write_all` leaves
+//!   behind). [`RecoveredState::torn_tail`] reports it, and
+//!   [`StateStore::open`](super::StateStore::open) truncates it away
+//!   before appending;
+//! - anything a crash cannot explain — a CRC mismatch with complete
+//!   records after it, an undecodable payload whose CRC passes, a
+//!   non-monotonic sequence number, a bad header on a non-empty file —
+//!   is a typed [`CorruptState`](super::CorruptState) error. Recovery
+//!   never silently drops interior records.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::wal::{crc32_pair, decode_record, HEADER_LEN, MAX_RECORD_LEN,
+                 WAL_FILE, WAL_MAGIC};
+use super::{snapshot, CorruptState, StateRecord, TenantState};
+
+/// What [`recover`] reconstructed from a state directory.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveredState {
+    /// Live tenants after replay, sorted by tenant name.
+    pub tenants: Vec<TenantState>,
+    /// Highest sequence number covered (snapshot or WAL); appends
+    /// continue at `last_seq + 1`.
+    pub last_seq: u64,
+    /// Entries loaded from the snapshot (0 if none existed).
+    pub snapshot_entries: usize,
+    /// Complete WAL records parsed (applied + skipped).
+    pub wal_records: u64,
+    /// WAL records skipped because the snapshot already covered them
+    /// (the crash window between snapshot publish and WAL truncation).
+    pub wal_skipped: u64,
+    /// A torn trailing record was found (and will be truncated away on
+    /// open).
+    pub torn_tail: bool,
+    /// Byte length of the valid WAL prefix (header + complete records).
+    pub wal_valid_len: u64,
+}
+
+fn apply(state: &mut BTreeMap<String, TenantState>, rec: StateRecord) {
+    match rec {
+        StateRecord::Register(ts) | StateRecord::Swap(ts) => {
+            state.insert(ts.tenant.clone(), ts);
+        }
+        StateRecord::Evict { tenant } => {
+            state.remove(&tenant);
+        }
+    }
+}
+
+/// Replay `dir`'s snapshot + WAL into the state the registry should
+/// restart with. Read-only: truncating the torn tail (if any) is the
+/// opener's job, so `recover` can also be used for offline inspection
+/// of a state directory that another process owns.
+pub fn recover(dir: &Path) -> Result<RecoveredState> {
+    let (snap_last_seq, mut state) = match snapshot::read(dir)
+        .with_context(|| format!("recovering snapshot in {dir:?}"))?
+    {
+        Some((seq, entries)) => {
+            let map: BTreeMap<String, TenantState> = entries
+                .into_iter()
+                .map(|ts| (ts.tenant.clone(), ts))
+                .collect();
+            (seq, map)
+        }
+        None => (0, BTreeMap::new()),
+    };
+    let snapshot_entries = state.len();
+
+    let wal_path = dir.join(WAL_FILE);
+    let bytes = match std::fs::read(&wal_path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(e).with_context(|| format!("read WAL {wal_path:?}"))
+        }
+    };
+    let file = wal_path.display().to_string();
+    let corrupt = |offset: u64, detail: String| -> anyhow::Error {
+        CorruptState { file: file.clone(), offset, detail }.into()
+    };
+
+    let mut out = RecoveredState {
+        last_seq: snap_last_seq,
+        snapshot_entries,
+        ..RecoveredState::default()
+    };
+    if bytes.is_empty() {
+        // fresh directory (or a log that died before any byte hit disk)
+        out.tenants = state.into_values().collect();
+        return Ok(out);
+    }
+    if bytes.len() < HEADER_LEN {
+        // the header itself was torn mid-write: nothing to replay
+        out.torn_tail = true;
+        out.tenants = state.into_values().collect();
+        return Ok(out);
+    }
+    if &bytes[..4] != WAL_MAGIC {
+        return Err(corrupt(0, "bad WAL magic".into()));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != super::wal::FORMAT_VERSION {
+        return Err(corrupt(4, format!("unsupported WAL format {version}")));
+    }
+
+    let mut off = HEADER_LEN;
+    let mut prev_seq = 0u64;
+    out.wal_valid_len = off as u64;
+    while off < bytes.len() {
+        if off + 8 > bytes.len() {
+            out.torn_tail = true; // frame header cut mid-write
+            break;
+        }
+        let len_bytes = &bytes[off..off + 4];
+        let len =
+            u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        let crc =
+            u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        if off + 8 + len > bytes.len() {
+            // a genuine torn append leaves strictly less than one frame
+            // of trailing bytes; more than that can only mean a length
+            // field corrupted to reach past EOF over complete records —
+            // never silently discard those
+            let tail = bytes.len() - off;
+            if tail > MAX_RECORD_LEN + 8 {
+                return Err(corrupt(
+                    off as u64,
+                    format!(
+                        "frame claims {len} payload bytes past EOF but \
+                         {tail} bytes follow — more than any single torn \
+                         append could leave"
+                    ),
+                ));
+            }
+            out.torn_tail = true; // payload cut mid-write
+            break;
+        }
+        if len > MAX_RECORD_LEN {
+            // a full frame claiming an absurd length cannot come from a
+            // truncated append — the length prefix is written before
+            // any payload byte
+            return Err(corrupt(
+                off as u64,
+                format!("record length {len} exceeds cap {MAX_RECORD_LEN}"),
+            ));
+        }
+        let payload = &bytes[off + 8..off + 8 + len];
+        if crc32_pair(len_bytes, payload) != crc {
+            if off + 8 + len == bytes.len() {
+                // garbled bytes with nothing after them: the trailing
+                // append never completed
+                out.torn_tail = true;
+                break;
+            }
+            return Err(corrupt(
+                off as u64,
+                "record CRC mismatch with complete records after it".into(),
+            ));
+        }
+        let (seq, rec) = decode_record(payload)
+            .map_err(|detail| corrupt(off as u64, detail))?;
+        if seq == 0 || seq <= prev_seq {
+            return Err(corrupt(
+                off as u64,
+                format!(
+                    "non-monotonic sequence {seq} after {prev_seq} \
+                     (spliced or reordered log?)"
+                ),
+            ));
+        }
+        prev_seq = seq;
+        out.wal_records += 1;
+        if seq <= snap_last_seq {
+            out.wal_skipped += 1; // the snapshot already includes it
+        } else {
+            apply(&mut state, rec);
+            out.last_seq = seq;
+        }
+        off += 8 + len;
+        out.wal_valid_len = off as u64;
+    }
+    out.last_seq = out.last_seq.max(prev_seq).max(snap_last_seq);
+    out.tenants = state.into_values().collect();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::wal::encode_record;
+    use crate::store::{Durability, StateStore};
+
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("qp_recover_unit")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ts(tenant: &str, version: u64) -> TenantState {
+        TenantState {
+            tenant: tenant.to_string(),
+            version,
+            q: 3,
+            n_layers: 1,
+            checksum: 11,
+            path: String::new(),
+            thetas: vec![0.5; 9],
+        }
+    }
+
+    #[test]
+    fn empty_dir_and_empty_wal_recover_to_nothing() {
+        let dir = tdir("empty");
+        let r = recover(&dir).unwrap();
+        assert!(r.tenants.is_empty());
+        assert_eq!(r.last_seq, 0);
+        assert!(!r.torn_tail);
+        // a zero-byte WAL (crash before the header write) is fresh, a
+        // half-header is a torn tail; neither is corruption
+        std::fs::write(dir.join(WAL_FILE), b"").unwrap();
+        assert!(!recover(&dir).unwrap().torn_tail);
+        std::fs::write(dir.join(WAL_FILE), b"QPW").unwrap();
+        let r = recover(&dir).unwrap();
+        assert!(r.torn_tail);
+        assert_eq!(r.wal_valid_len, 0);
+    }
+
+    #[test]
+    fn bad_magic_is_corruption_not_torn() {
+        let dir = tdir("magic");
+        std::fs::write(dir.join(WAL_FILE), b"NOPE\x01\x00\x00\x00").unwrap();
+        let e = recover(&dir).unwrap_err();
+        assert!(e.downcast_ref::<CorruptState>().is_some(), "{e}");
+    }
+
+    #[test]
+    fn non_monotonic_sequence_is_corruption() {
+        let dir = tdir("seq");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"QPWL");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&encode_record(
+            2,
+            &StateRecord::Register(ts("a", 1)),
+        ));
+        bytes.extend_from_slice(&encode_record(
+            2,
+            &StateRecord::Register(ts("b", 1)),
+        ));
+        std::fs::write(dir.join(WAL_FILE), &bytes).unwrap();
+        let e = recover(&dir).unwrap_err();
+        let c = e.downcast_ref::<CorruptState>().expect("typed");
+        assert!(c.detail.contains("non-monotonic"), "{c:?}");
+    }
+
+    #[test]
+    fn snapshot_plus_stale_wal_skips_covered_records() {
+        // simulate the crash window between snapshot publish and WAL
+        // truncation: the WAL still holds records the snapshot covers
+        let dir = tdir("skip");
+        let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+        store.append(&StateRecord::Register(ts("a", 1))).unwrap();
+        store.append(&StateRecord::Swap(ts("a", 2))).unwrap();
+        drop(store);
+        let wal_before = std::fs::read(dir.join(WAL_FILE)).unwrap();
+        let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+        store.compact(&[ts("a", 2)]).unwrap();
+        drop(store);
+        // put the pre-compaction WAL back: both records now have
+        // seq <= snapshot.last_seq and must be skipped, not re-applied
+        std::fs::write(dir.join(WAL_FILE), &wal_before).unwrap();
+        let r = recover(&dir).unwrap();
+        assert_eq!(r.wal_records, 2);
+        assert_eq!(r.wal_skipped, 2);
+        assert_eq!(r.last_seq, 2);
+        assert_eq!(r.tenants, vec![ts("a", 2)]);
+    }
+}

@@ -1,0 +1,260 @@
+//! Snapshot compaction: the live registry state as one checksummed
+//! file, published by temp-file + atomic same-directory rename.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! magic "QPSS" | u32 format version (1)
+//! body:  u64 last_seq | u32 count | count x tenant-state
+//! u32 crc32(body)
+//! ```
+//!
+//! `last_seq` pins the last WAL sequence number the snapshot includes:
+//! recovery applies only WAL records *after* it, which is what makes
+//! the crash window between "snapshot renamed" and "WAL truncated"
+//! harmless — the still-present records replay as no-ops-by-skip.
+//!
+//! Atomicity: the file is fully written and fsynced under a hidden temp
+//! name, then renamed over [`SNAPSHOT_FILE`] (same directory, so the
+//! rename is atomic on POSIX). A reader therefore sees either the old
+//! complete snapshot or the new complete snapshot, never a torn hybrid;
+//! the whole-body CRC turns any other damage into a typed
+//! [`CorruptState`](super::CorruptState) instead of a silent partial
+//! load.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::wal::{crc32, decode_tenant_state, encode_tenant_state, put_u32,
+                 put_u64, validate_tenant_state, Reader};
+use super::{CorruptState, TenantState};
+
+/// Snapshot file name inside a state directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.qpst";
+
+const SNAP_MAGIC: &[u8; 4] = b"QPSS";
+const FORMAT_VERSION: u32 = 1;
+/// Snapshot entry-count cap (far above any real registry, far below
+/// anything that could size a hostile allocation).
+const MAX_SNAPSHOT_ENTRIES: usize = 1 << 20;
+
+/// Write `entries` as the snapshot for `dir`, covering WAL sequence
+/// numbers up to and including `last_seq`. Fsynced before the rename
+/// publishes it; the directory is fsynced (best effort) after, so the
+/// rename itself survives a power cut.
+pub(crate) fn write(dir: &Path, last_seq: u64, entries: &[TenantState])
+                    -> Result<()> {
+    // never publish what the reader would refuse (or mis-frame: the
+    // u16 length prefixes would silently wrap past the caps) — a
+    // CRC-valid-but-undecodable snapshot published over the good one
+    // would brick the directory
+    if entries.len() > MAX_SNAPSHOT_ENTRIES {
+        bail!("refusing to snapshot {} entries (cap {MAX_SNAPSHOT_ENTRIES})",
+              entries.len());
+    }
+    for ts in entries {
+        validate_tenant_state(ts)
+            .with_context(|| format!("snapshot entry {:?}", ts.tenant))?;
+    }
+    let mut body = Vec::with_capacity(64 * entries.len() + 16);
+    put_u64(&mut body, last_seq);
+    put_u32(&mut body, entries.len() as u32);
+    for ts in entries {
+        encode_tenant_state(&mut body, ts);
+    }
+    let mut bytes = Vec::with_capacity(body.len() + 12);
+    bytes.extend_from_slice(SNAP_MAGIC);
+    bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&body);
+    bytes.extend_from_slice(&crc32(&body).to_le_bytes());
+
+    let tmp = dir.join(format!(".tmp.snapshot.{}", std::process::id()));
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("write snapshot temp {tmp:?}"))?;
+    // fsync the temp before the rename: the rename must never publish a
+    // name whose bytes are still only in the page cache
+    std::fs::File::open(&tmp)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsync snapshot temp {tmp:?}"))?;
+    let dest = dir.join(SNAPSHOT_FILE);
+    std::fs::rename(&tmp, &dest)
+        .with_context(|| format!("publish snapshot {tmp:?} -> {dest:?}"))?;
+    // persist the renamed directory entry: the caller truncates the WAL
+    // right after this returns, so a rename that silently failed to
+    // reach disk plus a power cut could otherwise recover a stale (or
+    // empty) state from a clean-looking directory. A platform that
+    // cannot open a directory handle at all has nothing to sync; one
+    // that can open it but fails to sync it is a real error and must
+    // block the WAL truncation.
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all()
+            .with_context(|| format!("fsync state dir {dir:?} after \
+                                      snapshot publish"))?;
+    }
+    Ok(())
+}
+
+/// Read the snapshot for `dir`, if one exists: `(last_seq, entries)`.
+/// A missing file is `Ok(None)` (first run / never compacted); any
+/// damage is a typed [`CorruptState`](super::CorruptState) — the
+/// atomic-rename protocol means a torn snapshot cannot happen through
+/// crashes alone, so there is no tolerated-tail case here.
+pub(crate) fn read(dir: &Path) -> Result<Option<(u64, Vec<TenantState>)>> {
+    let path = dir.join(SNAPSHOT_FILE);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("read snapshot {path:?}"))
+        }
+    };
+    let file = path.display().to_string();
+    let corrupt = |offset: u64, detail: String| CorruptState {
+        file: file.clone(),
+        offset,
+        detail,
+    };
+    if bytes.len() < 8 + 12 {
+        return Err(corrupt(
+            0,
+            format!("snapshot is only {} byte(s)", bytes.len()),
+        )
+        .into());
+    }
+    if &bytes[..4] != SNAP_MAGIC {
+        return Err(corrupt(0, "bad snapshot magic".into()).into());
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(corrupt(
+            4,
+            format!("unsupported snapshot format version {version}"),
+        )
+        .into());
+    }
+    let body = &bytes[8..bytes.len() - 4];
+    let stored =
+        u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        return Err(corrupt(
+            8,
+            format!(
+                "snapshot body CRC mismatch (stored {stored:08x}, \
+                 computed {computed:08x})"
+            ),
+        )
+        .into());
+    }
+    let mut r = Reader::new(body);
+    let parse = |e: String| corrupt(8, e);
+    let last_seq = r.u64("last_seq").map_err(parse)?;
+    let count = r.u32("entry count").map_err(parse)? as usize;
+    if count > MAX_SNAPSHOT_ENTRIES {
+        return Err(corrupt(
+            8,
+            format!("entry count {count} exceeds cap {MAX_SNAPSHOT_ENTRIES}"),
+        )
+        .into());
+    }
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        entries.push(decode_tenant_state(&mut r).map_err(parse)?);
+    }
+    if r.remaining() != 0 {
+        return Err(corrupt(
+            8,
+            format!("{} trailing byte(s) after the last entry", r.remaining()),
+        )
+        .into());
+    }
+    Ok(Some((last_seq, entries)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::CorruptState;
+
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("qp_snapshot_unit")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ts(tenant: &str, version: u64) -> TenantState {
+        TenantState {
+            tenant: tenant.to_string(),
+            version,
+            q: 3,
+            n_layers: 1,
+            checksum: 7,
+            path: String::new(),
+            thetas: vec![0.25; 9],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_absent() {
+        let dir = tdir("rt");
+        assert!(read(&dir).unwrap().is_none());
+        let entries = vec![ts("a", 2), ts("b", 1)];
+        write(&dir, 17, &entries).unwrap();
+        let (seq, back) = read(&dir).unwrap().unwrap();
+        assert_eq!(seq, 17);
+        assert_eq!(back, entries);
+        // overwrite via rename: the new snapshot fully replaces the old
+        write(&dir, 21, &entries[..1]).unwrap();
+        let (seq, back) = read(&dir).unwrap().unwrap();
+        assert_eq!(seq, 21);
+        assert_eq!(back[..], entries[..1]);
+        // no temp litter
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
+    }
+
+    #[test]
+    fn undecodable_entries_are_refused_before_publishing() {
+        let dir = tdir("caps");
+        write(&dir, 1, &[ts("good", 1)]).unwrap();
+        // an entry the reader would refuse must never replace the good
+        // snapshot (put_str16's u16 prefix would wrap and the CRC would
+        // happily cover the garbage)
+        let mut bad = ts("x", 2);
+        bad.tenant = "t".repeat(70_000);
+        let e = write(&dir, 2, &[bad]).unwrap_err().to_string();
+        assert!(e.contains("exceeds the WAL cap"), "{e}");
+        // the previous snapshot is untouched and still reads back
+        let (seq, back) = read(&dir).unwrap().unwrap();
+        assert_eq!(seq, 1);
+        assert_eq!(back, vec![ts("good", 1)]);
+    }
+
+    #[test]
+    fn any_byte_flip_is_typed_corruption() {
+        let dir = tdir("flip");
+        write(&dir, 3, &[ts("t", 1)]).unwrap();
+        let path = dir.join(SNAPSHOT_FILE);
+        let clean = std::fs::read(&path).unwrap();
+        for pos in [0usize, 5, 9, clean.len() / 2, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            let e = read(&dir).unwrap_err();
+            assert!(
+                e.downcast_ref::<CorruptState>().is_some(),
+                "pos={pos}: untyped error {e}"
+            );
+        }
+        std::fs::write(&path, &clean).unwrap();
+        assert!(read(&dir).unwrap().is_some());
+    }
+}

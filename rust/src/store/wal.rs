@@ -1,0 +1,586 @@
+//! The write-ahead log: an append-only file of length-prefixed,
+//! CRC32-framed registry mutation records.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! header:  magic "QPWL" | u32 format version (1)
+//! record:  u32 payload_len | u32 crc32(payload_len LE || payload)
+//!          | payload
+//! payload: u64 seq | u8 kind (1 register, 2 swap, 3 evict)
+//!          register/swap: tenant-state (see below)
+//!          evict:         u16 tenant_len | tenant utf8
+//! tenant-state: u16 tenant_len | tenant utf8 | u64 version | u32 q
+//!               | u32 n_layers | u64 theta checksum
+//!               | u16 path_len | path utf8
+//!               | u32 n_thetas | f32 LE thetas
+//! ```
+//!
+//! Every record is written with a single `write_all`, so a crash leaves
+//! at most a *prefix* of the last record on disk — which is exactly the
+//! one torn trailing record [`mod@crate::store::recover`] tolerates. The
+//! CRC covers the length prefix as well as the payload: the length is
+//! what recovery uses to tell a torn tail from interior corruption, so
+//! a bit-flipped length that stays in bounds is caught as corruption
+//! rather than silently re-framing the log. (A length corrupted to
+//! reach *past* EOF is indistinguishable from a genuine torn append by
+//! construction; recovery bounds that ambiguity to less than one
+//! frame's worth of trailing bytes.)
+//!
+//! Sequence numbers start at 1, increase by exactly 1 per append, and
+//! survive compaction (the snapshot pins the last sequence it covers,
+//! and the truncated WAL keeps counting from there) — recovery uses
+//! them to skip records a snapshot already includes and to reject
+//! spliced or reordered logs as [`CorruptState`](super::CorruptState).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{StateRecord, TenantState};
+
+/// WAL file name inside a state directory.
+pub const WAL_FILE: &str = "wal.log";
+
+pub(crate) const WAL_MAGIC: &[u8; 4] = b"QPWL";
+pub(crate) const FORMAT_VERSION: u32 = 1;
+/// magic + format version.
+pub(crate) const HEADER_LEN: usize = 8;
+
+/// Far above any real record (a q = 12, many-layer adapter is ~KBs of
+/// thetas), far below anything that could turn framing garbage into a
+/// giant allocation.
+pub(crate) const MAX_RECORD_LEN: usize = 1 << 24;
+pub(crate) const MAX_WAL_TENANT_LEN: usize = 256;
+pub(crate) const MAX_WAL_PATH_LEN: usize = 4096;
+pub(crate) const MAX_WAL_THETAS: usize = 1 << 22;
+
+/// How hard "appended" is. The knob trades append throughput against
+/// the failure domain that can lose the WAL tail: `Buffered` survives
+/// any *process* crash (the bytes are in the OS page cache) but a power
+/// cut may drop the tail; `EveryN(n)` bounds that loss to n records;
+/// `Always` fsyncs every append. Snapshots are always fsynced
+/// regardless of this setting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Durability {
+    /// No explicit fsync: OS-crash-safe tail only.
+    #[default]
+    Buffered,
+    /// fsync after every n appends.
+    EveryN(u64),
+    /// fsync after every append.
+    Always,
+}
+
+// ------------------------------------------------------------------ crc32 ---
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+const CRC_INIT: u32 = 0xffff_ffff;
+
+fn crc_feed(mut c: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// CRC-32 (IEEE 802.3 polynomial), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc_feed(CRC_INIT, data) ^ 0xffff_ffff
+}
+
+/// CRC-32 of `a` followed by `b` without concatenating — the frame
+/// checksum covers the length prefix *and* the payload (the length is
+/// what decides torn-tail vs corruption at recovery, so it must not be
+/// the one unprotected field).
+pub(crate) fn crc32_pair(a: &[u8], b: &[u8]) -> u32 {
+    crc_feed(crc_feed(CRC_INIT, a), b) ^ 0xffff_ffff
+}
+
+// --------------------------------------------------------- encode / decode ---
+
+fn put_u16(buf: &mut Vec<u8>, x: u16) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str16(buf: &mut Vec<u8>, s: &str) {
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn encode_tenant_state(buf: &mut Vec<u8>, ts: &TenantState) {
+    put_str16(buf, &ts.tenant);
+    put_u64(buf, ts.version);
+    put_u32(buf, ts.q);
+    put_u32(buf, ts.n_layers);
+    put_u64(buf, ts.checksum);
+    put_str16(buf, &ts.path);
+    put_u32(buf, ts.thetas.len() as u32);
+    for t in &ts.thetas {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian cursor over a CRC-verified payload.
+/// Errors are plain detail strings; the recovery layer wraps them into
+/// [`CorruptState`](super::CorruptState) with file and offset attached.
+pub(crate) struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "record ends short of {what} ({} byte(s) left, {n} needed)",
+                self.remaining()
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    pub(crate) fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub(crate) fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let s = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn str16(&mut self, what: &str, cap: usize) -> Result<String, String> {
+        let len = self.u16(what)? as usize;
+        if len > cap {
+            return Err(format!("{what} length {len} exceeds cap {cap}"));
+        }
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| format!("{what} is not utf8"))
+    }
+}
+
+pub(crate) fn decode_tenant_state(r: &mut Reader<'_>)
+                                  -> Result<TenantState, String> {
+    let tenant = r.str16("tenant", MAX_WAL_TENANT_LEN)?;
+    let version = r.u64("version")?;
+    let q = r.u32("q")?;
+    let n_layers = r.u32("n_layers")?;
+    let checksum = r.u64("checksum")?;
+    let path = r.str16("path", MAX_WAL_PATH_LEN)?;
+    let n_thetas = r.u32("theta count")? as usize;
+    if n_thetas > MAX_WAL_THETAS {
+        return Err(format!(
+            "theta count {n_thetas} exceeds cap {MAX_WAL_THETAS}"
+        ));
+    }
+    let bytes = r.take(n_thetas * 4, "theta payload")?;
+    let thetas = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(TenantState { tenant, version, q, n_layers, checksum, path, thetas })
+}
+
+const KIND_REGISTER: u8 = 1;
+const KIND_SWAP: u8 = 2;
+const KIND_EVICT: u8 = 3;
+
+fn check_tenant(tenant: &str) -> Result<()> {
+    if tenant.len() > MAX_WAL_TENANT_LEN {
+        bail!("tenant id of {} bytes exceeds the WAL cap \
+               {MAX_WAL_TENANT_LEN}", tenant.len());
+    }
+    Ok(())
+}
+
+/// Refuse to persist what the decoder would refuse to read — shared by
+/// the WAL append and the snapshot writer, because both formats use
+/// [`encode_tenant_state`] and `put_str16`'s `u16` length prefixes
+/// would silently wrap past the caps. (The caps are all well under
+/// `u16::MAX` / `u32::MAX`, so a validated value cannot wrap.)
+pub(crate) fn validate_tenant_state(ts: &TenantState) -> Result<()> {
+    check_tenant(&ts.tenant)?;
+    if ts.path.len() > MAX_WAL_PATH_LEN {
+        bail!("origin path of {} bytes exceeds the WAL cap \
+               {MAX_WAL_PATH_LEN}", ts.path.len());
+    }
+    if ts.thetas.len() > MAX_WAL_THETAS {
+        bail!("theta vector of {} entries exceeds the WAL cap \
+               {MAX_WAL_THETAS}", ts.thetas.len());
+    }
+    Ok(())
+}
+
+/// A record must never be acknowledged as durable and then fail
+/// recovery as an interior corruption.
+fn validate_record(rec: &StateRecord) -> Result<()> {
+    match rec {
+        StateRecord::Register(ts) | StateRecord::Swap(ts) => {
+            validate_tenant_state(ts)
+        }
+        StateRecord::Evict { tenant } => check_tenant(tenant),
+    }
+}
+
+/// One framed record (length prefix + CRC + payload), ready for a
+/// single `write_all`.
+pub(crate) fn encode_record(seq: u64, rec: &StateRecord) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    put_u64(&mut payload, seq);
+    match rec {
+        StateRecord::Register(ts) => {
+            payload.push(KIND_REGISTER);
+            encode_tenant_state(&mut payload, ts);
+        }
+        StateRecord::Swap(ts) => {
+            payload.push(KIND_SWAP);
+            encode_tenant_state(&mut payload, ts);
+        }
+        StateRecord::Evict { tenant } => {
+            payload.push(KIND_EVICT);
+            put_str16(&mut payload, tenant);
+        }
+    }
+    let len_bytes = (payload.len() as u32).to_le_bytes();
+    let mut frame = Vec::with_capacity(payload.len() + 8);
+    frame.extend_from_slice(&len_bytes);
+    put_u32(&mut frame, crc32_pair(&len_bytes, &payload));
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Decode one CRC-verified payload back into (seq, record).
+pub(crate) fn decode_record(payload: &[u8])
+                            -> Result<(u64, StateRecord), String> {
+    let mut r = Reader::new(payload);
+    let seq = r.u64("seq")?;
+    let kind = r.u8("kind")?;
+    let rec = match kind {
+        KIND_REGISTER => StateRecord::Register(decode_tenant_state(&mut r)?),
+        KIND_SWAP => StateRecord::Swap(decode_tenant_state(&mut r)?),
+        KIND_EVICT => StateRecord::Evict {
+            tenant: r.str16("tenant", MAX_WAL_TENANT_LEN)?,
+        },
+        other => return Err(format!("unknown record kind {other}")),
+    };
+    if r.remaining() != 0 {
+        return Err(format!(
+            "{} trailing byte(s) after a complete record",
+            r.remaining()
+        ));
+    }
+    Ok((seq, rec))
+}
+
+// ----------------------------------------------------------------- writer ---
+
+/// The append half of the WAL. Opened by
+/// [`StateStore::open`](super::StateStore::open) after recovery has
+/// established how much of an existing log is valid; a torn trailing
+/// record is truncated away here, so appends always start at a clean
+/// record boundary.
+pub struct WalWriter {
+    file: File,
+    durability: Durability,
+    next_seq: u64,
+    appended_since_sync: u64,
+    records_since_truncate: u64,
+}
+
+impl WalWriter {
+    /// Open for appending. `valid_len` is the byte length of the valid
+    /// record prefix ([`recover`](super::recover::recover) computed it);
+    /// anything beyond is a torn tail and is cut. `next_seq` is the
+    /// sequence number the next append will use.
+    pub(crate) fn open(path: &Path, valid_len: u64, next_seq: u64,
+                       durability: Durability) -> Result<WalWriter> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("open WAL {path:?}"))?;
+        if valid_len < HEADER_LEN as u64 {
+            // fresh log (or one that died before its header hit disk)
+            file.set_len(0)
+                .with_context(|| format!("reset WAL {path:?}"))?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(WAL_MAGIC)?;
+            file.write_all(&FORMAT_VERSION.to_le_bytes())?;
+            // a brand-new log's *directory entry* must survive a power
+            // cut too: per-append fdatasync covers file contents, never
+            // the entry — without this, Always/EveryN could lose the
+            // whole file at once instead of the documented bounded
+            // tail. One-time cost; the directory handle sync is best
+            // effort (not every platform supports it).
+            file.sync_all()
+                .with_context(|| format!("fsync new WAL {path:?}"))?;
+            if let Some(parent) = path.parent() {
+                // a platform that cannot open a directory handle has
+                // nothing to sync; one that can but fails to sync it is
+                // a real durability error
+                if let Ok(d) = File::open(parent) {
+                    d.sync_all().with_context(|| format!(
+                        "fsync WAL directory {parent:?}"))?;
+                }
+            }
+        } else {
+            file.set_len(valid_len)
+                .with_context(|| format!("truncate torn WAL tail {path:?}"))?;
+            file.seek(SeekFrom::End(0))?;
+        }
+        Ok(WalWriter {
+            file,
+            durability,
+            next_seq: next_seq.max(1),
+            appended_since_sync: 0,
+            records_since_truncate: 0,
+        })
+    }
+
+    /// Append one record in a single write, then apply the fsync
+    /// discipline. Returns the record's sequence number.
+    ///
+    /// A failed append rolls the file back to the pre-append length: a
+    /// partial frame left *mid-log* would make every later append
+    /// unrecoverable (recovery only tolerates a torn record at the
+    /// tail), and callers like the spool's deferred-eviction path are
+    /// expected to retry after an error.
+    pub fn append(&mut self, rec: &StateRecord) -> Result<u64> {
+        validate_record(rec)?;
+        let seq = self.next_seq;
+        let frame = encode_record(seq, rec);
+        // belt to validate_record's braces: the *encoded* payload must
+        // also clear the decoder's frame-length cap (a theta vector at
+        // its own cap plus framing overhead could otherwise slip past
+        // the per-field checks and brick recovery)
+        if frame.len() - 8 > MAX_RECORD_LEN {
+            bail!("encoded record of {} bytes exceeds the WAL frame cap \
+                   {MAX_RECORD_LEN}", frame.len() - 8);
+        }
+        let clean_len = self.file.stream_position()
+            .context("read WAL position")?;
+        if let Err(e) = self.write_frame(&frame) {
+            // best effort: truncate the partial frame (or the record
+            // whose fsync failed — the caller will treat the mutation
+            // as not-applied, so the log must agree) and re-seat the
+            // cursor on the clean boundary
+            let _ = self.file.set_len(clean_len);
+            let _ = self.file.seek(SeekFrom::Start(clean_len));
+            return Err(e)
+                .with_context(|| format!("append WAL record seq {seq}"));
+        }
+        self.next_seq += 1;
+        self.records_since_truncate += 1;
+        Ok(seq)
+    }
+
+    fn write_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.file.write_all(frame)?;
+        match self.durability {
+            Durability::Buffered => {}
+            Durability::Always => {
+                self.file.sync_data().context("fsync WAL append")?;
+            }
+            Durability::EveryN(n) => {
+                self.appended_since_sync += 1;
+                if self.appended_since_sync >= n.max(1) {
+                    self.file.sync_data().context("fsync WAL batch")?;
+                    self.appended_since_sync = 0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop every record (the snapshot now covers them) but keep the
+    /// sequence counter running. Always fsynced: a compaction boundary
+    /// must never be weaker than the log it replaced.
+    pub fn truncate_to_header(&mut self) -> Result<()> {
+        self.file.set_len(HEADER_LEN as u64)?;
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.sync_data().context("fsync WAL truncation")?;
+        self.appended_since_sync = 0;
+        self.records_since_truncate = 0;
+        Ok(())
+    }
+
+    /// Force everything appended so far to disk.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().context("fsync WAL")?;
+        self.appended_since_sync = 0;
+        Ok(())
+    }
+
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    pub fn records_since_truncate(&self) -> u64 {
+        self.records_since_truncate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ts(tenant: &str) -> TenantState {
+        TenantState {
+            tenant: tenant.to_string(),
+            version: 3,
+            q: 4,
+            n_layers: 2,
+            checksum: 0xdead_beef_cafe_f00d,
+            path: "/spool/x.qpck".into(),
+            thetas: vec![0.5, -0.25, 1.5],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip_all_kinds() {
+        for rec in [
+            StateRecord::Register(ts("a")),
+            StateRecord::Swap(ts("b")),
+            StateRecord::Evict { tenant: "c".into() },
+        ] {
+            let frame = encode_record(7, &rec);
+            let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(frame[4..8].try_into().unwrap());
+            let payload = &frame[8..];
+            assert_eq!(payload.len(), len);
+            assert_eq!(crc32_pair(&frame[0..4], payload), crc);
+            let (seq, back) = decode_record(payload).unwrap();
+            assert_eq!(seq, 7);
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation_trailing_bytes_and_bad_kind() {
+        let frame = encode_record(1, &StateRecord::Register(ts("t")));
+        let payload = &frame[8..];
+        // every strict prefix of the payload must fail to decode
+        for cut in 0..payload.len() {
+            assert!(decode_record(&payload[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage after a complete record is corruption
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        let e = decode_record(&padded).unwrap_err();
+        assert!(e.contains("trailing"), "{e}");
+        // unknown kind byte
+        let mut bad = payload.to_vec();
+        bad[8] = 99;
+        let e = decode_record(&bad).unwrap_err();
+        assert!(e.contains("unknown record kind"), "{e}");
+    }
+
+    #[test]
+    fn undecodable_records_are_refused_at_append() {
+        let dir = std::env::temp_dir()
+            .join("qp_wal_unit")
+            .join(format!("caps_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(WAL_FILE);
+        let mut w =
+            WalWriter::open(&path, 0, 1, Durability::Buffered).unwrap();
+        // every field the decoder caps is refused before any byte is
+        // written — an acknowledged append must never fail recovery
+        let mut bad = ts("t");
+        bad.tenant = "x".repeat(MAX_WAL_TENANT_LEN + 1);
+        assert!(w.append(&StateRecord::Register(bad)).is_err());
+        let mut bad = ts("t");
+        bad.path = "p".repeat(MAX_WAL_PATH_LEN + 1);
+        assert!(w.append(&StateRecord::Swap(bad)).is_err());
+        assert!(w
+            .append(&StateRecord::Evict {
+                tenant: "e".repeat(MAX_WAL_TENANT_LEN + 1),
+            })
+            .is_err());
+        // the log is untouched (header only) and still appends cleanly
+        assert_eq!(w.last_seq(), 0);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            HEADER_LEN as u64
+        );
+        assert_eq!(w.append(&StateRecord::Register(ts("ok"))).unwrap(), 1);
+    }
+
+    #[test]
+    fn decode_caps_hostile_lengths() {
+        // a payload claiming a huge theta count must fail on the cap,
+        // not attempt the allocation
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.push(1); // register
+        payload.extend_from_slice(&1u16.to_le_bytes());
+        payload.push(b't');
+        payload.extend_from_slice(&1u64.to_le_bytes()); // version
+        payload.extend_from_slice(&3u32.to_le_bytes()); // q
+        payload.extend_from_slice(&1u32.to_le_bytes()); // n_layers
+        payload.extend_from_slice(&0u64.to_le_bytes()); // checksum
+        payload.extend_from_slice(&0u16.to_le_bytes()); // path ""
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // theta count
+        let e = decode_record(&payload).unwrap_err();
+        assert!(e.contains("exceeds cap"), "{e}");
+    }
+}

@@ -1,0 +1,50 @@
+//! FNV-1a (64-bit) — the repository's one integrity/identity digest,
+//! shared by the adapter theta checksum
+//! ([`crate::serve::registry::theta_checksum`]), the `QPCK` v3
+//! checkpoint payload trailer, and the durable state records that carry
+//! both. One definition, so the constants can never drift between the
+//! writers and the verifiers.
+//!
+//! Why FNV-1a here: the per-byte step `h = (h ^ b) * PRIME` is a
+//! bijection on `h` for a fixed byte and injective in the byte for a
+//! fixed `h`, so any *same-length single-byte substitution* provably
+//! changes the digest — the exact guarantee the corruption-detection
+//! tests pin. (It is not cryptographic; authenticity is future work.)
+
+/// FNV-1a 64-bit offset basis.
+pub const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running digest (seed with [`OFFSET`]).
+pub fn update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// One-shot digest of a byte slice.
+pub fn hash(bytes: &[u8]) -> u64 {
+    update(OFFSET, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_known_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(hash(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let h = update(update(OFFSET, b"foo"), b"bar");
+        assert_eq!(h, hash(b"foobar"));
+    }
+}

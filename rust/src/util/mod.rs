@@ -4,6 +4,7 @@
 //! the test suite.
 
 pub mod bench;
+pub mod fnv;
 pub mod json;
 pub mod pool;
 pub mod rng;

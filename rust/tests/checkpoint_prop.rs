@@ -1,0 +1,161 @@
+//! Randomized round-trip property tests for the QPCK checkpoint
+//! container (ISSUE-5 satellite): seeded shapes, dtypes and tenant
+//! names through `save_adapter` / `load_adapter`, pinning the v3
+//! whole-payload checksum together with the hostile-header caps — every
+//! random checkpoint round-trips bit-exactly, and every single-byte
+//! corruption of it is rejected at load.
+
+use quantum_peft::coordinator::checkpoint::{
+    load, load_adapter, save_adapter, save_adapter_atomic, AdapterManifest,
+};
+use quantum_peft::runtime::HostTensor;
+use quantum_peft::util::rng::Rng;
+
+fn tdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("qp_ckpt_prop")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A random but valid tenant name (1..=24 alphanumeric-ish chars).
+fn random_tenant(rng: &mut Rng) -> String {
+    const ALPHABET: &[u8] =
+        b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789-_";
+    let len = rng.range(1, 25);
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len())] as char)
+        .collect()
+}
+
+/// A random tensor: 0..=3 dims of 1..=6 each, f32 or i32 payload.
+fn random_tensor(rng: &mut Rng, index: usize) -> (String, HostTensor) {
+    let name = format!("tensor_{index}_{}", random_tenant(rng));
+    let ndim = rng.below(4);
+    let shape: Vec<usize> = (0..ndim).map(|_| rng.range(1, 7)).collect();
+    let numel: usize = shape.iter().product();
+    let tensor = if rng.chance(0.5) {
+        HostTensor::f32(
+            shape,
+            (0..numel).map(|_| rng.normal() as f32 * 3.0).collect(),
+        )
+    } else {
+        HostTensor::i32(
+            shape,
+            (0..numel).map(|_| rng.below(1 << 20) as i32 - (1 << 19)).collect(),
+        )
+    };
+    (name, tensor)
+}
+
+#[test]
+fn random_adapters_roundtrip_bit_exactly() {
+    let dir = tdir("roundtrip");
+    let mut rng = Rng::new(0xc4ec_4b07);
+    for iter in 0..32 {
+        let manifest = AdapterManifest {
+            tenant: random_tenant(&mut rng),
+            q: rng.range(1, 13) as u32,
+            n_layers: rng.below(4) as u32,
+        };
+        let n_tensors = rng.range(1, 5);
+        let tensors: Vec<(String, HostTensor)> =
+            (0..n_tensors).map(|i| random_tensor(&mut rng, i)).collect();
+        let path = dir.join(format!("rt{iter}.qpck"));
+        if rng.chance(0.5) {
+            save_adapter(&path, &manifest, &tensors).unwrap();
+        } else {
+            save_adapter_atomic(&path, &manifest, &tensors).unwrap();
+        }
+        let (back_m, back_t) = load_adapter(&path).unwrap();
+        assert_eq!(back_m, manifest, "iter={iter}");
+        assert_eq!(back_t, tensors, "iter={iter}");
+        // the plain (manifest-skipping) loader sees the same tensors
+        assert_eq!(load(&path).unwrap(), tensors, "iter={iter}");
+    }
+}
+
+#[test]
+fn every_single_byte_corruption_of_a_random_adapter_is_rejected() {
+    let dir = tdir("corrupt");
+    let mut rng = Rng::new(0xbad_c0de);
+    for iter in 0..8 {
+        let manifest = AdapterManifest {
+            tenant: random_tenant(&mut rng),
+            q: rng.range(1, 13) as u32,
+            n_layers: rng.below(3) as u32,
+        };
+        let tensors = vec![random_tensor(&mut rng, 0)];
+        let path = dir.join(format!("c{iter}.qpck"));
+        save_adapter(&path, &manifest, &tensors).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // a handful of random positions plus the structural hot spots
+        let mut positions: Vec<usize> =
+            (0..24).map(|_| rng.below(clean.len())).collect();
+        positions.extend([0, 4, 8, clean.len() - 9, clean.len() - 1]);
+        let victim = dir.join(format!("c{iter}_bad.qpck"));
+        for pos in positions {
+            let mut bad = clean.clone();
+            bad[pos] ^= 1u8 << rng.below(8);
+            std::fs::write(&victim, &bad).unwrap();
+            assert!(
+                load_adapter(&victim).is_err(),
+                "iter={iter}: byte flip at {pos} loaded successfully"
+            );
+        }
+        // truncation at any depth is also always rejected
+        for frac in [1, 2, 3, 5] {
+            let cut = clean.len() * frac / 6;
+            std::fs::write(&victim, &clean[..cut]).unwrap();
+            assert!(load_adapter(&victim).is_err(), "iter={iter} cut={cut}");
+        }
+    }
+}
+
+#[test]
+fn hostile_caps_and_checksum_hold_together() {
+    // the caps pin down hostile *headers*; the checksum pins hostile
+    // *payloads*. Both must hold on the same file format version.
+    let dir = tdir("hostile");
+    let m = AdapterManifest { tenant: "acme".into(), q: 4, n_layers: 1 };
+    let path = dir.join("base.qpck");
+    save_adapter(&path, &m, &[(
+        "thetas".to_string(),
+        HostTensor::f32(vec![12], vec![0.25; 12]),
+    )]).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+    // version is 3 and the trailer is present
+    assert_eq!(&clean[4..8], &3u32.to_le_bytes());
+
+    // hostile header on the *current* version: tenant_len beyond the cap
+    // must fail on the cap check, before any checksum work
+    let p = dir.join("tenant_cap.qpck");
+    let mut b = clean.clone();
+    b[8..12].copy_from_slice(&(1u32 << 20).to_le_bytes());
+    std::fs::write(&p, &b).unwrap();
+    let e = load_adapter(&p).unwrap_err().to_string();
+    assert!(e.contains("tenant_len") && e.contains("exceeds cap"), "{e}");
+
+    // oversized tenant id refused at save time too
+    let long = AdapterManifest {
+        tenant: "x".repeat(300),
+        q: 4,
+        n_layers: 1,
+    };
+    let e = save_adapter(&dir.join("never.qpck"), &long, &[])
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("exceeds cap"), "{e}");
+
+    // a payload flip on the same base file is caught by the checksum
+    // with its dedicated message
+    let p = dir.join("payload.qpck");
+    let mut b = clean.clone();
+    let pos = clean.len() - 16; // inside the theta payload
+    b[pos] ^= 0x10;
+    std::fs::write(&p, &b).unwrap();
+    let e = load_adapter(&p).unwrap_err().to_string();
+    assert!(e.contains("payload checksum mismatch"), "{e}");
+}

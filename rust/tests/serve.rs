@@ -44,7 +44,7 @@ fn fifo_mode_is_byte_identical_for_any_worker_count() {
                 ..ServeConfig::default()
             },
             cache_bytes: 1 << 20,
-            spool_dir: None,
+            ..BenchOpts::default()
         };
         loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap()
     };
@@ -201,7 +201,7 @@ fn serve_bench_emits_summary_through_event_log() {
             ..ServeConfig::default()
         },
         cache_bytes: 1 << 20,
-        spool_dir: None,
+        ..BenchOpts::default()
     };
     let (summary, _) = loadgen::run_serve_bench(&opts, &log).unwrap();
     assert_eq!(summary.completed, 64);
@@ -264,7 +264,7 @@ fn open_loop_timed_mode_completes_all_requests() {
             ..ServeConfig::default()
         },
         cache_bytes: 1 << 20,
-        spool_dir: None,
+        ..BenchOpts::default()
     };
     let (summary, log) = loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap();
     assert_eq!(summary.completed, 48);
@@ -294,9 +294,10 @@ fn overload_opts(workers: usize) -> BenchOpts {
             policy: BatchPolicy { max_batch: 4, max_wait_us: 1 },
             fifo: true,
             admission: AdmissionConfig { rate_rps: 50.0, burst: 5.0, max_queue: 0 },
+            ..ServeConfig::default()
         },
         cache_bytes: 1 << 20,
-        spool_dir: None,
+        ..BenchOpts::default()
     }
 }
 
@@ -490,6 +491,103 @@ fn spool_deletion_evicts_only_after_inflight_pins_drain() {
     assert_eq!(s.evicted, 1, "{s:?}");
     assert!(reg.snapshot("acme").is_err());
     assert_eq!(reg.len(), 0);
+}
+
+#[test]
+fn spool_quarantines_payload_checksum_mismatch_with_reason() {
+    // a structurally valid v3 upload whose theta payload was corrupted
+    // in transit: the whole-payload checksum rejects it at load, the
+    // spool quarantines it, and the registry is never touched
+    let dir = spool_dir("cksum");
+    let reg = Arc::new(Registry::new(1 << 20));
+    let path = std::env::temp_dir().join(format!(
+        "qp_spool_cksum_events_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let log = EventLog::new(Some(path.clone()), false).unwrap();
+    let mut spool =
+        Spool::new(reg.clone(), &SpoolConfig::new(&dir), log).unwrap();
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    write_adapter(&dir, "acme.qpck", "acme", spec, &adapter_thetas(spec, 0.23));
+    let file = dir.join("acme.qpck");
+    let mut bytes = std::fs::read(&file).unwrap();
+    let pos = bytes.len() - 12; // inside the theta payload
+    bytes[pos] ^= 0x40;
+    std::fs::write(&file, &bytes).unwrap();
+    spool.poll();
+    let s = spool.poll();
+    assert_eq!((s.loaded, s.rejected), (0, 1), "{s:?}");
+    assert!(reg.is_empty(), "corrupt upload mutated the registry");
+    assert!(dir.join("rejected").join("acme.qpck").exists());
+    // the logged rejection names the checksum as the reason
+    let text = std::fs::read_to_string(&path).unwrap();
+    let reject = text.lines()
+        .map(|l| Json::parse(l).unwrap())
+        .find(|j| j.get("event").unwrap().as_str().unwrap() == "serve_spool_reject")
+        .expect("no serve_spool_reject line");
+    let reason = reject.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(reason.contains("payload checksum mismatch"), "{reason}");
+}
+
+#[test]
+fn admission_config_hot_reload_lifts_limits_mid_session() {
+    use std::time::{Duration, Instant};
+    let dir = spool_dir("admission_reload");
+    let cfg_path = dir.join("admission.json");
+    // start with a hard rate limit: one admission, then rejects (the
+    // logical clock never advances, so the bucket never refills)
+    std::fs::write(&cfg_path, r#"{"rate_rps": 0.000001, "burst": 1}"#).unwrap();
+    // the startup flow main.rs uses: read the file (recording its
+    // signature as the reload baseline) and configure from it
+    let (spec, text) =
+        quantum_peft::serve::AdmissionReloadSpec::read(&cfg_path).unwrap();
+    let initial = AdmissionConfig::from_json(&text).unwrap();
+    assert_eq!(initial.burst, 1.0);
+    let reg = test_registry_q3();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = ServeConfig {
+        workers: 1,
+        admission: initial,
+        admission_reload: Some(spec),
+        ..ServeConfig::default()
+    };
+    quantum_peft::serve::serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+        let r = h.submit("t0", 0, vec![0.25; 8])?;
+        h.flush();
+        r.wait()?;
+        // the bucket is empty now and stays empty under this config
+        assert!(h.submit("t0", 1, vec![0.25; 8]).is_err());
+        // lift the limits live: after the watcher's stability window
+        // the same tenant admits again, with no restart and without the
+        // first response having been disturbed
+        std::fs::write(&cfg_path, "{}").unwrap();
+        let t0 = Instant::now();
+        loop {
+            match h.submit("t0", 2, vec![0.25; 8]) {
+                Ok(r) => {
+                    h.flush();
+                    r.wait()?;
+                    break;
+                }
+                Err(_) if t0.elapsed() < Duration::from_secs(10) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Registry with one q=3 tenant "t0" (dim 8), for the reload test.
+fn test_registry_q3() -> Registry {
+    let reg = Registry::new(1 << 22);
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    let thetas: Vec<f32> = (0..spec.num_params())
+        .map(|i| (i as f32 * 0.37).sin())
+        .collect();
+    reg.register("t0", spec, thetas).unwrap();
+    reg
 }
 
 #[test]
