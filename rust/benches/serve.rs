@@ -4,9 +4,10 @@
 //! ISSUE-4 overload-shedding scenario (open loop at ~5x the admitted
 //! budget: rejected share + admitted-request p99), the dense-vs-
 //! structured apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`,
-//! and the ISSUE-5 durability lines: WAL append throughput per
+//! the ISSUE-5 durability lines: WAL append throughput per
 //! durability mode, and recovery wall-clock for 256 tenants before vs
-//! after snapshot compaction.
+//! after snapshot compaction — and the ISSUE-6 shard-scaling grid
+//! (1/4/16 shards x 256/4096 tenants, per-shard spread + fleet req/s).
 //!
 //! Uses the in-tree harness conventions (criterion is unavailable
 //! offline): self-contained, prints a stable one-line-per-cell report,
@@ -330,6 +331,58 @@ fn recovery_wall_clock() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// ISSUE-6 acceptance: horizontal scaling. The same closed-loop seeded
+/// workload against 1, 4 and 16 shards at 256 and 4096 tenants; each
+/// shard runs its own registry/batcher/worker pair, so fleet req/s
+/// should grow with the shard count until the driving thread saturates.
+/// Per-shard min/max served counts show how evenly the consistent-hash
+/// ring spreads the Zipf-skewed tenants.
+fn shard_scaling() {
+    println!("# shard scaling: closed-loop loadgen, q=5 L=1, zipf s=1.0, \
+              2 workers/shard");
+    println!("{:>7} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}",
+             "shards", "tenants", "requests", "fleet req/s", "worst p99",
+             "shard min", "shard max");
+    for &shards in &[1usize, 4, 16] {
+        for &tenants in &[256usize, 4096] {
+            let opts = BenchOpts {
+                load: LoadSpec {
+                    tenants,
+                    requests: 4096,
+                    concurrency: 64,
+                    pauli: PauliSpec { q: 5, n_layers: 1 },
+                    seed: 42,
+                    zipf_s: 1.0,
+                    open_rate_rps: 0.0,
+                },
+                serve: ServeConfig {
+                    workers: 2,
+                    ..ServeConfig::default()
+                },
+                cache_bytes: 8 << 20,
+                ..BenchOpts::default()
+            };
+            match quantum_peft::serve::run_sharded_bench(
+                &opts, shards, &EventLog::null())
+            {
+                Ok(report) => {
+                    let served: Vec<u64> = report.fleet.sessions.iter()
+                        .map(|(_, s)| s.completed)
+                        .collect();
+                    let min = served.iter().min().copied().unwrap_or(0);
+                    let max = served.iter().max().copied().unwrap_or(0);
+                    println!(
+                        "{:>7} {:>8} {:>10} {:>12.0} {:>12} {:>12} {:>12}",
+                        shards, tenants, report.fleet.completed(),
+                        report.fleet.fleet_rps(),
+                        fmt_ns(report.fleet.p99_us() * 1e3), min, max);
+                }
+                Err(e) => println!("{shards:>7} {tenants:>8} failed: {e}"),
+            }
+        }
+    }
+}
+
 fn main() {
     checkpoint_io();
     wal_append_throughput();
@@ -337,4 +390,5 @@ fn main() {
     structured_vs_dense();
     overload_shedding();
     serve_grid();
+    shard_scaling();
 }

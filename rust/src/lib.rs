@@ -40,6 +40,22 @@
 //! any worker count: the same determinism contract the sweep engine
 //! makes.
 //!
+//! ## The sharded serving tier
+//!
+//! [`serve::shard`] scales that single instance horizontally: N
+//! independent shards — each with its own registry, mat-cache LRU,
+//! batcher/worker pool, admission ledger and durable state dir
+//! (`<state_root>/shard-NNNN`) — behind a consistent-hash router
+//! (FNV-1a virtual-node ring over tenant names, `repro serve-bench
+//! --shards N`). Tenants migrate live between shards (write-ahead
+//! re-register on the target at the recorded version, atomic
+//! routing-table flip, pin-drain on the source) without dropping
+//! in-flight requests; a dead shard sheds its traffic with a typed
+//! rejection while the rest of the fleet keeps serving, and restarts
+//! from its own WAL with exactly its tenants. Deterministic routing
+//! composes with fifo mode: per-shard response logs stay byte-identical
+//! at any worker count.
+//!
 //! ## Durability model
 //!
 //! [`store`] makes the serving control plane's state durable: registry

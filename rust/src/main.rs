@@ -87,6 +87,7 @@ commands:
            [--rate-rps F] [--burst F] [--max-queue N]
            [--admission-config FILE] [--spool-dir PATH]
            [--state-dir PATH] [--durability buffered|always|N]
+           [--shards N]
            multi-tenant adapter serving benchmark: seeded Zipf loadgen
            against the serve registry/scheduler (closed loop by default;
            --rate > 0 switches to open-loop arrivals and timed batching).
@@ -109,6 +110,12 @@ commands:
            compacted to a snapshot at session end; a restart with the
            same --state-dir recovers every tenant at its recorded
            version and serves byte-identical responses.
+           --shards N runs N independent serving shards (each its own
+           registry, batcher, cache, admission ledger and
+           --state-dir subdirectory shard-NNNN) behind a
+           consistent-hash router and prints per-shard + fleet
+           metrics; tenant placement is a pure function of the name,
+           so per-shard response logs stay fifo-deterministic.
            fifo mode is byte-deterministic per seed at any --workers,
            rejections included (open-loop gaps advance a logical clock
            instead of sleeping); summary (p50/p95/p99, req/s, batch
@@ -445,7 +452,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut serve_cfg = ServeConfig { workers: opts.serve.workers,
                                       ..ServeConfig::default() };
     if let Some(v) = args.flags.get("max-batch") {
-        serve_cfg.policy.max_batch = v.parse().context("--max-batch")?;
+        let n: usize = v.parse().context("--max-batch")?;
+        if n == 0 {
+            bail!("--max-batch must be >= 1: a batch of 0 requests can \
+                   never dispatch");
+        }
+        serve_cfg.policy.max_batch = n;
     }
     if let Some(v) = args.flags.get("max-wait-us") {
         serve_cfg.policy.max_wait_us = v.parse().context("--max-wait-us")?;
@@ -504,18 +516,34 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let mb: f64 = v.parse().context("--cache-mb")?;
         opts.cache_bytes = (mb * (1 << 20) as f64) as usize;
     }
+    let shards: usize = match args.flags.get("shards") {
+        None => 1,
+        Some(v) => {
+            let n = v.parse().context("--shards")?;
+            if n == 0 {
+                bail!("--shards must be >= 1");
+            }
+            n
+        }
+    };
     opts.load = load;
     opts.serve = serve_cfg;
     let log = event_log()?;
-    let (summary, _log_text) = serve::run_serve_bench(&opts, &log)?;
     println!(
         "serve-bench: {} tenants (zipf s={}), q={} L={}, {} mode, \
-         max-batch {} / max-wait {}µs",
+         max-batch {} / max-wait {}µs{}",
         opts.load.tenants, opts.load.zipf_s, opts.load.pauli.q,
         opts.load.pauli.n_layers,
         if opts.serve.fifo { "fifo" } else { "timed" },
-        opts.serve.policy.max_batch, opts.serve.policy.max_wait_us);
-    print!("{}", summary.render());
+        opts.serve.policy.max_batch, opts.serve.policy.max_wait_us,
+        if shards > 1 { format!(", {shards} shards") } else { String::new() });
+    if shards > 1 {
+        let report = serve::run_sharded_bench(&opts, shards, &log)?;
+        print!("{}", report.fleet.render());
+    } else {
+        let (summary, _log_text) = serve::run_serve_bench(&opts, &log)?;
+        print!("{}", summary.render());
+    }
     Ok(())
 }
 

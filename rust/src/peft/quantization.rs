@@ -12,8 +12,13 @@
 //! the graph via runtime extras).
 
 /// Quantize a flat f32 buffer in place, groups of `g`, `bits`-bit levels.
+///
+/// `g == 0` means "no grouping": one group spanning the whole buffer
+/// (identical to any `g >= w.len()`). `chunks_mut(0)` would panic, so the
+/// degenerate value is clamped here rather than left to the slice API.
 pub fn quantize_inplace(w: &mut [f32], bits: u32, g: usize) {
     assert!((1..=16).contains(&bits));
+    let g = if g == 0 { w.len().max(1) } else { g };
     let levels = ((1u32 << bits) - 1) as f32;
     for chunk in w.chunks_mut(g) {
         let mut lo = f32::INFINITY;
@@ -34,8 +39,12 @@ pub fn quantize_inplace(w: &mut [f32], bits: u32, g: usize) {
 
 /// Storage bytes of a quantized buffer: n bits per weight + fp16 scale
 /// and zero point per group.
+///
+/// `g == 0` is the same "one group over the whole buffer" shorthand as in
+/// [`quantize_inplace`] (it would otherwise be a `div_ceil` by zero).
 pub fn quantized_storage_bytes(len: usize, bits: u32, g: usize) -> usize {
     let payload_bits = len * bits as usize;
+    let g = if g == 0 { len.max(1) } else { g };
     let groups = len.div_ceil(g);
     payload_bits.div_ceil(8) + groups * 4
 }
@@ -87,6 +96,24 @@ mod tests {
             assert!(err <= last_err);
             last_err = err;
         }
+    }
+
+    #[test]
+    fn zero_group_size_means_one_whole_buffer_group() {
+        // regression: g == 0 used to panic (chunks_mut(0) / div_ceil(0));
+        // it is now the documented "no grouping" shorthand
+        let mut rng = Rng::new(4);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let mut zero_g = orig.clone();
+        quantize_inplace(&mut zero_g, 4, 0);
+        let mut whole = orig.clone();
+        quantize_inplace(&mut whole, 4, orig.len());
+        assert_eq!(zero_g, whole);
+        assert_eq!(quantized_storage_bytes(256, 4, 0),
+                   quantized_storage_bytes(256, 4, 256));
+        // degenerate shapes stay total too
+        quantize_inplace(&mut [], 3, 0);
+        assert_eq!(quantized_storage_bytes(0, 3, 0), 0);
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub enum RejectReason {
     RateLimited,
     /// The global queue-depth cap was reached.
     QueueFull,
+    /// The shard this tenant routes to is down (sharded tier only — the
+    /// [`super::shard`] router sheds instead of queueing behind a dead
+    /// shard; a restarted shard serves the tenant again).
+    ShardDown,
 }
 
 impl RejectReason {
@@ -52,6 +56,7 @@ impl RejectReason {
         match self {
             RejectReason::RateLimited => "rate_limited",
             RejectReason::QueueFull => "queue_full",
+            RejectReason::ShardDown => "shard_down",
         }
     }
 }

@@ -34,7 +34,8 @@ use crate::util::rng::Rng;
 use super::admission::Rejected;
 use super::registry::{theta_checksum, PauliSpec, Registry};
 use super::scheduler::{Response, ResponseHandle};
-use super::server::{serve, ServeConfig, ServeSummary, ServerHandle};
+use super::server::{serve, ServeConfig, ServeSummary, SubmitTarget};
+use super::shard::{serve_sharded, FleetSummary, ShardConfig, ShardRouter};
 use super::spool::{SpoolConfig, SpoolWatcher};
 
 /// Load shape: how many tenants, how much traffic, how skewed.
@@ -127,23 +128,54 @@ pub fn populate(registry: &Registry, load: &LoadSpec) -> Result<Vec<u64>> {
     if load.tenants == 0 {
         bail!("loadgen needs at least one tenant");
     }
-    let n_params = load.pauli.num_params();
     let mut checksums = Vec::with_capacity(load.tenants);
     for i in 0..load.tenants {
-        let mut rng = Rng::new(load.seed ^ (i as u64 + 1).wrapping_mul(
-            0x9e37_79b9_7f4a_7c15));
-        let thetas: Vec<f32> = (0..n_params)
-            .map(|_| rng.normal() as f32 * 0.5)
-            .collect();
-        let checksum = theta_checksum(&thetas);
-        checksums.push(checksum);
+        checksums.push(populate_one(registry, load, i)?);
+    }
+    Ok(checksums)
+}
+
+/// The seeded adapter for tenant `i`: a pure function of (seed, i), so
+/// every placement — one registry or a sharded fleet — produces the same
+/// thetas and checksum.
+fn seeded_adapter(load: &LoadSpec, i: usize) -> (Vec<f32>, u64) {
+    let mut rng = Rng::new(load.seed ^ (i as u64 + 1).wrapping_mul(
+        0x9e37_79b9_7f4a_7c15));
+    let thetas: Vec<f32> = (0..load.pauli.num_params())
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let checksum = theta_checksum(&thetas);
+    (thetas, checksum)
+}
+
+/// Register tenant `i`'s seeded adapter into `registry` (skip-if-live,
+/// see [`populate`]); returns its theta checksum.
+fn populate_one(registry: &Registry, load: &LoadSpec, i: usize) -> Result<u64> {
+    let (thetas, checksum) = seeded_adapter(load, i);
+    let name = tenant_name(i);
+    let already_live = registry.snapshot(&name)
+        .map(|snap| snap.spec == load.pauli && snap.checksum == checksum)
+        .unwrap_or(false);
+    if !already_live {
+        registry.register(&name, load.pauli, thetas)?;
+    }
+    Ok(checksum)
+}
+
+/// [`populate`] for a sharded fleet: each tenant's seeded adapter is
+/// registered into the registry of the shard it *routes* to, so the
+/// fleet serves exactly the adapters a single instance would (identical
+/// thetas, checksums, and initial versions).
+pub fn populate_sharded(router: &ShardRouter<'_>, load: &LoadSpec)
+                        -> Result<Vec<u64>> {
+    if load.tenants == 0 {
+        bail!("loadgen needs at least one tenant");
+    }
+    let mut checksums = Vec::with_capacity(load.tenants);
+    for i in 0..load.tenants {
         let name = tenant_name(i);
-        let already_live = registry.snapshot(&name)
-            .map(|snap| snap.spec == load.pauli && snap.checksum == checksum)
-            .unwrap_or(false);
-        if !already_live {
-            registry.register(&name, load.pauli, thetas)?;
-        }
+        let registry = router.registry(router.shard_of(&name))?;
+        checksums.push(populate_one(&registry, load, i)?);
     }
     Ok(checksums)
 }
@@ -160,8 +192,9 @@ fn request_input(load: &LoadSpec, k: u64) -> Vec<f32> {
 /// doesn't abort the run; the per-tenant shed counts surface in the
 /// session's admission stats. Any other submit error still fails the
 /// driver.
-fn submit_or_shed(handle: &ServerHandle<'_>, tenant: &str, meta: u64,
-                  input: Vec<f32>) -> Result<Option<ResponseHandle>> {
+fn submit_or_shed<T: SubmitTarget>(handle: &T, tenant: &str, meta: u64,
+                                   input: Vec<f32>)
+                                   -> Result<Option<ResponseHandle>> {
     match handle.submit(tenant, meta, input) {
         Ok(h) => Ok(Some(h)),
         Err(e) if e.downcast_ref::<Rejected>().is_some() => Ok(None),
@@ -173,19 +206,23 @@ fn submit_or_shed(handle: &ServerHandle<'_>, tenant: &str, meta: u64,
 /// before the next wave. Returns responses in submission order (admitted
 /// requests only — request numbering always advances, so the workload is
 /// a pure function of the seed whether or not admission sheds).
-pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
-                   -> Result<Vec<Response>> {
+pub fn closed_loop<T: SubmitTarget>(handle: &T, load: &LoadSpec)
+                                    -> Result<Vec<Response>> {
     let zipf = Zipf::new(load.tenants, load.zipf_s);
     let mut pick = Rng::new(load.seed ^ 0xc1ed_1007);
     let mut out = Vec::with_capacity(load.requests);
-    let mut sent = 0u64;
-    while (sent as usize) < load.requests {
-        let wave = load.concurrency.max(1).min(load.requests - sent as usize);
+    // one counter, one type: `sent` counts in the same usize domain as
+    // `load.requests` (it only widens — losslessly on every supported
+    // platform — where the request id becomes the u64 wire `meta`)
+    let mut sent = 0usize;
+    while sent < load.requests {
+        let wave = load.concurrency.max(1).min(load.requests - sent);
         let mut handles = Vec::with_capacity(wave);
         for _ in 0..wave {
             let t = zipf.sample(&mut pick);
+            let meta = sent as u64;
             if let Some(h) = submit_or_shed(
-                handle, &tenant_name(t), sent, request_input(load, sent))?
+                handle, &tenant_name(t), meta, request_input(load, meta))?
             {
                 handles.push(h);
             }
@@ -209,8 +246,8 @@ pub fn closed_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
 /// beyond the per-tenant rate budget — sheds exactly the same requests
 /// at any worker count. In timed mode the gaps are real sleeps and
 /// admission runs on the wall clock.
-pub fn open_loop(handle: &ServerHandle<'_>, load: &LoadSpec)
-                 -> Result<Vec<Response>> {
+pub fn open_loop<T: SubmitTarget>(handle: &T, load: &LoadSpec)
+                                  -> Result<Vec<Response>> {
     if load.open_rate_rps <= 0.0 {
         bail!("open_loop needs open_rate_rps > 0");
     }
@@ -408,6 +445,86 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
     Ok((outcome.summary, response_log(&outcome.body)))
 }
 
+/// A finished sharded bench: fleet metrics, one canonical response log
+/// per shard (the byte-determinism oracle — each is sorted by `meta`
+/// within the shard's admitted subset), and the merged fleet-wide log.
+pub struct ShardBenchReport {
+    pub fleet: FleetSummary,
+    /// Index `i` holds shard `i`'s response log (grouped by where each
+    /// response's tenant routes at collection time).
+    pub shard_logs: Vec<String>,
+    /// All responses merged into one meta-sorted log — byte-identical
+    /// to a single-instance run over the same admitted set.
+    pub merged_log: String,
+}
+
+/// [`run_serve_bench`] over a sharded fleet (`repro serve-bench
+/// --shards N`): per-shard registries are populated through the router,
+/// the same seeded driver runs against the fleet, and per-shard +
+/// merged response logs come back with the fleet summary. `state_dir`
+/// becomes the fleet's `state_root` (per-shard dirs underneath);
+/// spool ingestion is not wired into the sharded tier yet.
+pub fn run_sharded_bench(opts: &BenchOpts, shards: usize, log: &EventLog)
+                         -> Result<ShardBenchReport> {
+    if opts.serve.fifo
+        && opts.serve.admission.rate_rps > 0.0
+        && opts.load.open_rate_rps <= 0.0
+    {
+        bail!("--rate-rps with fifo mode needs open-loop arrivals \
+               (--rate > 0), or use --mode timed: the closed-loop fifo \
+               driver never advances the logical admission clock");
+    }
+    if opts.spool_dir.is_some() {
+        bail!("--spool-dir is not supported with --shards > 1: the spool \
+               watcher feeds a single registry, not a routed fleet");
+    }
+    let cfg = ShardConfig {
+        shards,
+        serve: opts.serve.clone(),
+        cache_bytes: opts.cache_bytes,
+        tenant_quota_bytes: opts.tenant_quota_bytes,
+        state_root: opts.state_dir.clone(),
+        durability: opts.durability,
+    };
+    let rt = Runtime::cpu()?;
+    log.emit("serve_shard_bench", vec![
+        ("shards", shards.into()),
+        ("tenants", opts.load.tenants.into()),
+        ("requests", opts.load.requests.into()),
+        ("workers_per_shard", opts.serve.workers.into()),
+        ("seed", Json::Num(opts.load.seed as f64)),
+        ("zipf_s", Json::Num(opts.load.zipf_s)),
+        ("mode", if opts.serve.fifo { "fifo" } else { "timed" }.into()),
+        ("state_root",
+         opts.state_dir.as_ref()
+             .map(|p| p.display().to_string())
+             .unwrap_or_default()
+             .into()),
+    ]);
+    let outcome = serve_sharded(&rt, &cfg, log, |router| {
+        populate_sharded(router, &opts.load)?;
+        let responses = if opts.load.open_rate_rps > 0.0 {
+            open_loop(router, &opts.load)?
+        } else {
+            closed_loop(router, &opts.load)?
+        };
+        let mut per_shard: Vec<Vec<Response>> = (0..shards)
+            .map(|_| Vec::new())
+            .collect();
+        for r in responses {
+            let shard = router.shard_of(&r.tenant);
+            per_shard[shard].push(r);
+        }
+        Ok(per_shard)
+    })?;
+    let fleet = FleetSummary { shards, sessions: outcome.sessions };
+    fleet.emit(log);
+    let shard_logs: Vec<String> =
+        outcome.body.iter().map(|rs| response_log(rs)).collect();
+    let merged_log = response_log(&outcome.body.concat());
+    Ok(ShardBenchReport { fleet, shard_logs, merged_log })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +548,29 @@ mod tests {
         }
         for &c in &counts {
             assert!((800..1200).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_cdf_is_strictly_increasing_and_exactly_normalized() {
+        for n in [1usize, 2, 7, 64, 1000] {
+            for s in [0.0f64, 0.7, 1.0, 2.0] {
+                let zipf = Zipf::new(n, s);
+                assert_eq!(zipf.cdf.len(), n);
+                // every rank has positive mass, so the CDF is *strictly*
+                // increasing — a flat step would make its rank unreachable
+                for w in zipf.cdf.windows(2) {
+                    assert!(w[1] > w[0], "n={n} s={s}: {:?}", &w);
+                }
+                // dividing the running sum by its own total makes the
+                // last element exactly 1.0 (x/x == 1.0 in IEEE 754 for
+                // finite positive x), not merely close
+                assert_eq!(*zipf.cdf.last().unwrap(), 1.0, "n={n} s={s}");
+                // a draw just under 1.0 lands past cdf[n-2], so the
+                // inverse CDF returns the max rank — the tail is
+                // reachable and never indexes out of range
+                assert_eq!(zipf.sample_u(1.0 - 1e-12), n - 1, "n={n} s={s}");
+            }
         }
     }
 

@@ -29,7 +29,12 @@
 //!   thread ingests `QPCK` v2 uploads from a spool directory (validated
 //!   through the hardened checkpoint loader, hot-swapped live,
 //!   quarantined to `rejected/` on failure) and evicts tenants whose
-//!   files are deleted, deferring while requests are in flight.
+//!   files are deleted, deferring while requests are in flight;
+//! - [`shard`]: the horizontal tier — N independent shard instances
+//!   (each its own registry, batcher, worker pool, admission ledger and
+//!   state dir) behind a consistent-hash router, with live tenant
+//!   migration and per-shard crash recovery (`repro serve-bench
+//!   --shards N`).
 //!
 //! Determinism knobs: `fifo` server mode forms batches purely from the
 //! submission sequence (no wall clock), admission runs on a logical
@@ -60,23 +65,55 @@
 //! surviving tenants at their recorded versions with byte-identical
 //! responses (`tests/store.rs` pins this with a crash-injection
 //! matrix).
+//!
+//! ## The shard tier
+//!
+//! [`shard`] composes N complete serving stacks behind one
+//! [`ShardRouter`](shard::ShardRouter). Placement is a consistent hash:
+//! tenant names map onto a virtual-node ring of FNV-1a hashes
+//! ([`crate::util::fnv`]), so routing is a pure function of (tenant
+//! name, shard count) and growing the fleet moves only ~1/N of tenants.
+//! Each shard persists to its *own* `StateStore` dir
+//! (`<state_root>/shard-NNNN`): a dead shard restarts from its own WAL
+//! and recovers exactly the tenants it owned, while the router sheds
+//! that shard's traffic with the typed
+//! [`RejectReason::ShardDown`](admission::RejectReason::ShardDown) and
+//! every other shard keeps serving. Live migration re-registers a
+//! tenant on the target at its recorded version (write-ahead into the
+//! target's WAL), flips the routing table atomically, then pin-drains
+//! the source through the `RequestGuard`/`EvictAttempt` deferral
+//! machinery — no in-flight request drops. Fifo determinism survives
+//! sharding because per-shard submission order is exactly the driver's
+//! submission order (synchronous routed round-trips) and every
+//! response's content depends only on (adapter thetas, version, input):
+//! per-shard response logs are byte-identical at any worker count, and
+//! a mid-run migration leaves the merged meta-sorted log byte-identical
+//! to a no-migration control over the same admitted set
+//! (`tests/serve.rs` pins all three).
 
 pub mod admission;
 pub mod loadgen;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod spool;
 
 pub use admission::{
     AdmissionConfig, AdmissionController, AdmissionReload,
     AdmissionReloadSpec, AdmissionStats, RejectReason, Rejected,
 };
-pub use loadgen::{run_serve_bench, BenchOpts, LoadSpec};
+pub use loadgen::{
+    populate_sharded, run_serve_bench, run_sharded_bench, BenchOpts,
+    LoadSpec, ShardBenchReport,
+};
 pub use registry::{AdapterVersion, CacheStats, EvictAttempt, PauliSpec, Registry};
-pub use scheduler::{BatchPolicy, Response, ResponseHandle};
+pub use scheduler::{BatchPolicy, InvalidBatchPolicy, Response, ResponseHandle};
 pub use server::{
     serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle,
-    STRUCTURED_APPLY_MIN_Q,
+    SubmitTarget, STRUCTURED_APPLY_MIN_Q,
+};
+pub use shard::{
+    serve_sharded, FleetSummary, ShardConfig, ShardOutcome, ShardRouter,
 };
 pub use spool::{FileWatch, Spool, SpoolConfig, SpoolStats, SpoolWatcher};

@@ -21,6 +21,7 @@
 //! is what makes end-to-end runs byte-reproducible at any worker count.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -42,6 +43,48 @@ impl Default for BatchPolicy {
         BatchPolicy { max_batch: 8, max_wait_us: 200 }
     }
 }
+
+impl BatchPolicy {
+    /// Validated constructor: `max_batch == 0` is a typed
+    /// [`InvalidBatchPolicy`] error, never a silent reinterpretation.
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Result<BatchPolicy> {
+        let policy = BatchPolicy { max_batch, max_wait_us };
+        policy.validate()?;
+        Ok(policy)
+    }
+
+    /// Reject nonsense knob values with a typed error. [`serve`]
+    /// (`crate::serve::serve`) calls this before a session starts, so a
+    /// zero `max_batch` built via a struct literal fails fast there
+    /// instead of being silently rewritten at push time (the old
+    /// behavior).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(InvalidBatchPolicy {
+                detail: "max_batch must be >= 1 (a batch of 0 requests can \
+                         never dispatch)".to_string(),
+            }
+            .into());
+        }
+        Ok(())
+    }
+}
+
+/// Typed rejection of an unusable [`BatchPolicy`] — recoverable via
+/// `err.downcast_ref::<InvalidBatchPolicy>()` like the other serving
+/// errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InvalidBatchPolicy {
+    pub detail: String,
+}
+
+impl fmt::Display for InvalidBatchPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid batch policy: {}", self.detail)
+    }
+}
+
+impl std::error::Error for InvalidBatchPolicy {}
 
 /// One served response.
 #[derive(Clone, Debug, PartialEq)]
@@ -178,16 +221,25 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// `policy` must already be validated ([`BatchPolicy::validate`] —
+    /// `serve` does this before any batcher exists); a zero `max_batch`
+    /// would make `push` buffer forever without ever forming a batch.
     pub fn new(policy: BatchPolicy) -> Batcher {
+        debug_assert!(policy.validate().is_ok());
         Batcher { policy, buffers: BTreeMap::new() }
     }
 
     /// Buffer one request; returns a full batch if this push completed
     /// one.
     pub fn push(&mut self, tenant: &str, req: PendingRequest) -> Option<Batch> {
-        let buf = self.buffers.entry(tenant.to_string()).or_default();
+        // hot path: the common existing-key case must not allocate a
+        // fresh String per request just to probe the map
+        if !self.buffers.contains_key(tenant) {
+            self.buffers.insert(tenant.to_string(), Vec::new());
+        }
+        let buf = self.buffers.get_mut(tenant).expect("key just ensured");
         buf.push(req);
-        if buf.len() >= self.policy.max_batch.max(1) {
+        if buf.len() >= self.policy.max_batch {
             let requests = std::mem::take(buf);
             Some(Batch { tenant: tenant.to_string(), requests })
         } else {
@@ -309,6 +361,56 @@ mod tests {
         };
         req.complete(resp.clone());
         assert_eq!(h.wait().unwrap(), resp);
+    }
+
+    #[test]
+    fn zero_max_batch_is_a_typed_construction_error() {
+        let e = BatchPolicy::new(0, 100).unwrap_err();
+        let typed = e.downcast_ref::<InvalidBatchPolicy>()
+            .expect("typed InvalidBatchPolicy lost");
+        assert!(typed.detail.contains("max_batch"), "{typed:?}");
+        assert!(e.to_string().contains("invalid batch policy"), "{e}");
+        // the same check guards a struct-literal policy via validate()
+        let lit = BatchPolicy { max_batch: 0, max_wait_us: 100 };
+        assert!(lit.validate().is_err());
+        assert!(BatchPolicy::new(1, 0).is_ok());
+        assert!(BatchPolicy::default().validate().is_ok());
+    }
+
+    #[test]
+    fn take_expired_is_per_tenant_and_tenant_ordered() {
+        let reg = reg_with(&["a", "b", "c"]);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait_us: 50 });
+        let base = Instant::now();
+        let mut handles = Vec::new();
+        // push in non-alphabetical order; "b"'s requests are 100µs
+        // younger than "a"'s and "c"'s
+        for (tenant, meta, age_us) in
+            [("c", 0u64, 0u64), ("a", 1, 0), ("b", 2, 100), ("c", 3, 0)]
+        {
+            let (mut req, h) = PendingRequest::new(
+                meta, vec![0.0; 4], reg.begin(tenant).unwrap());
+            req.submitted = base + Duration::from_micros(age_us);
+            handles.push(h);
+            assert!(b.push(tenant, req).is_none());
+        }
+        // at base+60µs only "a" and "c" have outwaited the 50µs policy;
+        // expiry scans the BTreeMap, so batches come out in tenant order
+        // regardless of push order — the contract shard-local batchers
+        // inherit
+        let batches = b.take_expired(base + Duration::from_micros(60));
+        let tenants: Vec<&str> =
+            batches.iter().map(|x| x.tenant.as_str()).collect();
+        assert_eq!(tenants, vec!["a", "c"]);
+        // within a tenant, requests keep their push order
+        assert_eq!(batches[1].requests.iter().map(|r| r.meta).collect::<Vec<_>>(),
+                   vec![0, 3]);
+        assert_eq!(b.pending(), 1);
+        // "b" expires once its own oldest request has waited long enough
+        let late = b.take_expired(base + Duration::from_micros(200));
+        assert_eq!(late.len(), 1);
+        assert_eq!(late[0].tenant, "b");
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

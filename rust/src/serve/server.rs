@@ -354,6 +354,42 @@ impl ServeSummary {
 
 // ---------------------------------------------------------------- server ---
 
+/// The submission surface a load driver needs, abstracted over *what*
+/// serves: a single scoped session ([`ServerHandle`]) or the sharded
+/// tier ([`super::shard::ShardRouter`]). The loadgen drivers are generic
+/// over this, so the fifo determinism oracle runs unchanged against
+/// either backend.
+pub trait SubmitTarget {
+    /// Admit one request (typed [`super::admission::Rejected`] on shed).
+    fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
+              -> Result<ResponseHandle>;
+    /// Dispatch all partial batches now.
+    fn flush(&self);
+    /// Advance the logical admission clock (fifo mode).
+    fn advance_clock(&self, dt_s: f64);
+    /// Whether batching runs in deterministic fifo mode.
+    fn is_fifo(&self) -> bool;
+}
+
+impl SubmitTarget for ServerHandle<'_> {
+    fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
+              -> Result<ResponseHandle> {
+        ServerHandle::submit(self, tenant, meta, input)
+    }
+
+    fn flush(&self) {
+        ServerHandle::flush(self)
+    }
+
+    fn advance_clock(&self, dt_s: f64) {
+        ServerHandle::advance_clock(self, dt_s)
+    }
+
+    fn is_fifo(&self) -> bool {
+        ServerHandle::is_fifo(self)
+    }
+}
+
 /// What `body` gets: the submission side of a live serve session.
 pub struct ServerHandle<'a> {
     registry: &'a Registry,
@@ -580,6 +616,10 @@ pub fn serve<R, F>(rt: &Runtime, registry: &Registry, cfg: &ServeConfig,
 where
     F: FnOnce(&ServerHandle<'_>) -> Result<R>,
 {
+    // fail fast on an unusable policy (e.g. max_batch == 0, which would
+    // buffer forever): a typed InvalidBatchPolicy before any thread or
+    // watcher starts, instead of a silent rewrite at push time
+    cfg.policy.validate()?;
     let metrics = Metrics::new();
     // logical clock in fifo mode: admission decisions depend only on the
     // submission sequence (plus explicit advance_clock calls), never on

@@ -1,0 +1,754 @@
+//! Sharded serving tier: N independent shard instances behind a
+//! consistent-hash router.
+//!
+//! Each shard owns the full single-instance serving stack — its own
+//! [`Registry`] (adapter slots + mat-cache LRU), its own
+//! batcher/scheduler and worker pool (one scoped [`serve`] session per
+//! shard), its own admission ledger, and (optionally) its own
+//! [`StateStore`] durability dir under `<state_root>/shard-NNNN`. The
+//! [`ShardRouter`] in front hashes tenant names onto a virtual-node ring
+//! (FNV-1a, [`crate::util::fnv`]) so placement is a pure function of
+//! (tenant name, shard count) — no coordination, no lookup service.
+//!
+//! ## Determinism
+//!
+//! Routing is deterministic, and each shard is a normal fifo serve
+//! session, so the single-instance byte-identity guarantee *composes*:
+//! a seeded driver submitting sequentially produces, per shard, a
+//! deterministic submission subsequence, hence byte-identical per-shard
+//! response logs at any worker count. Commands reach a shard through one
+//! FIFO channel (submits are synchronous round-trips), so batch
+//! composition on every shard is a pure function of the driver's
+//! submission order.
+//!
+//! ## Live migration
+//!
+//! [`ShardRouter::migrate`] moves one tenant between shards without
+//! dropping in-flight requests:
+//! 1. the adapter is re-registered on the target at its *recorded*
+//!    version — write-ahead into the target's WAL (a `Register` record),
+//!    then [`Registry::restore`] so the version/checksum pair served by
+//!    the target is byte-identical to the source's;
+//! 2. the routing table flips atomically (an override entry under a
+//!    write lock): new submissions land on the target;
+//! 3. the source pin-drains: its batcher is flushed so buffered requests
+//!    dispatch, and [`Registry::try_evict_tenant`] retries while the
+//!    [`RequestGuard`](super::registry::RequestGuard) pins report
+//!    [`EvictAttempt::Deferred`]; the final eviction appends the `Evict`
+//!    record to the source's WAL.
+//! Every in-flight request completes on whichever shard admitted it, and
+//! both shards serve identical (version, checksum, output) triples, so a
+//! mid-run migration leaves the merged meta-sorted response log
+//! byte-identical to a no-migration control over the same admitted set.
+//!
+//! ## Shard failure and recovery
+//!
+//! [`ShardRouter::kill_shard`] ends a shard's session and drops its
+//! registry and store handles; requests routing to a dead shard shed
+//! with the typed [`Rejected`] reason
+//! [`RejectReason::ShardDown`] while every other shard keeps serving.
+//! [`ShardRouter::restart_shard`] re-opens the shard's *own* state dir,
+//! replays its WAL/snapshot, restores exactly the tenants that shard
+//! owned at their recorded versions, and starts a fresh session.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::events::EventLog;
+use crate::runtime::Runtime;
+use crate::store::{Durability, StateRecord, StateStore, TenantState};
+use crate::util::fnv;
+use crate::util::json::Json;
+
+use super::admission::{RejectReason, Rejected};
+use super::registry::{EvictAttempt, Registry};
+use super::scheduler::ResponseHandle;
+use super::server::{serve, ServeConfig, ServeSummary, SubmitTarget};
+
+/// Virtual nodes per shard on the hash ring: enough that tenant load
+/// spreads evenly at small shard counts, cheap enough that building the
+/// ring is negligible (`shards * 64` u64 sorts).
+const VNODES_PER_SHARD: usize = 64;
+
+/// Fleet shape: how many shards, and what each shard's serving stack
+/// looks like. Every field except `shards` applies *per shard*.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    pub shards: usize,
+    /// Per-shard serve session config (`workers` is workers per shard).
+    pub serve: ServeConfig,
+    /// Per-shard materialization-cache byte budget.
+    pub cache_bytes: usize,
+    /// Per-tenant quota within each shard's cache (0 = off).
+    pub tenant_quota_bytes: usize,
+    /// When set, each shard persists its mutations to its own
+    /// [`StateStore`] under `<state_root>/shard-NNNN` — the recovery
+    /// source for [`ShardRouter::restart_shard`].
+    pub state_root: Option<PathBuf>,
+    /// WAL fsync cadence for the per-shard stores.
+    pub durability: Durability,
+}
+
+impl Default for ShardConfig {
+    fn default() -> ShardConfig {
+        ShardConfig {
+            shards: 4,
+            serve: ServeConfig::default(),
+            cache_bytes: 8 << 20,
+            tenant_quota_bytes: 0,
+            state_root: None,
+            durability: Durability::Buffered,
+        }
+    }
+}
+
+/// The per-shard durable state dir under a fleet root.
+pub fn shard_state_dir(root: &std::path::Path, shard: usize) -> PathBuf {
+    root.join(format!("shard-{shard:04}"))
+}
+
+// --------------------------------------------------------------- routing ---
+
+/// Consistent-hash ring (sorted vnode hashes -> shard index) plus the
+/// migration overrides. Swapped atomically under a `RwLock`: readers
+/// (every submit) take the read lock, a migration flip takes the write
+/// lock once.
+struct RoutingTable {
+    ring: Vec<(u64, usize)>,
+    overrides: BTreeMap<String, usize>,
+}
+
+fn build_ring(shards: usize) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(shards * VNODES_PER_SHARD);
+    for s in 0..shards {
+        for v in 0..VNODES_PER_SHARD {
+            let key = format!("shard-{s}-vnode-{v}");
+            ring.push((fnv::hash(key.as_bytes()), s));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+impl RoutingTable {
+    fn new(shards: usize) -> RoutingTable {
+        RoutingTable { ring: build_ring(shards), overrides: BTreeMap::new() }
+    }
+
+    /// Successor-vnode lookup (wrapping), after the override map.
+    fn route(&self, tenant: &str) -> usize {
+        if let Some(&s) = self.overrides.get(tenant) {
+            return s;
+        }
+        let h = fnv::hash(tenant.as_bytes());
+        let i = self.ring.partition_point(|&(k, _)| k < h);
+        self.ring[if i == self.ring.len() { 0 } else { i }].1
+    }
+}
+
+// -------------------------------------------------------------- commands ---
+
+/// One driver->shard command. A shard consumes its queue in FIFO order
+/// on its own control thread, inside its serve session's `body`.
+enum ShardCmd {
+    Submit {
+        tenant: String,
+        meta: u64,
+        input: Vec<f32>,
+        reply: Sender<Result<ResponseHandle>>,
+    },
+    Flush,
+    Advance { dt_s: f64 },
+    /// End the current serve session (the session flushes and drains
+    /// in-flight work before its summary is reported).
+    Stop,
+}
+
+/// Control-plane message for a shard's lifecycle thread.
+enum ShardRun {
+    /// Start a serve session over this registry.
+    Start { registry: Arc<Registry> },
+    /// Exit the lifecycle thread.
+    Shutdown,
+}
+
+/// Everything the router keeps per shard. `registry`/`store` are
+/// `None` while the shard is dead (killed, not yet restarted).
+struct ShardSeat {
+    cmd_tx: Sender<ShardCmd>,
+    run_tx: Sender<ShardRun>,
+    registry: Mutex<Option<Arc<Registry>>>,
+    store: Mutex<Option<Arc<StateStore>>>,
+    alive: AtomicBool,
+}
+
+/// Build one shard's registry (and durable store, when configured),
+/// restoring any recovered tenants at their recorded versions. Returns
+/// the recovered tenant names.
+fn build_shard_registry(cfg: &ShardConfig, shard: usize, log: &EventLog)
+                        -> Result<(Arc<Registry>, Option<Arc<StateStore>>,
+                                   Vec<String>)> {
+    let mut registry = Registry::new(cfg.cache_bytes)
+        .with_tenant_quota(cfg.tenant_quota_bytes);
+    let mut recovered_names = Vec::new();
+    let store = match &cfg.state_root {
+        Some(root) => {
+            let dir = shard_state_dir(root, shard);
+            let opened = StateStore::open(&dir, cfg.durability)
+                .with_context(|| format!("open shard {shard} state dir \
+                                          {dir:?}"))?;
+            for ts in &opened.recovered.tenants {
+                registry.restore(ts).with_context(|| {
+                    format!("shard {shard}: restoring recovered tenant {:?}",
+                            ts.tenant)
+                })?;
+                recovered_names.push(ts.tenant.clone());
+            }
+            log.emit("shard_state_recovered", vec![
+                ("shard", shard.into()),
+                ("dir", dir.display().to_string().into()),
+                ("tenants", opened.recovered.tenants.len().into()),
+                ("wal_records", Json::Num(opened.recovered.wal_records as f64)),
+                ("torn_tail", opened.recovered.torn_tail.to_string().into()),
+            ]);
+            let store = Arc::new(opened.store);
+            registry = registry.with_state_sink(store.clone());
+            Some(store)
+        }
+        None => None,
+    };
+    Ok((Arc::new(registry), store, recovered_names))
+}
+
+// ---------------------------------------------------------------- router ---
+
+/// What `body` gets from [`serve_sharded`]: the routing/submission front
+/// of the fleet, plus the rebalance and failure/recovery controls.
+pub struct ShardRouter<'a> {
+    cfg: &'a ShardConfig,
+    log: &'a EventLog,
+    table: RwLock<RoutingTable>,
+    seats: Vec<ShardSeat>,
+    results_rx: Mutex<Receiver<(usize, Result<ServeSummary>)>>,
+    /// Session summaries already collected (e.g. by `kill_shard`).
+    collected: Mutex<Vec<(usize, ServeSummary)>>,
+    /// Serve sessions started so far — how many results to expect.
+    started: AtomicUsize,
+}
+
+impl ShardRouter<'_> {
+    pub fn shards(&self) -> usize {
+        self.seats.len()
+    }
+
+    /// Where `tenant` routes right now (ring + migration overrides).
+    pub fn shard_of(&self, tenant: &str) -> usize {
+        self.table.read().unwrap().route(tenant)
+    }
+
+    pub fn is_alive(&self, shard: usize) -> bool {
+        self.seats[shard].alive.load(Ordering::Acquire)
+    }
+
+    /// The shard's registry (tenant registration, inspection). Errors
+    /// while the shard is dead.
+    pub fn registry(&self, shard: usize) -> Result<Arc<Registry>> {
+        self.seats.get(shard)
+            .with_context(|| format!("no shard {shard}"))?
+            .registry.lock().unwrap().clone()
+            .with_context(|| format!("shard {shard} is down"))
+    }
+
+    fn shed(&self, tenant: &str) -> anyhow::Error {
+        Rejected {
+            tenant: tenant.to_string(),
+            reason: RejectReason::ShardDown,
+        }
+        .into()
+    }
+
+    /// Route and submit one request. A dead shard sheds with the typed
+    /// [`Rejected`] reason [`RejectReason::ShardDown`] instead of
+    /// queueing behind it. The call is a synchronous round-trip to the
+    /// shard's control thread, so per-shard submission order is exactly
+    /// the caller's submission order — the determinism guarantee.
+    pub fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
+                  -> Result<ResponseHandle> {
+        let shard = self.shard_of(tenant);
+        let seat = &self.seats[shard];
+        if !seat.alive.load(Ordering::Acquire) {
+            return Err(self.shed(tenant));
+        }
+        let (reply_tx, reply_rx) = channel();
+        let cmd = ShardCmd::Submit {
+            tenant: tenant.to_string(),
+            meta,
+            input,
+            reply: reply_tx,
+        };
+        if seat.cmd_tx.send(cmd).is_err() {
+            return Err(self.shed(tenant));
+        }
+        match reply_rx.recv() {
+            Ok(r) => r,
+            // the session ended under us (shard killed with the command
+            // queued): the request was never admitted — shed it
+            Err(_) => Err(self.shed(tenant)),
+        }
+    }
+
+    /// Flush partial batches on every live shard (shard order, so fifo
+    /// runs stay deterministic).
+    pub fn flush(&self) {
+        for seat in &self.seats {
+            if seat.alive.load(Ordering::Acquire) {
+                let _ = seat.cmd_tx.send(ShardCmd::Flush);
+            }
+        }
+    }
+
+    /// Advance every live shard's logical admission clock (fifo mode).
+    pub fn advance_clock(&self, dt_s: f64) {
+        for seat in &self.seats {
+            if seat.alive.load(Ordering::Acquire) {
+                let _ = seat.cmd_tx.send(ShardCmd::Advance { dt_s });
+            }
+        }
+    }
+
+    pub fn is_fifo(&self) -> bool {
+        self.cfg.serve.fifo
+    }
+
+    /// Live-migrate one tenant to `target` without dropping in-flight
+    /// requests (see the module docs for the three-step protocol).
+    pub fn migrate(&self, tenant: &str, target: usize) -> Result<()> {
+        if target >= self.shards() {
+            bail!("migrate {tenant:?}: no shard {target} \
+                   (fleet has {})", self.shards());
+        }
+        let source = self.shard_of(tenant);
+        if source == target {
+            return Ok(());
+        }
+        let src = self.registry(source)
+            .with_context(|| format!("migrate {tenant:?}: source shard \
+                                      {source} is down"))?;
+        let dst = self.registry(target)
+            .with_context(|| format!("migrate {tenant:?}: target shard \
+                                      {target} is down"))?;
+        // 1. re-register on the target at the *recorded* version:
+        // write-ahead into the target's WAL, then install — the same
+        // record/replay discipline the registry itself uses, so a target
+        // restart recovers the migrated tenant
+        let snap = src.snapshot(tenant)?;
+        let ts = TenantState {
+            tenant: tenant.to_string(),
+            version: snap.version,
+            q: snap.spec.q,
+            n_layers: snap.spec.n_layers,
+            checksum: snap.checksum,
+            path: snap.origin.clone(),
+            thetas: snap.thetas.as_ref().clone(),
+        };
+        if let Some(store) = self.seats[target].store.lock().unwrap().as_ref() {
+            store.append(&StateRecord::Register(ts.clone()))
+                .with_context(|| format!("migrate {tenant:?}: write-ahead \
+                                          to shard {target}"))?;
+        }
+        dst.restore(&ts)
+            .with_context(|| format!("migrate {tenant:?}: install on shard \
+                                      {target}"))?;
+        // 2. atomic routing flip: every submission from here on lands on
+        // the target, which serves the identical (version, checksum)
+        self.table.write().unwrap()
+            .overrides.insert(tenant.to_string(), target);
+        // 3. pin-drain the source: flush so its buffered requests
+        // dispatch, then retry while in-flight RequestGuard pins defer
+        // the eviction; the Evict record lands in the source's WAL
+        loop {
+            match src.try_evict_tenant(tenant)? {
+                EvictAttempt::Evicted | EvictAttempt::Unknown => break,
+                EvictAttempt::Deferred(_) => {
+                    let _ = self.seats[source].cmd_tx.send(ShardCmd::Flush);
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        self.log.emit("shard_migrate", vec![
+            ("tenant", tenant.into()),
+            ("from", source.into()),
+            ("to", target.into()),
+            ("version", Json::Num(ts.version as f64)),
+        ]);
+        Ok(())
+    }
+
+    /// Stop one shard's serve session and drop its registry and store
+    /// handles (closing its WAL). In-flight work drains before the
+    /// session ends; afterwards the shard's tenants shed with
+    /// [`RejectReason::ShardDown`] until [`restart_shard`](Self::restart_shard).
+    pub fn kill_shard(&self, shard: usize) -> Result<ServeSummary> {
+        let seat = self.seats.get(shard)
+            .with_context(|| format!("no shard {shard}"))?;
+        if !seat.alive.swap(false, Ordering::AcqRel) {
+            bail!("shard {shard} is already down");
+        }
+        seat.cmd_tx.send(ShardCmd::Stop)
+            .ok().context("shard control thread is gone")?;
+        let summary = self.recv_result_for(shard)?;
+        // keep the session in `collected` too: shutdown expects exactly
+        // `started` results, and this one just left the channel
+        self.collected.lock().unwrap().push((shard, summary.clone()));
+        // release the shard's handles: the WAL file closes, so a restart
+        // re-opens and replays the shard's own state dir cleanly
+        *seat.registry.lock().unwrap() = None;
+        *seat.store.lock().unwrap() = None;
+        self.log.emit("shard_killed", vec![("shard", shard.into())]);
+        Ok(summary)
+    }
+
+    /// Restart a dead shard from its own state dir: replay snapshot +
+    /// WAL, restore its tenants at their recorded versions, start a new
+    /// serve session. Returns the restored tenant names (empty when the
+    /// fleet runs without `state_root`).
+    pub fn restart_shard(&self, shard: usize) -> Result<Vec<String>> {
+        let seat = self.seats.get(shard)
+            .with_context(|| format!("no shard {shard}"))?;
+        if seat.alive.load(Ordering::Acquire) {
+            bail!("shard {shard} is already serving");
+        }
+        let (registry, store, recovered) =
+            build_shard_registry(self.cfg, shard, self.log)?;
+        *seat.registry.lock().unwrap() = Some(registry.clone());
+        *seat.store.lock().unwrap() = store;
+        self.started.fetch_add(1, Ordering::AcqRel);
+        seat.run_tx.send(ShardRun::Start { registry })
+            .ok().context("shard lifecycle thread is gone")?;
+        seat.alive.store(true, Ordering::Release);
+        self.log.emit("shard_restarted", vec![
+            ("shard", shard.into()),
+            ("tenants", recovered.len().into()),
+        ]);
+        Ok(recovered)
+    }
+
+    /// Block until the session result for `shard` arrives, stashing any
+    /// other shard's result (sessions can end concurrently at shutdown).
+    fn recv_result_for(&self, shard: usize) -> Result<ServeSummary> {
+        let rx = self.results_rx.lock().unwrap();
+        loop {
+            let (idx, res) = rx.recv()
+                .ok().context("shard session results channel closed")?;
+            let summary = res.with_context(|| {
+                format!("shard {idx} serve session failed")
+            })?;
+            if idx == shard {
+                return Ok(summary);
+            }
+            self.collected.lock().unwrap().push((idx, summary));
+        }
+    }
+}
+
+impl SubmitTarget for ShardRouter<'_> {
+    fn submit(&self, tenant: &str, meta: u64, input: Vec<f32>)
+              -> Result<ResponseHandle> {
+        ShardRouter::submit(self, tenant, meta, input)
+    }
+
+    fn flush(&self) {
+        ShardRouter::flush(self)
+    }
+
+    fn advance_clock(&self, dt_s: f64) {
+        ShardRouter::advance_clock(self, dt_s)
+    }
+
+    fn is_fifo(&self) -> bool {
+        ShardRouter::is_fifo(self)
+    }
+}
+
+// ----------------------------------------------------------- fleet scope ---
+
+/// A completed fleet run: whatever `body` returned plus one
+/// [`ServeSummary`] per serve *session* (a restarted shard contributes
+/// one per session), tagged with the shard index.
+pub struct ShardOutcome<R> {
+    pub body: R,
+    pub sessions: Vec<(usize, ServeSummary)>,
+}
+
+/// One shard's lifecycle loop: run serve sessions over whatever
+/// registries the router hands it, reporting each session's summary.
+fn shard_main(shard: usize, rt: &Runtime, cfg: &ShardConfig, log: &EventLog,
+              run_rx: Receiver<ShardRun>, cmd_rx: Receiver<ShardCmd>,
+              results_tx: Sender<(usize, Result<ServeSummary>)>) {
+    while let Ok(run) = run_rx.recv() {
+        let registry = match run {
+            ShardRun::Start { registry } => registry,
+            ShardRun::Shutdown => break,
+        };
+        let outcome = serve(rt, &registry, &cfg.serve, log, |h| {
+            while let Ok(cmd) = cmd_rx.recv() {
+                match cmd {
+                    ShardCmd::Submit { tenant, meta, input, reply } => {
+                        let _ = reply.send(h.submit(&tenant, meta, input));
+                    }
+                    ShardCmd::Flush => h.flush(),
+                    ShardCmd::Advance { dt_s } => h.advance_clock(dt_s),
+                    ShardCmd::Stop => break,
+                }
+            }
+            Ok(())
+        });
+        let _ = results_tx.send((shard, outcome.map(|o| o.summary)));
+    }
+}
+
+/// Run a scoped sharded serving fleet: N shard lifecycle threads (each
+/// hosting its own serve session, worker pool, registry, admission
+/// ledger and state dir), with `body` driving traffic through the
+/// [`ShardRouter`] on the caller's thread. When `body` returns, every
+/// live session is stopped and drained, live shards with a store are
+/// compacted, and all session summaries are returned.
+pub fn serve_sharded<R, F>(rt: &Runtime, cfg: &ShardConfig, log: &EventLog,
+                           body: F) -> Result<ShardOutcome<R>>
+where
+    F: FnOnce(&ShardRouter<'_>) -> Result<R>,
+{
+    if cfg.shards == 0 {
+        bail!("a shard fleet needs at least one shard");
+    }
+    // fail before any thread or state dir exists, not per shard
+    cfg.serve.policy.validate()?;
+    let (results_tx, results_rx) = channel();
+    std::thread::scope(|scope| {
+        let mut seats = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (cmd_tx, cmd_rx) = channel();
+            let (run_tx, run_rx) = channel();
+            let (registry, store, _recovered) =
+                build_shard_registry(cfg, shard, log)?;
+            let results_tx = results_tx.clone();
+            scope.spawn(move || {
+                shard_main(shard, rt, cfg, log, run_rx, cmd_rx, results_tx);
+            });
+            run_tx.send(ShardRun::Start { registry: registry.clone() })
+                .ok().context("shard thread died at startup")?;
+            seats.push(ShardSeat {
+                cmd_tx,
+                run_tx,
+                registry: Mutex::new(Some(registry)),
+                store: Mutex::new(store),
+                alive: AtomicBool::new(true),
+            });
+        }
+        let router = ShardRouter {
+            cfg,
+            log,
+            table: RwLock::new(RoutingTable::new(cfg.shards)),
+            seats,
+            results_rx: Mutex::new(results_rx),
+            collected: Mutex::new(Vec::new()),
+            started: AtomicUsize::new(cfg.shards),
+        };
+        // a panicking body must not leave lifecycle threads parked on
+        // their run channels (the scope would join forever): stop the
+        // fleet first, then resume the panic
+        let body_result = catch_unwind(AssertUnwindSafe(|| body(&router)));
+        let shutdown_result = shutdown_fleet(&router);
+        let body_value = match body_result {
+            Ok(r) => r?,
+            Err(p) => resume_unwind(p),
+        };
+        let sessions = shutdown_result?;
+        Ok(ShardOutcome { body: body_value, sessions })
+    })
+}
+
+/// Stop every live session, collect the remaining summaries, compact
+/// live shards' stores, and release the lifecycle threads.
+fn shutdown_fleet(router: &ShardRouter<'_>)
+                  -> Result<Vec<(usize, ServeSummary)>> {
+    for seat in &router.seats {
+        if seat.alive.load(Ordering::Acquire) {
+            let _ = seat.cmd_tx.send(ShardCmd::Stop);
+        }
+    }
+    let mut sessions = std::mem::take(&mut *router.collected.lock().unwrap());
+    let expected = router.started.load(Ordering::Acquire);
+    {
+        let rx = router.results_rx.lock().unwrap();
+        let mut first_err = None;
+        // count *received* results, not successes: a failed session still
+        // consumed its slot, and waiting for a replacement would block on
+        // a channel that never closes
+        let mut received = sessions.len();
+        while received < expected {
+            let Ok((idx, res)) = rx.recv() else { break };
+            received += 1;
+            match res {
+                Ok(summary) => sessions.push((idx, summary)),
+                Err(e) => {
+                    first_err.get_or_insert(
+                        e.context(format!("shard {idx} serve session \
+                                           failed")));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+    }
+    // session-end compaction per live shard, mirroring the unsharded
+    // bench: the next restart replays one snapshot instead of the WAL
+    for (shard, seat) in router.seats.iter().enumerate() {
+        let registry = seat.registry.lock().unwrap().clone();
+        let store = seat.store.lock().unwrap().clone();
+        if let (Some(registry), Some(store)) = (registry, store) {
+            registry.compact_into(&store)
+                .with_context(|| format!("compact shard {shard} state"))?;
+        }
+    }
+    for seat in &router.seats {
+        let _ = seat.run_tx.send(ShardRun::Shutdown);
+    }
+    sessions.sort_by_key(|&(idx, _)| idx);
+    Ok(sessions)
+}
+
+// --------------------------------------------------------- fleet summary ---
+
+/// Per-shard and fleet-rollup metrics for a sharded bench run.
+pub struct FleetSummary {
+    pub shards: usize,
+    /// (shard index, session summary), shard-ordered.
+    pub sessions: Vec<(usize, ServeSummary)>,
+}
+
+impl FleetSummary {
+    pub fn completed(&self) -> u64 {
+        self.sessions.iter().map(|(_, s)| s.completed).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.sessions.iter().map(|(_, s)| s.failed).sum()
+    }
+
+    /// Fleet throughput: total completions over the longest session wall
+    /// clock (sessions run concurrently).
+    pub fn fleet_rps(&self) -> f64 {
+        let wall = self.sessions.iter().map(|(_, s)| s.wall_s)
+            .fold(0.0f64, f64::max);
+        if wall > 0.0 { self.completed() as f64 / wall } else { 0.0 }
+    }
+
+    /// Worst p99 across shards — the fleet's tail is its slowest shard.
+    pub fn p99_us(&self) -> f64 {
+        self.sessions.iter().map(|(_, s)| s.p99_us)
+            .fold(0.0f64, f64::max)
+    }
+
+    pub fn emit(&self, log: &EventLog) {
+        for (shard, s) in &self.sessions {
+            log.emit("serve_shard", vec![
+                ("shard", (*shard).into()),
+                ("completed", Json::Num(s.completed as f64)),
+                ("failed", Json::Num(s.failed as f64)),
+                ("rps", Json::Num(s.rps)),
+                ("p99_us", Json::Num(s.p99_us)),
+            ]);
+        }
+        log.emit("serve_fleet", vec![
+            ("shards", self.shards.into()),
+            ("sessions", self.sessions.len().into()),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("fleet_rps", Json::Num(self.fleet_rps())),
+            ("p99_us", Json::Num(self.p99_us())),
+        ]);
+    }
+
+    /// Human-readable per-shard + fleet report for the CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (shard, sess) in &self.sessions {
+            let _ = writeln!(
+                s,
+                "shard {shard:>3}: {:>8} served  {:>9.0} req/s  p50 \
+                 {:>8.1}µs  p99 {:>8.1}µs  ({} failed)",
+                sess.completed, sess.rps, sess.p50_us, sess.p99_us,
+                sess.failed);
+        }
+        let _ = writeln!(
+            s,
+            "fleet ({} shards): {} served, {:.0} req/s, worst p99 \
+             {:.1}µs, {} failed",
+            self.shards, self.completed(), self.fleet_rps(), self.p99_us(),
+            self.failed());
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_routing_is_deterministic_and_covers_all_shards() {
+        let t = RoutingTable::new(4);
+        let t2 = RoutingTable::new(4);
+        let mut hit = [false; 4];
+        for i in 0..256 {
+            let name = format!("tenant{i:04}");
+            let s = t.route(&name);
+            assert_eq!(s, t2.route(&name), "routing must be pure");
+            assert!(s < 4);
+            hit[s] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "256 tenants must touch every \
+                                         shard: {hit:?}");
+        // single shard: everything routes to it
+        let one = RoutingTable::new(1);
+        assert_eq!(one.route("anything"), 0);
+    }
+
+    #[test]
+    fn consistent_hash_moves_few_tenants_when_fleet_grows() {
+        let four = RoutingTable::new(4);
+        let five = RoutingTable::new(5);
+        let n = 1000;
+        let moved = (0..n)
+            .filter(|i| {
+                let name = format!("tenant{i:04}");
+                four.route(&name) != five.route(&name)
+            })
+            .count();
+        // ideal consistent hashing moves ~1/5 of keys on 4 -> 5; allow
+        // slack for vnode variance but far below the ~4/5 a mod-N hash
+        // would reshuffle
+        assert!(moved < n * 2 / 5, "moved {moved}/{n}");
+        assert!(moved > 0, "growing the fleet must move someone");
+    }
+
+    #[test]
+    fn overrides_take_precedence_and_flip_routing() {
+        let mut t = RoutingTable::new(3);
+        let home = t.route("acme");
+        let away = (home + 1) % 3;
+        t.overrides.insert("acme".to_string(), away);
+        assert_eq!(t.route("acme"), away);
+        // other tenants keep their ring placement
+        assert_eq!(t.route("globex"), RoutingTable::new(3).route("globex"));
+    }
+}

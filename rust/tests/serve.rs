@@ -2,10 +2,13 @@
 //! fifo-mode byte-determinism at any worker count (ISSUE 3), hot-swap
 //! atomicity under 8-worker load, the LRU materialization cache's byte
 //! budget and counters end-to-end, the `serve-bench` loadgen's EventLog
-//! summary, and the ISSUE 4 control plane — deterministic rate-limited
+//! summary, the ISSUE 4 control plane — deterministic rate-limited
 //! overload shedding with per-tenant rejection counters, and
 //! spool-directory adapter ingestion (hot upload / quarantine /
-//! pin-respecting eviction) with no server restart.
+//! pin-respecting eviction) with no server restart — and the ISSUE 6
+//! shard tier: per-shard fifo byte-determinism, zero-drop live tenant
+//! migration, and per-shard crash recovery from each shard's own state
+//! dir.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -18,8 +21,8 @@ use quantum_peft::serve::loadgen::{self, response_log};
 use quantum_peft::serve::registry::theta_checksum;
 use quantum_peft::serve::scheduler::BatchPolicy;
 use quantum_peft::serve::{
-    AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, Registry, ServeConfig,
-    Spool, SpoolConfig, SpoolWatcher,
+    AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, Registry, RejectReason,
+    Rejected, ServeConfig, ShardConfig, Spool, SpoolConfig, SpoolWatcher,
 };
 use quantum_peft::util::json::Json;
 use quantum_peft::util::rng::Rng;
@@ -611,6 +614,227 @@ fn spool_watcher_ingests_in_background_and_joins_on_shutdown() {
     // shutdown joins the poller; the registry stays as the watcher left it
     watcher.shutdown();
     assert_eq!(reg.len(), 1);
+}
+
+// ---------------------------------------------------------- shard tier ---
+
+#[test]
+fn sharded_fifo_per_shard_logs_are_byte_identical_at_any_worker_count() {
+    let mk = |workers: usize, seed: u64| {
+        let opts = BenchOpts {
+            load: LoadSpec {
+                tenants: 16,
+                requests: 192,
+                concurrency: 24,
+                seed,
+                zipf_s: 1.1,
+                pauli: PauliSpec { q: 4, n_layers: 1 },
+                open_rate_rps: 0.0,
+            },
+            serve: ServeConfig {
+                workers,
+                policy: BatchPolicy { max_batch: 5, max_wait_us: 1 },
+                fifo: true,
+                ..ServeConfig::default()
+            },
+            cache_bytes: 1 << 20,
+            ..BenchOpts::default()
+        };
+        loadgen::run_sharded_bench(&opts, 4, &EventLog::null()).unwrap()
+    };
+    let base = mk(1, 7);
+    assert_eq!(base.fleet.completed(), 192);
+    assert_eq!(base.fleet.failed(), 0);
+    assert_eq!(base.fleet.sessions.len(), 4);
+    assert_eq!(base.shard_logs.len(), 4);
+    // 16 tenants on a 4-shard ring: traffic must spread past one shard
+    let busy = base.shard_logs.iter().filter(|l| !l.is_empty()).count();
+    assert!(busy >= 2, "only {busy} shard(s) saw traffic");
+    for workers in [4, 8] {
+        let r = mk(workers, 7);
+        assert_eq!(r.fleet.completed(), 192, "workers={workers}");
+        for (s, (a, b)) in
+            base.shard_logs.iter().zip(&r.shard_logs).enumerate()
+        {
+            assert_eq!(a, b, "shard {s} log diverged at workers={workers}");
+        }
+        assert_eq!(r.merged_log, base.merged_log,
+                   "merged log diverged at workers={workers}");
+    }
+    // a different seed must actually change the traffic
+    let other = mk(2, 8);
+    assert_ne!(other.merged_log, base.merged_log);
+}
+
+#[test]
+fn live_migration_drops_nothing_and_keeps_the_merged_log_byte_identical() {
+    let spec = PauliSpec { q: 4, n_layers: 1 };
+    let n_tenants = 6usize;
+    let reqs = 120u64;
+    let wave = 12usize;
+    let input_for = |meta: u64| -> Vec<f32> {
+        (0..spec.dim())
+            .map(|j| ((meta as usize * 31 + j) as f32 * 0.13).sin())
+            .collect()
+    };
+    let run = |migrate_at: Option<u64>| -> String {
+        let cfg = ShardConfig {
+            shards: 3,
+            serve: ServeConfig {
+                workers: 4,
+                policy: BatchPolicy { max_batch: 4, max_wait_us: 1 },
+                fifo: true,
+                ..ServeConfig::default()
+            },
+            cache_bytes: 1 << 20,
+            ..ShardConfig::default()
+        };
+        let rt = Runtime::cpu().unwrap();
+        let load = LoadSpec {
+            tenants: n_tenants, pauli: spec, seed: 42, ..LoadSpec::default()
+        };
+        let outcome = quantum_peft::serve::serve_sharded(
+            &rt, &cfg, &EventLog::null(), |router| {
+                loadgen::populate_sharded(router, &load)?;
+                let hot = loadgen::tenant_name(0);
+                let source = router.shard_of(&hot);
+                let mut responses = Vec::new();
+                let mut handles = Vec::new();
+                for meta in 0..reqs {
+                    let t = loadgen::tenant_name(meta as usize % n_tenants);
+                    handles.push(router.submit(&t, meta, input_for(meta))?);
+                    if migrate_at == Some(meta) {
+                        // migrate the hot tenant while un-dispatched
+                        // requests of its own still sit in the source
+                        // shard's batcher (metas 48 and 54 below)
+                        let target = (source + 1) % 3;
+                        router.migrate(&hot, target)?;
+                        assert_eq!(router.shard_of(&hot), target);
+                        // the source pin-drained and forgot the tenant;
+                        // the target serves it at the recorded version
+                        assert!(router.registry(source)?
+                                    .snapshot(&hot).is_err());
+                        assert_eq!(router.registry(target)?
+                                       .snapshot(&hot)?.version, 1);
+                    }
+                    if handles.len() == wave {
+                        router.flush();
+                        for h in handles.drain(..) {
+                            responses.push(h.wait()?);
+                        }
+                    }
+                }
+                router.flush();
+                for h in handles {
+                    responses.push(h.wait()?);
+                }
+                Ok(responses)
+            })
+            .unwrap();
+        response_log(&outcome.body)
+    };
+    // migrate right after submitting meta 57: the current wave started
+    // at 48, so tenant0000's metas 48 and 54 are in flight on the source
+    // when the routing table flips
+    let control = run(None);
+    let migrated = run(Some(57));
+    assert_eq!(control.lines().count(), reqs as usize,
+               "the control run dropped a request");
+    assert_eq!(migrated.lines().count(), reqs as usize,
+               "migration dropped an in-flight request");
+    assert_eq!(migrated, control, "migration changed the served bytes");
+}
+
+#[test]
+fn a_killed_shard_recovers_its_own_tenants_while_the_rest_keep_serving() {
+    let dir = std::env::temp_dir().join(format!(
+        "qp_shard_recover_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    let n_tenants = 12usize;
+    let cfg = ShardConfig {
+        shards: 4,
+        serve: ServeConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 2, max_wait_us: 1 },
+            fifo: true,
+            ..ServeConfig::default()
+        },
+        cache_bytes: 1 << 20,
+        state_root: Some(dir.clone()),
+        ..ShardConfig::default()
+    };
+    let rt = Runtime::cpu().unwrap();
+    let load = LoadSpec {
+        tenants: n_tenants, pauli: spec, seed: 9, ..LoadSpec::default()
+    };
+    quantum_peft::serve::serve_sharded(
+        &rt, &cfg, &EventLog::null(), |router| {
+            let checksums = loadgen::populate_sharded(router, &load)?;
+            // one served round so every tenant proves servable pre-kill
+            let mut handles = Vec::new();
+            for i in 0..n_tenants {
+                handles.push(router.submit(
+                    &loadgen::tenant_name(i), i as u64,
+                    vec![0.25; spec.dim()])?);
+            }
+            router.flush();
+            for h in handles {
+                h.wait()?;
+            }
+            // the victim: whatever shard the hottest tenant lives on
+            let victim = router.shard_of(&loadgen::tenant_name(0));
+            let victim_idx: Vec<usize> = (0..n_tenants)
+                .filter(|&i| {
+                    router.shard_of(&loadgen::tenant_name(i)) == victim
+                })
+                .collect();
+            let mut victim_tenants: Vec<String> =
+                victim_idx.iter().map(|&i| loadgen::tenant_name(i)).collect();
+            let survivor = (0..n_tenants)
+                .map(loadgen::tenant_name)
+                .find(|t| router.shard_of(t) != victim)
+                .expect("12 tenants on 4 shards leave a survivor");
+            router.kill_shard(victim)?;
+            assert!(!router.is_alive(victim));
+            assert!(router.registry(victim).is_err());
+            // the dead shard's tenants shed with the typed reason...
+            for t in &victim_tenants {
+                let err = router.submit(t, 1000, vec![0.25; spec.dim()])
+                    .unwrap_err();
+                let rej = err.downcast_ref::<Rejected>()
+                    .unwrap_or_else(|| panic!("untyped shed: {err}"));
+                assert!(matches!(rej.reason, RejectReason::ShardDown),
+                        "{:?}", rej.reason);
+                assert_eq!(&rej.tenant, t);
+            }
+            // ...while every other shard keeps serving
+            let h = router.submit(&survivor, 2000, vec![0.25; spec.dim()])?;
+            router.flush();
+            h.wait()?;
+            // restart from the shard's *own* state dir: it recovers
+            // exactly the tenants it owned, nothing more
+            let mut recovered = router.restart_shard(victim)?;
+            recovered.sort();
+            victim_tenants.sort();
+            assert_eq!(recovered, victim_tenants);
+            assert!(router.is_alive(victim));
+            // recovered tenants serve at their recorded version with the
+            // exact thetas populate registered
+            for &i in &victim_idx {
+                let h = router.submit(
+                    &loadgen::tenant_name(i), 3000 + i as u64,
+                    vec![0.25; spec.dim()])?;
+                router.flush();
+                let r = h.wait()?;
+                assert_eq!(r.version, 1,
+                           "tenant {i} re-registered instead of restored");
+                assert_eq!(r.checksum, checksums[i], "tenant {i}");
+            }
+            Ok(())
+        })
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
