@@ -1,0 +1,490 @@
+//! A deliberately small Rust lexer for the static-analysis pass.
+//!
+//! This is not a parser: it produces a flat token stream with line
+//! numbers, which is exactly enough for the token-sequence scanners in
+//! [`super::lints`]. What it must get right — and what a regex pass
+//! cannot — is *suppression of non-code text*: string literals
+//! (including raw and byte strings), char literals vs. lifetimes, and
+//! nested block comments must never leak tokens, or a log message
+//! containing the word `unwrap` would trip the panic-path lint.
+//!
+//! Two side channels ride along with the token stream:
+//! - `// analyze: allow(<lints>) <reason>` comments, parsed into
+//!   [`Allow`] records for the suppression matcher;
+//! - `#[cfg(test)]` / `#[test]` regions, marked per-token so lints can
+//!   skip test code (where `unwrap` and friends are the contract).
+
+/// One lexed token with the 1-based source line it starts on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `HashMap`, ...).
+    Ident(String),
+    /// Integer literal (`0`, `0xff`, `1_000u32`). Value is irrelevant
+    /// to every lint; only the *shape* (e.g. `buf[0]`) matters.
+    Int,
+    /// Any other literal: float, string, char, byte string.
+    Lit,
+    /// Single punctuation character (`::` is two `:` tokens).
+    Punct(char),
+}
+
+impl TokKind {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, TokKind::Ident(i) if i == s)
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, TokKind::Punct(p) if *p == c)
+    }
+}
+
+/// A parsed `// analyze: ...` suppression comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    /// Lint names inside `allow(...)`, e.g. `["panic-path"]`. Empty if
+    /// the directive was malformed (reported as a `suppression` finding).
+    pub lints: Vec<String>,
+    /// Free text after the closing paren. Required: a bare allow is
+    /// itself a finding.
+    pub reason: String,
+    /// True when the directive could not be parsed as `allow(<list>)`.
+    pub malformed: bool,
+}
+
+/// The lexed form of one source file.
+pub struct LexedFile {
+    pub toks: Vec<Tok>,
+    /// `is_test[i]` — token `i` lies inside a `#[cfg(test)]` or
+    /// `#[test]` item body.
+    pub is_test: Vec<bool>,
+    pub allows: Vec<Allow>,
+}
+
+pub fn lex(source: &str) -> LexedFile {
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let chars: Vec<char> = source.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = chars.len();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comments (incl. doc comments). `// analyze:` directives
+        // are captured; everything else is discarded.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            if let Some(directive) = text.trim_start_matches('/').trim().strip_prefix("analyze:") {
+                allows.push(parse_allow(line, directive.trim()));
+            }
+            continue;
+        }
+        // Block comments, nested.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings / raw identifiers / byte strings: r"..", r#".."#,
+        // br".."; b"..", b'x'; r#ident.
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let (skip, is_b) = if c == 'b' && i + 1 < n && chars[i + 1] == 'r' {
+                (2, true)
+            } else {
+                (1, c == 'b')
+            };
+            let rest = i + skip;
+            if rest < n
+                && (chars[rest] == '"' || chars[rest] == '#')
+                && (!is_b || skip == 2 || chars[rest] == '"')
+            {
+                if c == 'r' || skip == 2 {
+                    // raw (byte) string r##"..."## — count hashes.
+                    let mut j = rest;
+                    let mut hashes = 0usize;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        let tok_line = line;
+                        j += 1;
+                        'raw: while j < n {
+                            if chars[j] == '\n' {
+                                line += 1;
+                                j += 1;
+                            } else if chars[j] == '"' {
+                                let mut k = j + 1;
+                                let mut seen = 0usize;
+                                while k < n && seen < hashes && chars[k] == '#' {
+                                    seen += 1;
+                                    k += 1;
+                                }
+                                if seen == hashes {
+                                    j = k;
+                                    break 'raw;
+                                }
+                                j += 1;
+                            } else {
+                                j += 1;
+                            }
+                        }
+                        toks.push(Tok { line: tok_line, kind: TokKind::Lit });
+                        i = j;
+                        continue;
+                    }
+                    if hashes > 0 && c == 'r' {
+                        // r#ident — raw identifier.
+                        let mut j = rest + 1;
+                        let start = j;
+                        while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                            j += 1;
+                        }
+                        let ident: String = chars[start..j].iter().collect();
+                        toks.push(Tok { line, kind: TokKind::Ident(ident) });
+                        i = j;
+                        continue;
+                    }
+                }
+            }
+            if is_b && skip == 1 && rest < n && (chars[rest] == '"' || chars[rest] == '\'') {
+                // b"..." / b'x' — lex as the underlying (char) string.
+                i += 1; // consume the 'b'; fall through on the quote.
+            } else if c == 'r' || c == 'b' {
+                // plain identifier starting with r/b — handled below.
+            }
+        }
+        let c = chars[i];
+        // String literal.
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => i += 2,
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok { line: tok_line, kind: TokKind::Lit });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = chars.get(i + 1).copied().unwrap_or(' ');
+            if next == '\\' {
+                // escaped char literal '\n', '\'', '\u{..}'
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+                toks.push(Tok { line, kind: TokKind::Lit });
+                continue;
+            }
+            if chars.get(i + 2).copied() == Some('\'')
+                && !(next.is_alphanumeric() || next == '_')
+            {
+                // 'x' where x is punctuation — a char literal for sure.
+                i += 3;
+                toks.push(Tok { line, kind: TokKind::Lit });
+                continue;
+            }
+            if (next.is_alphanumeric() || next == '_') && chars.get(i + 2).copied() == Some('\'') {
+                // 'a' — single ident-char literal.
+                i += 3;
+                toks.push(Tok { line, kind: TokKind::Lit });
+                continue;
+            }
+            // Lifetime: consume the quote + identifier, emit nothing.
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            continue;
+        }
+        // Numbers.
+        if c.is_ascii_digit() {
+            let mut has_dot = false;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.'
+                    && !has_dot
+                    && chars.get(i + 1).is_some_and(|x| x.is_ascii_digit())
+                {
+                    has_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                line,
+                kind: if has_dot { TokKind::Lit } else { TokKind::Int },
+            });
+            continue;
+        }
+        // Identifiers / keywords.
+        if c.is_alphanumeric() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let ident: String = chars[start..i].iter().collect();
+            toks.push(Tok { line, kind: TokKind::Ident(ident) });
+            continue;
+        }
+        toks.push(Tok { line, kind: TokKind::Punct(c) });
+        i += 1;
+    }
+
+    let is_test = mark_test_regions(&toks);
+    LexedFile { toks, is_test, allows }
+}
+
+fn parse_allow(line: u32, directive: &str) -> Allow {
+    // Expected shape: allow(lint-a, lint-b) free-text reason
+    let Some(rest) = directive.strip_prefix("allow") else {
+        return Allow { line, lints: Vec::new(), reason: String::new(), malformed: true };
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Allow { line, lints: Vec::new(), reason: String::new(), malformed: true };
+    };
+    let Some(close) = rest.find(')') else {
+        return Allow { line, lints: Vec::new(), reason: String::new(), malformed: true };
+    };
+    let lints: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let reason = rest[close + 1..].trim().to_string();
+    Allow { line, lints, reason, malformed: lints.is_empty() }
+}
+
+/// Mark tokens inside `#[cfg(test)]` / `#[test]` item bodies. An
+/// attribute arms the flag; the body of the next `mod`/`fn` item (its
+/// outermost brace pair) is the marked region. A `;` before any `{`
+/// (e.g. `#[cfg(test)] mod tests;`) disarms it.
+fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut is_test = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind.is_punct('#') && is_test_attr(toks, i) {
+            // Find the start of the next item body.
+            let mut j = i + 1;
+            let mut found = None;
+            while j < toks.len() {
+                match &toks[j].kind {
+                    TokKind::Ident(id) if id == "mod" || id == "fn" => {
+                        found = Some(j);
+                        break;
+                    }
+                    TokKind::Punct(';') => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(item) = found {
+                let mut k = item;
+                while k < toks.len()
+                    && !toks[k].kind.is_punct('{')
+                    && !toks[k].kind.is_punct(';')
+                {
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].kind.is_punct('{') {
+                    let mut depth = 0i32;
+                    let open = k;
+                    while k < toks.len() {
+                        if toks[k].kind.is_punct('{') {
+                            depth += 1;
+                        } else if toks[k].kind.is_punct('}') {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let close = k.min(toks.len().saturating_sub(1));
+                    for flag in is_test.iter_mut().take(close + 1).skip(open) {
+                        *flag = true;
+                    }
+                    i = close + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    is_test
+}
+
+/// `toks[i]` is `#`; does `#[cfg(test)]` or `#[test]` start here?
+fn is_test_attr(toks: &[Tok], i: usize) -> bool {
+    let at = |off: usize| toks.get(i + off).map(|t| &t.kind);
+    if !matches!(at(1), Some(k) if k.is_punct('[')) {
+        return false;
+    }
+    match at(2) {
+        Some(k) if k.is_ident("test") => matches!(at(3), Some(k) if k.is_punct(']')),
+        Some(k) if k.is_ident("cfg") => {
+            matches!(at(3), Some(k) if k.is_punct('('))
+                && matches!(at(4), Some(k) if k.is_ident("test"))
+                && matches!(at(5), Some(k) if k.is_punct(')'))
+                && matches!(at(6), Some(k) if k.is_punct(']'))
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_emit_no_idents() {
+        let src = r##"
+            let s = "call .unwrap() here"; // unwrap in a comment
+            /* unwrap /* nested unwrap */ still comment */
+            let r = r#"raw unwrap"#;
+            let c = 'u';
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        // the lifetime name never becomes a stray literal
+        let lits = lex(src).toks.iter().filter(|t| t.kind == TokKind::Lit).count();
+        assert_eq!(lits, 0);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nline\"\nb";
+        let lx = lex(src);
+        let b = lx.toks.iter().find(|t| t.kind.is_ident("b")).unwrap();
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn allow_directive_parses() {
+        let src = "// analyze: allow(panic-path, determinism) bounded by take()\nlet x = 1;";
+        let lx = lex(src);
+        assert_eq!(lx.allows.len(), 1);
+        let a = &lx.allows[0];
+        assert_eq!(a.line, 1);
+        assert_eq!(a.lints, vec!["panic-path", "determinism"]);
+        assert_eq!(a.reason, "bounded by take()");
+        assert!(!a.malformed);
+    }
+
+    #[test]
+    fn bare_allow_has_empty_reason() {
+        let lx = lex("// analyze: allow(panic-path)\n");
+        assert_eq!(lx.allows[0].reason, "");
+        assert!(!lx.allows[0].malformed);
+    }
+
+    #[test]
+    fn malformed_directive_is_marked() {
+        let lx = lex("// analyze: suppress everything\n");
+        assert!(lx.allows[0].malformed);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n\
+                   fn t() { y.unwrap(); }\n}\n";
+        let lx = lex(src);
+        let unwraps: Vec<(u32, bool)> = lx
+            .toks
+            .iter()
+            .zip(&lx.is_test)
+            .filter(|(t, _)| t.kind.is_ident("unwrap"))
+            .map(|(t, test)| (t.line, *test))
+            .collect();
+        assert_eq!(unwraps, vec![(1, false), (4, true)]);
+    }
+
+    #[test]
+    fn integer_vs_float_literals() {
+        let lx = lex("a[0] + 1.5 + 0x1f");
+        let ints = lx.toks.iter().filter(|t| t.kind == TokKind::Int).count();
+        let lits = lx.toks.iter().filter(|t| t.kind == TokKind::Lit).count();
+        assert_eq!(ints, 2);
+        assert_eq!(lits, 1);
+    }
+
+    #[test]
+    fn range_does_not_eat_dots() {
+        let lx = lex("for i in 0..10 {}");
+        let dots = lx.toks.iter().filter(|t| t.kind.is_punct('.')).count();
+        assert_eq!(dots, 2);
+    }
+}

@@ -1,0 +1,698 @@
+//! The repo-specific lint passes.
+//!
+//! Each pass is a token-sequence scanner over [`super::lexer::LexedFile`];
+//! none of them parse Rust. The trade-off is spelled out per lint: a
+//! pattern is chosen so that the *absence* of findings is meaningful
+//! (no false-negative shapes exist in this codebase), while the rare
+//! legitimate hit is suppressed inline with a reasoned
+//! `// analyze: allow(<lint>) <reason>`.
+//!
+//! Scopes are path-substring based so the fixture corpus under
+//! `tests/analysis_fixtures/` classifies the same way the live tree
+//! does (`.../analysis_fixtures/serve/foo.rs` is "in `serve/`").
+
+use super::lexer::{LexedFile, Tok, TokKind};
+use super::order;
+
+/// One unsuppressed (or to-be-suppressed) lint hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Every lint the pass knows; `allow(<name>)` directives are checked
+/// against this list so a typo'd suppression is a finding, not a no-op.
+pub const LINT_NAMES: &[&str] = &[
+    "determinism",
+    "lock-discipline",
+    "panic-path",
+    "framing-casts",
+    "log-discipline",
+    "io-durability",
+    "suppression",
+];
+
+/// fifo / EventLog-emitting modules: anything here that iterates an
+/// unordered map or reads a wall clock can break byte-determinism.
+fn fifo_scope(rel: &str) -> bool {
+    rel.contains("serve/") || rel.contains("store/") || rel.contains("coordinator/")
+}
+
+/// Serving + durability tier: typed errors are the contract, panics are
+/// findings.
+fn serve_store_scope(rel: &str) -> bool {
+    rel.contains("serve/") || rel.contains("store/")
+}
+
+/// Binary framing code: every narrowing cast is a silent-truncation bug
+/// waiting for a >64 KiB tenant name.
+fn framing_scope(rel: &str) -> bool {
+    ["store/wal.rs", "store/snapshot.rs", "store/recover.rs", "coordinator/checkpoint.rs"]
+        .iter()
+        .any(|f| rel.contains(f))
+}
+
+/// Library modules where the EventLog is the only sanctioned sink.
+/// `main.rs` (the CLI), `report/` (table rendering) and `util/bench.rs`
+/// (the bench timer) print by design and are out of scope.
+fn log_scope(rel: &str) -> bool {
+    let included = [
+        "serve/", "store/", "coordinator/", "runtime/", "quantum/", "peft/", "data/",
+        "metrics/", "config/", "util/",
+    ];
+    included.iter().any(|d| rel.contains(d)) && !rel.contains("util/bench.rs")
+}
+
+pub fn run_all(rel: &str, lx: &LexedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    determinism(rel, lx, &mut out);
+    lock_discipline(rel, lx, &mut out);
+    panic_path(rel, lx, &mut out);
+    framing_casts(rel, lx, &mut out);
+    log_discipline(rel, lx, &mut out);
+    io_durability(rel, lx, &mut out);
+    out
+}
+
+fn ident_at<'a>(toks: &'a [Tok], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(toks: &[Tok], i: usize) -> Option<char> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Punct(c)) => Some(*c),
+        _ => None,
+    }
+}
+
+fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
+    punct_at(toks, i) == Some(c)
+}
+
+fn is_int(toks: &[Tok], i: usize) -> bool {
+    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Int))
+}
+
+// ---------------------------------------------------------------- determinism
+
+const ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "into_iter", "keys", "into_keys", "values", "values_mut",
+    "into_values", "drain", "retain",
+];
+
+fn determinism(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !fifo_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    // Pass 1: names bound (field or let) to a HashMap/HashSet type.
+    let mut unordered: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if ident_at(toks, i).is_some_and(|id| id == "HashMap" || id == "HashSet") {
+            if let Some(name) = binding_name(toks, i) {
+                if !unordered.contains(&name) {
+                    unordered.push(name);
+                }
+            }
+        }
+    }
+    // Pass 2: iteration over those names, and wall-clock reads.
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if let Some(src) = ident_at(toks, i).filter(|id| *id == "Instant" || *id == "SystemTime")
+        {
+            if is_punct(toks, i + 1, ':')
+                && is_punct(toks, i + 2, ':')
+                && ident_at(toks, i + 3) == Some("now")
+            {
+                out.push(Finding {
+                    lint: "determinism",
+                    file: rel.to_string(),
+                    line: toks[i].line,
+                    message: format!(
+                        "{src}::now() in a fifo/EventLog module — wall-clock reads break \
+                         byte-determinism; thread a logical clock through, or allow with \
+                         the reason the value never reaches a deterministic output"
+                    ),
+                });
+            }
+        }
+        let Some(name) = ident_at(toks, i).filter(|n| unordered.iter().any(|u| u.as_str() == *n))
+        else {
+            continue;
+        };
+        let method_iter = is_punct(toks, i + 1, '.')
+            && ident_at(toks, i + 2).is_some_and(|m| ITER_METHODS.contains(&m))
+            && is_punct(toks, i + 3, '(');
+        let for_iter = preceded_by_in(toks, i);
+        if method_iter || for_iter {
+            out.push(Finding {
+                lint: "determinism",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "iteration over unordered map/set `{name}` — HashMap order is \
+                     nondeterministic; use BTreeMap or sort the keys first \
+                     (fifo byte-determinism)"
+                ),
+            });
+        }
+    }
+}
+
+/// `toks[i]` is `HashMap`/`HashSet`. Return the name it is bound to, for
+/// `name: [path::]HashMap<...>` (field / typed let) and
+/// `let [mut] name = [path::]HashMap::new()` shapes.
+fn binding_name(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i;
+    while j >= 3
+        && is_punct(toks, j - 1, ':')
+        && is_punct(toks, j - 2, ':')
+        && ident_at(toks, j - 3).is_some()
+    {
+        j -= 3;
+    }
+    if j == 0 {
+        return None;
+    }
+    if is_punct(toks, j - 1, ':') && j >= 2 && !is_punct(toks, j - 2, ':') {
+        return ident_at(toks, j - 2).map(str::to_string);
+    }
+    if is_punct(toks, j - 1, '=') && j >= 2 {
+        return ident_at(toks, j - 2).map(str::to_string);
+    }
+    None
+}
+
+/// Is `toks[i]` (the map name, possibly the tail of a dotted path) the
+/// iterated expression of a `for ... in` / preceded by `&`/`&mut`?
+fn preceded_by_in(toks: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    // walk back over `owner .` chains: `inner . entries`
+    while j >= 2 && is_punct(toks, j - 1, '.') && ident_at(toks, j - 2).is_some() {
+        j -= 2;
+    }
+    // skip `&` / `mut`
+    while j >= 1 && (is_punct(toks, j - 1, '&') || ident_at(toks, j - 1) == Some("mut")) {
+        j -= 1;
+    }
+    j >= 1 && ident_at(toks, j - 1) == Some("in")
+}
+
+// ------------------------------------------------------------ lock-discipline
+
+const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
+const RECOVER_HELPERS: &[&str] = &["lock_or_recover", "read_or_recover", "write_or_recover"];
+
+fn lock_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !serve_store_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    // a) `.lock().unwrap()` / `.read().expect(...)` etc: poison panics.
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if is_punct(toks, i, '.')
+            && ident_at(toks, i + 1).is_some_and(|m| LOCK_METHODS.contains(&m))
+            && is_punct(toks, i + 2, '(')
+            && is_punct(toks, i + 3, ')')
+            && is_punct(toks, i + 4, '.')
+            && ident_at(toks, i + 5).is_some_and(|u| u == "unwrap" || u == "expect")
+            && is_punct(toks, i + 6, '(')
+        {
+            let m = ident_at(toks, i + 1).unwrap_or("lock");
+            out.push(Finding {
+                lint: "lock-discipline",
+                file: rel.to_string(),
+                line: toks[i + 5].line,
+                message: format!(
+                    "`.{m}()` + unwrap poisons-and-panics the whole fleet after one \
+                     worker crash — use util::sync::{m}_or_recover"
+                ),
+            });
+        }
+    }
+    // b) nested acquisition order vs analysis/order.rs.
+    let declared = order::order_for(rel);
+    for span in fn_spans(lx) {
+        let acqs = acquisitions(toks, span);
+        match declared {
+            Some(list) => {
+                let mut max_idx: Option<usize> = None;
+                let mut max_name = String::new();
+                for a in &acqs {
+                    if !a.held {
+                        continue;
+                    }
+                    let Some(idx) = list.iter().position(|n| *n == a.name.as_str()) else {
+                        continue;
+                    };
+                    if let Some(m) = max_idx {
+                        if idx < m {
+                            out.push(Finding {
+                                lint: "lock-discipline",
+                                file: rel.to_string(),
+                                line: a.line,
+                                message: format!(
+                                    "lock `{}` acquired while `{}` is held — declared \
+                                     order in analysis/order.rs is {:?}",
+                                    a.name, max_name, list
+                                ),
+                            });
+                        }
+                    }
+                    let is_new_max = match max_idx {
+                        Some(m) => idx > m,
+                        None => true,
+                    };
+                    if is_new_max {
+                        max_idx = Some(idx);
+                        max_name = a.name.clone();
+                    }
+                }
+            }
+            None => {
+                let mut held: Vec<&Acq> = Vec::new();
+                for a in &acqs {
+                    if a.held && !held.iter().any(|h| h.name == a.name) {
+                        held.push(a);
+                    }
+                }
+                if held.len() >= 2 {
+                    let names: Vec<&str> = held.iter().map(|a| a.name.as_str()).collect();
+                    out.push(Finding {
+                        lint: "lock-discipline",
+                        file: rel.to_string(),
+                        line: held[1].line,
+                        message: format!(
+                            "nested held locks {names:?} in one fn but this file has no \
+                             entry in analysis/order.rs — declare the acquisition order"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+struct Acq {
+    name: String,
+    line: u32,
+    /// Let-bound guard (held to end of scope) vs a temporary dropped at
+    /// the end of the statement (`*self.x.lock()... = v`). Heuristic: a
+    /// `let [mut] name = <acquisition>` statement counts as held.
+    held: bool,
+}
+
+/// Token index ranges of non-test `fn` bodies.
+fn fn_spans(lx: &LexedFile) -> Vec<(usize, usize)> {
+    let toks = &lx.toks;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) == Some("fn") && !lx.is_test[i] {
+            let mut k = i + 1;
+            while k < toks.len() && !is_punct(toks, k, '{') && !is_punct(toks, k, ';') {
+                k += 1;
+            }
+            if k < toks.len() && is_punct(toks, k, '{') {
+                let open = k;
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    if is_punct(toks, k, '{') {
+                        depth += 1;
+                    } else if is_punct(toks, k, '}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                spans.push((open, k.min(toks.len())));
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn acquisitions(toks: &[Tok], (open, close): (usize, usize)) -> Vec<Acq> {
+    let mut acqs = Vec::new();
+    for i in open..close {
+        // helper form: lock_or_recover(&self.buckets)
+        if ident_at(toks, i).is_some_and(|h| RECOVER_HELPERS.contains(&h))
+            && is_punct(toks, i + 1, '(')
+        {
+            let mut depth = 0i32;
+            let mut k = i + 1;
+            let mut last_ident: Option<&str> = None;
+            while k < close {
+                if is_punct(toks, k, '(') {
+                    depth += 1;
+                } else if is_punct(toks, k, ')') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if let Some(id) = ident_at(toks, k) {
+                    last_ident = Some(id);
+                }
+                k += 1;
+            }
+            if let Some(name) = last_ident {
+                acqs.push(Acq {
+                    name: name.to_string(),
+                    line: toks[i].line,
+                    held: is_let_bound(toks, i),
+                });
+            }
+            continue;
+        }
+        // raw form: path.lock( / .read( / .write(
+        if is_punct(toks, i, '.')
+            && ident_at(toks, i + 1).is_some_and(|m| LOCK_METHODS.contains(&m))
+            && is_punct(toks, i + 2, '(')
+            && ident_at(toks, i - 1).is_some()
+        {
+            let name = ident_at(toks, i - 1).unwrap_or_default().to_string();
+            // walk back over the dotted path to the expression head
+            let mut head = i - 1;
+            while head >= 2 && is_punct(toks, head - 1, '.') && ident_at(toks, head - 2).is_some()
+            {
+                head -= 2;
+            }
+            acqs.push(Acq {
+                name,
+                line: toks[i].line,
+                held: is_let_bound(toks, head),
+            });
+        }
+    }
+    acqs
+}
+
+/// Does the expression starting at `toks[start]` sit directly on the
+/// right-hand side of a `let [mut] name = ...` statement?
+fn is_let_bound(toks: &[Tok], start: usize) -> bool {
+    if start < 3 || !is_punct(toks, start - 1, '=') {
+        return false;
+    }
+    let mut p = start - 2;
+    if ident_at(toks, p).is_none() {
+        return false;
+    }
+    p -= 1;
+    if ident_at(toks, p) == Some("mut") {
+        if p == 0 {
+            return false;
+        }
+        p -= 1;
+    }
+    ident_at(toks, p) == Some("let")
+}
+
+// ----------------------------------------------------------------- panic-path
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn panic_path(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !serve_store_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if is_punct(toks, i, '.')
+            && ident_at(toks, i + 1).is_some_and(|m| m == "unwrap" || m == "expect")
+            && is_punct(toks, i + 2, '(')
+        {
+            // `.lock().unwrap()` already reported by lock-discipline.
+            let lock_chain = i >= 4
+                && is_punct(toks, i - 1, ')')
+                && is_punct(toks, i - 2, '(')
+                && ident_at(toks, i - 3).is_some_and(|m| LOCK_METHODS.contains(&m))
+                && is_punct(toks, i - 4, '.');
+            if !lock_chain {
+                let m = ident_at(toks, i + 1).unwrap_or("unwrap");
+                out.push(Finding {
+                    lint: "panic-path",
+                    file: rel.to_string(),
+                    line: toks[i + 1].line,
+                    message: format!(
+                        "`.{m}()` in serve/store non-test code — typed errors are the \
+                         contract here; propagate or handle, or allow with the \
+                         invariant that makes it unreachable"
+                    ),
+                });
+            }
+        }
+        if ident_at(toks, i).is_some_and(|m| PANIC_MACROS.contains(&m))
+            && is_punct(toks, i + 1, '!')
+            && is_punct(toks, i + 2, '(')
+        {
+            let m = ident_at(toks, i).unwrap_or("panic");
+            out.push(Finding {
+                lint: "panic-path",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "`{m}!` in serve/store non-test code — a panicking worker takes \
+                     its whole shard down; return a typed error"
+                ),
+            });
+        }
+        if is_punct(toks, i, '[')
+            && is_int(toks, i + 1)
+            && is_punct(toks, i + 2, ']')
+            && i >= 1
+            && (ident_at(toks, i - 1).is_some()
+                || is_punct(toks, i - 1, ')')
+                || is_punct(toks, i - 1, ']'))
+        {
+            out.push(Finding {
+                lint: "panic-path",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: "literal indexing can panic — use .get()/.first() or a slice \
+                          pattern, or allow with the bound that guarantees the length"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------------- framing-casts
+
+fn framing_casts(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !framing_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if ident_at(toks, i) == Some("as") {
+            if let Some(ty) =
+                ident_at(toks, i + 1).filter(|t| ["u16", "u32", "usize"].contains(t))
+            {
+                out.push(Finding {
+                    lint: "framing-casts",
+                    file: rel.to_string(),
+                    line: toks[i].line,
+                    message: format!(
+                        "bare `as {ty}` in framing code silently truncates — use \
+                         {ty}::try_from and surface a typed encode/CorruptState error"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- log-discipline
+
+const PRINT_MACROS: &[&str] = &["println", "eprintln", "print", "eprint"];
+
+fn log_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !log_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if ident_at(toks, i).is_some_and(|m| PRINT_MACROS.contains(&m))
+            && is_punct(toks, i + 1, '!')
+            && is_punct(toks, i + 2, '(')
+        {
+            let m = ident_at(toks, i).unwrap_or("println");
+            out.push(Finding {
+                lint: "log-discipline",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "`{m}!` in a library module — the EventLog is the only sanctioned \
+                     sink (stdout interleaving breaks fifo log comparisons)"
+                ),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------------- io-durability
+
+fn io_durability(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !rel.contains("store/") {
+        return;
+    }
+    let toks = &lx.toks;
+    let spans = fn_spans(lx);
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        let creates = (ident_at(toks, i) == Some("File")
+            && is_punct(toks, i + 1, ':')
+            && is_punct(toks, i + 2, ':')
+            && ident_at(toks, i + 3) == Some("create"))
+            || (ident_at(toks, i) == Some("fs")
+                && is_punct(toks, i + 1, ':')
+                && is_punct(toks, i + 2, ':')
+                && ident_at(toks, i + 3) == Some("write"));
+        if !creates {
+            continue;
+        }
+        let span = spans.iter().find(|(open, close)| i >= *open && i <= *close);
+        let synced = span.is_some_and(|(open, close)| {
+            (*open..*close)
+                .any(|k| ident_at(toks, k).is_some_and(|s| s == "sync_all" || s == "sync_data"))
+        });
+        if !synced {
+            out.push(Finding {
+                lint: "io-durability",
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: "file written in store/ without an fsync in the same fn — \
+                          durability requires the write-temp + sync_all + atomic-rename \
+                          idiom"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        run_all(rel, &lex(src))
+    }
+
+    #[test]
+    fn hashmap_iteration_flagged_btreemap_not() {
+        let src = "struct S { entries: HashMap<K, V>, sorted: BTreeMap<K, V> }\n\
+                   fn f(s: &S) { for k in s.entries.keys() {} for k in s.sorted.keys() {} }\n";
+        let f = findings("x/serve/cache.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "determinism");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn wall_clock_flagged_in_scope_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(findings("x/serve/a.rs", src).len(), 1);
+        assert_eq!(findings("x/report/a.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn lock_unwrap_flagged_and_not_double_counted() {
+        let src = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }\n";
+        let f = findings("x/serve/a.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "lock-discipline");
+    }
+
+    #[test]
+    fn order_inversion_flagged() {
+        // registry order is inner < tenants: acquiring inner after
+        // tenants (both held) is the inversion.
+        let src = "fn f(&self) {\n let t = write_or_recover(&self.tenants);\n \
+                   let i = lock_or_recover(&self.inner);\n}\n";
+        let f = findings("x/serve/registry.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("declared order"), "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn temporary_guard_is_not_held() {
+        let src = "fn f(&self) {\n let t = write_or_recover(&self.tenants);\n \
+                   *lock_or_recover(&self.inner) += 1;\n}\n";
+        assert_eq!(findings("x/serve/registry.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn undeclared_nested_locks_flagged() {
+        let src = "fn f(&self) {\n let a = lock_or_recover(&self.alpha);\n \
+                   let b = lock_or_recover(&self.beta);\n}\n";
+        let f = findings("x/serve/nolist_xyz.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "lock-discipline");
+        assert!(f[0].message.contains("analysis/order.rs"), "{f:?}");
+    }
+
+    #[test]
+    fn panic_macros_and_literal_indexing() {
+        let src = "fn f(v: &[u8]) -> u8 { if v.is_empty() { panic!(\"no\") } v[0] }\n";
+        let f = findings("x/store/a.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n fn f(v: &[u8]) { v[0]; x.unwrap(); }\n}\n";
+        assert_eq!(findings("x/serve/a.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn framing_cast_flagged_in_framing_files_only() {
+        let src = "fn f(n: u64) -> u32 { n as u32 }\n";
+        assert_eq!(findings("x/store/wal.rs", src).len(), 1);
+        assert_eq!(findings("x/store/mod.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn println_flagged_in_library_not_report() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        assert_eq!(findings("x/serve/a.rs", src).len(), 1);
+        assert_eq!(findings("x/report/tables.rs", src).len(), 0);
+        assert_eq!(findings("x/util/bench.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn unsynced_create_flagged_synced_not() {
+        let bad = "fn f(p: &Path) { let f = File::create(p); }\n";
+        let good = "fn f(p: &Path) -> io::Result<()> { let f = File::create(p)?; \
+                    f.sync_all()?; Ok(()) }\n";
+        assert_eq!(findings("x/store/snap.rs", bad).len(), 1);
+        assert_eq!(findings("x/store/snap.rs", good).len(), 0);
+    }
+}

@@ -1,0 +1,325 @@
+//! `repro analyze` — a std-only static-analysis pass over this repo's
+//! own invariants.
+//!
+//! The fifo byte-determinism contract (identical logs and responses at
+//! any worker count), the typed-error discipline in `serve/`/`store/`,
+//! and the WAL/QPCK framing rules are all properties clippy cannot
+//! express. This module enforces them with a lightweight lexer
+//! ([`lexer`]) and token-sequence scanners ([`lints`]) — no `syn`, no
+//! dependencies, fast enough to run as a blocking CI gate.
+//!
+//! ## Lints
+//!
+//! - `determinism` — in `serve/`, `store/`, `coordinator/`: iteration
+//!   over `HashMap`/`HashSet` bindings; `Instant::now` /
+//!   `SystemTime::now`.
+//! - `lock-discipline` — in `serve/`, `store/`:
+//!   `.lock()/.read()/.write()` + `unwrap`/`expect`; held-lock
+//!   acquisition order vs [`order::LOCK_ORDER`].
+//! - `panic-path` — in `serve/`, `store/`: `.unwrap()`, `.expect()`,
+//!   `panic!`-family macros, literal indexing.
+//! - `framing-casts` — in `store/wal.rs`, `store/snapshot.rs`,
+//!   `store/recover.rs`, `coordinator/checkpoint.rs`: bare `as u16` /
+//!   `as u32` / `as usize`.
+//! - `log-discipline` — in library modules: `println!`-family macros
+//!   (the EventLog is the sink).
+//! - `io-durability` — in `store/`: `File::create`/`fs::write` in a fn
+//!   with no `sync_all`/`sync_data`.
+//! - `suppression` — everywhere: malformed `// analyze:` directives,
+//!   allows without a reason, unknown lint names.
+//!
+//! ## Suppression
+//!
+//! A finding is suppressed by `// analyze: allow(<lint>) <reason>` on
+//! the same line or the line directly above. The reason is mandatory:
+//! a bare `allow(...)` suppresses nothing and is itself a `suppression`
+//! finding — every exception in the tree carries its justification.
+//!
+//! Test code (`#[cfg(test)]` / `#[test]` bodies) is exempt from every
+//! lint except `suppression`: unwraps and wall clocks are the test
+//! contract.
+
+pub mod lexer;
+pub mod lints;
+pub mod order;
+
+pub use lints::{Finding, LINT_NAMES};
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// A finding silenced by a reasoned allow, kept for reporting.
+#[derive(Debug, Clone)]
+pub struct Suppressed {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// The result of analyzing a set of paths.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed findings, sorted by (file, line, lint).
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Analyze one file's source text. `rel` is the path used both for
+/// reporting and for scope classification (normalized to `/`).
+pub fn analyze_source(rel: &str, source: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+    let lx = lexer::lex(source);
+    let raw = lints::run_all(rel, &lx);
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+
+    // Directive hygiene first: malformed directives, missing reasons,
+    // unknown lint names. These are never themselves suppressible.
+    for a in &lx.allows {
+        if a.malformed {
+            findings.push(Finding {
+                lint: "suppression",
+                file: rel.to_string(),
+                line: a.line,
+                message: "unrecognized analyze directive — expected \
+                          `// analyze: allow(<lint>) <reason>`"
+                    .to_string(),
+            });
+            continue;
+        }
+        if a.reason.is_empty() {
+            findings.push(Finding {
+                lint: "suppression",
+                file: rel.to_string(),
+                line: a.line,
+                message: format!(
+                    "allow({}) without a reason — every suppression must say why \
+                     the invariant holds here",
+                    a.lints.join(", ")
+                ),
+            });
+        }
+        for l in &a.lints {
+            if !LINT_NAMES.contains(&l.as_str()) {
+                findings.push(Finding {
+                    lint: "suppression",
+                    file: rel.to_string(),
+                    line: a.line,
+                    message: format!("allow names unknown lint `{l}` (known: {LINT_NAMES:?})"),
+                });
+            }
+        }
+    }
+
+    for f in raw {
+        let matched = lx.allows.iter().find(|a| {
+            !a.malformed
+                && !a.reason.is_empty()
+                && a.lints.iter().any(|l| l == f.lint)
+                && (a.line == f.line || a.line + 1 == f.line)
+        });
+        match matched {
+            Some(a) => suppressed.push(Suppressed { finding: f, reason: a.reason.clone() }),
+            None => findings.push(f),
+        }
+    }
+    (findings, suppressed)
+}
+
+/// Analyze `.rs` files under each path (files are taken as-is,
+/// directories walked recursively; `target/`, `vendor/`, and dot-dirs
+/// are skipped). Paths inside the report keep the caller's prefix.
+pub fn analyze_paths(paths: &[PathBuf]) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = Report::default();
+    for f in &files {
+        let source = std::fs::read_to_string(f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        let (findings, suppressed) = analyze_source(&rel, &source);
+        report.findings.extend(findings);
+        report.suppressed.extend(suppressed);
+        report.files_scanned += 1;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    report
+        .suppressed
+        .sort_by(|a, b| (&a.finding.file, a.finding.line).cmp(&(&b.finding.file, b.finding.line)));
+    Ok(report)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let md = std::fs::metadata(path)?;
+    if md.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') || name == "target" || name == "vendor" {
+            continue;
+        }
+        collect_rs(&entry.path(), out)?;
+    }
+    Ok(())
+}
+
+/// Per-lint finding counts, sorted by lint name.
+pub fn counts(report: &Report) -> Vec<(&'static str, usize)> {
+    let mut out: Vec<(&'static str, usize)> = Vec::new();
+    for f in &report.findings {
+        match out.iter_mut().find(|(l, _)| *l == f.lint) {
+            Some((_, n)) => *n += 1,
+            None => out.push((f.lint, 1)),
+        }
+    }
+    out.sort_by_key(|(l, _)| *l);
+    out
+}
+
+/// Human-readable rendering: one `file:line: [lint] message` per
+/// finding, then a summary block.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.lint, f.message));
+    }
+    if !report.findings.is_empty() {
+        out.push('\n');
+    }
+    for (lint, n) in counts(report) {
+        out.push_str(&format!("{lint}: {n}\n"));
+    }
+    out.push_str(&format!(
+        "{} finding(s), {} suppressed, {} file(s) scanned\n",
+        report.findings.len(),
+        report.suppressed.len(),
+        report.files_scanned
+    ));
+    out
+}
+
+fn finding_json(f: &Finding) -> Json {
+    json::obj(vec![
+        ("lint", f.lint.into()),
+        ("file", f.file.as_str().into()),
+        ("line", (f.line as usize).into()),
+        ("message", f.message.as_str().into()),
+    ])
+}
+
+/// Machine-readable rendering for the CI gate.
+pub fn render_json(report: &Report) -> String {
+    let findings: Vec<Json> = report.findings.iter().map(finding_json).collect();
+    let suppressed: Vec<Json> = report
+        .suppressed
+        .iter()
+        .map(|s| {
+            let mut o = finding_json(&s.finding);
+            if let Json::Obj(map) = &mut o {
+                map.insert("reason".to_string(), s.reason.as_str().into());
+            }
+            o
+        })
+        .collect();
+    let count_pairs: Vec<(&str, Json)> =
+        counts(report).into_iter().map(|(l, n)| (l, Json::from(n))).collect();
+    json::obj(vec![
+        ("version", 1usize.into()),
+        ("files_scanned", report.files_scanned.into()),
+        ("findings", Json::Arr(findings)),
+        ("suppressed", Json::Arr(suppressed)),
+        ("counts", json::obj(count_pairs)),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "// analyze: allow(panic-path) v is non-empty by construction\n\
+                   fn f(v: &[u8]) -> u8 { v[0] }\n";
+        let (findings, suppressed) = analyze_source("x/serve/a.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(suppressed.len(), 1);
+        assert_eq!(suppressed[0].reason, "v is non-empty by construction");
+    }
+
+    #[test]
+    fn trailing_allow_on_same_line_suppresses() {
+        let src = "fn f(v: &[u8]) -> u8 { v[0] } // analyze: allow(panic-path) len checked\n";
+        let (findings, suppressed) = analyze_source("x/serve/a.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(suppressed.len(), 1);
+    }
+
+    #[test]
+    fn bare_allow_is_a_finding_and_does_not_suppress() {
+        let src = "// analyze: allow(panic-path)\nfn f(v: &[u8]) -> u8 { v[0] }\n";
+        let (findings, _) = analyze_source("x/serve/a.rs", src);
+        let lints: Vec<&str> = findings.iter().map(|f| f.lint).collect();
+        assert!(lints.contains(&"suppression"), "{findings:?}");
+        assert!(lints.contains(&"panic-path"), "{findings:?}");
+    }
+
+    #[test]
+    fn unknown_lint_name_is_a_finding() {
+        let src = "// analyze: allow(panics) typo'd lint name\n";
+        let (findings, _) = analyze_source("x/serve/a.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("unknown lint"), "{findings:?}");
+    }
+
+    #[test]
+    fn wrong_lint_does_not_suppress() {
+        let src = "// analyze: allow(determinism) wrong lint\nfn f(v: &[u8]) -> u8 { v[0] }\n";
+        let (findings, _) = analyze_source("x/serve/a.rs", src);
+        assert!(findings.iter().any(|f| f.lint == "panic-path"), "{findings:?}");
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let src = "fn f(v: &[u8]) -> u8 { v[0] }\n";
+        let (findings, suppressed) = analyze_source("x/store/a.rs", src);
+        let report = Report { findings, suppressed, files_scanned: 1 };
+        let parsed = Json::parse(&render_json(&report)).unwrap();
+        assert_eq!(parsed.get("version").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parsed.get("files_scanned").unwrap().as_usize().unwrap(), 1);
+        let arr = parsed.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        let f = &arr[0];
+        assert_eq!(f.get("lint").unwrap().as_str().unwrap(), "panic-path");
+        assert_eq!(f.get("file").unwrap().as_str().unwrap(), "x/store/a.rs");
+        assert_eq!(f.get("line").unwrap().as_usize().unwrap(), 1);
+        assert!(parsed.get("counts").is_ok());
+    }
+
+    #[test]
+    fn text_render_has_anchors_and_summary() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let (findings, suppressed) = analyze_source("x/serve/a.rs", src);
+        let report = Report { findings, suppressed, files_scanned: 1 };
+        let text = render_text(&report);
+        assert!(text.contains("x/serve/a.rs:1: [determinism]"), "{text}");
+        assert!(text.contains("1 finding(s), 0 suppressed, 1 file(s) scanned"), "{text}");
+    }
+}

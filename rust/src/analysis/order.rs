@@ -1,0 +1,66 @@
+//! The declared lock-acquisition order, one list per file.
+//!
+//! The `lock-discipline` lint checks every function against this table:
+//! within one function body, guards that are *held* (let-bound — see
+//! [`super::lints`] for the held/temporary heuristic) must be acquired
+//! in list order. Acquiring a lock that sits earlier in the list while
+//! a later one is held is an inversion finding.
+//!
+//! Files in scope (`serve/` + `store/`) that are **not** listed here
+//! get the stricter default: any two distinct held locks nested in one
+//! function is a finding — the fix is to add (and think through) an
+//! entry below.
+//!
+//! Rationale for each entry:
+//! - `serve/registry.rs` — the mat-cache (`inner`) consults tenant pins
+//!   while evicting, and pin checks read the `tenants` table, so
+//!   `inner` must come first; registration/restore hold `tenants` while
+//!   swapping a slot's `current` adapter. Cache purges run *after* the
+//!   tenants guard drops (see `try_evict_tenant`) — nesting the other
+//!   way is exactly the inversion this table rejects.
+//! - `serve/server.rs` — metrics merge/summarize touch the latency
+//!   vector before the per-tenant map; the batcher is only ever locked
+//!   stand-alone (temporary guards), but give it a slot anyway so a
+//!   future held use is checked rather than "undeclared".
+//! - `serve/shard.rs` — the router's result channel is drained while
+//!   sessions are appended to `collected`; seat-level `registry`/`store`
+//!   handles are cloned out last during shutdown.
+//! - `store/mod.rs` — the WAL mutex is the store's only lock.
+//! - `serve/scheduler.rs` — each response slot's `state` is the only
+//!   lock; listed so nesting two slots is caught as an inversion of
+//!   "same name after same name" rather than slipping by undeclared.
+
+/// `(file-path substring, lock field names in required acquisition order)`.
+pub const LOCK_ORDER: &[(&str, &[&str])] = &[
+    ("serve/registry.rs", &["inner", "tenants", "current"]),
+    ("serve/server.rs", &["batcher", "lat_ns", "per_tenant_ns"]),
+    ("serve/shard.rs", &["table", "results_rx", "collected", "registry", "store"]),
+    ("serve/scheduler.rs", &["state"]),
+    ("store/mod.rs", &["wal"]),
+];
+
+/// The declared order for `rel` (normalized with `/` separators), if any.
+pub fn order_for(rel: &str) -> Option<&'static [&'static str]> {
+    LOCK_ORDER
+        .iter()
+        .find(|(file, _)| rel.contains(file))
+        .map(|(_, names)| *names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_order_is_declared() {
+        let order = order_for("rust/src/serve/registry.rs").unwrap();
+        let inner = order.iter().position(|n| *n == "inner").unwrap();
+        let tenants = order.iter().position(|n| *n == "tenants").unwrap();
+        assert!(inner < tenants, "cache lock precedes the tenant table");
+    }
+
+    #[test]
+    fn unlisted_file_has_no_order() {
+        assert!(order_for("serve/spool.rs").is_none());
+    }
+}

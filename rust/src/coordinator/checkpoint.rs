@@ -190,14 +190,14 @@ fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
         active: manifest.is_some(),
     };
     if let Some(m) = manifest {
-        f.write_all(&(m.tenant.len() as u32).to_le_bytes())?;
+        f.write_all(&len_u32(m.tenant.len(), "tenant id length")?.to_le_bytes())?;
         f.write_all(m.tenant.as_bytes())?;
         f.write_all(&m.q.to_le_bytes())?;
         f.write_all(&m.n_layers.to_le_bytes())?;
     }
-    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    f.write_all(&len_u32(tensors.len(), "tensor count")?.to_le_bytes())?;
     for (name, t) in tensors {
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(&len_u32(name.len(), "tensor name length")?.to_le_bytes())?;
         f.write_all(name.as_bytes())?;
         match t {
             HostTensor::F32 { shape, data } => {
@@ -221,7 +221,7 @@ fn save_impl(path: &Path, manifest: Option<&AdapterManifest>,
 }
 
 fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
-    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+    f.write_all(&len_u32(shape.len(), "shape rank")?.to_le_bytes())?;
     for &d in shape {
         f.write_all(&(d as u64).to_le_bytes())?;
     }
@@ -294,7 +294,7 @@ fn load_impl(path: &Path)
     let manifest = match version {
         VERSION => None,
         VERSION_ADAPTER | VERSION_ADAPTER_CK => {
-            let tenant_len = read_u32(&mut f, path, "tenant_len")? as usize;
+            let tenant_len = read_len(&mut f, path, "tenant_len")?;
             if tenant_len > MAX_TENANT_LEN {
                 bail!("{path:?}: tenant_len {tenant_len} exceeds cap \
                        {MAX_TENANT_LEN} (corrupt header?)");
@@ -310,14 +310,14 @@ fn load_impl(path: &Path)
         }
         other => bail!("{path:?}: unsupported checkpoint version {other}"),
     };
-    let count = read_u32(&mut f, path, "tensor count")? as usize;
+    let count = read_len(&mut f, path, "tensor count")?;
     if count > MAX_TENSORS {
         bail!("{path:?}: tensor count {count} exceeds cap {MAX_TENSORS} \
                (corrupt header?)");
     }
     let mut out = Vec::with_capacity(count);
     for ti in 0..count {
-        let name_len = read_u32(&mut f, path, "name_len")? as usize;
+        let name_len = read_len(&mut f, path, "name_len")?;
         if name_len > MAX_NAME_LEN {
             bail!("{path:?}: tensor {ti} name_len {name_len} exceeds cap \
                    {MAX_NAME_LEN} (corrupt header?)");
@@ -332,7 +332,7 @@ fn load_impl(path: &Path)
         f.read_exact(&mut dt).with_context(|| {
             format!("{path:?}: reading {name:?} dtype (truncated file?)")
         })?;
-        let ndim = read_u32(&mut f, path, "ndim")? as usize;
+        let ndim = read_len(&mut f, path, "ndim")?;
         if ndim > MAX_NDIM {
             bail!("{path:?}: tensor {name:?} ndim {ndim} exceeds cap {MAX_NDIM} \
                    (corrupt header?)");
@@ -347,7 +347,9 @@ fn load_impl(path: &Path)
             if d > MAX_NUMEL as u64 {
                 bail!("{path:?}: tensor {name:?} dim {d} exceeds cap {MAX_NUMEL}");
             }
-            shape.push(d as usize);
+            shape.push(usize::try_from(d).with_context(|| {
+                format!("{path:?}: tensor {name:?} dim {d} overflows usize")
+            })?);
         }
         let numel = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
             .filter(|&n| n <= MAX_NUMEL)
@@ -399,6 +401,21 @@ fn read_u32(f: &mut impl Read, path: &Path, what: &str) -> Result<u32> {
     f.read_exact(&mut buf)
         .with_context(|| format!("{path:?}: reading {what} (truncated file?)"))?;
     Ok(u32::from_le_bytes(buf))
+}
+
+/// [`read_u32`] widened to a checked `usize` — length/count fields that
+/// size allocations or reads.
+fn read_len(f: &mut impl Read, path: &Path, what: &str) -> Result<usize> {
+    let v = read_u32(f, path, what)?;
+    usize::try_from(v)
+        .with_context(|| format!("{path:?}: {what} {v} overflows usize"))
+}
+
+/// A `usize` length narrowed to the format's `u32` field, with a typed
+/// error instead of a silent wrap.
+fn len_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n)
+        .with_context(|| format!("{what} of {n} overflows the u32 field"))
 }
 
 /// Bulk LE payload reads: one `read_exact` of the whole payload, then an

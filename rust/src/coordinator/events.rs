@@ -53,6 +53,7 @@ impl EventLog {
     }
 
     pub fn emit(&self, kind: &str, mut fields: Vec<(&str, Json)>) {
+        // analyze: allow(determinism) ts is wall-clock by design; fifo diffs ignore it
         let ts = SystemTime::now().duration_since(UNIX_EPOCH)
             .map(|d| d.as_secs_f64()).unwrap_or(0.0);
         fields.insert(0, ("ts", Json::Num(ts)));
@@ -62,6 +63,7 @@ impl EventLog {
         }
         let line = obj(fields).dump();
         if self.echo {
+            // analyze: allow(log-discipline) echo is the explicit opt-in stdout sink
             println!("{line}");
         }
         if let Some(f) = &self.sink {
@@ -69,7 +71,7 @@ impl EventLog {
             // under contention from multiple sweep workers
             let mut buf = line.into_bytes();
             buf.push(b'\n');
-            let _ = f.lock().unwrap().write_all(&buf);
+            let _ = crate::util::sync::lock_or_recover(f).write_all(&buf);
         }
     }
 

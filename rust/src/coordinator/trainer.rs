@@ -131,6 +131,7 @@ pub fn run_glue(rt: &Runtime, manifest: &Manifest, spec: &GlueRunSpec,
     let mut batcher = Batcher::new(train.len(), bsz, spec.cfg.seed ^ 0xba7c4);
     let mut losses = Vec::with_capacity(spec.cfg.steps);
     let mut best = f64::NEG_INFINITY;
+    // analyze: allow(determinism) wall-clock step timing; tables derive from losses
     let t0 = Instant::now();
     for step in 0..spec.cfg.steps {
         let idx = batcher.next_batch();
@@ -343,6 +344,7 @@ pub fn run_vit(rt: &Runtime, manifest: &Manifest, spec: &VitRunSpec,
     let mut batcher = Batcher::new(train.len(), bsz, spec.cfg.seed ^ 0xb);
     let mut losses = Vec::new();
     let mut best = f64::NEG_INFINITY;
+    // analyze: allow(determinism) wall-clock step timing; tables derive from losses
     let t0 = Instant::now();
     for step in 0..spec.cfg.steps {
         let idx = batcher.next_batch();
@@ -427,6 +429,7 @@ pub fn run_e2e(rt: &Runtime, manifest: &Manifest, spec: &E2eRunSpec,
     let extras = default_extras(&session.entry, 0.0, &BTreeMap::new());
     let mut rng = Rng::new(spec.cfg.seed ^ 0xe2e);
     let mut losses = Vec::new();
+    // analyze: allow(determinism) wall-clock step timing; tables derive from losses
     let t0 = Instant::now();
     for step in 0..spec.cfg.steps {
         let mut toks = Vec::with_capacity(bsz);

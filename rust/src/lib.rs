@@ -83,7 +83,48 @@
 //! private same-platform client per worker that still shares the parse
 //! cache and the aggregated compile log; `REPRO_SHARE_CLIENT=0` forces
 //! that fallback on CPU (an A/B knob for shared vs per-worker warm-up).
+//!
+//! ## Static invariants (`repro analyze`)
+//!
+//! The properties the tests lean on hardest — fifo byte-determinism,
+//! typed errors on serving paths, checked WAL/QPCK framing — are
+//! enforced *statically* by [`analysis`], a std-only lexer + scanner
+//! pass wired into CI as a blocking gate (`repro analyze --format
+//! json`). The lints:
+//!
+//! - **determinism** — no `HashMap`/`HashSet` iteration and no
+//!   `Instant::now`/`SystemTime::now` in `serve/`, `store/`,
+//!   `coordinator/` (the fifo/EventLog-emitting modules); unordered
+//!   iteration or a wall-clock read anywhere near an emitted line is
+//!   how byte-reproducibility dies.
+//! - **lock-discipline** — no `.lock().unwrap()` (poison cascades; use
+//!   [`util::sync::lock_or_recover`] and friends), and held-lock
+//!   acquisition order per function must follow the declared table in
+//!   [`analysis::order::LOCK_ORDER`]; serve/store files absent from
+//!   that table may not nest held locks at all.
+//! - **panic-path** — no `unwrap`/`expect`/`panic!`/literal indexing in
+//!   `serve/`+`store/` non-test code; typed errors
+//!   ([`serve::Rejected`], [`store::CorruptState`], ...) are the
+//!   contract.
+//! - **framing-casts** — no bare `as u16`/`as u32`/`as usize` in
+//!   `store/wal.rs`, `store/snapshot.rs`, `store/recover.rs`, or
+//!   `coordinator/checkpoint.rs`; narrowing goes through `try_from`
+//!   with a typed error.
+//! - **log-discipline** — no `println!`/`eprintln!` in library modules;
+//!   the `EventLog` is the only sanctioned sink.
+//! - **io-durability** — `File::create`/`fs::write` in `store/` must
+//!   share a function with an fsync (the write-temp + `sync_all` +
+//!   atomic-rename idiom).
+//!
+//! Exceptions are inline and reasoned:
+//! `// analyze: allow(<lint>) <reason>` on the finding's line or the
+//! line above. The reason is mandatory — a bare allow is itself a
+//! finding — so every suppression in the tree documents the invariant
+//! that makes it sound. Test code is exempt. `tests/analysis.rs`
+//! self-runs the pass over `src/` and asserts zero unsuppressed
+//! findings.
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use quantum_peft::analysis;
 use quantum_peft::config;
 use quantum_peft::coordinator::events::EventLog;
 use quantum_peft::coordinator::sweep::{self, SweepPlan};
@@ -27,23 +28,32 @@ use quantum_peft::util::pool;
 struct Args {
     cmd: String,
     flags: BTreeMap<String, String>,
+    /// Non-flag operands (only `analyze` takes any; everything else
+    /// rejects them to keep the old strict `--key value` contract).
+    positional: Vec<String>,
 }
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
     let mut flags = BTreeMap::new();
+    let mut positional = Vec::new();
     while let Some(k) = it.next() {
-        let key = k.strip_prefix("--")
-            .with_context(|| format!("expected --flag, got {k:?}"))?;
+        let Some(key) = k.strip_prefix("--") else {
+            positional.push(k);
+            continue;
+        };
         let v = it.next().with_context(|| format!("--{key} needs a value"))?;
         flags.insert(key.to_string(), v);
     }
-    Ok(Args { cmd, flags })
+    Ok(Args { cmd, flags, positional })
 }
 
 fn main() -> Result<()> {
     let args = parse_args()?;
+    if args.cmd != "analyze" && !args.positional.is_empty() {
+        bail!("unexpected argument {:?} (flags are --key value pairs)", args.positional[0]);
+    }
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
@@ -56,6 +66,7 @@ fn main() -> Result<()> {
         "e2e" => cmd_e2e(&args),
         "table" => cmd_table(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "analyze" => cmd_analyze(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
 }
@@ -121,6 +132,15 @@ commands:
            instead of sleeping); summary (p50/p95/p99, req/s, batch
            histogram, cache + admission counters) prints here and lands
            in the event log as serve_* lines.
+  analyze  [--format text|json] [paths...]
+           repo-invariant static analysis (determinism, lock-discipline,
+           panic-path, framing-casts, log-discipline, io-durability):
+           lexes the given .rs files/directories (default: the crate's
+           src/ tree) and reports per-lint findings with file:line
+           anchors. Suppress inline with
+           `// analyze: allow(<lint>) <reason>` — the reason is
+           mandatory. Exits non-zero on any unsuppressed finding (the
+           blocking CI gate runs `analyze --format json`).
 all parallel paths share one compile cache: each distinct artifact path
 compiles exactly once per process on CPU (in-flight compiles dedup across
 workers); other backends fall back to per-worker compiles that still
@@ -543,6 +563,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     } else {
         let (summary, _log_text) = serve::run_serve_bench(&opts, &log)?;
         print!("{}", summary.render());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let format = args.flags.get("format").map(String::as_str).unwrap_or("text");
+    if format != "text" && format != "json" {
+        bail!("--format must be text or json, got {format:?}");
+    }
+    let paths: Vec<std::path::PathBuf> = if args.positional.is_empty() {
+        // Default to the crate's src/ tree, from either the repo root
+        // or the rust/ crate directory.
+        let candidates = ["rust/src", "src"];
+        let found = candidates
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .with_context(|| {
+                format!("no {candidates:?} directory here; pass paths explicitly")
+            })?;
+        vec![found]
+    } else {
+        args.positional.iter().map(std::path::PathBuf::from).collect()
+    };
+    let report = analysis::analyze_paths(&paths)
+        .with_context(|| format!("analyzing {paths:?}"))?;
+    match format {
+        "json" => println!("{}", analysis::render_json(&report)),
+        _ => print!("{}", analysis::render_text(&report)),
+    }
+    if !report.clean() {
+        bail!("analyze: {} unsuppressed finding(s)", report.findings.len());
     }
     Ok(())
 }

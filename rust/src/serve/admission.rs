@@ -35,6 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::events::EventLog;
 use crate::util::json::Json;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 
 use super::spool::FileWatch;
 
@@ -241,6 +242,7 @@ impl AdmissionController {
             clock: if logical {
                 Clock::Logical(Mutex::new(0.0))
             } else {
+                // analyze: allow(determinism) timed mode opts out of fifo reproducibility
                 Clock::Wall(Instant::now())
             },
             buckets: Mutex::new(BTreeMap::new()),
@@ -252,12 +254,12 @@ impl AdmissionController {
     }
 
     pub fn enabled(&self) -> bool {
-        self.cfg.read().unwrap().enabled()
+        read_or_recover(&self.cfg).enabled()
     }
 
     /// The policy currently in force.
     pub fn config(&self) -> AdmissionConfig {
-        *self.cfg.read().unwrap()
+        *read_or_recover(&self.cfg)
     }
 
     /// Swap the policy live. In-flight requests are untouched (admission
@@ -266,14 +268,14 @@ impl AdmissionController {
     /// clamps tokens to the new cap), and counters keep accumulating
     /// across the change.
     pub fn reconfigure(&self, cfg: AdmissionConfig) {
-        *self.cfg.write().unwrap() = cfg;
+        *write_or_recover(&self.cfg) = cfg;
         self.reloads.fetch_add(1, Ordering::Relaxed);
     }
 
     fn now_s(&self) -> f64 {
         match &self.clock {
             Clock::Wall(t0) => t0.elapsed().as_secs_f64(),
-            Clock::Logical(t) => *t.lock().unwrap(),
+            Clock::Logical(t) => *lock_or_recover(t),
         }
     }
 
@@ -282,7 +284,7 @@ impl AdmissionController {
     pub fn advance(&self, dt_s: f64) {
         if let Clock::Logical(t) = &self.clock {
             if dt_s > 0.0 && dt_s.is_finite() {
-                *t.lock().unwrap() += dt_s;
+                *lock_or_recover(t) += dt_s;
             }
         }
     }
@@ -291,13 +293,13 @@ impl AdmissionController {
     /// gauge (mode-dependent, see the module docs). On `Err` nothing was
     /// consumed except the rejection counter.
     pub fn try_admit(&self, tenant: &str, queue_depth: usize) -> Result<(), Rejected> {
-        let cfg = *self.cfg.read().unwrap();
+        let cfg = *read_or_recover(&self.cfg);
         if !cfg.enabled() {
             self.admitted.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
         let burst = cfg.burst.max(1.0);
-        let mut buckets = self.buckets.lock().unwrap();
+        let mut buckets = lock_or_recover(&self.buckets);
         let now = self.now_s();
         let b = buckets.entry(tenant.to_string()).or_insert(Bucket {
             tokens: burst,
@@ -334,8 +336,8 @@ impl AdmissionController {
     }
 
     pub fn stats(&self) -> AdmissionStats {
-        let cfg = *self.cfg.read().unwrap();
-        let buckets = self.buckets.lock().unwrap();
+        let cfg = *read_or_recover(&self.cfg);
+        let buckets = lock_or_recover(&self.buckets);
         AdmissionStats {
             enabled: cfg.enabled(),
             rate_rps: cfg.rate_rps,

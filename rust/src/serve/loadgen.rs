@@ -106,7 +106,7 @@ impl Zipf {
     /// old `Ok(i) => i + 1` mapping shifted that boundary mass onto the
     /// next rank.
     pub fn sample_u(&self, u: f64) -> usize {
-        let i = match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        let i = match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i,
         };

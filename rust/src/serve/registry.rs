@@ -41,11 +41,13 @@
 //! without re-emitting — so a restarted server serves the same tenants
 //! at the same versions.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
+
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 
 use crate::coordinator::checkpoint::{self, AdapterManifest};
 use crate::quantum::pauli;
@@ -115,7 +117,7 @@ struct TenantSlot {
 
 /// One slot's durable state (what a snapshot persists for it).
 fn slot_state(name: &str, slot: &TenantSlot) -> TenantState {
-    let cur = slot.current.lock().unwrap();
+    let cur = lock_or_recover(&slot.current);
     TenantState {
         tenant: name.to_string(),
         version: cur.version,
@@ -182,9 +184,13 @@ struct MatEntry {
 type MatKey = (String, u64, u64);
 
 struct MatInner {
-    entries: HashMap<MatKey, MatEntry>,
+    /// Ordered map on purpose: eviction scans break `last_used` ties by
+    /// key order, so victim selection is deterministic at any worker
+    /// count (a HashMap here made fifo-mode eviction order depend on
+    /// hasher seed — exactly what the `determinism` lint now rejects).
+    entries: BTreeMap<MatKey, MatEntry>,
     /// Cached bytes per tenant — the quota's accounting.
-    tenant_bytes: HashMap<String, usize>,
+    tenant_bytes: BTreeMap<String, usize>,
     bytes: usize,
     tick: u64,
 }
@@ -226,8 +232,8 @@ impl MatCache {
     fn new(capacity_bytes: usize) -> MatCache {
         MatCache {
             inner: Mutex::new(MatInner {
-                entries: HashMap::new(),
-                tenant_bytes: HashMap::new(),
+                entries: BTreeMap::new(),
+                tenant_bytes: BTreeMap::new(),
                 bytes: 0,
                 tick: 0,
             }),
@@ -249,7 +255,7 @@ impl MatCache {
            -> Result<Arc<Vec<f32>>> {
         let key = (adapter.tenant.clone(), adapter.version, adapter.checksum);
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_or_recover(&self.inner);
             inner.tick += 1;
             let tick = inner.tick;
             if let Some(e) = inner.entries.get_mut(&key) {
@@ -279,7 +285,7 @@ impl MatCache {
 
     fn insert_and_evict(&self, key: &MatKey, mat: &Arc<Vec<f32>>,
                         bytes: usize, pinned: &dyn Fn(&str) -> bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         // a racing re-build of the same key (both workers missed before
@@ -347,7 +353,7 @@ impl MatCache {
     }
 
     fn purge_tenant(&self, tenant: &str) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner);
         let keys: Vec<MatKey> = inner.entries.keys()
             .filter(|k| k.0 == tenant)
             .cloned()
@@ -360,7 +366,7 @@ impl MatCache {
     }
 
     fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_or_recover(&self.inner);
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -457,10 +463,10 @@ impl Registry {
             path: origin.to_string(),
             thetas: thetas.clone(),
         };
-        let mut tenants = self.tenants.write().unwrap();
+        let mut tenants = write_or_recover(&self.tenants);
         match tenants.get(tenant) {
             Some(slot) => {
-                let mut cur = slot.current.lock().unwrap();
+                let mut cur = lock_or_recover(&slot.current);
                 let version = cur.version + 1;
                 if self.sink.wants_records() {
                     self.sink
@@ -544,9 +550,9 @@ impl Registry {
             checksum: ts.checksum,
             origin: ts.path.clone(),
         });
-        let mut tenants = self.tenants.write().unwrap();
+        let mut tenants = write_or_recover(&self.tenants);
         match tenants.get(&ts.tenant) {
-            Some(slot) => *slot.current.lock().unwrap() = adapter,
+            Some(slot) => *lock_or_recover(&slot.current) = adapter,
             None => {
                 tenants.insert(ts.tenant.clone(), Arc::new(TenantSlot {
                     current: Mutex::new(adapter),
@@ -560,7 +566,7 @@ impl Registry {
     /// Every tenant's durable state, sorted by tenant name — what a
     /// snapshot compaction persists.
     pub fn export_state(&self) -> Vec<TenantState> {
-        let tenants = self.tenants.read().unwrap();
+        let tenants = read_or_recover(&self.tenants);
         tenants.iter()
             .map(|(name, slot)| slot_state(name, slot))
             .collect()
@@ -573,7 +579,7 @@ impl Registry {
     /// [`register`](Registry::register) take registry-lock-then-WAL-lock,
     /// so there is no ordering inversion).
     pub fn compact_into(&self, store: &crate::store::StateStore) -> Result<()> {
-        let tenants = self.tenants.write().unwrap();
+        let tenants = write_or_recover(&self.tenants);
         let entries: Vec<TenantState> = tenants.iter()
             .map(|(name, slot)| slot_state(name, slot))
             .collect();
@@ -615,17 +621,17 @@ impl Registry {
     /// The tenant's live adapter right now (an immutable snapshot — safe
     /// to keep using across a concurrent hot-swap).
     pub fn snapshot(&self, tenant: &str) -> Result<Arc<AdapterVersion>> {
-        let tenants = self.tenants.read().unwrap();
+        let tenants = read_or_recover(&self.tenants);
         let slot = tenants.get(tenant)
             .with_context(|| format!("unknown tenant {tenant:?}"))?;
-        Ok(slot.current.lock().unwrap().clone())
+        Ok(lock_or_recover(&slot.current).clone())
     }
 
     /// Admit one request for `tenant`: bumps its in-flight count until
     /// the returned guard drops (pins its cache entries, blocks tenant
     /// eviction).
     pub fn begin(&self, tenant: &str) -> Result<RequestGuard> {
-        let tenants = self.tenants.read().unwrap();
+        let tenants = read_or_recover(&self.tenants);
         let slot = tenants.get(tenant)
             .with_context(|| format!("unknown tenant {tenant:?}"))?;
         slot.inflight.fetch_add(1, Ordering::Acquire);
@@ -634,7 +640,7 @@ impl Registry {
 
     /// Current in-flight request count for a tenant (0 if unknown).
     pub fn inflight(&self, tenant: &str) -> usize {
-        let tenants = self.tenants.read().unwrap();
+        let tenants = read_or_recover(&self.tenants);
         tenants.get(tenant)
             .map(|s| s.inflight.load(Ordering::Acquire))
             .unwrap_or(0)
@@ -665,7 +671,7 @@ impl Registry {
     /// live (RAM never diverges ahead of the log).
     pub fn try_evict_tenant(&self, tenant: &str) -> Result<EvictAttempt> {
         {
-            let mut tenants = self.tenants.write().unwrap();
+            let mut tenants = write_or_recover(&self.tenants);
             let Some(slot) = tenants.get(tenant) else {
                 return Ok(EvictAttempt::Unknown);
             };
@@ -691,11 +697,11 @@ impl Registry {
     }
 
     pub fn tenant_names(&self) -> Vec<String> {
-        self.tenants.read().unwrap().keys().cloned().collect()
+        read_or_recover(&self.tenants).keys().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.tenants.read().unwrap().len()
+        read_or_recover(&self.tenants).len()
     }
 
     pub fn is_empty(&self) -> bool {

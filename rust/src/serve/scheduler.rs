@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::registry::RequestGuard;
+use crate::util::sync::{lock_or_recover, wait_or_recover};
 
 /// Batching policy knobs: a batch dispatches when it holds `max_batch`
 /// requests, or (timed mode) when its oldest request has waited
@@ -124,7 +125,7 @@ impl ResponseSlot {
     /// First fill wins; later fills (e.g. the drop-path error after a
     /// successful complete) are ignored.
     fn fill(&self, r: Result<Response, String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         if matches!(*st, SlotState::Pending) {
             *st = SlotState::Ready(r);
             self.cv.notify_all();
@@ -140,15 +141,16 @@ pub struct ResponseHandle {
 impl ResponseHandle {
     /// Block until the response (or the request's failure) arrives.
     pub fn wait(self) -> Result<Response> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.slot.state);
         while matches!(*st, SlotState::Pending) {
-            st = self.slot.cv.wait(st).unwrap();
+            st = wait_or_recover(&self.slot.cv, st);
         }
         match std::mem::replace(&mut *st, SlotState::Taken) {
             SlotState::Ready(Ok(r)) => Ok(r),
             SlotState::Ready(Err(e)) => Err(anyhow!("{e}")),
             SlotState::Taken => Err(anyhow!("response already taken")),
-            SlotState::Pending => unreachable!("wait loop exits on non-pending"),
+            // the while loop above only exits on a non-Pending state
+            SlotState::Pending => Err(anyhow!("response slot still pending")),
         }
     }
 }
@@ -175,6 +177,7 @@ impl PendingRequest {
         let req = PendingRequest {
             meta,
             input,
+            // analyze: allow(determinism) timed-mode expiry + latency only
             submitted: Instant::now(),
             slot: slot.clone(),
             _guard: guard,
@@ -237,6 +240,7 @@ impl Batcher {
         if !self.buffers.contains_key(tenant) {
             self.buffers.insert(tenant.to_string(), Vec::new());
         }
+        // analyze: allow(panic-path) key inserted just above; entry() costs a String
         let buf = self.buffers.get_mut(tenant).expect("key just ensured");
         buf.push(req);
         if buf.len() >= self.policy.max_batch {
@@ -260,10 +264,9 @@ impl Batcher {
             .map(|(t, _)| t.clone())
             .collect();
         expired.into_iter()
-            .map(|tenant| {
-                let requests = std::mem::take(
-                    self.buffers.get_mut(&tenant).expect("key from iteration"));
-                Batch { tenant, requests }
+            .filter_map(|tenant| {
+                let requests = std::mem::take(self.buffers.get_mut(&tenant)?);
+                Some(Batch { tenant, requests })
             })
             .collect()
     }

@@ -66,6 +66,7 @@ use crate::runtime::Runtime;
 use crate::store::{Durability, StateRecord, StateStore, TenantState};
 use crate::util::fnv;
 use crate::util::json::Json;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 
 use super::admission::{RejectReason, Rejected};
 use super::registry::{EvictAttempt, Registry};
@@ -250,7 +251,7 @@ impl ShardRouter<'_> {
 
     /// Where `tenant` routes right now (ring + migration overrides).
     pub fn shard_of(&self, tenant: &str) -> usize {
-        self.table.read().unwrap().route(tenant)
+        read_or_recover(&self.table).route(tenant)
     }
 
     pub fn is_alive(&self, shard: usize) -> bool {
@@ -260,9 +261,9 @@ impl ShardRouter<'_> {
     /// The shard's registry (tenant registration, inspection). Errors
     /// while the shard is dead.
     pub fn registry(&self, shard: usize) -> Result<Arc<Registry>> {
-        self.seats.get(shard)
-            .with_context(|| format!("no shard {shard}"))?
-            .registry.lock().unwrap().clone()
+        let seat = self.seats.get(shard)
+            .with_context(|| format!("no shard {shard}"))?;
+        lock_or_recover(&seat.registry).clone()
             .with_context(|| format!("shard {shard} is down"))
     }
 
@@ -358,7 +359,7 @@ impl ShardRouter<'_> {
             path: snap.origin.clone(),
             thetas: snap.thetas.as_ref().clone(),
         };
-        if let Some(store) = self.seats[target].store.lock().unwrap().as_ref() {
+        if let Some(store) = lock_or_recover(&self.seats[target].store).as_ref() {
             store.append(&StateRecord::Register(ts.clone()))
                 .with_context(|| format!("migrate {tenant:?}: write-ahead \
                                           to shard {target}"))?;
@@ -368,7 +369,7 @@ impl ShardRouter<'_> {
                                       {target}"))?;
         // 2. atomic routing flip: every submission from here on lands on
         // the target, which serves the identical (version, checksum)
-        self.table.write().unwrap()
+        write_or_recover(&self.table)
             .overrides.insert(tenant.to_string(), target);
         // 3. pin-drain the source: flush so its buffered requests
         // dispatch, then retry while in-flight RequestGuard pins defer
@@ -406,11 +407,11 @@ impl ShardRouter<'_> {
         let summary = self.recv_result_for(shard)?;
         // keep the session in `collected` too: shutdown expects exactly
         // `started` results, and this one just left the channel
-        self.collected.lock().unwrap().push((shard, summary.clone()));
+        lock_or_recover(&self.collected).push((shard, summary.clone()));
         // release the shard's handles: the WAL file closes, so a restart
         // re-opens and replays the shard's own state dir cleanly
-        *seat.registry.lock().unwrap() = None;
-        *seat.store.lock().unwrap() = None;
+        *lock_or_recover(&seat.registry) = None;
+        *lock_or_recover(&seat.store) = None;
         self.log.emit("shard_killed", vec![("shard", shard.into())]);
         Ok(summary)
     }
@@ -427,8 +428,8 @@ impl ShardRouter<'_> {
         }
         let (registry, store, recovered) =
             build_shard_registry(self.cfg, shard, self.log)?;
-        *seat.registry.lock().unwrap() = Some(registry.clone());
-        *seat.store.lock().unwrap() = store;
+        *lock_or_recover(&seat.registry) = Some(registry.clone());
+        *lock_or_recover(&seat.store) = store;
         self.started.fetch_add(1, Ordering::AcqRel);
         seat.run_tx.send(ShardRun::Start { registry })
             .ok().context("shard lifecycle thread is gone")?;
@@ -443,7 +444,7 @@ impl ShardRouter<'_> {
     /// Block until the session result for `shard` arrives, stashing any
     /// other shard's result (sessions can end concurrently at shutdown).
     fn recv_result_for(&self, shard: usize) -> Result<ServeSummary> {
-        let rx = self.results_rx.lock().unwrap();
+        let rx = lock_or_recover(&self.results_rx);
         loop {
             let (idx, res) = rx.recv()
                 .ok().context("shard session results channel closed")?;
@@ -453,7 +454,7 @@ impl ShardRouter<'_> {
             if idx == shard {
                 return Ok(summary);
             }
-            self.collected.lock().unwrap().push((idx, summary));
+            lock_or_recover(&self.collected).push((idx, summary));
         }
     }
 }
@@ -584,10 +585,10 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
             let _ = seat.cmd_tx.send(ShardCmd::Stop);
         }
     }
-    let mut sessions = std::mem::take(&mut *router.collected.lock().unwrap());
+    let mut sessions = std::mem::take(&mut *lock_or_recover(&router.collected));
     let expected = router.started.load(Ordering::Acquire);
     {
-        let rx = router.results_rx.lock().unwrap();
+        let rx = lock_or_recover(&router.results_rx);
         let mut first_err = None;
         // count *received* results, not successes: a failed session still
         // consumed its slot, and waiting for a replacement would block on
@@ -612,8 +613,8 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
     // session-end compaction per live shard, mirroring the unsharded
     // bench: the next restart replays one snapshot instead of the WAL
     for (shard, seat) in router.seats.iter().enumerate() {
-        let registry = seat.registry.lock().unwrap().clone();
-        let store = seat.store.lock().unwrap().clone();
+        let registry = lock_or_recover(&seat.registry).clone();
+        let store = lock_or_recover(&seat.store).clone();
         if let (Some(registry), Some(store)) = (registry, store) {
             registry.compact_into(&store)
                 .with_context(|| format!("compact shard {shard} state"))?;

@@ -57,6 +57,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::events::EventLog;
 use crate::util::json::Json;
 use crate::util::pool::Background;
+use crate::util::sync::lock_or_recover;
 
 use crate::store::StateLogFailed;
 
@@ -480,7 +481,7 @@ impl SpoolWatcher {
         let stats = Arc::new(Mutex::new(SpoolStats::default()));
         let tick_stats = stats.clone();
         let bg = Background::spawn("spool-watcher", cfg.poll_interval, move || {
-            *tick_stats.lock().unwrap() = spool.poll();
+            *lock_or_recover(&tick_stats) = spool.poll();
         })
         .context("spawn spool watcher thread")?;
         Ok(SpoolWatcher { stats, bg })
@@ -488,7 +489,7 @@ impl SpoolWatcher {
 
     /// Counters as of the most recent completed poll.
     pub fn stats(&self) -> SpoolStats {
-        *self.stats.lock().unwrap()
+        *lock_or_recover(&self.stats)
     }
 
     /// Stop polling and join the watcher thread (dropping the watcher

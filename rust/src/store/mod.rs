@@ -57,6 +57,8 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use crate::util::sync::lock_or_recover;
+
 pub use recover::{recover, RecoveredState};
 pub use snapshot::SNAPSHOT_FILE;
 pub use wal::{Durability, WalWriter, WAL_FILE};
@@ -226,7 +228,7 @@ impl StateStore {
     /// Append one mutation record; returns its sequence number. Durable
     /// per the store's [`Durability`] once this returns.
     pub fn append(&self, rec: &StateRecord) -> Result<u64> {
-        self.wal.lock().unwrap().append(rec)
+        lock_or_recover(&self.wal).append(rec)
     }
 
     /// Compact: write `live` (the complete current registry state) as
@@ -237,7 +239,7 @@ impl StateStore {
     /// [`Registry::compact_into`](crate::serve::registry::Registry::compact_into),
     /// holds the registry write lock to guarantee it).
     pub fn compact(&self, live: &[TenantState]) -> Result<()> {
-        let mut wal = self.wal.lock().unwrap();
+        let mut wal = lock_or_recover(&self.wal);
         snapshot::write(&self.dir, wal.last_seq(), live)
             .with_context(|| format!("write snapshot in {:?}", self.dir))?;
         wal.truncate_to_header()
@@ -246,19 +248,19 @@ impl StateStore {
 
     /// Force the WAL to disk now, whatever the durability mode.
     pub fn sync(&self) -> Result<()> {
-        self.wal.lock().unwrap().sync()
+        lock_or_recover(&self.wal).sync()
     }
 
     /// Sequence number of the most recently appended record (0 if none
     /// were ever appended to this log line).
     pub fn last_seq(&self) -> u64 {
-        self.wal.lock().unwrap().last_seq()
+        lock_or_recover(&self.wal).last_seq()
     }
 
     /// Records appended since open or the last compaction — what a
     /// recovery would have to replay right now.
     pub fn wal_records(&self) -> u64 {
-        self.wal.lock().unwrap().records_since_truncate()
+        lock_or_recover(&self.wal).records_since_truncate()
     }
 
     pub fn dir(&self) -> &Path {

@@ -23,8 +23,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::wal::{crc32_pair, decode_record, HEADER_LEN, MAX_RECORD_LEN,
-                 WAL_FILE, WAL_MAGIC};
+use super::wal::{crc32_pair, decode_record, le_u32_at, HEADER_LEN,
+                 MAX_RECORD_LEN, WAL_FILE, WAL_MAGIC};
 use super::{snapshot, CorruptState, StateRecord, TenantState};
 
 /// What [`recover`] reconstructed from a state directory.
@@ -111,7 +111,7 @@ pub fn recover(dir: &Path) -> Result<RecoveredState> {
     if &bytes[..4] != WAL_MAGIC {
         return Err(corrupt(0, "bad WAL magic".into()));
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let version = le_u32_at(bytes, 4);
     if version != super::wal::FORMAT_VERSION {
         return Err(corrupt(4, format!("unsupported WAL format {version}")));
     }
@@ -125,10 +125,13 @@ pub fn recover(dir: &Path) -> Result<RecoveredState> {
             break;
         }
         let len_bytes = &bytes[off..off + 4];
-        let len =
-            u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
-        let crc =
-            u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        let Ok(len) = usize::try_from(le_u32_at(bytes, off)) else {
+            return Err(corrupt(
+                off as u64,
+                "frame length overflows usize".into(),
+            ));
+        };
+        let crc = le_u32_at(bytes, off + 4);
         if off + 8 + len > bytes.len() {
             // a genuine torn append leaves strictly less than one frame
             // of trailing bytes; more than that can only mean a length
@@ -258,11 +261,11 @@ mod tests {
         bytes.extend_from_slice(&encode_record(
             2,
             &StateRecord::Register(ts("a", 1)),
-        ));
+        ).unwrap());
         bytes.extend_from_slice(&encode_record(
             2,
             &StateRecord::Register(ts("b", 1)),
-        ));
+        ).unwrap());
         std::fs::write(dir.join(WAL_FILE), &bytes).unwrap();
         let e = recover(&dir).unwrap_err();
         let c = e.downcast_ref::<CorruptState>().expect("typed");

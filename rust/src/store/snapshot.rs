@@ -26,8 +26,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::wal::{crc32, decode_tenant_state, encode_tenant_state, put_u32,
-                 put_u64, validate_tenant_state, Reader};
+use super::wal::{crc32, decode_tenant_state, encode_tenant_state, le_u32_at,
+                 put_u32, put_u64, validate_tenant_state, Reader};
 use super::{CorruptState, TenantState};
 
 /// Snapshot file name inside a state directory.
@@ -59,9 +59,13 @@ pub(crate) fn write(dir: &Path, last_seq: u64, entries: &[TenantState])
     }
     let mut body = Vec::with_capacity(64 * entries.len() + 16);
     put_u64(&mut body, last_seq);
-    put_u32(&mut body, entries.len() as u32);
+    let count = u32::try_from(entries.len()).with_context(|| {
+        format!("entry count {} overflows the u32 prefix", entries.len())
+    })?;
+    put_u32(&mut body, count);
     for ts in entries {
-        encode_tenant_state(&mut body, ts);
+        encode_tenant_state(&mut body, ts)
+            .with_context(|| format!("encode snapshot entry {:?}", ts.tenant))?;
     }
     let mut bytes = Vec::with_capacity(body.len() + 12);
     bytes.extend_from_slice(SNAP_MAGIC);
@@ -125,7 +129,7 @@ pub(crate) fn read(dir: &Path) -> Result<Option<(u64, Vec<TenantState>)>> {
     if &bytes[..4] != SNAP_MAGIC {
         return Err(corrupt(0, "bad snapshot magic".into()).into());
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let version = le_u32_at(&bytes, 4);
     if version != FORMAT_VERSION {
         return Err(corrupt(
             4,
@@ -134,8 +138,7 @@ pub(crate) fn read(dir: &Path) -> Result<Option<(u64, Vec<TenantState>)>> {
         .into());
     }
     let body = &bytes[8..bytes.len() - 4];
-    let stored =
-        u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let stored = le_u32_at(&bytes, bytes.len() - 4);
     let computed = crc32(body);
     if stored != computed {
         return Err(corrupt(
@@ -150,7 +153,8 @@ pub(crate) fn read(dir: &Path) -> Result<Option<(u64, Vec<TenantState>)>> {
     let mut r = Reader::new(body);
     let parse = |e: String| corrupt(8, e);
     let last_seq = r.u64("last_seq").map_err(parse)?;
-    let count = r.u32("entry count").map_err(parse)? as usize;
+    let count = usize::try_from(r.u32("entry count").map_err(parse)?)
+        .map_err(|_| parse("entry count overflows usize".into()))?;
     if count > MAX_SNAPSHOT_ENTRIES {
         return Err(corrupt(
             8,

@@ -80,6 +80,7 @@ const fn crc_table() -> [u32; 256] {
     let mut table = [0u32; 256];
     let mut i = 0usize;
     while i < 256 {
+        // analyze: allow(framing-casts) const fn (no try_from); i < 256 so lossless
         let mut c = i as u32;
         let mut k = 0;
         while k < 8 {
@@ -97,7 +98,7 @@ const CRC_INIT: u32 = 0xffff_ffff;
 
 fn crc_feed(mut c: u32, data: &[u8]) -> u32 {
     for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        c = CRC_TABLE[usize::from((c ^ u32::from(b)) as u8)] ^ (c >> 8);
     }
     c
 }
@@ -129,22 +130,40 @@ pub(crate) fn put_u64(buf: &mut Vec<u8>, x: u64) {
     buf.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_str16(buf: &mut Vec<u8>, s: &str) {
-    put_u16(buf, s.len() as u16);
+fn put_str16(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    let len = u16::try_from(s.len()).with_context(|| {
+        format!("string of {} bytes overflows the u16 length prefix", s.len())
+    })?;
+    put_u16(buf, len);
     buf.extend_from_slice(s.as_bytes());
+    Ok(())
 }
 
-pub(crate) fn encode_tenant_state(buf: &mut Vec<u8>, ts: &TenantState) {
-    put_str16(buf, &ts.tenant);
+pub(crate) fn encode_tenant_state(buf: &mut Vec<u8>, ts: &TenantState)
+                                  -> Result<()> {
+    put_str16(buf, &ts.tenant)?;
     put_u64(buf, ts.version);
     put_u32(buf, ts.q);
     put_u32(buf, ts.n_layers);
     put_u64(buf, ts.checksum);
-    put_str16(buf, &ts.path);
-    put_u32(buf, ts.thetas.len() as u32);
+    put_str16(buf, &ts.path)?;
+    let n_thetas = u32::try_from(ts.thetas.len()).with_context(|| {
+        format!("theta count {} overflows the u32 prefix", ts.thetas.len())
+    })?;
+    put_u32(buf, n_thetas);
     for t in &ts.thetas {
         buf.extend_from_slice(&t.to_le_bytes());
     }
+    Ok(())
+}
+
+/// Little-endian `u32` at `off`. The caller has already bounds-checked
+/// `off + 4 <= bytes.len()` — the slice below is a range (never a bare
+/// literal index) so a violation is a checked panic, not UB.
+pub(crate) fn le_u32_at(bytes: &[u8], off: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&bytes[off..off + 4]);
+    u32::from_le_bytes(b)
 }
 
 /// Bounds-checked little-endian cursor over a CRC-verified payload.
@@ -177,17 +196,22 @@ impl<'a> Reader<'a> {
     }
 
     fn u8(&mut self, what: &str) -> Result<u8, String> {
-        Ok(self.take(1, what)?[0])
+        match self.take(1, what)? {
+            [b] => Ok(*b),
+            s => Err(format!("{what}: take(1) returned {} byte(s)", s.len())),
+        }
     }
 
     fn u16(&mut self, what: &str) -> Result<u16, String> {
-        let s = self.take(2, what)?;
-        Ok(u16::from_le_bytes([s[0], s[1]]))
+        let mut b = [0u8; 2];
+        b.copy_from_slice(self.take(2, what)?);
+        Ok(u16::from_le_bytes(b))
     }
 
     pub(crate) fn u32(&mut self, what: &str) -> Result<u32, String> {
-        let s = self.take(4, what)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4, what)?);
+        Ok(u32::from_le_bytes(b))
     }
 
     pub(crate) fn u64(&mut self, what: &str) -> Result<u64, String> {
@@ -198,7 +222,7 @@ impl<'a> Reader<'a> {
     }
 
     fn str16(&mut self, what: &str, cap: usize) -> Result<String, String> {
-        let len = self.u16(what)? as usize;
+        let len = usize::from(self.u16(what)?);
         if len > cap {
             return Err(format!("{what} length {len} exceeds cap {cap}"));
         }
@@ -216,7 +240,8 @@ pub(crate) fn decode_tenant_state(r: &mut Reader<'_>)
     let n_layers = r.u32("n_layers")?;
     let checksum = r.u64("checksum")?;
     let path = r.str16("path", MAX_WAL_PATH_LEN)?;
-    let n_thetas = r.u32("theta count")? as usize;
+    let n_thetas = usize::try_from(r.u32("theta count")?)
+        .map_err(|_| "theta count overflows usize".to_string())?;
     if n_thetas > MAX_WAL_THETAS {
         return Err(format!(
             "theta count {n_thetas} exceeds cap {MAX_WAL_THETAS}"
@@ -225,7 +250,11 @@ pub(crate) fn decode_tenant_state(r: &mut Reader<'_>)
     let bytes = r.take(n_thetas * 4, "theta payload")?;
     let thetas = bytes
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .map(|c| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(c);
+            f32::from_le_bytes(b)
+        })
         .collect();
     Ok(TenantState { tenant, version, q, n_layers, checksum, path, thetas })
 }
@@ -273,29 +302,33 @@ fn validate_record(rec: &StateRecord) -> Result<()> {
 
 /// One framed record (length prefix + CRC + payload), ready for a
 /// single `write_all`.
-pub(crate) fn encode_record(seq: u64, rec: &StateRecord) -> Vec<u8> {
+pub(crate) fn encode_record(seq: u64, rec: &StateRecord) -> Result<Vec<u8>> {
     let mut payload = Vec::with_capacity(64);
     put_u64(&mut payload, seq);
     match rec {
         StateRecord::Register(ts) => {
             payload.push(KIND_REGISTER);
-            encode_tenant_state(&mut payload, ts);
+            encode_tenant_state(&mut payload, ts)?;
         }
         StateRecord::Swap(ts) => {
             payload.push(KIND_SWAP);
-            encode_tenant_state(&mut payload, ts);
+            encode_tenant_state(&mut payload, ts)?;
         }
         StateRecord::Evict { tenant } => {
             payload.push(KIND_EVICT);
-            put_str16(&mut payload, tenant);
+            put_str16(&mut payload, tenant)?;
         }
     }
-    let len_bytes = (payload.len() as u32).to_le_bytes();
+    let payload_len = u32::try_from(payload.len()).with_context(|| {
+        format!("payload of {} bytes overflows the u32 frame length",
+                payload.len())
+    })?;
+    let len_bytes = payload_len.to_le_bytes();
     let mut frame = Vec::with_capacity(payload.len() + 8);
     frame.extend_from_slice(&len_bytes);
     put_u32(&mut frame, crc32_pair(&len_bytes, &payload));
     frame.extend_from_slice(&payload);
-    frame
+    Ok(frame)
 }
 
 /// Decode one CRC-verified payload back into (seq, record).
@@ -399,7 +432,8 @@ impl WalWriter {
     pub fn append(&mut self, rec: &StateRecord) -> Result<u64> {
         validate_record(rec)?;
         let seq = self.next_seq;
-        let frame = encode_record(seq, rec);
+        let frame = encode_record(seq, rec)
+            .with_context(|| format!("encode WAL record seq {seq}"))?;
         // belt to validate_record's braces: the *encoded* payload must
         // also clear the decoder's frame-length cap (a theta vector at
         // its own cap plus framing overhead could otherwise slip past
@@ -501,7 +535,7 @@ mod tests {
             StateRecord::Swap(ts("b")),
             StateRecord::Evict { tenant: "c".into() },
         ] {
-            let frame = encode_record(7, &rec);
+            let frame = encode_record(7, &rec).unwrap();
             let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
             let crc = u32::from_le_bytes(frame[4..8].try_into().unwrap());
             let payload = &frame[8..];

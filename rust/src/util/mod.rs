@@ -8,6 +8,7 @@ pub mod fnv;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod sync;
 
 /// Best-effort text of a caught panic payload (shared by the pool's task
 /// containment and the compile cache's init containment).

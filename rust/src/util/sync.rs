@@ -1,0 +1,113 @@
+//! Poison-tolerant lock acquisition for the serving fleet.
+//!
+//! `std`'s mutexes poison when a holder panics, and every subsequent
+//! `.lock().unwrap()` on the same lock then panics too — one crashed
+//! worker cascades through every thread that shares a registry,
+//! metrics sink, or batcher with it. The serving tier prefers fleet
+//! survival: the panicking request already failed (its `ResponseSlot`
+//! reports `dropped unserved`), and every structure guarded by these
+//! locks is either append-only (latency vectors, counters) or
+//! validated on read (registry slots hold completed `Arc` swaps), so
+//! the data a panicking holder leaves behind is safe to keep serving.
+//!
+//! `lock_or_recover` and friends therefore treat poison as a
+//! recoverable condition: they return the guard either way. Callers
+//! that genuinely need mid-mutation atomicity must not use these
+//! helpers — hold the invariant with a commit-last write (the
+//! registry's `Arc` swap idiom) instead.
+//!
+//! The `lock-discipline` lint (`repro analyze`) flags any remaining
+//! `.lock().unwrap()` / `.read().unwrap()` / `.write().unwrap()` in
+//! `serve/` and `store/` and points here.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking. See the module docs for when this is sound.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Block on a condvar, recovering the re-acquired guard from poison.
+/// The wakeup protocol (re-check the predicate in a loop) is unchanged;
+/// only the poison propagation is swallowed.
+pub fn wait_or_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_or_recover(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(3usize));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert_eq!(*read_or_recover(&l), 3);
+        *write_or_recover(&l) = 4;
+        assert_eq!(*read_or_recover(&l), 4);
+    }
+
+    #[test]
+    fn condvar_wait_returns_guard() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            *lock_or_recover(m) = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut ready = lock_or_recover(m);
+        while !*ready {
+            ready = wait_or_recover(cv, ready);
+        }
+        assert!(*ready);
+        waker.join().unwrap();
+    }
+}

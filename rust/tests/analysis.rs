@@ -1,0 +1,273 @@
+//! Integration tests for the `repro analyze` static-analysis pass.
+//!
+//! Two halves:
+//!   1. Fixture expectations — every lint has positive / allowed / clean
+//!      fixtures under `tests/analysis_fixtures/`, and each positive
+//!      fixture asserts the exact `(lint, line)` set so a lexer or
+//!      scanner regression shows up as a precise diff.
+//!   2. The self-run — the crate's own `src/` tree must be clean:
+//!      zero unsuppressed findings, and every suppression carries a
+//!      reason. This is the same gate CI runs via `repro analyze`.
+
+use std::path::{Path, PathBuf};
+
+use quantum_peft::analysis::{self, LINT_NAMES};
+use quantum_peft::util::json::Json;
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/analysis_fixtures")
+}
+
+/// Analyze one fixture, passing a *relative* rel path so scope
+/// classification does not depend on where the checkout lives.
+fn analyze_fixture(rel: &str) -> (Vec<(String, u32)>, usize) {
+    let path = fixture_root().join(rel);
+    let source = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let (findings, suppressed) =
+        analysis::analyze_source(&format!("tests/analysis_fixtures/{rel}"), &source);
+    let pairs = findings.iter().map(|f| (f.lint.to_string(), f.line)).collect();
+    (pairs, suppressed.len())
+}
+
+/// Assert a fixture produces exactly `lines` findings of one `lint`
+/// (in source order) and `suppressed` reasoned allows.
+fn expect(rel: &str, lint: &str, lines: &[u32], suppressed: usize) {
+    let (got, sup) = analyze_fixture(rel);
+    let want: Vec<(String, u32)> =
+        lines.iter().map(|l| (lint.to_string(), *l)).collect();
+    assert_eq!(got, want, "findings for {rel}");
+    assert_eq!(sup, suppressed, "suppressed count for {rel}");
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn determinism_positive() {
+    // for-in @11, .keys() @18, .retain() @19, .iter() @26, the two
+    // clocks @30/@31; the #[cfg(test)] block at the bottom is exempt.
+    expect("serve/det_positive.rs", "determinism", &[11, 18, 19, 26, 30, 31], 0);
+}
+
+#[test]
+fn determinism_allowed() {
+    // One allow on the line above, one trailing on the same line.
+    expect("serve/det_allowed.rs", "determinism", &[], 2);
+}
+
+#[test]
+fn determinism_clean() {
+    expect("serve/det_clean.rs", "determinism", &[], 0);
+}
+
+// --------------------------------------------------------- lock-discipline
+
+#[test]
+fn lock_positive() {
+    // unwrap @10, expect @14, unwraps @18/@19, plus the undeclared
+    // nested-hold reported at the second held acquisition (@19).
+    expect("serve/lock_positive.rs", "lock-discipline", &[10, 14, 18, 19, 19], 0);
+}
+
+#[test]
+fn lock_allowed() {
+    expect("serve/lock_allowed.rs", "lock-discipline", &[], 1);
+}
+
+#[test]
+fn lock_clean() {
+    expect("serve/lock_clean.rs", "lock-discipline", &[], 0);
+}
+
+#[test]
+fn lock_order_inversion() {
+    // The fixture path ends in serve/registry.rs, so the declared order
+    // applies: `inner` acquired (@27) while `tenants` (@26) is held.
+    let rel = "serve/registry.rs";
+    let path = fixture_root().join(rel);
+    let source = std::fs::read_to_string(&path).expect("read registry fixture");
+    let (findings, suppressed) =
+        analysis::analyze_source(&format!("tests/analysis_fixtures/{rel}"), &source);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].lint, "lock-discipline");
+    assert_eq!(findings[0].line, 27);
+    assert!(
+        findings[0].message.contains("declared"),
+        "inversion message should point at the declared table: {}",
+        findings[0].message
+    );
+    assert!(suppressed.is_empty());
+}
+
+// -------------------------------------------------------------- panic-path
+
+#[test]
+fn panic_positive() {
+    // v[0] @3, .unwrap @7, .expect @11, panic! @16, unreachable! @18.
+    expect("store/panic_positive.rs", "panic-path", &[3, 7, 11, 16, 18], 0);
+}
+
+#[test]
+fn panic_allowed() {
+    expect("store/panic_allowed.rs", "panic-path", &[], 1);
+}
+
+#[test]
+fn panic_clean() {
+    expect("store/panic_clean.rs", "panic-path", &[], 0);
+}
+
+// ----------------------------------------------------------- framing-casts
+
+#[test]
+fn framing_positive() {
+    // `as u16` @4, two `as usize` @8, `as u32` @12.
+    expect("store/wal.rs", "framing-casts", &[4, 8, 8, 12], 0);
+}
+
+#[test]
+fn framing_allowed() {
+    expect("store/snapshot.rs", "framing-casts", &[], 1);
+}
+
+#[test]
+fn framing_clean() {
+    expect("store/recover.rs", "framing-casts", &[], 0);
+}
+
+// ---------------------------------------------------------- log-discipline
+
+#[test]
+fn log_positive() {
+    expect("metrics/log_positive.rs", "log-discipline", &[3, 4], 0);
+}
+
+#[test]
+fn log_allowed() {
+    expect("metrics/log_allowed.rs", "log-discipline", &[], 1);
+}
+
+#[test]
+fn log_clean() {
+    expect("metrics/log_clean.rs", "log-discipline", &[], 0);
+}
+
+// ----------------------------------------------------------- io-durability
+
+#[test]
+fn io_positive() {
+    // File::create @6 and fs::write @11, neither fn has an fsync.
+    expect("store/io_positive.rs", "io-durability", &[6, 11], 0);
+}
+
+#[test]
+fn io_allowed() {
+    expect("store/io_allowed.rs", "io-durability", &[], 1);
+}
+
+#[test]
+fn io_clean() {
+    expect("store/io_clean.rs", "io-durability", &[], 0);
+}
+
+// ------------------------------------------------------------- suppression
+
+#[test]
+fn suppression_bare_allow_is_a_finding() {
+    expect("serve/suppress_bare.rs", "suppression", &[3], 0);
+}
+
+#[test]
+fn suppression_unknown_lint_is_a_finding() {
+    expect("serve/suppress_unknown.rs", "suppression", &[2], 0);
+}
+
+#[test]
+fn suppression_malformed_directive_is_a_finding() {
+    expect("serve/suppress_malformed.rs", "suppression", &[2], 0);
+}
+
+// ---------------------------------------------------------- corpus totals
+
+#[test]
+fn fixture_corpus_totals() {
+    let report = analysis::analyze_paths(&[fixture_root()]).expect("walk fixtures");
+    assert_eq!(report.files_scanned, 22, "fixture .rs file count");
+    assert_eq!(report.findings.len(), 28, "total findings across corpus");
+    assert_eq!(report.suppressed.len(), 7, "total reasoned allows");
+    for s in &report.suppressed {
+        assert!(
+            !s.reason.is_empty(),
+            "suppression without a reason at {}:{}",
+            s.finding.file,
+            s.finding.line
+        );
+    }
+    // Every lint is exercised by at least one positive fixture.
+    let hit: Vec<&str> = analysis::counts(&report).into_iter().map(|(l, _)| l).collect();
+    for lint in LINT_NAMES {
+        assert!(hit.contains(lint), "no fixture exercises lint `{lint}`");
+    }
+}
+
+#[test]
+fn json_output_schema() {
+    let report = analysis::analyze_paths(&[fixture_root()]).expect("walk fixtures");
+    let rendered = analysis::render_json(&report);
+    let v = Json::parse(&rendered).expect("render_json emits valid json");
+    assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 22);
+    let findings = v.get("findings").unwrap().as_arr().unwrap();
+    assert_eq!(findings.len(), 28);
+    for f in findings {
+        let lint = f.get("lint").unwrap().as_str().unwrap();
+        assert!(LINT_NAMES.contains(&lint), "unknown lint in json: {lint}");
+        assert!(!f.get("file").unwrap().as_str().unwrap().is_empty());
+        assert!(f.get("line").unwrap().as_usize().unwrap() >= 1);
+        assert!(!f.get("message").unwrap().as_str().unwrap().is_empty());
+    }
+    let suppressed = v.get("suppressed").unwrap().as_arr().unwrap();
+    assert_eq!(suppressed.len(), 7);
+    for s in suppressed {
+        assert!(
+            !s.get("reason").unwrap().as_str().unwrap().is_empty(),
+            "suppressed entry without a reason in json output"
+        );
+    }
+    let counts = v.get("counts").unwrap().as_obj().unwrap();
+    assert_eq!(counts.get("lock-discipline").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(counts.get("determinism").unwrap().as_usize().unwrap(), 6);
+}
+
+// ---------------------------------------------------------------- self-run
+
+/// The gate CI enforces: the crate's own source tree has zero
+/// unsuppressed findings. On failure, print the same text report a
+/// `repro analyze` run would.
+#[test]
+fn src_tree_is_clean() {
+    // Integration tests run with cwd = the package root (rust/), but
+    // fall back to the manifest dir so the test is cwd-independent.
+    let src = Path::new("src");
+    let root = if src.is_dir() {
+        src.to_path_buf()
+    } else {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+    };
+    let report = analysis::analyze_paths(&[root]).expect("walk src/");
+    assert!(report.files_scanned > 20, "scanned only {} files", report.files_scanned);
+    assert!(
+        report.clean(),
+        "`repro analyze` would fail with {} finding(s):\n\n{}",
+        report.findings.len(),
+        analysis::render_text(&report)
+    );
+    for s in &report.suppressed {
+        assert!(
+            !s.reason.is_empty(),
+            "suppression without a reason at {}:{}",
+            s.finding.file,
+            s.finding.line
+        );
+    }
+}

@@ -1,0 +1,5 @@
+// log-discipline fixture: a reasoned allow on an explicit debug hook.
+fn debug_dump(x: u64) {
+    // analyze: allow(log-discipline) explicit debug hook behind a CLI flag
+    println!("x = {x}");
+}

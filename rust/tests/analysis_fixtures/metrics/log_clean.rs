@@ -1,0 +1,8 @@
+// log-discipline fixture: rendering into a String produces nothing.
+use std::fmt::Write;
+
+fn render(x: u64) -> String {
+    let mut out = String::new();
+    let _ = write!(out, "x = {x}");
+    out
+}

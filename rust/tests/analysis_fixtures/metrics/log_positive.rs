@@ -1,0 +1,5 @@
+// log-discipline fixture: stdout writes in a library module.
+fn report(x: u64) {
+    println!("x = {x}");
+    eprintln!("warn");
+}

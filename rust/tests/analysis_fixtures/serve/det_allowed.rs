@@ -1,0 +1,13 @@
+// determinism fixture: the same patterns, suppressed with reasons.
+use std::time::Instant;
+
+fn timed_only() -> f64 {
+    // analyze: allow(determinism) wall-clock metric only; never emitted
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+fn trailing() -> f64 {
+    let t = Instant::now(); // analyze: allow(determinism) timer for a local bench
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,15 @@
+// determinism fixture: ordered maps and logical clocks produce nothing.
+use std::collections::BTreeMap;
+
+struct Cache {
+    entries: BTreeMap<String, u64>,
+}
+
+fn iterate(c: &Cache) -> u64 {
+    c.entries.values().sum()
+}
+
+fn logical_clock(t: &mut f64, dt: f64) -> f64 {
+    *t += dt;
+    *t
+}

@@ -1,0 +1,42 @@
+// determinism fixture: every pattern the lint must catch.
+use std::collections::{HashMap, HashSet};
+use std::time::{Instant, SystemTime};
+
+struct Cache {
+    entries: HashMap<String, u64>,
+}
+
+fn iterate(c: &Cache) -> u64 {
+    let mut sum = 0;
+    for (_k, v) in &c.entries {
+        sum += v;
+    }
+    sum
+}
+
+fn methods(c: &mut Cache) -> usize {
+    let n = c.entries.keys().count();
+    c.entries.retain(|_, v| *v > 0);
+    n
+}
+
+fn let_bound() -> usize {
+    let mut seen = HashSet::new();
+    seen.insert(1u32);
+    seen.iter().count()
+}
+
+fn clocks() -> f64 {
+    let t = Instant::now();
+    let _ = SystemTime::now();
+    t.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let t = std::time::Instant::now();
+        assert!(t.elapsed().as_secs() < 1);
+    }
+}

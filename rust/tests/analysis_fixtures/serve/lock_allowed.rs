@@ -1,0 +1,7 @@
+// lock-discipline fixture: a reasoned allow on a lock unwrap.
+use std::sync::Mutex;
+
+fn stats(m: &Mutex<Vec<u64>>) -> usize {
+    // analyze: allow(lock-discipline) single-threaded init; no poison possible
+    m.lock().unwrap().len()
+}

@@ -1,0 +1,13 @@
+// lock-discipline fixture: the poison-tolerant helper idiom is clean.
+use std::sync::{Mutex, MutexGuard};
+
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn bump(m: &Mutex<u64>) {
+    *lock_or_recover(m) += 1;
+}

@@ -1,0 +1,21 @@
+// lock-discipline fixture: unwrap styles and undeclared nested holds.
+use std::sync::{Mutex, RwLock};
+
+struct S {
+    counters: Mutex<Vec<u64>>,
+    config: RwLock<u32>,
+}
+
+fn unwrap_style(s: &S) {
+    s.counters.lock().unwrap().push(1);
+}
+
+fn expect_style(s: &S) -> u32 {
+    *s.config.read().expect("poisoned")
+}
+
+fn nested_held(s: &S) -> u64 {
+    let c = s.counters.lock().unwrap();
+    let g = s.config.read().unwrap();
+    c.len() as u64 + u64::from(*g)
+}

@@ -1,0 +1,29 @@
+// lock-discipline fixture: this file's path ends in serve/registry.rs,
+// so the declared order ["inner", "tenants", "current"] applies — and
+// `inner` is acquired below while `tenants` is held.
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockWriteGuard};
+
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+struct R {
+    inner: Mutex<u64>,
+    tenants: RwLock<Vec<String>>,
+}
+
+fn inverted(r: &R) -> u64 {
+    let t = write_or_recover(&r.tenants);
+    let i = lock_or_recover(&r.inner);
+    *i + t.len() as u64
+}

@@ -1,0 +1,4 @@
+// suppression fixture: a bare allow is itself a finding and suppresses
+// nothing.
+// analyze: allow(panic-path)
+fn nothing() {}

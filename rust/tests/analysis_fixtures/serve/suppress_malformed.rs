@@ -1,0 +1,3 @@
+// suppression fixture: an unrecognized directive shape is a finding.
+// analyze: forbid(panic-path) not a directive the pass knows
+fn nothing() {}

@@ -1,0 +1,3 @@
+// suppression fixture: a typo'd lint name is a finding.
+// analyze: allow(panics) typo'd lint name
+fn nothing() {}

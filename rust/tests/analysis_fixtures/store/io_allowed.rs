@@ -1,0 +1,5 @@
+// io-durability fixture: a reasoned allow on an advisory cache file.
+fn cache_hint(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    // analyze: allow(io-durability) advisory cache file; loss is harmless
+    std::fs::write(path, bytes)
+}

@@ -1,0 +1,9 @@
+// io-durability fixture: the write + fsync idiom produces nothing.
+use std::fs::File;
+use std::io::Write;
+
+fn persist(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()
+}

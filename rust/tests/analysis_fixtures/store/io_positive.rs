@@ -1,0 +1,12 @@
+// io-durability fixture: store/ writes with no fsync in the same fn.
+use std::fs::File;
+use std::io::Write;
+
+fn persist(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(bytes)
+}
+
+fn dump(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}

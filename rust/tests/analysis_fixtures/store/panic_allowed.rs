@@ -1,0 +1,5 @@
+// panic-path fixture: a reasoned allow on a checked index.
+fn first(v: &[u8]) -> u8 {
+    // analyze: allow(panic-path) caller bounds-checks via the framing header
+    v[0]
+}

@@ -1,0 +1,8 @@
+// panic-path fixture: typed-error idioms produce nothing.
+fn first(v: &[u8]) -> Option<u8> {
+    v.first().copied()
+}
+
+fn parse(s: &str) -> Result<u64, std::num::ParseIntError> {
+    s.parse()
+}

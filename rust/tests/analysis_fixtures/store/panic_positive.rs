@@ -1,0 +1,19 @@
+// panic-path fixture: every panicking shape the lint must catch.
+fn first(v: &[u8]) -> u8 {
+    v[0]
+}
+
+fn parse(s: &str) -> u64 {
+    s.parse().unwrap()
+}
+
+fn must(o: Option<u64>) -> u64 {
+    o.expect("present")
+}
+
+fn boom(flag: bool) {
+    if flag {
+        panic!("no");
+    }
+    unreachable!()
+}

@@ -1,0 +1,8 @@
+// framing-casts fixture: checked conversions produce nothing.
+fn narrow(len: usize) -> Result<u32, std::num::TryFromIntError> {
+    u32::try_from(len)
+}
+
+fn widen(x: u16) -> usize {
+    usize::from(x)
+}

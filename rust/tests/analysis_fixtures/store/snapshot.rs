@@ -1,0 +1,5 @@
+// framing-casts fixture: a reasoned allow on a masked (lossless) cast.
+fn table_index(masked: u32) -> usize {
+    // analyze: allow(framing-casts) masked to 8 bits on this line; lossless
+    (masked & 0xff) as usize
+}

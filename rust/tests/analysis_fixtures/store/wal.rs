@@ -1,0 +1,13 @@
+// framing-casts fixture: this path ends in store/wal.rs, so bare
+// narrowing casts are findings.
+fn encode(len: usize) -> [u8; 2] {
+    (len as u16).to_le_bytes()
+}
+
+fn widen(x: u16, y: u32) -> usize {
+    x as usize + y as usize
+}
+
+fn frame_len(payload: &[u8]) -> u32 {
+    payload.len() as u32
+}
