@@ -2,17 +2,23 @@
 //! worker x tenant grid (the ISSUE-3 acceptance grid: 1/4/8 workers x
 //! 1/16/256 tenants), the checkpoint bulk-I/O speedup measurement, the
 //! ISSUE-4 overload-shedding scenario (open loop at ~5x the admitted
-//! budget: rejected share + admitted-request p99), the dense-vs-
-//! structured apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`,
-//! the ISSUE-5 durability lines: WAL append throughput per
-//! durability mode, and recovery wall-clock for 256 tenants before vs
-//! after snapshot compaction — and the ISSUE-6 shard-scaling grid
-//! (1/4/16 shards x 256/4096 tenants, per-shard spread + fleet req/s).
+//! budget: rejected share per worker count), the dense-vs-structured
+//! apply-path comparison behind `STRUCTURED_APPLY_MIN_Q`, the ISSUE-5
+//! durability lines: WAL append throughput per durability mode, and
+//! recovery wall-clock for 256 tenants before vs after snapshot
+//! compaction — and the ISSUE-6 shard-scaling grid (1/4/16 shards x
+//! 256/4096 tenants, per-shard spread + fleet req/s).
 //!
 //! Uses the in-tree harness conventions (criterion is unavailable
 //! offline): self-contained, prints a stable one-line-per-cell report,
-//! asserts nothing timing-dependent.
+//! asserts nothing timing-dependent. Every section also returns its
+//! headline numbers as `(name, value)` counters, and `main` writes them
+//! all to `BENCH_serve.json` (override the path with `BENCH_OUT`) so CI
+//! can archive the run as a machine-readable artifact. `BENCH_CHEAP=1`
+//! runs only the seconds-scale sections — the subset the CI bench job
+//! executes on every push.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use quantum_peft::coordinator::checkpoint::{self, AdapterManifest};
@@ -28,9 +34,14 @@ use quantum_peft::store::{
     recover, Durability, StateRecord, StateStore, TenantState,
 };
 use quantum_peft::util::bench::fmt_ns;
+use quantum_peft::util::json::{self, Json};
 use quantum_peft::util::rng::Rng;
 
-fn serve_grid() {
+/// Headline numbers one section contributes to `BENCH_serve.json`.
+type Counters = Vec<(String, f64)>;
+
+fn serve_grid() -> Counters {
+    let mut out = Counters::new();
     println!("# serve: closed-loop seeded loadgen, q=5 L=1, zipf s=1.0");
     println!("{:>8} {:>8} {:>10} {:>12} {:>12} {:>12}",
              "workers", "tenants", "requests", "req/s", "p50", "p99");
@@ -46,7 +57,9 @@ fn serve_grid() {
                     zipf_s: 1.0,
                     open_rate_rps: 0.0,
                 },
-                serve: ServeConfig { workers, ..ServeConfig::default() },
+                // timed mode: fifo latencies are logical (zero under a
+                // closed loop), and this grid is about real wall time
+                serve: ServeConfig { workers, fifo: false, ..ServeConfig::default() },
                 cache_bytes: 8 << 20,
                 ..BenchOpts::default()
             };
@@ -55,18 +68,21 @@ fn serve_grid() {
                     println!("{:>8} {:>8} {:>10} {:>12.0} {:>12} {:>12}",
                              workers, tenants, s.completed, s.rps,
                              fmt_ns(s.p50_us * 1e3), fmt_ns(s.p99_us * 1e3));
+                    out.push((format!("w{workers}_t{tenants}_rps"), s.rps));
+                    out.push((format!("w{workers}_t{tenants}_p99_us"), s.p99_us));
                 }
                 Err(e) => println!("{workers:>8} {tenants:>8} failed: {e}"),
             }
         }
     }
+    out
 }
 
 /// The satellite's evidence: bulk byte-slice checkpoint I/O vs the old
 /// element-at-a-time reads. The writer is bulk-only now, so the
 /// element-wise reference below re-implements the old read loop against
 /// the same on-disk bytes.
-fn checkpoint_io() {
+fn checkpoint_io() -> Counters {
     use std::io::Read as _;
     let dir = std::env::temp_dir().join("qp_serve_bench_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
@@ -108,18 +124,27 @@ fn checkpoint_io() {
     println!("load (bulk)          {:>10.1} MiB/s", mb / load_s);
     println!("load (element-wise)  {:>10.1} MiB/s", mb / slow_s);
     println!("bulk read speedup    {:>10.1}x", slow_s / load_s);
+    vec![
+        ("save_mib_s".into(), mb / save_s),
+        ("load_bulk_mib_s".into(), mb / load_s),
+        ("load_elementwise_mib_s".into(), mb / slow_s),
+        ("bulk_read_speedup".into(), slow_s / load_s),
+    ]
 }
 
 /// ISSUE-4 acceptance scenario: open-loop arrivals at ~5x the aggregate
 /// admitted budget with per-tenant rate limits on. fifo mode, so the
 /// seeded gaps drive a logical clock (no sleeping — the cell runs at
 /// full speed) and the shed set is byte-deterministic at any worker
-/// count; wall-clock latency of the admitted requests is still real.
-fn overload_shedding() {
+/// count. Latencies here are logical (the span clock only moves by the
+/// declared interarrival gaps), so the report sticks to the shed
+/// ledger: arrivals, admitted, global and hottest-tenant shed rates.
+fn overload_shedding() -> Counters {
+    let mut out = Counters::new();
     println!("# overload shedding: open loop 2000 req/s (logical) vs \
               16 tenants x 25 rps admitted budget, zipf s=1.0");
-    println!("{:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
-             "workers", "arrivals", "admitted", "shed%", "p99(adm)", "hot-shed%");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>12}",
+             "workers", "arrivals", "admitted", "shed%", "hot-shed%");
     for &workers in &[1usize, 4, 8] {
         let opts = BenchOpts {
             load: LoadSpec {
@@ -161,13 +186,15 @@ fn overload_shedding() {
                             / att.max(1) as f64
                     })
                     .unwrap_or(0.0);
-                println!("{:>8} {:>10} {:>10} {:>9.1}% {:>12} {:>11.1}%",
-                         workers, arrivals, a.admitted, shed,
-                         fmt_ns(s.p99_us * 1e3), hot);
+                println!("{:>8} {:>10} {:>10} {:>9.1}% {:>11.1}%",
+                         workers, arrivals, a.admitted, shed, hot);
+                out.push((format!("w{workers}_shed_pct"), shed));
+                out.push((format!("w{workers}_admitted"), a.admitted as f64));
             }
             Err(e) => println!("{workers:>8} failed: {e}"),
         }
     }
+    out
 }
 
 /// The routing decision behind `STRUCTURED_APPLY_MIN_Q`, measured: dense
@@ -175,7 +202,8 @@ fn overload_shedding() {
 /// per request once cached) vs structured gate application straight from
 /// the thetas. Also prints the one-off dense materialization cost the
 /// structured path never pays.
-fn structured_vs_dense() {
+fn structured_vs_dense() -> Counters {
+    let mut counters = Counters::new();
     println!("# apply path: dense x@Q_P row-multiply vs structured \
               PauliCircuit::apply, L=1, per row");
     println!("{:>4} {:>6} {:>12} {:>12} {:>12} {:>10}",
@@ -219,7 +247,11 @@ fn structured_vs_dense() {
         println!("{:>4} {:>6} {:>12} {:>12} {:>12} {:>9.1}x",
                  q, n, fmt_ns(dense_s * 1e9), fmt_ns(struct_s * 1e9),
                  fmt_ns(mat_s * 1e9), dense_s / struct_s);
+        counters.push((format!("q{q}_dense_row_ns"), dense_s * 1e9));
+        counters.push((format!("q{q}_struct_row_ns"), struct_s * 1e9));
+        counters.push((format!("q{q}_speedup"), dense_s / struct_s));
     }
+    counters
 }
 
 /// One seeded register-record for the WAL benches (q=5 L=1 thetas
@@ -258,7 +290,8 @@ fn bench_dir(name: &str) -> std::path::PathBuf {
 /// record payload is a real register record (tenant + manifest + theta
 /// vector), so records/s is the adapter-churn rate the control plane
 /// can absorb durably.
-fn wal_append_throughput() {
+fn wal_append_throughput() -> Counters {
+    let mut out = Counters::new();
     println!("# state store: WAL append throughput, q=5 L=1 register records");
     println!("{:>12} {:>10} {:>14} {:>12}",
              "durability", "records", "records/s", "MiB/s");
@@ -282,8 +315,11 @@ fn wal_append_throughput() {
         println!("{:>12} {:>10} {:>14.0} {:>12.1}",
                  label, n, n as f64 / wall,
                  bytes / (1 << 20) as f64 / wall);
+        out.push((format!("{label}_records_s"), n as f64 / wall));
+        out.push((format!("{label}_mib_s"), bytes / (1 << 20) as f64 / wall));
         let _ = std::fs::remove_dir_all(&dir);
     }
+    out
 }
 
 /// ISSUE-5 acceptance: recovery wall-clock for 256 tenants, full-WAL
@@ -291,7 +327,7 @@ fn wal_append_throughput() {
 /// recovery after snapshot compaction truncated the log. The
 /// post-compaction number must be measurably cheaper — that is the
 /// entire point of the snapshot.
-fn recovery_wall_clock() {
+fn recovery_wall_clock() -> Counters {
     const TENANTS: usize = 256;
     const SWAPS: u64 = 8;
     let dir = bench_dir("recover");
@@ -329,6 +365,12 @@ fn recovery_wall_clock() {
     println!("after snapshot+truncate           {:>10}  ({:.1}x cheaper)",
              fmt_ns(compact_s * 1e9), full_s / compact_s.max(1e-9));
     let _ = std::fs::remove_dir_all(&dir);
+    vec![
+        ("full_replay_s".into(), full_s),
+        ("compacted_s".into(), compact_s),
+        ("compaction_speedup".into(), full_s / compact_s.max(1e-9)),
+        ("wal_records".into(), records as f64),
+    ]
 }
 
 /// ISSUE-6 acceptance: horizontal scaling. The same closed-loop seeded
@@ -337,7 +379,8 @@ fn recovery_wall_clock() {
 /// should grow with the shard count until the driving thread saturates.
 /// Per-shard min/max served counts show how evenly the consistent-hash
 /// ring spreads the Zipf-skewed tenants.
-fn shard_scaling() {
+fn shard_scaling() -> Counters {
+    let mut out = Counters::new();
     println!("# shard scaling: closed-loop loadgen, q=5 L=1, zipf s=1.0, \
               2 workers/shard");
     println!("{:>7} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}",
@@ -376,19 +419,53 @@ fn shard_scaling() {
                         shards, tenants, report.fleet.completed(),
                         report.fleet.fleet_rps(),
                         fmt_ns(report.fleet.p99_us() * 1e3), min, max);
+                    out.push((format!("s{shards}_t{tenants}_fleet_rps"),
+                              report.fleet.fleet_rps()));
                 }
                 Err(e) => println!("{shards:>7} {tenants:>8} failed: {e}"),
             }
         }
     }
+    out
+}
+
+/// Write every section's counters as one JSON object:
+/// `{"bench": "serve", "schema": 1, "cheap": ..., "sections": {...}}`.
+fn write_report(cheap: bool, sections: &[(&str, Counters)]) {
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let mut secs: BTreeMap<String, Json> = BTreeMap::new();
+    for (name, counters) in sections {
+        let m: BTreeMap<String, Json> = counters.iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        secs.insert((*name).to_string(), Json::Obj(m));
+    }
+    let report = json::obj(vec![
+        ("bench", "serve".into()),
+        ("schema", 1usize.into()),
+        ("cheap", Json::Bool(cheap)),
+        ("sections", Json::Obj(secs)),
+    ]);
+    match std::fs::write(&path, report.dump() + "\n") {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => eprintln!("# failed to write {path}: {e}"),
+    }
 }
 
 fn main() {
-    checkpoint_io();
-    wal_append_throughput();
-    recovery_wall_clock();
-    structured_vs_dense();
-    overload_shedding();
-    serve_grid();
-    shard_scaling();
+    // BENCH_CHEAP=1: only the seconds-scale sections (what CI runs)
+    let cheap = std::env::var("BENCH_CHEAP").map(|v| v == "1").unwrap_or(false);
+    let mut sections: Vec<(&str, Counters)> = vec![
+        ("checkpoint_io", checkpoint_io()),
+        ("wal_append_throughput", wal_append_throughput()),
+        ("recovery_wall_clock", recovery_wall_clock()),
+        ("structured_vs_dense", structured_vs_dense()),
+    ];
+    if !cheap {
+        sections.push(("overload_shedding", overload_shedding()));
+        sections.push(("serve_grid", serve_grid()));
+        sections.push(("shard_scaling", shard_scaling()));
+    }
+    write_report(cheap, &sections);
 }

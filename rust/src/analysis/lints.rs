@@ -32,6 +32,7 @@ pub const LINT_NAMES: &[&str] = &[
     "framing-casts",
     "log-discipline",
     "io-durability",
+    "obs-discipline",
     "suppression",
 ];
 
@@ -45,6 +46,13 @@ fn fifo_scope(rel: &str) -> bool {
 /// findings.
 fn serve_store_scope(rel: &str) -> bool {
     rel.contains("serve/") || rel.contains("store/")
+}
+
+/// The serving path (serving tier + its telemetry layer), where the
+/// span clock is the only sanctioned wall-clock source. `obs/span.rs`
+/// defines that clock and is the one exempt module.
+fn obs_scope(rel: &str) -> bool {
+    (rel.contains("serve/") || rel.contains("obs/")) && !rel.contains("obs/span.rs")
 }
 
 /// Binary framing code: every narrowing cast is a silent-truncation bug
@@ -74,6 +82,7 @@ pub fn run_all(rel: &str, lx: &LexedFile) -> Vec<Finding> {
     framing_casts(rel, lx, &mut out);
     log_discipline(rel, lx, &mut out);
     io_durability(rel, lx, &mut out);
+    obs_discipline(rel, lx, &mut out);
     out
 }
 
@@ -596,6 +605,40 @@ fn io_durability(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
     }
 }
 
+// ------------------------------------------------------------- obs-discipline
+
+fn obs_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
+    if !obs_scope(rel) {
+        return;
+    }
+    let toks = &lx.toks;
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if let Some(src) = ident_at(toks, i).filter(|id| *id == "Instant" || *id == "SystemTime")
+        {
+            if is_punct(toks, i + 1, ':')
+                && is_punct(toks, i + 2, ':')
+                && ident_at(toks, i + 3) == Some("now")
+            {
+                out.push(Finding {
+                    lint: "obs-discipline",
+                    file: rel.to_string(),
+                    line: toks[i].line,
+                    message: format!(
+                        "{src}::now() on the serving path outside obs/span.rs — the \
+                         SpanClock is the only sanctioned wall-clock source (fifo \
+                         latencies are logical); take timestamps from the session's \
+                         clock, or allow with the reason the read never shapes a \
+                         latency or an emitted line"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -617,8 +660,10 @@ mod tests {
 
     #[test]
     fn wall_clock_flagged_in_scope_only() {
+        // store/ is fifo scope without the obs-discipline overlap, so
+        // exactly the determinism lint fires
         let src = "fn f() { let t = Instant::now(); }\n";
-        assert_eq!(findings("x/serve/a.rs", src).len(), 1);
+        assert_eq!(findings("x/store/a.rs", src).len(), 1);
         assert_eq!(findings("x/report/a.rs", src).len(), 0);
     }
 
@@ -685,6 +730,31 @@ mod tests {
         assert_eq!(findings("x/serve/a.rs", src).len(), 1);
         assert_eq!(findings("x/report/tables.rs", src).len(), 0);
         assert_eq!(findings("x/util/bench.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn wall_clock_in_serve_hits_both_clock_lints() {
+        // serve/ is in both the determinism and obs-discipline scopes:
+        // one bare Instant::now() yields one finding per lint
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let f = findings("x/serve/a.rs", src);
+        let lints: Vec<&str> = f.iter().map(|x| x.lint).collect();
+        assert!(lints.contains(&"determinism"), "{f:?}");
+        assert!(lints.contains(&"obs-discipline"), "{f:?}");
+        assert_eq!(f.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn obs_discipline_covers_obs_but_exempts_span_clock() {
+        // obs/ is outside the fifo (determinism) scope but inside the
+        // obs-discipline scope — except span.rs, the sanctioned clock
+        let src = "fn f() { let t = SystemTime::now(); }\n";
+        let f = findings("x/obs/hist.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "obs-discipline");
+        assert_eq!(findings("x/obs/span.rs", src).len(), 0);
+        // and modules off the serving path are untouched
+        assert_eq!(findings("x/report/a.rs", src).len(), 0);
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //!   (the EventLog is the sink).
 //! - `io-durability` — in `store/`: `File::create`/`fs::write` in a fn
 //!   with no `sync_all`/`sync_data`.
+//! - `obs-discipline` — in `serve/`, `obs/` (except `obs/span.rs`):
+//!   `Instant::now` / `SystemTime::now` — the [`crate::obs::SpanClock`]
+//!   is the only sanctioned wall-clock source on the serving path.
 //! - `suppression` — everywhere: malformed `// analyze:` directives,
 //!   allows without a reason, unknown lint names.
 //!
@@ -315,11 +318,13 @@ mod tests {
 
     #[test]
     fn text_render_has_anchors_and_summary() {
+        // store/ is in the determinism scope but not the obs one, so a
+        // wall-clock read here renders exactly one anchored finding
         let src = "fn f() { let t = Instant::now(); }\n";
-        let (findings, suppressed) = analyze_source("x/serve/a.rs", src);
+        let (findings, suppressed) = analyze_source("x/store/a.rs", src);
         let report = Report { findings, suppressed, files_scanned: 1 };
         let text = render_text(&report);
-        assert!(text.contains("x/serve/a.rs:1: [determinism]"), "{text}");
+        assert!(text.contains("x/store/a.rs:1: [determinism]"), "{text}");
         assert!(text.contains("1 finding(s), 0 suppressed, 1 file(s) scanned"), "{text}");
     }
 }

@@ -18,10 +18,12 @@
 //!   swapping a slot's `current` adapter. Cache purges run *after* the
 //!   tenants guard drops (see `try_evict_tenant`) — nesting the other
 //!   way is exactly the inversion this table rejects.
-//! - `serve/server.rs` — metrics merge/summarize touch the latency
-//!   vector before the per-tenant map; the batcher is only ever locked
-//!   stand-alone (temporary guards), but give it a slot anyway so a
-//!   future held use is checked rather than "undeclared".
+//! - `serve/server.rs` — summarize reads the per-tenant observability
+//!   map (`tenants`) and drops that guard before snapshotting the
+//!   batch-size log (`batch_sizes`); the batcher and per-worker flight
+//!   recorders are only ever locked stand-alone (temporary guards), but
+//!   declare the order anyway so a future held use is checked rather
+//!   than "undeclared".
 //! - `serve/shard.rs` — the router's result channel is drained while
 //!   sessions are appended to `collected`; seat-level `registry`/`store`
 //!   handles are cloned out last during shutdown.
@@ -33,7 +35,7 @@
 /// `(file-path substring, lock field names in required acquisition order)`.
 pub const LOCK_ORDER: &[(&str, &[&str])] = &[
     ("serve/registry.rs", &["inner", "tenants", "current"]),
-    ("serve/server.rs", &["batcher", "lat_ns", "per_tenant_ns"]),
+    ("serve/server.rs", &["batcher", "tenants", "batch_sizes"]),
     ("serve/shard.rs", &["table", "results_rx", "collected", "registry", "store"]),
     ("serve/scheduler.rs", &["state"]),
     ("store/mod.rs", &["wal"]),

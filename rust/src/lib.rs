@@ -56,6 +56,28 @@
 //! composes with fifo mode: per-shard response logs stay byte-identical
 //! at any worker count.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the serving telemetry layer, threaded through the whole
+//! request path. Every request carries an [`obs::TraceCtx`] (trace id
+//! derived from the seeded stream) through admission → coalesce →
+//! queue → cache-lookup → materialize → apply → respond, with
+//! per-phase durations taken from the [`obs::SpanClock`] — wall-clock
+//! in timed mode, a driver-advanced logical counter in fifo mode, so
+//! traces, latencies and interval snapshots are byte-reproducible.
+//! Per-tenant latency lives in mergeable log₂-bucket histograms
+//! ([`obs::Hist`]: fixed 64 buckets, lock-free increments, O(buckets)
+//! memory per tenant regardless of request count). A per-worker
+//! flight recorder ([`obs::FlightRecorder`]) keeps the last N
+//! completed spans and dumps them as `serve_trace` lines (plus
+//! optional `--trace-dir` JSONL) on demand and at session end.
+//! `--metrics-interval` emits live `serve_interval` snapshots
+//! (req/s, histogram p50/p95/p99, queue depth, cache hit rate,
+//! per-tenant rejects); `--slo-p99-us`/`--slo-error-budget` track
+//! per-tenant SLO error-budget burn ([`obs::SloPolicy`]), rendered as
+//! a compliance section in the serve-bench summary and emitted as
+//! `serve_slo` lines.
+//!
 //! ## Durability model
 //!
 //! [`store`] makes the serving control plane's state durable: registry
@@ -115,6 +137,11 @@
 //! - **io-durability** — `File::create`/`fs::write` in `store/` must
 //!   share a function with an fsync (the write-temp + `sync_all` +
 //!   atomic-rename idiom).
+//! - **obs-discipline** — `serve/` and `obs/` may only read the wall
+//!   clock through [`obs::SpanClock`] (defined in `obs/span.rs`, the
+//!   one exempt module); a direct `Instant::now`/`SystemTime::now`
+//!   anywhere else on the serving path bypasses the logical clock and
+//!   breaks fifo latency determinism.
 //!
 //! Exceptions are inline and reasoned:
 //! `// analyze: allow(<lint>) <reason>` on the finding's line or the
@@ -129,6 +156,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod peft;
 pub mod quantum;
 pub mod report;

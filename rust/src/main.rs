@@ -98,7 +98,8 @@ commands:
            [--rate-rps F] [--burst F] [--max-queue N]
            [--admission-config FILE] [--spool-dir PATH]
            [--state-dir PATH] [--durability buffered|always|N]
-           [--shards N]
+           [--shards N] [--metrics-interval N] [--slo-p99-us F]
+           [--slo-error-budget F] [--trace-dir PATH] [--recorder-cap N]
            multi-tenant adapter serving benchmark: seeded Zipf loadgen
            against the serve registry/scheduler (closed loop by default;
            --rate > 0 switches to open-loop arrivals and timed batching).
@@ -127,14 +128,26 @@ commands:
            consistent-hash router and prints per-shard + fleet
            metrics; tenant placement is a pure function of the name,
            so per-shard response logs stay fifo-deterministic.
+           observability: --metrics-interval N emits live serve_interval
+           snapshots (req/s, histogram p50/p95/p99, queue depth, cache
+           hit rate, per-tenant rejects) every N completed requests in
+           fifo mode / every N ms in timed mode; --slo-p99-us F with
+           --slo-error-budget B tracks per-tenant SLO error-budget burn
+           (serve_slo lines + a compliance section in the summary);
+           every request carries a trace span through admission ->
+           coalesce -> queue -> cache -> materialize -> apply ->
+           respond, with the last --recorder-cap spans per worker dumped
+           as serve_trace lines at session end (--trace-dir also writes
+           them as JSONL files).
            fifo mode is byte-deterministic per seed at any --workers,
            rejections included (open-loop gaps advance a logical clock
            instead of sleeping); summary (p50/p95/p99, req/s, batch
-           histogram, cache + admission counters) prints here and lands
-           in the event log as serve_* lines.
+           histogram, cache + admission counters, SLO compliance) prints
+           here and lands in the event log as serve_* lines.
   analyze  [--format text|json] [paths...]
            repo-invariant static analysis (determinism, lock-discipline,
-           panic-path, framing-casts, log-discipline, io-durability):
+           panic-path, framing-casts, log-discipline, io-durability,
+           obs-discipline):
            lexes the given .rs files/directories (default: the crate's
            src/ tree) and reports per-lint findings with file:line
            anchors. Suppress inline with
@@ -519,6 +532,20 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.flags.get("max-queue") {
         serve_cfg.admission.max_queue = v.parse().context("--max-queue")?;
+    }
+    if let Some(v) = args.flags.get("metrics-interval") {
+        serve_cfg.metrics_interval = v.parse().context("--metrics-interval")?;
+    }
+    if let Some(v) = args.flags.get("slo-p99-us") {
+        serve_cfg.slo_p99_us = v.parse().context("--slo-p99-us")?;
+    }
+    if let Some(v) = args.flags.get("slo-error-budget") {
+        serve_cfg.slo_error_budget = v.parse().context("--slo-error-budget")?;
+    }
+    serve_cfg.trace_dir = args.flags.get("trace-dir")
+        .map(std::path::PathBuf::from);
+    if let Some(v) = args.flags.get("recorder-cap") {
+        serve_cfg.recorder_cap = v.parse().context("--recorder-cap")?;
     }
     opts.spool_dir = args.flags.get("spool-dir").map(std::path::PathBuf::from);
     opts.state_dir = args.flags.get("state-dir").map(std::path::PathBuf::from);

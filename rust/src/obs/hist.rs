@@ -1,0 +1,184 @@
+//! Mergeable log₂-bucket histograms.
+//!
+//! [`Hist`] is a fixed 64-bucket histogram over `u64` samples
+//! (nanoseconds on the serving path): bucket 0 holds values `< 2` and
+//! bucket `i ≥ 1` holds `[2^i, 2^(i+1))` — `v.ilog2()` is the bucket
+//! index. Recording is one relaxed `fetch_add`, so all workers share
+//! one histogram with no locks and no allocation; merging adds counts
+//! bucket-wise, so per-tenant histograms roll up into session and fleet
+//! views. Memory is O(buckets) per tenant, replacing the unbounded
+//! sorted `Vec<u64>` the serving metrics used to keep per tenant.
+//!
+//! [`Hist::quantile`] walks the buckets to the nearest-rank sample and
+//! returns that bucket's lower bound, so its error versus the exact
+//! nearest-rank statistic is bounded by one bucket width (the exact
+//! value lies in `[q, max(2q, 2))`); `tests/serve.rs` pins that
+//! tolerance against the exact `percentile_us` oracle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets: `u64::ilog2` never exceeds 63.
+pub const BUCKETS: usize = 64;
+
+/// Fixed-size, lock-free, mergeable log₂ histogram.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v < 2 { 0 } else { v.ilog2() as usize }
+    }
+
+    /// The lower bound of bucket `i` — the value
+    /// [`quantile`](Hist::quantile) reports for samples landing there.
+    pub fn bucket_floor(i: usize) -> u64 {
+        if i == 0 { 0 } else { 1u64 << i }
+    }
+
+    /// Record one sample: a single relaxed `fetch_add`.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Bucket-count snapshot (index = log₂ bucket).
+    pub fn counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Add every bucket of `other` into `self`.
+    pub fn merge_from(&self, other: &Hist) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            let n = o.load(Ordering::Relaxed);
+            if n > 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Nearest-rank quantile (`p` in percent): the lower bound of the
+    /// bucket holding the rank-⌈p/100·n⌉ sample; 0 on an empty
+    /// histogram.
+    pub fn quantile(&self, p: f64) -> u64 {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_floor(i);
+            }
+        }
+        Self::bucket_floor(BUCKETS - 1)
+    }
+
+    /// [`quantile`](Hist::quantile) scaled ns → µs, the unit the
+    /// serving reports use.
+    pub fn quantile_us(&self, p: f64) -> f64 {
+        self.quantile(p) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_log2() {
+        assert_eq!(Hist::bucket(0), 0);
+        assert_eq!(Hist::bucket(1), 0);
+        assert_eq!(Hist::bucket(2), 1);
+        assert_eq!(Hist::bucket(3), 1);
+        assert_eq!(Hist::bucket(4), 2);
+        assert_eq!(Hist::bucket(u64::MAX), 63);
+        assert_eq!(Hist::bucket_floor(0), 0);
+        assert_eq!(Hist::bucket_floor(5), 32);
+    }
+
+    #[test]
+    fn quantile_walks_to_the_nearest_rank_bucket() {
+        let h = Hist::new();
+        // 90 samples in bucket 3 ([8,16)), 10 in bucket 10 ([1024,2048))
+        for _ in 0..90 {
+            h.record(9);
+        }
+        for _ in 0..10 {
+            h.record(1500);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(50.0), 8);
+        assert_eq!(h.quantile(90.0), 8);
+        assert_eq!(h.quantile(91.0), 1024);
+        assert_eq!(h.quantile(99.0), 1024);
+        assert_eq!(h.quantile(100.0), 1024);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(99.0), 0);
+        assert_eq!(h.quantile_us(50.0), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_bucket_counts() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record(5);
+        b.record(5);
+        b.record(4096);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        let c = a.counts();
+        assert_eq!(c[2], 2, "{c:?}");
+        assert_eq!(c[12], 1, "{c:?}");
+        // merging an empty histogram is a no-op
+        a.merge_from(&Hist::new());
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    fn quantile_error_is_within_one_bucket_width() {
+        // exact nearest-rank value always lies in [q, max(2q, 2))
+        let vals: Vec<u64> =
+            (0..500).map(|i| (i * i * 37 + i) as u64 % 1_000_000).collect();
+        let h = Hist::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize)
+                .clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let q = h.quantile(p);
+            assert!(q <= exact, "p{p}: q={q} exact={exact}");
+            assert!(exact < (2 * q).max(2), "p{p}: q={q} exact={exact}");
+        }
+    }
+}

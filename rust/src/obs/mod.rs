@@ -1,0 +1,38 @@
+//! Serving telemetry: trace spans, mergeable histograms, per-worker
+//! flight recorders, and per-tenant SLO error budgets.
+//!
+//! This is the observability substrate the serving tier threads through
+//! every request (admission → coalesce → queue → cache lookup →
+//! materialize → apply → respond):
+//!
+//! - [`span`]: the [`SpanClock`] — the **only** module on the serving
+//!   path allowed to read the wall clock (enforced by the
+//!   `obs-discipline` lint in [`crate::analysis`]) — plus the
+//!   per-request [`TraceCtx`] (seeded-stream-derived trace ids,
+//!   per-phase durations via the [`Span`] guard);
+//! - [`hist`]: [`Hist`], a fixed 64-bucket log₂ histogram with
+//!   lock-free atomic increments and bucket-wise merging — O(buckets)
+//!   memory per tenant instead of O(requests), cheap mid-run quantiles;
+//! - [`recorder`]: [`FlightRecorder`], a fixed-capacity per-worker ring
+//!   of the last N completed [`TraceRecord`]s, dumped as `serve_trace`
+//!   EventLog lines (and optional `--trace-dir` JSONL) on demand, at
+//!   session end, and by `kill_shard` for post-mortems;
+//! - [`slo`]: [`SloPolicy`] / [`TenantSloStatus`] — per-tenant latency
+//!   SLO targets with error-budget burn accounting, rendered as the
+//!   serve-bench compliance section.
+//!
+//! Everything here is std-only and deterministic under fifo mode: the
+//! span clock is logical, trace ids are a pure function of the seeded
+//! request stream, and histograms/SLO counters are order-independent
+//! atomics — so `serve_interval`, `serve_trace` and `serve_slo` lines
+//! stay byte-identical at any worker count.
+
+pub mod hist;
+pub mod recorder;
+pub mod slo;
+pub mod span;
+
+pub use hist::Hist;
+pub use recorder::{FlightRecorder, TraceRecord};
+pub use slo::{SloPolicy, TenantSloStatus};
+pub use span::{Span, SpanClock, TraceCtx, PHASES};

@@ -1,0 +1,167 @@
+//! Per-worker flight recorder: a fixed-capacity ring buffer of the
+//! last N completed trace spans.
+//!
+//! Each serve worker owns one [`FlightRecorder`] (so pushes never
+//! contend across workers); the retained [`TraceRecord`]s are merged,
+//! sorted by `(trace_id, meta)` and dumped as `serve_trace` EventLog
+//! lines — plus optional `--trace-dir` JSONL files — on demand
+//! (`ServerHandle::dump_traces`), at session end, and therefore by
+//! `kill_shard` (stopping a shard ends its serve session, whose
+//! session-end dump runs) for post-mortems.
+//!
+//! In fifo mode every record field is a pure function of the seeded
+//! submission stream (logical clock, deterministic batch formation), so
+//! the *merged* dump is byte-identical at any worker count — provided
+//! the per-worker capacity retains every span (set the recorder cap ≥
+//! the request count; beyond that, which spans age out depends on how
+//! batches landed on workers).
+
+use super::span::TraceCtx;
+
+/// One completed (or failed) request's trace, as retained by the
+/// recorder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub tenant: String,
+    pub meta: u64,
+    /// Size of the batch this request rode in.
+    pub batch: usize,
+    /// False when the request failed (its batch's tenant resolution or
+    /// apply errored).
+    pub ok: bool,
+    /// [`SpanClock`](super::span::SpanClock) time at completion.
+    pub completed_ns: u64,
+    pub ctx: TraceCtx,
+}
+
+impl TraceRecord {
+    pub fn latency_ns(&self) -> u64 {
+        self.completed_ns.saturating_sub(self.ctx.submitted_ns)
+    }
+}
+
+/// Fixed-capacity ring of the last N completed spans. Oldest records
+/// are overwritten once `cap` is reached; `total` keeps counting.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    buf: Vec<TraceRecord>,
+    /// Next write position once the ring is full.
+    next: usize,
+    total: u64,
+}
+
+impl FlightRecorder {
+    /// A recorder retaining the last `cap` records (minimum 1).
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder { cap: cap.max(1), buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.next] = rec;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Retained records, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+
+    /// Spans pushed over the recorder's lifetime (≥ retained count).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(meta: u64) -> TraceRecord {
+        TraceRecord {
+            tenant: "t".to_string(),
+            meta,
+            batch: 1,
+            ok: true,
+            completed_ns: meta * 10,
+            ctx: TraceCtx::new("t", meta, 0),
+        }
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything_in_order() {
+        let mut r = FlightRecorder::new(8);
+        for m in 0..5 {
+            r.push(rec(m));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.total(), 5);
+        let metas: Vec<u64> = r.records().iter().map(|x| x.meta).collect();
+        assert_eq!(metas, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wraparound_retains_the_last_cap_records_oldest_first() {
+        let mut r = FlightRecorder::new(4);
+        for m in 0..10 {
+            r.push(rec(m));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 10);
+        let metas: Vec<u64> = r.records().iter().map(|x| x.meta).collect();
+        assert_eq!(metas, vec![6, 7, 8, 9]);
+        // one more push evicts exactly the oldest
+        r.push(rec(10));
+        let metas: Vec<u64> = r.records().iter().map(|x| x.meta).collect();
+        assert_eq!(metas, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn exact_fill_boundary_is_in_order() {
+        let mut r = FlightRecorder::new(3);
+        for m in 0..3 {
+            r.push(rec(m));
+        }
+        let metas: Vec<u64> = r.records().iter().map(|x| x.meta).collect();
+        assert_eq!(metas, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = FlightRecorder::new(0);
+        r.push(rec(1));
+        r.push(rec(2));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.records()[0].meta, 2);
+        assert_eq!(r.total(), 2);
+    }
+
+    #[test]
+    fn latency_is_completed_minus_submitted() {
+        let mut t = rec(3);
+        t.ctx.submitted_ns = 25;
+        assert_eq!(t.latency_ns(), 5);
+        t.ctx.submitted_ns = 40; // clock never goes backwards, but saturate
+        assert_eq!(t.latency_ns(), 0);
+    }
+}

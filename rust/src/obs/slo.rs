@@ -1,0 +1,117 @@
+//! Per-tenant latency SLOs with error budgets.
+//!
+//! An SLO here is "request latency ≤ target µs" (the serve-bench flags
+//! `--slo-p99-us` / `--slo-error-budget`); the error budget is the
+//! fraction of a tenant's requests allowed to violate the target.
+//! Violations are counted **exactly at record time** against each
+//! request's latency — never reconstructed from histogram buckets, so
+//! bucket quantization cannot hide a breach. Budget burn is
+//! `violations / (budget · requests)`: 1.0 means the budget is exactly
+//! exhausted, above 1.0 the tenant is out of compliance.
+//!
+//! Note on fifo mode: latencies are logical (the span clock only moves
+//! when the driver advances it), so a closed-loop fifo run reports zero
+//! burn deterministically — the SLO machinery is exercised end-to-end
+//! while the byte-identity contract holds. Timed mode burns real
+//! wall-clock budget.
+
+/// The serving SLO policy: a per-request latency target plus the
+/// allowed violating fraction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Per-request latency target in µs (the p99 objective);
+    /// 0 = SLO tracking off.
+    pub p99_target_us: f64,
+    /// Allowed violating fraction of requests (0.01 = 1%).
+    pub error_budget: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> SloPolicy {
+        SloPolicy { p99_target_us: 0.0, error_budget: 0.01 }
+    }
+}
+
+impl SloPolicy {
+    pub fn enabled(&self) -> bool {
+        self.p99_target_us > 0.0
+    }
+
+    /// Does this latency violate the target?
+    pub fn violated(&self, latency_ns: u64) -> bool {
+        self.enabled() && latency_ns as f64 / 1000.0 > self.p99_target_us
+    }
+}
+
+/// One tenant's SLO accounting over a session (or a fleet rollup).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantSloStatus {
+    pub tenant: String,
+    pub requests: u64,
+    pub violations: u64,
+}
+
+impl TenantSloStatus {
+    /// Error-budget burn: violations over the budgeted allowance.
+    /// ≥ 1.0 means the budget is exhausted.
+    pub fn burn(&self, budget: f64) -> f64 {
+        let allowance = budget * self.requests as f64;
+        if allowance <= 0.0 {
+            if self.violations == 0 { 0.0 } else { f64::INFINITY }
+        } else {
+            self.violations as f64 / allowance
+        }
+    }
+
+    pub fn compliant(&self, budget: f64) -> bool {
+        self.violations as f64 <= budget * self.requests as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_policy_never_violates() {
+        let p = SloPolicy::default();
+        assert!(!p.enabled());
+        assert!(!p.violated(u64::MAX));
+    }
+
+    #[test]
+    fn violation_is_a_strict_microsecond_comparison() {
+        let p = SloPolicy { p99_target_us: 100.0, error_budget: 0.01 };
+        assert!(p.enabled());
+        assert!(!p.violated(100_000)); // exactly at target: ok
+        assert!(p.violated(100_001));
+        assert!(!p.violated(0));
+    }
+
+    #[test]
+    fn burn_and_compliance_track_the_budget() {
+        let t = TenantSloStatus {
+            tenant: "a".into(), requests: 1000, violations: 5,
+        };
+        // budget 1%: allowance 10, burn 0.5, compliant
+        assert!((t.burn(0.01) - 0.5).abs() < 1e-12);
+        assert!(t.compliant(0.01));
+        // budget 0.1%: allowance 1, burn 5.0, breached
+        assert!((t.burn(0.001) - 5.0).abs() < 1e-12);
+        assert!(!t.compliant(0.001));
+    }
+
+    #[test]
+    fn zero_allowance_edge_cases() {
+        let clean = TenantSloStatus {
+            tenant: "a".into(), requests: 0, violations: 0,
+        };
+        assert_eq!(clean.burn(0.01), 0.0);
+        assert!(clean.compliant(0.01));
+        let dirty = TenantSloStatus {
+            tenant: "b".into(), requests: 10, violations: 1,
+        };
+        assert!(dirty.burn(0.0).is_infinite());
+        assert!(!dirty.compliant(0.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! The serving span clock and per-request trace context.
+//!
+//! [`SpanClock`] is the **only** module on the serving path allowed to
+//! read the wall clock (the `obs-discipline` lint enforces this): in
+//! timed mode it wraps a session-start [`Instant`]; in fifo mode it is
+//! a logical nanosecond counter the driver advances explicitly
+//! ([`SpanClock::advance_ns`]), so every timestamp derived from it —
+//! and therefore every latency, span duration, and interval snapshot —
+//! is a pure function of the submission sequence, preserving the fifo
+//! byte-determinism contract.
+//!
+//! [`TraceCtx`] rides inside each `PendingRequest`: a trace id derived
+//! from the seeded request stream (FNV-1a over the tenant name and the
+//! request meta, so fifo trace ids are byte-reproducible), submit and
+//! dispatch timestamps, and one duration slot per phase of the span
+//! taxonomy:
+//!
+//! | phase | covers |
+//! |---|---|
+//! | `admission` | token-bucket + queue-cap check at submit |
+//! | `coalesce` | batcher buffering + formed-batch queue wait |
+//! | `queue` | submit → dispatch, i.e. `dispatched_ns - submitted_ns` |
+//! | `cache_lookup` | registry adapter-snapshot resolution |
+//! | `materialize` | mat-cache get-or-build of the dense `Q_P` |
+//! | `apply` | the structured/dense apply over the batch rows |
+//! | `respond` | response fill + metrics accounting |
+//!
+//! Phase durations measured inside a batch are batch-level: every
+//! request in a batch reports the batch's shared `cache_lookup` /
+//! `materialize` / `apply` / `respond` spans. [`Span`] is the guard:
+//! it reads the clock on entry and adds the elapsed nanoseconds into
+//! its slot on drop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::fnv;
+
+/// Phase names, in span-taxonomy order (indexes into
+/// [`TraceCtx::phase_ns`]).
+pub const PHASES: [&str; 7] = [
+    "admission", "coalesce", "queue", "cache_lookup", "materialize",
+    "apply", "respond",
+];
+
+pub const PH_ADMISSION: usize = 0;
+pub const PH_COALESCE: usize = 1;
+pub const PH_QUEUE: usize = 2;
+pub const PH_CACHE_LOOKUP: usize = 3;
+pub const PH_MATERIALIZE: usize = 4;
+pub const PH_APPLY: usize = 5;
+pub const PH_RESPOND: usize = 6;
+
+/// The serving clock: wall in timed mode, logical in fifo mode.
+#[derive(Debug)]
+pub enum SpanClock {
+    /// Timed mode: nanoseconds since session start.
+    Wall(Instant),
+    /// Fifo mode: a logical nanosecond counter the driver advances.
+    Logical(AtomicU64),
+}
+
+impl SpanClock {
+    /// Logical for fifo sessions, wall otherwise.
+    pub fn new(fifo: bool) -> SpanClock {
+        if fifo {
+            SpanClock::Logical(AtomicU64::new(0))
+        } else {
+            SpanClock::Wall(Instant::now())
+        }
+    }
+
+    /// Now, in nanoseconds since session start. The wall arm's
+    /// `u128 → u64` narrowing is checked (saturating): 2^64 ns is ~584
+    /// years of session.
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            SpanClock::Wall(t0) => {
+                u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+            }
+            SpanClock::Logical(ns) => ns.load(Ordering::Acquire),
+        }
+    }
+
+    /// Seconds since session start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.now_ns() as f64 / 1e9
+    }
+
+    /// Advance the logical clock; no-op on the wall arm, which advances
+    /// itself.
+    pub fn advance_ns(&self, dt: u64) {
+        if let SpanClock::Logical(ns) = self {
+            ns.fetch_add(dt, Ordering::AcqRel);
+        }
+    }
+
+    pub fn is_logical(&self) -> bool {
+        matches!(self, SpanClock::Logical(_))
+    }
+}
+
+/// Per-request trace context, derived from the seeded request stream.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceCtx {
+    /// FNV-1a over (tenant bytes, meta le-bytes): a pure function of
+    /// the seeded stream, so fifo trace ids are byte-reproducible.
+    pub trace_id: u64,
+    /// [`SpanClock::now_ns`] at submit.
+    pub submitted_ns: u64,
+    /// [`SpanClock::now_ns`] when a worker picked up the batch.
+    pub dispatched_ns: u64,
+    /// Per-phase durations, indexed by the `PH_*` constants.
+    pub phase_ns: [u64; PHASES.len()],
+}
+
+impl TraceCtx {
+    pub fn new(tenant: &str, meta: u64, submitted_ns: u64) -> TraceCtx {
+        TraceCtx {
+            trace_id: fnv::update(fnv::hash(tenant.as_bytes()),
+                                  &meta.to_le_bytes()),
+            submitted_ns,
+            dispatched_ns: submitted_ns,
+            phase_ns: [0; PHASES.len()],
+        }
+    }
+
+    /// `trace_id` as the fixed-width hex string the EventLog carries
+    /// (u64 ids don't round-trip through JSON's f64 numbers).
+    pub fn trace_hex(&self) -> String {
+        format!("{:016x}", self.trace_id)
+    }
+}
+
+/// Span guard: measures from construction to drop on `clock`, adding
+/// the elapsed nanoseconds into `slot`.
+pub struct Span<'c, 's> {
+    clock: &'c SpanClock,
+    start: u64,
+    slot: &'s mut u64,
+}
+
+impl<'c, 's> Span<'c, 's> {
+    pub fn enter(clock: &'c SpanClock, slot: &'s mut u64) -> Span<'c, 's> {
+        Span { start: clock.now_ns(), clock, slot }
+    }
+}
+
+impl Drop for Span<'_, '_> {
+    fn drop(&mut self) {
+        *self.slot += self.clock.now_ns().saturating_sub(self.start);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logical_clock_only_moves_when_advanced() {
+        let c = SpanClock::new(true);
+        assert!(c.is_logical());
+        assert_eq!(c.now_ns(), 0);
+        c.advance_ns(1500);
+        assert_eq!(c.now_ns(), 1500);
+        assert!((c.elapsed_s() - 1.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_clock_advances_by_itself() {
+        let c = SpanClock::new(false);
+        assert!(!c.is_logical());
+        let a = c.now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert!(c.now_ns() > a);
+        // advance is a no-op on the wall arm
+        c.advance_ns(u64::MAX / 2);
+        assert!(c.now_ns() < u64::MAX / 4);
+    }
+
+    #[test]
+    fn trace_ids_are_a_pure_function_of_tenant_and_meta() {
+        let a = TraceCtx::new("tenant0000", 7, 0);
+        let b = TraceCtx::new("tenant0000", 7, 123);
+        assert_eq!(a.trace_id, b.trace_id);
+        assert_ne!(a.trace_id, TraceCtx::new("tenant0000", 8, 0).trace_id);
+        assert_ne!(a.trace_id, TraceCtx::new("tenant0001", 7, 0).trace_id);
+        assert_eq!(a.trace_hex().len(), 16);
+    }
+
+    #[test]
+    fn span_guard_accumulates_into_its_slot() {
+        let c = SpanClock::new(true);
+        let mut slot = 0u64;
+        {
+            let _sp = Span::enter(&c, &mut slot);
+            c.advance_ns(40);
+        }
+        assert_eq!(slot, 40);
+        {
+            let _sp = Span::enter(&c, &mut slot);
+            c.advance_ns(2);
+        }
+        assert_eq!(slot, 42, "spans accumulate, not overwrite");
+    }
+}

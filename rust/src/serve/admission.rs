@@ -242,7 +242,7 @@ impl AdmissionController {
             clock: if logical {
                 Clock::Logical(Mutex::new(0.0))
             } else {
-                // analyze: allow(determinism) timed mode opts out of fifo reproducibility
+                // analyze: allow(determinism, obs-discipline) timed mode is wall-clock by design
                 Clock::Wall(Instant::now())
             },
             buckets: Mutex::new(BTreeMap::new()),

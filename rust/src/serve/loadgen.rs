@@ -232,6 +232,10 @@ pub fn closed_loop<T: SubmitTarget>(handle: &T, load: &LoadSpec)
         for h in handles {
             out.push(h.wait()?);
         }
+        // wave boundary = a quiescent sync point: every submitted request
+        // has completed, so the fifo interval snapshot (completion-count
+        // cadence) is a pure function of the seed here
+        handle.tick();
     }
     Ok(out)
 }
@@ -274,7 +278,13 @@ pub fn open_loop<T: SubmitTarget>(handle: &T, load: &LoadSpec)
         }
     }
     handle.flush();
-    handles.into_iter().map(|h| h.wait()).collect()
+    let responses: Result<Vec<Response>> =
+        handles.into_iter().map(|h| h.wait()).collect();
+    // all arrivals resolved: emit any interval snapshots the completed
+    // count has crossed (fifo cadence; timed sessions snapshot from the
+    // flusher thread instead)
+    handle.tick();
+    responses
 }
 
 /// Render responses as a canonical text log (sorted by request `meta`):
@@ -414,6 +424,14 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
              .into()),
         ("durability", format!("{:?}", opts.durability).into()),
         ("tenant_quota_bytes", opts.tenant_quota_bytes.into()),
+        ("metrics_interval", Json::Num(opts.serve.metrics_interval as f64)),
+        ("slo_p99_us", Json::Num(opts.serve.slo_p99_us)),
+        ("slo_error_budget", Json::Num(opts.serve.slo_error_budget)),
+        ("trace_dir",
+         opts.serve.trace_dir.as_ref()
+             .map(|p| p.display().to_string())
+             .unwrap_or_default()
+             .into()),
     ]);
     let watcher = match &opts.spool_dir {
         Some(dir) => Some(SpoolWatcher::start(

@@ -66,6 +66,49 @@
 //! responses (`tests/store.rs` pins this with a crash-injection
 //! matrix).
 //!
+//! ## Observability
+//!
+//! The serving path is instrumented end-to-end by [`crate::obs`]:
+//!
+//! - **Trace spans** — every request carries a
+//!   [`TraceCtx`](crate::obs::TraceCtx) with per-phase durations
+//!   (`admission`, `coalesce`, `queue`, `cache_lookup`, `materialize`,
+//!   `apply`, `respond`) measured on the
+//!   [`SpanClock`](crate::obs::SpanClock): wall-clock in timed mode, a
+//!   driver-advanced logical counter in fifo mode. Per-worker flight
+//!   recorders retain the last `recorder_cap` completed spans; the
+//!   merged, `(trace_id, meta)`-sorted dump lands as `serve_trace`
+//!   EventLog lines — fields: `trace` (16-hex id), `tenant`, `meta`,
+//!   `batch`, `ok`, `submitted_ns`, `completed_ns`, `latency_us`,
+//!   `phases` (array of `[name, ns]` pairs) — at session end, on
+//!   demand ([`ServerHandle::dump_traces`](server::ServerHandle)), and
+//!   optionally as JSONL under `--trace-dir`.
+//! - **Histograms** — per-tenant and global latency is held in
+//!   mergeable log₂-bucket histograms ([`Hist`](crate::obs::Hist)):
+//!   O(buckets) memory per tenant, lock-free recording, quantiles with
+//!   ≤ one-bucket-width error ([`server::percentile_us`] remains as
+//!   the exact test oracle).
+//! - **Live snapshots** — `--metrics-interval N` emits
+//!   `serve_interval` lines (fields: `seq`, `completed`, `submitted`,
+//!   `failed`, `rps`, `p50_us`/`p95_us`/`p99_us`, `queue_depth`,
+//!   `cache_hits`/`cache_misses`/`cache_hit_rate`, `rejected`,
+//!   `tenant_rejects`). Cadence is every N *completed requests* in
+//!   fifo mode (driven by [`SubmitTarget::tick`]) and every N
+//!   *milliseconds* of span-clock time in timed mode.
+//! - **SLOs** — `--slo-p99-us T --slo-error-budget B` counts, per
+//!   tenant, requests whose span-clock latency exceeds `T` µs
+//!   (exactly, at record time — never reconstructed from buckets) and
+//!   reports burn = violations / (B · requests) as `serve_slo` lines
+//!   (fields: `tenant`, `p99_target_us`, `error_budget`, `requests`,
+//!   `violations`, `burn`, `compliant`) plus a compliance section in
+//!   the rendered summary ([`server::SloSummary`]). Closed-loop fifo
+//!   latencies are logical (zero unless the driver advances the
+//!   clock), so fifo burn is deterministic.
+//!
+//! All of it preserves the fifo byte-identity contract: the only
+//! sanctioned wall-clock reads on the serving path live in
+//! `obs/span.rs` (statically enforced by the `obs-discipline` lint).
+//!
 //! ## The shard tier
 //!
 //! [`shard`] composes N complete serving stacks behind one
@@ -110,8 +153,8 @@ pub use loadgen::{
 pub use registry::{AdapterVersion, CacheStats, EvictAttempt, PauliSpec, Registry};
 pub use scheduler::{BatchPolicy, InvalidBatchPolicy, Response, ResponseHandle};
 pub use server::{
-    serve, ServeConfig, ServeOutcome, ServeSummary, ServerHandle,
-    SubmitTarget, STRUCTURED_APPLY_MIN_Q,
+    percentile_us, serve, ServeConfig, ServeOutcome, ServeSummary,
+    ServerHandle, SloSummary, SubmitTarget, STRUCTURED_APPLY_MIN_Q,
 };
 pub use shard::{
     serve_sharded, FleetSummary, ShardConfig, ShardOutcome, ShardRouter,

@@ -279,6 +279,11 @@ impl MatCache {
             // un-park the key so a future re-materialization (after LRU
             // eviction) goes through a fresh init instead of the old slot
             self.inflight.remove_where(|k| k == &key);
+        } else {
+            // joined another worker's in-flight build: a hit for
+            // accounting (hits + misses == lookups at every sync point,
+            // which the fifo interval snapshots rely on)
+            self.hits.fetch_add(1, Ordering::Relaxed);
         }
         Ok(mat)
     }

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::registry::RequestGuard;
+use crate::obs::TraceCtx;
 use crate::util::sync::{lock_or_recover, wait_or_recover};
 
 /// Batching policy knobs: a batch dispatches when it holds `max_batch`
@@ -162,6 +163,10 @@ pub struct PendingRequest {
     pub meta: u64,
     pub input: Vec<f32>,
     pub submitted: Instant,
+    /// Per-request trace context (see [`crate::obs::span`]): the server
+    /// fills it at submit with span-clock timestamps; defaults to an
+    /// empty context for directly-constructed requests (tests).
+    pub trace: TraceCtx,
     slot: Arc<ResponseSlot>,
     /// Held until this request drops: the tenant's in-flight pin covers
     /// buffering, queueing and service, releasing only after the slot
@@ -177,8 +182,9 @@ impl PendingRequest {
         let req = PendingRequest {
             meta,
             input,
-            // analyze: allow(determinism) timed-mode expiry + latency only
+            // analyze: allow(determinism, obs-discipline) timed-mode expiry; latency is span-clock
             submitted: Instant::now(),
+            trace: TraceCtx::default(),
             slot: slot.clone(),
             _guard: guard,
             completed: false,

@@ -29,20 +29,46 @@
 //! `q >= STRUCTURED_APPLY_MIN_Q` apply the Pauli gate structure directly
 //! (O(N·q·L) per row instead of O(N²), and no dense materialization at
 //! all — a q = 12 tenant never forces a 64 MiB cache entry).
+//!
+//! # Observability
+//!
+//! Every request carries a [`TraceCtx`] from submit to response; per-
+//! phase durations are measured against the session's [`SpanClock`]
+//! (logical in fifo mode, wall in timed mode — the only wall-clock
+//! source on the serving path, enforced by the `obs-discipline` lint).
+//! Latencies land in lock-free log₂-bucket [`Hist`]ograms (global and
+//! per tenant, O(buckets) memory each), per-tenant SLO violations are
+//! counted exactly at record time ([`SloPolicy`]), and each worker
+//! keeps a fixed-capacity [`FlightRecorder`] ring of its last completed
+//! spans, dumped as `serve_trace` lines at session end. With
+//! `metrics_interval > 0`, live `serve_interval` snapshots are emitted
+//! mid-session: driver-ticked every N completed requests in fifo mode,
+//! every N milliseconds from the flusher thread in timed mode. See
+//! [`crate::serve`] for the emitted line schemas.
 
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::events::EventLog;
+use crate::obs::span::{
+    PH_ADMISSION, PH_APPLY, PH_CACHE_LOOKUP, PH_COALESCE, PH_MATERIALIZE,
+    PH_QUEUE, PH_RESPOND,
+};
+use crate::obs::{
+    FlightRecorder, Hist, SloPolicy, Span, SpanClock, TenantSloStatus,
+    TraceCtx, TraceRecord, PHASES,
+};
 use crate::quantum::pauli;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::pool::{self, Service, TaskCtx};
-use crate::util::sync::lock_or_recover;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 
 use super::admission::{
     AdmissionConfig, AdmissionController, AdmissionReload,
@@ -75,6 +101,24 @@ pub struct ServeConfig {
     /// dropping in-flight requests. `None` (default) keeps the static
     /// policy — and full fifo determinism.
     pub admission_reload: Option<AdmissionReloadSpec>,
+    /// Live snapshot cadence for `serve_interval` lines; 0 = off. The
+    /// unit differs by mode: fifo counts **completed requests** (the
+    /// driver's `tick` claims due marks, so snapshots are part of the
+    /// byte-identity guarantee), timed counts **milliseconds** of
+    /// span-clock time (emitted from the flusher thread).
+    pub metrics_interval: u64,
+    /// Per-request latency SLO target in µs; 0 = SLO tracking off.
+    pub slo_p99_us: f64,
+    /// Allowed violating fraction of each tenant's requests (0.01 = 1%).
+    pub slo_error_budget: f64,
+    /// When set, the session-end flight-recorder dump also writes a
+    /// JSONL file (`trace-<pid>-<seq>.jsonl`) under this directory.
+    pub trace_dir: Option<PathBuf>,
+    /// Per-worker flight-recorder capacity: each worker retains its last
+    /// `recorder_cap` completed spans. The merged fifo dump is only
+    /// byte-identical across worker counts while nothing has aged out
+    /// (cap ≥ total requests).
+    pub recorder_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -85,11 +129,25 @@ impl Default for ServeConfig {
             fifo: true,
             admission: AdmissionConfig::default(),
             admission_reload: None,
+            metrics_interval: 0,
+            slo_p99_us: 0.0,
+            slo_error_budget: 0.01,
+            trace_dir: None,
+            recorder_cap: 256,
         }
     }
 }
 
 // --------------------------------------------------------------- metrics ---
+
+/// One tenant's live telemetry: a latency histogram plus SLO counters.
+/// All atomics — recording never takes a lock (see [`Metrics`]).
+#[derive(Debug, Default)]
+struct TenantObs {
+    hist: Hist,
+    requests: AtomicU64,
+    slo_violations: AtomicU64,
+}
 
 struct Metrics {
     submitted: AtomicU64,
@@ -101,13 +159,30 @@ struct Metrics {
     outstanding: AtomicUsize,
     max_outstanding: AtomicUsize,
     shared_client_workers: AtomicUsize,
-    lat_ns: Mutex<Vec<u64>>,
-    per_tenant_ns: Mutex<std::collections::BTreeMap<String, Vec<u64>>>,
-    batch_sizes: Mutex<std::collections::BTreeMap<usize, u64>>,
+    /// Session-wide latency histogram: one relaxed `fetch_add` per
+    /// request, shared by all workers. O(buckets) memory for the whole
+    /// session — quantiles are readable mid-run (the `serve_interval`
+    /// snapshots) without sorting anything.
+    lat_hist: Hist,
+    /// Per-tenant telemetry. The RwLock only guards the map shape:
+    /// recording goes through the `Arc<TenantObs>` atomics, so the
+    /// write lock is taken once per tenant per session (first request).
+    /// O(tenants · buckets) memory, replacing the per-tenant `Vec<u64>`
+    /// that grew with every request.
+    tenants: RwLock<BTreeMap<String, Arc<TenantObs>>>,
+    batch_sizes: Mutex<BTreeMap<usize, u64>>,
+    /// One flight recorder per worker (indexed by worker id), so pushes
+    /// never contend across workers.
+    recorders: Vec<Mutex<FlightRecorder>>,
+    slo: SloPolicy,
+    /// Next completed-count mark at which `tick` emits a
+    /// `serve_interval` snapshot (fifo mode; claimed by CAS).
+    next_mark: AtomicU64,
+    interval_seq: AtomicU64,
 }
 
 impl Metrics {
-    fn new() -> Metrics {
+    fn new(cfg: &ServeConfig) -> Metrics {
         Metrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
@@ -115,9 +190,18 @@ impl Metrics {
             outstanding: AtomicUsize::new(0),
             max_outstanding: AtomicUsize::new(0),
             shared_client_workers: AtomicUsize::new(0),
-            lat_ns: Mutex::new(Vec::new()),
-            per_tenant_ns: Mutex::new(std::collections::BTreeMap::new()),
-            batch_sizes: Mutex::new(std::collections::BTreeMap::new()),
+            lat_hist: Hist::new(),
+            tenants: RwLock::new(BTreeMap::new()),
+            batch_sizes: Mutex::new(BTreeMap::new()),
+            recorders: (0..cfg.workers.max(1))
+                .map(|_| Mutex::new(FlightRecorder::new(cfg.recorder_cap)))
+                .collect(),
+            slo: SloPolicy {
+                p99_target_us: cfg.slo_p99_us,
+                error_budget: cfg.slo_error_budget,
+            },
+            next_mark: AtomicU64::new(cfg.metrics_interval.max(1)),
+            interval_seq: AtomicU64::new(0),
         }
     }
 
@@ -131,21 +215,31 @@ impl Metrics {
         *lock_or_recover(&self.batch_sizes).entry(size).or_insert(0) += 1;
     }
 
-    /// Per-request hot path: atomics only. Latencies are buffered
-    /// per-worker (in [`WorkerState`]) and merged once at worker exit,
-    /// so completing a request never takes a process-global lock.
-    fn note_complete_counts(&self) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+    /// The tenant's telemetry cell, created on first use. Fast path is
+    /// a read lock + Arc clone; the write lock is taken only for a
+    /// tenant's first-ever batch.
+    fn tenant_obs(&self, tenant: &str) -> Arc<TenantObs> {
+        if let Some(t) = read_or_recover(&self.tenants).get(tenant) {
+            return t.clone();
+        }
+        write_or_recover(&self.tenants)
+            .entry(tenant.to_string())
+            .or_default()
+            .clone()
     }
 
-    /// One worker's buffered latencies, merged at its exit.
-    fn merge_worker(&self, lat_ns: Vec<u64>,
-                    per_tenant: std::collections::BTreeMap<String, Vec<u64>>) {
-        lock_or_recover(&self.lat_ns).extend(lat_ns);
-        let mut all = lock_or_recover(&self.per_tenant_ns);
-        for (tenant, ns) in per_tenant {
-            all.entry(tenant).or_default().extend(ns);
+    /// Per-request completion accounting: atomics only (counter bumps
+    /// and histogram increments), never a lock.
+    fn note_complete(&self, t: &TenantObs, latency_ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        self.lat_hist.record(latency_ns);
+        t.hist.record(latency_ns);
+        t.requests.fetch_add(1, Ordering::Relaxed);
+        // SLO violations are judged against the exact latency here, not
+        // reconstructed from buckets — quantization can't hide a breach
+        if self.slo.violated(latency_ns) {
+            t.slo_violations.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -154,24 +248,41 @@ impl Metrics {
         self.outstanding.fetch_sub(n, Ordering::Relaxed);
     }
 
+    fn record_trace(&self, worker: usize, rec: TraceRecord) {
+        if let Some(r) = self.recorders.get(worker) {
+            lock_or_recover(r).push(rec);
+        }
+    }
+
     fn summarize(&self, workers: usize, wall_s: f64, cache: CacheStats,
                  admission: AdmissionStats) -> ServeSummary {
-        let mut lat = lock_or_recover(&self.lat_ns).clone();
-        lat.sort_unstable();
         let completed = self.completed.load(Ordering::Relaxed);
-        let tenants = lock_or_recover(&self.per_tenant_ns).iter()
-            .map(|(tenant, ns)| {
-                let mut ns = ns.clone();
-                ns.sort_unstable();
-                TenantSummary {
-                    tenant: tenant.clone(),
-                    requests: ns.len() as u64,
-                    p50_us: percentile_us(&ns, 50.0),
-                    p95_us: percentile_us(&ns, 95.0),
-                    p99_us: percentile_us(&ns, 99.0),
-                }
+        let tenants_map = read_or_recover(&self.tenants);
+        let tenants = tenants_map.iter()
+            .map(|(name, t)| TenantSummary {
+                tenant: name.clone(),
+                requests: t.requests.load(Ordering::Relaxed),
+                p50_us: t.hist.quantile_us(50.0),
+                p95_us: t.hist.quantile_us(95.0),
+                p99_us: t.hist.quantile_us(99.0),
             })
             .collect();
+        let slo = if self.slo.enabled() {
+            Some(SloSummary {
+                p99_target_us: self.slo.p99_target_us,
+                error_budget: self.slo.error_budget,
+                per_tenant: tenants_map.iter()
+                    .map(|(name, t)| TenantSloStatus {
+                        tenant: name.clone(),
+                        requests: t.requests.load(Ordering::Relaxed),
+                        violations: t.slo_violations.load(Ordering::Relaxed),
+                    })
+                    .collect(),
+            })
+        } else {
+            None
+        };
+        drop(tenants_map);
         ServeSummary {
             workers,
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -179,9 +290,9 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             wall_s,
             rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
-            p50_us: percentile_us(&lat, 50.0),
-            p95_us: percentile_us(&lat, 95.0),
-            p99_us: percentile_us(&lat, 99.0),
+            p50_us: self.lat_hist.quantile_us(50.0),
+            p95_us: self.lat_hist.quantile_us(95.0),
+            p99_us: self.lat_hist.quantile_us(99.0),
             max_queue_depth: self.max_outstanding.load(Ordering::Relaxed),
             shared_client_workers: self.shared_client_workers.load(Ordering::Relaxed),
             batch_hist: lock_or_recover(&self.batch_sizes).iter()
@@ -189,6 +300,7 @@ impl Metrics {
             cache,
             admission,
             tenants,
+            slo,
         }
     }
 }
@@ -198,7 +310,11 @@ impl Metrics {
 /// (`idx = ceil(p/100 · len) - 1`), so the result is always an observed
 /// sample. len = 1 returns that sample at every p; len = 2 returns the
 /// lower sample up to p50 and the upper one after.
-fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
+///
+/// The live metrics path reports quantiles from the log₂-bucket
+/// [`Hist`] instead (O(buckets) memory); this exact-but-O(n) form stays
+/// as the test oracle the histogram tolerance is pinned against.
+pub fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
     if sorted_ns.is_empty() {
         return 0.0;
     }
@@ -214,6 +330,24 @@ pub struct TenantSummary {
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+}
+
+/// Session SLO accounting: the policy plus each tenant's violation
+/// counts (only present when `--slo-p99-us` enabled tracking).
+#[derive(Clone, Debug)]
+pub struct SloSummary {
+    pub p99_target_us: f64,
+    pub error_budget: f64,
+    pub per_tenant: Vec<TenantSloStatus>,
+}
+
+impl SloSummary {
+    /// Tenants whose violations exceed their error-budget allowance.
+    pub fn breached(&self) -> usize {
+        self.per_tenant.iter()
+            .filter(|t| !t.compliant(self.error_budget))
+            .count()
+    }
 }
 
 /// End-of-session metrics: global and per-tenant latency percentiles,
@@ -237,18 +371,22 @@ pub struct ServeSummary {
     /// Admission counters (admitted / rejected per reason, per tenant).
     pub admission: AdmissionStats,
     pub tenants: Vec<TenantSummary>,
+    /// SLO compliance (None unless SLO tracking was enabled).
+    pub slo: Option<SloSummary>,
 }
 
 impl ServeSummary {
-    /// Export through the event log: one `serve_summary` line, one
-    /// `serve_tenant` line per tenant, and — when admission control is
-    /// enabled — one global `serve_admission` line plus one
-    /// `serve_admission_tenant` line per tenant the controller saw.
+    /// Export through the event log: one `serve_summary` line (schema
+    /// version 2: histogram-backed percentiles plus the `schema` field),
+    /// one `serve_tenant` line per tenant, admission lines when the
+    /// controller is enabled, and one `serve_slo` line per tenant when
+    /// SLO tracking is on.
     pub fn emit(&self, log: &EventLog) {
         let hist = Json::Arr(self.batch_hist.iter()
             .map(|&(s, c)| Json::Arr(vec![s.into(), Json::Num(c as f64)]))
             .collect());
         log.emit("serve_summary", vec![
+            ("schema", Json::Num(2.0)),
             ("workers", self.workers.into()),
             ("submitted", Json::Num(self.submitted as f64)),
             ("completed", Json::Num(self.completed as f64)),
@@ -301,6 +439,19 @@ impl ServeSummary {
                 ]);
             }
         }
+        if let Some(slo) = &self.slo {
+            for t in &slo.per_tenant {
+                log.emit("serve_slo", vec![
+                    ("tenant", t.tenant.as_str().into()),
+                    ("p99_target_us", Json::Num(slo.p99_target_us)),
+                    ("error_budget", Json::Num(slo.error_budget)),
+                    ("requests", Json::Num(t.requests as f64)),
+                    ("violations", Json::Num(t.violations as f64)),
+                    ("burn", Json::Num(t.burn(slo.error_budget))),
+                    ("compliant", Json::Bool(t.compliant(slo.error_budget))),
+                ]);
+            }
+        }
     }
 
     /// Human-readable one-screen report for the CLI.
@@ -327,13 +478,17 @@ impl ServeSummary {
              ({} entries)",
             self.cache.hits, self.cache.misses, self.cache.evictions,
             self.cache.bytes, self.cache.capacity_bytes, self.cache.entries);
-        if self.cache.per_tenant_quota_bytes > 0 {
-            let _ = writeln!(
-                s,
-                "tenant quota: {} bytes each, {} quota rejection(s)",
-                self.cache.per_tenant_quota_bytes,
-                self.cache.quota_rejections);
-        }
+        // the quota counters print unconditionally, matching the JSON
+        // summary (which always carries cache_quota_rejections)
+        let quota = if self.cache.per_tenant_quota_bytes > 0 {
+            format!("{} bytes each", self.cache.per_tenant_quota_bytes)
+        } else {
+            "unlimited".to_string()
+        };
+        let _ = writeln!(
+            s,
+            "tenant quota: {quota}, {} quota rejection(s)",
+            self.cache.quota_rejections);
         if self.admission.enabled {
             let a = &self.admission;
             let attempts = a.admitted + a.rejected_total();
@@ -348,6 +503,33 @@ impl ServeSummary {
                  {} queue-full) — {shed:.1}% shed",
                 a.admitted, a.rejected_total(), a.rejected_rate_limited,
                 a.rejected_queue_full);
+            for t in &a.per_tenant {
+                let _ = writeln!(
+                    s,
+                    "  {}: {} admitted, {} rate-limited, {} queue-full",
+                    t.tenant, t.admitted, t.rejected_rate_limited,
+                    t.rejected_queue_full);
+            }
+        }
+        if let Some(slo) = &self.slo {
+            let _ = writeln!(
+                s,
+                "slo: p99 target {:.1}µs, error budget {:.3} per tenant",
+                slo.p99_target_us, slo.error_budget);
+            for t in &slo.per_tenant {
+                let ok = t.compliant(slo.error_budget);
+                let _ = writeln!(
+                    s,
+                    "  {}: {}/{} over target, burn {:.2} [{}]",
+                    t.tenant, t.violations, t.requests,
+                    t.burn(slo.error_budget),
+                    if ok { "ok" } else { "BREACHED" });
+            }
+            let n = slo.per_tenant.len();
+            let _ = writeln!(
+                s,
+                "slo compliance: {}/{n} tenant(s) within budget",
+                n - slo.breached());
         }
         s
     }
@@ -366,10 +548,14 @@ pub trait SubmitTarget {
               -> Result<ResponseHandle>;
     /// Dispatch all partial batches now.
     fn flush(&self);
-    /// Advance the logical admission clock (fifo mode).
+    /// Advance the logical admission + span clocks (fifo mode).
     fn advance_clock(&self, dt_s: f64);
     /// Whether batching runs in deterministic fifo mode.
     fn is_fifo(&self) -> bool;
+    /// Give the target a chance to emit due `serve_interval` snapshots
+    /// (fifo mode; drivers call this at wave/collection boundaries,
+    /// where completion counts are deterministic). Default: no-op.
+    fn tick(&self) {}
 }
 
 impl SubmitTarget for ServerHandle<'_> {
@@ -389,6 +575,10 @@ impl SubmitTarget for ServerHandle<'_> {
     fn is_fifo(&self) -> bool {
         ServerHandle::is_fifo(self)
     }
+
+    fn tick(&self) {
+        ServerHandle::tick(self)
+    }
 }
 
 /// What `body` gets: the submission side of a live serve session.
@@ -399,6 +589,9 @@ pub struct ServerHandle<'a> {
     admission: &'a AdmissionController,
     batcher: Mutex<Batcher>,
     fifo: bool,
+    clock: &'a SpanClock,
+    log: &'a EventLog,
+    metrics_interval: u64,
 }
 
 impl ServerHandle<'_> {
@@ -414,29 +607,38 @@ impl ServerHandle<'_> {
             bail!("tenant {tenant:?}: input has {} elements, adapter dim is {}",
                   input.len(), snap.spec.dim());
         }
-        // pin the tenant BEFORE consuming an admission token: begin()
-        // can still fail (tenant evicted between snapshot and here, e.g.
-        // by the spool watcher), and failing after try_admit would leak
-        // an admitted++ / a rate token for a request that never existed,
-        // breaking the admitted == completed + failed ledger. A rejected
-        // request drops the guard immediately, so the transient pin
-        // cannot block eviction.
-        let guard = self.registry.begin(tenant)?;
-        // queue-depth gauge for the cap: fifo mode reads the buffered
-        // backlog (driven only by the submission sequence, so admission
-        // stays byte-deterministic at any worker count); timed mode reads
-        // real outstanding requests for true backpressure. Skipped
-        // entirely when admission is off — no extra batcher lock on the
-        // hot path.
-        let depth = if !self.admission.enabled() {
-            0
-        } else if self.fifo {
-            lock_or_recover(&self.batcher).pending()
-        } else {
-            self.metrics.outstanding.load(Ordering::Relaxed)
+        // the trace context is born here: id from (tenant, meta) — a
+        // pure function of the seeded stream — and timestamps from the
+        // session span clock (logical in fifo mode)
+        let mut trace = TraceCtx::new(tenant, meta, self.clock.now_ns());
+        let guard = {
+            let _sp = Span::enter(self.clock, &mut trace.phase_ns[PH_ADMISSION]);
+            // pin the tenant BEFORE consuming an admission token: begin()
+            // can still fail (tenant evicted between snapshot and here,
+            // e.g. by the spool watcher), and failing after try_admit
+            // would leak an admitted++ / a rate token for a request that
+            // never existed, breaking the admitted == completed + failed
+            // ledger. A rejected request drops the guard immediately, so
+            // the transient pin cannot block eviction.
+            let guard = self.registry.begin(tenant)?;
+            // queue-depth gauge for the cap: fifo mode reads the buffered
+            // backlog (driven only by the submission sequence, so
+            // admission stays byte-deterministic at any worker count);
+            // timed mode reads real outstanding requests for true
+            // backpressure. Skipped entirely when admission is off — no
+            // extra batcher lock on the hot path.
+            let depth = if !self.admission.enabled() {
+                0
+            } else if self.fifo {
+                lock_or_recover(&self.batcher).pending()
+            } else {
+                self.metrics.outstanding.load(Ordering::Relaxed)
+            };
+            self.admission.try_admit(tenant, depth)?;
+            guard
         };
-        self.admission.try_admit(tenant, depth)?;
-        let (req, handle) = PendingRequest::new(meta, input, guard);
+        let (mut req, handle) = PendingRequest::new(meta, input, guard);
+        req.trace = trace;
         self.metrics.note_submit();
         let full = lock_or_recover(&self.batcher).push(tenant, req);
         if let Some(batch) = full {
@@ -448,12 +650,15 @@ impl ServerHandle<'_> {
         Ok(handle)
     }
 
-    /// Advance the admission controller's logical clock (fifo mode): the
-    /// open-loop loadgen declares its seeded interarrival gaps here
-    /// instead of sleeping, which is what keeps rate-limited overload
-    /// runs deterministic. No-op in timed mode.
+    /// Advance the logical clocks (fifo mode): the open-loop loadgen
+    /// declares its seeded interarrival gaps here instead of sleeping,
+    /// which is what keeps rate-limited overload runs deterministic.
+    /// Moves both the admission token-bucket clock and the span clock
+    /// (so fifo latencies and trace timestamps are logical too). No-op
+    /// in timed mode.
     pub fn advance_clock(&self, dt_s: f64) {
         self.admission.advance(dt_s);
+        self.clock.advance_ns((dt_s.max(0.0) * 1e9) as u64);
     }
 
     /// Whether this session batches in deterministic fifo mode.
@@ -461,9 +666,88 @@ impl ServerHandle<'_> {
         self.fifo
     }
 
+    /// Emit any due `serve_interval` snapshots (fifo mode). The interval
+    /// unit is completed requests; each mark is claimed with a CAS so
+    /// exactly one caller emits each snapshot, and drivers call this at
+    /// wave boundaries where completion counts are deterministic — the
+    /// snapshot lines join the fifo byte-identity guarantee. Timed
+    /// sessions emit on a millisecond cadence from the flusher thread
+    /// instead, so this is a no-op there.
+    pub fn tick(&self) {
+        if self.metrics_interval == 0 || !self.fifo {
+            return;
+        }
+        loop {
+            let completed = self.metrics.completed.load(Ordering::Relaxed);
+            let mark = self.metrics.next_mark.load(Ordering::Relaxed);
+            if completed < mark {
+                return;
+            }
+            if self.metrics.next_mark
+                .compare_exchange(mark, mark + self.metrics_interval,
+                                  Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.emit_interval();
+            }
+        }
+    }
+
+    /// One live `serve_interval` snapshot: counters, histogram
+    /// quantiles, queue depth, cache hit rate, per-tenant rejects.
+    fn emit_interval(&self) {
+        let m = self.metrics;
+        let seq = m.interval_seq.fetch_add(1, Ordering::Relaxed);
+        let elapsed_s = self.clock.elapsed_s();
+        let completed = m.completed.load(Ordering::Relaxed);
+        let cache = self.registry.cache_stats();
+        let lookups = cache.hits + cache.misses;
+        let hit_rate = if lookups > 0 {
+            cache.hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        let a = self.admission.stats();
+        let rejects = Json::Arr(a.per_tenant.iter()
+            .map(|t| Json::Arr(vec![
+                t.tenant.as_str().into(),
+                Json::Num((t.rejected_rate_limited
+                           + t.rejected_queue_full) as f64),
+            ]))
+            .collect());
+        self.log.emit("serve_interval", vec![
+            ("seq", Json::Num(seq as f64)),
+            ("completed", Json::Num(completed as f64)),
+            ("submitted", Json::Num(m.submitted.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::Num(m.failed.load(Ordering::Relaxed) as f64)),
+            ("rps", Json::Num(if elapsed_s > 0.0 {
+                completed as f64 / elapsed_s
+            } else {
+                0.0
+            })),
+            ("p50_us", Json::Num(m.lat_hist.quantile_us(50.0))),
+            ("p95_us", Json::Num(m.lat_hist.quantile_us(95.0))),
+            ("p99_us", Json::Num(m.lat_hist.quantile_us(99.0))),
+            ("queue_depth", m.outstanding.load(Ordering::Relaxed).into()),
+            ("cache_hits", Json::Num(cache.hits as f64)),
+            ("cache_misses", Json::Num(cache.misses as f64)),
+            ("cache_hit_rate", Json::Num(hit_rate)),
+            ("rejected", Json::Num(a.rejected_total() as f64)),
+            ("tenant_rejects", rejects),
+        ]);
+    }
+
+    /// Dump the flight recorders now: merged, `(trace_id, meta)`-sorted
+    /// `serve_trace` lines for every retained span. The session-end dump
+    /// runs regardless; this is the on-demand variant for mid-session
+    /// post-mortems.
+    pub fn dump_traces(&self) {
+        dump_traces(self.metrics, self.log, None);
+    }
+
     /// Dispatch every buffer that has outwaited the policy (timed mode).
     pub fn flush_expired(&self) {
-        // analyze: allow(determinism) timed-mode expiry only; fifo never calls this
+        // analyze: allow(determinism, obs-discipline) timed-mode expiry only; fifo never calls this
         let expired = lock_or_recover(&self.batcher).take_expired(Instant::now());
         for batch in expired {
             self.dispatch(batch);
@@ -488,7 +772,13 @@ impl ServerHandle<'_> {
         self.registry
     }
 
-    fn dispatch(&self, batch: Batch) {
+    fn dispatch(&self, mut batch: Batch) {
+        // coalesce span: submit -> leaving the batcher (buffer time)
+        let now = self.clock.now_ns();
+        for req in &mut batch.requests {
+            req.trace.phase_ns[PH_COALESCE] =
+                now.saturating_sub(req.trace.submitted_ns);
+        }
         self.metrics.note_batch(batch.requests.len());
         self.service.push(batch);
     }
@@ -500,19 +790,9 @@ struct WorkerState<'a> {
     /// the shared exe_cache. The pure-Rust Q_P path needs no compiles.
     _wrt: crate::runtime::WorkerRuntime<'a>,
     log: EventLog,
-    metrics: &'a Metrics,
-    /// Worker-local latency buffers — merged into `metrics` on drop so
-    /// the per-request path stays lock-free (see `note_complete_counts`).
-    lat_ns: Vec<u64>,
-    per_tenant_ns: std::collections::BTreeMap<String, Vec<u64>>,
-}
-
-impl Drop for WorkerState<'_> {
-    fn drop(&mut self) {
-        self.metrics.merge_worker(
-            std::mem::take(&mut self.lat_ns),
-            std::mem::take(&mut self.per_tenant_ns));
-    }
+    /// This worker's index — selects its flight recorder in
+    /// [`Metrics::recorders`].
+    worker: usize,
 }
 
 /// out = x @ Q_P for one request row (Q_P row-major [n, n]).
@@ -536,53 +816,102 @@ enum ApplyPath {
     Structured(pauli::PauliCircuit),
 }
 
-fn process_batch(registry: &Registry, metrics: &Metrics,
-                 state: &mut WorkerState<'_>, ctx: TaskCtx, batch: Batch) {
+fn process_batch(registry: &Registry, metrics: &Metrics, clock: &SpanClock,
+                 state: &mut WorkerState<'_>, ctx: TaskCtx, mut batch: Batch) {
+    // queue span: submit -> a worker picked the batch up. Phase values
+    // measured from here down are batch-level: every request in the
+    // batch reports the shared cache_lookup / materialize durations.
+    let picked_ns = clock.now_ns();
+    for req in &mut batch.requests {
+        req.trace.dispatched_ns = picked_ns;
+        req.trace.phase_ns[PH_QUEUE] =
+            picked_ns.saturating_sub(req.trace.submitted_ns);
+    }
     // resolve the adapter at service time: an immutable snapshot, so a
     // concurrent hot-swap can never tear version/params mid-batch
-    let snap = match registry.snapshot(&batch.tenant) {
-        Ok(s) => s,
-        Err(e) => return fail_batch(metrics, &state.log, ctx, batch, &e.to_string()),
+    let mut lookup_ns = 0u64;
+    let snap = {
+        let _sp = Span::enter(clock, &mut lookup_ns);
+        registry.snapshot(&batch.tenant)
     };
-    let path = if snap.spec.q >= STRUCTURED_APPLY_MIN_Q {
-        ApplyPath::Structured(pauli::build(
-            snap.spec.q as usize, snap.spec.n_layers as usize))
-    } else {
-        match registry.materialized(&snap) {
-            Ok(m) => ApplyPath::Dense(m),
-            Err(e) => {
-                return fail_batch(metrics, &state.log, ctx, batch, &e.to_string())
-            }
+    let snap = match snap {
+        Ok(s) => s,
+        Err(e) => {
+            return fail_batch(metrics, clock, state, ctx, batch, &e.to_string())
+        }
+    };
+    let mut mat_ns = 0u64;
+    let path = {
+        let _sp = Span::enter(clock, &mut mat_ns);
+        if snap.spec.q >= STRUCTURED_APPLY_MIN_Q {
+            Ok(ApplyPath::Structured(pauli::build(
+                snap.spec.q as usize, snap.spec.n_layers as usize)))
+        } else {
+            registry.materialized(&snap).map(ApplyPath::Dense)
+        }
+    };
+    let path = match path {
+        Ok(p) => p,
+        Err(e) => {
+            return fail_batch(metrics, clock, state, ctx, batch, &e.to_string())
         }
     };
     let n = snap.spec.dim();
-    let tenant_lat = state.per_tenant_ns.entry(batch.tenant.clone()).or_default();
-    for mut req in batch.requests {
+    let tenant_obs = metrics.tenant_obs(&batch.tenant);
+    let batch_size = batch.requests.len();
+    let Batch { tenant, requests } = batch;
+    for mut req in requests {
+        let mut trace = std::mem::take(&mut req.trace);
+        trace.phase_ns[PH_CACHE_LOOKUP] = lookup_ns;
+        trace.phase_ns[PH_MATERIALIZE] = mat_ns;
         if req.input.len() != n {
             let msg = format!(
                 "tenant {:?}: input has {} elements but the live adapter \
                  (version {}) has dim {n}",
-                batch.tenant, req.input.len(), snap.version);
+                tenant, req.input.len(), snap.version);
             metrics.note_failed(1);
+            metrics.record_trace(state.worker, TraceRecord {
+                tenant: tenant.clone(),
+                meta: req.meta,
+                batch: batch_size,
+                ok: false,
+                completed_ns: clock.now_ns(),
+                ctx: trace,
+            });
             req.fail(msg);
             continue;
         }
-        let output = match &path {
-            ApplyPath::Dense(qp) => apply_row(&req.input, qp, n),
-            ApplyPath::Structured(circuit) => {
-                let mut row = std::mem::take(&mut req.input);
-                circuit.apply(&mut row, 1, &snap.thetas);
-                row
+        let output = {
+            let _sp = Span::enter(clock, &mut trace.phase_ns[PH_APPLY]);
+            match &path {
+                ApplyPath::Dense(qp) => apply_row(&req.input, qp, n),
+                ApplyPath::Structured(circuit) => {
+                    let mut row = std::mem::take(&mut req.input);
+                    circuit.apply(&mut row, 1, &snap.thetas);
+                    row
+                }
             }
         };
-        let latency_ns = req.submitted.elapsed().as_nanos() as u64;
-        metrics.note_complete_counts();
-        state.lat_ns.push(latency_ns);
-        tenant_lat.push(latency_ns);
+        // latency through the span clock: logical (and exactly
+        // reproducible) in fifo mode, wall time in timed mode — no
+        // unchecked u128 -> u64 narrowing anywhere on the path
+        let completed_ns = clock.now_ns();
+        let latency_ns = completed_ns.saturating_sub(trace.submitted_ns);
+        metrics.note_complete(&tenant_obs, latency_ns);
+        trace.phase_ns[PH_RESPOND] =
+            clock.now_ns().saturating_sub(completed_ns);
         let meta = req.meta;
+        metrics.record_trace(state.worker, TraceRecord {
+            tenant: tenant.clone(),
+            meta,
+            batch: batch_size,
+            ok: true,
+            completed_ns,
+            ctx: trace,
+        });
         req.complete(Response {
             meta,
-            tenant: batch.tenant.clone(),
+            tenant: tenant.clone(),
             version: snap.version,
             checksum: snap.checksum,
             output,
@@ -591,18 +920,101 @@ fn process_batch(registry: &Registry, metrics: &Metrics,
     }
 }
 
-fn fail_batch(metrics: &Metrics, log: &EventLog, ctx: TaskCtx, batch: Batch,
+fn fail_batch(metrics: &Metrics, clock: &SpanClock,
+              state: &mut WorkerState<'_>, ctx: TaskCtx, batch: Batch,
               msg: &str) {
-    log.emit("serve_error", vec![
+    state.log.emit("serve_error", vec![
         ("tenant", batch.tenant.as_str().into()),
         ("batch_index", ctx.index.into()),
         ("requests", batch.requests.len().into()),
         ("error", msg.into()),
     ]);
     metrics.note_failed(batch.requests.len());
-    for req in batch.requests {
+    let completed_ns = clock.now_ns();
+    let batch_size = batch.requests.len();
+    let Batch { tenant, requests } = batch;
+    for mut req in requests {
+        // failed requests keep their spans: the flight recorder is most
+        // useful exactly when something went wrong
+        let trace = std::mem::take(&mut req.trace);
+        metrics.record_trace(state.worker, TraceRecord {
+            tenant: tenant.clone(),
+            meta: req.meta,
+            batch: batch_size,
+            ok: false,
+            completed_ns,
+            ctx: trace,
+        });
         req.fail(msg.to_string());
     }
+}
+
+// ----------------------------------------------------------- trace dumps ---
+
+fn trace_fields(r: &TraceRecord) -> Vec<(&'static str, Json)> {
+    vec![
+        ("trace", r.ctx.trace_hex().into()),
+        ("tenant", r.tenant.as_str().into()),
+        ("meta", Json::Num(r.meta as f64)),
+        ("batch", r.batch.into()),
+        ("ok", Json::Bool(r.ok)),
+        ("submitted_ns", Json::Num(r.ctx.submitted_ns as f64)),
+        ("completed_ns", Json::Num(r.completed_ns as f64)),
+        ("latency_us", Json::Num(r.latency_ns() as f64 / 1_000.0)),
+        ("phases", Json::Arr(
+            PHASES.iter().zip(r.ctx.phase_ns.iter())
+                .map(|(name, &ns)| Json::Arr(vec![
+                    (*name).into(), Json::Num(ns as f64),
+                ]))
+                .collect())),
+    ]
+}
+
+/// Merge every worker's flight recorder, sort by `(trace_id, meta)` —
+/// a deterministic order however batches landed on workers — and emit
+/// one `serve_trace` line per retained span, plus a JSONL file when
+/// `trace_dir` is set.
+fn dump_traces(metrics: &Metrics, log: &EventLog, trace_dir: Option<&Path>) {
+    let mut recs: Vec<TraceRecord> = Vec::new();
+    for r in &metrics.recorders {
+        recs.extend(lock_or_recover(r).records());
+    }
+    if recs.is_empty() {
+        return;
+    }
+    recs.sort_by_key(|r| (r.ctx.trace_id, r.meta));
+    for r in &recs {
+        log.emit("serve_trace", trace_fields(r));
+    }
+    if let Some(dir) = trace_dir {
+        if let Err(e) = write_trace_file(dir, &recs) {
+            log.emit("serve_error", vec![
+                ("error", format!("trace dump: {e}").into()),
+            ]);
+        }
+    }
+}
+
+/// One JSONL file per dump: `trace-<pid>-<seq>.jsonl`, the process-wide
+/// sequence keeping concurrent sessions (e.g. shards) from clobbering
+/// each other.
+fn write_trace_file(dir: &Path, recs: &[TraceRecord]) -> Result<()> {
+    use std::io::Write as _;
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create trace dir {}", dir.display()))?;
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("trace-{}-{seq}.jsonl", std::process::id()));
+    let mut out = String::new();
+    for r in recs {
+        out.push_str(&crate::util::json::obj(trace_fields(r)).dump());
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(out.as_bytes())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
 }
 
 /// A completed serve session: whatever `body` returned, plus the metrics.
@@ -612,7 +1024,8 @@ pub struct ServeOutcome<R> {
 }
 
 /// Run a scoped serve session (see the module docs). The summary is
-/// emitted through `log` before returning.
+/// emitted through `log` before returning; retained trace spans are
+/// dumped (as `serve_trace` lines) just before it.
 pub fn serve<R, F>(rt: &Runtime, registry: &Registry, cfg: &ServeConfig,
                    log: &EventLog, body: F) -> Result<ServeOutcome<R>>
 where
@@ -622,7 +1035,16 @@ where
     // buffer forever): a typed InvalidBatchPolicy before any thread or
     // watcher starts, instead of a silent rewrite at push time
     cfg.policy.validate()?;
-    let metrics = Metrics::new();
+    if cfg.slo_p99_us > 0.0 && cfg.slo_error_budget <= 0.0 {
+        bail!("slo_error_budget must be > 0 when an SLO target is set \
+               (got {})", cfg.slo_error_budget);
+    }
+    let metrics = Metrics::new(cfg);
+    // the session span clock: logical in fifo mode (driver-advanced, so
+    // every latency/timestamp is a pure function of the submission
+    // sequence), wall otherwise — the single sanctioned wall-clock
+    // source on the serving path
+    let clock = SpanClock::new(cfg.fifo);
     // logical clock in fifo mode: admission decisions depend only on the
     // submission sequence (plus explicit advance_clock calls), never on
     // wall time — the fifo byte-identity guarantee extends to rejections
@@ -647,7 +1069,7 @@ where
         }
         None => None,
     };
-    // analyze: allow(determinism) wall-clock throughput only; never an emitted line
+    // analyze: allow(determinism, obs-discipline) wall-clock throughput only; never an emitted line
     let t0 = Instant::now();
     let (body_result, init_errors): (Result<R>, Vec<String>) = pool::run_service(
         cfg.workers,
@@ -659,12 +1081,12 @@ where
             Ok(WorkerState {
                 _wrt: wrt,
                 log: log.for_worker(w),
-                metrics: &metrics,
-                lat_ns: Vec::new(),
-                per_tenant_ns: std::collections::BTreeMap::new(),
+                worker: w,
             })
         },
-        |state, ctx, batch: Batch| process_batch(registry, &metrics, state, ctx, batch),
+        |state, ctx, batch: Batch| {
+            process_batch(registry, &metrics, &clock, state, ctx, batch)
+        },
         |service| {
             let handle = ServerHandle {
                 registry,
@@ -673,6 +1095,9 @@ where
                 admission: admission.as_ref(),
                 batcher: Mutex::new(Batcher::new(cfg.policy)),
                 fifo: cfg.fifo,
+                clock: &clock,
+                log,
+                metrics_interval: cfg.metrics_interval,
             };
             let r = if cfg.fifo {
                 body(&handle)
@@ -680,14 +1105,25 @@ where
                 // timed mode's max-wait bound must hold even when no
                 // further submit arrives to piggyback a flush on: a
                 // flusher thread sweeps expired buffers on a half-wait
-                // cadence for the whole session
+                // cadence for the whole session — and carries the
+                // millisecond-cadence serve_interval snapshots
                 let stop = AtomicBool::new(false);
                 let tick = Duration::from_micros(
                     (cfg.policy.max_wait_us / 2).max(50));
+                let interval_ns =
+                    cfg.metrics_interval.saturating_mul(1_000_000);
                 std::thread::scope(|s| {
                     s.spawn(|| {
+                        let mut last_emit = clock.now_ns();
                         while !stop.load(Ordering::Relaxed) {
                             handle.flush_expired();
+                            if interval_ns > 0 {
+                                let now = clock.now_ns();
+                                if now.saturating_sub(last_emit) >= interval_ns {
+                                    last_emit = now;
+                                    handle.emit_interval();
+                                }
+                            }
                             std::thread::sleep(tick);
                         }
                     });
@@ -719,6 +1155,10 @@ where
         }
         Err(e) => return Err(e),
     };
+    // session-end flight-recorder dump: serve_trace lines land before
+    // the summary (and killing a shard ends its session, so a killed
+    // shard's spans are dumped through this same path)
+    dump_traces(&metrics, log, cfg.trace_dir.as_deref());
     let summary = metrics.summarize(cfg.workers, wall_s, registry.cache_stats(),
                                     admission.stats());
     summary.emit(log);
@@ -766,6 +1206,11 @@ mod tests {
         assert_eq!(outcome.summary.completed, 1);
         assert_eq!(outcome.summary.failed, 0);
         assert_eq!(outcome.summary.max_queue_depth, 1);
+        // fifo latencies are logical: the driver never advanced the
+        // clock, so the recorded latency is exactly zero
+        assert_eq!(resp.latency_us, 0.0);
+        // SLO tracking is off by default
+        assert!(outcome.summary.slo.is_none());
     }
 
     #[test]
@@ -947,5 +1392,60 @@ mod tests {
         // outstanding gauge can never exceed max_queue
         assert!(outcome.summary.max_queue_depth <= 4,
                 "depth {} breached the cap", outcome.summary.max_queue_depth);
+    }
+
+    #[test]
+    fn slo_violations_are_counted_against_logical_latency() {
+        // fifo + an advanced clock between submit and completion: the
+        // logical latency exceeds the target, so the violation is
+        // counted and the summary carries the SLO section
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig {
+            workers: 1,
+            slo_p99_us: 100.0,
+            slo_error_budget: 0.5,
+            ..ServeConfig::default()
+        };
+        let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+            // request 0: completes with the clock still at submit time
+            let a = h.submit("t0", 0, vec![0.5; 8])?;
+            h.flush();
+            a.wait()?;
+            // request 1: the driver declares 1ms of logical time while
+            // it is in flight (before the flush that serves it)
+            let b = h.submit("t0", 1, vec![0.5; 8])?;
+            h.advance_clock(1e-3);
+            h.flush();
+            let r = b.wait()?;
+            assert!((r.latency_us - 1000.0).abs() < 1e-9, "{}", r.latency_us);
+            Ok(())
+        }).unwrap();
+        let slo = outcome.summary.slo.as_ref().expect("slo enabled");
+        assert_eq!(slo.per_tenant.len(), 1);
+        let t = &slo.per_tenant[0];
+        assert_eq!((t.requests, t.violations), (2, 1));
+        // budget 0.5 over 2 requests allows exactly 1 violation
+        assert!(t.compliant(slo.error_budget));
+        assert_eq!(slo.breached(), 0);
+        assert!((t.burn(slo.error_budget) - 1.0).abs() < 1e-12);
+        // the session histogram caught the same two samples
+        assert_eq!(outcome.summary.completed, 2);
+        assert!(outcome.summary.p99_us > 0.0);
+    }
+
+    #[test]
+    fn invalid_slo_budget_fails_fast() {
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig {
+            slo_p99_us: 50.0,
+            slo_error_budget: 0.0,
+            ..ServeConfig::default()
+        };
+        let e = serve(&rt, &reg, &cfg, &EventLog::null(), |_h| Ok(()))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("slo_error_budget"), "{e}");
     }
 }

@@ -71,7 +71,8 @@ use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 use super::admission::{RejectReason, Rejected};
 use super::registry::{EvictAttempt, Registry};
 use super::scheduler::ResponseHandle;
-use super::server::{serve, ServeConfig, ServeSummary, SubmitTarget};
+use super::server::{serve, ServeConfig, ServeSummary, SloSummary, SubmitTarget};
+use crate::obs::TenantSloStatus;
 
 /// Virtual nodes per shard on the hash ring: enough that tenant load
 /// spreads evenly at small shard counts, cheap enough that building the
@@ -167,6 +168,11 @@ enum ShardCmd {
     },
     Flush,
     Advance { dt_s: f64 },
+    /// Metrics-interval tick (fifo mode): the shard checks whether its
+    /// completion count crossed an interval mark and emits the
+    /// `serve_interval` snapshot. Acked so the router can serialize
+    /// ticks across shards (deterministic EventLog interleaving).
+    Tick { done: Sender<()> },
     /// End the current serve session (the session flushes and drains
     /// in-flight work before its summary is reported).
     Stop,
@@ -328,6 +334,22 @@ impl ShardRouter<'_> {
         self.cfg.serve.fifo
     }
 
+    /// Metrics-interval tick, fanned out to every live shard *in shard
+    /// order, waiting for each ack* — so the `serve_interval` lines from
+    /// different shards never interleave and fifo EventLogs stay
+    /// byte-identical at any worker count.
+    pub fn tick(&self) {
+        for seat in &self.seats {
+            if !seat.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            let (done_tx, done_rx) = channel();
+            if seat.cmd_tx.send(ShardCmd::Tick { done: done_tx }).is_ok() {
+                let _ = done_rx.recv();
+            }
+        }
+    }
+
     /// Live-migrate one tenant to `target` without dropping in-flight
     /// requests (see the module docs for the three-step protocol).
     pub fn migrate(&self, tenant: &str, target: usize) -> Result<()> {
@@ -476,6 +498,10 @@ impl SubmitTarget for ShardRouter<'_> {
     fn is_fifo(&self) -> bool {
         ShardRouter::is_fifo(self)
     }
+
+    fn tick(&self) {
+        ShardRouter::tick(self)
+    }
 }
 
 // ----------------------------------------------------------- fleet scope ---
@@ -506,6 +532,10 @@ fn shard_main(shard: usize, rt: &Runtime, cfg: &ShardConfig, log: &EventLog,
                     }
                     ShardCmd::Flush => h.flush(),
                     ShardCmd::Advance { dt_s } => h.advance_clock(dt_s),
+                    ShardCmd::Tick { done } => {
+                        h.tick();
+                        let _ = done.send(());
+                    }
                     ShardCmd::Stop => break,
                 }
             }
@@ -580,20 +610,47 @@ where
 /// live shards' stores, and release the lifecycle threads.
 fn shutdown_fleet(router: &ShardRouter<'_>)
                   -> Result<Vec<(usize, ServeSummary)>> {
-    for seat in &router.seats {
-        if seat.alive.load(Ordering::Acquire) {
-            let _ = seat.cmd_tx.send(ShardCmd::Stop);
-        }
-    }
     let mut sessions = std::mem::take(&mut *lock_or_recover(&router.collected));
     let expected = router.started.load(Ordering::Acquire);
+    // count *received* results, not successes: a failed session still
+    // consumed its slot, and waiting for a replacement would block on
+    // a channel that never closes
+    let mut received = sessions.len();
+    let mut first_err = None;
     {
         let rx = lock_or_recover(&router.results_rx);
-        let mut first_err = None;
-        // count *received* results, not successes: a failed session still
-        // consumed its slot, and waiting for a replacement would block on
-        // a channel that never closes
-        let mut received = sessions.len();
+        // stop live shards one at a time, waiting for each stopped
+        // session's result before stopping the next: session-end
+        // flight-recorder dumps (`serve_trace` lines) land in the
+        // EventLog as one contiguous shard-ordered block instead of
+        // interleaving across shards — part of the fifo byte-identity
+        // contract
+        for (shard, seat) in router.seats.iter().enumerate() {
+            if !seat.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            if seat.cmd_tx.send(ShardCmd::Stop).is_err() {
+                continue;
+            }
+            // wait for *this* shard's result, stashing any other
+            // session that failed on its own in the meantime
+            let mut done = false;
+            while !done && received < expected {
+                let Ok((idx, res)) = rx.recv() else { break };
+                received += 1;
+                done = idx == shard;
+                match res {
+                    Ok(summary) => sessions.push((idx, summary)),
+                    Err(e) => {
+                        first_err.get_or_insert(
+                            e.context(format!("shard {idx} serve session \
+                                               failed")));
+                    }
+                }
+            }
+        }
+        // drain stragglers: a session that failed before its Stop could
+        // be sent still consumed a started slot
         while received < expected {
             let Ok((idx, res)) = rx.recv() else { break };
             received += 1;
@@ -606,9 +663,9 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
                 }
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     // session-end compaction per live shard, mirroring the unsharded
     // bench: the next restart replays one snapshot instead of the WAL
@@ -659,6 +716,31 @@ impl FleetSummary {
             .fold(0.0f64, f64::max)
     }
 
+    /// Fleet-wide SLO rollup: per-tenant request/violation counts merged
+    /// across sessions by tenant name (a migrated or restarted tenant's
+    /// traffic may span several sessions), under the shared policy.
+    /// `None` when SLO tracking was off for the whole fleet.
+    pub fn slo(&self) -> Option<SloSummary> {
+        let first = self.sessions.iter().find_map(|(_, s)| s.slo.as_ref())?;
+        let mut merged: BTreeMap<String, TenantSloStatus> = BTreeMap::new();
+        for (_, s) in &self.sessions {
+            let Some(slo) = &s.slo else { continue };
+            for t in &slo.per_tenant {
+                let e = merged.entry(t.tenant.clone()).or_insert_with(|| {
+                    TenantSloStatus { tenant: t.tenant.clone(), requests: 0,
+                                      violations: 0 }
+                });
+                e.requests += t.requests;
+                e.violations += t.violations;
+            }
+        }
+        Some(SloSummary {
+            p99_target_us: first.p99_target_us,
+            error_budget: first.error_budget,
+            per_tenant: merged.into_values().collect(),
+        })
+    }
+
     pub fn emit(&self, log: &EventLog) {
         for (shard, s) in &self.sessions {
             log.emit("serve_shard", vec![
@@ -697,6 +779,26 @@ impl FleetSummary {
              {:.1}µs, {} failed",
             self.shards, self.completed(), self.fleet_rps(), self.p99_us(),
             self.failed());
+        if let Some(slo) = self.slo() {
+            let _ = writeln!(
+                s,
+                "fleet SLO: p99 target {:.1}µs, error budget {:.2}%",
+                slo.p99_target_us, slo.error_budget * 100.0);
+            for t in &slo.per_tenant {
+                let _ = writeln!(
+                    s,
+                    "  {}: {} requests, {} violation(s), burn {:.2} {}",
+                    t.tenant, t.requests, t.violations,
+                    t.burn(slo.error_budget),
+                    if t.compliant(slo.error_budget) { "[ok]" }
+                    else { "[BREACHED]" });
+            }
+            let n = slo.per_tenant.len();
+            let _ = writeln!(
+                s,
+                "fleet slo compliance: {}/{} tenant(s) within budget",
+                n - slo.breached(), n);
+        }
         s
     }
 }

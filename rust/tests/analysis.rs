@@ -45,14 +45,31 @@ fn expect(rel: &str, lint: &str, lines: &[u32], suppressed: usize) {
 #[test]
 fn determinism_positive() {
     // for-in @11, .keys() @18, .retain() @19, .iter() @26, the two
-    // clocks @30/@31; the #[cfg(test)] block at the bottom is exempt.
-    expect("serve/det_positive.rs", "determinism", &[11, 18, 19, 26, 30, 31], 0);
+    // clocks @30/@31 — which serve/ scope also reports under
+    // obs-discipline; the #[cfg(test)] block at the bottom is exempt.
+    let (got, sup) = analyze_fixture("serve/det_positive.rs");
+    let want: Vec<(String, u32)> = [
+        ("determinism", 11),
+        ("determinism", 18),
+        ("determinism", 19),
+        ("determinism", 26),
+        ("determinism", 30),
+        ("determinism", 31),
+        ("obs-discipline", 30),
+        ("obs-discipline", 31),
+    ]
+    .iter()
+    .map(|(l, n)| (l.to_string(), *n))
+    .collect();
+    assert_eq!(got, want, "findings for serve/det_positive.rs");
+    assert_eq!(sup, 0);
 }
 
 #[test]
 fn determinism_allowed() {
-    // One allow on the line above, one trailing on the same line.
-    expect("serve/det_allowed.rs", "determinism", &[], 2);
+    // One allow on the line above, one trailing on the same line; each
+    // names both clock lints, so each suppresses two findings.
+    expect("serve/det_allowed.rs", "determinism", &[], 4);
 }
 
 #[test]
@@ -170,6 +187,25 @@ fn io_clean() {
     expect("store/io_clean.rs", "io-durability", &[], 0);
 }
 
+// ---------------------------------------------------------- obs-discipline
+
+#[test]
+fn obs_positive() {
+    // Instant::now @6 and SystemTime::now @11 inside obs/ — outside the
+    // determinism scope, so each is exactly one obs-discipline finding.
+    expect("obs/positive.rs", "obs-discipline", &[6, 11], 0);
+}
+
+#[test]
+fn obs_allowed() {
+    expect("obs/allowed.rs", "obs-discipline", &[], 1);
+}
+
+#[test]
+fn obs_clean() {
+    expect("obs/clean.rs", "obs-discipline", &[], 0);
+}
+
 // ------------------------------------------------------------- suppression
 
 #[test]
@@ -192,9 +228,9 @@ fn suppression_malformed_directive_is_a_finding() {
 #[test]
 fn fixture_corpus_totals() {
     let report = analysis::analyze_paths(&[fixture_root()]).expect("walk fixtures");
-    assert_eq!(report.files_scanned, 22, "fixture .rs file count");
-    assert_eq!(report.findings.len(), 28, "total findings across corpus");
-    assert_eq!(report.suppressed.len(), 7, "total reasoned allows");
+    assert_eq!(report.files_scanned, 25, "fixture .rs file count");
+    assert_eq!(report.findings.len(), 32, "total findings across corpus");
+    assert_eq!(report.suppressed.len(), 10, "total reasoned allows");
     for s in &report.suppressed {
         assert!(
             !s.reason.is_empty(),
@@ -216,9 +252,9 @@ fn json_output_schema() {
     let rendered = analysis::render_json(&report);
     let v = Json::parse(&rendered).expect("render_json emits valid json");
     assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
-    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 22);
+    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 25);
     let findings = v.get("findings").unwrap().as_arr().unwrap();
-    assert_eq!(findings.len(), 28);
+    assert_eq!(findings.len(), 32);
     for f in findings {
         let lint = f.get("lint").unwrap().as_str().unwrap();
         assert!(LINT_NAMES.contains(&lint), "unknown lint in json: {lint}");
@@ -227,7 +263,7 @@ fn json_output_schema() {
         assert!(!f.get("message").unwrap().as_str().unwrap().is_empty());
     }
     let suppressed = v.get("suppressed").unwrap().as_arr().unwrap();
-    assert_eq!(suppressed.len(), 7);
+    assert_eq!(suppressed.len(), 10);
     for s in suppressed {
         assert!(
             !s.get("reason").unwrap().as_str().unwrap().is_empty(),
@@ -237,6 +273,7 @@ fn json_output_schema() {
     let counts = v.get("counts").unwrap().as_obj().unwrap();
     assert_eq!(counts.get("lock-discipline").unwrap().as_usize().unwrap(), 6);
     assert_eq!(counts.get("determinism").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(counts.get("obs-discipline").unwrap().as_usize().unwrap(), 4);
 }
 
 // ---------------------------------------------------------------- self-run

@@ -1,0 +1,8 @@
+// obs-discipline fixture: the same read, suppressed with a reason.
+use std::time::Instant;
+
+fn wall_budget() -> f64 {
+    // analyze: allow(obs-discipline) wall-clock budget guard; never shapes a latency or a line
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}

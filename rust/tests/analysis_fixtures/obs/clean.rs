@@ -1,0 +1,11 @@
+// obs-discipline fixture: idiomatic observability code takes its
+// timestamps from an injected span clock, never from the wall.
+pub struct SpanClockRef<'a> {
+    now_ns: &'a dyn Fn() -> u64,
+}
+
+pub fn measure(clock: &SpanClockRef<'_>) -> u64 {
+    let start = (clock.now_ns)();
+    let end = (clock.now_ns)();
+    end.saturating_sub(start)
+}

@@ -1,0 +1,21 @@
+// obs-discipline fixture: raw clock reads inside the observability
+// tree itself — only obs/span.rs (the SpanClock) may touch the wall.
+use std::time::{Instant, SystemTime};
+
+fn stamp() -> u64 {
+    let t = Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+
+fn epoch() -> std::time::SystemTime {
+    SystemTime::now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let t = std::time::Instant::now();
+        assert!(t.elapsed().as_secs() < 1);
+    }
+}

@@ -1,13 +1,14 @@
 // determinism fixture: the same patterns, suppressed with reasons.
+// serve/ is in both clock lints' scope, so each allow names both.
 use std::time::Instant;
 
 fn timed_only() -> f64 {
-    // analyze: allow(determinism) wall-clock metric only; never emitted
+    // analyze: allow(determinism, obs-discipline) wall-clock metric only; never emitted
     let t = Instant::now();
     t.elapsed().as_secs_f64()
 }
 
 fn trailing() -> f64 {
-    let t = Instant::now(); // analyze: allow(determinism) timer for a local bench
+    let t = Instant::now(); // analyze: allow(determinism, obs-discipline) timer for a local bench
     t.elapsed().as_secs_f64()
 }

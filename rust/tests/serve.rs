@@ -5,24 +5,29 @@
 //! summary, the ISSUE 4 control plane — deterministic rate-limited
 //! overload shedding with per-tenant rejection counters, and
 //! spool-directory adapter ingestion (hot upload / quarantine /
-//! pin-respecting eviction) with no server restart — and the ISSUE 6
+//! pin-respecting eviction) with no server restart — the ISSUE 6
 //! shard tier: per-shard fifo byte-determinism, zero-drop live tenant
 //! migration, and per-shard crash recovery from each shard's own state
-//! dir.
+//! dir — and the ISSUE 8 observability layer: the log₂-bucket
+//! histogram pinned against the exact percentile oracle, fifo
+//! `serve_interval`/`serve_trace` byte-identity at any worker count,
+//! and the killed-shard flight-recorder dump.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use quantum_peft::coordinator::checkpoint::{save_adapter_atomic, AdapterManifest};
 use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::obs::Hist;
 use quantum_peft::quantum::pauli;
 use quantum_peft::runtime::{HostTensor, Runtime};
 use quantum_peft::serve::loadgen::{self, response_log};
 use quantum_peft::serve::registry::theta_checksum;
 use quantum_peft::serve::scheduler::BatchPolicy;
 use quantum_peft::serve::{
-    AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, Registry, RejectReason,
-    Rejected, ServeConfig, ShardConfig, Spool, SpoolConfig, SpoolWatcher,
+    percentile_us, AdmissionConfig, BenchOpts, LoadSpec, PauliSpec, Registry,
+    RejectReason, Rejected, ServeConfig, ShardConfig, Spool, SpoolConfig,
+    SpoolWatcher,
 };
 use quantum_peft::util::json::Json;
 use quantum_peft::util::rng::Rng;
@@ -835,6 +840,175 @@ fn a_killed_shard_recovers_its_own_tenants_while_the_rest_keep_serving() {
         })
         .unwrap();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- observability ---
+
+#[test]
+fn hist_quantiles_track_the_exact_percentile_oracle() {
+    // the log₂-bucket histogram that replaced the per-tenant latency
+    // vectors must stay within one bucket width of the exact
+    // nearest-rank oracle: floor <= exact < max(2*floor, 2ns)
+    let ns: Vec<u64> =
+        (1..=2000u64).map(|i| (i * i * 2_654_435_761) % 50_000_000).collect();
+    let h = Hist::new();
+    for &v in &ns {
+        h.record(v);
+    }
+    let mut sorted = ns.clone();
+    sorted.sort_unstable();
+    for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+        let exact_us = percentile_us(&sorted, p);
+        let q_us = h.quantile_us(p);
+        assert!(q_us <= exact_us + 1e-12, "p{p}: hist {q_us} > exact {exact_us}");
+        let upper = (2.0 * q_us).max(0.002);
+        assert!(exact_us < upper + 1e-12,
+                "p{p}: exact {exact_us} outside [{q_us}, {upper})");
+    }
+}
+
+#[test]
+fn fifo_interval_and_trace_lines_are_byte_identical_across_worker_counts() {
+    // the full observable log — serve_interval snapshots, serve_trace
+    // spans, serve_slo and per-tenant lines — joins the fifo
+    // byte-identity guarantee once the wall-clock ts field is stripped
+    // and the two lines that legitimately echo the worker count
+    // (serve_bench config, serve_summary wall-clock rps) are dropped
+    let run = |workers: usize| -> String {
+        let path = std::env::temp_dir().join(format!(
+            "qp_serve_obs_events_{}_{workers}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::new(Some(path.clone()), false).unwrap();
+        let opts = BenchOpts {
+            load: LoadSpec {
+                tenants: 8,
+                requests: 192,
+                concurrency: 24,
+                seed: 7,
+                zipf_s: 1.1,
+                pauli: PauliSpec { q: 4, n_layers: 1 },
+                open_rate_rps: 0.0,
+            },
+            serve: ServeConfig {
+                workers,
+                policy: BatchPolicy { max_batch: 5, max_wait_us: 1 },
+                fifo: true,
+                metrics_interval: 64,
+                slo_p99_us: 50.0,
+                slo_error_budget: 0.25,
+                ..ServeConfig::default()
+            },
+            cache_bytes: 1 << 20,
+            ..BenchOpts::default()
+        };
+        let (summary, _) = loadgen::run_serve_bench(&opts, &log).unwrap();
+        assert_eq!(summary.completed, 192, "workers={workers}");
+        // fifo latencies are logical zeros: the SLO budget never burns
+        let slo = summary.slo.as_ref().expect("slo section");
+        assert_eq!(slo.breached(), 0, "workers={workers}");
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let (mut intervals, mut traces, mut slo_lines) = (0, 0, 0);
+        let mut kept = Vec::new();
+        for line in text.lines() {
+            let mut j = Json::parse(line).unwrap();
+            let ev = j.get("event").unwrap().as_str().unwrap().to_string();
+            match ev.as_str() {
+                "serve_bench" => continue,
+                "serve_summary" => {
+                    // the summary line carries the widened schema tag
+                    assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 2);
+                    continue;
+                }
+                "serve_interval" => intervals += 1,
+                "serve_trace" => traces += 1,
+                "serve_slo" => slo_lines += 1,
+                _ => {}
+            }
+            if let Json::Obj(map) = &mut j {
+                map.remove("ts");
+            }
+            kept.push(j.dump());
+        }
+        // 192 completions at interval 64, ticked at wave boundaries
+        assert!(intervals >= 2, "workers={workers}: {intervals} snapshot(s)");
+        // the default recorder cap retains every span of this run
+        assert_eq!(traces, 192, "workers={workers}");
+        assert!(slo_lines >= 1, "workers={workers}");
+        kept.join("\n")
+    };
+    let base = run(1);
+    for workers in [4, 8] {
+        assert_eq!(run(workers), base,
+                   "observable log diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn a_killed_shard_dumps_its_retained_trace_spans() {
+    // kill_shard ends the victim's serve session, and a session end
+    // dumps the flight recorders: the victim's spans must be on disk
+    // (and only the victim's — the survivors are still serving)
+    let path = std::env::temp_dir().join(format!(
+        "qp_shard_trace_dump_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let log = EventLog::new(Some(path.clone()), false).unwrap();
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    let n_tenants = 4usize;
+    let cfg = ShardConfig {
+        shards: 2,
+        serve: ServeConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 2, max_wait_us: 1 },
+            fifo: true,
+            ..ServeConfig::default()
+        },
+        cache_bytes: 1 << 20,
+        ..ShardConfig::default()
+    };
+    let rt = Runtime::cpu().unwrap();
+    let load = LoadSpec {
+        tenants: n_tenants, pauli: spec, seed: 9, ..LoadSpec::default()
+    };
+    quantum_peft::serve::serve_sharded(&rt, &cfg, &log, |router| {
+        loadgen::populate_sharded(router, &load)?;
+        let mut handles = Vec::new();
+        for i in 0..n_tenants {
+            handles.push(router.submit(
+                &loadgen::tenant_name(i), i as u64, vec![0.25; spec.dim()])?);
+        }
+        router.flush();
+        for h in handles {
+            h.wait()?;
+        }
+        let victim = router.shard_of(&loadgen::tenant_name(0));
+        let victim_tenants: Vec<String> = (0..n_tenants)
+            .map(loadgen::tenant_name)
+            .filter(|t| router.shard_of(t) == victim)
+            .collect();
+        router.kill_shard(victim)?;
+        // the dump rode the session end: every span the victim served
+        // is a serve_trace line already, each ok and latency-stamped
+        let text = std::fs::read_to_string(&path).unwrap();
+        let traces: Vec<Json> = text.lines()
+            .map(|l| Json::parse(l).unwrap())
+            .filter(|j| j.get("event").unwrap().as_str().unwrap() == "serve_trace")
+            .collect();
+        assert_eq!(traces.len(), victim_tenants.len(),
+                   "expected one span per victim-shard request");
+        for t in &traces {
+            let tenant = t.get("tenant").unwrap().as_str().unwrap().to_string();
+            assert!(victim_tenants.contains(&tenant), "{tenant}");
+            assert!(matches!(t.get("ok").unwrap(), Json::Bool(true)));
+            assert_eq!(t.get("trace").unwrap().as_str().unwrap().len(), 16);
+            let phases = t.get("phases").unwrap().as_arr().unwrap();
+            assert!(!phases.is_empty());
+        }
+        Ok(())
+    })
+    .unwrap();
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
