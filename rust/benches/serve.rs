@@ -65,11 +65,15 @@ fn serve_grid() -> Counters {
             };
             match quantum_peft::serve::run_serve_bench(&opts, &EventLog::null()) {
                 Ok((s, _)) => {
+                    let q = |v: Option<f64>| {
+                        v.map_or_else(|| "-".to_string(), |v| fmt_ns(v * 1e3))
+                    };
                     println!("{:>8} {:>8} {:>10} {:>12.0} {:>12} {:>12}",
                              workers, tenants, s.completed, s.rps,
-                             fmt_ns(s.p50_us * 1e3), fmt_ns(s.p99_us * 1e3));
+                             q(s.p50_us), q(s.p99_us));
                     out.push((format!("w{workers}_t{tenants}_rps"), s.rps));
-                    out.push((format!("w{workers}_t{tenants}_p99_us"), s.p99_us));
+                    out.push((format!("w{workers}_t{tenants}_p99_us"),
+                              s.p99_us.unwrap_or(0.0)));
                 }
                 Err(e) => println!("{workers:>8} {tenants:>8} failed: {e}"),
             }
@@ -414,11 +418,12 @@ fn shard_scaling() -> Counters {
                         .collect();
                     let min = served.iter().min().copied().unwrap_or(0);
                     let max = served.iter().max().copied().unwrap_or(0);
+                    let p99 = report.fleet.p99_us()
+                        .map_or_else(|| "-".to_string(), |v| fmt_ns(v * 1e3));
                     println!(
                         "{:>7} {:>8} {:>10} {:>12.0} {:>12} {:>12} {:>12}",
                         shards, tenants, report.fleet.completed(),
-                        report.fleet.fleet_rps(),
-                        fmt_ns(report.fleet.p99_us() * 1e3), min, max);
+                        report.fleet.fleet_rps(), p99, min, max);
                     out.push((format!("s{shards}_t{tenants}_fleet_rps"),
                               report.fleet.fleet_rps()));
                 }

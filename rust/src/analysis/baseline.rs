@@ -1,0 +1,225 @@
+//! The ratchet baseline: a JSON file of fingerprinted, accepted
+//! findings.
+//!
+//! A baseline lets a new (or newly strict) lint land *blocking* before
+//! the tree is fully clean: the sweep's leftover findings are written
+//! to a baseline file, the gate fails on anything **not** in it, and
+//! the file can only shrink —
+//!
+//! - a finding whose fingerprint is in the baseline is accepted (it
+//!   moves to [`Report::baselined`], not counted against cleanliness);
+//! - a finding not in the baseline fails the gate like any other;
+//! - a baseline entry that no longer matches any finding is *stale*
+//!   and is itself reported as a finding (`baseline` lint), so fixed
+//!   debt must be deleted from the file — the ratchet only turns one
+//!   way.
+//!
+//! Fingerprints are FNV-1a 64 over `lint|file|message` with the file
+//! path normalized (leading `./` and `rust/` stripped), so a run from
+//! the repo root and a run from `rust/` agree, and a finding keeps its
+//! identity across unrelated edits that only shift line numbers.
+//! The message is part of the identity on purpose: messages embed the
+//! reached site (`wal.rs:88`) for interprocedural findings, so a
+//! *different* path to the same lint at the same file is a new
+//! finding, not silently absorbed by old debt.
+
+use super::lints::Finding;
+use super::{Report, Suppressed};
+use crate::util::json::{self, Json};
+
+/// One accepted finding. The lint/file/message triple is stored next
+/// to the fingerprint so the file is reviewable in a diff — the
+/// fingerprint alone is what matching uses.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub fingerprint: String,
+    pub lint: String,
+    pub file: String,
+    pub message: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<Entry>,
+}
+
+/// Strip the path prefixes that vary with the invocation directory.
+fn norm_file(file: &str) -> &str {
+    let f = file.strip_prefix("./").unwrap_or(file);
+    f.strip_prefix("rust/").unwrap_or(f)
+}
+
+/// FNV-1a 64 of `lint|normalized-file|message`, rendered as 16 hex
+/// digits. Line numbers are deliberately excluded.
+pub fn fingerprint(f: &Finding) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for b in bytes {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(f.lint.as_bytes());
+    eat(b"|");
+    eat(norm_file(&f.file).as_bytes());
+    eat(b"|");
+    eat(f.message.as_bytes());
+    format!("{h:016x}")
+}
+
+impl Baseline {
+    /// Capture every current finding as accepted debt.
+    pub fn from_report(report: &Report) -> Baseline {
+        Baseline {
+            entries: report
+                .findings
+                .iter()
+                .map(|f| Entry {
+                    fingerprint: fingerprint(f),
+                    lint: f.lint.to_string(),
+                    file: norm_file(&f.file).to_string(),
+                    message: f.message.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let v = Json::parse(text).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .map_err(|_| "baseline has no `entries` array".to_string())?;
+        let mut out = Vec::new();
+        for e in entries {
+            let field = |k: &str| -> Result<String, String> {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .map_err(|_| format!("baseline entry missing string `{k}`"))
+            };
+            out.push(Entry {
+                fingerprint: field("fingerprint")?,
+                lint: field("lint")?,
+                file: field("file")?,
+                message: field("message")?,
+            });
+        }
+        Ok(Baseline { entries: out })
+    }
+
+    pub fn dump(&self) -> String {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("fingerprint", e.fingerprint.as_str().into()),
+                    ("lint", e.lint.as_str().into()),
+                    ("file", e.file.as_str().into()),
+                    ("message", e.message.as_str().into()),
+                ])
+            })
+            .collect();
+        json::obj(vec![("version", 1usize.into()), ("entries", Json::Arr(entries))]).dump()
+    }
+}
+
+/// Apply the ratchet: move accepted findings to `report.baselined`,
+/// report stale entries as findings. Matching is multiset — two
+/// identical findings need two baseline entries.
+pub fn apply(report: &mut Report, base: &Baseline) {
+    let mut remaining: Vec<&Entry> = base.entries.iter().collect();
+    let mut kept = Vec::new();
+    for f in std::mem::take(&mut report.findings) {
+        let fp = fingerprint(&f);
+        match remaining.iter().position(|e| e.fingerprint == fp) {
+            Some(pos) => {
+                remaining.remove(pos);
+                report
+                    .baselined
+                    .push(Suppressed { finding: f, reason: format!("accepted by baseline ({fp})") });
+            }
+            None => kept.push(f),
+        }
+    }
+    for e in remaining {
+        kept.push(Finding {
+            lint: "baseline",
+            file: e.file.clone(),
+            line: 1,
+            message: format!(
+                "stale baseline entry {} ({}: {}) — the finding is gone; delete the \
+                 entry (or regenerate with --write-baseline) so the ratchet only \
+                 turns one way",
+                e.fingerprint, e.lint, e.message
+            ),
+        });
+    }
+    kept.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    report.findings = kept;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(lint: &'static str, file: &str, line: u32, msg: &str) -> Finding {
+        Finding { lint, file: file.to_string(), line, message: msg.to_string() }
+    }
+
+    #[test]
+    fn fingerprint_ignores_lines_and_path_prefix() {
+        let a = finding("panic-path", "rust/src/serve/a.rs", 10, "m");
+        let b = finding("panic-path", "src/serve/a.rs", 99, "m");
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        let c = finding("panic-path", "src/serve/a.rs", 10, "other");
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn roundtrip_and_accept() {
+        let mut report = Report {
+            findings: vec![finding("panic-path", "src/serve/a.rs", 3, "m")],
+            ..Report::default()
+        };
+        let base = Baseline::parse(&Baseline::from_report(&report).dump()).unwrap();
+        apply(&mut report, &base);
+        assert!(report.findings.is_empty(), "{:?}", report.findings);
+        assert_eq!(report.baselined.len(), 1);
+    }
+
+    #[test]
+    fn new_finding_still_fails_and_stale_entry_is_a_finding() {
+        let old = Report {
+            findings: vec![finding("panic-path", "src/serve/a.rs", 3, "fixed later")],
+            ..Report::default()
+        };
+        let base = Baseline::from_report(&old);
+        let mut now = Report {
+            findings: vec![finding("determinism", "src/serve/b.rs", 7, "fresh")],
+            ..Report::default()
+        };
+        apply(&mut now, &base);
+        let lints: Vec<&str> = now.findings.iter().map(|f| f.lint).collect();
+        assert!(lints.contains(&"determinism"), "{lints:?}");
+        assert!(lints.contains(&"baseline"), "{lints:?}");
+        assert!(now.baselined.is_empty());
+    }
+
+    #[test]
+    fn multiset_matching_consumes_entries() {
+        // two identical findings, one baseline entry: one accepted,
+        // one fails
+        let f = finding("panic-path", "src/serve/a.rs", 3, "m");
+        let base = Baseline::from_report(&Report {
+            findings: vec![f.clone()],
+            ..Report::default()
+        });
+        let mut now =
+            Report { findings: vec![f.clone(), f.clone()], ..Report::default() };
+        apply(&mut now, &base);
+        assert_eq!(now.findings.len(), 1);
+        assert_eq!(now.baselined.len(), 1);
+    }
+}

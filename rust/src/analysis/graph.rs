@@ -1,0 +1,357 @@
+//! The crate-wide call graph and its transitive closures.
+//!
+//! Resolution is by name, in three precision tiers:
+//!
+//! 1. `self.method(..)` inside an `impl Type` block resolves to
+//!    `Type::method` when the crate defines it;
+//! 2. `Type::method(..)` / `module::function(..)` resolves against the
+//!    qualified name, falling back to the bare name (the qualifier may
+//!    be a module path segment the model cannot see through);
+//! 3. `receiver.method(..)` with an unresolvable receiver falls back
+//!    to **every** crate function with that method name.
+//!
+//! Tier 3 is the conservative any-method fallback: it can only
+//! over-approximate the real call target set, so the closures computed
+//! here (which locks / blocking calls are reachable from a function)
+//! may contain edges the program never takes — a finding built on them
+//! can be a false positive, answered with a reasoned
+//! `// analyze: allow`. What the fallback can *not* do is miss a
+//! crate-local callee, which is the direction that matters for a gate:
+//! absence of findings is meaningful. Two carve-outs keep the
+//! over-approximation usable rather than universal: method names on
+//! the [`STD_METHODS`] list (container/iterator/atomic vocabulary like
+//! `get`, `len`, `send`) never enter the union — a crate fn that
+//! shadows one of those names is only reached through tiers 1 and 2 —
+//! and a qualified call whose qualifier is a std type or module
+//! ([`STD_QUALS`], e.g. `Arc::new`) resolves to nothing instead of
+//! falling back to every crate `new`. Calls that resolve to nothing
+//! contribute no edges.
+//!
+//! Spawn closures are the one deliberate cut: calls inside a
+//! `spawn(..)` argument list run on the new thread, so they are
+//! excluded from the spawning function's closure and instead seed the
+//! [`CallGraph::spawn_reachable`] set, which the atomics lint uses to
+//! tell main-thread accesses from spawned-thread accesses.
+
+use std::collections::BTreeMap;
+
+use super::model::FileModel;
+
+/// Method names the any-method fallback must NOT union: they are so
+/// ubiquitous on std containers, iterators, atomics, `Option`/`Result`
+/// and strings that treating every `.get(..)` or `.len(..)` as a
+/// possible call to a same-named crate fn would hang a lock footprint
+/// on nearly every statement (`Registry::len` acquires `tenants`; a
+/// `HashMap::len` under any held guard would then report an
+/// inversion). Crate methods with these names are still resolved
+/// precisely through `self.method(..)` and `Type::method(..)` calls —
+/// only the opaque-receiver union skips them.
+const STD_METHODS: &[&str] = &[
+    // containers / slices
+    "get", "get_mut", "insert", "remove", "entry", "or_insert", "or_default",
+    "contains", "contains_key", "keys", "values", "iter", "iter_mut",
+    "into_iter", "len", "is_empty", "push", "pop", "push_str", "extend",
+    "drain", "clear", "retain", "first", "last", "split_off", "truncate",
+    "sort", "sort_by", "sort_by_key", "sort_unstable", "dedup", "binary_search",
+    "resize", "fill", "concat", "join", "windows", "chunks", "to_vec",
+    // iterators
+    "map", "filter", "filter_map", "flat_map", "flatten", "find", "position",
+    "any", "all", "count", "sum", "product", "fold", "chain", "zip", "rev",
+    "skip", "take_while", "skip_while", "step_by", "enumerate", "copied",
+    "cloned", "collect", "next", "nth", "peekable", "peek", "by_ref",
+    "min", "max", "min_by", "max_by", "min_by_key", "max_by_key",
+    // Option / Result
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "expect",
+    "ok", "err", "is_some", "is_none", "is_ok", "is_err", "map_err",
+    "and_then", "or_else", "ok_or", "ok_or_else", "take", "replace",
+    "get_or_insert", "get_or_insert_with", "as_ref", "as_mut", "as_deref",
+    // atomics / channels
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_or",
+    "fetch_and", "compare_exchange", "compare_exchange_weak", "send", "recv",
+    "try_recv", "recv_timeout", "wait", "wait_timeout", "notify_one",
+    "notify_all", "into_inner",
+    // strings / conversion / numbers
+    "clone", "to_string", "to_owned", "as_str", "as_bytes", "as_slice",
+    "parse", "trim", "split", "splitn", "lines", "chars", "bytes",
+    "starts_with", "ends_with", "strip_prefix", "strip_suffix", "repeat",
+    "saturating_add", "saturating_sub", "saturating_mul", "wrapping_add",
+    "wrapping_mul", "checked_add", "checked_sub", "checked_mul", "clamp",
+    "to_le_bytes", "to_be_bytes", "abs", "sqrt", "powi", "exp", "ln",
+    "floor", "ceil", "round", "rem_euclid", "hypot", "is_finite", "is_nan",
+    // time / paths / misc std
+    "elapsed", "as_secs_f64", "as_secs", "as_millis", "as_micros",
+    "as_nanos", "from_secs", "from_millis", "from_micros", "from_nanos",
+    "duration_since", "display", "exists", "is_dir", "is_file", "extension",
+    "file_name", "file_stem", "parent", "to_path_buf", "with_extension",
+    "eq", "ne", "cmp", "partial_cmp", "hash", "fmt", "into", "try_into",
+    "borrow", "borrow_mut", "as_any", "context", "with_context",
+];
+
+/// Qualifiers that name std (or std-adjacent) types and modules:
+/// `Arc::new(..)` / `Vec::with_capacity(..)` must resolve to nothing,
+/// not fall back to every crate fn named `new`.
+const STD_QUALS: &[&str] = &[
+    "Arc", "Rc", "Box", "Vec", "VecDeque", "String", "str", "HashMap",
+    "HashSet", "BTreeMap", "BTreeSet", "Mutex", "RwLock", "Condvar",
+    "Option", "Result", "Some", "Ok", "Err", "Instant", "Duration",
+    "SystemTime", "Ordering", "PathBuf", "Path", "File", "OpenOptions",
+    "mpsc", "thread", "fs", "io", "fmt", "mem", "process", "env", "cmp",
+    "iter", "slice", "f32", "f64", "u8", "u16", "u32", "u64", "u128",
+    "usize", "i8", "i16", "i32", "i64", "isize", "char", "bool",
+    "AtomicBool", "AtomicUsize", "AtomicU32", "AtomicU64", "AtomicI64",
+    "Default", "Iterator", "AssertUnwindSafe", "Cow",
+];
+
+/// Where something (an acquisition, a blocking call) actually lives.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub file: String,
+    pub line: u32,
+}
+
+pub struct CallGraph {
+    /// Flattened fn ids: `fns[id] = (file index, fn index in file)`.
+    pub fns: Vec<(usize, usize)>,
+    /// Per fn, parallel to its `FnDef::calls`: resolved callee ids.
+    pub call_targets: Vec<Vec<Vec<usize>>>,
+    /// Held-lock acquisitions reachable from each fn, including its
+    /// own (spawn-closure sites excluded): lock name -> example site.
+    pub locks_out: Vec<BTreeMap<String, Site>>,
+    /// Blocking calls reachable from each fn: kind -> example site.
+    pub blocking_out: Vec<BTreeMap<&'static str, Site>>,
+    /// Reachable from inside any spawn closure (runs off-thread).
+    pub spawn_reachable: Vec<bool>,
+    display: Vec<String>,
+    ids: Vec<Vec<usize>>,
+}
+
+impl CallGraph {
+    /// The fn id for file `fi`, fn `fj` of that file's model.
+    pub fn id_of(&self, fi: usize, fj: usize) -> usize {
+        self.ids[fi][fj]
+    }
+
+    /// `Type::name` or bare `name`, for messages.
+    pub fn display_name(&self, id: usize) -> &str {
+        &self.display[id]
+    }
+}
+
+pub fn build(models: &[FileModel]) -> CallGraph {
+    let mut fns = Vec::new();
+    let mut display = Vec::new();
+    let mut ids: Vec<Vec<usize>> = Vec::new();
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut by_qual: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (fi, m) in models.iter().enumerate() {
+        let mut file_ids = Vec::new();
+        for (fj, f) in m.fns.iter().enumerate() {
+            let id = fns.len();
+            fns.push((fi, fj));
+            display.push(match &f.qual {
+                Some(q) => format!("{q}::{}", f.name),
+                None => f.name.clone(),
+            });
+            by_name.entry(f.name.as_str()).or_default().push(id);
+            if let Some(q) = &f.qual {
+                by_qual.entry(format!("{q}::{}", f.name)).or_default().push(id);
+            }
+            file_ids.push(id);
+        }
+        ids.push(file_ids);
+    }
+
+    let n = fns.len();
+    let mut call_targets: Vec<Vec<Vec<usize>>> = Vec::with_capacity(n);
+    let mut edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut spawn_roots: Vec<usize> = Vec::new();
+    for &(fi, fj) in &fns {
+        let caller = call_targets.len();
+        let f = &models[fi].fns[fj];
+        let mut per_call = Vec::with_capacity(f.calls.len());
+        for c in &f.calls {
+            let union_ok = !STD_METHODS.contains(&c.name.as_str());
+            let targets: Vec<usize> = if c.on_self {
+                f.qual
+                    .as_ref()
+                    .and_then(|q| by_qual.get(&format!("{q}::{}", c.name)))
+                    .or_else(|| by_name.get(c.name.as_str()).filter(|_| union_ok))
+                    .cloned()
+                    .unwrap_or_default()
+            } else if let Some(q) = c.qual.as_deref() {
+                // `Self::x` means the enclosing impl type; a std
+                // qualifier means the call never enters the crate
+                let q = if q == "Self" { f.qual.as_deref().unwrap_or(q) } else { q };
+                if STD_QUALS.contains(&q) {
+                    Vec::new()
+                } else {
+                    by_qual
+                        .get(&format!("{q}::{}", c.name))
+                        .or_else(|| by_name.get(c.name.as_str()).filter(|_| union_ok))
+                        .cloned()
+                        .unwrap_or_default()
+                }
+            } else if c.method && !union_ok {
+                Vec::new()
+            } else {
+                by_name.get(c.name.as_str()).cloned().unwrap_or_default()
+            };
+            if c.in_spawn {
+                spawn_roots.extend(targets.iter().copied());
+            } else {
+                for t in &targets {
+                    if !edges[caller].contains(t) {
+                        edges[caller].push(*t);
+                    }
+                }
+            }
+            per_call.push(targets);
+        }
+        call_targets.push(per_call);
+    }
+
+    // Seed the closures with each fn's own footprint.
+    let mut locks_out: Vec<BTreeMap<String, Site>> = vec![BTreeMap::new(); n];
+    let mut blocking_out: Vec<BTreeMap<&'static str, Site>> = vec![BTreeMap::new(); n];
+    for (id, &(fi, fj)) in fns.iter().enumerate() {
+        let m = &models[fi];
+        let f = &m.fns[fj];
+        // Temporary acquisitions count too: the callee releasing its
+        // guard at statement end does not help the caller, whose own
+        // guard is held across the whole call.
+        for a in &f.acqs {
+            if !a.in_spawn {
+                locks_out[id]
+                    .entry(a.name.clone())
+                    .or_insert(Site { file: m.rel.clone(), line: a.line });
+            }
+        }
+        for b in &f.blocking {
+            if !b.in_spawn {
+                blocking_out[id]
+                    .entry(b.what)
+                    .or_insert(Site { file: m.rel.clone(), line: b.line });
+            }
+        }
+    }
+
+    // Fixpoint: propagate callee footprints up. Both maps only grow
+    // and their key spaces are finite, so this terminates — cycles in
+    // the graph (recursion) simply stop adding entries.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for id in 0..n {
+            for ci in 0..edges[id].len() {
+                let callee = edges[id][ci];
+                if callee == id {
+                    continue;
+                }
+                let add: Vec<(String, Site)> = locks_out[callee]
+                    .iter()
+                    .filter(|(k, _)| !locks_out[id].contains_key(*k))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                for (k, v) in add {
+                    locks_out[id].insert(k, v);
+                    changed = true;
+                }
+                let add: Vec<(&'static str, Site)> = blocking_out[callee]
+                    .iter()
+                    .filter(|(k, _)| !blocking_out[id].contains_key(*k))
+                    .map(|(k, v)| (*k, v.clone()))
+                    .collect();
+                for (k, v) in add {
+                    blocking_out[id].insert(k, v);
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    // Everything reachable from a spawn closure runs off-thread.
+    let mut spawn_reachable = vec![false; n];
+    let mut stack = spawn_roots;
+    while let Some(id) = stack.pop() {
+        if spawn_reachable[id] {
+            continue;
+        }
+        spawn_reachable[id] = true;
+        stack.extend(edges[id].iter().copied());
+    }
+
+    CallGraph { fns, call_targets, locks_out, blocking_out, spawn_reachable, display, ids }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::model::extract;
+
+    fn graph_of(files: &[(&str, &str)]) -> (Vec<FileModel>, CallGraph) {
+        let models: Vec<FileModel> =
+            files.iter().map(|(rel, src)| extract(rel, &lex(src))).collect();
+        let g = build(&models);
+        (models, g)
+    }
+
+    #[test]
+    fn self_call_resolves_within_impl_type() {
+        let (_, g) = graph_of(&[(
+            "x/serve/a.rs",
+            "impl A { fn go(&self) { self.step(); } fn step(&self) {} }\n\
+             impl B { fn step(&self) {} }\n",
+        )]);
+        // A::go's one call resolves to exactly A::step, not B::step.
+        let targets = &g.call_targets[0][0];
+        assert_eq!(targets.len(), 1);
+        assert_eq!(g.display_name(targets[0]), "A::step");
+    }
+
+    #[test]
+    fn any_method_fallback_unions_all_candidates() {
+        let (_, g) = graph_of(&[(
+            "x/serve/a.rs",
+            "fn go(r: &R) { r.step(); }\n\
+             impl A { fn step(&self) {} }\n impl B { fn step(&self) {} }\n",
+        )]);
+        assert_eq!(g.call_targets[0][0].len(), 2);
+    }
+
+    #[test]
+    fn transitive_lock_closure_crosses_files() {
+        let (_, g) = graph_of(&[
+            ("x/serve/a.rs", "impl A { fn outer(&self) { self.helper(); } \
+                              fn helper(&self) { inner_fn(); } }\n"),
+            ("x/serve/b.rs", "fn inner_fn() { let g = lock_or_recover(&GLOBAL.wal); }\n"),
+        ]);
+        let outer = g.locks_out[0].clone();
+        let site = outer.get("wal").expect("wal reachable from outer");
+        assert_eq!(site.file, "x/serve/b.rs");
+        assert_eq!(site.line, 1);
+    }
+
+    #[test]
+    fn spawn_closure_calls_do_not_leak_into_caller_closure() {
+        let (_, g) = graph_of(&[(
+            "x/serve/a.rs",
+            "fn run() { thread::spawn(|| { worker(); }); }\n\
+             fn worker() { let g = lock_or_recover(&S.wal); q.recv(); }\n",
+        )]);
+        assert!(g.locks_out[0].is_empty(), "spawned lock must not count against run()");
+        assert!(g.blocking_out[0].is_empty());
+        assert!(g.spawn_reachable[1], "worker() runs off-thread");
+    }
+
+    #[test]
+    fn blocking_closure_reports_the_real_site() {
+        let (_, g) = graph_of(&[(
+            "x/store/a.rs",
+            "fn save(f: &File) { persist(f); }\n\
+             fn persist(f: &File) { f.sync_all(); }\n",
+        )]);
+        let site = g.blocking_out[0].get("sync_all").expect("sync_all reachable");
+        assert_eq!(site.line, 2);
+    }
+}

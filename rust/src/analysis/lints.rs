@@ -11,7 +11,12 @@
 //! `tests/analysis_fixtures/` classifies the same way the live tree
 //! does (`.../analysis_fixtures/serve/foo.rs` is "in `serve/`").
 
-use super::lexer::{LexedFile, Tok, TokKind};
+use super::graph::CallGraph;
+use super::lexer::{LexedFile, Tok};
+use super::model::{
+    self, acquisitions, binding_name, fn_spans, ident_at, is_int, is_punct, FileModel,
+    SpawnBinding, SpawnKind, LOCK_METHODS,
+};
 use super::order;
 
 /// One unsuppressed (or to-be-suppressed) lint hit.
@@ -28,6 +33,10 @@ pub struct Finding {
 pub const LINT_NAMES: &[&str] = &[
     "determinism",
     "lock-discipline",
+    "lock-order-transitive",
+    "blocking-under-lock",
+    "atomics-discipline",
+    "resource-leak",
     "panic-path",
     "framing-casts",
     "log-discipline",
@@ -74,6 +83,17 @@ fn log_scope(rel: &str) -> bool {
     included.iter().any(|d| rel.contains(d)) && !rel.contains("util/bench.rs")
 }
 
+/// The serving/durability/telemetry tier plus the worker pool: where
+/// the interprocedural (call-graph) lints report. Models are extracted
+/// crate-wide so closures see through every module; only findings in
+/// these files surface.
+fn interproc_scope(rel: &str) -> bool {
+    rel.contains("serve/")
+        || rel.contains("store/")
+        || rel.contains("obs/")
+        || rel.contains("util/pool.rs")
+}
+
 pub fn run_all(rel: &str, lx: &LexedFile) -> Vec<Finding> {
     let mut out = Vec::new();
     determinism(rel, lx, &mut out);
@@ -84,28 +104,6 @@ pub fn run_all(rel: &str, lx: &LexedFile) -> Vec<Finding> {
     io_durability(rel, lx, &mut out);
     obs_discipline(rel, lx, &mut out);
     out
-}
-
-fn ident_at<'a>(toks: &'a [Tok], i: usize) -> Option<&'a str> {
-    match toks.get(i).map(|t| &t.kind) {
-        Some(TokKind::Ident(s)) => Some(s.as_str()),
-        _ => None,
-    }
-}
-
-fn punct_at(toks: &[Tok], i: usize) -> Option<char> {
-    match toks.get(i).map(|t| &t.kind) {
-        Some(TokKind::Punct(c)) => Some(*c),
-        _ => None,
-    }
-}
-
-fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
-    punct_at(toks, i) == Some(c)
-}
-
-fn is_int(toks: &[Tok], i: usize) -> bool {
-    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Int))
 }
 
 // ---------------------------------------------------------------- determinism
@@ -177,30 +175,6 @@ fn determinism(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
     }
 }
 
-/// `toks[i]` is `HashMap`/`HashSet`. Return the name it is bound to, for
-/// `name: [path::]HashMap<...>` (field / typed let) and
-/// `let [mut] name = [path::]HashMap::new()` shapes.
-fn binding_name(toks: &[Tok], i: usize) -> Option<String> {
-    let mut j = i;
-    while j >= 3
-        && is_punct(toks, j - 1, ':')
-        && is_punct(toks, j - 2, ':')
-        && ident_at(toks, j - 3).is_some()
-    {
-        j -= 3;
-    }
-    if j == 0 {
-        return None;
-    }
-    if is_punct(toks, j - 1, ':') && j >= 2 && !is_punct(toks, j - 2, ':') {
-        return ident_at(toks, j - 2).map(str::to_string);
-    }
-    if is_punct(toks, j - 1, '=') && j >= 2 {
-        return ident_at(toks, j - 2).map(str::to_string);
-    }
-    None
-}
-
 /// Is `toks[i]` (the map name, possibly the tail of a dotted path) the
 /// iterated expression of a `for ... in` / preceded by `&`/`&mut`?
 fn preceded_by_in(toks: &[Tok], i: usize) -> bool {
@@ -217,9 +191,6 @@ fn preceded_by_in(toks: &[Tok], i: usize) -> bool {
 }
 
 // ------------------------------------------------------------ lock-discipline
-
-const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
-const RECOVER_HELPERS: &[&str] = &["lock_or_recover", "read_or_recover", "write_or_recover"];
 
 fn lock_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
     if !serve_store_scope(rel) {
@@ -291,7 +262,7 @@ fn lock_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
                 }
             }
             None => {
-                let mut held: Vec<&Acq> = Vec::new();
+                let mut held: Vec<&model::Acq> = Vec::new();
                 for a in &acqs {
                     if a.held && !held.iter().any(|h| h.name == a.name) {
                         held.push(a);
@@ -312,123 +283,6 @@ fn lock_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
             }
         }
     }
-}
-
-struct Acq {
-    name: String,
-    line: u32,
-    /// Let-bound guard (held to end of scope) vs a temporary dropped at
-    /// the end of the statement (`*self.x.lock()... = v`). Heuristic: a
-    /// `let [mut] name = <acquisition>` statement counts as held.
-    held: bool,
-}
-
-/// Token index ranges of non-test `fn` bodies.
-fn fn_spans(lx: &LexedFile) -> Vec<(usize, usize)> {
-    let toks = &lx.toks;
-    let mut spans = Vec::new();
-    let mut i = 0usize;
-    while i < toks.len() {
-        if ident_at(toks, i) == Some("fn") && !lx.is_test[i] {
-            let mut k = i + 1;
-            while k < toks.len() && !is_punct(toks, k, '{') && !is_punct(toks, k, ';') {
-                k += 1;
-            }
-            if k < toks.len() && is_punct(toks, k, '{') {
-                let open = k;
-                let mut depth = 0i32;
-                while k < toks.len() {
-                    if is_punct(toks, k, '{') {
-                        depth += 1;
-                    } else if is_punct(toks, k, '}') {
-                        depth -= 1;
-                        if depth == 0 {
-                            break;
-                        }
-                    }
-                    k += 1;
-                }
-                spans.push((open, k.min(toks.len())));
-            }
-        }
-        i += 1;
-    }
-    spans
-}
-
-fn acquisitions(toks: &[Tok], (open, close): (usize, usize)) -> Vec<Acq> {
-    let mut acqs = Vec::new();
-    for i in open..close {
-        // helper form: lock_or_recover(&self.buckets)
-        if ident_at(toks, i).is_some_and(|h| RECOVER_HELPERS.contains(&h))
-            && is_punct(toks, i + 1, '(')
-        {
-            let mut depth = 0i32;
-            let mut k = i + 1;
-            let mut last_ident: Option<&str> = None;
-            while k < close {
-                if is_punct(toks, k, '(') {
-                    depth += 1;
-                } else if is_punct(toks, k, ')') {
-                    depth -= 1;
-                    if depth == 0 {
-                        break;
-                    }
-                } else if let Some(id) = ident_at(toks, k) {
-                    last_ident = Some(id);
-                }
-                k += 1;
-            }
-            if let Some(name) = last_ident {
-                acqs.push(Acq {
-                    name: name.to_string(),
-                    line: toks[i].line,
-                    held: is_let_bound(toks, i),
-                });
-            }
-            continue;
-        }
-        // raw form: path.lock( / .read( / .write(
-        if is_punct(toks, i, '.')
-            && ident_at(toks, i + 1).is_some_and(|m| LOCK_METHODS.contains(&m))
-            && is_punct(toks, i + 2, '(')
-            && ident_at(toks, i - 1).is_some()
-        {
-            let name = ident_at(toks, i - 1).unwrap_or_default().to_string();
-            // walk back over the dotted path to the expression head
-            let mut head = i - 1;
-            while head >= 2 && is_punct(toks, head - 1, '.') && ident_at(toks, head - 2).is_some()
-            {
-                head -= 2;
-            }
-            acqs.push(Acq {
-                name,
-                line: toks[i].line,
-                held: is_let_bound(toks, head),
-            });
-        }
-    }
-    acqs
-}
-
-/// Does the expression starting at `toks[start]` sit directly on the
-/// right-hand side of a `let [mut] name = ...` statement?
-fn is_let_bound(toks: &[Tok], start: usize) -> bool {
-    if start < 3 || !is_punct(toks, start - 1, '=') {
-        return false;
-    }
-    let mut p = start - 2;
-    if ident_at(toks, p).is_none() {
-        return false;
-    }
-    p -= 1;
-    if ident_at(toks, p) == Some("mut") {
-        if p == 0 {
-            return false;
-        }
-        p -= 1;
-    }
-    ident_at(toks, p) == Some("let")
 }
 
 // ----------------------------------------------------------------- panic-path
@@ -634,6 +488,318 @@ fn obs_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
                          latency or an emitted line"
                     ),
                 });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- interprocedural pass
+
+/// The four call-graph lints. Models cover the whole crate; findings
+/// are attributed to the *caller's* file and line (the place a human
+/// would add the allow or restructure the code), with the reached
+/// site named in the message.
+pub fn run_interproc(models: &[FileModel], graph: &CallGraph) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (id, &(fi, fj)) in graph.fns.iter().enumerate() {
+        if !interproc_scope(&models[fi].rel) {
+            continue;
+        }
+        walk_fn(models, graph, id, fi, fj, &mut out);
+    }
+    atomics_discipline(models, graph, &mut out);
+    resource_leak(models, &mut out);
+    out
+}
+
+/// One event inside a fn body, ordered by token position.
+enum Ev<'a> {
+    Acq(&'a model::Acq),
+    Drop(&'a model::DropSite),
+    Block(&'a model::BlockingSite),
+    Call(usize),
+}
+
+/// Walk one fn body in token order, tracking the set of *declared*
+/// held guards, and report `lock-order-transitive` /
+/// `blocking-under-lock` findings at the sites where a held guard
+/// meets a reachable acquisition or a blocking call.
+fn walk_fn(
+    models: &[FileModel],
+    graph: &CallGraph,
+    id: usize,
+    fi: usize,
+    fj: usize,
+    out: &mut Vec<Finding>,
+) {
+    let m = &models[fi];
+    let f = &m.fns[fj];
+    let mut evs: Vec<(usize, Ev)> = Vec::new();
+    for a in &f.acqs {
+        if a.held && !a.in_spawn && order::global_idx(&a.name).is_some() {
+            evs.push((a.tok, Ev::Acq(a)));
+        }
+    }
+    for d in &f.drops {
+        evs.push((d.tok, Ev::Drop(d)));
+    }
+    for b in &f.blocking {
+        if !b.in_spawn {
+            evs.push((b.tok, Ev::Block(b)));
+        }
+    }
+    for (ci, c) in f.calls.iter().enumerate() {
+        if !c.in_spawn {
+            evs.push((c.tok, Ev::Call(ci)));
+        }
+    }
+    evs.sort_by_key(|(tok, _)| *tok);
+
+    // (lock name, global index, guard binding, acquisition line, scope end)
+    let mut held: Vec<(&str, usize, Option<&str>, u32, usize)> = Vec::new();
+    let mut seen: Vec<(u32, String)> = Vec::new(); // (line, dedup key)
+    for (tok, ev) in &evs {
+        // block-scoped guards (`{ let g = lock(..); ... }`) release at
+        // their closing brace, not at fn end
+        held.retain(|&(_, _, _, _, se)| se >= *tok);
+        match ev {
+            Ev::Acq(a) => {
+                let idx = order::global_idx(&a.name).unwrap_or(usize::MAX);
+                held.push((a.name.as_str(), idx, a.binding.as_deref(), a.line, a.scope_end));
+            }
+            Ev::Drop(d) => held.retain(|(_, _, b, _, _)| *b != Some(d.name.as_str())),
+            Ev::Block(b) => {
+                let Some((lock, _, _, aline, _)) = held.last() else { continue };
+                let key = (b.line, format!("local:{}", b.what));
+                if seen.contains(&key) {
+                    continue;
+                }
+                out.push(Finding {
+                    lint: "blocking-under-lock",
+                    file: m.rel.clone(),
+                    line: b.line,
+                    message: format!(
+                        "`{}` while `{lock}` (acquired line {aline}) is held — blocking \
+                         I/O under a declared lock stalls every waiter; move it after \
+                         the guard drops",
+                        b.what
+                    ),
+                });
+                seen.push(key);
+            }
+            Ev::Call(ci) => {
+                if held.is_empty() {
+                    continue;
+                }
+                let c = &f.calls[*ci];
+                for &t in &graph.call_targets[id][*ci] {
+                    if t == id {
+                        continue;
+                    }
+                    for (lock, site) in &graph.locks_out[t] {
+                        let Some(lidx) = order::global_idx(lock) else { continue };
+                        for &(hname, hidx, hbind, _, _) in &held {
+                            if lidx < hidx {
+                                let key = (c.line, format!("inv:{lock}:{hname}"));
+                                if seen.contains(&key) {
+                                    continue;
+                                }
+                                out.push(Finding {
+                                    lint: "lock-order-transitive",
+                                    file: m.rel.clone(),
+                                    line: c.line,
+                                    message: format!(
+                                        "call to `{}` acquires `{lock}` ({}:{}) while \
+                                         `{hname}` is held — `{lock}` precedes `{hname}` \
+                                         in analysis/order.rs GLOBAL_ORDER",
+                                        graph.display_name(t),
+                                        site.file,
+                                        site.line
+                                    ),
+                                });
+                                seen.push(key);
+                            } else if lidx == hidx {
+                                // a method invoked *on the guard itself*
+                                // (`wal.last_seq()` with `wal` the held
+                                // guard) runs on the already-locked value
+                                // and cannot re-acquire its own mutex; the
+                                // name-unioned callee that does lock is a
+                                // different fn
+                                if c.recv.is_some() && c.recv.as_deref() == hbind {
+                                    continue;
+                                }
+                                let key = (c.line, format!("re:{lock}"));
+                                if seen.contains(&key) {
+                                    continue;
+                                }
+                                out.push(Finding {
+                                    lint: "lock-order-transitive",
+                                    file: m.rel.clone(),
+                                    line: c.line,
+                                    message: format!(
+                                        "call to `{}` re-acquires `{lock}` ({}:{}) \
+                                         already held by the caller — self-deadlock on \
+                                         a non-reentrant lock",
+                                        graph.display_name(t),
+                                        site.file,
+                                        site.line
+                                    ),
+                                });
+                                seen.push(key);
+                            }
+                        }
+                    }
+                    let (hname, _, _, _, _) = held[held.len() - 1];
+                    for (what, site) in &graph.blocking_out[t] {
+                        let key = (c.line, format!("blk:{what}"));
+                        if seen.contains(&key) {
+                            continue;
+                        }
+                        out.push(Finding {
+                            lint: "blocking-under-lock",
+                            file: m.rel.clone(),
+                            line: c.line,
+                            message: format!(
+                                "call to `{}` reaches `{what}` ({}:{}) while `{hname}` \
+                                 is held — blocking I/O under a declared lock stalls \
+                                 every waiter",
+                                graph.display_name(t),
+                                site.file,
+                                site.line
+                            ),
+                        });
+                        seen.push(key);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `Ordering::Relaxed` on an `AtomicBool` that both the spawning side
+/// and a spawned thread touch carries no happens-before edge: the
+/// spawned thread can spin on a stale value past the store, or — worse
+/// — observe the flag without the writes the flag was supposed to
+/// publish. `compare_exchange_weak` outside a retry loop can fail
+/// spuriously even when the comparison holds.
+fn atomics_discipline(models: &[FileModel], graph: &CallGraph, out: &mut Vec<Finding>) {
+    // Group every op crate-wide by flag name; crossing is a global
+    // property (the flag may be stored in one module, polled in
+    // another).
+    let mut names: Vec<&str> = Vec::new();
+    for m in models {
+        for op in &m.atomic_ops {
+            if !names.contains(&op.name.as_str()) {
+                names.push(&op.name);
+            }
+        }
+    }
+    for name in names {
+        let mut spawn_side = false;
+        let mut main_side = false;
+        for (fi, m) in models.iter().enumerate() {
+            for op in m.atomic_ops.iter().filter(|o| o.name == name) {
+                let off_thread = op.in_spawn
+                    || op
+                        .fn_idx
+                        .is_some_and(|fj| graph.spawn_reachable[graph.id_of(fi, fj)]);
+                if off_thread {
+                    spawn_side = true;
+                } else {
+                    main_side = true;
+                }
+            }
+        }
+        if !(spawn_side && main_side) {
+            continue;
+        }
+        for m in models.iter().filter(|m| interproc_scope(&m.rel)) {
+            for op in m.atomic_ops.iter().filter(|o| o.name == name && o.relaxed) {
+                out.push(Finding {
+                    lint: "atomics-discipline",
+                    file: m.rel.clone(),
+                    line: op.line,
+                    message: format!(
+                        "`{name}.{}(Relaxed)` on a cross-thread AtomicBool flag — \
+                         Relaxed carries no happens-before edge across the spawn; \
+                         use Release for the store and Acquire for the load",
+                        op.op
+                    ),
+                });
+            }
+        }
+    }
+    for m in models.iter().filter(|m| interproc_scope(&m.rel)) {
+        for op in &m.atomic_ops {
+            if op.op == "compare_exchange_weak" && !op.in_loop {
+                out.push(Finding {
+                    lint: "atomics-discipline",
+                    file: m.rel.clone(),
+                    line: op.line,
+                    message: format!(
+                        "`{}.compare_exchange_weak` outside a retry loop — the weak \
+                         variant may fail spuriously even when the comparison holds; \
+                         loop on it or use compare_exchange",
+                        op.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Spawn handles that no path joins or stores. `thread::spawn` handles
+/// dropped on the floor detach the thread (its panics and its work are
+/// lost silently); a `Background` handle dropped at the spawn
+/// statement *joins immediately* (Drop joins), silently serializing
+/// what was meant to be concurrent. Scoped spawns are exempt — the
+/// scope joins them.
+fn resource_leak(models: &[FileModel], out: &mut Vec<Finding>) {
+    for m in models.iter().filter(|m| interproc_scope(&m.rel)) {
+        for f in &m.fns {
+            for s in &f.spawns {
+                if s.in_spawn || s.kind == SpawnKind::Scoped {
+                    continue;
+                }
+                match (&s.kind, &s.bound) {
+                    (SpawnKind::Thread, SpawnBinding::Discarded | SpawnBinding::Wildcard) => {
+                        out.push(Finding {
+                            lint: "resource-leak",
+                            file: m.rel.clone(),
+                            line: s.line,
+                            message: "thread::spawn handle discarded — the thread is \
+                                      detached and its panic/result is lost; bind the \
+                                      handle and join it (or store it for shutdown)"
+                                .to_string(),
+                        });
+                    }
+                    (SpawnKind::Thread, SpawnBinding::Named(name)) => {
+                        if !s.used_later {
+                            out.push(Finding {
+                                lint: "resource-leak",
+                                file: m.rel.clone(),
+                                line: s.line,
+                                message: format!(
+                                    "thread handle `{name}` is never joined or stored \
+                                     after the spawn — the thread detaches when the \
+                                     binding drops; join it before returning"
+                                ),
+                            });
+                        }
+                    }
+                    (SpawnKind::Background, SpawnBinding::Discarded | SpawnBinding::Wildcard) => {
+                        out.push(Finding {
+                            lint: "resource-leak",
+                            file: m.rel.clone(),
+                            line: s.line,
+                            message: "Background handle dropped at the spawn statement — \
+                                      Drop joins immediately, so the work runs serially; \
+                                      bind the handle for the concurrent section"
+                                .to_string(),
+                        });
+                    }
+                    _ => {}
+                }
             }
         }
     }

@@ -5,10 +5,12 @@
 //! any worker count), the typed-error discipline in `serve/`/`store/`,
 //! and the WAL/QPCK framing rules are all properties clippy cannot
 //! express. This module enforces them with a lightweight lexer
-//! ([`lexer`]) and token-sequence scanners ([`lints`]) — no `syn`, no
+//! ([`lexer`]), token-sequence scanners ([`lints`]), and — since the
+//! interprocedural pass — a per-file semantic model ([`model`]) joined
+//! into a crate-wide call graph ([`graph`]). No `syn`, no
 //! dependencies, fast enough to run as a blocking CI gate.
 //!
-//! ## Lints
+//! ## Intra-function lints
 //!
 //! - `determinism` — in `serve/`, `store/`, `coordinator/`: iteration
 //!   over `HashMap`/`HashSet` bindings; `Instant::now` /
@@ -31,6 +33,65 @@
 //! - `suppression` — everywhere: malformed `// analyze:` directives,
 //!   allows without a reason, unknown lint names.
 //!
+//! ## Interprocedural lints
+//!
+//! These run on the crate-wide call graph and report in `serve/`,
+//! `store/`, `obs/` and `util/pool.rs` (models are extracted
+//! everywhere so closures see through `util/`, `runtime/`, ...):
+//!
+//! - `lock-order-transitive` — the held-guard set is propagated
+//!   through the call graph: a call made while a declared guard is
+//!   held must not reach an acquisition that precedes (inversion) or
+//!   equals (self-deadlock) the held lock in
+//!   [`order::GLOBAL_ORDER`]. The intra-function `lock-discipline`
+//!   order check only sees same-body nesting; this lint covers the
+//!   call-boundary cases it cannot.
+//! - `blocking-under-lock` — a blocking call (`sync_all`/`sync_data`,
+//!   `write_all`, `recv`/`recv_timeout`, a no-arg `join`, `sleep`)
+//!   made or reached while any guard from `order.rs` is held.
+//! - `atomics-discipline` — `Ordering::Relaxed` on an `AtomicBool`
+//!   flag that is accessed both from spawned-thread code (inside a
+//!   spawn closure, or reachable from one) and from the spawning side;
+//!   `compare_exchange_weak` outside a retry loop.
+//! - `resource-leak` — `thread::spawn` handles that no path joins or
+//!   stores (the thread detaches, its panic is lost); `Background`
+//!   handles dropped at the spawn statement (Drop joins immediately,
+//!   silently serializing the work). Scoped spawns are exempt.
+//!
+//! ### Call-graph conservatism
+//!
+//! Resolution is by name with an **any-method fallback**: a
+//! `receiver.method(..)` whose receiver cannot be typed resolves to
+//! *every* crate fn named `method` (`self.method(..)` narrows to the
+//! enclosing impl type first, `Type::method(..)` to the qualified
+//! name). The fallback over-approximates — a finding can name a path
+//! the program never takes, answered with a reasoned
+//! `// analyze: allow` — and it misses a crate-local callee in exactly
+//! two carved-out cases (see [`graph`]): methods with ubiquitous std
+//! names (`get`, `len`, `send`, ...) and paths qualified by a std type
+//! or module (`Arc::new`) resolve to nothing instead of to every
+//! same-named crate fn, because unioning those buries the gate in
+//! false inversions. A crate method with a std name is still resolved
+//! precisely through `self.`/`Type::` call forms — only the
+//! opaque-receiver union skips it. Everything else the graph cannot
+//! prove absent stays an edge, so "no finding" means no reachable
+//! violation up to that documented union. Spawn-closure bodies are
+//! excluded from the spawning fn's footprint (they run on the new
+//! thread) and instead seed the spawn-reachability set the atomics
+//! lint uses.
+//!
+//! ## Baseline / ratchet workflow
+//!
+//! `repro analyze --baseline <file>` lets a new lint land blocking
+//! before the tree is fully clean: accepted findings live in a JSON
+//! baseline ([`baseline`]) keyed by line-insensitive fingerprints.
+//! New findings still fail; fixed findings leave stale entries, which
+//! are themselves findings until deleted — the debt can only shrink.
+//! `--write-baseline <file>` captures the current findings to start
+//! (or re-shrink) the file. An empty tree needs no baseline; this
+//! repo's gate runs without one and the flag exists for the next
+//! lint's rollout.
+//!
 //! ## Suppression
 //!
 //! A finding is suppressed by `// analyze: allow(<lint>) <reason>` on
@@ -40,10 +101,15 @@
 //!
 //! Test code (`#[cfg(test)]` / `#[test]` bodies) is exempt from every
 //! lint except `suppression`: unwraps and wall clocks are the test
-//! contract.
+//! contract. The fixture corpus under `tests/analysis_fixtures/` is
+//! excluded from directory walks for the same reason — fixtures are
+//! deliberate violations.
 
+pub mod baseline;
+pub mod graph;
 pub mod lexer;
 pub mod lints;
+pub mod model;
 pub mod order;
 
 pub use lints::{Finding, LINT_NAMES};
@@ -65,6 +131,8 @@ pub struct Report {
     /// Unsuppressed findings, sorted by (file, line, lint).
     pub findings: Vec<Finding>,
     pub suppressed: Vec<Suppressed>,
+    /// Findings accepted by a `--baseline` file (empty without one).
+    pub baselined: Vec<Suppressed>,
     pub files_scanned: usize,
 }
 
@@ -74,11 +142,44 @@ impl Report {
     }
 }
 
-/// Analyze one file's source text. `rel` is the path used both for
-/// reporting and for scope classification (normalized to `/`).
-pub fn analyze_source(rel: &str, source: &str) -> (Vec<Finding>, Vec<Suppressed>) {
-    let lx = lexer::lex(source);
-    let raw = lints::run_all(rel, &lx);
+/// The full pipeline over a set of in-memory sources analyzed as one
+/// crate: lex every file, run the per-file lints, extract the
+/// semantic models, build the joint call graph, run the
+/// interprocedural lints (findings land on the *caller's* file), then
+/// match each file's suppressions. Returns per-file
+/// `(findings, suppressed)` in raw pass order (unsorted).
+fn analyze_set(files: &[(String, String)]) -> Vec<(Vec<Finding>, Vec<Suppressed>)> {
+    let lexed: Vec<lexer::LexedFile> = files.iter().map(|(_, src)| lexer::lex(src)).collect();
+    let models: Vec<model::FileModel> = files
+        .iter()
+        .zip(&lexed)
+        .map(|((rel, _), lx)| model::extract(rel, lx))
+        .collect();
+    let g = graph::build(&models);
+    let mut raw: Vec<Vec<Finding>> = files
+        .iter()
+        .zip(&lexed)
+        .map(|((rel, _), lx)| lints::run_all(rel, lx))
+        .collect();
+    for f in lints::run_interproc(&models, &g) {
+        if let Some(i) = files.iter().position(|(rel, _)| *rel == f.file) {
+            raw[i].push(f);
+        }
+    }
+    files
+        .iter()
+        .zip(lexed.iter().zip(raw))
+        .map(|((rel, _), (lx, raw))| match_suppressions(rel, lx, raw))
+        .collect()
+}
+
+/// Directive hygiene + suppression matching for one file's raw
+/// findings.
+fn match_suppressions(
+    rel: &str,
+    lx: &lexer::LexedFile,
+    raw: Vec<Finding>,
+) -> (Vec<Finding>, Vec<Suppressed>) {
     let mut findings = Vec::new();
     let mut suppressed = Vec::new();
 
@@ -135,24 +236,22 @@ pub fn analyze_source(rel: &str, source: &str) -> (Vec<Finding>, Vec<Suppressed>
     (findings, suppressed)
 }
 
-/// Analyze `.rs` files under each path (files are taken as-is,
-/// directories walked recursively; `target/`, `vendor/`, and dot-dirs
-/// are skipped). Paths inside the report keep the caller's prefix.
-pub fn analyze_paths(paths: &[PathBuf]) -> std::io::Result<Report> {
-    let mut files = Vec::new();
-    for p in paths {
-        collect_rs(p, &mut files)?;
-    }
-    files.sort();
-    files.dedup();
-    let mut report = Report::default();
-    for f in &files {
-        let source = std::fs::read_to_string(f)?;
-        let rel = f.to_string_lossy().replace('\\', "/");
-        let (findings, suppressed) = analyze_source(&rel, &source);
+/// Analyze one file's source text. `rel` is the path used both for
+/// reporting and for scope classification (normalized to `/`). The
+/// interprocedural lints run over the single-file call graph — use
+/// [`analyze_sources`] / [`analyze_paths`] for cross-file resolution.
+pub fn analyze_source(rel: &str, source: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+    analyze_set(&[(rel.to_string(), source.to_string())])
+        .pop()
+        .unwrap_or_default()
+}
+
+/// Analyze a set of `(rel path, source)` pairs as one crate.
+pub fn analyze_sources(files: &[(String, String)]) -> Report {
+    let mut report = Report { files_scanned: files.len(), ..Report::default() };
+    for (findings, suppressed) in analyze_set(files) {
         report.findings.extend(findings);
         report.suppressed.extend(suppressed);
-        report.files_scanned += 1;
     }
     report
         .findings
@@ -160,7 +259,27 @@ pub fn analyze_paths(paths: &[PathBuf]) -> std::io::Result<Report> {
     report
         .suppressed
         .sort_by(|a, b| (&a.finding.file, a.finding.line).cmp(&(&b.finding.file, b.finding.line)));
-    Ok(report)
+    report
+}
+
+/// Analyze `.rs` files under each path (files are taken as-is,
+/// directories walked recursively; `target/`, `vendor/`, dot-dirs and
+/// `analysis_fixtures/` are skipped — fixtures are deliberate
+/// violations). Paths inside the report keep the caller's prefix.
+pub fn analyze_paths(paths: &[PathBuf]) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut sources = Vec::with_capacity(files.len());
+    for f in &files {
+        let source = std::fs::read_to_string(f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        sources.push((rel, source));
+    }
+    Ok(analyze_sources(&sources))
 }
 
 fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -175,7 +294,11 @@ fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
         let entry = entry?;
         let name = entry.file_name();
         let name = name.to_string_lossy();
-        if name.starts_with('.') || name == "target" || name == "vendor" {
+        if name.starts_with('.')
+            || name == "target"
+            || name == "vendor"
+            || name == "analysis_fixtures"
+        {
             continue;
         }
         collect_rs(&entry.path(), out)?;
@@ -196,6 +319,20 @@ pub fn counts(report: &Report) -> Vec<(&'static str, usize)> {
     out
 }
 
+fn summary_line(report: &Report) -> String {
+    let mut s = format!(
+        "{} finding(s), {} suppressed, {} file(s) scanned",
+        report.findings.len(),
+        report.suppressed.len(),
+        report.files_scanned
+    );
+    if !report.baselined.is_empty() {
+        s.push_str(&format!(", {} baselined", report.baselined.len()));
+    }
+    s.push('\n');
+    s
+}
+
 /// Human-readable rendering: one `file:line: [lint] message` per
 /// finding, then a summary block.
 pub fn render_text(report: &Report) -> String {
@@ -209,12 +346,7 @@ pub fn render_text(report: &Report) -> String {
     for (lint, n) in counts(report) {
         out.push_str(&format!("{lint}: {n}\n"));
     }
-    out.push_str(&format!(
-        "{} finding(s), {} suppressed, {} file(s) scanned\n",
-        report.findings.len(),
-        report.suppressed.len(),
-        report.files_scanned
-    ));
+    out.push_str(&summary_line(report));
     out
 }
 
@@ -227,30 +359,60 @@ fn finding_json(f: &Finding) -> Json {
     ])
 }
 
+fn suppressed_json(s: &Suppressed) -> Json {
+    let mut o = finding_json(&s.finding);
+    if let Json::Obj(map) = &mut o {
+        map.insert("reason".to_string(), s.reason.as_str().into());
+    }
+    o
+}
+
 /// Machine-readable rendering for the CI gate.
 pub fn render_json(report: &Report) -> String {
     let findings: Vec<Json> = report.findings.iter().map(finding_json).collect();
-    let suppressed: Vec<Json> = report
-        .suppressed
-        .iter()
-        .map(|s| {
-            let mut o = finding_json(&s.finding);
-            if let Json::Obj(map) = &mut o {
-                map.insert("reason".to_string(), s.reason.as_str().into());
-            }
-            o
-        })
-        .collect();
+    let suppressed: Vec<Json> = report.suppressed.iter().map(suppressed_json).collect();
     let count_pairs: Vec<(&str, Json)> =
         counts(report).into_iter().map(|(l, n)| (l, Json::from(n))).collect();
-    json::obj(vec![
+    let mut fields = vec![
         ("version", 1usize.into()),
         ("files_scanned", report.files_scanned.into()),
         ("findings", Json::Arr(findings)),
         ("suppressed", Json::Arr(suppressed)),
         ("counts", json::obj(count_pairs)),
-    ])
-    .dump()
+    ];
+    if !report.baselined.is_empty() {
+        let baselined: Vec<Json> = report.baselined.iter().map(suppressed_json).collect();
+        fields.push(("baselined", Json::Arr(baselined)));
+    }
+    json::obj(fields).dump()
+}
+
+/// Escape for a GitHub workflow-command *message* (after the `::`).
+fn gh_data(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
+}
+
+/// Escape for a workflow-command *property* value (`file=`, `title=`).
+fn gh_prop(s: &str) -> String {
+    gh_data(s).replace(':', "%3A").replace(',', "%2C")
+}
+
+/// GitHub Actions annotation rendering: one `::error` workflow command
+/// per finding so findings show inline on the PR diff, then the plain
+/// summary line (annotation-free, so it only lands in the job log).
+pub fn render_github(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "::error file={},line={},title={}::{}\n",
+            gh_prop(&f.file),
+            f.line,
+            gh_prop(&format!("analyze: {}", f.lint)),
+            gh_data(&f.message)
+        ));
+    }
+    out.push_str(&summary_line(report));
+    out
 }
 
 #[cfg(test)]
@@ -303,7 +465,7 @@ mod tests {
     fn json_schema_round_trips() {
         let src = "fn f(v: &[u8]) -> u8 { v[0] }\n";
         let (findings, suppressed) = analyze_source("x/store/a.rs", src);
-        let report = Report { findings, suppressed, files_scanned: 1 };
+        let report = Report { findings, suppressed, files_scanned: 1, ..Report::default() };
         let parsed = Json::parse(&render_json(&report)).unwrap();
         assert_eq!(parsed.get("version").unwrap().as_usize().unwrap(), 1);
         assert_eq!(parsed.get("files_scanned").unwrap().as_usize().unwrap(), 1);
@@ -322,9 +484,55 @@ mod tests {
         // wall-clock read here renders exactly one anchored finding
         let src = "fn f() { let t = Instant::now(); }\n";
         let (findings, suppressed) = analyze_source("x/store/a.rs", src);
-        let report = Report { findings, suppressed, files_scanned: 1 };
+        let report = Report { findings, suppressed, files_scanned: 1, ..Report::default() };
         let text = render_text(&report);
         assert!(text.contains("x/store/a.rs:1: [determinism]"), "{text}");
         assert!(text.contains("1 finding(s), 0 suppressed, 1 file(s) scanned"), "{text}");
+    }
+
+    #[test]
+    fn github_render_escapes_and_annotates() {
+        let report = Report {
+            findings: vec![Finding {
+                lint: "panic-path",
+                file: "src/serve/a.rs".to_string(),
+                line: 7,
+                message: "50% done\nnext".to_string(),
+            }],
+            files_scanned: 1,
+            ..Report::default()
+        };
+        let gh = render_github(&report);
+        assert!(
+            gh.contains("::error file=src/serve/a.rs,line=7,title=analyze%3A panic-path::"),
+            "{gh}"
+        );
+        assert!(gh.contains("50%25 done%0Anext"), "{gh}");
+        assert!(gh.contains("1 finding(s)"), "{gh}");
+    }
+
+    #[test]
+    fn cross_file_lock_inversion_found_by_multi_file_analysis() {
+        // File A holds `tenants` and calls into file B, which acquires
+        // `inner` — `inner` precedes `tenants` in GLOBAL_ORDER, so the
+        // pair is an inversion only visible across the call boundary.
+        let a = "impl Hub { fn rebalance(&self) {\n\
+                 let tenants = write_or_recover(&self.tenants);\n\
+                 purge_mat_cache(&self.cache);\n} }\n";
+        let b = "pub fn purge_mat_cache(c: &Cache) {\n\
+                 let inner = lock_or_recover(&c.inner);\n}\n";
+        let report = analyze_sources(&[
+            ("x/serve/hub.rs".to_string(), a.to_string()),
+            ("x/serve/cache_util.rs".to_string(), b.to_string()),
+        ]);
+        let inv: Vec<&Finding> =
+            report.findings.iter().filter(|f| f.lint == "lock-order-transitive").collect();
+        assert_eq!(inv.len(), 1, "{:?}", report.findings);
+        assert_eq!(inv[0].file, "x/serve/hub.rs");
+        assert_eq!(inv[0].line, 3);
+        assert!(inv[0].message.contains("cache_util.rs:2"), "{}", inv[0].message);
+        // single-file analysis of A alone cannot see it
+        let (solo, _) = analyze_source("x/serve/hub.rs", a);
+        assert!(!solo.iter().any(|f| f.lint == "lock-order-transitive"), "{solo:?}");
     }
 }

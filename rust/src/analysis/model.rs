@@ -1,0 +1,853 @@
+//! Per-file item extraction: the semantic model the interprocedural
+//! lints run on.
+//!
+//! [`super::lexer`] gives a flat token stream; this module lifts it to
+//! a per-file list of function definitions, each carrying its call
+//! sites, lock-acquisition sites, blocking-call sites and spawn sites.
+//! Nothing here parses Rust — the extraction is the same
+//! token-sequence pattern matching the intra-function lints use, which
+//! keeps the two layers honest with each other: a shape the lints can
+//! see is a shape the model records, and vice versa.
+//!
+//! Conservatism contract (see [`super::graph`] for how resolution uses
+//! it): the model errs toward *recording* — an unresolvable receiver
+//! still records the method name, a dotted path still records its head
+//! — and leaves precision to the resolver. The one deliberate
+//! *exclusion*: everything inside a spawn closure's argument list is
+//! flagged `in_spawn` and kept out of the spawning function's own
+//! lock/blocking footprint, because those tokens execute on the new
+//! thread, not under the caller's guards.
+
+use super::lexer::{LexedFile, Tok, TokKind};
+
+// ---------------------------------------------------------- token helpers
+
+pub(crate) fn ident_at<'a>(toks: &'a [Tok], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+pub(crate) fn punct_at(toks: &[Tok], i: usize) -> Option<char> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Punct(c)) => Some(*c),
+        _ => None,
+    }
+}
+
+pub(crate) fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
+    punct_at(toks, i) == Some(c)
+}
+
+pub(crate) fn is_int(toks: &[Tok], i: usize) -> bool {
+    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Int))
+}
+
+pub(crate) const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
+pub(crate) const RECOVER_HELPERS: &[&str] =
+    &["lock_or_recover", "read_or_recover", "write_or_recover"];
+
+/// Methods that can block the calling thread: file durability calls,
+/// bulk writes, channel receives, thread joins and sleeps. `.join()`
+/// and `.recv()` only count with empty argument lists so `Vec::join`
+/// on strings and `recv_timeout`-style shims stay out; `recv_timeout`
+/// is listed explicitly (a bounded block is still a block under a
+/// lock).
+pub(crate) const BLOCKING_METHODS: &[&str] =
+    &["sync_all", "sync_data", "write_all", "recv", "recv_timeout", "join", "sleep"];
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "in", "as", "fn", "let", "move",
+    "ref", "mut", "pub", "use", "mod", "impl", "where", "break", "continue",
+];
+
+// ---------------------------------------------------------------- the model
+
+/// One lock acquisition site.
+pub struct Acq {
+    pub name: String,
+    pub line: u32,
+    /// Let-bound guard (held to end of scope) vs a temporary dropped at
+    /// the end of the statement (`*self.x.lock()... = v`). Heuristic: a
+    /// `let [mut] name = <acquisition>...` statement counts as held —
+    /// deliberately including chains like
+    /// `let x = lock_or_recover(&m).clone();` whose guard really dies
+    /// at the semicolon: the acquisition *order* discipline applies to
+    /// those sites all the same, and a later refactor that extends the
+    /// binding's life must not be what first surfaces an inversion.
+    /// Scope the statement in a block (or `drop` the binding) where the
+    /// over-approximation pinches.
+    pub held: bool,
+    pub tok: usize,
+    /// Inside a spawn closure — executes on the new thread.
+    pub in_spawn: bool,
+    /// The guard's binding name when held (`let guard = ...`), so an
+    /// explicit `drop(guard)` can end the hold early.
+    pub binding: Option<String>,
+    /// Token index of the closing brace of the innermost block the
+    /// acquisition lives in (the fn's own close when unnested). A held
+    /// guard is released here — `{ let g = lock(..); ... }` scoping is
+    /// the idiomatic way to bound a critical section, and the walk must
+    /// honor it or everything after the block reports phantom holds.
+    pub scope_end: usize,
+}
+
+/// One call site inside a fn body.
+pub struct CallSite {
+    pub name: String,
+    /// `Type::name(...)` — the path segment before the final `::`.
+    pub qual: Option<String>,
+    /// `.name(...)` receiver call.
+    pub method: bool,
+    /// Method call whose receiver is literally `self`.
+    pub on_self: bool,
+    /// Receiver ident for simple method calls (`guard.last_seq()` →
+    /// `Some("guard")`); `None` for free/qualified calls and chained
+    /// receivers (`a.b().c()`). Lets the interprocedural walk tell a
+    /// call *on a held guard* — which operates on the already-locked
+    /// value and cannot re-acquire its mutex — from a call that could.
+    pub recv: Option<String>,
+    pub line: u32,
+    pub tok: usize,
+    pub in_spawn: bool,
+}
+
+/// A call that can block the current thread (see [`BLOCKING_METHODS`]).
+pub struct BlockingSite {
+    pub what: &'static str,
+    pub line: u32,
+    pub tok: usize,
+    pub in_spawn: bool,
+}
+
+#[derive(PartialEq, Clone, Copy, Debug)]
+pub enum SpawnKind {
+    /// `thread::spawn` — a detached-unless-joined OS thread.
+    Thread,
+    /// `Background::spawn` — joined on drop.
+    Background,
+    /// `scope.spawn(..)` — joined when the scope ends.
+    Scoped,
+}
+
+/// What the spawn expression's handle is bound to.
+#[derive(PartialEq, Debug)]
+pub enum SpawnBinding {
+    /// Statement position — the handle is dropped immediately.
+    Discarded,
+    /// `let _ = ...` — explicitly dropped.
+    Wildcard,
+    /// `let name = ...`.
+    Named(String),
+    /// Part of a larger expression (pushed, collected, returned).
+    Expr,
+}
+
+pub struct SpawnSite {
+    pub kind: SpawnKind,
+    pub line: u32,
+    pub tok: usize,
+    /// Token range of the spawn's argument list (the closure body).
+    pub args: (usize, usize),
+    pub bound: SpawnBinding,
+    pub in_spawn: bool,
+    /// For a named binding: the handle's name appears again after the
+    /// spawn expression (joined, pushed, returned, ...).
+    pub used_later: bool,
+}
+
+/// `drop(name)` — ends the hold of guard `name`.
+pub struct DropSite {
+    pub name: String,
+    pub tok: usize,
+}
+
+pub struct FnDef {
+    pub name: String,
+    /// Enclosing `impl` type, when the fn is a method.
+    pub qual: Option<String>,
+    pub line: u32,
+    /// Token range of the body (open brace ..= close brace).
+    pub span: (usize, usize),
+    pub calls: Vec<CallSite>,
+    pub acqs: Vec<Acq>,
+    pub blocking: Vec<BlockingSite>,
+    pub spawns: Vec<SpawnSite>,
+    pub drops: Vec<DropSite>,
+}
+
+/// An operation on a named atomic flag.
+pub struct AtomicSite {
+    pub name: String,
+    pub op: String,
+    pub relaxed: bool,
+    pub line: u32,
+    pub tok: usize,
+    pub in_spawn: bool,
+    /// Index into [`FileModel::fns`], when inside a fn body.
+    pub fn_idx: Option<usize>,
+    /// For `compare_exchange_weak`: a `loop`/`while` appears earlier in
+    /// the same fn (the weak variant may fail spuriously and must be
+    /// retried).
+    pub in_loop: bool,
+}
+
+pub struct FileModel {
+    pub rel: String,
+    pub fns: Vec<FnDef>,
+    /// Names bound (field, let, static) to `AtomicBool` in this file.
+    pub atomic_bools: Vec<String>,
+    pub atomic_ops: Vec<AtomicSite>,
+}
+
+// ----------------------------------------------------------- shared shapes
+
+/// Token index ranges of non-test `fn` bodies.
+pub(crate) fn fn_spans(lx: &LexedFile) -> Vec<(usize, usize)> {
+    let toks = &lx.toks;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) == Some("fn") && !lx.is_test[i] {
+            let mut k = i + 1;
+            while k < toks.len() && !is_punct(toks, k, '{') && !is_punct(toks, k, ';') {
+                k += 1;
+            }
+            if k < toks.len() && is_punct(toks, k, '{') {
+                let open = k;
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    if is_punct(toks, k, '{') {
+                        depth += 1;
+                    } else if is_punct(toks, k, '}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                spans.push((open, k.min(toks.len())));
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+pub(crate) fn acquisitions(toks: &[Tok], (open, close): (usize, usize)) -> Vec<Acq> {
+    let mut acqs = Vec::new();
+    for i in open..close {
+        // helper form: lock_or_recover(&self.buckets)
+        if ident_at(toks, i).is_some_and(|h| RECOVER_HELPERS.contains(&h))
+            && is_punct(toks, i + 1, '(')
+        {
+            let mut depth = 0i32;
+            let mut k = i + 1;
+            let mut last_ident: Option<&str> = None;
+            while k < close {
+                if is_punct(toks, k, '(') {
+                    depth += 1;
+                } else if is_punct(toks, k, ')') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if let Some(id) = ident_at(toks, k) {
+                    last_ident = Some(id);
+                }
+                k += 1;
+            }
+            if let Some(name) = last_ident {
+                let held = is_let_bound(toks, i);
+                acqs.push(Acq {
+                    name: name.to_string(),
+                    line: toks[i].line,
+                    held,
+                    tok: i,
+                    in_spawn: false,
+                    binding: if held { ident_at(toks, i - 2).map(str::to_string) } else { None },
+                    scope_end: scope_end(toks, i, close),
+                });
+            }
+            continue;
+        }
+        // raw form: path.lock() / .read() / .write() — the empty parens
+        // are load-bearing: `w.write(buf)` / `r.read(&mut buf)` are
+        // std::io calls, not lock acquisitions
+        if is_punct(toks, i, '.')
+            && ident_at(toks, i + 1).is_some_and(|m| LOCK_METHODS.contains(&m))
+            && is_punct(toks, i + 2, '(')
+            && is_punct(toks, i + 3, ')')
+            && i >= 1
+            && ident_at(toks, i - 1).is_some()
+        {
+            let name = ident_at(toks, i - 1).unwrap_or_default().to_string();
+            // walk back over the dotted path to the expression head
+            let mut head = i - 1;
+            while head >= 2 && is_punct(toks, head - 1, '.') && ident_at(toks, head - 2).is_some()
+            {
+                head -= 2;
+            }
+            let held = is_let_bound(toks, head);
+            acqs.push(Acq {
+                name,
+                line: toks[i].line,
+                held,
+                tok: i,
+                in_spawn: false,
+                binding: if held { ident_at(toks, head - 2).map(str::to_string) } else { None },
+                scope_end: scope_end(toks, i, close),
+            });
+        }
+    }
+    acqs
+}
+
+/// The token index where a guard acquired at `from` goes out of scope:
+/// the first `}` that closes a block opened *before* `from`, bounded by
+/// the fn's own closing brace.
+fn scope_end(toks: &[Tok], from: usize, close: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = from;
+    while k < close {
+        if is_punct(toks, k, '{') {
+            depth += 1;
+        } else if is_punct(toks, k, '}') {
+            depth -= 1;
+            if depth < 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    close
+}
+
+/// Does the expression starting at `toks[start]` sit directly on the
+/// right-hand side of a `let [mut] name = ...` statement?
+pub(crate) fn is_let_bound(toks: &[Tok], start: usize) -> bool {
+    if start < 3 || !is_punct(toks, start - 1, '=') {
+        return false;
+    }
+    let mut p = start - 2;
+    if ident_at(toks, p).is_none() {
+        return false;
+    }
+    p -= 1;
+    if ident_at(toks, p) == Some("mut") {
+        if p == 0 {
+            return false;
+        }
+        p -= 1;
+    }
+    ident_at(toks, p) == Some("let")
+}
+
+/// `toks[i]` is a type name (`HashMap`, `AtomicBool`, ...). Return the
+/// name it is bound to, for `name: [path::]Type<...>` (field / typed
+/// let / static) and `let [mut] name = [path::]Type::new()` shapes.
+pub(crate) fn binding_name(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i;
+    while j >= 3
+        && is_punct(toks, j - 1, ':')
+        && is_punct(toks, j - 2, ':')
+        && ident_at(toks, j - 3).is_some()
+    {
+        j -= 3;
+    }
+    if j == 0 {
+        return None;
+    }
+    if is_punct(toks, j - 1, ':') && j >= 2 && !is_punct(toks, j - 2, ':') {
+        return ident_at(toks, j - 2).map(str::to_string);
+    }
+    if is_punct(toks, j - 1, '=') && j >= 2 {
+        return ident_at(toks, j - 2).map(str::to_string);
+    }
+    None
+}
+
+// --------------------------------------------------------------- extraction
+
+/// Extract the semantic model for one lexed file.
+pub fn extract(rel: &str, lx: &LexedFile) -> FileModel {
+    let toks = &lx.toks;
+    let impls = impl_ranges(lx);
+    let mut fns = Vec::new();
+    for (open, close) in fn_spans(lx) {
+        // fn name: the ident right after the `fn` keyword preceding the
+        // open brace. Walk back from the brace to the nearest `fn` that
+        // is followed by a name — a bare `fn(` in a fn-pointer
+        // parameter type is not the definition keyword.
+        let mut f = open;
+        while f > 0 && !(ident_at(toks, f) == Some("fn") && ident_at(toks, f + 1).is_some()) {
+            f -= 1;
+        }
+        let Some(name) = ident_at(toks, f + 1) else { continue };
+        let qual = impls
+            .iter()
+            .find(|(o, c, _)| f > *o && f < *c)
+            .map(|(_, _, ty)| ty.clone());
+        let spawns = spawn_sites(toks, (open, close));
+        let in_spawn = |tok: usize| spawns.iter().any(|s| tok > s.args.0 && tok < s.args.1);
+        let mut acqs = acquisitions(toks, (open, close));
+        for a in &mut acqs {
+            a.in_spawn = in_spawn(a.tok);
+        }
+        let calls = call_sites(toks, (open, close), &in_spawn);
+        let blocking = blocking_sites(toks, (open, close), &in_spawn);
+        let drops = drop_sites(toks, (open, close));
+        fns.push(FnDef {
+            name: name.to_string(),
+            qual,
+            line: toks[f].line,
+            span: (open, close),
+            calls,
+            acqs,
+            blocking,
+            spawns,
+            drops,
+        });
+    }
+    let (atomic_bools, atomic_ops) = atomics(lx, &fns);
+    FileModel { rel: rel.to_string(), fns, atomic_bools, atomic_ops }
+}
+
+/// `(open, close, type)` token ranges of `impl` blocks, used to qualify
+/// method names. The type is the last segment of the path after `for`
+/// (trait impls) or after `impl` (inherent impls).
+fn impl_ranges(lx: &LexedFile) -> Vec<(usize, usize, String)> {
+    let toks = &lx.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) != Some("impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        // skip the generic parameter list, if any
+        if is_punct(toks, j, '<') {
+            let mut depth = 0i32;
+            while j < toks.len() {
+                if is_punct(toks, j, '<') {
+                    depth += 1;
+                } else if is_punct(toks, j, '>') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // scan the header up to `{`; remember the last path segment
+        // seen after `impl` and, separately, after `for`.
+        let mut first: Option<String> = None;
+        let mut after_for: Option<String> = None;
+        let mut saw_for = false;
+        let mut depth = 0i32; // angle-bracket depth: ignore generic args
+        while j < toks.len() && !is_punct(toks, j, '{') && !is_punct(toks, j, ';') {
+            if is_punct(toks, j, '<') {
+                depth += 1;
+            } else if is_punct(toks, j, '>') {
+                depth -= 1;
+            } else if depth == 0 {
+                if ident_at(toks, j) == Some("for") {
+                    saw_for = true;
+                } else if ident_at(toks, j) == Some("where") {
+                    break;
+                } else if let Some(id) = ident_at(toks, j) {
+                    if id != "mut" && id != "dyn" {
+                        // take the first path's segments; a later
+                        // segment (preceded by `::`) overwrites so the
+                        // final one wins (`fmt::Display` -> `Display`)
+                        if saw_for {
+                            if after_for.is_none() || is_punct(toks, j - 1, ':') {
+                                after_for = Some(id.to_string());
+                            }
+                        } else if first.is_none() || is_punct(toks, j - 1, ':') {
+                            first = Some(id.to_string());
+                        }
+                    }
+                }
+            }
+            j += 1;
+        }
+        if j >= toks.len() || !is_punct(toks, j, '{') {
+            i += 1;
+            continue;
+        }
+        let open = j;
+        let mut brace = 0i32;
+        while j < toks.len() {
+            if is_punct(toks, j, '{') {
+                brace += 1;
+            } else if is_punct(toks, j, '}') {
+                brace -= 1;
+                if brace == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if let Some(ty) = after_for.or(first) {
+            out.push((open, j.min(toks.len()), ty));
+        }
+        i = open + 1;
+    }
+    out
+}
+
+fn call_sites(
+    toks: &[Tok],
+    (open, close): (usize, usize),
+    in_spawn: &dyn Fn(usize) -> bool,
+) -> Vec<CallSite> {
+    let mut out = Vec::new();
+    for i in open..close {
+        let Some(name) = ident_at(toks, i) else { continue };
+        if !is_punct(toks, i + 1, '(') || KEYWORDS.contains(&name) {
+            continue;
+        }
+        // lock sites, blocking sites and spawn sites are modeled
+        // separately; don't double-record them as calls.
+        if RECOVER_HELPERS.contains(&name) || name == "spawn" || name == "drop" {
+            continue;
+        }
+        let method = i >= 1 && is_punct(toks, i - 1, '.');
+        if method && (LOCK_METHODS.contains(&name) || BLOCKING_METHODS.contains(&name)) {
+            continue;
+        }
+        let qual = if !method
+            && i >= 3
+            && is_punct(toks, i - 1, ':')
+            && is_punct(toks, i - 2, ':')
+            && ident_at(toks, i - 3).is_some()
+        {
+            ident_at(toks, i - 3).map(str::to_string)
+        } else {
+            None
+        };
+        let on_self = method && i >= 2 && ident_at(toks, i - 2) == Some("self");
+        let recv = if method && !on_self {
+            ident_at(toks, i - 2).map(str::to_string)
+        } else {
+            None
+        };
+        out.push(CallSite {
+            name: name.to_string(),
+            qual,
+            method,
+            on_self,
+            recv,
+            line: toks[i].line,
+            tok: i,
+            in_spawn: in_spawn(i),
+        });
+    }
+    out
+}
+
+fn blocking_sites(
+    toks: &[Tok],
+    (open, close): (usize, usize),
+    in_spawn: &dyn Fn(usize) -> bool,
+) -> Vec<BlockingSite> {
+    let mut out = Vec::new();
+    for i in open..close {
+        let Some(name) = ident_at(toks, i) else { continue };
+        let Some(what) = BLOCKING_METHODS.iter().find(|m| **m == name) else { continue };
+        if !is_punct(toks, i + 1, '(') {
+            continue;
+        }
+        let method = i >= 1 && is_punct(toks, i - 1, '.');
+        // `sleep` is a free/qualified call (thread::sleep); the rest
+        // are methods.
+        if name != "sleep" && !method {
+            continue;
+        }
+        // `.join()` / `.recv()` must be no-arg: `sep.join(parts)` is
+        // string joining, not a thread join.
+        if (name == "join" || name == "recv") && !is_punct(toks, i + 2, ')') {
+            continue;
+        }
+        out.push(BlockingSite { what, line: toks[i].line, tok: i, in_spawn: in_spawn(i) });
+    }
+    out
+}
+
+fn spawn_sites(toks: &[Tok], (open, close): (usize, usize)) -> Vec<SpawnSite> {
+    let mut out: Vec<SpawnSite> = Vec::new();
+    for i in open..close {
+        if ident_at(toks, i) != Some("spawn") || !is_punct(toks, i + 1, '(') {
+            continue;
+        }
+        let method = i >= 1 && is_punct(toks, i - 1, '.');
+        let qual = if !method
+            && i >= 3
+            && is_punct(toks, i - 1, ':')
+            && is_punct(toks, i - 2, ':')
+            && ident_at(toks, i - 3).is_some()
+        {
+            ident_at(toks, i - 3)
+        } else {
+            None
+        };
+        let kind = match qual {
+            Some("thread") => SpawnKind::Thread,
+            Some(_) => SpawnKind::Background,
+            None if method => SpawnKind::Scoped,
+            None => continue,
+        };
+        // argument-list token range
+        let mut depth = 0i32;
+        let mut k = i + 1;
+        while k < close {
+            if is_punct(toks, k, '(') {
+                depth += 1;
+            } else if is_punct(toks, k, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let args = (i + 1, k);
+        // expression head: walk back over the `a::b::spawn` path
+        let mut head = i;
+        while head >= 3
+            && is_punct(toks, head - 1, ':')
+            && is_punct(toks, head - 2, ':')
+            && ident_at(toks, head - 3).is_some()
+        {
+            head -= 3;
+        }
+        if method && head >= 2 && ident_at(toks, head - 2).is_some() {
+            head -= 2; // receiver ident
+        }
+        let bound = if head == 0 {
+            SpawnBinding::Discarded
+        } else if is_punct(toks, head - 1, ';')
+            || is_punct(toks, head - 1, '{')
+            || is_punct(toks, head - 1, '}')
+        {
+            SpawnBinding::Discarded
+        } else if is_let_bound(toks, head) {
+            let name = ident_at(toks, head - 2).unwrap_or("_");
+            if name == "_" {
+                SpawnBinding::Wildcard
+            } else {
+                SpawnBinding::Named(name.to_string())
+            }
+        } else if head >= 2 && is_punct(toks, head - 1, '=') && ident_at(toks, head - 2) == Some("_")
+        {
+            SpawnBinding::Wildcard
+        } else {
+            SpawnBinding::Expr
+        };
+        let used_later = match &bound {
+            SpawnBinding::Named(name) => {
+                (args.1..close).any(|k| ident_at(toks, k) == Some(name.as_str()))
+            }
+            _ => false,
+        };
+        let in_spawn = out.iter().any(|s| i > s.args.0 && i < s.args.1);
+        out.push(SpawnSite { kind, line: toks[i].line, tok: i, args, bound, in_spawn, used_later });
+    }
+    out
+}
+
+fn drop_sites(toks: &[Tok], (open, close): (usize, usize)) -> Vec<DropSite> {
+    let mut out = Vec::new();
+    for i in open..close {
+        if ident_at(toks, i) == Some("drop")
+            && is_punct(toks, i + 1, '(')
+            && ident_at(toks, i + 2).is_some()
+            && is_punct(toks, i + 3, ')')
+        {
+            out.push(DropSite { name: ident_at(toks, i + 2).unwrap().to_string(), tok: i });
+        }
+    }
+    out
+}
+
+/// Collect `AtomicBool` binding names and all operations on them.
+/// Restricted to `AtomicBool` deliberately: boolean flags are the
+/// cross-thread signaling shape where `Relaxed` is a bug, while
+/// `Relaxed` on `AtomicU64` counters is this repo's sanctioned idiom.
+fn atomics(lx: &LexedFile, fns: &[FnDef]) -> (Vec<String>, Vec<AtomicSite>) {
+    let toks = &lx.toks;
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        if ident_at(toks, i) == Some("AtomicBool") {
+            if let Some(name) = binding_name(toks, i) {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    const ATOMIC_OPS: &[&str] = &[
+        "load", "store", "swap", "fetch_and", "fetch_or", "fetch_xor", "compare_exchange",
+        "compare_exchange_weak",
+    ];
+    let mut ops = Vec::new();
+    for i in 0..toks.len() {
+        if lx.is_test[i] {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i).filter(|n| names.iter().any(|x| x == *n)) else {
+            continue;
+        };
+        if !is_punct(toks, i + 1, '.') {
+            continue;
+        }
+        let Some(op) = ident_at(toks, i + 2).filter(|o| ATOMIC_OPS.contains(o)) else {
+            continue;
+        };
+        if !is_punct(toks, i + 3, '(') {
+            continue;
+        }
+        // scan the argument list for an `Ordering::Relaxed`
+        let mut depth = 0i32;
+        let mut k = i + 3;
+        let mut relaxed = false;
+        while k < toks.len() {
+            if is_punct(toks, k, '(') {
+                depth += 1;
+            } else if is_punct(toks, k, ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if ident_at(toks, k) == Some("Relaxed") {
+                relaxed = true;
+            }
+            k += 1;
+        }
+        let fn_idx = fns.iter().position(|f| i > f.span.0 && i < f.span.1);
+        let in_spawn = fn_idx.is_some_and(|fi| {
+            fns[fi].spawns.iter().any(|s| i > s.args.0 && i < s.args.1)
+        });
+        let in_loop = fn_idx.is_some_and(|fi| {
+            (fns[fi].span.0..i)
+                .any(|k| ident_at(toks, k).is_some_and(|id| id == "loop" || id == "while"))
+        });
+        ops.push(AtomicSite {
+            name: name.to_string(),
+            op: op.to_string(),
+            relaxed,
+            line: toks[i].line,
+            tok: i,
+            in_spawn,
+            fn_idx,
+            in_loop,
+        });
+    }
+    (names, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn model(src: &str) -> FileModel {
+        extract("x/serve/a.rs", &lex(src))
+    }
+
+    #[test]
+    fn fn_names_and_impl_quals() {
+        let src = "impl Registry { fn evict(&self) {} }\n\
+                   impl fmt::Display for Summary { fn fmt(&self) {} }\n\
+                   fn free() {}\n";
+        let m = model(src);
+        let names: Vec<(String, Option<String>)> =
+            m.fns.iter().map(|f| (f.name.clone(), f.qual.clone())).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("evict".into(), Some("Registry".into())),
+                ("fmt".into(), Some("Summary".into())),
+                ("free".into(), None),
+            ]
+        );
+    }
+
+    #[test]
+    fn calls_record_quals_methods_and_receivers() {
+        let src = "fn f(&self) { self.emit(1); Registry::restore(p); helper(); x.len(); }\n";
+        let m = model(src);
+        let c = &m.fns[0].calls;
+        assert_eq!(c.len(), 4, "{:?}", c.iter().map(|c| &c.name).collect::<Vec<_>>());
+        assert!(c[0].on_self && c[0].method && c[0].name == "emit");
+        assert_eq!(c[1].qual.as_deref(), Some("Registry"));
+        assert!(!c[2].method && c[2].qual.is_none());
+        assert!(c[3].method && !c[3].on_self);
+    }
+
+    #[test]
+    fn spawn_closure_contents_are_marked() {
+        let src = "fn f(&self) { let h = thread::spawn(move || { g(); q.recv(); }); h.join(); }\n";
+        let m = model(src);
+        let f = &m.fns[0];
+        assert_eq!(f.spawns.len(), 1);
+        assert_eq!(f.spawns[0].kind, SpawnKind::Thread);
+        assert_eq!(f.spawns[0].bound, SpawnBinding::Named("h".into()));
+        let g = f.calls.iter().find(|c| c.name == "g").unwrap();
+        assert!(g.in_spawn);
+        let recv = f.blocking.iter().find(|b| b.what == "recv").unwrap();
+        assert!(recv.in_spawn);
+        let join = f.blocking.iter().find(|b| b.what == "join").unwrap();
+        assert!(!join.in_spawn);
+    }
+
+    #[test]
+    fn spawn_bindings_classified() {
+        let src = "fn f() { thread::spawn(|| {}); let _ = thread::spawn(|| {});\n\
+                   v.push(thread::spawn(|| {})); s.spawn(|| {}); }\n";
+        let m = model(src);
+        let kinds: Vec<(SpawnKind, &SpawnBinding)> =
+            m.fns[0].spawns.iter().map(|s| (s.kind, &s.bound)).collect();
+        assert_eq!(kinds[0], (SpawnKind::Thread, &SpawnBinding::Discarded));
+        assert_eq!(kinds[1], (SpawnKind::Thread, &SpawnBinding::Wildcard));
+        assert_eq!(kinds[2], (SpawnKind::Thread, &SpawnBinding::Expr));
+        assert_eq!(kinds[3].0, SpawnKind::Scoped);
+    }
+
+    #[test]
+    fn string_join_is_not_blocking() {
+        let src = "fn f(v: &[String]) -> String { v.join(\", \") }\n";
+        assert!(model(src).fns[0].blocking.is_empty());
+    }
+
+    #[test]
+    fn atomic_bool_relaxed_tracked_with_spawn_scope() {
+        let src = "fn f() { let stop = AtomicBool::new(false);\n\
+                   thread::spawn(|| { while !stop.load(Ordering::Relaxed) {} });\n\
+                   stop.store(true, Ordering::Relaxed); }\n";
+        let m = model(src);
+        assert_eq!(m.atomic_bools, vec!["stop".to_string()]);
+        assert_eq!(m.atomic_ops.len(), 2);
+        assert!(m.atomic_ops[0].in_spawn && m.atomic_ops[0].relaxed);
+        assert!(!m.atomic_ops[1].in_spawn && m.atomic_ops[1].relaxed);
+    }
+
+    #[test]
+    fn guard_drop_sites_recorded() {
+        let src = "fn f(&self) { let g = lock_or_recover(&self.wal); drop(g); }\n";
+        let m = model(src);
+        assert_eq!(m.fns[0].acqs.len(), 1);
+        assert!(m.fns[0].acqs[0].held);
+        assert_eq!(m.fns[0].drops.len(), 1);
+        assert_eq!(m.fns[0].drops[0].name, "g");
+    }
+}

@@ -31,6 +31,14 @@
 //! - `serve/scheduler.rs` — each response slot's `state` is the only
 //!   lock; listed so nesting two slots is caught as an inversion of
 //!   "same name after same name" rather than slipping by undeclared.
+//! - `serve/admission.rs` — the limiter snapshots its `cfg` (a copied
+//!   read, never a held guard) before touching the token `buckets`;
+//!   declared so a future held-cfg refactor is checked.
+//! - `serve/spool.rs` — the tick-stats mutex is the spooler's only
+//!   lock.
+//! - `util/pool.rs` — the service queue `state` is taken on every
+//!   dispatch; the two error-collection mutexes are only touched
+//!   during startup/teardown, after any queue guard is gone.
 
 /// `(file-path substring, lock field names in required acquisition order)`.
 pub const LOCK_ORDER: &[(&str, &[&str])] = &[
@@ -38,8 +46,59 @@ pub const LOCK_ORDER: &[(&str, &[&str])] = &[
     ("serve/server.rs", &["batcher", "tenants", "batch_sizes"]),
     ("serve/shard.rs", &["table", "results_rx", "collected", "registry", "store"]),
     ("serve/scheduler.rs", &["state"]),
+    ("serve/admission.rs", &["cfg", "buckets"]),
+    ("serve/spool.rs", &["stats"]),
+    ("util/pool.rs", &["state", "init_errors", "first_error"]),
     ("store/mod.rs", &["wal"]),
 ];
+
+/// The crate-wide total order the interprocedural pass checks against.
+///
+/// Each per-file list above must project onto this order (asserted in
+/// the tests below): the per-file lists are the readable, per-module
+/// contracts; this list is their join, needed once the held-guard set
+/// propagates across call boundaries. Names are bare lock fields —
+/// two structs sharing a field name share an order slot, which is
+/// conservative (a false inversion between unrelated locks is answered
+/// by renaming one field or a reasoned allow, never by a missed real
+/// inversion).
+///
+/// Rationale for the cross-file constraints (the per-file rationale
+/// lives on `LOCK_ORDER`):
+/// - router locks (`table`..`collected`) come first: the shard router
+///   calls into seat registries/stores while routing, never the other
+///   way around;
+/// - `batcher`/`inner` precede `tenants`: submit paths push into the
+///   batcher and the mat-cache consults pins before touching the
+///   tenant tables;
+/// - seat handles (`registry`, `store`) and the admission pair sit
+///   between the serving tables and the leaf locks;
+/// - `wal` is last: the WAL mutex is a leaf — code holding it must
+///   not call back into the serving tier.
+pub const GLOBAL_ORDER: &[&str] = &[
+    "table",
+    "results_rx",
+    "collected",
+    "batcher",
+    "inner",
+    "tenants",
+    "batch_sizes",
+    "current",
+    "registry",
+    "store",
+    "cfg",
+    "buckets",
+    "stats",
+    "state",
+    "init_errors",
+    "first_error",
+    "wal",
+];
+
+/// Position of `name` in [`GLOBAL_ORDER`], if it is a declared lock.
+pub fn global_idx(name: &str) -> Option<usize> {
+    GLOBAL_ORDER.iter().position(|n| *n == name)
+}
 
 /// The declared order for `rel` (normalized with `/` separators), if any.
 pub fn order_for(rel: &str) -> Option<&'static [&'static str]> {
@@ -63,6 +122,34 @@ mod tests {
 
     #[test]
     fn unlisted_file_has_no_order() {
-        assert!(order_for("serve/spool.rs").is_none());
+        assert!(order_for("serve/batcher.rs").is_none());
+    }
+
+    #[test]
+    fn global_order_has_no_duplicates() {
+        for (i, a) in GLOBAL_ORDER.iter().enumerate() {
+            assert!(
+                !GLOBAL_ORDER[i + 1..].contains(a),
+                "duplicate lock name `{a}` in GLOBAL_ORDER"
+            );
+        }
+    }
+
+    /// Every per-file list must be an increasing projection of the
+    /// global order, or the intra- and inter-procedural checks would
+    /// disagree about which nesting is the inversion.
+    #[test]
+    fn per_file_lists_project_onto_global_order() {
+        for (file, list) in LOCK_ORDER {
+            let mut last = None;
+            for name in *list {
+                let idx = global_idx(name)
+                    .unwrap_or_else(|| panic!("{file}: `{name}` missing from GLOBAL_ORDER"));
+                if let Some(prev) = last {
+                    assert!(idx > prev, "{file}: `{name}` out of global order");
+                }
+                last = Some(idx);
+            }
+        }
     }
 }

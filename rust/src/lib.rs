@@ -143,13 +143,47 @@
 //!   anywhere else on the serving path bypasses the logical clock and
 //!   breaks fifo latency determinism.
 //!
+//! Four lints are *interprocedural*: they run over a crate-wide
+//! name-resolved call graph ([`analysis::graph`]) built from per-file
+//! item models ([`analysis::model`]), so a violation two calls away
+//! from the held guard is still attributed to the call site that
+//! reaches it:
+//!
+//! - **lock-order-transitive** — the held-guard set is propagated
+//!   through every resolvable call; any reachable acquisition is
+//!   checked against [`analysis::order::GLOBAL_ORDER`] (inversions and
+//!   re-entrant re-acquisition both report).
+//! - **blocking-under-lock** — fsync / `write_all` / blocking `recv` /
+//!   `join` / `sleep` reachable while any `GLOBAL_ORDER` guard is held.
+//! - **atomics-discipline** — `Ordering::Relaxed` on an `AtomicBool`
+//!   flag that crosses a spawn boundary (stored on one side, loaded on
+//!   the other) carries no happens-before edge; also
+//!   `compare_exchange_weak` outside a retry loop.
+//! - **resource-leak** — `thread::spawn` / `pool::Background` handles
+//!   that no path joins or stores.
+//!
+//! The call graph is deliberately conservative: `self.`/`Type::` calls
+//! resolve precisely; a method on an opaque receiver unions *every*
+//! crate fn of that name — except ubiquitous std names (`get`, `len`,
+//! `send`, ...) and std-qualified paths (`Arc::new`), which resolve to
+//! nothing rather than to every same-named crate fn. So "no finding"
+//! proves the absence of a reachable violation only up to that union,
+//! and a finding may name a callee the receiver's real type can never
+//! be — which is why suppressions carry reasons instead of the
+//! analyzer guessing types.
+//!
 //! Exceptions are inline and reasoned:
 //! `// analyze: allow(<lint>) <reason>` on the finding's line or the
 //! line above. The reason is mandatory — a bare allow is itself a
 //! finding — so every suppression in the tree documents the invariant
 //! that makes it sound. Test code is exempt. `tests/analysis.rs`
-//! self-runs the pass over `src/` and asserts zero unsuppressed
-//! findings.
+//! self-runs the pass over `src/`, `benches/`, and `tests/` (fixtures
+//! excluded) and asserts zero unsuppressed findings. For incremental
+//! adoption there is a ratchet: `repro analyze --baseline <file>`
+//! compares findings against a fingerprinted baseline
+//! ([`analysis::baseline`]) — new findings fail, fixed ones shrink the
+//! baseline on `--write-baseline`, and a stale baseline entry is
+//! itself a finding, so the accepted set only moves down.
 
 pub mod analysis;
 pub mod config;

@@ -144,16 +144,24 @@ commands:
            instead of sleeping); summary (p50/p95/p99, req/s, batch
            histogram, cache + admission counters, SLO compliance) prints
            here and lands in the event log as serve_* lines.
-  analyze  [--format text|json] [paths...]
+  analyze  [--format text|json|github] [--baseline FILE]
+           [--write-baseline FILE] [paths...]
            repo-invariant static analysis (determinism, lock-discipline,
            panic-path, framing-casts, log-discipline, io-durability,
-           obs-discipline):
+           obs-discipline, plus the interprocedural call-graph lints
+           lock-order-transitive, blocking-under-lock,
+           atomics-discipline, resource-leak):
            lexes the given .rs files/directories (default: the crate's
-           src/ tree) and reports per-lint findings with file:line
-           anchors. Suppress inline with
+           src/, benches/ and tests/ trees, fixtures excluded), builds
+           the crate-wide call graph, and reports per-lint findings
+           with file:line anchors. Suppress inline with
            `// analyze: allow(<lint>) <reason>` — the reason is
-           mandatory. Exits non-zero on any unsuppressed finding (the
-           blocking CI gate runs `analyze --format json`).
+           mandatory. --baseline FILE accepts previously ratcheted
+           findings (new ones still fail; stale entries are findings);
+           --write-baseline FILE captures the current findings.
+           --format github emits ::error workflow commands for inline
+           PR annotations. Exits non-zero on any unsuppressed finding
+           (the blocking CI gate runs `analyze --format json`).
 all parallel paths share one compile cache: each distinct artifact path
 compiles exactly once per process on CPU (in-flight compiles dedup across
 workers); other backends fall back to per-worker compiles that still
@@ -596,28 +604,48 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     let format = args.flags.get("format").map(String::as_str).unwrap_or("text");
-    if format != "text" && format != "json" {
-        bail!("--format must be text or json, got {format:?}");
+    if format != "text" && format != "json" && format != "github" {
+        bail!("--format must be text, json or github, got {format:?}");
     }
     let paths: Vec<std::path::PathBuf> = if args.positional.is_empty() {
-        // Default to the crate's src/ tree, from either the repo root
-        // or the rust/ crate directory.
-        let candidates = ["rust/src", "src"];
-        let found = candidates
+        // Default to the whole crate — src, benches and tests (the
+        // fixture corpus under tests/analysis_fixtures/ is excluded by
+        // the walker) — from either the repo root or rust/.
+        let roots = if std::path::Path::new("rust/src").is_dir() {
+            ["rust/src", "rust/benches", "rust/tests"]
+        } else if std::path::Path::new("src").is_dir() {
+            ["src", "benches", "tests"]
+        } else {
+            bail!("no rust/src or src directory here; pass paths explicitly");
+        };
+        roots
             .iter()
             .map(std::path::PathBuf::from)
-            .find(|p| p.is_dir())
-            .with_context(|| {
-                format!("no {candidates:?} directory here; pass paths explicitly")
-            })?;
-        vec![found]
+            .filter(|p| p.is_dir())
+            .collect()
     } else {
         args.positional.iter().map(std::path::PathBuf::from).collect()
     };
-    let report = analysis::analyze_paths(&paths)
+    let mut report = analysis::analyze_paths(&paths)
         .with_context(|| format!("analyzing {paths:?}"))?;
+    if let Some(path) = args.flags.get("write-baseline") {
+        let base = analysis::baseline::Baseline::from_report(&report);
+        std::fs::write(path, base.dump()).with_context(|| format!("writing {path}"))?;
+        println!(
+            "wrote {} accepted finding(s) to {path}",
+            base.entries.len()
+        );
+    }
+    if let Some(path) = args.flags.get("baseline") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading baseline {path}"))?;
+        let base = analysis::baseline::Baseline::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        analysis::baseline::apply(&mut report, &base);
+    }
     match format {
         "json" => println!("{}", analysis::render_json(&report)),
+        "github" => print!("{}", analysis::render_github(&report)),
         _ => print!("{}", analysis::render_text(&report)),
     }
     if !report.clean() {

@@ -13,9 +13,27 @@
 //! returns that bucket's lower bound, so its error versus the exact
 //! nearest-rank statistic is bounded by one bucket width (the exact
 //! value lies in `[q, max(2q, 2))`); `tests/serve.rs` pins that
-//! tolerance against the exact `percentile_us` oracle.
+//! tolerance against the exact `percentile_us` oracle. A quantile of
+//! an empty histogram is a typed [`EmptyHist`] error, not a fake 0:
+//! a tenant with no completed requests must render as "no data", never
+//! as a perfect 0µs p99.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Typed error for a quantile query against a histogram with no
+/// samples. There is no meaningful value to report — returning 0 would
+/// make an idle tenant look like it met every latency target — so
+/// callers decide: summaries carry `Option` percentiles and render `-`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EmptyHist;
+
+impl std::fmt::Display for EmptyHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("quantile of an empty histogram")
+    }
+}
+
+impl std::error::Error for EmptyHist {}
 
 /// Number of log₂ buckets: `u64::ilog2` never exceeds 63.
 pub const BUCKETS: usize = 64;
@@ -76,29 +94,29 @@ impl Hist {
     }
 
     /// Nearest-rank quantile (`p` in percent): the lower bound of the
-    /// bucket holding the rank-⌈p/100·n⌉ sample; 0 on an empty
-    /// histogram.
-    pub fn quantile(&self, p: f64) -> u64 {
+    /// bucket holding the rank-⌈p/100·n⌉ sample; [`EmptyHist`] when no
+    /// sample was ever recorded.
+    pub fn quantile(&self, p: f64) -> Result<u64, EmptyHist> {
         let counts = self.counts();
         let total: u64 = counts.iter().sum();
         if total == 0 {
-            return 0;
+            return Err(EmptyHist);
         }
         let rank = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
         let mut cum = 0u64;
         for (i, &c) in counts.iter().enumerate() {
             cum += c;
             if cum >= rank {
-                return Self::bucket_floor(i);
+                return Ok(Self::bucket_floor(i));
             }
         }
-        Self::bucket_floor(BUCKETS - 1)
+        Ok(Self::bucket_floor(BUCKETS - 1))
     }
 
     /// [`quantile`](Hist::quantile) scaled ns → µs, the unit the
     /// serving reports use.
-    pub fn quantile_us(&self, p: f64) -> f64 {
-        self.quantile(p) as f64 / 1000.0
+    pub fn quantile_us(&self, p: f64) -> Result<f64, EmptyHist> {
+        Ok(self.quantile(p)? as f64 / 1000.0)
     }
 }
 
@@ -129,19 +147,26 @@ mod tests {
             h.record(1500);
         }
         assert_eq!(h.count(), 100);
-        assert_eq!(h.quantile(50.0), 8);
-        assert_eq!(h.quantile(90.0), 8);
-        assert_eq!(h.quantile(91.0), 1024);
-        assert_eq!(h.quantile(99.0), 1024);
-        assert_eq!(h.quantile(100.0), 1024);
+        assert_eq!(h.quantile(50.0), Ok(8));
+        assert_eq!(h.quantile(90.0), Ok(8));
+        assert_eq!(h.quantile(91.0), Ok(1024));
+        assert_eq!(h.quantile(99.0), Ok(1024));
+        assert_eq!(h.quantile(100.0), Ok(1024));
     }
 
     #[test]
-    fn empty_histogram_quantiles_are_zero() {
+    fn empty_histogram_quantile_is_a_typed_error() {
+        // regression: this used to report 0 — an idle tenant read as a
+        // perfect 0µs p99 instead of "no data"
         let h = Hist::new();
         assert!(h.is_empty());
-        assert_eq!(h.quantile(99.0), 0);
-        assert_eq!(h.quantile_us(50.0), 0.0);
+        assert_eq!(h.quantile(99.0), Err(EmptyHist));
+        assert_eq!(h.quantile_us(50.0), Err(EmptyHist));
+        assert_eq!(EmptyHist.to_string(), "quantile of an empty histogram");
+        // one sample flips every quantile to a value
+        h.record(3);
+        assert_eq!(h.quantile(1.0), Ok(2));
+        assert_eq!(h.quantile(100.0), Ok(2));
     }
 
     #[test]
@@ -176,7 +201,7 @@ mod tests {
             let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize)
                 .clamp(1, sorted.len());
             let exact = sorted[rank - 1];
-            let q = h.quantile(p);
+            let q = h.quantile(p).unwrap();
             assert!(q <= exact, "p{p}: q={q} exact={exact}");
             assert!(exact < (2 * q).max(2), "p{p}: q={q} exact={exact}");
         }

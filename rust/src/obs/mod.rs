@@ -32,7 +32,7 @@ pub mod recorder;
 pub mod slo;
 pub mod span;
 
-pub use hist::Hist;
+pub use hist::{EmptyHist, Hist};
 pub use recorder::{FlightRecorder, TraceRecord};
 pub use slo::{SloPolicy, TenantSloStatus};
 pub use span::{Span, SpanClock, TraceCtx, PHASES};

@@ -475,6 +475,7 @@ impl Registry {
                 let version = cur.version + 1;
                 if self.sink.wants_records() {
                     self.sink
+                        // analyze: allow(blocking-under-lock) WAL append is atomic with the in-RAM swap; RAM never diverges ahead of the log
                         .record(&StateRecord::Swap(state(version, &thetas)))
                         .map_err(|e| StateLogFailed {
                             tenant: tenant.to_string(),
@@ -495,6 +496,7 @@ impl Registry {
                 let version = 1;
                 if self.sink.wants_records() {
                     self.sink
+                        // analyze: allow(blocking-under-lock) WAL append is atomic with the registration; RAM never diverges ahead of the log
                         .record(&StateRecord::Register(state(version, &thetas)))
                         .map_err(|e| StateLogFailed {
                             tenant: tenant.to_string(),
@@ -588,6 +590,7 @@ impl Registry {
         let entries: Vec<TenantState> = tenants.iter()
             .map(|(name, slot)| slot_state(name, slot))
             .collect();
+        // analyze: allow(blocking-under-lock) deliberate: the snapshot must be atomic w.r.t. mutations, see the doc comment above
         store.compact(&entries)
     }
 
@@ -686,6 +689,7 @@ impl Registry {
             }
             if self.sink.wants_records() {
                 self.sink
+                    // analyze: allow(blocking-under-lock) WAL append is atomic with the eviction; RAM never diverges ahead of the log
                     .record(&StateRecord::Evict { tenant: tenant.to_string() })
                     .map_err(|e| StateLogFailed {
                         tenant: tenant.to_string(),

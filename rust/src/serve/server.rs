@@ -179,6 +179,10 @@ struct Metrics {
     /// `serve_interval` snapshot (fifo mode; claimed by CAS).
     next_mark: AtomicU64,
     interval_seq: AtomicU64,
+    /// `--trace-dir` JSONL dump failures this session. The first one
+    /// also emits a `serve_trace_error` EventLog line; the rest only
+    /// count (a full disk would otherwise spam one line per dump).
+    trace_errors: AtomicU64,
 }
 
 impl Metrics {
@@ -202,6 +206,7 @@ impl Metrics {
             },
             next_mark: AtomicU64::new(cfg.metrics_interval.max(1)),
             interval_seq: AtomicU64::new(0),
+            trace_errors: AtomicU64::new(0),
         }
     }
 
@@ -262,9 +267,9 @@ impl Metrics {
             .map(|(name, t)| TenantSummary {
                 tenant: name.clone(),
                 requests: t.requests.load(Ordering::Relaxed),
-                p50_us: t.hist.quantile_us(50.0),
-                p95_us: t.hist.quantile_us(95.0),
-                p99_us: t.hist.quantile_us(99.0),
+                p50_us: t.hist.quantile_us(50.0).ok(),
+                p95_us: t.hist.quantile_us(95.0).ok(),
+                p99_us: t.hist.quantile_us(99.0).ok(),
             })
             .collect();
         let slo = if self.slo.enabled() {
@@ -290,9 +295,9 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             wall_s,
             rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
-            p50_us: self.lat_hist.quantile_us(50.0),
-            p95_us: self.lat_hist.quantile_us(95.0),
-            p99_us: self.lat_hist.quantile_us(99.0),
+            p50_us: self.lat_hist.quantile_us(50.0).ok(),
+            p95_us: self.lat_hist.quantile_us(95.0).ok(),
+            p99_us: self.lat_hist.quantile_us(99.0).ok(),
             max_queue_depth: self.max_outstanding.load(Ordering::Relaxed),
             shared_client_workers: self.shared_client_workers.load(Ordering::Relaxed),
             batch_hist: lock_or_recover(&self.batch_sizes).iter()
@@ -301,6 +306,7 @@ impl Metrics {
             admission,
             tenants,
             slo,
+            trace_errors: self.trace_errors.load(Ordering::Relaxed),
         }
     }
 }
@@ -327,9 +333,12 @@ pub fn percentile_us(sorted_ns: &[u64], p: f64) -> f64 {
 pub struct TenantSummary {
     pub tenant: String,
     pub requests: u64,
-    pub p50_us: f64,
-    pub p95_us: f64,
-    pub p99_us: f64,
+    /// `None` when the tenant completed no requests
+    /// ([`EmptyHist`](crate::obs::EmptyHist) upstream) — rendered as
+    /// `-`, never as a fake 0µs.
+    pub p50_us: Option<f64>,
+    pub p95_us: Option<f64>,
+    pub p99_us: Option<f64>,
 }
 
 /// Session SLO accounting: the policy plus each tenant's violation
@@ -360,9 +369,12 @@ pub struct ServeSummary {
     pub failed: u64,
     pub wall_s: f64,
     pub rps: f64,
-    pub p50_us: f64,
-    pub p95_us: f64,
-    pub p99_us: f64,
+    /// `None` when the session completed no requests
+    /// ([`EmptyHist`](crate::obs::EmptyHist) upstream): JSON `null`,
+    /// `-` in the rendered report.
+    pub p50_us: Option<f64>,
+    pub p95_us: Option<f64>,
+    pub p99_us: Option<f64>,
     pub max_queue_depth: usize,
     pub shared_client_workers: usize,
     /// (batch size, batches dispatched at that size), ascending.
@@ -373,6 +385,20 @@ pub struct ServeSummary {
     pub tenants: Vec<TenantSummary>,
     /// SLO compliance (None unless SLO tracking was enabled).
     pub slo: Option<SloSummary>,
+    /// `--trace-dir` JSONL dumps that failed to write this session
+    /// (0 when tracing to files was off or every dump landed).
+    pub trace_errors: u64,
+}
+
+/// `Json::Null` for an absent (empty-histogram) percentile.
+pub(crate) fn q_json(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+/// `-` for an absent percentile in a rendered report, `{v:.1}µs` text
+/// otherwise.
+pub(crate) fn q_us(v: Option<f64>) -> String {
+    v.map_or_else(|| "-".to_string(), |v| format!("{v:.1}µs"))
 }
 
 impl ServeSummary {
@@ -393,9 +419,9 @@ impl ServeSummary {
             ("failed", Json::Num(self.failed as f64)),
             ("wall_s", Json::Num(self.wall_s)),
             ("rps", Json::Num(self.rps)),
-            ("p50_us", Json::Num(self.p50_us)),
-            ("p95_us", Json::Num(self.p95_us)),
-            ("p99_us", Json::Num(self.p99_us)),
+            ("p50_us", q_json(self.p50_us)),
+            ("p95_us", q_json(self.p95_us)),
+            ("p99_us", q_json(self.p99_us)),
             ("max_queue_depth", self.max_queue_depth.into()),
             ("shared_client_workers", self.shared_client_workers.into()),
             ("batch_hist", hist),
@@ -408,14 +434,15 @@ impl ServeSummary {
             ("cache_capacity_bytes", self.cache.capacity_bytes.into()),
             ("cache_tenant_quota_bytes",
              self.cache.per_tenant_quota_bytes.into()),
+            ("trace_errors", Json::Num(self.trace_errors as f64)),
         ]);
         for t in &self.tenants {
             log.emit("serve_tenant", vec![
                 ("tenant", t.tenant.as_str().into()),
                 ("requests", Json::Num(t.requests as f64)),
-                ("p50_us", Json::Num(t.p50_us)),
-                ("p95_us", Json::Num(t.p95_us)),
-                ("p99_us", Json::Num(t.p99_us)),
+                ("p50_us", q_json(t.p50_us)),
+                ("p95_us", q_json(t.p95_us)),
+                ("p99_us", q_json(t.p99_us)),
             ]);
         }
         if self.admission.enabled {
@@ -465,9 +492,9 @@ impl ServeSummary {
             self.completed, self.wall_s, self.workers, self.rps, self.failed);
         let _ = writeln!(
             s,
-            "latency p50 {:.1}µs  p95 {:.1}µs  p99 {:.1}µs  \
-             max queue depth {}",
-            self.p50_us, self.p95_us, self.p99_us, self.max_queue_depth);
+            "latency p50 {}  p95 {}  p99 {}  max queue depth {}",
+            q_us(self.p50_us), q_us(self.p95_us), q_us(self.p99_us),
+            self.max_queue_depth);
         let hist: Vec<String> = self.batch_hist.iter()
             .map(|&(sz, c)| format!("{sz}x{c}"))
             .collect();
@@ -489,6 +516,13 @@ impl ServeSummary {
             s,
             "tenant quota: {quota}, {} quota rejection(s)",
             self.cache.quota_rejections);
+        if self.trace_errors > 0 {
+            let _ = writeln!(
+                s,
+                "WARNING: {} trace dump(s) failed to write (see the \
+                 serve_trace_error event line)",
+                self.trace_errors);
+        }
         if self.admission.enabled {
             let a = &self.admission;
             let attempts = a.admitted + a.rejected_total();
@@ -725,9 +759,9 @@ impl ServerHandle<'_> {
             } else {
                 0.0
             })),
-            ("p50_us", Json::Num(m.lat_hist.quantile_us(50.0))),
-            ("p95_us", Json::Num(m.lat_hist.quantile_us(95.0))),
-            ("p99_us", Json::Num(m.lat_hist.quantile_us(99.0))),
+            ("p50_us", q_json(m.lat_hist.quantile_us(50.0).ok())),
+            ("p95_us", q_json(m.lat_hist.quantile_us(95.0).ok())),
+            ("p99_us", q_json(m.lat_hist.quantile_us(99.0).ok())),
             ("queue_depth", m.outstanding.load(Ordering::Relaxed).into()),
             ("cache_hits", Json::Num(cache.hits as f64)),
             ("cache_misses", Json::Num(cache.misses as f64)),
@@ -988,9 +1022,14 @@ fn dump_traces(metrics: &Metrics, log: &EventLog, trace_dir: Option<&Path>) {
     }
     if let Some(dir) = trace_dir {
         if let Err(e) = write_trace_file(dir, &recs) {
-            log.emit("serve_error", vec![
-                ("error", format!("trace dump: {e}").into()),
-            ]);
+            // first failure logs, the rest only count: trace files are
+            // best-effort, but the session summary must say they were lost
+            if metrics.trace_errors.fetch_add(1, Ordering::Relaxed) == 0 {
+                log.emit("serve_trace_error", vec![
+                    ("dir", dir.display().to_string().into()),
+                    ("error", format!("{e:#}").into()),
+                ]);
+            }
         }
     }
 }
@@ -1115,7 +1154,7 @@ where
                 std::thread::scope(|s| {
                     s.spawn(|| {
                         let mut last_emit = clock.now_ns();
-                        while !stop.load(Ordering::Relaxed) {
+                        while !stop.load(Ordering::Acquire) {
                             handle.flush_expired();
                             if interval_ns > 0 {
                                 let now = clock.now_ns();
@@ -1128,7 +1167,7 @@ where
                         }
                     });
                     let r = catch_unwind(AssertUnwindSafe(|| body(&handle)));
-                    stop.store(true, Ordering::Relaxed);
+                    stop.store(true, Ordering::Release);
                     match r {
                         Ok(r) => r,
                         Err(p) => resume_unwind(p),
@@ -1238,6 +1277,40 @@ mod tests {
         let resp = outcome.body.wait().unwrap();
         assert_eq!(resp.meta, 3);
         assert_eq!(outcome.summary.submitted, 1);
+    }
+
+    #[test]
+    fn trace_dir_failure_is_logged_once_and_counted() {
+        // point --trace-dir at a path occupied by a *file*: the dump's
+        // create_dir_all fails, and the session must say so instead of
+        // silently dropping the traces
+        let dir = std::env::temp_dir()
+            .join(format!("qp_trace_err_{}", std::process::id()));
+        let events = std::env::temp_dir()
+            .join(format!("qp_trace_err_events_{}.jsonl", std::process::id()));
+        std::fs::write(&dir, b"not a directory").unwrap();
+        let _ = std::fs::remove_file(&events);
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = ServeConfig {
+            trace_dir: Some(dir.clone()),
+            ..ServeConfig::default()
+        };
+        let log = EventLog::new(Some(events.clone()), false).unwrap();
+        let outcome = serve(&rt, &reg, &cfg, &log, |h| {
+            let r = h.submit("t0", 1, vec![0.2; 8])?;
+            h.flush();
+            r.wait()
+        }).unwrap();
+        drop(log);
+        assert_eq!(outcome.summary.trace_errors, 1);
+        let text = std::fs::read_to_string(&events).unwrap();
+        let err_lines = text.lines()
+            .filter(|l| l.contains("\"serve_trace_error\""))
+            .count();
+        assert_eq!(err_lines, 1, "{text}");
+        let _ = std::fs::remove_file(&dir);
+        let _ = std::fs::remove_file(&events);
     }
 
     #[test]
@@ -1431,7 +1504,7 @@ mod tests {
         assert!((t.burn(slo.error_budget) - 1.0).abs() < 1e-12);
         // the session histogram caught the same two samples
         assert_eq!(outcome.summary.completed, 2);
-        assert!(outcome.summary.p99_us > 0.0);
+        assert!(outcome.summary.p99_us.unwrap() > 0.0);
     }
 
     #[test]

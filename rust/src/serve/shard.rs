@@ -71,7 +71,8 @@ use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 use super::admission::{RejectReason, Rejected};
 use super::registry::{EvictAttempt, Registry};
 use super::scheduler::ResponseHandle;
-use super::server::{serve, ServeConfig, ServeSummary, SloSummary, SubmitTarget};
+use super::server::{q_json, q_us, serve, ServeConfig, ServeSummary, SloSummary,
+                    SubmitTarget};
 use crate::obs::TenantSloStatus;
 
 /// Virtual nodes per shard on the hash ring: enough that tenant load
@@ -468,6 +469,7 @@ impl ShardRouter<'_> {
     fn recv_result_for(&self, shard: usize) -> Result<ServeSummary> {
         let rx = lock_or_recover(&self.results_rx);
         loop {
+            // analyze: allow(blocking-under-lock) the results_rx mutex exists only to serialize receivers; blocking in recv while holding it is the design
             let (idx, res) = rx.recv()
                 .ok().context("shard session results channel closed")?;
             let summary = res.with_context(|| {
@@ -636,6 +638,7 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
             // session that failed on its own in the meantime
             let mut done = false;
             while !done && received < expected {
+                // analyze: allow(blocking-under-lock) shutdown is single-threaded by now; holding results_rx across recv keeps trace dumps shard-ordered
                 let Ok((idx, res)) = rx.recv() else { break };
                 received += 1;
                 done = idx == shard;
@@ -652,6 +655,7 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
         // drain stragglers: a session that failed before its Stop could
         // be sent still consumed a started slot
         while received < expected {
+            // analyze: allow(blocking-under-lock) straggler drain at shutdown; see above
             let Ok((idx, res)) = rx.recv() else { break };
             received += 1;
             match res {
@@ -670,9 +674,14 @@ fn shutdown_fleet(router: &ShardRouter<'_>)
     // session-end compaction per live shard, mirroring the unsharded
     // bench: the next restart replays one snapshot instead of the WAL
     for (shard, seat) in router.seats.iter().enumerate() {
-        let registry = lock_or_recover(&seat.registry).clone();
-        let store = lock_or_recover(&seat.store).clone();
-        if let (Some(registry), Some(store)) = (registry, store) {
+        // clone the Arcs inside a block so both seat guards are gone
+        // before the (WAL-locking, fsyncing) compaction starts
+        let snap = {
+            let registry = lock_or_recover(&seat.registry).clone();
+            let store = lock_or_recover(&seat.store).clone();
+            registry.zip(store)
+        };
+        if let Some((registry, store)) = snap {
             registry.compact_into(&store)
                 .with_context(|| format!("compact shard {shard} state"))?;
         }
@@ -711,9 +720,11 @@ impl FleetSummary {
     }
 
     /// Worst p99 across shards — the fleet's tail is its slowest shard.
-    pub fn p99_us(&self) -> f64 {
-        self.sessions.iter().map(|(_, s)| s.p99_us)
-            .fold(0.0f64, f64::max)
+    /// `None` when no session completed a single request.
+    pub fn p99_us(&self) -> Option<f64> {
+        self.sessions.iter()
+            .filter_map(|(_, s)| s.p99_us)
+            .reduce(f64::max)
     }
 
     /// Fleet-wide SLO rollup: per-tenant request/violation counts merged
@@ -748,7 +759,7 @@ impl FleetSummary {
                 ("completed", Json::Num(s.completed as f64)),
                 ("failed", Json::Num(s.failed as f64)),
                 ("rps", Json::Num(s.rps)),
-                ("p99_us", Json::Num(s.p99_us)),
+                ("p99_us", q_json(s.p99_us)),
             ]);
         }
         log.emit("serve_fleet", vec![
@@ -757,7 +768,7 @@ impl FleetSummary {
             ("completed", Json::Num(self.completed() as f64)),
             ("failed", Json::Num(self.failed() as f64)),
             ("fleet_rps", Json::Num(self.fleet_rps())),
-            ("p99_us", Json::Num(self.p99_us())),
+            ("p99_us", q_json(self.p99_us())),
         ]);
     }
 
@@ -769,16 +780,16 @@ impl FleetSummary {
             let _ = writeln!(
                 s,
                 "shard {shard:>3}: {:>8} served  {:>9.0} req/s  p50 \
-                 {:>8.1}µs  p99 {:>8.1}µs  ({} failed)",
-                sess.completed, sess.rps, sess.p50_us, sess.p99_us,
-                sess.failed);
+                 {:>9}  p99 {:>9}  ({} failed)",
+                sess.completed, sess.rps, q_us(sess.p50_us),
+                q_us(sess.p99_us), sess.failed);
         }
         let _ = writeln!(
             s,
             "fleet ({} shards): {} served, {:.0} req/s, worst p99 \
-             {:.1}µs, {} failed",
-            self.shards, self.completed(), self.fleet_rps(), self.p99_us(),
-            self.failed());
+             {}, {} failed",
+            self.shards, self.completed(), self.fleet_rps(),
+            q_us(self.p99_us()), self.failed());
         if let Some(slo) = self.slo() {
             let _ = writeln!(
                 s,

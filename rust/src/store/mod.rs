@@ -240,8 +240,10 @@ impl StateStore {
     /// holds the registry write lock to guarantee it).
     pub fn compact(&self, live: &[TenantState]) -> Result<()> {
         let mut wal = lock_or_recover(&self.wal);
+        // analyze: allow(blocking-under-lock) deliberate: snapshot + truncate must be atomic w.r.t. appends, see the doc comment above
         snapshot::write(&self.dir, wal.last_seq(), live)
             .with_context(|| format!("write snapshot in {:?}", self.dir))?;
+        // analyze: allow(blocking-under-lock) deliberate: see above — truncating outside the lock could drop a concurrent append
         wal.truncate_to_header()
             .context("truncate WAL after snapshot")
     }

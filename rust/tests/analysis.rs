@@ -5,9 +5,10 @@
 //!      fixtures under `tests/analysis_fixtures/`, and each positive
 //!      fixture asserts the exact `(lint, line)` set so a lexer or
 //!      scanner regression shows up as a precise diff.
-//!   2. The self-run — the crate's own `src/` tree must be clean:
-//!      zero unsuppressed findings, and every suppression carries a
-//!      reason. This is the same gate CI runs via `repro analyze`.
+//!   2. The self-run — the crate's own `src/`, `benches/` and `tests/`
+//!      trees (this fixture corpus excluded) must be clean: zero
+//!      unsuppressed findings, and every suppression carries a reason.
+//!      This is the same gate CI runs via `repro analyze`.
 
 use std::path::{Path, PathBuf};
 
@@ -223,14 +224,131 @@ fn suppression_malformed_directive_is_a_finding() {
     expect("serve/suppress_malformed.rs", "suppression", &[2], 0);
 }
 
+// ---------------------------------------------------- lock-order-transitive
+
+#[test]
+fn xlock_positive() {
+    // The call reaching `registry` while `store` (its successor in
+    // GLOBAL_ORDER) is held @23, and the call re-acquiring the held
+    // `cfg` @29 — both attributed to the call site, not the callee.
+    expect("serve/xlock_positive.rs", "lock-order-transitive", &[23, 29], 0);
+}
+
+#[test]
+fn xlock_allowed() {
+    expect("serve/xlock_allowed.rs", "lock-order-transitive", &[], 1);
+}
+
+#[test]
+fn xlock_clean() {
+    expect("serve/xlock_clean.rs", "lock-order-transitive", &[], 0);
+}
+
+#[test]
+fn cross_file_lock_inversion_attributes_the_call_site() {
+    let read = |rel: &str| {
+        let path = fixture_root().join(rel);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+    };
+    let files = vec![
+        (
+            "tests/analysis_fixtures/serve/xinv_router.rs".to_string(),
+            read("serve/xinv_router.rs"),
+        ),
+        (
+            "tests/analysis_fixtures/serve/xinv_table.rs".to_string(),
+            read("serve/xinv_table.rs"),
+        ),
+    ];
+    let report = analysis::analyze_sources(&files);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    let f = &report.findings[0];
+    assert_eq!(f.lint, "lock-order-transitive");
+    assert_eq!(f.file, "tests/analysis_fixtures/serve/xinv_router.rs");
+    assert_eq!(f.line, 13, "attributed to the caller's call site");
+    assert!(f.message.contains("refresh_routes"), "{}", f.message);
+    assert!(f.message.contains("xinv_table.rs:11"), "names the reached acquisition: {}", f.message);
+    assert!(report.suppressed.is_empty());
+}
+
+#[test]
+fn cross_file_halves_are_silent_alone() {
+    // The callee never nests holds; the caller cannot see the reached
+    // acquisition without the callee's file in the analyzed set.
+    expect("serve/xinv_router.rs", "lock-order-transitive", &[], 0);
+    expect("serve/xinv_table.rs", "lock-order-transitive", &[], 0);
+}
+
+// ------------------------------------------------------ blocking-under-lock
+
+#[test]
+fn blocking_positive() {
+    // The direct fsync @17 and the bulk write reached through
+    // `flush_segment` @18, both while the `wal` guard is held.
+    expect("store/blocking_positive.rs", "blocking-under-lock", &[17, 18], 0);
+}
+
+#[test]
+fn blocking_allowed() {
+    expect("store/blocking_allowed.rs", "blocking-under-lock", &[], 1);
+}
+
+#[test]
+fn blocking_clean() {
+    expect("store/blocking_clean.rs", "blocking-under-lock", &[], 0);
+}
+
+// ------------------------------------------------------- atomics-discipline
+
+#[test]
+fn atomics_positive() {
+    // Relaxed load @13 (spawned side) and store @14 (main side) on the
+    // crossing `stop` flag; compare_exchange_weak with no retry loop @19.
+    expect("serve/atomics_positive.rs", "atomics-discipline", &[13, 14, 19], 0);
+}
+
+#[test]
+fn atomics_allowed() {
+    expect("serve/atomics_allowed.rs", "atomics-discipline", &[], 1);
+}
+
+#[test]
+fn atomics_clean() {
+    expect("serve/atomics_clean.rs", "atomics-discipline", &[], 0);
+}
+
+// ------------------------------------------------------------ resource-leak
+
+#[test]
+fn leak_positive() {
+    // Discarded thread handle @7, named-but-never-joined handle @11,
+    // Background handle dropped at the spawn statement @15.
+    expect("serve/leak_positive.rs", "resource-leak", &[7, 11, 15], 0);
+}
+
+#[test]
+fn leak_allowed() {
+    expect("serve/leak_allowed.rs", "resource-leak", &[], 1);
+}
+
+#[test]
+fn leak_clean() {
+    expect("serve/leak_clean.rs", "resource-leak", &[], 0);
+}
+
 // ---------------------------------------------------------- corpus totals
 
 #[test]
 fn fixture_corpus_totals() {
     let report = analysis::analyze_paths(&[fixture_root()]).expect("walk fixtures");
-    assert_eq!(report.files_scanned, 25, "fixture .rs file count");
-    assert_eq!(report.findings.len(), 32, "total findings across corpus");
-    assert_eq!(report.suppressed.len(), 10, "total reasoned allows");
+    assert_eq!(report.files_scanned, 39, "fixture .rs file count");
+    // 43 = the 32 intra-file findings plus 11 interprocedural ones: the
+    // xlock inversion + re-entrancy pair, the cross-file xinv_* case
+    // (the corpus run sees both halves), two blocking-under-lock, three
+    // atomics-discipline and three resource-leak.
+    assert_eq!(report.findings.len(), 43, "total findings across corpus");
+    assert_eq!(report.suppressed.len(), 14, "total reasoned allows");
     for s in &report.suppressed {
         assert!(
             !s.reason.is_empty(),
@@ -252,9 +370,9 @@ fn json_output_schema() {
     let rendered = analysis::render_json(&report);
     let v = Json::parse(&rendered).expect("render_json emits valid json");
     assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
-    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 25);
+    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 39);
     let findings = v.get("findings").unwrap().as_arr().unwrap();
-    assert_eq!(findings.len(), 32);
+    assert_eq!(findings.len(), 43);
     for f in findings {
         let lint = f.get("lint").unwrap().as_str().unwrap();
         assert!(LINT_NAMES.contains(&lint), "unknown lint in json: {lint}");
@@ -263,7 +381,7 @@ fn json_output_schema() {
         assert!(!f.get("message").unwrap().as_str().unwrap().is_empty());
     }
     let suppressed = v.get("suppressed").unwrap().as_arr().unwrap();
-    assert_eq!(suppressed.len(), 10);
+    assert_eq!(suppressed.len(), 14);
     for s in suppressed {
         assert!(
             !s.get("reason").unwrap().as_str().unwrap().is_empty(),
@@ -274,25 +392,37 @@ fn json_output_schema() {
     assert_eq!(counts.get("lock-discipline").unwrap().as_usize().unwrap(), 6);
     assert_eq!(counts.get("determinism").unwrap().as_usize().unwrap(), 6);
     assert_eq!(counts.get("obs-discipline").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(counts.get("lock-order-transitive").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(counts.get("blocking-under-lock").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(counts.get("atomics-discipline").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(counts.get("resource-leak").unwrap().as_usize().unwrap(), 3);
 }
 
 // ---------------------------------------------------------------- self-run
 
-/// The gate CI enforces: the crate's own source tree has zero
-/// unsuppressed findings. On failure, print the same text report a
-/// `repro analyze` run would.
+/// The gate CI enforces: the crate's own source tree — `src/`, plus
+/// `benches/` and `tests/` (this fixture corpus is excluded by the
+/// directory walk), all analyzed as ONE crate so bench/test helpers
+/// participate in the call graph exactly as `repro analyze` sees them
+/// — has zero unsuppressed findings. On failure, print the same text
+/// report a `repro analyze` run would.
 #[test]
 fn src_tree_is_clean() {
     // Integration tests run with cwd = the package root (rust/), but
     // fall back to the manifest dir so the test is cwd-independent.
-    let src = Path::new("src");
-    let root = if src.is_dir() {
-        src.to_path_buf()
-    } else {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
-    };
-    let report = analysis::analyze_paths(&[root]).expect("walk src/");
-    assert!(report.files_scanned > 20, "scanned only {} files", report.files_scanned);
+    let roots: Vec<PathBuf> = ["src", "benches", "tests"]
+        .iter()
+        .map(|r| {
+            let p = Path::new(r);
+            if p.is_dir() {
+                p.to_path_buf()
+            } else {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join(r)
+            }
+        })
+        .collect();
+    let report = analysis::analyze_paths(&roots).expect("walk src/ + benches/ + tests/");
+    assert!(report.files_scanned > 30, "scanned only {} files", report.files_scanned);
     assert!(
         report.clean(),
         "`repro analyze` would fail with {} finding(s):\n\n{}",

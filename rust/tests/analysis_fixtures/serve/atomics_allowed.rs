@@ -1,0 +1,15 @@
+// atomics-discipline fixture: the same crossing flag, with its one
+// Relaxed side suppressed by the reason that names the real edge.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+
+struct V {
+    halt: AtomicBool,
+}
+
+fn run_once(v: &'static V) {
+    let h = thread::spawn(move || while !v.halt.load(Ordering::Acquire) {});
+    // analyze: allow(atomics-discipline) the join below is the happens-before edge
+    v.halt.store(true, Ordering::Relaxed);
+    let _ = h.join();
+}

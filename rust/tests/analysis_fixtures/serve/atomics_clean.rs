@@ -1,0 +1,22 @@
+// atomics-discipline fixture: Release/Acquire across the spawn, and
+// the weak compare-exchange inside its retry loop — nothing to report.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+
+struct U {
+    quit: AtomicBool,
+}
+
+fn run_clean(u: &'static U) {
+    let h = thread::spawn(move || while !u.quit.load(Ordering::Acquire) {});
+    u.quit.store(true, Ordering::Release);
+    let _ = h.join();
+}
+
+fn acquire_slot(u: &U) {
+    while u
+        .quit
+        .compare_exchange_weak(false, true, Ordering::AcqRel, Ordering::Acquire)
+        .is_err()
+    {}
+}

@@ -1,0 +1,20 @@
+// atomics-discipline fixture: a Relaxed store/load pair on an
+// AtomicBool that crosses the spawn boundary (no happens-before
+// edge), and a compare_exchange_weak outside any retry loop.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+
+struct W {
+    stop: AtomicBool,
+    ready: AtomicBool,
+}
+
+fn run_workers(w: &'static W) {
+    let h = thread::spawn(move || while !w.stop.load(Ordering::Relaxed) {});
+    w.stop.store(true, Ordering::Relaxed);
+    let _ = h.join();
+}
+
+fn publish_once(w: &W) {
+    let _ = w.ready.compare_exchange_weak(false, true, Ordering::AcqRel, Ordering::Acquire);
+}

@@ -1,0 +1,8 @@
+// resource-leak fixture: a deliberately detached watcher, suppressed
+// with the reason it outlives the session by design.
+use std::thread;
+
+fn detach_watcher() {
+    // analyze: allow(resource-leak) daemon by design; process exit reaps it
+    thread::spawn(|| {});
+}

@@ -1,0 +1,16 @@
+// resource-leak fixture: joined, stored and scoped handles are all
+// accounted for — nothing to report.
+use std::thread;
+
+fn join_handle() {
+    let h = thread::spawn(|| {});
+    let _ = h.join();
+}
+
+fn store_handles(out: &mut Vec<std::thread::JoinHandle<()>>) {
+    out.push(thread::spawn(|| {}));
+}
+
+fn scoped_spawn(s: &Scope) {
+    s.spawn(|| {});
+}

@@ -1,0 +1,16 @@
+// resource-leak fixture: a discarded thread handle (detached thread),
+// a named handle no path joins, and a Background handle dropped at
+// the spawn statement (Drop joins immediately — the work serializes).
+use std::thread;
+
+fn detach_thread() {
+    thread::spawn(|| {});
+}
+
+fn drop_named_handle() {
+    let h = thread::spawn(|| {});
+}
+
+fn serialize_background() {
+    Background::spawn(|| {});
+}

@@ -1,0 +1,15 @@
+// lock-order-transitive fixture (cross-file pair, caller half): holds
+// `tenants` and calls xinv_table.rs's `refresh_routes`, which acquires
+// `inner` — `inner` precedes `tenants` in GLOBAL_ORDER, and the
+// inversion is attributed here, at the call site that reaches it.
+use std::sync::RwLock;
+
+pub struct Router {
+    pub tenants: RwLock<u64>,
+}
+
+pub fn reroute(r: &Router, t: &RouteTable) {
+    let g = write_or_recover(&r.tenants);
+    refresh_routes(t);
+    drop(g);
+}

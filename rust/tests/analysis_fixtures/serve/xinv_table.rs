@@ -1,0 +1,12 @@
+// lock-order-transitive fixture (cross-file pair, callee half): the
+// routing refresh acquires `inner`; xinv_router.rs reaches it while
+// holding `tenants`.
+use std::sync::Mutex;
+
+pub struct RouteTable {
+    pub inner: Mutex<u64>,
+}
+
+pub fn refresh_routes(t: &RouteTable) {
+    *lock_or_recover(&t.inner) += 1;
+}

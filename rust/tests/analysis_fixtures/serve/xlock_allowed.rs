@@ -1,0 +1,19 @@
+// lock-order-transitive fixture: the same cross-call inversion shape,
+// suppressed with the invariant that makes it sound.
+use std::sync::Mutex;
+
+struct A {
+    registry: Mutex<u64>,
+    store: Mutex<u64>,
+}
+
+fn reindex_allowed(a: &A) {
+    *lock_or_recover(&a.registry) += 1;
+}
+
+fn swap_allowed(a: &A) {
+    let g = lock_or_recover(&a.store);
+    // analyze: allow(lock-order-transitive) single-threaded recovery; no other holder exists yet
+    reindex_allowed(a);
+    drop(g);
+}

@@ -1,0 +1,18 @@
+// lock-order-transitive fixture: a cross-call acquisition that
+// follows GLOBAL_ORDER (`inner` before `tenants`) produces nothing.
+use std::sync::Mutex;
+
+struct C {
+    inner: Mutex<u64>,
+    tenants: Mutex<u64>,
+}
+
+fn tag_clean(c: &C) {
+    *lock_or_recover(&c.tenants) += 1;
+}
+
+fn order_clean(c: &C) {
+    let g = lock_or_recover(&c.inner);
+    tag_clean(c);
+    drop(g);
+}

@@ -1,0 +1,31 @@
+// lock-order-transitive fixture: the held-guard set propagates
+// through calls — `reindex` acquires `registry` while `store` (which
+// follows it in GLOBAL_ORDER) is held, and `reprice` re-acquires the
+// `cfg` its caller already holds.
+use std::sync::Mutex;
+
+struct S {
+    registry: Mutex<u64>,
+    store: Mutex<u64>,
+    cfg: Mutex<u64>,
+}
+
+fn reindex(s: &S) {
+    *lock_or_recover(&s.registry) += 1;
+}
+
+fn reprice(s: &S) {
+    *lock_or_recover(&s.cfg) += 1;
+}
+
+fn swap_under_store(s: &S) {
+    let g = lock_or_recover(&s.store);
+    reindex(s);
+    drop(g);
+}
+
+fn bump_under_cfg(s: &S) {
+    let g = lock_or_recover(&s.cfg);
+    reprice(s);
+    drop(g);
+}

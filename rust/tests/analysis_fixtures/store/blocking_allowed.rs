@@ -1,0 +1,16 @@
+// blocking-under-lock fixture: the same fsync under the guard,
+// suppressed with the atomicity argument that makes it deliberate.
+use std::fs::File;
+use std::sync::Mutex;
+
+struct E {
+    wal: Mutex<u64>,
+}
+
+fn sync_under_wal(e: &E, f: &mut File) -> std::io::Result<()> {
+    let g = lock_or_recover(&e.wal);
+    // analyze: allow(blocking-under-lock) the fsync must be atomic with the guarded bump
+    f.sync_data()?;
+    drop(g);
+    Ok(())
+}

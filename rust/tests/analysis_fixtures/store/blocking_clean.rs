@@ -1,0 +1,16 @@
+// blocking-under-lock fixture: the guard is scoped to the in-RAM
+// mutation and the fsync runs after it drops — nothing to report.
+use std::fs::File;
+use std::sync::Mutex;
+
+struct F {
+    wal: Mutex<u64>,
+}
+
+fn append_then_sync(x: &F, f: &mut File) -> std::io::Result<()> {
+    {
+        let g = lock_or_recover(&x.wal);
+        *g += 1;
+    }
+    f.sync_data()
+}

@@ -1,0 +1,21 @@
+// blocking-under-lock fixture: fsync directly under the held WAL
+// guard, and a bulk write reached through a call while it is held.
+use std::fs::File;
+use std::io::Write;
+use std::sync::Mutex;
+
+struct D {
+    wal: Mutex<u64>,
+}
+
+fn flush_segment(f: &mut File, buf: &[u8]) -> std::io::Result<()> {
+    f.write_all(buf)
+}
+
+fn append_under_wal(d: &D, f: &mut File, buf: &[u8]) -> std::io::Result<()> {
+    let g = lock_or_recover(&d.wal);
+    f.sync_data()?;
+    flush_segment(f, buf)?;
+    drop(g);
+    Ok(())
+}

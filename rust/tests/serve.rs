@@ -859,7 +859,7 @@ fn hist_quantiles_track_the_exact_percentile_oracle() {
     sorted.sort_unstable();
     for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
         let exact_us = percentile_us(&sorted, p);
-        let q_us = h.quantile_us(p);
+        let q_us = h.quantile_us(p).unwrap();
         assert!(q_us <= exact_us + 1e-12, "p{p}: hist {q_us} > exact {exact_us}");
         let upper = (2.0 * q_us).max(0.002);
         assert!(exact_us < upper + 1e-12,
