@@ -16,13 +16,20 @@
 //! all to `BENCH_serve.json` (override the path with `BENCH_OUT`) so CI
 //! can archive the run as a machine-readable artifact. `BENCH_CHEAP=1`
 //! runs only the seconds-scale sections — the subset the CI bench job
-//! executes on every push.
+//! executes on every push. The WAL and serving sections additionally
+//! share one timed [`MetricsRegistry`]; its end-of-run snapshot lands
+//! as `METRICS_serve.jsonl` + `.prom` (override with
+//! `BENCH_METRICS_OUT`) — the same artifact a `--metrics-out` run of
+//! `repro serve-bench` produces, archived next to the report.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use std::sync::Arc;
+
 use quantum_peft::coordinator::checkpoint::{self, AdapterManifest};
 use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::obs::{export, MetricsRegistry};
 use quantum_peft::quantum::pauli;
 use quantum_peft::runtime::HostTensor;
 use quantum_peft::serve::registry::theta_checksum;
@@ -40,7 +47,7 @@ use quantum_peft::util::rng::Rng;
 /// Headline numbers one section contributes to `BENCH_serve.json`.
 type Counters = Vec<(String, f64)>;
 
-fn serve_grid() -> Counters {
+fn serve_grid(reg: &Arc<MetricsRegistry>) -> Counters {
     let mut out = Counters::new();
     println!("# serve: closed-loop seeded loadgen, q=5 L=1, zipf s=1.0");
     println!("{:>8} {:>8} {:>10} {:>12} {:>12} {:>12}",
@@ -59,7 +66,12 @@ fn serve_grid() -> Counters {
                 },
                 // timed mode: fifo latencies are logical (zero under a
                 // closed loop), and this grid is about real wall time
-                serve: ServeConfig { workers, fifo: false, ..ServeConfig::default() },
+                serve: ServeConfig {
+                    workers,
+                    fifo: false,
+                    metrics: Some(reg.clone()),
+                    ..ServeConfig::default()
+                },
                 cache_bytes: 8 << 20,
                 ..BenchOpts::default()
             };
@@ -294,7 +306,7 @@ fn bench_dir(name: &str) -> std::path::PathBuf {
 /// record payload is a real register record (tenant + manifest + theta
 /// vector), so records/s is the adapter-churn rate the control plane
 /// can absorb durably.
-fn wal_append_throughput() -> Counters {
+fn wal_append_throughput(reg: &MetricsRegistry) -> Counters {
     let mut out = Counters::new();
     println!("# state store: WAL append throughput, q=5 L=1 register records");
     println!("{:>12} {:>10} {:>14} {:>12}",
@@ -305,7 +317,9 @@ fn wal_append_throughput() -> Counters {
         ("always", Durability::Always, 256),
     ] {
         let dir = bench_dir(&format!("wal_{label}"));
-        let store = StateStore::open(&dir, durability).unwrap().store;
+        let mut opened = StateStore::open(&dir, durability).unwrap();
+        opened.store.instrument(reg, &opened.recovered);
+        let store = opened.store;
         // one record re-appended n times: measures the log, not the RNG
         let rec = bench_record(0, 1);
         let t0 = Instant::now();
@@ -331,11 +345,13 @@ fn wal_append_throughput() -> Counters {
 /// recovery after snapshot compaction truncated the log. The
 /// post-compaction number must be measurably cheaper — that is the
 /// entire point of the snapshot.
-fn recovery_wall_clock() -> Counters {
+fn recovery_wall_clock(reg: &MetricsRegistry) -> Counters {
     const TENANTS: usize = 256;
     const SWAPS: u64 = 8;
     let dir = bench_dir("recover");
-    let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+    let mut opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+    opened.store.instrument(reg, &opened.recovered);
+    let store = opened.store;
     for i in 0..TENANTS {
         store.append(&bench_record(i, 1)).unwrap();
     }
@@ -353,8 +369,11 @@ fn recovery_wall_clock() -> Counters {
     assert_eq!(full.tenants.len(), TENANTS);
 
     // compact: the live state (final generation of each tenant) becomes
-    // the snapshot, the WAL truncates
-    let store = StateStore::open(&dir, Durability::Buffered).unwrap().store;
+    // the snapshot, the WAL truncates. Instrumenting this reopen also
+    // credits the full replay to wal_recovered_* in the artifact.
+    let mut opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+    opened.store.instrument(reg, &opened.recovered);
+    let store = opened.store;
     store.compact(&full.tenants).unwrap();
     drop(store);
 
@@ -461,16 +480,27 @@ fn write_report(cheap: bool, sections: &[(&str, Counters)]) {
 fn main() {
     // BENCH_CHEAP=1: only the seconds-scale sections (what CI runs)
     let cheap = std::env::var("BENCH_CHEAP").map(|v| v == "1").unwrap_or(false);
+    // one timed (non-deterministic) registry across all sections: the
+    // end-of-run snapshot is the second CI artifact next to the report
+    let reg = MetricsRegistry::new(false);
     let mut sections: Vec<(&str, Counters)> = vec![
         ("checkpoint_io", checkpoint_io()),
-        ("wal_append_throughput", wal_append_throughput()),
-        ("recovery_wall_clock", recovery_wall_clock()),
+        ("wal_append_throughput", wal_append_throughput(&reg)),
+        ("recovery_wall_clock", recovery_wall_clock(&reg)),
         ("structured_vs_dense", structured_vs_dense()),
     ];
     if !cheap {
         sections.push(("overload_shedding", overload_shedding()));
-        sections.push(("serve_grid", serve_grid()));
+        sections.push(("serve_grid", serve_grid(&reg)));
         sections.push(("shard_scaling", shard_scaling()));
     }
     write_report(cheap, &sections);
+    let mpath = std::path::PathBuf::from(
+        std::env::var("BENCH_METRICS_OUT")
+            .unwrap_or_else(|_| "METRICS_serve.jsonl".to_string()),
+    );
+    match export::write_snapshot(&reg, &mpath) {
+        Ok(()) => println!("# wrote {} (+ {}.prom)", mpath.display(), mpath.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", mpath.display()),
+    }
 }

@@ -28,7 +28,11 @@ pub enum TokKind {
     /// Integer literal (`0`, `0xff`, `1_000u32`). Value is irrelevant
     /// to every lint; only the *shape* (e.g. `buf[0]`) matters.
     Int,
-    /// Any other literal: float, string, char, byte string.
+    /// String literal (plain, raw, or byte string), carrying its
+    /// source text verbatim (escapes unprocessed) — the
+    /// metrics-discipline lint checks metric-name literals.
+    Str(String),
+    /// Any other literal: float or char.
     Lit,
     /// Single punctuation character (`::` is two `:` tokens).
     Punct(char),
@@ -142,6 +146,8 @@ pub fn lex(source: &str) -> LexedFile {
                     if j < n && chars[j] == '"' {
                         let tok_line = line;
                         j += 1;
+                        let body_start = j;
+                        let mut body_end = None;
                         'raw: while j < n {
                             if chars[j] == '\n' {
                                 line += 1;
@@ -154,6 +160,7 @@ pub fn lex(source: &str) -> LexedFile {
                                     k += 1;
                                 }
                                 if seen == hashes {
+                                    body_end = Some(j);
                                     j = k;
                                     break 'raw;
                                 }
@@ -162,7 +169,13 @@ pub fn lex(source: &str) -> LexedFile {
                                 j += 1;
                             }
                         }
-                        toks.push(Tok { line: tok_line, kind: TokKind::Lit });
+                        let body: String = chars[body_start..body_end.unwrap_or(j)]
+                            .iter()
+                            .collect();
+                        toks.push(Tok {
+                            line: tok_line,
+                            kind: TokKind::Str(body),
+                        });
                         i = j;
                         continue;
                     }
@@ -192,6 +205,8 @@ pub fn lex(source: &str) -> LexedFile {
         if c == '"' {
             let tok_line = line;
             i += 1;
+            let body_start = i;
+            let mut body_end = n;
             while i < n {
                 match chars[i] {
                     '\\' => i += 2,
@@ -200,13 +215,16 @@ pub fn lex(source: &str) -> LexedFile {
                         i += 1;
                     }
                     '"' => {
+                        body_end = i;
                         i += 1;
                         break;
                     }
                     _ => i += 1,
                 }
             }
-            toks.push(Tok { line: tok_line, kind: TokKind::Lit });
+            let body: String =
+                chars[body_start..body_end.min(n)].iter().collect();
+            toks.push(Tok { line: tok_line, kind: TokKind::Str(body) });
             continue;
         }
         // Char literal vs lifetime.
@@ -470,6 +488,22 @@ mod tests {
             .map(|(t, test)| (t.line, *test))
             .collect();
         assert_eq!(unwraps, vec![(1, false), (4, true)]);
+    }
+
+    #[test]
+    fn string_literals_carry_their_text() {
+        let src = "let a = \"wal_fsyncs_total\";\nlet b = r#\"raw body\"#;\n\
+                   let c = \"esc\\\"aped\";";
+        let strs: Vec<String> = lex(src)
+            .toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs,
+                   vec!["wal_fsyncs_total", "raw body", "esc\\\"aped"]);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! does (`.../analysis_fixtures/serve/foo.rs` is "in `serve/`").
 
 use super::graph::CallGraph;
-use super::lexer::{LexedFile, Tok};
+use super::lexer::{LexedFile, Tok, TokKind};
 use super::model::{
     self, acquisitions, binding_name, fn_spans, ident_at, is_int, is_punct, FileModel,
     SpawnBinding, SpawnKind, LOCK_METHODS,
@@ -42,6 +42,7 @@ pub const LINT_NAMES: &[&str] = &[
     "log-discipline",
     "io-durability",
     "obs-discipline",
+    "metrics-discipline",
     "suppression",
 ];
 
@@ -92,6 +93,17 @@ fn interproc_scope(rel: &str) -> bool {
         || rel.contains("store/")
         || rel.contains("obs/")
         || rel.contains("util/pool.rs")
+}
+
+/// Everywhere metrics registration happens. `obs/metrics.rs` is the
+/// registry implementation itself (its internals and doctests register
+/// freely) and is the one exempt module.
+fn metrics_scope(rel: &str) -> bool {
+    let included = [
+        "serve/", "store/", "coordinator/", "runtime/", "obs/", "util/",
+        "quantum/", "peft/", "data/", "config/",
+    ];
+    included.iter().any(|d| rel.contains(d)) && !rel.ends_with("obs/metrics.rs")
 }
 
 pub fn run_all(rel: &str, lx: &LexedFile) -> Vec<Finding> {
@@ -491,6 +503,98 @@ fn obs_discipline(rel: &str, lx: &LexedFile, out: &mut Vec<Finding>) {
             }
         }
     }
+}
+
+// --------------------------------------------------------- metrics-discipline
+
+/// Metric names are an operational contract: a dashboard, an alert or a
+/// grep must find the one registration site from the exported name
+/// alone. Three shapes break that and are findings:
+/// - a computed name (`reg.counter(&format!(..), ..)`) — unfindable;
+/// - a non-snake_case literal — breaks the naming convention every
+///   exporter and dashboard assumes (`[a-z][a-z0-9_]*`);
+/// - the same literal registered at two non-test call sites — the name
+///   no longer identifies its owner; route both through one
+///   `register()` helper.
+///
+/// The once-crate-wide check is global, so this pass runs over the
+/// whole file set (routed like [`run_interproc`], not [`run_all`]).
+pub fn metrics_discipline(files: &[(&str, &LexedFile)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // literal registration sites in scan order: (name, file, line)
+    let mut sites: Vec<(String, String, u32)> = Vec::new();
+    for (rel, lx) in files {
+        if !metrics_scope(rel) {
+            continue;
+        }
+        let toks = &lx.toks;
+        for i in 0..toks.len() {
+            if lx.is_test[i] {
+                continue;
+            }
+            let Some(kind) = ident_at(toks, i + 1)
+                .filter(|m| ["counter", "gauge", "hist"].contains(m))
+            else {
+                continue;
+            };
+            if !(is_punct(toks, i, '.') && is_punct(toks, i + 2, '(')) {
+                continue;
+            }
+            match toks.get(i + 3).map(|t| &t.kind) {
+                Some(TokKind::Str(name)) => {
+                    if snake_case_metric(name) {
+                        sites.push((name.clone(), rel.to_string(), toks[i + 3].line));
+                    } else {
+                        out.push(Finding {
+                            lint: "metrics-discipline",
+                            file: rel.to_string(),
+                            line: toks[i + 3].line,
+                            message: format!(
+                                "metric name \"{name}\" is not snake_case — exported \
+                                 names are a grep/dashboard contract ([a-z][a-z0-9_]*, \
+                                 prefixes like wal_/serve_, counters end in _total)"
+                            ),
+                        });
+                    }
+                }
+                _ => {
+                    out.push(Finding {
+                        lint: "metrics-discipline",
+                        file: rel.to_string(),
+                        line: toks[i + 1].line,
+                        message: format!(
+                            "`.{kind}(` with a computed metric name — names must be \
+                             string literals so every exported metric greps back to \
+                             its one registration site"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for (k, (name, file, line)) in sites.iter().enumerate() {
+        if let Some((_, f0, l0)) = sites[..k].iter().find(|(n, _, _)| n == name) {
+            out.push(Finding {
+                lint: "metrics-discipline",
+                file: file.clone(),
+                line: *line,
+                message: format!(
+                    "metric `{name}` already registered at {f0}:{l0} — each name has \
+                     exactly one non-test registration site; share the handle or \
+                     route both through one register() helper"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `[a-z][a-z0-9_]*` — the exported-name grammar every dashboard query
+/// in this repo assumes.
+fn snake_case_metric(name: &str) -> bool {
+    let mut chars = name.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_lowercase())
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
 }
 
 // ------------------------------------------------------- interprocedural pass
@@ -921,6 +1025,60 @@ mod tests {
         assert_eq!(findings("x/obs/span.rs", src).len(), 0);
         // and modules off the serving path are untouched
         assert_eq!(findings("x/report/a.rs", src).len(), 0);
+    }
+
+    fn metrics_findings(files: &[(&str, &str)]) -> Vec<Finding> {
+        let lexed: Vec<LexedFile> = files.iter().map(|(_, s)| lex(s)).collect();
+        let pairs: Vec<(&str, &LexedFile)> =
+            files.iter().map(|(r, _)| *r).zip(lexed.iter()).collect();
+        metrics_discipline(&pairs)
+    }
+
+    #[test]
+    fn metric_literal_once_is_clean() {
+        let src = "fn r(reg: &MetricsRegistry) {\n\
+                   let c = reg.counter(\"wal_appends_total\", &[], Class::Stable);\n}\n";
+        assert_eq!(metrics_findings(&[("x/store/mod.rs", src)]), vec![]);
+    }
+
+    #[test]
+    fn computed_metric_name_flagged() {
+        let src = "fn r(reg: &R, n: &str) { reg.counter(&format!(\"{n}_total\"), \
+                   &[], Class::Stable); }\n";
+        let f = metrics_findings(&[("x/serve/a.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, "metrics-discipline");
+        assert!(f[0].message.contains("computed"), "{f:?}");
+    }
+
+    #[test]
+    fn non_snake_case_metric_name_flagged() {
+        let src = "fn r(reg: &R) { reg.hist(\"FxLatencyNs\", &[], Class::Stable); }\n";
+        let f = metrics_findings(&[("x/obs/recorder.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("snake_case"), "{f:?}");
+    }
+
+    #[test]
+    fn duplicate_registration_flagged_at_second_site() {
+        let a = "fn r(reg: &R) { reg.counter(\"dup_total\", &[], Class::Stable); }\n";
+        let b = "fn s(reg: &R) {\n reg.counter(\"dup_total\", &[], Class::Stable); }\n";
+        let f = metrics_findings(&[("x/serve/a.rs", a), ("x/store/b.rs", b)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].file, "x/store/b.rs");
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("x/serve/a.rs:1"), "{f:?}");
+    }
+
+    #[test]
+    fn metrics_registry_module_and_tests_are_exempt() {
+        let src = "fn r(reg: &R) { reg.counter(&name, &[], Class::Stable); }\n";
+        assert_eq!(metrics_findings(&[("x/obs/metrics.rs", src)]), vec![]);
+        let test_src = "#[cfg(test)]\nmod tests {\n fn t(reg: &R) { \
+                        reg.counter(&name, &[], Class::Stable); }\n}\n";
+        assert_eq!(metrics_findings(&[("x/obs/export.rs", test_src)]), vec![]);
+        // and out-of-scope modules (the CLI, report rendering) are free
+        assert_eq!(metrics_findings(&[("x/report/a.rs", src)]), vec![]);
     }
 
     #[test]

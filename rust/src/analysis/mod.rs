@@ -32,6 +32,11 @@
 //!   is the only sanctioned wall-clock source on the serving path.
 //! - `suppression` — everywhere: malformed `// analyze:` directives,
 //!   allows without a reason, unknown lint names.
+//! - `metrics-discipline` — crate-wide (non-test code, `obs/metrics.rs`
+//!   itself exempt): every `.counter(`/`.gauge(`/`.hist(` registration
+//!   must pass a snake_case string-literal name, and each name must
+//!   have exactly one registration site — exported metric names are a
+//!   grep/dashboard contract, so every name greps back to one line.
 //!
 //! ## Interprocedural lints
 //!
@@ -162,6 +167,19 @@ fn analyze_set(files: &[(String, String)]) -> Vec<(Vec<Finding>, Vec<Suppressed>
         .map(|((rel, _), lx)| lints::run_all(rel, lx))
         .collect();
     for f in lints::run_interproc(&models, &g) {
+        if let Some(i) = files.iter().position(|(rel, _)| *rel == f.file) {
+            raw[i].push(f);
+        }
+    }
+    // metrics-discipline is crate-wide like the call-graph lints (the
+    // registered-once check is a global property), but needs only the
+    // token streams
+    let pairs: Vec<(&str, &lexer::LexedFile)> = files
+        .iter()
+        .map(|(rel, _)| rel.as_str())
+        .zip(lexed.iter())
+        .collect();
+    for f in lints::metrics_discipline(&pairs) {
         if let Some(i) = files.iter().position(|(rel, _)| *rel == f.file) {
             raw[i].push(f);
         }

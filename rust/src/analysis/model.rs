@@ -45,8 +45,14 @@ pub(crate) fn is_int(toks: &[Tok], i: usize) -> bool {
 }
 
 pub(crate) const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
-pub(crate) const RECOVER_HELPERS: &[&str] =
-    &["lock_or_recover", "read_or_recover", "write_or_recover"];
+pub(crate) const RECOVER_HELPERS: &[&str] = &[
+    "lock_or_recover",
+    "read_or_recover",
+    "write_or_recover",
+    "lock_observed",
+    "read_observed",
+    "write_observed",
+];
 
 /// Methods that can block the calling thread: file durability calls,
 /// bulk writes, channel receives, thread joins and sleeps. `.join()`

@@ -12,10 +12,12 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::data::glue;
+use crate::obs::metrics::{Class, Counter, MetricsRegistry};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::pool;
 
@@ -108,6 +110,39 @@ pub fn aggregate(results: &[RunResult]) -> Vec<AggResult> {
         .collect()
 }
 
+/// Metrics handles for a sweep run: the single registration site for
+/// the `sweep_*` metric family plus the worker-pool instrumentation
+/// threaded into [`crate::util::pool`]. `sweep_cells_total` is
+/// [`Class::Stable`] — the number of executed cells is a pure function
+/// of the plan, so it lands in deterministic snapshots byte-identically
+/// at any `--jobs` value.
+pub struct SweepObs {
+    cells_total: Arc<Counter>,
+    pool: pool::PoolObs,
+}
+
+impl SweepObs {
+    pub fn register(reg: &MetricsRegistry, jobs: usize) -> SweepObs {
+        SweepObs {
+            cells_total: reg.counter("sweep_cells_total", &[], Class::Stable),
+            pool: pool::PoolObs::register(reg, "sweep", jobs.max(1)),
+        }
+    }
+
+    /// Detached handles: instrumented code paths stay unconditional in
+    /// sessions that never built a registry.
+    pub fn disabled() -> SweepObs {
+        SweepObs {
+            cells_total: Counter::detached(),
+            pool: pool::PoolObs::disabled(),
+        }
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.cells_total.get()
+    }
+}
+
 /// Generic parallel executor for a sweep plan: every cell runs through
 /// `run_cell` on one of `jobs` workers, each worker owning private state
 /// from `init(worker_id)` (for real sweeps: its own PJRT runtime). The
@@ -119,9 +154,22 @@ where
     I: Fn(usize) -> Result<S> + Sync,
     F: Fn(&mut S, &Cell, TrainConfig, &EventLog) -> Result<RunResult> + Sync,
 {
+    run_plan_with_obs(plan, jobs, log, init, run_cell, &SweepObs::disabled())
+}
+
+/// [`run_plan_with`] with sweep metrics attached: each completed cell
+/// bumps `sweep_cells_total` and the pool reports steal/park/panic and
+/// per-worker busy-time counters under `pool="sweep"`.
+pub fn run_plan_with_obs<S, I, F>(plan: &SweepPlan, jobs: usize,
+                                  log: &EventLog, init: I, run_cell: F,
+                                  obs: &SweepObs) -> Result<Vec<RunResult>>
+where
+    I: Fn(usize) -> Result<S> + Sync,
+    F: Fn(&mut S, &Cell, TrainConfig, &EventLog) -> Result<RunResult> + Sync,
+{
     let cells = plan.cells();
     let total = cells.len();
-    let results = pool::run_stateful(jobs, cells, init, |state, ctx, cell| {
+    let results = pool::run_stateful_obs(jobs, cells, init, |state, ctx, cell| {
         let wlog = log.for_worker(ctx.worker);
         let cfg = plan.cell_config(&cell);
         wlog.emit("cell_start", vec![
@@ -131,13 +179,14 @@ where
             ("seed", (cell.seed as usize).into()),
         ]);
         let r = run_cell(state, &cell, cfg, &wlog)?;
+        obs.cells_total.inc();
         wlog.emit("cell_done", vec![
             ("tag", cell.tag.as_str().into()),
             ("task", cell.task.name().into()),
             ("metric", crate::util::json::Json::Num(r.best_metric)),
         ]);
         Ok(r)
-    });
+    }, &obs.pool);
     pool::collect_ordered(results)
 }
 
@@ -177,6 +226,14 @@ where
 /// isolated via the cell seed).
 pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                       log: &EventLog) -> Result<Vec<RunResult>> {
+    run_glue_sweep_obs(rt, manifest, plan, log, &SweepObs::disabled())
+}
+
+/// [`run_glue_sweep`] with sweep metrics attached (sequential path:
+/// `sweep_cells_total` advances, pool counters stay at zero).
+pub fn run_glue_sweep_obs(rt: &Runtime, manifest: &Manifest,
+                          plan: &SweepPlan, log: &EventLog, obs: &SweepObs)
+                          -> Result<Vec<RunResult>> {
     let cells = plan.cells();
     let mut results = Vec::with_capacity(cells.len());
     let total = cells.len();
@@ -196,6 +253,7 @@ pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
             extras_override: BTreeMap::new(),
         };
         let r = trainer::run_glue(rt, manifest, &spec, log)?;
+        obs.cells_total.inc();
         log.emit("cell_done", vec![
             ("tag", cell.tag.as_str().into()),
             ("task", cell.task.name().into()),
@@ -218,10 +276,19 @@ pub fn run_glue_sweep(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
 pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                            log: &EventLog, jobs: usize)
                            -> Result<Vec<RunResult>> {
+    run_glue_sweep_jobs_obs(rt, manifest, plan, log, jobs,
+                            &SweepObs::disabled())
+}
+
+/// [`run_glue_sweep_jobs`] with sweep metrics attached: the entry point
+/// `repro sweep --metrics-out` drives.
+pub fn run_glue_sweep_jobs_obs(rt: &Runtime, manifest: &Manifest,
+                               plan: &SweepPlan, log: &EventLog, jobs: usize,
+                               obs: &SweepObs) -> Result<Vec<RunResult>> {
     if jobs <= 1 || plan.cells().len() <= 1 {
-        return run_glue_sweep(rt, manifest, plan, log);
+        return run_glue_sweep_obs(rt, manifest, plan, log, obs);
     }
-    run_plan_with(plan, jobs, log,
+    run_plan_with_obs(plan, jobs, log,
         |worker| rt.for_worker(worker),
         |wrt, cell, cfg, wlog| {
             let spec = GlueRunSpec {
@@ -232,7 +299,7 @@ pub fn run_glue_sweep_jobs(rt: &Runtime, manifest: &Manifest, plan: &SweepPlan,
                 extras_override: BTreeMap::new(),
             };
             trainer::run_glue(wrt.rt(), manifest, &spec, wlog)
-        })
+        }, obs)
 }
 
 /// The GLUE "Avg." column of Tables 2/5: mean of per-task means for one tag.

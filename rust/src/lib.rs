@@ -58,25 +58,48 @@
 //!
 //! ## Observability
 //!
-//! [`obs`] is the serving telemetry layer, threaded through the whole
-//! request path. Every request carries an [`obs::TraceCtx`] (trace id
-//! derived from the seeded stream) through admission → coalesce →
-//! queue → cache-lookup → materialize → apply → respond, with
-//! per-phase durations taken from the [`obs::SpanClock`] — wall-clock
-//! in timed mode, a driver-advanced logical counter in fifo mode, so
-//! traces, latencies and interval snapshots are byte-reproducible.
-//! Per-tenant latency lives in mergeable log₂-bucket histograms
-//! ([`obs::Hist`]: fixed 64 buckets, lock-free increments, O(buckets)
-//! memory per tenant regardless of request count). A per-worker
-//! flight recorder ([`obs::FlightRecorder`]) keeps the last N
-//! completed spans and dumps them as `serve_trace` lines (plus
-//! optional `--trace-dir` JSONL) on demand and at session end.
-//! `--metrics-interval` emits live `serve_interval` snapshots
-//! (req/s, histogram p50/p95/p99, queue depth, cache hit rate,
-//! per-tenant rejects); `--slo-p99-us`/`--slo-error-budget` track
-//! per-tenant SLO error-budget burn ([`obs::SloPolicy`]), rendered as
-//! a compliance section in the serve-bench summary and emitted as
-//! `serve_slo` lines.
+//! [`obs`] is the process-wide observability layer, in two halves.
+//!
+//! The **metrics backplane** ([`obs::metrics`]) is a std-only registry
+//! of named counters, gauges and log₂-bucket histograms, registered
+//! once per `(name, labels)` under `&'static str` names and handed out
+//! as `Arc`-cheap handles whose hot path is a single relaxed atomic op
+//! — no locks, no allocation, no formatting. It is threaded through
+//! every layer: [`util::sync`] observed-lock wrappers (wait time,
+//! acquisitions, poison recoveries per site), [`util::pool`]
+//! (steals, parks, panics, queue depth, per-worker busy time),
+//! [`runtime::exe_cache`] (hits, misses, deduplicated in-flight
+//! waits, compile time), [`store`] (WAL appends/bytes/fsyncs,
+//! snapshot writes, recovery counters), the serve request path
+//! (submitted/completed/failed, latency and batch-size histograms)
+//! and the sweep engine (`sweep_cells_total`). Exporters
+//! ([`obs::export`]) render one atomic snapshot as Prometheus text
+//! and as JSONL — `--metrics-out FILE` on `repro sweep` and `repro
+//! serve-bench` writes both, and `repro stat FILE` renders the JSONL
+//! as a table. Every metric carries a [`obs::metrics::Class`]:
+//! deterministic registries export only `Stable` metrics (pure
+//! functions of the seeded stream), so a fifo-mode snapshot is
+//! byte-identical at any worker count — the same contract as the
+//! response log, and `tests/obs_metrics.rs` pins it. Volatile
+//! metrics (lock waits, pool timings, compile durations) appear in
+//! timed-mode snapshots, where wall-clock truth matters more than
+//! reproducibility.
+//!
+//! The **tracing half** is per-request: every request carries an
+//! [`obs::TraceCtx`] (trace id derived from the seeded stream)
+//! through admission → coalesce → queue → cache-lookup → materialize
+//! → apply → respond, with per-phase durations taken from the
+//! [`obs::SpanClock`] — wall-clock in timed mode, a driver-advanced
+//! logical counter in fifo mode. Per-tenant latency lives in
+//! mergeable log₂-bucket histograms ([`obs::Hist`]: fixed 64
+//! buckets, lock-free increments, O(buckets) memory per tenant). A
+//! per-worker flight recorder ([`obs::FlightRecorder`]) keeps the
+//! last N completed spans and dumps them as `serve_trace` lines
+//! (plus optional `--trace-dir` JSONL). `--metrics-interval` emits
+//! live `serve_interval` snapshots; `--slo-p99-us`/
+//! `--slo-error-budget` track per-tenant SLO error-budget burn
+//! ([`obs::SloPolicy`]) as `serve_slo` lines and a compliance
+//! section in the serve-bench summary.
 //!
 //! ## Durability model
 //!
@@ -142,6 +165,12 @@
 //!   one exempt module); a direct `Instant::now`/`SystemTime::now`
 //!   anywhere else on the serving path bypasses the logical clock and
 //!   breaks fifo latency determinism.
+//! - **metrics-discipline** — metric names passed to
+//!   `.counter(`/`.gauge(`/`.hist(` must be snake_case string
+//!   literals (a computed name defeats grep and dashboards) and each
+//!   name must be registered at exactly one non-test call site
+//!   crate-wide, so the registration site *is* the metric's
+//!   documentation; `obs/metrics.rs` itself is exempt.
 //!
 //! Four lints are *interprocedural*: they run over a crate-wide
 //! name-resolved call graph ([`analysis::graph`]) built from per-file

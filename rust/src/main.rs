@@ -18,7 +18,9 @@ use anyhow::{bail, Context, Result};
 use quantum_peft::analysis;
 use quantum_peft::config;
 use quantum_peft::coordinator::events::EventLog;
-use quantum_peft::coordinator::sweep::{self, SweepPlan};
+use quantum_peft::coordinator::sweep::{self, SweepObs, SweepPlan};
+use quantum_peft::obs::export;
+use quantum_peft::obs::MetricsRegistry;
 use quantum_peft::coordinator::trainer::{self, GlueRunSpec};
 use quantum_peft::data::glue;
 use quantum_peft::report::{self, tables};
@@ -51,7 +53,7 @@ fn parse_args() -> Result<Args> {
 
 fn main() -> Result<()> {
     let args = parse_args()?;
-    if args.cmd != "analyze" && !args.positional.is_empty() {
+    if args.cmd != "analyze" && args.cmd != "stat" && !args.positional.is_empty() {
         bail!("unexpected argument {:?} (flags are --key value pairs)", args.positional[0]);
     }
     match args.cmd.as_str() {
@@ -66,6 +68,7 @@ fn main() -> Result<()> {
         "e2e" => cmd_e2e(&args),
         "table" => cmd_table(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "stat" => cmd_stat(&args),
         "analyze" => cmd_analyze(&args),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -79,7 +82,7 @@ commands:
            [--lr F] [--seed S] [--preset P] [--no-backbone true|false]
   sweep    --tags <a,b,...> [--tasks sst2,cola,...] [--seeds 0..4|0,1,2]
            [--jobs N|auto] [--steps N] [--lr F] [--preset P]
-           [--no-backbone true|false]
+           [--no-backbone true|false] [--metrics-out FILE]
            runs the (tag, task, seed) grid on a work-stealing pool
            (--jobs workers sharing one compile cache; default 1) and
            prints mean±std over seeds. --seeds a..b is INCLUSIVE
@@ -87,6 +90,10 @@ commands:
            aggregates are byte-identical for every --jobs value; only
            wall-clock and the event log's interleaving and per-line
            worker tags change (jobs > 1 stamps a \"worker\" field).
+           --metrics-out FILE writes an end-of-run metrics snapshot:
+           JSONL at FILE plus Prometheus text at FILE.prom. The
+           deterministic (Stable) subset — e.g. sweep_cells_total — is
+           byte-identical for every --jobs value.
   e2e      --tag <dec_tag> [--preset P]
   table    --id table1|table2|...|table10|fig6|fig5-params [--preset P]
            (sweep- and panel-backed tables — including the Table 3/4 E2E
@@ -100,6 +107,7 @@ commands:
            [--state-dir PATH] [--durability buffered|always|N]
            [--shards N] [--metrics-interval N] [--slo-p99-us F]
            [--slo-error-budget F] [--trace-dir PATH] [--recorder-cap N]
+           [--metrics-out FILE]
            multi-tenant adapter serving benchmark: seeded Zipf loadgen
            against the serve registry/scheduler (closed loop by default;
            --rate > 0 switches to open-loop arrivals and timed batching).
@@ -139,16 +147,31 @@ commands:
            respond, with the last --recorder-cap spans per worker dumped
            as serve_trace lines at session end (--trace-dir also writes
            them as JSONL files).
+           --metrics-out FILE dumps the process-wide metrics registry
+           at session end: JSONL at FILE plus Prometheus text at
+           FILE.prom (render with `repro stat FILE`). In fifo mode the
+           snapshot holds the deterministic (Stable) subset — request /
+           WAL / sweep counters and the serve latency and batch-size
+           histograms — and is byte-identical at any --workers and any
+           --shards split; timed mode adds lock-wait, pool, compile
+           cache and fsync timing metrics. Nonsense observability knobs
+           (--metrics-interval 0, --recorder-cap 0, negative
+           --slo-error-budget) fail fast with a typed error before the
+           bench starts.
            fifo mode is byte-deterministic per seed at any --workers,
            rejections included (open-loop gaps advance a logical clock
            instead of sleeping); summary (p50/p95/p99, req/s, batch
            histogram, cache + admission counters, SLO compliance) prints
            here and lands in the event log as serve_* lines.
+  stat     FILE                       render a --metrics-out JSONL
+           snapshot as an aligned NAME/LABELS/TYPE/CLASS/VALUE table
+           (histograms show count and approximate p50/p90/p99)
   analyze  [--format text|json|github] [--baseline FILE]
            [--write-baseline FILE] [paths...]
            repo-invariant static analysis (determinism, lock-discipline,
            panic-path, framing-casts, log-discipline, io-durability,
-           obs-discipline, plus the interprocedural call-graph lints
+           obs-discipline, metrics-discipline, plus the
+           interprocedural call-graph lints
            lock-order-transitive, blocking-under-lock,
            atomics-discipline, resource-leak):
            lexes the given .rs files/directories (default: the crate's
@@ -391,9 +414,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let n_cells = plan.cells().len();
     println!("sweep: {n_cells} cells ({} tags x {} tasks x {} seeds), jobs={jobs}",
              plan.tags.len(), plan.tasks.len(), plan.seeds.len());
+    // --metrics-out: a deterministic registry (only Stable metrics land
+    // in the snapshot, so the dump is byte-identical for every --jobs)
+    // threaded through the sweep pool and the shared compile cache
+    let metrics_out = args.flags.get("metrics-out")
+        .map(std::path::PathBuf::from);
+    let (mreg, sobs) = match &metrics_out {
+        Some(_) => {
+            let reg = MetricsRegistry::new(true);
+            rt.cache().instrument(&reg);
+            let sobs = SweepObs::register(&reg, jobs);
+            (Some(reg), sobs)
+        }
+        None => (None, SweepObs::disabled()),
+    };
     let t0 = Instant::now();
-    let results = sweep::run_glue_sweep_jobs(&rt, &manifest, &plan, &log, jobs)?;
+    let results =
+        sweep::run_glue_sweep_jobs_obs(&rt, &manifest, &plan, &log, jobs, &sobs)?;
     let wall = t0.elapsed().as_secs_f64();
+    if let (Some(path), Some(reg)) = (&metrics_out, &mreg) {
+        export::write_snapshot(reg, path)?;
+        println!("metrics snapshot: {} (+ {}.prom)",
+                 path.display(), path.display());
+    }
     let aggs = sweep::aggregate(&results);
     let rows: Vec<Vec<String>> = aggs.iter()
         .map(|a| vec![
@@ -543,6 +586,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.flags.get("metrics-interval") {
         serve_cfg.metrics_interval = v.parse().context("--metrics-interval")?;
+        // absent = interval snapshots off; an explicit 0 is a request
+        // for snapshots that can never fire — reject it, typed
+        if serve_cfg.metrics_interval == 0 {
+            return Err(quantum_peft::serve::InvalidObsKnob {
+                knob: "metrics_interval",
+                value: 0.0,
+                detail: "an explicit --metrics-interval 0 would never \
+                         snapshot; omit the flag to disable interval \
+                         metrics",
+            }
+            .into());
+        }
     }
     if let Some(v) = args.flags.get("slo-p99-us") {
         serve_cfg.slo_p99_us = v.parse().context("--slo-p99-us")?;
@@ -581,6 +636,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             n
         }
     };
+    // one validation choke point for every observability knob
+    // (zero recorder cap, negative SLO target, zero/negative budget):
+    // fail fast with the typed InvalidObsKnob before any bench work
+    serve_cfg.validate_obs()?;
+    // --metrics-out: registry determinism follows the bench mode, so a
+    // fifo snapshot is byte-identical at any --workers / --shards
+    let metrics_out = args.flags.get("metrics-out")
+        .map(std::path::PathBuf::from);
+    if metrics_out.is_some() {
+        serve_cfg.metrics = Some(MetricsRegistry::new(serve_cfg.fifo));
+    }
     opts.load = load;
     opts.serve = serve_cfg;
     let log = event_log()?;
@@ -599,6 +665,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let (summary, _log_text) = serve::run_serve_bench(&opts, &log)?;
         print!("{}", summary.render());
     }
+    if let (Some(path), Some(reg)) = (&metrics_out, &opts.serve.metrics) {
+        export::write_snapshot(reg, path)?;
+        println!("metrics snapshot: {} (+ {}.prom)",
+                 path.display(), path.display());
+    }
+    Ok(())
+}
+
+/// `repro stat FILE` — render a `--metrics-out` JSONL snapshot as an
+/// aligned table (the human-facing view; the JSONL and `.prom` files
+/// are the machine-facing ones).
+fn cmd_stat(args: &Args) -> Result<()> {
+    if args.positional.len() != 1 {
+        bail!("stat takes exactly one metrics JSONL file \
+               (written by --metrics-out)");
+    }
+    let path = &args.positional[0];
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading metrics snapshot {path}"))?;
+    print!("{}", export::render_stat_table(&text)
+        .with_context(|| format!("rendering {path}"))?);
     Ok(())
 }
 

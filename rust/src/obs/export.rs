@@ -1,0 +1,342 @@
+//! Snapshot exporters for the metrics registry.
+//!
+//! One [`MetricsRegistry::snapshot`] call feeds every renderer, so the
+//! Prometheus text and the JSONL file written by
+//! [`write_snapshot`] describe the *same* instant. Both formats are
+//! fully sorted (the snapshot is ordered by `(name, labels)` and JSON
+//! objects serialize with sorted keys), so a deterministic registry's
+//! exports are byte-identical at any worker count — the property
+//! `tests/obs_metrics.rs` pins across workers 1/4/8.
+//!
+//! - **Prometheus text exposition**: `# TYPE` comment per metric name,
+//!   `name{labels} value` samples; histograms render as cumulative
+//!   `_bucket{le="..."}` samples over the nonzero log₂ buckets plus
+//!   `+Inf` and `_count`.
+//! - **JSONL**: one object per metric per line (`util::json`, sorted
+//!   keys), the machine-diffable form `repro stat` reads back.
+//! - [`render_stat_table`]: the `repro stat` pretty-printer — a sorted
+//!   fixed-width table with nearest-rank p50/p90/p99 reconstructed
+//!   from histogram buckets.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::obs::hist::Hist;
+use crate::obs::metrics::{Class, MetricsRegistry, MetricValue, Reading};
+use crate::util::json::{obj, Json};
+
+fn label_str(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Render a snapshot in the Prometheus text exposition format.
+pub fn render_prometheus(snap: &[MetricValue]) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    for v in snap {
+        if v.name != last_name {
+            let ty = match v.reading {
+                Reading::Counter(_) => "counter",
+                Reading::Gauge(_) => "gauge",
+                Reading::Hist { .. } => "histogram",
+            };
+            out.push_str(&format!("# TYPE {} {}\n", v.name, ty));
+            last_name = &v.name;
+        }
+        match &v.reading {
+            Reading::Counter(n) => {
+                out.push_str(&format!("{}{} {}\n", v.name, label_str(&v.labels), n));
+            }
+            Reading::Gauge(n) => {
+                out.push_str(&format!("{}{} {}\n", v.name, label_str(&v.labels), n));
+            }
+            Reading::Hist { count, buckets } => {
+                let mut cum = 0u64;
+                for &(i, n) in buckets {
+                    cum += n;
+                    // bucket i holds values <= 2^(i+1) - 1
+                    let le = if i >= 63 {
+                        "+Inf".to_string()
+                    } else {
+                        ((1u64 << (i + 1)) - 1).to_string()
+                    };
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        v.name,
+                        hist_labels(&v.labels, &le),
+                        cum
+                    ));
+                }
+                if buckets.last().map(|&(i, _)| i < 63).unwrap_or(true) {
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        v.name,
+                        hist_labels(&v.labels, "+Inf"),
+                        count
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_count{} {}\n",
+                    v.name,
+                    label_str(&v.labels),
+                    count
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn hist_labels(labels: &[(String, String)], le: &str) -> String {
+    let mut ls: Vec<(String, String)> = labels.to_vec();
+    ls.push(("le".to_string(), le.to_string()));
+    label_str(&ls)
+}
+
+fn value_json(v: &MetricValue) -> Json {
+    let labels = Json::Obj(
+        v.labels
+            .iter()
+            .map(|(k, val)| (k.clone(), Json::Str(val.clone())))
+            .collect(),
+    );
+    let class = match v.class {
+        Class::Stable => "stable",
+        Class::Volatile => "volatile",
+    };
+    match &v.reading {
+        Reading::Counter(n) => obj(vec![
+            ("class", class.into()),
+            ("labels", labels),
+            ("name", v.name.as_str().into()),
+            ("type", "counter".into()),
+            ("value", (*n as f64).into()),
+        ]),
+        Reading::Gauge(n) => obj(vec![
+            ("class", class.into()),
+            ("labels", labels),
+            ("name", v.name.as_str().into()),
+            ("type", "gauge".into()),
+            ("value", (*n as f64).into()),
+        ]),
+        Reading::Hist { count, buckets } => obj(vec![
+            ("buckets", Json::Arr(
+                buckets
+                    .iter()
+                    .map(|&(i, n)| {
+                        Json::Arr(vec![
+                            (Hist::bucket_floor(i) as f64).into(),
+                            (n as f64).into(),
+                        ])
+                    })
+                    .collect(),
+            )),
+            ("class", class.into()),
+            ("count", (*count as f64).into()),
+            ("labels", labels),
+            ("name", v.name.as_str().into()),
+            ("type", "hist".into()),
+        ]),
+    }
+}
+
+/// Render a snapshot as JSONL: one sorted-key JSON object per line.
+pub fn render_jsonl(snap: &[MetricValue]) -> String {
+    let mut out = String::new();
+    for v in snap {
+        out.push_str(&value_json(v).dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write one atomic snapshot of `reg` to `path` (JSONL) and to
+/// `path` + `.prom` (Prometheus text). Both files render the same
+/// snapshot vector.
+pub fn write_snapshot(reg: &MetricsRegistry, path: &Path) -> Result<()> {
+    let snap = reg.snapshot();
+    std::fs::write(path, render_jsonl(&snap))
+        .with_context(|| format!("writing metrics snapshot {}", path.display()))?;
+    let prom = PathBuf::from(format!("{}.prom", path.display()));
+    std::fs::write(&prom, render_prometheus(&snap))
+        .with_context(|| format!("writing metrics snapshot {}", prom.display()))?;
+    Ok(())
+}
+
+/// Nearest-rank quantile over `(floor, count)` bucket pairs — the same
+/// walk [`Hist::quantile`] does, reconstructed from an exported
+/// snapshot line.
+fn bucket_quantile(buckets: &[(u64, u64)], total: u64, p: f64) -> u64 {
+    let rank = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for &(floor, n) in buckets {
+        cum += n;
+        if cum >= rank {
+            return floor;
+        }
+    }
+    buckets.last().map(|&(floor, _)| floor).unwrap_or(0)
+}
+
+/// Pretty-print a JSONL snapshot (the `--metrics-out` file) as a
+/// sorted fixed-width table — the `repro stat` subcommand.
+pub fn render_stat_table(jsonl: &str) -> Result<String> {
+    let mut rows: Vec<[String; 5]> = Vec::new();
+    for (lineno, line) in jsonl.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .with_context(|| format!("snapshot line {}", lineno + 1))?;
+        let name = v.get("name")?.as_str()?.to_string();
+        let labels = v
+            .get("labels")?
+            .as_obj()?
+            .iter()
+            .map(|(k, val)| {
+                Ok(format!("{k}={}", val.as_str()?))
+            })
+            .collect::<Result<Vec<String>>>()?
+            .join(",");
+        let class = v.get("class")?.as_str()?.to_string();
+        let ty = v.get("type")?.as_str()?.to_string();
+        let value = match ty.as_str() {
+            "hist" => {
+                let count = v.get("count")?.as_f64()? as u64;
+                let buckets = v
+                    .get("buckets")?
+                    .as_arr()?
+                    .iter()
+                    .map(|b| {
+                        let pair = b.as_arr()?;
+                        anyhow::ensure!(pair.len() == 2, "bucket pair");
+                        Ok((pair[0].as_f64()? as u64, pair[1].as_f64()? as u64))
+                    })
+                    .collect::<Result<Vec<(u64, u64)>>>()?;
+                if count == 0 {
+                    "count=0".to_string()
+                } else {
+                    format!(
+                        "count={} p50>={} p90>={} p99>={}",
+                        count,
+                        bucket_quantile(&buckets, count, 50.0),
+                        bucket_quantile(&buckets, count, 90.0),
+                        bucket_quantile(&buckets, count, 99.0)
+                    )
+                }
+            }
+            _ => v.get("value")?.as_f64()?.to_string(),
+        };
+        rows.push([name, labels, ty, class, value]);
+    }
+    rows.sort();
+    let mut w = [4usize, 6, 4, 5, 5]; // header widths: NAME LABELS TYPE CLASS VALUE
+    for r in &rows {
+        for (i, cell) in r.iter().enumerate() {
+            w[i] = w[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let header = ["NAME", "LABELS", "TYPE", "CLASS", "VALUE"];
+    for (i, h) in header.iter().enumerate() {
+        out.push_str(&format!("{:<width$}  ", h, width = w[i]));
+    }
+    out.push('\n');
+    for r in &rows {
+        for (i, cell) in r.iter().enumerate() {
+            out.push_str(&format!("{:<width$}  ", cell, width = w[i]));
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> std::sync::Arc<MetricsRegistry> {
+        let reg = MetricsRegistry::new(false);
+        reg.counter("req_total", &[("tenant", "a")], Class::Stable).add(3);
+        reg.counter("req_total", &[("tenant", "b")], Class::Stable).add(1);
+        reg.gauge("depth", &[], Class::Volatile).set(-2);
+        let h = reg.hist("lat_ns", &[], Class::Stable);
+        h.record(1);
+        h.record(9);
+        h.record(9);
+        reg
+    }
+
+    #[test]
+    fn prometheus_text_is_sorted_and_typed() {
+        let text = render_prometheus(&sample_registry().snapshot());
+        let expected = "\
+# TYPE depth gauge
+depth -2
+# TYPE lat_ns histogram
+lat_ns_bucket{le=\"1\"} 1
+lat_ns_bucket{le=\"15\"} 3
+lat_ns_bucket{le=\"+Inf\"} 3
+lat_ns_count 3
+# TYPE req_total counter
+req_total{tenant=\"a\"} 3
+req_total{tenant=\"b\"} 1
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_stat_table() {
+        let jsonl = render_jsonl(&sample_registry().snapshot());
+        // every line parses as standalone JSON
+        for line in jsonl.lines() {
+            Json::parse(line).unwrap();
+        }
+        let table = render_stat_table(&jsonl).unwrap();
+        assert!(table.starts_with("NAME"), "{table}");
+        assert!(table.contains("req_total"), "{table}");
+        assert!(table.contains("tenant=a"), "{table}");
+        assert!(table.contains("count=3 p50>=8 p90>=8 p99>=8"), "{table}");
+    }
+
+    #[test]
+    fn stat_table_rejects_garbage() {
+        assert!(render_stat_table("not json\n").is_err());
+        assert!(render_stat_table("{\"no\":\"name\"}\n").is_err());
+    }
+
+    #[test]
+    fn deterministic_export_is_stable_only() {
+        let reg = MetricsRegistry::new(true);
+        reg.counter("a_total", &[], Class::Stable).inc();
+        reg.counter("b_total", &[], Class::Volatile).inc();
+        let jsonl = render_jsonl(&reg.snapshot());
+        assert!(jsonl.contains("a_total"));
+        assert!(!jsonl.contains("b_total"));
+    }
+
+    #[test]
+    fn write_snapshot_emits_both_formats() {
+        let dir = std::env::temp_dir().join(format!(
+            "obs_export_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        write_snapshot(&sample_registry(), &path).unwrap();
+        let jsonl = std::fs::read_to_string(&path).unwrap();
+        let prom =
+            std::fs::read_to_string(dir.join("metrics.jsonl.prom")).unwrap();
+        assert!(jsonl.contains("\"name\":\"req_total\""));
+        assert!(prom.contains("# TYPE req_total counter"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,377 @@
+//! Process-wide metrics registry: the observability backplane.
+//!
+//! [`MetricsRegistry`] is a std-only, process-wide registry of named
+//! metrics. Handles ([`Counter`], [`Gauge`], [`Hist`]) are `Arc`-cheap:
+//! registration takes the registry lock once per `(name, labels)` key
+//! and every subsequent update is a single relaxed atomic op — the hot
+//! path never locks. Registering the same key twice returns the *same*
+//! handle, which is how the sharded serving tier rolls up fleet totals:
+//! each shard clones one `ServeConfig` (and therefore one registry
+//! `Arc`), so `serve_requests_completed_total` counts across the fleet
+//! without any merge step.
+//!
+//! # Determinism contract
+//!
+//! Every metric declares a [`Class`] at registration:
+//!
+//! - [`Class::Stable`] — a pure function of the (seeded) input stream
+//!   in fifo mode: request counts, WAL append counts/bytes, logical
+//!   latency histograms. Exported snapshots of a deterministic registry
+//!   contain *only* these, so the export is byte-identical at any
+//!   worker count (pinned by `tests/obs_metrics.rs`).
+//! - [`Class::Volatile`] — scheduling- or wall-clock-dependent: lock
+//!   wait histograms, steal/park counters, cache hit ratios, fsync
+//!   latencies. Present in [`MetricsRegistry::snapshot_full`] and in
+//!   timed-mode exports, excluded from deterministic exports.
+//!
+//! A deterministic registry's [`SpanClock`] is logical, so any duration
+//! self-measured through [`MetricsRegistry::clock`] reads 0 in fifo
+//! mode — instrumentation code is identical in both modes and the lint
+//! gate (`obs-discipline`) keeps `Instant::now` out of this module.
+//!
+//! Subsystems that may run without a registry hold *detached* handles
+//! ([`Counter::detached`] etc.): same types, never exported, so the
+//! instrumented code paths stay branch-free.
+
+use std::collections::btree_map;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::hist::Hist;
+use crate::obs::span::SpanClock;
+use crate::util::sync::lock_or_recover;
+
+/// Export class of a metric: is its value a pure function of the
+/// seeded input stream under fifo mode?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Deterministic under fifo mode — included in every export.
+    Stable,
+    /// Scheduling/wall-clock dependent — excluded from deterministic
+    /// exports, visible in full snapshots and timed-mode exports.
+    Volatile,
+}
+
+/// Monotone counter; one relaxed `fetch_add` per update.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A handle not attached to any registry (never exported).
+    pub fn detached() -> Arc<Counter> {
+        Arc::new(Counter::default())
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins signed gauge (queue depths, in-flight counts).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// A handle not attached to any registry (never exported).
+    pub fn detached() -> Arc<Gauge> {
+        Arc::new(Gauge::default())
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A detached histogram handle (never exported).
+pub fn detached_hist() -> Arc<Hist> {
+    Arc::new(Hist::new())
+}
+
+#[derive(Clone, Debug)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+#[derive(Debug)]
+struct Registered {
+    class: Class,
+    handle: Handle,
+}
+
+/// `(name, sorted labels)` — the registry key and the export sort key.
+type MetricKey = (String, Vec<(String, String)>);
+
+/// One metric's value at snapshot time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reading {
+    Counter(u64),
+    Gauge(i64),
+    /// Total sample count plus the nonzero `(log₂ bucket index, count)`
+    /// pairs, in bucket order.
+    Hist { count: u64, buckets: Vec<(usize, u64)> },
+}
+
+/// One row of a registry snapshot, sorted by `(name, labels)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MetricValue {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub class: Class,
+    pub reading: Reading,
+}
+
+/// The process-wide registry. See the module docs for the determinism
+/// contract; see [`crate::obs`] for naming conventions.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    deterministic: bool,
+    clock: Arc<SpanClock>,
+    metrics: Mutex<BTreeMap<MetricKey, Registered>>,
+}
+
+impl MetricsRegistry {
+    /// A deterministic registry carries a logical [`SpanClock`] (reads
+    /// 0 unless advanced) and exports only [`Class::Stable`] metrics.
+    pub fn new(deterministic: bool) -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry {
+            deterministic,
+            clock: Arc::new(SpanClock::new(deterministic)),
+            metrics: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn is_deterministic(&self) -> bool {
+        self.deterministic
+    }
+
+    /// The clock instrumentation sites measure durations on: logical
+    /// (always 0 unless advanced) for a deterministic registry, wall
+    /// otherwise. Duration metrics recorded through it are `Volatile`.
+    pub fn clock(&self) -> Arc<SpanClock> {
+        self.clock.clone()
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut ls: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        ls.sort();
+        (name.to_string(), ls)
+    }
+
+    /// Get-or-create a counter. Re-registering an existing key returns
+    /// the same handle; a kind clash (the key already names a gauge or
+    /// histogram) returns a detached handle — the `metrics-discipline`
+    /// lint flags the duplicate registration site statically.
+    pub fn counter(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+        class: Class,
+    ) -> Arc<Counter> {
+        let mut m = lock_or_recover(&self.metrics);
+        match m.entry(Self::key(name, labels)) {
+            btree_map::Entry::Occupied(e) => match &e.get().handle {
+                Handle::Counter(c) => c.clone(),
+                _ => Counter::detached(),
+            },
+            btree_map::Entry::Vacant(v) => {
+                let c = Counter::detached();
+                v.insert(Registered { class, handle: Handle::Counter(c.clone()) });
+                c
+            }
+        }
+    }
+
+    /// Get-or-create a gauge (same semantics as
+    /// [`counter`](MetricsRegistry::counter)).
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+        class: Class,
+    ) -> Arc<Gauge> {
+        let mut m = lock_or_recover(&self.metrics);
+        match m.entry(Self::key(name, labels)) {
+            btree_map::Entry::Occupied(e) => match &e.get().handle {
+                Handle::Gauge(g) => g.clone(),
+                _ => Gauge::detached(),
+            },
+            btree_map::Entry::Vacant(v) => {
+                let g = Gauge::detached();
+                v.insert(Registered { class, handle: Handle::Gauge(g.clone()) });
+                g
+            }
+        }
+    }
+
+    /// Get-or-create a log₂-bucket histogram (same semantics as
+    /// [`counter`](MetricsRegistry::counter)).
+    pub fn hist(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+        class: Class,
+    ) -> Arc<Hist> {
+        let mut m = lock_or_recover(&self.metrics);
+        match m.entry(Self::key(name, labels)) {
+            btree_map::Entry::Occupied(e) => match &e.get().handle {
+                Handle::Hist(h) => h.clone(),
+                _ => detached_hist(),
+            },
+            btree_map::Entry::Vacant(v) => {
+                let h = detached_hist();
+                v.insert(Registered { class, handle: Handle::Hist(h.clone()) });
+                h
+            }
+        }
+    }
+
+    /// The export view: every metric for a timed registry, only
+    /// [`Class::Stable`] metrics for a deterministic one — this filter
+    /// is what makes fifo exports byte-identical at any worker count.
+    pub fn snapshot(&self) -> Vec<MetricValue> {
+        self.snap(self.deterministic)
+    }
+
+    /// Every registered metric regardless of class (debugging, the
+    /// timed-mode smoke tests).
+    pub fn snapshot_full(&self) -> Vec<MetricValue> {
+        self.snap(false)
+    }
+
+    fn snap(&self, stable_only: bool) -> Vec<MetricValue> {
+        let m = lock_or_recover(&self.metrics);
+        m.iter()
+            .filter(|(_, r)| !stable_only || r.class == Class::Stable)
+            .map(|((name, labels), r)| MetricValue {
+                name: name.clone(),
+                labels: labels.clone(),
+                class: r.class,
+                reading: match &r.handle {
+                    Handle::Counter(c) => Reading::Counter(c.get()),
+                    Handle::Gauge(g) => Reading::Gauge(g.get()),
+                    Handle::Hist(h) => {
+                        let counts = h.counts();
+                        Reading::Hist {
+                            count: counts.iter().sum(),
+                            buckets: counts
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, &n)| n > 0)
+                                .map(|(i, &n)| (i, n))
+                                .collect(),
+                        }
+                    }
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reregistration_returns_the_same_handle() {
+        let reg = MetricsRegistry::new(true);
+        let a = reg.counter("x_total", &[("site", "a")], Class::Stable);
+        let b = reg.counter("x_total", &[("site", "a")], Class::Stable);
+        a.inc();
+        b.add(2);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.get(), 3);
+        // a different label set is a different metric
+        let c = reg.counter("x_total", &[("site", "b")], Class::Stable);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn label_order_does_not_split_metrics() {
+        let reg = MetricsRegistry::new(true);
+        let a = reg.gauge("g", &[("a", "1"), ("b", "2")], Class::Stable);
+        let b = reg.gauge("g", &[("b", "2"), ("a", "1")], Class::Stable);
+        a.set(7);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(b.get(), 7);
+    }
+
+    #[test]
+    fn deterministic_snapshot_excludes_volatile_metrics() {
+        let reg = MetricsRegistry::new(true);
+        reg.counter("stable_total", &[], Class::Stable).inc();
+        reg.counter("volatile_total", &[], Class::Volatile).inc();
+        reg.hist("wait_ns", &[], Class::Volatile).record(5);
+        let names: Vec<&str> =
+            reg.snapshot().iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, ["stable_total"]);
+        let full: Vec<&str> =
+            reg.snapshot_full().iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(full, ["stable_total", "volatile_total", "wait_ns"]);
+    }
+
+    #[test]
+    fn timed_registry_exports_everything() {
+        let reg = MetricsRegistry::new(false);
+        reg.counter("volatile_total", &[], Class::Volatile).inc();
+        assert_eq!(reg.snapshot().len(), 1);
+        assert!(!reg.clock().is_logical());
+    }
+
+    #[test]
+    fn kind_clash_yields_a_detached_handle() {
+        let reg = MetricsRegistry::new(false);
+        let c = reg.counter("mixed", &[], Class::Stable);
+        c.inc();
+        let g = reg.gauge("mixed", &[], Class::Stable);
+        g.set(99);
+        // the registered counter is untouched by the detached gauge
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].reading, Reading::Counter(1));
+    }
+
+    #[test]
+    fn hist_reading_carries_nonzero_buckets_only() {
+        let reg = MetricsRegistry::new(false);
+        let h = reg.hist("lat_ns", &[], Class::Stable);
+        h.record(1);
+        h.record(9);
+        h.record(9);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap[0].reading,
+            Reading::Hist { count: 3, buckets: vec![(0, 1), (3, 2)] }
+        );
+    }
+
+    #[test]
+    fn deterministic_clock_is_logical() {
+        let reg = MetricsRegistry::new(true);
+        assert!(reg.is_deterministic());
+        let clock = reg.clock();
+        assert!(clock.is_logical());
+        assert_eq!(clock.now_ns(), 0);
+    }
+}

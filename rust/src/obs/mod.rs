@@ -1,38 +1,74 @@
-//! Serving telemetry: trace spans, mergeable histograms, per-worker
-//! flight recorders, and per-tenant SLO error budgets.
+//! Observability: trace spans, mergeable histograms, flight recorders,
+//! SLO budgets — and the process-wide metrics backplane.
 //!
-//! This is the observability substrate the serving tier threads through
-//! every request (admission → coalesce → queue → cache lookup →
-//! materialize → apply → respond):
+//! Two layers live here. The *serving telemetry* layer (PR 8) rides
+//! inside each request: [`span`] ([`SpanClock`], [`TraceCtx`]),
+//! [`hist`] ([`Hist`]), [`recorder`] ([`FlightRecorder`]), [`slo`]
+//! ([`SloPolicy`]). The *metrics backplane* ([`metrics`], [`export`])
+//! spans the whole process: every subsystem — `util::sync` locks,
+//! the `util::pool` workers, the `runtime` compile cache, the `store`
+//! WAL, the serving tier — registers named handles on one
+//! [`MetricsRegistry`] and exports a single atomic snapshot as
+//! Prometheus text or JSONL (`--metrics-out`, `repro stat`).
 //!
-//! - [`span`]: the [`SpanClock`] — the **only** module on the serving
-//!   path allowed to read the wall clock (enforced by the
-//!   `obs-discipline` lint in [`crate::analysis`]) — plus the
-//!   per-request [`TraceCtx`] (seeded-stream-derived trace ids,
-//!   per-phase durations via the [`Span`] guard);
-//! - [`hist`]: [`Hist`], a fixed 64-bucket log₂ histogram with
-//!   lock-free atomic increments and bucket-wise merging — O(buckets)
-//!   memory per tenant instead of O(requests), cheap mid-run quantiles;
-//! - [`recorder`]: [`FlightRecorder`], a fixed-capacity per-worker ring
-//!   of the last N completed [`TraceRecord`]s, dumped as `serve_trace`
-//!   EventLog lines (and optional `--trace-dir` JSONL) on demand, at
-//!   session end, and by `kill_shard` for post-mortems;
-//! - [`slo`]: [`SloPolicy`] / [`TenantSloStatus`] — per-tenant latency
-//!   SLO targets with error-budget burn accounting, rendered as the
-//!   serve-bench compliance section.
+//! # Metrics walk-through
 //!
-//! Everything here is std-only and deterministic under fifo mode: the
-//! span clock is logical, trace ids are a pure function of the seeded
-//! request stream, and histograms/SLO counters are order-independent
-//! atomics — so `serve_interval`, `serve_trace` and `serve_slo` lines
-//! stay byte-identical at any worker count.
+//! ```
+//! use quantum_peft::obs::metrics::{Class, MetricsRegistry};
+//! use quantum_peft::obs::export;
+//!
+//! // One registry per process (or per fleet: shards share one Arc).
+//! let reg = MetricsRegistry::new(/* deterministic = */ true);
+//!
+//! // Register once, update lock-free forever after.
+//! let served = reg.counter("demo_requests_total", &[("tenant", "a")],
+//!                          Class::Stable);
+//! let lat = reg.hist("demo_latency_ns", &[], Class::Stable);
+//! served.inc();
+//! lat.record(4096);
+//!
+//! // One atomic snapshot feeds every exporter.
+//! let snap = reg.snapshot();
+//! let text = export::render_prometheus(&snap);
+//! assert!(text.contains("demo_requests_total{tenant=\"a\"} 1"));
+//! let jsonl = export::render_jsonl(&snap);
+//! assert!(jsonl.lines().count() == 2);
+//! ```
+//!
+//! # Naming conventions (enforced by the `metrics-discipline` lint)
+//!
+//! - Names are `snake_case` **string literals**, registered at exactly
+//!   one call site crate-wide; variance goes in labels, never in
+//!   computed names (`format!` in a name is a lint finding).
+//! - `<subsystem>_` prefix: `lock_`, `pool_`, `exe_cache_`, `wal_`,
+//!   `serve_`, `sweep_`.
+//! - Counters end in `_total`; byte counters in `_bytes_total`.
+//! - Durations are nanosecond histograms ending in `_ns`, recorded
+//!   from a [`SpanClock`] (never `Instant::now` — the `obs-discipline`
+//!   lint keeps the wall clock out of `obs/` and `serve/`).
+//! - Gauges are bare nouns (`pool_queue_depth`).
+//!
+//! # Determinism contract
+//!
+//! Every metric declares [`Class::Stable`](metrics::Class) (a pure
+//! function of the seeded input stream under fifo mode: request
+//! counts, WAL bytes, logical-latency histograms) or
+//! [`Class::Volatile`](metrics::Class) (scheduling/wall-clock
+//! dependent: lock waits, steals, cache hits, fsync latency).
+//! Deterministic registries export only `Stable` metrics and carry a
+//! logical [`SpanClock`], so fifo-mode exports are byte-identical at
+//! any worker count — `tests/obs_metrics.rs` pins this across workers
+//! 1/4/8 for both the sweep and the sharded serving tier.
 
+pub mod export;
 pub mod hist;
+pub mod metrics;
 pub mod recorder;
 pub mod slo;
 pub mod span;
 
 pub use hist::{EmptyHist, Hist};
+pub use metrics::{Class, Counter, Gauge, MetricValue, MetricsRegistry, Reading};
 pub use recorder::{FlightRecorder, TraceRecord};
 pub use slo::{SloPolicy, TenantSloStatus};
 pub use span::{Span, SpanClock, TraceCtx, PHASES};

@@ -25,15 +25,55 @@ use std::collections::{BTreeMap, HashMap};
 use std::hash::Hash;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use crate::obs::hist::Hist;
+use crate::obs::metrics::{Class, Counter, MetricsRegistry};
+
 // ---------------------------------------------------------------- OnceMap ---
 
 use crate::util::panic_msg;
+
+/// Per-cache observability handles: hit/miss/in-flight-dedup counters,
+/// labeled `cache=<name>`. All `Volatile` — which worker wins the
+/// compile race is scheduling-dependent.
+#[derive(Clone, Debug)]
+pub struct CacheObs {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    dedup_waits: Arc<Counter>,
+}
+
+impl CacheObs {
+    pub fn register(reg: &MetricsRegistry, cache: &str) -> CacheObs {
+        CacheObs {
+            hits: reg.counter("exe_cache_hits_total", &[("cache", cache)], Class::Volatile),
+            misses: reg
+                .counter("exe_cache_misses_total", &[("cache", cache)], Class::Volatile),
+            dedup_waits: reg.counter(
+                "exe_cache_dedup_waits_total",
+                &[("cache", cache)],
+                Class::Volatile,
+            ),
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn dedup_waits(&self) -> u64 {
+        self.dedup_waits.get()
+    }
+}
 
 enum SlotState<V> {
     InFlight,
@@ -58,17 +98,24 @@ struct Slot<V> {
 /// map with the same key (that would self-deadlock).
 pub struct OnceMap<K, V> {
     slots: Mutex<HashMap<K, Arc<Slot<V>>>>,
+    obs: OnceLock<CacheObs>,
 }
 
 impl<K, V> Default for OnceMap<K, V> {
     fn default() -> OnceMap<K, V> {
-        OnceMap { slots: Mutex::new(HashMap::new()) }
+        OnceMap { slots: Mutex::new(HashMap::new()), obs: OnceLock::new() }
     }
 }
 
 impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
     pub fn new() -> OnceMap<K, V> {
         OnceMap::default()
+    }
+
+    /// Attach hit/miss/dedup counters. First call wins; later calls are
+    /// no-ops (the map may already be shared across runtimes).
+    pub fn instrument(&self, obs: CacheObs) {
+        let _ = self.obs.set(obs);
     }
 
     /// Number of keys present (ready or in flight).
@@ -109,6 +156,9 @@ impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
             }
         };
         if claimed {
+            if let Some(o) = self.obs.get() {
+                o.misses.inc();
+            }
             // contain init panics: a panic that left the slot InFlight
             // would deadlock every waiter (the pool catches the panic at
             // the cell boundary, but sibling workers block in here)
@@ -138,6 +188,15 @@ impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
             };
         }
         let mut st = slot.state.lock().unwrap();
+        if let Some(o) = self.obs.get() {
+            // an existing slot is a hit when its value is already
+            // terminal, an in-flight-dedup wait otherwise
+            if matches!(&*st, SlotState::InFlight) {
+                o.dedup_waits.inc();
+            } else {
+                o.hits.inc();
+            }
+        }
         loop {
             match &*st {
                 SlotState::Ready(v) => return Ok(v.clone()),
@@ -147,12 +206,6 @@ impl<K: Clone + Eq + Hash, V: Clone> OnceMap<K, V> {
                 SlotState::InFlight => st = slot.cv.wait(st).unwrap(),
             }
         }
-    }
-}
-
-impl<K: Clone + Eq + Hash, V: Clone> Default for OnceMap<K, V> {
-    fn default() -> Self {
-        OnceMap::new()
     }
 }
 
@@ -233,12 +286,6 @@ impl CompileLog {
     }
 }
 
-impl Default for CompileLog {
-    fn default() -> Self {
-        CompileLog::new()
-    }
-}
-
 // --------------------------------------------------------------- ExeCache ---
 
 /// The shared artifact cache: parse-once HLO protos, compile-once
@@ -249,6 +296,7 @@ pub struct ExeCache {
     exes: OnceMap<(u64, PathBuf), Arc<PjRtLoadedExecutable>>,
     log: CompileLog,
     next_client: AtomicU64,
+    compile_ns: OnceLock<Arc<Hist>>,
 }
 
 impl Default for ExeCache {
@@ -258,6 +306,7 @@ impl Default for ExeCache {
             exes: OnceMap::new(),
             log: CompileLog::new(),
             next_client: AtomicU64::new(0),
+            compile_ns: OnceLock::new(),
         }
     }
 }
@@ -265,6 +314,17 @@ impl Default for ExeCache {
 impl ExeCache {
     pub fn new() -> ExeCache {
         ExeCache::default()
+    }
+
+    /// Register this cache's metrics on `reg`: hit/miss/dedup counters
+    /// for both the parse and executable maps, plus a compile
+    /// wall-time histogram. First call wins (the cache may be shared).
+    pub fn instrument(&self, reg: &MetricsRegistry) {
+        self.protos.instrument(CacheObs::register(reg, "hlo_proto"));
+        self.exes.instrument(CacheObs::register(reg, "exe"));
+        let _ = self
+            .compile_ns
+            .set(reg.hist("exe_compile_ns", &[], Class::Volatile));
     }
 
     /// Register one PJRT client with this cache, returning its executable
@@ -319,16 +379,13 @@ impl ExeCache {
             let comp = XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)
                 .with_context(|| format!("XLA compile of {path:?}"))?;
-            self.log.record(path, CacheEvent::Compile,
-                            t0.elapsed().as_secs_f64(), worker);
+            let secs = t0.elapsed().as_secs_f64();
+            self.log.record(path, CacheEvent::Compile, secs, worker);
+            if let Some(h) = self.compile_ns.get() {
+                h.record((secs * 1e9) as u64);
+            }
             Ok(Arc::new(exe))
         })
-    }
-}
-
-impl Default for ExeCache {
-    fn default() -> Self {
-        ExeCache::new()
     }
 }
 
@@ -467,6 +524,45 @@ mod tests {
         assert!((cache.log().total_compile_seconds() - 1.5).abs() < 1e-12);
         assert_eq!(cache.log().compiles_per_path()[Path::new("x.hlo")], 1);
         assert_eq!(cache.log().snapshot().len(), 2);
+    }
+
+    #[test]
+    fn once_map_obs_counts_hits_misses_and_dedup_waits() {
+        let reg = MetricsRegistry::new(false);
+        let map: OnceMap<u32, u32> = OnceMap::new();
+        map.instrument(CacheObs::register(&reg, "unit"));
+        assert_eq!(map.get_or_try_init(&1, || Ok(10)).unwrap(), 10);
+        assert_eq!(map.get_or_try_init(&1, || Ok(99)).unwrap(), 10);
+        assert_eq!(map.get_or_try_init(&2, || Ok(20)).unwrap(), 20);
+        // re-registering the same cache name shares the counters
+        let obs = CacheObs::register(&reg, "unit");
+        assert_eq!(obs.misses(), 2);
+        assert_eq!(obs.hits(), 1);
+        assert_eq!(obs.dedup_waits(), 0);
+
+        // dedup: a second caller arriving mid-init waits, not re-runs
+        let entered = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let map = &map;
+            let entered = &entered;
+            scope.spawn(move || {
+                map.get_or_try_init(&3, || {
+                    entered.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(30));
+                    Ok(30)
+                })
+                .unwrap();
+            });
+            scope.spawn(move || {
+                while !entered.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                assert_eq!(map.get_or_try_init(&3, || Ok(99)).unwrap(), 30);
+            });
+        });
+        assert_eq!(obs.misses(), 3);
+        assert_eq!(obs.dedup_waits() + obs.hits(), 2,
+                   "the second caller either waited in flight or hit");
     }
 
     #[test]

@@ -369,8 +369,14 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
     // thetas), and populate skips them
     let store = match &opts.state_dir {
         Some(dir) => {
-            let opened = StateStore::open(dir, opts.durability)
+            let mut opened = StateStore::open(dir, opts.durability)
                 .with_context(|| format!("open state dir {dir:?}"))?;
+            // attach the process-wide metrics backplane while the store
+            // is still exclusively owned: recovery counters are credited
+            // once, and every later append/fsync/compaction is observed
+            if let Some(reg) = &opts.serve.metrics {
+                opened.store.instrument(reg, &opened.recovered);
+            }
             for ts in &opened.recovered.tenants {
                 registry.restore(ts).with_context(|| {
                     format!("restoring recovered tenant {:?}", ts.tenant)
@@ -394,6 +400,9 @@ pub fn run_serve_bench(opts: &BenchOpts, log: &EventLog)
     let registry = std::sync::Arc::new(registry);
     populate(&registry, &opts.load)?;
     let rt = Runtime::cpu()?;
+    if let Some(reg) = &opts.serve.metrics {
+        rt.cache().instrument(reg);
+    }
     let mode = if opts.serve.fifo { "fifo" } else { "timed" };
     let discipline = if opts.load.open_rate_rps > 0.0 { "open" } else { "closed" };
     log.emit("serve_bench", vec![
@@ -505,6 +514,9 @@ pub fn run_sharded_bench(opts: &BenchOpts, shards: usize, log: &EventLog)
         durability: opts.durability,
     };
     let rt = Runtime::cpu()?;
+    if let Some(reg) = &opts.serve.metrics {
+        rt.cache().instrument(reg);
+    }
     log.emit("serve_shard_bench", vec![
         ("shards", shards.into()),
         ("tenants", opts.load.tenants.into()),

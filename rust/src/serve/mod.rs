@@ -105,6 +105,20 @@
 //!   latencies are logical (zero unless the driver advances the
 //!   clock), so fifo burn is deterministic.
 //!
+//! - **Process-wide metrics** — a [`ServeConfig::metrics`] registry
+//!   ([`crate::obs::metrics::MetricsRegistry`], `repro serve-bench
+//!   --metrics-out`) mirrors the session counters into shared
+//!   `serve_requests_*`, `serve_latency_ns` and `serve_batch_size`
+//!   handles: shards handed the same registry sum into fleet totals
+//!   while each session's own `ServeSummary`/EventLog lines stay
+//!   byte-identical, because the summary reads session-private
+//!   atomics, never the shared registry. The batcher mutex reports
+//!   wait time and acquisitions as `lock_*{site="serve_batcher"}`
+//!   through [`crate::util::sync::LockObs`]. All `serve_*` registry
+//!   metrics are `Stable` (pure functions of the seeded stream), so a
+//!   fifo snapshot is byte-identical at any worker count or shard
+//!   split.
+//!
 //! All of it preserves the fifo byte-identity contract: the only
 //! sanctioned wall-clock reads on the serving path live in
 //! `obs/span.rs` (statically enforced by the `obs-discipline` lint).
@@ -153,8 +167,9 @@ pub use loadgen::{
 pub use registry::{AdapterVersion, CacheStats, EvictAttempt, PauliSpec, Registry};
 pub use scheduler::{BatchPolicy, InvalidBatchPolicy, Response, ResponseHandle};
 pub use server::{
-    percentile_us, serve, ServeConfig, ServeOutcome, ServeSummary,
-    ServerHandle, SloSummary, SubmitTarget, STRUCTURED_APPLY_MIN_Q,
+    percentile_us, serve, InvalidObsKnob, ServeConfig, ServeOutcome,
+    ServeSummary, ServerHandle, SloSummary, SubmitTarget,
+    STRUCTURED_APPLY_MIN_Q,
 };
 pub use shard::{
     serve_sharded, FleetSummary, ShardConfig, ShardOutcome, ShardRouter,

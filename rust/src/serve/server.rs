@@ -47,6 +47,7 @@
 //! [`crate::serve`] for the emitted line schemas.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -56,6 +57,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::events::EventLog;
+use crate::obs::metrics::{Class, Counter, MetricsRegistry};
 use crate::obs::span::{
     PH_ADMISSION, PH_APPLY, PH_CACHE_LOOKUP, PH_COALESCE, PH_MATERIALIZE,
     PH_QUEUE, PH_RESPOND,
@@ -68,7 +70,9 @@ use crate::quantum::pauli;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::pool::{self, Service, TaskCtx};
-use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
+use crate::util::sync::{
+    lock_observed, lock_or_recover, read_or_recover, write_or_recover, LockObs,
+};
 
 use super::admission::{
     AdmissionConfig, AdmissionController, AdmissionReload,
@@ -119,6 +123,12 @@ pub struct ServeConfig {
     /// byte-identical across worker counts while nothing has aged out
     /// (cap ≥ total requests).
     pub recorder_cap: usize,
+    /// The process-wide metrics registry this session registers its
+    /// `serve_*` handles on. `None` (default) gives the session a
+    /// private registry matching its fifo mode — nothing changes unless
+    /// the caller wires one in (the sharded tier hands every shard the
+    /// same `Arc`, so shard counters sum into fleet totals).
+    pub metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl Default for ServeConfig {
@@ -134,9 +144,73 @@ impl Default for ServeConfig {
             slo_error_budget: 0.01,
             trace_dir: None,
             recorder_cap: 256,
+            metrics: None,
         }
     }
 }
+
+impl ServeConfig {
+    /// Fail fast on nonsense observability knobs — one typed
+    /// [`InvalidObsKnob`] validation shared by [`serve`] and every CLI
+    /// entry point, so a bad `--slo-error-budget` or `--recorder-cap`
+    /// dies identically everywhere instead of half the paths silently
+    /// clamping it.
+    pub fn validate_obs(&self) -> Result<()> {
+        if self.slo_p99_us < 0.0 {
+            return Err(InvalidObsKnob {
+                knob: "slo_p99_us",
+                value: self.slo_p99_us,
+                detail: "an SLO latency target cannot be negative \
+                         (use 0 to disable SLO tracking)",
+            }
+            .into());
+        }
+        if self.slo_p99_us > 0.0 && self.slo_error_budget <= 0.0 {
+            return Err(InvalidObsKnob {
+                knob: "slo_error_budget",
+                value: self.slo_error_budget,
+                detail: "must be > 0 when an SLO target is set",
+            }
+            .into());
+        }
+        if self.recorder_cap == 0 {
+            return Err(InvalidObsKnob {
+                knob: "recorder_cap",
+                value: 0.0,
+                detail: "each worker must retain at least one trace span",
+            }
+            .into());
+        }
+        Ok(())
+    }
+}
+
+/// Typed rejection of a zero/nonsense observability knob, caught by
+/// [`ServeConfig::validate_obs`] before any thread starts. Carried as
+/// an `anyhow` payload so callers can `downcast_ref` it apart from
+/// other startup failures — the same recoverable-typed-error pattern as
+/// [`super::scheduler::InvalidBatchPolicy`] and
+/// [`crate::store::CorruptState`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct InvalidObsKnob {
+    /// The offending field, in config-struct spelling (the CLI flag is
+    /// the kebab-case form, e.g. `--slo-error-budget`).
+    pub knob: &'static str,
+    pub value: f64,
+    pub detail: &'static str,
+}
+
+impl fmt::Display for InvalidObsKnob {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid observability knob {} = {}: {}",
+            self.knob, self.value, self.detail
+        )
+    }
+}
+
+impl std::error::Error for InvalidObsKnob {}
 
 // --------------------------------------------------------------- metrics ---
 
@@ -147,6 +221,38 @@ struct TenantObs {
     hist: Hist,
     requests: AtomicU64,
     slo_violations: AtomicU64,
+}
+
+/// The session's handles on the process-wide [`MetricsRegistry`]: the
+/// request ledger (`serve_requests_*_total`), the latency histogram
+/// (`serve_latency_ns`) and the batch-size histogram
+/// (`serve_batch_size`) — all [`Class::Stable`]: in fifo mode they are
+/// pure functions of the seeded stream. These *mirror* the session-
+/// private fields in [`Metrics`] rather than replacing them: shards
+/// handed the same registry `Arc` share these handles, so the exported
+/// values are fleet totals while each shard's `serve_summary` line
+/// keeps reporting its own session exactly as before.
+struct ServeObs {
+    submitted: Arc<Counter>,
+    completed: Arc<Counter>,
+    failed: Arc<Counter>,
+    latency_ns: Arc<Hist>,
+    batch_size: Arc<Hist>,
+}
+
+impl ServeObs {
+    fn register(reg: &MetricsRegistry) -> ServeObs {
+        ServeObs {
+            submitted: reg.counter("serve_requests_submitted_total", &[],
+                                   Class::Stable),
+            completed: reg.counter("serve_requests_completed_total", &[],
+                                   Class::Stable),
+            failed: reg.counter("serve_requests_failed_total", &[],
+                                Class::Stable),
+            latency_ns: reg.hist("serve_latency_ns", &[], Class::Stable),
+            batch_size: reg.hist("serve_batch_size", &[], Class::Stable),
+        }
+    }
 }
 
 struct Metrics {
@@ -164,6 +270,8 @@ struct Metrics {
     /// session — quantiles are readable mid-run (the `serve_interval`
     /// snapshots) without sorting anything.
     lat_hist: Hist,
+    /// Registry mirrors of the ledger above (see [`ServeObs`]).
+    obs: ServeObs,
     /// Per-tenant telemetry. The RwLock only guards the map shape:
     /// recording goes through the `Arc<TenantObs>` atomics, so the
     /// write lock is taken once per tenant per session (first request).
@@ -186,7 +294,7 @@ struct Metrics {
 }
 
 impl Metrics {
-    fn new(cfg: &ServeConfig) -> Metrics {
+    fn new(cfg: &ServeConfig, reg: &MetricsRegistry) -> Metrics {
         Metrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
@@ -195,6 +303,7 @@ impl Metrics {
             max_outstanding: AtomicUsize::new(0),
             shared_client_workers: AtomicUsize::new(0),
             lat_hist: Hist::new(),
+            obs: ServeObs::register(reg),
             tenants: RwLock::new(BTreeMap::new()),
             batch_sizes: Mutex::new(BTreeMap::new()),
             recorders: (0..cfg.workers.max(1))
@@ -212,12 +321,14 @@ impl Metrics {
 
     fn note_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.obs.submitted.inc();
         let depth = self.outstanding.fetch_add(1, Ordering::Relaxed) + 1;
         self.max_outstanding.fetch_max(depth, Ordering::Relaxed);
     }
 
     fn note_batch(&self, size: usize) {
         *lock_or_recover(&self.batch_sizes).entry(size).or_insert(0) += 1;
+        self.obs.batch_size.record(size as u64);
     }
 
     /// The tenant's telemetry cell, created on first use. Fast path is
@@ -237,8 +348,10 @@ impl Metrics {
     /// and histogram increments), never a lock.
     fn note_complete(&self, t: &TenantObs, latency_ns: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.obs.completed.inc();
         self.outstanding.fetch_sub(1, Ordering::Relaxed);
         self.lat_hist.record(latency_ns);
+        self.obs.latency_ns.record(latency_ns);
         t.hist.record(latency_ns);
         t.requests.fetch_add(1, Ordering::Relaxed);
         // SLO violations are judged against the exact latency here, not
@@ -250,6 +363,7 @@ impl Metrics {
 
     fn note_failed(&self, n: usize) {
         self.failed.fetch_add(n as u64, Ordering::Relaxed);
+        self.obs.failed.add(n as u64);
         self.outstanding.fetch_sub(n, Ordering::Relaxed);
     }
 
@@ -622,6 +736,8 @@ pub struct ServerHandle<'a> {
     metrics: &'a Metrics,
     admission: &'a AdmissionController,
     batcher: Mutex<Batcher>,
+    /// Contention handles for the batcher mutex (`site=serve_batcher`).
+    batcher_obs: LockObs,
     fifo: bool,
     clock: &'a SpanClock,
     log: &'a EventLog,
@@ -664,7 +780,7 @@ impl ServerHandle<'_> {
             let depth = if !self.admission.enabled() {
                 0
             } else if self.fifo {
-                lock_or_recover(&self.batcher).pending()
+                lock_observed(&self.batcher_obs, &self.batcher).pending()
             } else {
                 self.metrics.outstanding.load(Ordering::Relaxed)
             };
@@ -674,7 +790,8 @@ impl ServerHandle<'_> {
         let (mut req, handle) = PendingRequest::new(meta, input, guard);
         req.trace = trace;
         self.metrics.note_submit();
-        let full = lock_or_recover(&self.batcher).push(tenant, req);
+        let full = lock_observed(&self.batcher_obs, &self.batcher)
+            .push(tenant, req);
         if let Some(batch) = full {
             self.dispatch(batch);
         }
@@ -782,7 +899,9 @@ impl ServerHandle<'_> {
     /// Dispatch every buffer that has outwaited the policy (timed mode).
     pub fn flush_expired(&self) {
         // analyze: allow(determinism, obs-discipline) timed-mode expiry only; fifo never calls this
-        let expired = lock_or_recover(&self.batcher).take_expired(Instant::now());
+        let now = Instant::now();
+        let expired =
+            lock_observed(&self.batcher_obs, &self.batcher).take_expired(now);
         for batch in expired {
             self.dispatch(batch);
         }
@@ -791,7 +910,7 @@ impl ServerHandle<'_> {
     /// Dispatch all partial batches now (the closed-loop driver calls
     /// this at each wave boundary; `serve` calls it after `body`).
     pub fn flush(&self) {
-        let drained = lock_or_recover(&self.batcher).drain();
+        let drained = lock_observed(&self.batcher_obs, &self.batcher).drain();
         for batch in drained {
             self.dispatch(batch);
         }
@@ -1074,11 +1193,16 @@ where
     // buffer forever): a typed InvalidBatchPolicy before any thread or
     // watcher starts, instead of a silent rewrite at push time
     cfg.policy.validate()?;
-    if cfg.slo_p99_us > 0.0 && cfg.slo_error_budget <= 0.0 {
-        bail!("slo_error_budget must be > 0 when an SLO target is set \
-               (got {})", cfg.slo_error_budget);
-    }
-    let metrics = Metrics::new(cfg);
+    // same fail-fast for observability knobs: a typed InvalidObsKnob
+    // (covers the old untyped slo_error_budget bail)
+    cfg.validate_obs()?;
+    // the process-wide registry this session's serve_* handles live on;
+    // a session without one gets a private registry matching its mode
+    let mreg = cfg
+        .metrics
+        .clone()
+        .unwrap_or_else(|| MetricsRegistry::new(cfg.fifo));
+    let metrics = Metrics::new(cfg, &mreg);
     // the session span clock: logical in fifo mode (driver-advanced, so
     // every latency/timestamp is a pure function of the submission
     // sequence), wall otherwise — the single sanctioned wall-clock
@@ -1133,6 +1257,7 @@ where
                 metrics: &metrics,
                 admission: admission.as_ref(),
                 batcher: Mutex::new(Batcher::new(cfg.policy)),
+                batcher_obs: LockObs::register(&mreg, "serve_batcher"),
                 fifo: cfg.fifo,
                 clock: &clock,
                 log,
@@ -1517,8 +1642,83 @@ mod tests {
             ..ServeConfig::default()
         };
         let e = serve(&rt, &reg, &cfg, &EventLog::null(), |_h| Ok(()))
-            .unwrap_err()
-            .to_string();
-        assert!(e.contains("slo_error_budget"), "{e}");
+            .unwrap_err();
+        let knob = e
+            .downcast_ref::<InvalidObsKnob>()
+            .expect("typed observability knob error lost");
+        assert_eq!(knob.knob, "slo_error_budget");
+        assert!(e.to_string().contains("slo_error_budget"), "{e}");
+    }
+
+    #[test]
+    fn validate_obs_rejects_every_nonsense_knob() {
+        // each bad knob is caught by the shared validator with the
+        // offending field named; the default config passes
+        ServeConfig::default().validate_obs().unwrap();
+        let cases: Vec<(ServeConfig, &str)> = vec![
+            (
+                ServeConfig { slo_p99_us: -1.0, ..ServeConfig::default() },
+                "slo_p99_us",
+            ),
+            (
+                ServeConfig {
+                    slo_p99_us: 50.0,
+                    slo_error_budget: -0.25,
+                    ..ServeConfig::default()
+                },
+                "slo_error_budget",
+            ),
+            (
+                ServeConfig { recorder_cap: 0, ..ServeConfig::default() },
+                "recorder_cap",
+            ),
+        ];
+        for (cfg, expect) in cases {
+            let e = cfg.validate_obs().unwrap_err();
+            let knob = e
+                .downcast_ref::<InvalidObsKnob>()
+                .unwrap_or_else(|| panic!("untyped error for {expect}: {e}"));
+            assert_eq!(knob.knob, expect);
+        }
+        // an SLO target of exactly 0 means "tracking off" and is fine
+        // even with a zero budget (the budget is never consulted)
+        ServeConfig { slo_error_budget: 0.0, ..ServeConfig::default() }
+            .validate_obs()
+            .unwrap();
+    }
+
+    #[test]
+    fn serve_sessions_sharing_a_registry_sum_into_fleet_totals() {
+        let reg = test_registry();
+        let rt = Runtime::cpu().unwrap();
+        let mreg = MetricsRegistry::new(true);
+        let cfg = ServeConfig {
+            metrics: Some(mreg.clone()),
+            ..ServeConfig::default()
+        };
+        for round in 0..2u64 {
+            let outcome = serve(&rt, &reg, &cfg, &EventLog::null(), |h| {
+                let r = h.submit("t0", round, vec![0.5; 8])?;
+                h.flush();
+                r.wait()
+            })
+            .unwrap();
+            // each session's summary stays session-local...
+            assert_eq!(outcome.summary.completed, 1);
+        }
+        // ...while the shared registry accumulates across sessions
+        let snap = mreg.snapshot();
+        let completed = snap
+            .iter()
+            .find(|v| v.name == "serve_requests_completed_total")
+            .expect("serve counter registered");
+        assert!(
+            matches!(completed.reading,
+                     crate::obs::metrics::Reading::Counter(2)),
+            "{completed:?}"
+        );
+        // the batcher lock site reported its acquires
+        let locks = LockObs::register(&mreg, "serve_batcher");
+        assert!(locks.acquires() >= 2, "{}", locks.acquires());
     }
 }

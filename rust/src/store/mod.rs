@@ -53,15 +53,18 @@ pub mod wal;
 
 use std::fmt;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::util::sync::lock_or_recover;
+use crate::obs::hist::Hist;
+use crate::obs::metrics::{detached_hist, Class, Counter, MetricsRegistry};
+use crate::obs::span::SpanClock;
+use crate::util::sync::{lock_observed, lock_or_recover, LockObs};
 
 pub use recover::{recover, RecoveredState};
 pub use snapshot::SNAPSHOT_FILE;
-pub use wal::{Durability, WalWriter, WAL_FILE};
+pub use wal::{Durability, WalObs, WalWriter, WAL_FILE};
 
 /// One tenant's complete durable state: everything recovery needs to
 /// re-register the tenant at the same version with the same parameters
@@ -193,6 +196,83 @@ pub struct OpenedStore {
     pub recovered: RecoveredState,
 }
 
+/// Store-level metric handles: append count/latency, compaction
+/// count/latency, recovery replay stats, and the `store_wal` lock site.
+/// Append and recovery *counts* are [`Class::Stable`] (pure functions
+/// of the mutation stream and the on-disk state); every duration is
+/// [`Class::Volatile`]. Defaults to detached ([`StoreObs::disabled`]) —
+/// [`StateStore::instrument`] installs live handles.
+#[derive(Clone, Debug)]
+pub struct StoreObs {
+    clock: Arc<SpanClock>,
+    wal_lock: LockObs,
+    appends: Arc<Counter>,
+    append_ns: Arc<Hist>,
+    snapshot_writes: Arc<Counter>,
+    snapshot_ns: Arc<Hist>,
+    recovered_records: Arc<Counter>,
+    recovered_tenants: Arc<Counter>,
+    torn_tails: Arc<Counter>,
+}
+
+impl StoreObs {
+    /// Register the store metrics on `reg`. Re-registering returns
+    /// handles onto the same metrics (shards sharing a registry sum).
+    pub fn register(reg: &MetricsRegistry) -> StoreObs {
+        StoreObs {
+            clock: reg.clock(),
+            wal_lock: LockObs::register(reg, "store_wal"),
+            appends: reg.counter("wal_appends_total", &[], Class::Stable),
+            append_ns: reg.hist("wal_append_ns", &[], Class::Volatile),
+            snapshot_writes: reg
+                .counter("wal_snapshot_writes_total", &[], Class::Stable),
+            snapshot_ns: reg.hist("wal_snapshot_write_ns", &[], Class::Volatile),
+            recovered_records: reg
+                .counter("wal_recovered_records_total", &[], Class::Stable),
+            recovered_tenants: reg
+                .counter("wal_recovered_tenants_total", &[], Class::Stable),
+            torn_tails: reg.counter("wal_torn_tails_total", &[], Class::Stable),
+        }
+    }
+
+    /// Detached handles: the store runs identically, nothing exports.
+    pub fn disabled() -> StoreObs {
+        StoreObs {
+            clock: Arc::new(SpanClock::new(true)),
+            wal_lock: LockObs::disabled(),
+            appends: Counter::detached(),
+            append_ns: detached_hist(),
+            snapshot_writes: Counter::detached(),
+            snapshot_ns: detached_hist(),
+            recovered_records: Counter::detached(),
+            recovered_tenants: Counter::detached(),
+            torn_tails: Counter::detached(),
+        }
+    }
+
+    /// Credit a finished recovery to the replay counters.
+    pub fn note_recovery(&self, recovered: &RecoveredState) {
+        self.recovered_records.add(recovered.wal_records);
+        self.recovered_tenants
+            .add(recovered.tenants.len() as u64);
+        if recovered.torn_tail {
+            self.torn_tails.inc();
+        }
+    }
+
+    pub fn appends(&self) -> u64 {
+        self.appends.get()
+    }
+
+    pub fn snapshot_writes(&self) -> u64 {
+        self.snapshot_writes.get()
+    }
+
+    pub fn recovered_tenants(&self) -> u64 {
+        self.recovered_tenants.get()
+    }
+}
+
 /// The open, writable state store: a [`WalWriter`] behind a mutex (so
 /// any number of registry threads can append; order is the mutex's
 /// order, which the registry makes coincide with mutation order by
@@ -201,6 +281,7 @@ pub struct OpenedStore {
 pub struct StateStore {
     dir: PathBuf,
     wal: Mutex<WalWriter>,
+    obs: StoreObs,
 }
 
 impl StateStore {
@@ -220,15 +301,42 @@ impl StateStore {
             durability,
         )?;
         Ok(OpenedStore {
-            store: StateStore { dir: dir.to_path_buf(), wal: Mutex::new(wal) },
+            store: StateStore {
+                dir: dir.to_path_buf(),
+                wal: Mutex::new(wal),
+                obs: StoreObs::disabled(),
+            },
             recovered,
         })
+    }
+
+    /// Attach metric handles to this store (and its WAL writer) and
+    /// credit `recovered` to the replay counters. Call once, while the
+    /// store is still exclusively owned — before it is shared as a
+    /// [`StateSink`].
+    pub fn instrument(&mut self, reg: &MetricsRegistry,
+                      recovered: &RecoveredState) {
+        self.obs = StoreObs::register(reg);
+        self.obs.note_recovery(recovered);
+        lock_or_recover(&self.wal).set_obs(WalObs::register(reg));
+    }
+
+    /// The store's metric handles (detached until
+    /// [`StateStore::instrument`] installs live ones).
+    pub fn obs(&self) -> &StoreObs {
+        &self.obs
     }
 
     /// Append one mutation record; returns its sequence number. Durable
     /// per the store's [`Durability`] once this returns.
     pub fn append(&self, rec: &StateRecord) -> Result<u64> {
-        lock_or_recover(&self.wal).append(rec)
+        let start = self.obs.clock.now_ns();
+        let seq = lock_observed(&self.obs.wal_lock, &self.wal).append(rec)?;
+        self.obs
+            .append_ns
+            .record(self.obs.clock.now_ns().saturating_sub(start));
+        self.obs.appends.inc();
+        Ok(seq)
     }
 
     /// Compact: write `live` (the complete current registry state) as
@@ -239,18 +347,26 @@ impl StateStore {
     /// [`Registry::compact_into`](crate::serve::registry::Registry::compact_into),
     /// holds the registry write lock to guarantee it).
     pub fn compact(&self, live: &[TenantState]) -> Result<()> {
-        let mut wal = lock_or_recover(&self.wal);
-        // analyze: allow(blocking-under-lock) deliberate: snapshot + truncate must be atomic w.r.t. appends, see the doc comment above
-        snapshot::write(&self.dir, wal.last_seq(), live)
-            .with_context(|| format!("write snapshot in {:?}", self.dir))?;
-        // analyze: allow(blocking-under-lock) deliberate: see above — truncating outside the lock could drop a concurrent append
-        wal.truncate_to_header()
-            .context("truncate WAL after snapshot")
+        let start = self.obs.clock.now_ns();
+        {
+            let mut wal = lock_observed(&self.obs.wal_lock, &self.wal);
+            // analyze: allow(blocking-under-lock) deliberate: snapshot + truncate must be atomic w.r.t. appends, see the doc comment above
+            snapshot::write(&self.dir, wal.last_seq(), live)
+                .with_context(|| format!("write snapshot in {:?}", self.dir))?;
+            // analyze: allow(blocking-under-lock) deliberate: see above — truncating outside the lock could drop a concurrent append
+            wal.truncate_to_header()
+                .context("truncate WAL after snapshot")?;
+        }
+        self.obs
+            .snapshot_ns
+            .record(self.obs.clock.now_ns().saturating_sub(start));
+        self.obs.snapshot_writes.inc();
+        Ok(())
     }
 
     /// Force the WAL to disk now, whatever the durability mode.
     pub fn sync(&self) -> Result<()> {
-        lock_or_recover(&self.wal).sync()
+        lock_observed(&self.obs.wal_lock, &self.wal).sync()
     }
 
     /// Sequence number of the most recently appended record (0 if none
@@ -345,6 +461,30 @@ mod tests {
         assert_eq!(r.wal_records, 1);
         assert_eq!(r.last_seq, 9);
         assert_eq!(r.tenants, vec![ts("t", 8, 7.0), ts("u", 1, 0.5)]);
+    }
+
+    #[test]
+    fn instrumented_store_counts_appends_fsyncs_and_recovery() {
+        let dir = tdir("obs");
+        let reg = MetricsRegistry::new(false);
+        let opened = StateStore::open(&dir, Durability::Always).unwrap();
+        let mut store = opened.store;
+        store.instrument(&reg, &opened.recovered);
+        store.append(&StateRecord::Register(ts("a", 1, 0.1))).unwrap();
+        store.append(&StateRecord::Swap(ts("a", 2, 0.2))).unwrap();
+        store.compact(&[ts("a", 2, 0.2)]).unwrap();
+        assert_eq!(store.obs().appends(), 2);
+        assert_eq!(store.obs().snapshot_writes(), 1);
+        // Always durability: one fsync per append, plus the truncation
+        let wal_obs = WalObs::register(&reg);
+        assert_eq!(wal_obs.fsyncs(), 3);
+        assert!(wal_obs.append_bytes() > 0);
+        // a fresh open over the snapshot replays one tenant, no records
+        drop(store);
+        let opened = StateStore::open(&dir, Durability::Buffered).unwrap();
+        let mut store = opened.store;
+        store.instrument(&reg, &opened.recovered);
+        assert_eq!(store.obs().recovered_tenants(), 1);
     }
 
     #[test]

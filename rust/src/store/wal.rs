@@ -36,10 +36,14 @@
 use std::fs::{File, OpenOptions};
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::{StateRecord, TenantState};
+use crate::obs::hist::Hist;
+use crate::obs::metrics::{detached_hist, Class, Counter, MetricsRegistry};
+use crate::obs::span::SpanClock;
 
 /// WAL file name inside a state directory.
 pub const WAL_FILE: &str = "wal.log";
@@ -356,6 +360,52 @@ pub(crate) fn decode_record(payload: &[u8])
 
 // ----------------------------------------------------------------- writer ---
 
+/// Writer-side metric handles: appended frame bytes, fsync count and
+/// fsync latency. Byte and fsync *counts* are [`Class::Stable`] — they
+/// are pure functions of the record stream and the [`Durability`]
+/// cadence — while fsync *latency* is wall-clock territory and stays
+/// [`Class::Volatile`]. Defaults to detached ([`WalObs::disabled`]);
+/// [`StateStore::instrument`](super::StateStore::instrument) installs
+/// live handles through [`WalWriter::set_obs`].
+#[derive(Clone, Debug)]
+pub struct WalObs {
+    clock: Arc<SpanClock>,
+    append_bytes: Arc<Counter>,
+    fsyncs: Arc<Counter>,
+    fsync_ns: Arc<Hist>,
+}
+
+impl WalObs {
+    /// Register the writer metrics on `reg`. Re-registering returns
+    /// handles onto the same metrics.
+    pub fn register(reg: &MetricsRegistry) -> WalObs {
+        WalObs {
+            clock: reg.clock(),
+            append_bytes: reg.counter("wal_append_bytes_total", &[], Class::Stable),
+            fsyncs: reg.counter("wal_fsyncs_total", &[], Class::Stable),
+            fsync_ns: reg.hist("wal_fsync_ns", &[], Class::Volatile),
+        }
+    }
+
+    /// Detached handles: the writer runs identically, nothing exports.
+    pub fn disabled() -> WalObs {
+        WalObs {
+            clock: Arc::new(SpanClock::new(true)),
+            append_bytes: Counter::detached(),
+            fsyncs: Counter::detached(),
+            fsync_ns: detached_hist(),
+        }
+    }
+
+    pub fn append_bytes(&self) -> u64 {
+        self.append_bytes.get()
+    }
+
+    pub fn fsyncs(&self) -> u64 {
+        self.fsyncs.get()
+    }
+}
+
 /// The append half of the WAL. Opened by
 /// [`StateStore::open`](super::StateStore::open) after recovery has
 /// established how much of an existing log is valid; a torn trailing
@@ -367,6 +417,7 @@ pub struct WalWriter {
     next_seq: u64,
     appended_since_sync: u64,
     records_since_truncate: u64,
+    obs: WalObs,
 }
 
 impl WalWriter {
@@ -418,7 +469,25 @@ impl WalWriter {
             next_seq: next_seq.max(1),
             appended_since_sync: 0,
             records_since_truncate: 0,
+            obs: WalObs::disabled(),
         })
+    }
+
+    /// Install live metric handles (the writer opens detached).
+    pub fn set_obs(&mut self, obs: WalObs) {
+        self.obs = obs;
+    }
+
+    /// `sync_data` with fsync accounting: every explicit data sync in
+    /// the writer funnels through here so the count matches the
+    /// [`Durability`] contract exactly (the one-time `sync_all` that
+    /// seats a brand-new header is setup, not cadence, and is excluded).
+    fn fsync_data(&mut self, what: &'static str) -> Result<()> {
+        let start = self.obs.clock.now_ns();
+        self.file.sync_data().context(what)?;
+        self.obs.fsync_ns.record(self.obs.clock.now_ns().saturating_sub(start));
+        self.obs.fsyncs.inc();
+        Ok(())
     }
 
     /// Append one record in a single write, then apply the fsync
@@ -456,6 +525,9 @@ impl WalWriter {
         }
         self.next_seq += 1;
         self.records_since_truncate += 1;
+        self.obs
+            .append_bytes
+            .add(u64::try_from(frame.len()).unwrap_or(u64::MAX));
         Ok(seq)
     }
 
@@ -464,12 +536,12 @@ impl WalWriter {
         match self.durability {
             Durability::Buffered => {}
             Durability::Always => {
-                self.file.sync_data().context("fsync WAL append")?;
+                self.fsync_data("fsync WAL append")?;
             }
             Durability::EveryN(n) => {
                 self.appended_since_sync += 1;
                 if self.appended_since_sync >= n.max(1) {
-                    self.file.sync_data().context("fsync WAL batch")?;
+                    self.fsync_data("fsync WAL batch")?;
                     self.appended_since_sync = 0;
                 }
             }
@@ -483,7 +555,7 @@ impl WalWriter {
     pub fn truncate_to_header(&mut self) -> Result<()> {
         self.file.set_len(HEADER_LEN as u64)?;
         self.file.seek(SeekFrom::End(0))?;
-        self.file.sync_data().context("fsync WAL truncation")?;
+        self.fsync_data("fsync WAL truncation")?;
         self.appended_since_sync = 0;
         self.records_since_truncate = 0;
         Ok(())
@@ -491,7 +563,7 @@ impl WalWriter {
 
     /// Force everything appended so far to disk.
     pub fn sync(&mut self) -> Result<()> {
-        self.file.sync_data().context("fsync WAL")?;
+        self.fsync_data("fsync WAL")?;
         self.appended_since_sync = 0;
         Ok(())
     }

@@ -25,11 +25,13 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use super::panic_msg;
+use crate::obs::metrics::{Class, Counter, Gauge, MetricsRegistry};
+use crate::obs::span::SpanClock;
 
 /// Identity of one task execution: which worker ran it, which input slot.
 #[derive(Clone, Copy, Debug)]
@@ -55,19 +57,106 @@ pub fn parse_jobs_value(s: &str) -> Result<usize> {
         .map_err(|_| anyhow!("expected a worker count or 'auto', got {s:?}"))
 }
 
-fn run_one<T, R, S, W>(work: &W, state: &mut S, ctx: TaskCtx, item: T) -> Result<R>
+/// Per-pool observability handles: steal/park/panic counters, a queue
+/// depth gauge, and one busy-nanoseconds counter per worker (the
+/// utilization numerator; the denominator is the session wall time).
+/// All `pool_*` metrics are scheduling-dependent and therefore
+/// `Volatile` — present in timed-mode exports, excluded from
+/// deterministic ones.
+#[derive(Clone, Debug)]
+pub struct PoolObs {
+    clock: Arc<SpanClock>,
+    steals: Arc<Counter>,
+    parks: Arc<Counter>,
+    panics: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    worker_busy_ns: Vec<Arc<Counter>>,
+}
+
+impl PoolObs {
+    /// Register `pool_*` metrics for a pool named `pool` with up to
+    /// `workers` workers (per-worker busy counters are labeled
+    /// `worker=<id>`).
+    pub fn register(reg: &MetricsRegistry, pool: &str, workers: usize) -> PoolObs {
+        let mut worker_busy_ns = Vec::with_capacity(workers.max(1));
+        for w in 0..workers.max(1) {
+            let id = w.to_string();
+            worker_busy_ns.push(reg.counter(
+                "pool_worker_busy_ns",
+                &[("pool", pool), ("worker", &id)],
+                Class::Volatile,
+            ));
+        }
+        PoolObs {
+            clock: reg.clock(),
+            steals: reg.counter("pool_steals_total", &[("pool", pool)], Class::Volatile),
+            parks: reg.counter("pool_parks_total", &[("pool", pool)], Class::Volatile),
+            panics: reg
+                .counter("pool_task_panics_total", &[("pool", pool)], Class::Volatile),
+            queue_depth: reg.gauge("pool_queue_depth", &[("pool", pool)], Class::Volatile),
+        }
+    }
+
+    /// Detached handles: the instrumented paths run identically with
+    /// nothing exported (the default for every `run_*` wrapper).
+    pub fn disabled() -> PoolObs {
+        PoolObs {
+            clock: Arc::new(SpanClock::new(true)),
+            steals: Counter::detached(),
+            parks: Counter::detached(),
+            panics: Counter::detached(),
+            queue_depth: Gauge::detached(),
+            worker_busy_ns: vec![Counter::detached()],
+        }
+    }
+
+    fn busy(&self, w: usize) -> &Counter {
+        // a disabled handle holds one shared slot for every worker
+        &self.worker_busy_ns[w.min(self.worker_busy_ns.len() - 1)]
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals.get()
+    }
+
+    pub fn parks(&self) -> u64 {
+        self.parks.get()
+    }
+
+    pub fn panics(&self) -> u64 {
+        self.panics.get()
+    }
+
+    pub fn busy_ns(&self, w: usize) -> u64 {
+        self.busy(w).get()
+    }
+}
+
+fn run_one<T, R, S, W>(
+    work: &W,
+    state: &mut S,
+    ctx: TaskCtx,
+    item: T,
+    obs: &PoolObs,
+) -> Result<R>
 where
     W: Fn(&mut S, TaskCtx, T) -> Result<R>,
 {
-    match catch_unwind(AssertUnwindSafe(|| work(state, ctx, item))) {
+    let t0 = obs.clock.now_ns();
+    let r = match catch_unwind(AssertUnwindSafe(|| work(state, ctx, item))) {
         Ok(r) => r,
-        Err(p) => Err(anyhow!(
-            "task {} panicked in worker {}: {}",
-            ctx.index,
-            ctx.worker,
-            panic_msg(p.as_ref())
-        )),
-    }
+        Err(p) => {
+            obs.panics.inc();
+            Err(anyhow!(
+                "task {} panicked in worker {}: {}",
+                ctx.index,
+                ctx.worker,
+                panic_msg(p.as_ref())
+            ))
+        }
+    };
+    obs.busy(ctx.worker).add(obs.clock.now_ns().saturating_sub(t0));
+    r
 }
 
 type Queue<T> = Mutex<VecDeque<(usize, T)>>;
@@ -105,6 +194,24 @@ where
     I: Fn(usize) -> Result<S> + Sync,
     W: Fn(&mut S, TaskCtx, T) -> Result<R> + Sync,
 {
+    run_stateful_obs(jobs, items, init, work, &PoolObs::disabled())
+}
+
+/// [`run_stateful`] with pool observability: steals, panics, queue
+/// depth and per-worker busy time land on `obs`.
+pub fn run_stateful_obs<T, R, S, I, W>(
+    jobs: usize,
+    items: Vec<T>,
+    init: I,
+    work: W,
+    obs: &PoolObs,
+) -> Vec<Result<R>>
+where
+    T: Send,
+    R: Send,
+    I: Fn(usize) -> Result<S> + Sync,
+    W: Fn(&mut S, TaskCtx, T) -> Result<R> + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -124,7 +231,7 @@ where
                         continue;
                     }
                     let ctx = TaskCtx { worker: 0, index: i };
-                    let r = run_one(&work, &mut state, ctx, item);
+                    let r = run_one(&work, &mut state, ctx, item, obs);
                     if let Err(e) = &r {
                         failed = Some((i, e.to_string()));
                     }
@@ -145,6 +252,7 @@ where
     for (i, item) in items.into_iter().enumerate() {
         queues[i % jobs].lock().unwrap().push_back((i, item));
     }
+    obs.queue_depth.set(n as i64);
     let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let init_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let abort = AtomicBool::new(false);
@@ -178,12 +286,18 @@ where
                     }
                 };
                 while !abort.load(Ordering::Relaxed) {
-                    let Some((i, item)) = pop_own(queues, w).or_else(|| steal(queues, w))
-                    else {
+                    let Some((i, item)) = pop_own(queues, w).or_else(|| {
+                        let stolen = steal(queues, w);
+                        if stolen.is_some() {
+                            obs.steals.inc();
+                        }
+                        stolen
+                    }) else {
                         break;
                     };
+                    obs.queue_depth.add(-1);
                     let ctx = TaskCtx { worker: w, index: i };
-                    let r = run_one(work, &mut state, ctx, item);
+                    let r = run_one(work, &mut state, ctx, item, obs);
                     if let Err(e) = &r {
                         let mut fe = first_error.lock().unwrap();
                         let lowest_so_far = match fe.as_ref() {
@@ -201,6 +315,7 @@ where
         }
     });
 
+    obs.queue_depth.set(0);
     let init_errors = init_errors.into_inner().unwrap();
     let first_error = first_error.into_inner().unwrap();
     slots
@@ -248,10 +363,11 @@ pub struct Service<T> {
     state: Mutex<ServiceState<T>>,
     cv: Condvar,
     init_errors: Mutex<Vec<String>>,
+    obs: PoolObs,
 }
 
 impl<T> Service<T> {
-    fn new(workers: usize) -> Service<T> {
+    fn new(workers: usize, obs: PoolObs) -> Service<T> {
         Service {
             state: Mutex::new(ServiceState {
                 queue: VecDeque::new(),
@@ -261,6 +377,7 @@ impl<T> Service<T> {
             }),
             cv: Condvar::new(),
             init_errors: Mutex::new(Vec::new()),
+            obs,
         }
     }
 
@@ -279,6 +396,7 @@ impl<T> Service<T> {
                 dropped = Some(item);
             } else {
                 st.queue.push_back((seq, item));
+                self.obs.queue_depth.add(1);
                 dropped = None;
             }
         }
@@ -316,11 +434,13 @@ impl<T> Service<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(it) = st.queue.pop_front() {
+                self.obs.queue_depth.add(-1);
                 return Some(it);
             }
             if st.closed {
                 return None;
             }
+            self.obs.parks.inc();
             st = self.cv.wait(st).unwrap();
         }
     }
@@ -338,6 +458,7 @@ impl<T> Service<T> {
             drained = st.queue.drain(..).collect();
         }
         drop(drained); // outside the lock, as in push
+        self.obs.queue_depth.set(0);
         self.cv.notify_all();
     }
 }
@@ -363,8 +484,26 @@ where
     W: Fn(&mut S, TaskCtx, T) + Sync,
     B: FnOnce(&Service<T>) -> R,
 {
+    run_service_obs(jobs, init, work, body, PoolObs::disabled())
+}
+
+/// [`run_service`] with pool observability: parks, panics, queue depth
+/// and per-worker busy time land on `obs`.
+pub fn run_service_obs<T, S, R, I, W, B>(
+    jobs: usize,
+    init: I,
+    work: W,
+    body: B,
+    obs: PoolObs,
+) -> (R, Vec<String>)
+where
+    T: Send,
+    I: Fn(usize) -> Result<S> + Sync,
+    W: Fn(&mut S, TaskCtx, T) + Sync,
+    B: FnOnce(&Service<T>) -> R,
+{
     let jobs = jobs.max(1);
-    let service = Service::new(jobs);
+    let service = Service::new(jobs, obs);
     let out = std::thread::scope(|scope| {
         for w in 0..jobs {
             let service = &service;
@@ -391,7 +530,15 @@ where
                     // a panicking item is consumed by the unwind (its drop
                     // reports through its completion channel); the worker
                     // itself survives to serve the next item
-                    let _ = catch_unwind(AssertUnwindSafe(|| work(&mut state, ctx, item)));
+                    let t0 = service.obs.clock.now_ns();
+                    let r = catch_unwind(AssertUnwindSafe(|| work(&mut state, ctx, item)));
+                    if r.is_err() {
+                        service.obs.panics.inc();
+                    }
+                    service
+                        .obs
+                        .busy(w)
+                        .add(service.obs.clock.now_ns().saturating_sub(t0));
                 }
                 service.worker_exit();
             });
@@ -804,6 +951,65 @@ mod tests {
         let after = count.load(Ordering::SeqCst);
         std::thread::sleep(Duration::from_millis(20));
         assert_eq!(count.load(Ordering::SeqCst), after, "ticked after join");
+    }
+
+    #[test]
+    fn pool_obs_counts_busy_time_and_panics() {
+        let reg = MetricsRegistry::new(false);
+        let obs = PoolObs::register(&reg, "test", 2);
+        let results = run_stateful_obs(
+            2,
+            (0..16).collect::<Vec<usize>>(),
+            |w| Ok(w),
+            |_s, _ctx, i| {
+                std::thread::sleep(Duration::from_micros(50));
+                Ok(i)
+            },
+            &obs,
+        );
+        assert!(collect_ordered(results).is_ok());
+        let total_busy: u64 = (0..2).map(|w| obs.busy_ns(w)).sum();
+        assert!(total_busy > 0, "no busy time recorded");
+        assert_eq!(obs.panics(), 0);
+
+        let obs2 = PoolObs::register(&reg, "test_panics", 1);
+        let r = run_stateful_obs(
+            1,
+            vec![0usize],
+            |_| Ok(()),
+            |_s, _c, _i| -> Result<usize> { panic!("counted") },
+            &obs2,
+        );
+        assert!(r[0].is_err());
+        assert_eq!(obs2.panics(), 1);
+        // re-registering the same pool shares the counters
+        assert_eq!(PoolObs::register(&reg, "test_panics", 1).panics(), 1);
+    }
+
+    #[test]
+    fn service_obs_counts_parks() {
+        let reg = MetricsRegistry::new(false);
+        let obs = PoolObs::register(&reg, "svc", 1);
+        let watcher = obs.clone();
+        let done = std::sync::Arc::new(Mutex::new(Vec::new()));
+        run_service_obs(
+            1,
+            |w| Ok(w),
+            |_s, _c, mut item: Probe| {
+                item.processed = true;
+            },
+            |svc| {
+                svc.push(Probe { id: 0, done: done.clone(), processed: false });
+                // the worker parks whenever it finds the queue empty and
+                // open — before the push, or right after draining it
+                let t0 = std::time::Instant::now();
+                while watcher.parks() < 1 && t0.elapsed() < Duration::from_secs(5) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            },
+            obs.clone(),
+        );
+        assert!(obs.parks() >= 1, "worker never parked");
     }
 
     #[test]

@@ -19,8 +19,25 @@
 //! The `lock-discipline` lint (`repro analyze`) flags any remaining
 //! `.lock().unwrap()` / `.read().unwrap()` / `.write().unwrap()` in
 //! `serve/` and `store/` and points here.
+//!
+//! The `_observed` variants add contention profiling on top of poison
+//! recovery: each acquisition records its wait time into a per-site
+//! histogram and bumps per-site acquire/poison-recovery counters on a
+//! [`LockObs`] handle. The handle is `Arc`-cheap and defaults to
+//! detached ([`LockObs::disabled`]), so instrumented call sites are
+//! unconditional — no `Option` branching on the hot path. Wait times
+//! come from the registry's [`SpanClock`], which is logical under fifo
+//! mode, so instrumentation never reads the wall clock on the
+//! deterministic path; all `lock_*` metrics are
+//! [`Class::Volatile`](crate::obs::metrics::Class) (contention is
+//! scheduling-dependent by nature) and therefore excluded from
+//! deterministic exports.
 
-use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::obs::hist::Hist;
+use crate::obs::metrics::{detached_hist, Class, Counter, MetricsRegistry};
+use crate::obs::span::SpanClock;
 
 /// Lock a mutex, recovering the guard from a poisoned lock instead of
 /// panicking. See the module docs for when this is sound.
@@ -54,6 +71,98 @@ pub fn wait_or_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<
     match cv.wait(g) {
         Ok(g) => g,
         Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Per-lock-site contention handles: wait-time histogram plus
+/// acquire/poison-recovery counters, labeled `site=<name>`.
+#[derive(Clone, Debug)]
+pub struct LockObs {
+    clock: Arc<SpanClock>,
+    wait_ns: Arc<Hist>,
+    acquires: Arc<Counter>,
+    poisons: Arc<Counter>,
+}
+
+impl LockObs {
+    /// Register the lock site's metrics on `reg`. Re-registering the
+    /// same site returns handles onto the same metrics.
+    pub fn register(reg: &MetricsRegistry, site: &str) -> LockObs {
+        LockObs {
+            clock: reg.clock(),
+            wait_ns: reg.hist("lock_wait_ns", &[("site", site)], Class::Volatile),
+            acquires: reg
+                .counter("lock_acquires_total", &[("site", site)], Class::Volatile),
+            poisons: reg.counter(
+                "lock_poison_recoveries_total",
+                &[("site", site)],
+                Class::Volatile,
+            ),
+        }
+    }
+
+    /// Detached handles (no registry): instrumented code runs
+    /// identically, nothing is exported.
+    pub fn disabled() -> LockObs {
+        LockObs {
+            clock: Arc::new(SpanClock::new(true)),
+            wait_ns: detached_hist(),
+            acquires: Counter::detached(),
+            poisons: Counter::detached(),
+        }
+    }
+
+    pub fn acquires(&self) -> u64 {
+        self.acquires.get()
+    }
+
+    pub fn poisons(&self) -> u64 {
+        self.poisons.get()
+    }
+}
+
+/// [`lock_or_recover`] plus contention accounting on `obs`.
+pub fn lock_observed<'a, T>(obs: &LockObs, m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    let start = obs.clock.now_ns();
+    let res = m.lock();
+    obs.wait_ns.record(obs.clock.now_ns().saturating_sub(start));
+    obs.acquires.inc();
+    match res {
+        Ok(g) => g,
+        Err(poisoned) => {
+            obs.poisons.inc();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`read_or_recover`] plus contention accounting on `obs`.
+pub fn read_observed<'a, T>(obs: &LockObs, l: &'a RwLock<T>) -> RwLockReadGuard<'a, T> {
+    let start = obs.clock.now_ns();
+    let res = l.read();
+    obs.wait_ns.record(obs.clock.now_ns().saturating_sub(start));
+    obs.acquires.inc();
+    match res {
+        Ok(g) => g,
+        Err(poisoned) => {
+            obs.poisons.inc();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`write_or_recover`] plus contention accounting on `obs`.
+pub fn write_observed<'a, T>(obs: &LockObs, l: &'a RwLock<T>) -> RwLockWriteGuard<'a, T> {
+    let start = obs.clock.now_ns();
+    let res = l.write();
+    obs.wait_ns.record(obs.clock.now_ns().saturating_sub(start));
+    obs.acquires.inc();
+    match res {
+        Ok(g) => g,
+        Err(poisoned) => {
+            obs.poisons.inc();
+            poisoned.into_inner()
+        }
     }
 }
 
@@ -109,5 +218,42 @@ mod tests {
         }
         assert!(*ready);
         waker.join().unwrap();
+    }
+
+    #[test]
+    fn observed_lock_counts_acquires_and_poison_recoveries() {
+        let reg = MetricsRegistry::new(false);
+        let obs = LockObs::register(&reg, "test_site");
+        let m = Arc::new(Mutex::new(1usize));
+        *lock_observed(&obs, &m) += 1;
+        assert_eq!(obs.acquires(), 1);
+        assert_eq!(obs.poisons(), 0);
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_observed(&obs, &m), 2);
+        assert_eq!(obs.acquires(), 2);
+        assert_eq!(obs.poisons(), 1);
+        // same site re-registered shares the same counters
+        let again = LockObs::register(&reg, "test_site");
+        assert_eq!(again.acquires(), 2);
+    }
+
+    #[test]
+    fn observed_rwlock_records_both_modes() {
+        let reg = MetricsRegistry::new(true);
+        let obs = LockObs::register(&reg, "rw_site");
+        let l = RwLock::new(5usize);
+        assert_eq!(*read_observed(&obs, &l), 5);
+        *write_observed(&obs, &l) = 6;
+        assert_eq!(*read_observed(&obs, &l), 6);
+        assert_eq!(obs.acquires(), 3);
+        // disabled handles run the same path without a registry
+        let off = LockObs::disabled();
+        assert_eq!(*read_observed(&off, &l), 6);
+        assert_eq!(off.acquires(), 1);
     }
 }

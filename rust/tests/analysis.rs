@@ -280,6 +280,26 @@ fn cross_file_halves_are_silent_alone() {
     expect("serve/xinv_table.rs", "lock-order-transitive", &[], 0);
 }
 
+// ------------------------------------------------------ metrics-discipline
+
+#[test]
+fn metrics_positive() {
+    // Computed name @7 and non-snake_case literal @8 in scan order,
+    // then the duplicate registration of `fx_demo_total` reported at
+    // its second site @9 (duplicates are appended after the scan).
+    expect("obs/metrics_positive.rs", "metrics-discipline", &[7, 8, 9], 0);
+}
+
+#[test]
+fn metrics_allowed() {
+    expect("obs/metrics_allowed.rs", "metrics-discipline", &[], 1);
+}
+
+#[test]
+fn metrics_clean() {
+    expect("obs/metrics_clean.rs", "metrics-discipline", &[], 0);
+}
+
 // ------------------------------------------------------ blocking-under-lock
 
 #[test]
@@ -342,13 +362,14 @@ fn leak_clean() {
 #[test]
 fn fixture_corpus_totals() {
     let report = analysis::analyze_paths(&[fixture_root()]).expect("walk fixtures");
-    assert_eq!(report.files_scanned, 39, "fixture .rs file count");
-    // 43 = the 32 intra-file findings plus 11 interprocedural ones: the
-    // xlock inversion + re-entrancy pair, the cross-file xinv_* case
-    // (the corpus run sees both halves), two blocking-under-lock, three
-    // atomics-discipline and three resource-leak.
-    assert_eq!(report.findings.len(), 43, "total findings across corpus");
-    assert_eq!(report.suppressed.len(), 14, "total reasoned allows");
+    assert_eq!(report.files_scanned, 42, "fixture .rs file count");
+    // 46 = the 32 intra-file findings plus 11 interprocedural ones (the
+    // xlock inversion + re-entrancy pair, the cross-file xinv_* case —
+    // the corpus run sees both halves — two blocking-under-lock, three
+    // atomics-discipline and three resource-leak) plus the three
+    // metrics-discipline findings from obs/metrics_positive.rs.
+    assert_eq!(report.findings.len(), 46, "total findings across corpus");
+    assert_eq!(report.suppressed.len(), 15, "total reasoned allows");
     for s in &report.suppressed {
         assert!(
             !s.reason.is_empty(),
@@ -370,9 +391,9 @@ fn json_output_schema() {
     let rendered = analysis::render_json(&report);
     let v = Json::parse(&rendered).expect("render_json emits valid json");
     assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
-    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 39);
+    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 42);
     let findings = v.get("findings").unwrap().as_arr().unwrap();
-    assert_eq!(findings.len(), 43);
+    assert_eq!(findings.len(), 46);
     for f in findings {
         let lint = f.get("lint").unwrap().as_str().unwrap();
         assert!(LINT_NAMES.contains(&lint), "unknown lint in json: {lint}");
@@ -381,7 +402,7 @@ fn json_output_schema() {
         assert!(!f.get("message").unwrap().as_str().unwrap().is_empty());
     }
     let suppressed = v.get("suppressed").unwrap().as_arr().unwrap();
-    assert_eq!(suppressed.len(), 14);
+    assert_eq!(suppressed.len(), 15);
     for s in suppressed {
         assert!(
             !s.get("reason").unwrap().as_str().unwrap().is_empty(),
@@ -396,6 +417,7 @@ fn json_output_schema() {
     assert_eq!(counts.get("blocking-under-lock").unwrap().as_usize().unwrap(), 2);
     assert_eq!(counts.get("atomics-discipline").unwrap().as_usize().unwrap(), 3);
     assert_eq!(counts.get("resource-leak").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(counts.get("metrics-discipline").unwrap().as_usize().unwrap(), 3);
 }
 
 // ---------------------------------------------------------------- self-run

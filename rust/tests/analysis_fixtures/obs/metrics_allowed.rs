@@ -1,0 +1,8 @@
+// metrics-discipline fixture: a computed name, suppressed with a
+// reason.
+
+fn fx_metrics_register_allowed(reg: &MetricsRegistry, shard: usize) {
+    // analyze: allow(metrics-discipline) per-shard debug registry; the name family is documented in obs/mod.rs
+    let c = reg.counter(&format!("fx_shard_{shard}_total"), &[], Class::Volatile);
+    let _ = c;
+}

@@ -1,0 +1,9 @@
+// metrics-discipline fixture: snake_case literals, each registered at
+// exactly one site.
+
+fn fx_metrics_register_clean(reg: &MetricsRegistry) {
+    let c = reg.counter("fx_clean_total", &[], Class::Stable);
+    let g = reg.gauge("fx_clean_depth", &[], Class::Volatile);
+    let h = reg.hist("fx_clean_ns", &[], Class::Volatile);
+    let _ = (c, g, h);
+}

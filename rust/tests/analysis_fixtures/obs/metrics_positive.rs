@@ -1,0 +1,11 @@
+// metrics-discipline fixture: a computed name, a non-snake_case
+// literal, and a duplicate registration. The duplicate is reported at
+// the second site, after the scan-order findings.
+
+fn fx_metrics_register_positive(reg: &MetricsRegistry, which: &str) {
+    let ok = reg.counter("fx_demo_total", &[], Class::Stable);
+    let computed = reg.hist(&format!("fx_{which}_ns"), &[], Class::Volatile);
+    let shouting = reg.gauge("FxQueueDepth", &[], Class::Volatile);
+    let dup = reg.counter("fx_demo_total", &[], Class::Stable);
+    let _ = (ok, computed, shouting, dup);
+}

@@ -1,0 +1,342 @@
+//! The process-wide metrics backplane (PR 10): the fifo determinism
+//! oracle — exported snapshots (Prometheus text *and* JSONL) must be
+//! byte-identical at any worker count, for both the sweep engine and
+//! the sharded serving tier — plus the timed-mode smoke test (lock,
+//! pool, exe-cache and WAL metrics all move) and the `Hist` merge /
+//! quantile properties the exporters rely on.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use quantum_peft::coordinator::events::EventLog;
+use quantum_peft::coordinator::sweep::{self, Cell, SweepObs, SweepPlan};
+use quantum_peft::coordinator::trainer::{RunResult, TrainConfig};
+use quantum_peft::data::glue;
+use quantum_peft::obs::export::{render_jsonl, render_prometheus};
+use quantum_peft::obs::{Hist, MetricsRegistry, Reading};
+use quantum_peft::runtime::exe_cache::{CacheObs, OnceMap};
+use quantum_peft::serve::loadgen::{self, BenchOpts, LoadSpec};
+use quantum_peft::serve::registry::theta_checksum;
+use quantum_peft::serve::scheduler::BatchPolicy;
+use quantum_peft::serve::{percentile_us, PauliSpec, ServeConfig};
+use quantum_peft::store::{Durability, StateRecord, StateStore, TenantState};
+use quantum_peft::util::pool;
+use quantum_peft::util::rng::Rng;
+
+// ------------------------------------------------------- fifo byte-identity
+
+/// Render both export formats from one deterministic registry.
+fn renders(reg: &MetricsRegistry) -> (String, String) {
+    let snap = reg.snapshot();
+    (render_prometheus(&snap), render_jsonl(&snap))
+}
+
+fn sweep_plan() -> SweepPlan {
+    SweepPlan {
+        tags: vec!["enc_qpeft_pauli".to_string(), "enc_lora".to_string()],
+        tasks: vec![glue::Task::Sst2, glue::Task::Cola],
+        seeds: vec![0, 1, 2],
+        cfg: TrainConfig::default(),
+        backbone: None,
+        task_lr: BTreeMap::new(),
+    }
+}
+
+/// Pure stand-in for a training cell (same shape as
+/// `tests/sweep_parallel.rs`); the sleep scrambles completion order so
+/// parallel runs genuinely race.
+fn fake_cell(cell: &Cell, cfg: &TrainConfig, sleep: bool) -> RunResult {
+    let tag_hash: u64 = cell.tag.bytes().map(|b| b as u64).sum();
+    let task_hash: u64 = cell.task.name().bytes().map(|b| b as u64).sum();
+    let mut rng = Rng::new(cfg.seed ^ (tag_hash << 16) ^ (task_hash << 32));
+    let metric = rng.f64();
+    if sleep {
+        std::thread::sleep(Duration::from_millis(rng.below(6) as u64));
+    }
+    RunResult {
+        tag: cell.tag.clone(),
+        task: cell.task.name().to_string(),
+        metric_name: cell.task.metric_name().to_string(),
+        best_metric: metric,
+        final_metric: metric,
+        losses: vec![],
+        adapter_params: 100,
+        trainable_params: 200,
+        wall_seconds: 0.0,
+        step_ms: 1.0,
+        extra_metrics: BTreeMap::new(),
+    }
+}
+
+#[test]
+fn sweep_metrics_snapshot_is_byte_identical_across_jobs() {
+    let mk = |jobs: usize| {
+        let reg = MetricsRegistry::new(true);
+        let obs = SweepObs::register(&reg, jobs);
+        let results = sweep::run_plan_with_obs(
+            &sweep_plan(),
+            jobs,
+            &EventLog::null(),
+            |_w| Ok(()),
+            |_s, cell, cfg, _wlog| Ok(fake_cell(cell, &cfg, jobs > 1)),
+            &obs,
+        )
+        .unwrap();
+        assert_eq!(results.len(), 12, "jobs={jobs}");
+        assert_eq!(obs.cells(), 12, "jobs={jobs}");
+        renders(&reg)
+    };
+    let (prom1, json1) = mk(1);
+    // the deterministic snapshot keeps the Stable cell counter and
+    // drops the scheduling-dependent pool_* metrics entirely
+    assert!(prom1.contains("sweep_cells_total 12"), "{prom1}");
+    assert!(!prom1.contains("pool_"), "{prom1}");
+    assert!(json1.contains("sweep_cells_total"), "{json1}");
+    for jobs in [4, 8] {
+        let (prom, json) = mk(jobs);
+        assert_eq!(prom, prom1, "prometheus text diverged at jobs={jobs}");
+        assert_eq!(json, json1, "jsonl diverged at jobs={jobs}");
+    }
+}
+
+fn bench_opts(workers: usize, tenants: usize) -> BenchOpts {
+    BenchOpts {
+        load: LoadSpec {
+            tenants,
+            requests: 192,
+            concurrency: 24,
+            seed: 7,
+            zipf_s: 1.1,
+            pauli: PauliSpec { q: 4, n_layers: 1 },
+            open_rate_rps: 0.0,
+        },
+        serve: ServeConfig {
+            workers,
+            policy: BatchPolicy { max_batch: 5, max_wait_us: 1 },
+            fifo: true,
+            metrics: Some(MetricsRegistry::new(true)),
+            ..ServeConfig::default()
+        },
+        cache_bytes: 1 << 20,
+        ..BenchOpts::default()
+    }
+}
+
+#[test]
+fn serve_bench_fifo_snapshot_is_byte_identical_across_workers() {
+    let mk = |workers: usize| {
+        let opts = bench_opts(workers, 8);
+        let (summary, _log) =
+            loadgen::run_serve_bench(&opts, &EventLog::null()).unwrap();
+        assert_eq!(summary.completed, 192, "workers={workers}");
+        renders(opts.serve.metrics.as_ref().unwrap())
+    };
+    let (prom1, json1) = mk(1);
+    assert!(prom1.contains("serve_requests_completed_total 192"), "{prom1}");
+    assert!(prom1.contains("serve_latency_ns_count 192"), "{prom1}");
+    // lock_*/pool_* are Volatile: absent from the deterministic export
+    assert!(!prom1.contains("lock_"), "{prom1}");
+    for workers in [4, 8] {
+        let (prom, json) = mk(workers);
+        assert_eq!(prom, prom1, "prometheus text diverged at workers={workers}");
+        assert_eq!(json, json1, "jsonl diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn sharded_bench_fifo_snapshot_is_byte_identical_across_workers() {
+    let mk = |workers: usize| {
+        let opts = bench_opts(workers, 16);
+        let report = loadgen::run_sharded_bench(&opts, 4, &EventLog::null()).unwrap();
+        assert_eq!(report.fleet.completed(), 192, "workers={workers}");
+        renders(opts.serve.metrics.as_ref().unwrap())
+    };
+    let (prom1, json1) = mk(1);
+    // the four shards share one registry Arc and sum into fleet totals
+    assert!(prom1.contains("serve_requests_completed_total 192"), "{prom1}");
+    for workers in [4, 8] {
+        let (prom, json) = mk(workers);
+        assert_eq!(prom, prom1, "prometheus text diverged at workers={workers}");
+        assert_eq!(json, json1, "jsonl diverged at workers={workers}");
+    }
+}
+
+// --------------------------------------------------------- timed-mode smoke
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("qp_obs_metrics")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Sum a counter across every label set it was registered under.
+fn counter_sum(reg: &MetricsRegistry, name: &str) -> u64 {
+    reg.snapshot_full()
+        .iter()
+        .filter(|v| v.name == name)
+        .map(|v| match v.reading {
+            Reading::Counter(n) => n,
+            _ => panic!("{name} is not a counter"),
+        })
+        .sum()
+}
+
+fn hist_count(reg: &MetricsRegistry, name: &str) -> u64 {
+    reg.snapshot_full()
+        .iter()
+        .filter(|v| v.name == name)
+        .map(|v| match &v.reading {
+            Reading::Hist { count, .. } => *count,
+            _ => panic!("{name} is not a histogram"),
+        })
+        .sum()
+}
+
+#[test]
+fn timed_mode_smoke_every_layer_reports_nonzero() {
+    let reg = MetricsRegistry::new(false);
+
+    // store + WAL + the store's observed lock, with per-append fsync
+    let dir = tdir("smoke");
+    let mut opened = StateStore::open(&dir, Durability::Always).unwrap();
+    opened.store.instrument(&reg, &opened.recovered);
+    let spec = PauliSpec { q: 3, n_layers: 1 };
+    for (i, tenant) in ["alpha", "beta"].iter().enumerate() {
+        let mut rng = Rng::new(0x0b5_0000 ^ i as u64);
+        let thetas: Vec<f32> =
+            (0..spec.num_params()).map(|_| rng.normal() as f32 * 0.5).collect();
+        opened
+            .store
+            .append(&StateRecord::Register(TenantState {
+                tenant: tenant.to_string(),
+                version: 1,
+                q: spec.q,
+                n_layers: spec.n_layers,
+                checksum: theta_checksum(&thetas),
+                path: String::new(),
+                thetas,
+            }))
+            .unwrap();
+    }
+    opened.store.sync().unwrap();
+
+    // worker pool with wall-clock busy time
+    let pobs = pool::PoolObs::register(&reg, "smoke", 2);
+    let out = pool::run_stateful_obs(
+        2,
+        (0..8u32).collect::<Vec<_>>(),
+        |_w| Ok(()),
+        |_s, _ctx, i| {
+            std::thread::sleep(Duration::from_millis(2));
+            Ok(i)
+        },
+        &pobs,
+    );
+    assert!(out.iter().all(|r| r.is_ok()));
+
+    // compile-cache hit/miss accounting
+    let map: OnceMap<u32, u32> = OnceMap::new();
+    map.instrument(CacheObs::register(&reg, "smoke"));
+    assert_eq!(map.get_or_try_init(&1, || Ok(10)).unwrap(), 10);
+    assert_eq!(map.get_or_try_init(&1, || Ok(99)).unwrap(), 10);
+
+    assert!(counter_sum(&reg, "wal_appends_total") >= 2);
+    assert!(counter_sum(&reg, "wal_append_bytes_total") > 0);
+    // Durability::Always fsyncs every append, plus the explicit sync
+    assert!(counter_sum(&reg, "wal_fsyncs_total") >= 2);
+    assert!(hist_count(&reg, "wal_append_ns") >= 2);
+    assert!(counter_sum(&reg, "lock_acquires_total") >= 2, "store_wal lock");
+    assert!(hist_count(&reg, "lock_wait_ns") >= 2);
+    let busy: u64 = (0..2).map(|w| pobs.busy_ns(w)).sum();
+    assert!(busy > 0, "2ms sleeps must land in pool_worker_busy_ns");
+    assert!(counter_sum(&reg, "exe_cache_misses_total") >= 1);
+    assert!(counter_sum(&reg, "exe_cache_hits_total") >= 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------------------- Hist properties
+
+fn hist_of(values: &[u64]) -> Hist {
+    let h = Hist::new();
+    for &v in values {
+        h.record(v);
+    }
+    h
+}
+
+fn seeded_values(seed: u64, n: usize, max: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(max) as u64).collect()
+}
+
+#[test]
+fn hist_merge_is_associative_and_commutative() {
+    let a = seeded_values(11, 200, 5_000_000);
+    let b = seeded_values(22, 150, 300);
+    let c = seeded_values(33, 75, 40_000_000_000);
+
+    // (a ∪ b) ∪ c
+    let left = hist_of(&a);
+    left.merge_from(&hist_of(&b));
+    left.merge_from(&hist_of(&c));
+    // a ∪ (b ∪ c)
+    let bc = hist_of(&b);
+    bc.merge_from(&hist_of(&c));
+    let right = hist_of(&a);
+    right.merge_from(&bc);
+    assert_eq!(left.counts(), right.counts(), "associativity");
+    assert_eq!(left.count(), (a.len() + b.len() + c.len()) as u64);
+
+    // a ∪ b == b ∪ a
+    let ab = hist_of(&a);
+    ab.merge_from(&hist_of(&b));
+    let ba = hist_of(&b);
+    ba.merge_from(&hist_of(&a));
+    assert_eq!(ab.counts(), ba.counts(), "commutativity");
+}
+
+#[test]
+fn hist_quantiles_are_monotone_in_p() {
+    for seed in [1u64, 2, 3] {
+        let h = hist_of(&seeded_values(seed, 500, 10_000_000));
+        let mut last = 0u64;
+        for p in [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let q = h.quantile(p).unwrap();
+            assert!(q >= last, "seed={seed}: q({p}) = {q} < {last}");
+            last = q;
+        }
+    }
+}
+
+#[test]
+fn merged_hist_quantiles_track_the_exact_oracle_within_one_bucket() {
+    let a = seeded_values(7, 300, 2_000_000);
+    let b = seeded_values(8, 200, 900_000_000);
+    let merged = hist_of(&a);
+    merged.merge_from(&hist_of(&b));
+
+    let mut sorted: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+    sorted.sort_unstable();
+    for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+        // same nearest-rank convention as percentile_us, kept in ns so
+        // the bound is integer-exact
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        let exact = sorted[rank.clamp(1, sorted.len()) - 1];
+        assert!(
+            (percentile_us(&sorted, p) * 1_000.0 - exact as f64).abs() < 1e-6,
+            "oracle self-check at p={p}"
+        );
+        let q = merged.quantile(p).unwrap();
+        // the log2-bucket floor: never above the sample, never more
+        // than one bucket width below it
+        assert!(
+            q <= exact && exact < (2 * q).max(2),
+            "p={p}: bucket floor {q} vs exact {exact}"
+        );
+    }
+}
